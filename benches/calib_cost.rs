@@ -1,0 +1,76 @@
+//! CALIB-COST — verifies the §4.3 complexity claim: computing the KQ-SVD
+//! closed form costs O(Td²) — linear in the aggregated cache length T at
+//! fixed d, quadratic-ish in d at fixed T — and stays within a small factor
+//! of plain K-SVD (same asymptotics, two extra thin SVDs).
+//!
+//! Run: `cargo bench --bench calib_cost`
+
+use kqsvd::bench_support::{bench, f as fnum, Table};
+use kqsvd::compress::{eigen_key, kqsvd_key, ksvd_key};
+use kqsvd::linalg::Mat;
+use kqsvd::util::rng::Pcg64;
+
+fn main() {
+    println!("CALIB-COST: projection computation scaling (paper §4.3: O(Td²))\n");
+
+    // T sweep at fixed d.
+    let d = 64;
+    let r = 16;
+    println!("T sweep (d = {d}):");
+    let mut t_table = Table::new(&["T", "ksvd(s)", "eigen(s)", "kqsvd(s)", "kqsvd T-ratio"]);
+    let mut prev: Option<(usize, f64)> = None;
+    let mut linearish = true;
+    for t in [2048usize, 4096, 8192, 16384] {
+        let mut rng = Pcg64::new(t as u64, 3);
+        let k = Mat::randn(t, d, 1.0, &mut rng);
+        let q = Mat::randn(t, d, 1.0, &mut rng);
+        let m_ks = bench(&format!("ksvd  T={t}"), 1, 3, || {
+            std::hint::black_box(ksvd_key(&k, r));
+        });
+        let m_ei = bench(&format!("eigen T={t}"), 1, 3, || {
+            std::hint::black_box(eigen_key(&k, &q, r));
+        });
+        let m_kq = bench(&format!("kqsvd T={t}"), 1, 3, || {
+            std::hint::black_box(kqsvd_key(&k, &q, r));
+        });
+        let ratio = prev
+            .map(|(pt, ps)| (m_kq.mean_s / ps) / (t as f64 / pt as f64))
+            .unwrap_or(1.0);
+        // Linear scaling ⇒ time ratio ≈ T ratio ⇒ normalized ratio ≈ 1.
+        if prev.is_some() && !(0.4..2.5).contains(&ratio) {
+            linearish = false;
+        }
+        prev = Some((t, m_kq.mean_s));
+        t_table.row(&[
+            t.to_string(),
+            fnum(m_ks.mean_s, 4),
+            fnum(m_ei.mean_s, 4),
+            fnum(m_kq.mean_s, 4),
+            fnum(ratio, 2),
+        ]);
+    }
+    t_table.print();
+    t_table.write_csv("calib_cost_T.csv").unwrap();
+    println!(
+        "T-scaling ≈ linear: {}\n",
+        if linearish { "HOLDS" } else { "VIOLATED" }
+    );
+
+    // d sweep at fixed T.
+    let t = 8192;
+    println!("d sweep (T = {t}):");
+    let mut d_table = Table::new(&["d", "kqsvd(s)"]);
+    for d in [16usize, 32, 64, 128] {
+        let mut rng = Pcg64::new(d as u64, 5);
+        let k = Mat::randn(t, d, 1.0, &mut rng);
+        let q = Mat::randn(t, d, 1.0, &mut rng);
+        let m = bench(&format!("kqsvd d={d}"), 1, 3, || {
+            std::hint::black_box(kqsvd_key(&k, &q, (d / 4).max(2)));
+        });
+        d_table.row(&[d.to_string(), fnum(m.mean_s, 4)]);
+    }
+    d_table.print();
+    d_table.write_csv("calib_cost_d.csv").unwrap();
+    assert!(linearish, "T-scaling should be ~linear (O(Td²))");
+    println!("\nCSV → bench_out/calib_cost_T.csv, bench_out/calib_cost_d.csv");
+}

@@ -1,0 +1,106 @@
+//! E2E — end-to-end serving benchmark: throughput, latency and cache bytes,
+//! exact vs KQ-SVD-compressed cache, through the full router/batcher stack.
+//! Adds a batch-size sweep (the serving-side payoff of cache compression:
+//! more sequences fit in the same budget).
+//!
+//! Run: `cargo bench --bench e2e_serving`  (PJRT row needs `make artifacts`)
+
+use kqsvd::bench_support::{f as fnum, Table};
+use kqsvd::config::{Config, Method};
+use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::server::build_engine;
+use kqsvd::text::{Corpus, Split};
+use kqsvd::util::stats::fmt_bytes;
+
+struct RunResult {
+    tok_per_s: f64,
+    ttft_p50: f64,
+    ttft_p95: f64,
+    tpot_mean: f64,
+    cache_per_tok: usize,
+    peak_bytes: u64,
+}
+
+fn run(method: Method, backend: &str, max_batch: usize, n_requests: usize) -> anyhow::Result<RunResult> {
+    let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
+    cfg.method = method;
+    cfg.serve.backend = backend.into();
+    cfg.serve.max_batch = max_batch;
+    cfg.calib.n_calib_seqs = 8;
+    cfg.calib.calib_seq_len = 256;
+    cfg.run_dir = format!("runs/bench_e2e_{}_{}", method.name(), backend);
+    let mut engine = build_engine(&cfg)?;
+    let mut router = Router::new(BatcherConfig::from(&cfg.serve));
+    let corpus = Corpus::new(cfg.model.vocab_size, 99);
+    for i in 0..n_requests {
+        let prompt = corpus.sequence(Split::Validation, 2_000 + i as u64, 96);
+        router
+            .submit(&engine, Request::new(i as u64, prompt, 32))
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    }
+    let done = router.run_offline(&mut engine)?;
+    assert_eq!(done.len(), n_requests);
+    let m = &router.metrics;
+    let (_, _, ttft_p50, ttft_p95, ..) = m.summary_stats("ttft_ms").unwrap();
+    let (_, tpot_mean, ..) = m.summary_stats("tpot_ms").unwrap();
+    Ok(RunResult {
+        tok_per_s: m.gauge_value("decode_tok_per_s").unwrap_or(0.0),
+        ttft_p50,
+        ttft_p95,
+        tpot_mean,
+        cache_per_tok: engine.cache_bytes_per_token(),
+        peak_bytes: engine.cache.peak_bytes(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = 16;
+    println!("E2E serving bench: {n_requests} requests × (96 prompt + 32 gen), mha-small\n");
+    let mut t = Table::new(&[
+        "method", "backend", "batch", "tok/s", "ttft p50(ms)", "ttft p95(ms)", "tpot(ms)",
+        "cache/tok", "peak cache",
+    ]);
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let mut comp_vs_exact = (0.0f64, 0.0f64);
+    for (method, backend) in [
+        (Method::None, "rust"),
+        (Method::KqSvd, "rust"),
+        (Method::None, "pjrt"),
+        (Method::KqSvd, "pjrt"),
+    ] {
+        if backend == "pjrt" && !have_artifacts {
+            println!("  (skipping pjrt rows — run `make artifacts`)");
+            continue;
+        }
+        for batch in [1usize, 8] {
+            let r = run(method, backend, batch, n_requests)?;
+            if backend == "rust" && batch == 8 {
+                if method == Method::None {
+                    comp_vs_exact.0 = r.tok_per_s;
+                } else {
+                    comp_vs_exact.1 = r.tok_per_s;
+                }
+            }
+            t.row(&[
+                method.name().into(),
+                backend.into(),
+                batch.to_string(),
+                fnum(r.tok_per_s, 1),
+                fnum(r.ttft_p50, 2),
+                fnum(r.ttft_p95, 2),
+                fnum(r.tpot_mean, 3),
+                fmt_bytes(r.cache_per_tok as u64),
+                fmt_bytes(r.peak_bytes),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("e2e_serving.csv")?;
+    let (exact, comp) = comp_vs_exact;
+    println!(
+        "\ncompressed/exact decode throughput at batch 8 (rust): {:.2}×",
+        comp / exact.max(1e-9)
+    );
+    println!("CSV → bench_out/e2e_serving.csv");
+    Ok(())
+}

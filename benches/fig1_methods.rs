@@ -1,0 +1,78 @@
+//! FIG1 — regenerates Figure 1: per-layer relative output error (top) and
+//! mean component errors on K, Q, V, KQᵀ, MHA output (bottom), for the three
+//! methods across the four zoo models (2 MHA + 2 GQA).
+//!
+//! Paper-expected shape: K-SVD best on K but worst on Q/scores/output (worse
+//! still on GQA models); Eigen ≈ KQ-SVD on components; KQ-SVD strictly best
+//! on KQᵀ and output. Set KQSVD_BENCH_FULL=1 for the larger protocol.
+//!
+//! Run: `cargo bench --bench fig1_methods`
+
+use kqsvd::bench_support::{f as fnum, Table};
+use kqsvd::config::{CalibConfig, Method, ZOO};
+use kqsvd::eval::{figure1_for_model, model_for};
+use kqsvd::text::Corpus;
+use kqsvd::util::stats::Timer;
+
+fn main() {
+    let full = std::env::var("KQSVD_BENCH_FULL").is_ok();
+    let calib = if full {
+        CalibConfig::default() // 32×512 / 8×512
+    } else {
+        CalibConfig {
+            n_calib_seqs: 8,
+            calib_seq_len: 256,
+            n_eval_seqs: 2,
+            eval_seq_len: 256,
+            ..CalibConfig::default()
+        }
+    };
+    println!(
+        "FIG1: {} calib × {}, {} eval × {}, ε = {}\n",
+        calib.n_calib_seqs, calib.calib_seq_len, calib.n_eval_seqs, calib.eval_seq_len, calib.epsilon
+    );
+
+    let mut bottom = Table::new(&["model", "method", "K", "Q", "V", "KQt", "output"]);
+    let mut top = Table::new(&["model", "method", "layer", "output_err"]);
+    let mut ok = true;
+    for name in ZOO {
+        let t = Timer::start();
+        let model = model_for(name);
+        let corpus = Corpus::new(model.cfg.vocab_size, calib.seed);
+        let (results, _) = figure1_for_model(&model, &corpus, &calib);
+        println!("  {name}: evaluated 3 methods in {:.1}s", t.elapsed_secs());
+        let get = |m: Method| results.iter().find(|r| r.method == m).unwrap();
+        // The paper's orderings, asserted per model:
+        let (ks, ei, kq) = (get(Method::KSvd), get(Method::Eigen), get(Method::KqSvd));
+        ok &= kq.components.scores <= ks.components.scores + 1e-9;
+        ok &= kq.components.scores <= ei.components.scores + 1e-9;
+        ok &= ks.components.k <= kq.components.k + 1e-9;
+        ok &= ks.components.q >= ei.components.q - 1e-9;
+        ok &= kq.components.output <= ks.components.output + 1e-9;
+        ok &= kq.components.output <= ei.components.output + 1e-9;
+        for r in &results {
+            bottom.row(&[
+                name.to_string(),
+                r.method.name().to_string(),
+                fnum(r.components.k, 4),
+                fnum(r.components.q, 4),
+                fnum(r.components.v, 4),
+                fnum(r.components.scores, 4),
+                fnum(r.components.output, 4),
+            ]);
+            for (li, e) in r.per_layer_output.iter().enumerate() {
+                top.row(&[name.to_string(), r.method.name().to_string(), li.to_string(), fnum(*e, 5)]);
+            }
+        }
+    }
+    println!("\nFigure 1 (bottom) — mean relative errors:");
+    bottom.print();
+    bottom.write_csv("fig1_components.csv").unwrap();
+    top.write_csv("fig1_per_layer.csv").unwrap();
+    println!(
+        "\npaper-shape check (KQ-SVD best on KQᵀ+output, K-SVD best on K, worst on Q): {}",
+        if ok { "HOLDS" } else { "VIOLATED" }
+    );
+    println!("CSV → bench_out/fig1_components.csv, bench_out/fig1_per_layer.csv");
+    assert!(ok, "Figure-1 ordering violated");
+}

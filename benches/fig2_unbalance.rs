@@ -1,0 +1,55 @@
+//! FIG2 — regenerates Figure 2: mean relative output error vs unbalance
+//! factor β (K·β, Q/β) on the Llama2-7B analog.
+//!
+//! Paper-expected shape: K-SVD and KQ-SVD flat in β; Eigen rises toward
+//! K-SVD, nearly indistinguishable by β = 10 (Theorem 4).
+//!
+//! Run: `cargo bench --bench fig2_unbalance`
+
+use kqsvd::bench_support::{f as fnum, Table};
+use kqsvd::config::{CalibConfig, Method};
+use kqsvd::eval::figure2_for_model;
+use kqsvd::model::Transformer;
+use kqsvd::text::Corpus;
+
+fn main() {
+    let full = std::env::var("KQSVD_BENCH_FULL").is_ok();
+    let calib = CalibConfig {
+        n_calib_seqs: if full { 32 } else { 8 },
+        calib_seq_len: if full { 512 } else { 256 },
+        n_eval_seqs: 2,
+        eval_seq_len: 256,
+        ..CalibConfig::default()
+    };
+    let betas = [1.0f32, 2.0, 5.0, 10.0];
+    let mcfg = kqsvd::config::preset("mha-small").unwrap();
+    println!("FIG2 on {} — β ∈ {betas:?}\n", mcfg.name);
+    let model = Transformer::init(mcfg.clone());
+    let corpus = Corpus::new(mcfg.vocab_size, calib.seed);
+    let sweep = figure2_for_model(&model, &corpus, &calib, &betas);
+
+    let mut t = Table::new(&["beta", "ksvd", "eigen", "kqsvd", "eigen-ksvd gap"]);
+    let get = |row: &Vec<(Method, f64)>, m: Method| row.iter().find(|(mm, _)| *mm == m).unwrap().1;
+    let mut gaps = Vec::new();
+    for (beta, row) in &sweep {
+        let (ks, ei, kq) = (get(row, Method::KSvd), get(row, Method::Eigen), get(row, Method::KqSvd));
+        gaps.push((ei - ks).abs());
+        t.row(&[format!("{beta}"), fnum(ks, 5), fnum(ei, 5), fnum(kq, 5), fnum((ei - ks).abs(), 5)]);
+    }
+    t.print();
+    t.write_csv("fig2_unbalance.csv").unwrap();
+
+    // Shape assertions (Theorem 4 + invariances).
+    let ks0 = get(&sweep[0].1, Method::KSvd);
+    let ksl = get(&sweep.last().unwrap().1, Method::KSvd);
+    let kq0 = get(&sweep[0].1, Method::KqSvd);
+    let kql = get(&sweep.last().unwrap().1, Method::KqSvd);
+    assert!((ks0 - ksl).abs() < 0.05 * ks0, "K-SVD must be flat in β");
+    assert!((kq0 - kql).abs() < 0.05 * kq0, "KQ-SVD must be flat in β");
+    assert!(
+        gaps.last().unwrap() < &(0.35 * gaps[0]),
+        "Eigen must converge to K-SVD: gaps {gaps:?}"
+    );
+    println!("\npaper-shape check (flat ksvd/kqsvd, Eigen→K-SVD by β=10): HOLDS");
+    println!("CSV → bench_out/fig2_unbalance.csv");
+}

@@ -1,0 +1,123 @@
+//! MICRO — §Perf microbenchmarks for the hot paths of every layer:
+//! matmul GFLOP/s, SVD latency, paged online-softmax attention throughput,
+//! engine decode-step latency, and scheduler overhead.
+//!
+//! Run: `cargo bench --bench microbench`
+
+use kqsvd::attn::online_attn;
+use kqsvd::bench_support::{bench, f as fnum, Table};
+use kqsvd::config::{Config, Method};
+use kqsvd::coordinator::Engine;
+use kqsvd::kvcache::PagedBuf;
+use kqsvd::linalg::{Mat, Svd};
+use kqsvd::server::build_engine;
+use kqsvd::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let mut report = Table::new(&["benchmark", "metric", "value"]);
+
+    // --- L3 substrate: matmul --------------------------------------------
+    println!("matmul:");
+    for n in [128usize, 256, 512] {
+        let mut rng = Pcg64::new(n as u64, 1);
+        let a = Mat::randn(n, n, 1.0, &mut rng);
+        let b = Mat::randn(n, n, 1.0, &mut rng);
+        let m = bench(&format!("matmul {n}x{n}x{n}"), 2, 10, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / m.min_s / 1e9;
+        report.row(&[format!("matmul_{n}"), "GFLOP/s".into(), fnum(gflops, 2)]);
+    }
+
+    // --- SVD (calibration kernel) ----------------------------------------
+    println!("\nSVD (QR + one-sided Jacobi, f64):");
+    for (t, d) in [(4096usize, 32usize), (4096, 64), (16384, 64)] {
+        let mut rng = Pcg64::new((t + d) as u64, 2);
+        let a = Mat::randn(t, d, 1.0, &mut rng);
+        let m = bench(&format!("svd {t}x{d}"), 1, 3, || {
+            std::hint::black_box(Svd::compute(&a));
+        });
+        report.row(&[format!("svd_{t}x{d}"), "ms".into(), fnum(m.mean_s * 1e3, 1)]);
+    }
+
+    // --- compressed attention kernel (Rust twin of the Pallas L1) ---------
+    println!("\nonline-softmax compressed attention (per query):");
+    for (t, r) in [(512usize, 16usize), (2048, 16), (2048, 32)] {
+        let mut rng = Pcg64::new((t * r) as u64, 3);
+        let ck_m = Mat::randn(t, r, 1.0, &mut rng);
+        let cv_m = Mat::randn(t, r, 1.0, &mut rng);
+        let mut ck = PagedBuf::new(r, 16);
+        let mut cv = PagedBuf::new(r, 16);
+        for i in 0..t {
+            ck.push_row(ck_m.row(i));
+            cv.push_row(cv_m.row(i));
+        }
+        let q: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let m = bench(&format!("online_attn T={t} R={r}"), 10, 50, || {
+            std::hint::black_box(online_attn(&q, &ck, &cv, 0.125));
+        });
+        // Bytes streamed per call: T·(R+R)·4.
+        let gbs = (t * r * 2 * 4) as f64 / m.min_s / 1e9;
+        report.row(&[
+            format!("online_attn_T{t}_R{r}"),
+            "GB/s streamed".into(),
+            fnum(gbs, 2),
+        ]);
+    }
+
+    // --- engine decode step ------------------------------------------------
+    println!("\nengine decode step (mha-small, rust backend):");
+    let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
+    cfg.method = Method::KqSvd;
+    cfg.calib.n_calib_seqs = 8;
+    cfg.calib.calib_seq_len = 256;
+    cfg.run_dir = "runs/bench_micro".into();
+    let mut engine = build_engine(&cfg)?;
+    engine.alloc(1, 640).unwrap();
+    // Prefill 128 tokens of context.
+    let prompt: Vec<u32> = (0..128).map(|i| (i % 60 + 1) as u32).collect();
+    engine.prefill(1, &prompt, 0, true)?;
+    let mut step = 0u32;
+    let m = bench("decode_step ctx≈128", 3, 30, || {
+        step = (step + 1) % 60;
+        std::hint::black_box(engine.decode(&[(1, step + 1)]).unwrap());
+    });
+    report.row(&["decode_step_ctx128".into(), "ms".into(), fnum(m.mean_s * 1e3, 3)]);
+    report.row(&[
+        "decode_step_ctx128".into(),
+        "tok/s (batch 1)".into(),
+        fnum(1.0 / m.mean_s, 1),
+    ]);
+
+    // --- scheduler overhead (mock engine, no model math) -------------------
+    println!("\nscheduler overhead:");
+    {
+        use kqsvd::coordinator::{BatcherConfig, Request, Router};
+        let m = bench("router 64 reqs (mock-free math via tiny model)", 1, 3, || {
+            let mut cfg = Config::from_preset("test-tiny").unwrap();
+            cfg.method = Method::KqSvd;
+            cfg.calib.n_calib_seqs = 2;
+            cfg.calib.calib_seq_len = 32;
+            cfg.run_dir = "runs/bench_micro_tiny".into();
+            let mut eng = build_engine(&cfg).unwrap();
+            let mut router = Router::new(BatcherConfig {
+                max_batch: 8,
+                max_queue: 128,
+                prefill_chunk: 16,
+            });
+            for i in 0..64 {
+                router
+                    .submit(&eng, Request::new(i, vec![1, 2, 3, 4], 4))
+                    .unwrap();
+            }
+            std::hint::black_box(router.run_offline(&mut eng).unwrap());
+        });
+        report.row(&["router_64req_tiny".into(), "ms".into(), fnum(m.mean_s * 1e3, 1)]);
+    }
+
+    println!("\nsummary:");
+    report.print();
+    report.write_csv("microbench.csv")?;
+    println!("CSV → bench_out/microbench.csv");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Theorem 5 demo: KQ-SVD is optimal under Grouped-Query Attention.
+//!
+//! For a shared KV head with m query heads, stacking the group's queries and
+//! running plain KQ-SVD achieves the optimal group score error (the
+//! Eckart–Young tail of `K·[Q₁;…;Q_m]ᵀ`) — and beats both baselines at every
+//! group size.
+//!
+//! Run: `cargo run --release --example gqa_demo`
+
+use kqsvd::compress::{
+    eigen_key_gqa, group_score_error, kqsvd_key_gqa, ksvd_key, opt_score_error,
+};
+use kqsvd::linalg::Mat;
+use kqsvd::util::rng::Pcg64;
+
+fn main() {
+    let (t, d, r) = (256, 32, 10);
+    println!("Theorem 5: GQA query stacking (T={t}, d={d}, R={r})\n");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>14} {:>10}",
+        "m", "ksvd", "eigen", "kqsvd", "optimal", "kq=opt?"
+    );
+    for m in [1usize, 2, 4, 8] {
+        let mut rng = Pcg64::new(m as u64, 9);
+        let k = Mat::rand_low_rank(t, d, 0.8, (t as f32).sqrt(), &mut rng);
+        let queries: Vec<Mat> = (0..m)
+            .map(|_| Mat::rand_low_rank(t, d, 0.87, 0.8 * (t as f32).sqrt(), &mut rng))
+            .collect();
+        let qrefs: Vec<&Mat> = queries.iter().collect();
+        let total: f64 = qrefs.iter().map(|q| q.matmul_nt(&k).frob_norm_sq()).sum();
+
+        let e_ks = group_score_error(&k, &qrefs, &ksvd_key(&k, r)) / total;
+        let e_ei = group_score_error(&k, &qrefs, &eigen_key_gqa(&k, &qrefs, r)) / total;
+        let e_kq = group_score_error(&k, &qrefs, &kqsvd_key_gqa(&k, &qrefs, r)) / total;
+        // The information-theoretic optimum: Eckart–Young tail energy of the
+        // stacked score matrix.
+        let stacked = Mat::vcat_all(&qrefs);
+        let opt = opt_score_error(&k, &stacked, r) / total;
+        let tick = if (e_kq - opt).abs() < 1e-4 { "✓" } else { "✗" };
+        println!("{m:>6} {e_ks:>12.6} {e_ei:>12.6} {e_kq:>12.6} {opt:>14.6} {tick:>10}");
+    }
+    println!("\nKQ-SVD attains the optimum for every group size at O(Td²) amortized cost");
+    println!("per query head (paper §5.3) — GQA models get the method for free.");
+}

@@ -1,0 +1,155 @@
+"""AOT lowering: JAX/Pallas decode graphs → HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); Python never executes at serve
+time. The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are emitted per shape bucket:
+
+  * batch  B ∈ {1, 8}
+  * cache  T ∈ {128, 512}   (zero-padded; additive mask handles validity)
+  * rank   R ∈ {d/2, d}     ("comp" variants; Rv = R)
+  * plus the exact baseline (R = Rv = d with identity projections — same
+    graph, full-width geometry)
+
+`manifest.json` records every artifact's geometry; the Rust registry picks
+the smallest compatible bucket at run time and zero-pads inputs.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import attn_decode_layer
+
+# Mirrors rust/src/config/mod.rs presets (geometry only). The Rust engine
+# validates its ModelConfig against the manifest at load time.
+PRESETS = {
+    "mha-small": dict(d_model=256, n_heads=8, n_kv_heads=8),
+    "mha-large": dict(d_model=320, n_heads=10, n_kv_heads=10),
+    "gqa-small": dict(d_model=256, n_heads=8, n_kv_heads=2),
+    "gqa-mistral": dict(d_model=256, n_heads=8, n_kv_heads=2),
+    "test-tiny": dict(d_model=32, n_heads=4, n_kv_heads=4),
+    "test-tiny-gqa": dict(d_model=32, n_heads=4, n_kv_heads=2),
+}
+
+DEFAULT_BATCHES = (1, 8)
+DEFAULT_TS = (128, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_attn_decode(b, t, h, hkv, d, r, rv, scale):
+    """Lower one attn_decode_layer bucket to HLO text."""
+    group = h // hkv
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def fn(q, ck, cv, mask, bproj, folds):
+        return (attn_decode_layer(q, ck, cv, mask, bproj, folds,
+                                  scale=scale, group=group),)
+
+    lowered = jax.jit(fn).lower(
+        spec((b, h, d)),
+        spec((b, hkv, t, r)),
+        spec((b, hkv, t, rv)),
+        spec((b, t)),
+        spec((hkv, d, r)),
+        spec((h, rv, d_model_of(h, d))),
+    )
+    return to_hlo_text(lowered)
+
+
+def d_model_of(h, d):
+    return h * d
+
+
+def build(preset: str, out_dir: str, batches, ts, quiet=False):
+    geo = PRESETS[preset]
+    h, hkv = geo["n_heads"], geo["n_kv_heads"]
+    d = geo["d_model"] // h
+    scale = 1.0 / math.sqrt(d)
+    os.makedirs(out_dir, exist_ok=True)
+
+    ranks = sorted({max(2, d // 2), d})
+    artifacts = []
+    for b in batches:
+        for t in ts:
+            for variant, r in [("comp", rk) for rk in ranks] + [("exact", d)]:
+                rv = r
+                name = f"attn_{preset}_{variant}_b{b}_t{t}_r{r}.hlo.txt"
+                path = os.path.join(out_dir, name)
+                text = lower_attn_decode(b, t, h, hkv, d, r, rv, scale)
+                with open(path, "w") as f:
+                    f.write(text)
+                artifacts.append(
+                    dict(
+                        file=name,
+                        preset=preset,
+                        variant=variant,
+                        batch=b,
+                        t=t,
+                        n_heads=h,
+                        n_kv_heads=hkv,
+                        d_head=d,
+                        r=r,
+                        rv=rv,
+                        scale=scale,
+                    )
+                )
+                if not quiet:
+                    print(f"  wrote {name} ({len(text)} chars)")
+    return artifacts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="Emit KQ-SVD AOT artifacts")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--presets",
+        default="mha-small,test-tiny,test-tiny-gqa",
+        help="comma-separated preset names",
+    )
+    ap.add_argument("--batches", default=",".join(map(str, DEFAULT_BATCHES)))
+    ap.add_argument("--ts", default=",".join(map(str, DEFAULT_TS)))
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    batches = [int(x) for x in args.batches.split(",") if x]
+    ts = [int(x) for x in args.ts.split(",") if x]
+    all_artifacts = []
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if not preset:
+            continue
+        if preset not in PRESETS:
+            print(f"unknown preset {preset!r}", file=sys.stderr)
+            return 1
+        if not args.quiet:
+            print(f"[aot] lowering preset {preset}")
+        all_artifacts += build(preset, args.out, batches, ts, quiet=args.quiet)
+
+    manifest = dict(version=1, artifacts=all_artifacts)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not args.quiet:
+        print(f"[aot] {len(all_artifacts)} artifacts + manifest.json → {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

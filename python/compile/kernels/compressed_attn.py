@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: single-pass compressed decode attention.
+
+The deployment-time hot spot created by KQ-SVD: per decode step, per head,
+attention over the *compressed* cache ``C_K (T×R)`` / ``C_V (T×R_v)`` with an
+already-projected query ``q̃ (R,)``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* grid = (B, H) — one program instance per (sequence, query head); BlockSpec
+  index maps route each instance to its GQA KV head (``h // group``), so KV
+  blocks are shared across a query group without duplication in HBM.
+* the kernel streams the cache in ``BLK_T``-row tiles with an *online softmax*
+  (flash-decoding style): running max `m`, running denominator `l`, running
+  weighted sum `acc (R_v)`. One pass over the cache ⇒ HBM traffic is
+  ``T·(R+R_v)`` instead of ``T·2d`` — the compression ratio is exactly the
+  paper's memory-bandwidth win.
+* tiles of shape (BLK_T, R) are VMEM-resident; matmuls are (1×R)·(R×BLK_T)
+  and (1×BLK_T)·(BLK_T×R_v), mapping to MXU stationary-weight passes on real
+  hardware. Under ``interpret=True`` (mandatory on the CPU PJRT plugin) we
+  validate numerics only.
+
+All shapes are static at lowering time; `aot.py` emits one artifact per
+(B, H, Hkv, T, R, R_v) bucket.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sequence-axis tile. 128 rows keeps a (128, R≤64) f32 tile ≤ 32 KiB, far
+# under VMEM budgets, while amortizing the online-softmax bookkeeping.
+DEFAULT_BLK_T = 128
+
+
+def _decode_attn_kernel(q_ref, ck_ref, cv_ref, mask_ref, o_ref, *, scale, blk_t):
+    """One (batch, head) instance: online softmax over T tiles."""
+    t = ck_ref.shape[0]
+    rv = cv_ref.shape[1]
+    q = q_ref[...]  # (R,)
+
+    n_tiles = t // blk_t  # T is padded to a multiple of blk_t by aot.py
+
+    def body(i, carry):
+        m_run, l_run, acc = carry
+        ck_tile = ck_ref[pl.dslice(i * blk_t, blk_t), :]  # (BLK_T, R)
+        cv_tile = cv_ref[pl.dslice(i * blk_t, blk_t), :]  # (BLK_T, Rv)
+        mask_tile = mask_ref[pl.dslice(i * blk_t, blk_t)]  # (BLK_T,)
+        s = jnp.dot(ck_tile, q) * scale + mask_tile  # (BLK_T,)
+        m_new = jnp.maximum(m_run, s.max())
+        # Rescale the running state to the new max.
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new)  # (BLK_T,)
+        l_new = l_run * corr + p.sum()
+        acc_new = acc * corr + jnp.dot(p, cv_tile)  # (Rv,)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.float32(-jnp.inf),
+        jnp.float32(0.0),
+        jnp.zeros((rv,), jnp.float32),
+    )
+    m_run, l_run, acc = jax.lax.fori_loop(0, n_tiles, body, init)
+    o_ref[...] = acc / l_run
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "group", "blk_t"))
+def compressed_decode_attn(q, ck, cv, mask, *, scale, group, blk_t=DEFAULT_BLK_T):
+    """Batched compressed decode attention via the Pallas kernel.
+
+    Args/shapes identical to :func:`..kernels.ref.compressed_decode_attn_ref`;
+    ``group`` = query heads per KV head (GQA), must equal ``H // Hkv``.
+    """
+    b, h, r = q.shape
+    _, hkv, t, _ = ck.shape
+    rv = cv.shape[-1]
+    assert h == hkv * group, f"H={h} != Hkv={hkv} * group={group}"
+    assert t % blk_t == 0 or t < blk_t, f"T={t} not padded to tile {blk_t}"
+    eff_blk = min(blk_t, t)
+
+    kernel = functools.partial(_decode_attn_kernel, scale=scale, blk_t=eff_blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, None, r), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, None, t, r), lambda i, j: (i, j // group, 0, 0)),
+            pl.BlockSpec((None, None, t, rv), lambda i, j: (i, j // group, 0, 0)),
+            pl.BlockSpec((None, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, rv), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+        name="kqsvd_compressed_decode_attn",
+    )(q, ck, cv, mask)

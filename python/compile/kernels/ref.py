@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the compressed decode-attention kernel.
+
+This is the L1 correctness reference (paper notation, §3.3/§4.2): given a
+batch of already-projected queries ``q̃ = q·B`` and the compressed caches
+``C_K = K·A`` / ``C_V = V·A_v``, decode-step attention per head is
+
+    scores = q̃ C_Kᵀ / sqrt(d)          (approximates q Kᵀ / sqrt(d))
+    p      = softmax(scores + mask)
+    out    = p C_V                      (to be folded with F afterwards)
+
+The reference materializes the whole softmax; the Pallas kernel computes the
+same quantity with a single streaming pass (online softmax), so allclose
+between the two validates the kernel's tiling/accumulation logic.
+"""
+
+import jax.numpy as jnp
+
+
+def compressed_decode_attn_ref(q, ck, cv, mask, *, scale):
+    """Reference compressed decode attention.
+
+    Args:
+      q:    (B, H, R)   projected queries, one decode token per sequence.
+      ck:   (B, Hkv, T, R)  compressed key cache (zero-padded past each
+            sequence's true length).
+      cv:   (B, Hkv, T, Rv) compressed value cache.
+      mask: (B, T) additive mask, 0 for valid positions and a large negative
+            number for padding.
+      scale: 1/sqrt(d) with d the *original* head dimension (the paper's
+            softmax temperature is unchanged by compression).
+
+    Returns:
+      (B, H, Rv) per-head compressed attention outputs.
+    """
+    b, h, r = q.shape
+    hkv = ck.shape[1]
+    assert h % hkv == 0, "query heads must be a multiple of KV heads"
+    group = h // hkv
+
+    # Broadcast KV heads across their query-head group.
+    ck_full = jnp.repeat(ck, group, axis=1)  # (B, H, T, R)
+    cv_full = jnp.repeat(cv, group, axis=1)  # (B, H, T, Rv)
+
+    scores = jnp.einsum("bhr,bhtr->bht", q, ck_full) * scale
+    scores = scores + mask[:, None, :]
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bht,bhtv->bhv", p, cv_full)
+
+
+def exact_decode_attn_ref(q, k, v, mask, *, scale):
+    """Uncompressed decode attention baseline (R = d, identity projections)."""
+    return compressed_decode_attn_ref(q, k, v, mask, scale=scale)

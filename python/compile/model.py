@@ -1,0 +1,50 @@
+"""L2: the JAX decode-step attention graph (build-time only).
+
+One artifact = one *whole attention layer's* decode step over a batch:
+
+    inputs : q      (B, H, d)      raw per-head queries (post-RoPE)
+             ck     (B, Hkv, T, R) compressed key cache (zero-padded)
+             cv     (B, Hkv, T, Rv)
+             mask   (B, T)         additive validity mask (0 / -1e9)
+             bproj  (Hkv, d, R)    per-KV-head query projection B (Thm 2)
+             folds  (H, Rv, D)     per-head folded output projections F_i
+    output : (B, D) — the attention block's contribution Σ_i p_i C_V F_i
+             (pre-residual), exactly what the Rust engine adds to the stream.
+
+The query projection, the Pallas attention kernel (L1) and the value fold all
+lower into a single HLO module, so the Rust hot path makes one PJRT call per
+(layer, decode step). The *exact* baseline is the same graph with R = Rv = d,
+`bproj` stacked identities and `folds` the raw W_i^O slices — one code path,
+two geometries (paper §6.1 evaluates both).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.compressed_attn import compressed_decode_attn
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "group"))
+def attn_decode_layer(q, ck, cv, mask, bproj, folds, *, scale, group):
+    """Full attention-layer decode step (see module docstring)."""
+    b, h, d = q.shape
+    hkv = ck.shape[1]
+    assert h == hkv * group
+
+    # q̃_h = q_h · B_{g(h)} — project each query head with its group's B.
+    bproj_full = jnp.repeat(bproj, group, axis=0)  # (H, d, R)
+    q_proj = jnp.einsum("bhd,hdr->bhr", q, bproj_full)
+
+    # L1 kernel: single-pass compressed attention per (b, h).
+    ctx = compressed_decode_attn(q_proj, ck, cv, mask, scale=scale, group=group)
+
+    # Fold the per-head outputs straight into model space and sum heads:
+    # out = Σ_h ctx_h F_h  — (B, D).
+    return jnp.einsum("bhv,hvD->bD", ctx, folds)
+
+
+def make_identity_bproj(hkv, d):
+    """Stacked identity projections for the exact baseline (R = d)."""
+    return jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32), (hkv, d, d))

@@ -1,0 +1,57 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + a coherent
+manifest (the contract consumed by rust/src/runtime)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    rc = aot.main(["--out", out, "--presets", "test-tiny-gqa", "--batches", "1,2",
+                   "--ts", "128", "--quiet"])
+    assert rc == 0
+    return out
+
+
+def test_manifest_structure(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    # 2 batches × 1 T × (2 comp ranks + 1 exact) = 6.
+    assert len(arts) == 6
+    for a in arts:
+        assert a["preset"] == "test-tiny-gqa"
+        assert a["n_heads"] == 4 and a["n_kv_heads"] == 2
+        assert a["d_head"] == 8
+        assert a["variant"] in ("comp", "exact")
+        assert os.path.exists(os.path.join(built, a["file"]))
+        if a["variant"] == "exact":
+            assert a["r"] == a["d_head"]
+
+
+def test_hlo_text_shape(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        manifest = json.load(f)
+    a = manifest["artifacts"][0]
+    text = open(os.path.join(built, a["file"])).read()
+    assert text.startswith("HloModule")
+    assert "entry_computation_layout" in text
+    # Six parameters (q, ck, cv, mask, bproj, folds).
+    assert text.count("parameter(") >= 6
+
+
+def test_lowering_is_deterministic(built):
+    text1 = aot.lower_attn_decode(1, 128, 4, 2, 8, 4, 4, 0.35)
+    text2 = aot.lower_attn_decode(1, 128, 4, 2, 8, 4, 4, 0.35)
+    assert text1 == text2
+
+
+def test_unknown_preset_rejected(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--presets", "nope", "--quiet"])
+    assert rc == 1

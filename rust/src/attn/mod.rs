@@ -1,0 +1,227 @@
+//! Pure-Rust decode attention over compressed paged caches.
+//!
+//! This is the Rust twin of the L1 Pallas kernel + L2 fold graph
+//! (`python/compile/`): same math, same single-pass online softmax, but
+//! streaming directly over [`crate::kvcache::PagedBuf`] pages with zero
+//! copies. It serves as (a) the default serving backend, (b) the
+//! numerically-cross-checked fallback when AOT artifacts are absent, and
+//! (c) the oracle the PJRT path is validated against in integration tests.
+
+use crate::kvcache::PagedBuf;
+use crate::linalg::Mat;
+
+/// Single-pass (online-softmax) attention of one projected query `q̃ (R)`
+/// over a compressed cache pair `(C_K, C_V)`, returning the compressed
+/// context vector `(R_v)`.
+///
+/// Exactly the flash-decoding recurrence the Pallas kernel uses, so the two
+/// backends agree to float tolerance.
+pub fn online_attn(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32) -> Vec<f32> {
+    let r = ck.width();
+    let rv = cv.width();
+    assert_eq!(q_proj.len(), r, "projected query width mismatch");
+    assert_eq!(ck.len(), cv.len(), "K/V cache length mismatch");
+    let mut m_run = f32::NEG_INFINITY;
+    let mut l_run = 0.0f32;
+    let mut acc = vec![0.0f32; rv];
+
+    let mut row = 0usize;
+    let mut kv_chunks = cv.chunks();
+    for (k_chunk, rows) in ck.chunks() {
+        let (v_chunk, v_rows) = kv_chunks.next().expect("chunk parity");
+        debug_assert_eq!(rows, v_rows);
+        for i in 0..rows {
+            let krow = &k_chunk[i * r..(i + 1) * r];
+            let mut s = 0.0f32;
+            for p in 0..r {
+                s += krow[p] * q_proj[p];
+            }
+            s *= scale;
+            // Online softmax update.
+            if s > m_run {
+                let corr = (m_run - s).exp();
+                l_run *= corr;
+                for a in acc.iter_mut() {
+                    *a *= corr;
+                }
+                m_run = s;
+            }
+            let p_i = (s - m_run).exp();
+            l_run += p_i;
+            let vrow = &v_chunk[i * rv..(i + 1) * rv];
+            for (a, &vv) in acc.iter_mut().zip(vrow) {
+                *a += p_i * vv;
+            }
+        }
+        row += rows;
+    }
+    assert_eq!(row, ck.len());
+    if l_run > 0.0 {
+        let inv = 1.0 / l_run;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+    }
+    acc
+}
+
+/// One attention layer's decode step for a single sequence: project each
+/// query head with its group's `B`, run [`online_attn`] against the shared
+/// group cache, fold with the per-head `F_i` and sum into model space.
+///
+/// Mirrors `python/compile/model.py::attn_decode_layer` for batch 1.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attn_layer(
+    q_heads: &[Vec<f32>],   // H raw query vectors (len d, post-RoPE)
+    bproj: &[&Mat],         // per KV head: d×R
+    folds: &[&Mat],         // per query head: R_v×D
+    k_bufs: &[PagedBuf],    // per KV head compressed K
+    v_bufs: &[PagedBuf],    // per KV head compressed V
+    scale: f32,
+    group: usize,
+    d_model: usize,
+) -> Vec<f32> {
+    let h = q_heads.len();
+    assert_eq!(folds.len(), h);
+    assert_eq!(bproj.len(), k_bufs.len());
+    assert_eq!(h, k_bufs.len() * group);
+    let mut out = vec![0.0f32; d_model];
+    for (hi, q) in q_heads.iter().enumerate() {
+        let kv = hi / group;
+        let q_proj = bproj[kv].vecmat(q); // (R)
+        let ctx = online_attn(&q_proj, &k_bufs[kv], &v_bufs[kv], scale); // (Rv)
+        // out += ctx · F_hi
+        let fold = folds[hi];
+        debug_assert_eq!(fold.rows(), ctx.len());
+        debug_assert_eq!(fold.cols(), d_model);
+        for (i, &c) in ctx.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let frow = fold.row(i);
+            for j in 0..d_model {
+                out[j] += c * frow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Dense reference for tests: materialized softmax over a dense cache.
+pub fn dense_attn_reference(q_proj: &[f32], ck: &Mat, cv: &Mat, scale: f32) -> Vec<f32> {
+    let mut scores = ck.matvec(q_proj);
+    scores.iter_mut().for_each(|s| *s *= scale);
+    crate::model::softmax_inplace(&mut scores);
+    cv.vecmat(&scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    fn fill_buf(rows: &Mat, page: usize) -> PagedBuf {
+        let mut b = PagedBuf::new(rows.cols(), page);
+        for i in 0..rows.rows() {
+            b.push_row(rows.row(i));
+        }
+        b
+    }
+
+    #[test]
+    fn online_matches_dense() {
+        let mut rng = Pcg64::new(1, 1);
+        for (t, r, rv, page) in [(1, 4, 4, 8), (17, 8, 6, 4), (100, 16, 16, 16), (64, 2, 10, 64)] {
+            let ck = Mat::randn(t, r, 1.0, &mut rng);
+            let cv = Mat::randn(t, rv, 1.0, &mut rng);
+            let q: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let kb = fill_buf(&ck, page);
+            let vb = fill_buf(&cv, page);
+            let fast = online_attn(&q, &kb, &vb, 0.3);
+            let slow = dense_attn_reference(&q, &ck, &cv, 0.3);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-4, "t={t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_is_stable_under_large_scores() {
+        let mut rng = Pcg64::new(2, 1);
+        let ck = Mat::randn(32, 4, 100.0, &mut rng);
+        let cv = Mat::randn(32, 4, 1.0, &mut rng);
+        let q: Vec<f32> = vec![50.0; 4];
+        let out = online_attn(&q, &fill_buf(&ck, 8), &fill_buf(&cv, 8), 1.0);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn single_row_returns_value() {
+        let ck = Mat::from_rows(&[&[1.0, 2.0]]);
+        let cv = Mat::from_rows(&[&[5.0, -3.0, 7.0]]);
+        let out = online_attn(&[0.5, 0.5], &fill_buf(&ck, 4), &fill_buf(&cv, 4), 1.0);
+        assert_eq!(out, vec![5.0, -3.0, 7.0]);
+    }
+
+    #[test]
+    fn layer_decode_matches_manual_composition() {
+        let mut rng = Pcg64::new(3, 1);
+        let (h, group, d, r, rv, dm, t) = (4usize, 2usize, 8, 4, 6, 16, 30);
+        let hkv = h / group;
+        let q_heads: Vec<Vec<f32>> = (0..h)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let bproj: Vec<Mat> = (0..hkv).map(|_| Mat::randn(d, r, 1.0, &mut rng)).collect();
+        let folds: Vec<Mat> = (0..h).map(|_| Mat::randn(rv, dm, 1.0, &mut rng)).collect();
+        let ck: Vec<Mat> = (0..hkv).map(|_| Mat::randn(t, r, 1.0, &mut rng)).collect();
+        let cv: Vec<Mat> = (0..hkv).map(|_| Mat::randn(t, rv, 1.0, &mut rng)).collect();
+        let k_bufs: Vec<PagedBuf> = ck.iter().map(|m| fill_buf(m, 8)).collect();
+        let v_bufs: Vec<PagedBuf> = cv.iter().map(|m| fill_buf(m, 8)).collect();
+
+        let out = decode_attn_layer(
+            &q_heads,
+            &bproj.iter().collect::<Vec<_>>(),
+            &folds.iter().collect::<Vec<_>>(),
+            &k_bufs,
+            &v_bufs,
+            0.35,
+            group,
+            dm,
+        );
+
+        // Manual: per head project, dense attn, fold, sum.
+        let mut expect = vec![0.0f32; dm];
+        for hi in 0..h {
+            let kv = hi / group;
+            let qp = bproj[kv].vecmat(&q_heads[hi]);
+            let ctx = dense_attn_reference(&qp, &ck[kv], &cv[kv], 0.35);
+            let folded = folds[hi].vecmat(&ctx);
+            for j in 0..dm {
+                expect[j] += folded[j];
+            }
+        }
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prop_online_equals_dense() {
+        forall("online softmax == dense attention", 30, |g| {
+            let t = g.usize_in(1, 60);
+            let r = g.usize_in(1, 12);
+            let rv = g.usize_in(1, 12);
+            let page = g.usize_in(1, 16);
+            let ck = Mat::from_vec(t, r, g.normal_vec(t * r, 1.0));
+            let cv = Mat::from_vec(t, rv, g.normal_vec(t * rv, 1.0));
+            let q = g.normal_vec(r, 1.0);
+            let scale = g.f64_in(0.05, 2.0) as f32;
+            let fast = online_attn(&q, &fill_buf(&ck, page), &fill_buf(&cv, page), scale);
+            let slow = dense_attn_reference(&q, &ck, &cv, scale);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+            }
+        });
+    }
+}

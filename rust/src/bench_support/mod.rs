@@ -1,0 +1,183 @@
+//! Built-in benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with mean/std/min reporting, a
+//! fixed-width table printer for paper-style figure/table output, and a CSV
+//! writer (`bench_out/*.csv`) so plots can be regenerated.
+
+use crate::util::stats::{fmt_duration, Timer};
+use std::path::Path;
+
+/// Measurement of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Run `f` `iters` times after `warmup` untimed runs; report stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_secs());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let m = Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+    };
+    println!(
+        "  {:<42} {:>12} ± {:<10} (min {})",
+        m.name,
+        fmt_duration(m.mean_s),
+        fmt_duration(m.std_s),
+        fmt_duration(m.min_s)
+    );
+    m
+}
+
+/// Simple fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Write as CSV under `bench_out/`.
+    pub fn write_csv(&self, file_name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = Path::new("bench_out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(file_name);
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            // Quote cells containing commas.
+            let cells: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') {
+                        format!("\"{c}\"")
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+/// Format a float with fixed precision for tables.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format in scientific notation.
+pub fn sci(x: f64) -> String {
+    format!("{x:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let mut n = 0u64;
+        let m = bench("noop-ish", 1, 5, || {
+            n = n.wrapping_add(1);
+            std::hint::black_box(n);
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_s >= 0.0 && m.min_s <= m.mean_s);
+        assert!(m.throughput(100.0) > 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["model", "method", "err"]);
+        t.row(&["mha-small".into(), "kqsvd".into(), "0.012".into()]);
+        t.row(&["mha-small".into(), "ksvd".into(), "0.034".into()]);
+        t.print();
+        let dir = std::env::current_dir().unwrap();
+        let tmp = std::env::temp_dir().join("kqsvd-bench-test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::env::set_current_dir(&tmp).unwrap();
+        let path = t.write_csv("test.csv").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::env::set_current_dir(dir).unwrap();
+        assert!(text.starts_with("model,method,err\n"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

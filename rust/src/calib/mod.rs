@@ -1,0 +1,375 @@
+//! Post-training calibration pipeline (paper §3.3 / §6.1).
+//!
+//! 1. [`collect_caches`] runs the model over `n_calib_seqs` calibration
+//!    sequences and concatenates the per-(layer, head) post-RoPE caches into
+//!    large matrices `K, Q, V ∈ R^{T_huge×d}` (paper: `T_huge = 262,144`).
+//! 2. [`select_ranks`] picks per-layer ranks from head-averaged K/V spectra
+//!    at tolerance ε, shared by *all* methods for a fair comparison (§6.1).
+//! 3. [`build_projections`] computes the per-(layer, KV-head) projections for
+//!    a chosen method — key side shared across the GQA group (Theorem 5),
+//!    value side with per-query-head folds (the `W = [W₁^O … W_m^O]`
+//!    horizontal stacking; Appendix B).
+//! 4. [`ProjectionSet::save`]/[`load`] persist them as a binary artifact next
+//!    to the weights, so serving never recomputes SVDs.
+
+pub mod store;
+
+use crate::compress::{
+    key_projection, rank::select_rank_avg, KeyProjection,
+};
+use crate::config::{CalibConfig, Method, ModelConfig};
+use crate::linalg::{Mat, Svd};
+use crate::model::{LayerCaches, Transformer};
+use crate::text::{Corpus, Split};
+
+/// Aggregated calibration caches for one layer.
+#[derive(Debug, Clone)]
+pub struct AggLayerCaches {
+    /// Per KV head: concatenated `T_huge×d` key cache.
+    pub k: Vec<Mat>,
+    /// Per KV head: concatenated value cache.
+    pub v: Vec<Mat>,
+    /// Per query head: concatenated query cache.
+    pub q: Vec<Mat>,
+}
+
+/// Aggregated caches for all layers.
+#[derive(Debug, Clone)]
+pub struct CalibCaches {
+    pub layers: Vec<AggLayerCaches>,
+    /// Total aggregated rows (`T_huge`).
+    pub total_rows: usize,
+}
+
+/// Run the model over the calibration split and aggregate caches.
+pub fn collect_caches(model: &Transformer, corpus: &Corpus, calib: &CalibConfig) -> CalibCaches {
+    collect_caches_from(model, corpus, Split::Train, 0, calib.n_calib_seqs, calib.calib_seq_len)
+}
+
+/// Aggregate caches from an arbitrary split/range (the eval harness uses the
+/// validation split).
+pub fn collect_caches_from(
+    model: &Transformer,
+    corpus: &Corpus,
+    split: Split,
+    idx0: u64,
+    n_seqs: usize,
+    seq_len: usize,
+) -> CalibCaches {
+    let cfg = &model.cfg;
+    assert!(n_seqs > 0 && seq_len > 1);
+    let mut per_layer: Vec<Vec<LayerCaches>> = (0..cfg.n_layers).map(|_| Vec::new()).collect();
+    for s in 0..n_seqs {
+        let tokens = corpus.sequence(split, idx0 + s as u64, seq_len);
+        let (_, cap) = model.forward(&tokens, true);
+        for (li, lc) in cap.expect("capture on").layers.into_iter().enumerate() {
+            per_layer[li].push(lc);
+        }
+    }
+    let layers = per_layer
+        .into_iter()
+        .map(|seqs| {
+            let k = (0..cfg.n_kv_heads)
+                .map(|h| Mat::vcat_all(&seqs.iter().map(|s| &s.k[h]).collect::<Vec<_>>()))
+                .collect();
+            let v = (0..cfg.n_kv_heads)
+                .map(|h| Mat::vcat_all(&seqs.iter().map(|s| &s.v[h]).collect::<Vec<_>>()))
+                .collect();
+            let q = (0..cfg.n_heads)
+                .map(|h| Mat::vcat_all(&seqs.iter().map(|s| &s.q[h]).collect::<Vec<_>>()))
+                .collect();
+            AggLayerCaches { k, v, q }
+        })
+        .collect();
+    CalibCaches {
+        layers,
+        total_rows: n_seqs * seq_len,
+    }
+}
+
+/// Per-layer selected ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerRanks {
+    pub r_key: usize,
+    pub r_value: usize,
+}
+
+/// Rank selection per layer from head-averaged K and V spectra (§6.1).
+pub fn select_ranks(caches: &CalibCaches, calib: &CalibConfig) -> Vec<LayerRanks> {
+    caches
+        .layers
+        .iter()
+        .map(|layer| {
+            let k_spectra: Vec<Vec<f64>> = layer.k.iter().map(|k| Svd::compute(k).s).collect();
+            let v_spectra: Vec<Vec<f64>> = layer.v.iter().map(|v| Svd::compute(v).s).collect();
+            let r_key = select_rank_avg(&k_spectra, calib.epsilon).max(1);
+            let r_value = select_rank_avg(&v_spectra, calib.value_epsilon).max(1);
+            LayerRanks { r_key, r_value }
+        })
+        .collect()
+}
+
+/// Projections for one GQA group (= one KV head and its query heads).
+#[derive(Debug, Clone)]
+pub struct GroupProjection {
+    /// Shared key-side pair (Theorem 5).
+    pub key: KeyProjection,
+    /// Shared value-side store matrix `A_v ∈ R^{d×R_v}`.
+    pub value_a: Mat,
+    /// Value-side second factor `B_v ∈ R^{d×R_v}` (eval-only; see
+    /// [`crate::compress::ValueProjection::b`]).
+    pub value_b: Mat,
+    /// Per-query-head fold matrices `F_i ∈ R^{R_v×D}` (pre-absorbed `W_i^O`).
+    pub value_folds: Vec<Mat>,
+}
+
+/// Projections for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerProjection {
+    pub groups: Vec<GroupProjection>,
+    pub ranks: LayerRanks,
+}
+
+/// A full projection artifact: one method, all layers.
+#[derive(Debug, Clone)]
+pub struct ProjectionSet {
+    pub method: Method,
+    pub layers: Vec<LayerProjection>,
+}
+
+impl ProjectionSet {
+    /// Compressed KV-cache bytes per token across all layers/KV heads.
+    pub fn bytes_per_token(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.groups
+                    .iter()
+                    .map(|g| 4 * (g.key.rank() + g.value_a.cols()))
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Uncompressed bytes per token for the same geometry.
+    pub fn uncompressed_bytes_per_token(&self, cfg: &ModelConfig) -> usize {
+        cfg.n_layers * cfg.n_kv_heads * 2 * cfg.d_head() * 4
+    }
+
+    /// compressed/uncompressed cache-size ratio.
+    pub fn compression_ratio(&self, cfg: &ModelConfig) -> f64 {
+        self.bytes_per_token() as f64 / self.uncompressed_bytes_per_token(cfg) as f64
+    }
+}
+
+/// Build the value-side projection for a GQA group: shared `A_v` plus
+/// per-head folds via horizontal stacking of `W_i^O` (Appendix B + Theorem 5
+/// applied on the output side).
+fn group_value_projection(
+    method: Method,
+    v: &Mat,
+    wo_heads: &[Mat],
+    r: usize,
+) -> (Mat, Mat, Vec<Mat>) {
+    let d_out = wo_heads[0].cols();
+    let w_cat = Mat::hcat_all(&wo_heads.iter().collect::<Vec<_>>()); // d×(mD)
+    let vp = crate::compress::value_projection(method, v, &w_cat, r);
+    let folds = (0..wo_heads.len())
+        .map(|i| vp.fold.slice_cols(i * d_out, (i + 1) * d_out))
+        .collect();
+    (vp.a, vp.b, folds)
+}
+
+/// Compute the full projection set for `method` from aggregated caches.
+pub fn build_projections(
+    cfg: &ModelConfig,
+    weights_wo: &[Mat], // per-layer W^O ((h·d)×D)
+    caches: &CalibCaches,
+    ranks: &[LayerRanks],
+    method: Method,
+) -> ProjectionSet {
+    assert_eq!(caches.layers.len(), ranks.len());
+    let group = cfg.group_size();
+    let dh = cfg.d_head();
+    let layers = caches
+        .layers
+        .iter()
+        .zip(ranks)
+        .enumerate()
+        .map(|(li, (layer, r))| {
+            let groups = (0..cfg.n_kv_heads)
+                .map(|kv| {
+                    let qrefs: Vec<&Mat> =
+                        (0..group).map(|g| &layer.q[kv * group + g]).collect();
+                    let key = key_projection(method, &layer.k[kv], &qrefs, r.r_key);
+                    let wo_heads: Vec<Mat> = (0..group)
+                        .map(|g| {
+                            let h = kv * group + g;
+                            weights_wo[li].slice_rows(h * dh, (h + 1) * dh)
+                        })
+                        .collect();
+                    let (value_a, value_b, value_folds) =
+                        group_value_projection(method, &layer.v[kv], &wo_heads, r.r_value);
+                    GroupProjection {
+                        key,
+                        value_a,
+                        value_b,
+                        value_folds,
+                    }
+                })
+                .collect();
+            LayerProjection {
+                groups,
+                ranks: r.clone(),
+            }
+        })
+        .collect();
+    ProjectionSet { method, layers }
+}
+
+/// Convenience: run the whole §3.3 calibration phase for one method.
+pub fn calibrate(
+    model: &Transformer,
+    corpus: &Corpus,
+    calib: &CalibConfig,
+    method: Method,
+) -> (ProjectionSet, Vec<LayerRanks>, CalibCaches) {
+    let caches = collect_caches(model, corpus, calib);
+    let ranks = select_ranks(&caches, calib);
+    let wo: Vec<Mat> = model.weights.layers.iter().map(|l| l.wo.clone()).collect();
+    let set = build_projections(&model.cfg, &wo, &caches, &ranks, method);
+    (set, ranks, caches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn tiny_setup(name: &str) -> (Transformer, Corpus, CalibConfig) {
+        let cfg = preset(name).unwrap();
+        let corpus = Corpus::new(cfg.vocab_size, 0);
+        let model = Transformer::init(cfg);
+        let calib = CalibConfig {
+            n_calib_seqs: 3,
+            calib_seq_len: 48,
+            n_eval_seqs: 2,
+            eval_seq_len: 32,
+            epsilon: 0.1,
+            value_epsilon: 0.1,
+            seed: 0,
+        };
+        (model, corpus, calib)
+    }
+
+    #[test]
+    fn collect_shapes() {
+        let (model, corpus, calib) = tiny_setup("test-tiny-gqa");
+        let caches = collect_caches(&model, &corpus, &calib);
+        let cfg = &model.cfg;
+        assert_eq!(caches.layers.len(), cfg.n_layers);
+        assert_eq!(caches.total_rows, 3 * 48);
+        for l in &caches.layers {
+            assert_eq!(l.k.len(), cfg.n_kv_heads);
+            assert_eq!(l.q.len(), cfg.n_heads);
+            assert_eq!(l.k[0].shape(), (144, cfg.d_head()));
+            assert_eq!(l.q[0].shape(), (144, cfg.d_head()));
+        }
+    }
+
+    #[test]
+    fn rank_selection_bounds() {
+        let (model, corpus, calib) = tiny_setup("test-tiny");
+        let caches = collect_caches(&model, &corpus, &calib);
+        let ranks = select_ranks(&caches, &calib);
+        let d = model.cfg.d_head();
+        for r in &ranks {
+            assert!(r.r_key >= 1 && r.r_key <= d);
+            assert!(r.r_value >= 1 && r.r_value <= d);
+        }
+        // Tighter ε must not decrease rank.
+        let tighter = CalibConfig {
+            epsilon: 0.01,
+            value_epsilon: 0.01,
+            ..calib
+        };
+        let ranks2 = select_ranks(&caches, &tighter);
+        for (a, b) in ranks.iter().zip(&ranks2) {
+            assert!(b.r_key >= a.r_key);
+            assert!(b.r_value >= a.r_value);
+        }
+    }
+
+    #[test]
+    fn build_projection_shapes_mha_and_gqa() {
+        for name in ["test-tiny", "test-tiny-gqa"] {
+            let (model, corpus, calib) = tiny_setup(name);
+            let (set, ranks, _) = calibrate(&model, &corpus, &calib, Method::KqSvd);
+            let cfg = &model.cfg;
+            assert_eq!(set.layers.len(), cfg.n_layers);
+            for (lp, r) in set.layers.iter().zip(&ranks) {
+                assert_eq!(lp.groups.len(), cfg.n_kv_heads);
+                for g in &lp.groups {
+                    assert_eq!(g.key.a.shape(), (cfg.d_head(), r.r_key));
+                    assert_eq!(g.key.b.shape(), (cfg.d_head(), r.r_key));
+                    assert_eq!(g.value_a.shape(), (cfg.d_head(), r.r_value));
+                    assert_eq!(g.value_folds.len(), cfg.group_size());
+                    for f in &g.value_folds {
+                        assert_eq!(f.shape(), (r.r_value, cfg.d_model));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kqsvd_projections_beat_baselines_on_real_caches() {
+        // The Figure-1 headline on actual model-generated caches, in miniature.
+        let (model, corpus, calib) = tiny_setup("test-tiny");
+        let caches = collect_caches(&model, &corpus, &calib);
+        let ranks = select_ranks(&caches, &calib);
+        let wo: Vec<Mat> = model.weights.layers.iter().map(|l| l.wo.clone()).collect();
+        let mut err = std::collections::BTreeMap::new();
+        for method in Method::COMPARED {
+            let set = build_projections(&model.cfg, &wo, &caches, &ranks, method);
+            let mut total = 0.0f64;
+            let mut denom = 0.0f64;
+            for (lp, lc) in set.layers.iter().zip(&caches.layers) {
+                for (kv, g) in lp.groups.iter().enumerate() {
+                    for qi in 0..model.cfg.group_size() {
+                        let q = &lc.q[kv * model.cfg.group_size() + qi];
+                        let exact = q.matmul_nt(&lc.k[kv]);
+                        total += exact.sub(&g.key.approx_scores(&lc.k[kv], q)).frob_norm_sq();
+                        denom += exact.frob_norm_sq();
+                    }
+                }
+            }
+            err.insert(method.name(), total / denom);
+        }
+        let e_kq = err["kqsvd"];
+        let e_ks = err["ksvd"];
+        let e_ei = err["eigen"];
+        assert!(e_kq <= e_ks + 1e-9, "kqsvd {e_kq} vs ksvd {e_ks}");
+        assert!(e_kq <= e_ei + 1e-9, "kqsvd {e_kq} vs eigen {e_ei}");
+    }
+
+    #[test]
+    fn compression_accounting() {
+        let (model, corpus, calib) = tiny_setup("test-tiny");
+        let (set, _, _) = calibrate(&model, &corpus, &calib, Method::KqSvd);
+        let ratio = set.compression_ratio(&model.cfg);
+        assert!(ratio > 0.0 && ratio <= 1.5, "ratio={ratio}");
+        assert!(set.bytes_per_token() > 0);
+    }
+
+    #[test]
+    fn method_none_is_identity() {
+        let (model, corpus, calib) = tiny_setup("test-tiny");
+        let (set, _, caches) = calibrate(&model, &corpus, &calib, Method::None);
+        let lc = &caches.layers[0];
+        let g = &set.layers[0].groups[0];
+        let q = &lc.q[0];
+        let exact = q.matmul_nt(&lc.k[0]);
+        assert!(exact.max_abs_diff(&g.key.approx_scores(&lc.k[0], q)) < 1e-3);
+    }
+}

@@ -1,0 +1,189 @@
+//! Binary persistence for [`super::ProjectionSet`] artifacts.
+//!
+//! Format: magic `KQPJ`, u32 version, u8 method, u32 n_layers, then per
+//! layer: u32 r_key, u32 r_value, u32 n_groups, per group: key A, key B,
+//! value A, u32 n_folds, folds… Every matrix as u32 rows, u32 cols, f32 LE
+//! payload. Written once by `kqsvd calibrate`, memory-mapped… no, plainly
+//! read — these artifacts are a few MB.
+
+use super::{GroupProjection, LayerProjection, LayerRanks, ProjectionSet};
+use crate::compress::KeyProjection;
+use crate::config::Method;
+use crate::linalg::Mat;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"KQPJ";
+
+fn method_code(m: Method) -> u8 {
+    match m {
+        Method::None => 0,
+        Method::KSvd => 1,
+        Method::Eigen => 2,
+        Method::KqSvd => 3,
+    }
+}
+
+fn method_from_code(c: u8) -> Option<Method> {
+    Some(match c {
+        0 => Method::None,
+        1 => Method::KSvd,
+        2 => Method::Eigen,
+        3 => Method::KqSvd,
+        _ => return None,
+    })
+}
+
+impl ProjectionSet {
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&[method_code(self.method)])?;
+        f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for l in &self.layers {
+            f.write_all(&(l.ranks.r_key as u32).to_le_bytes())?;
+            f.write_all(&(l.ranks.r_value as u32).to_le_bytes())?;
+            f.write_all(&(l.groups.len() as u32).to_le_bytes())?;
+            for g in &l.groups {
+                write_mat(&mut f, &g.key.a)?;
+                write_mat(&mut f, &g.key.b)?;
+                write_mat(&mut f, &g.value_a)?;
+                write_mat(&mut f, &g.value_b)?;
+                f.write_all(&(g.value_folds.len() as u32).to_le_bytes())?;
+                for fold in &g.value_folds {
+                    write_mat(&mut f, fold)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> io::Result<ProjectionSet> {
+        let mut f = io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let version = read_u32(&mut f)?;
+        if version != 1 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad version"));
+        }
+        let mut mb = [0u8; 1];
+        f.read_exact(&mut mb)?;
+        let method = method_from_code(mb[0])
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad method"))?;
+        let n_layers = read_u32(&mut f)? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let r_key = read_u32(&mut f)? as usize;
+            let r_value = read_u32(&mut f)? as usize;
+            let n_groups = read_u32(&mut f)? as usize;
+            let mut groups = Vec::with_capacity(n_groups);
+            for _ in 0..n_groups {
+                let a = read_mat(&mut f)?;
+                let b = read_mat(&mut f)?;
+                let value_a = read_mat(&mut f)?;
+                let value_b = read_mat(&mut f)?;
+                let n_folds = read_u32(&mut f)? as usize;
+                let mut value_folds = Vec::with_capacity(n_folds);
+                for _ in 0..n_folds {
+                    value_folds.push(read_mat(&mut f)?);
+                }
+                groups.push(GroupProjection {
+                    key: KeyProjection { a, b },
+                    value_a,
+                    value_b,
+                    value_folds,
+                });
+            }
+            layers.push(LayerProjection {
+                groups,
+                ranks: LayerRanks { r_key, r_value },
+            });
+        }
+        Ok(ProjectionSet { method, layers })
+    }
+}
+
+fn write_mat<W: Write>(w: &mut W, m: &Mat) -> io::Result<()> {
+    w.write_all(&(m.rows() as u32).to_le_bytes())?;
+    w.write_all(&(m.cols() as u32).to_le_bytes())?;
+    // Bulk write the raw f32 payload.
+    let bytes: Vec<u8> = m.data().iter().flat_map(|x| x.to_le_bytes()).collect();
+    w.write_all(&bytes)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_mat<R: Read>(r: &mut R) -> io::Result<Mat> {
+    let rows = read_u32(r)? as usize;
+    let cols = read_u32(r)? as usize;
+    if rows.saturating_mul(cols) > 1 << 28 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "tensor too large"));
+    }
+    let mut bytes = vec![0u8; rows * cols * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::text::Corpus;
+    use crate::model::Transformer;
+    use crate::config::CalibConfig;
+
+    #[test]
+    fn projection_set_roundtrip() {
+        let cfg = preset("test-tiny-gqa").unwrap();
+        let corpus = Corpus::new(cfg.vocab_size, 0);
+        let model = Transformer::init(cfg);
+        let calib = CalibConfig {
+            n_calib_seqs: 2,
+            calib_seq_len: 32,
+            ..CalibConfig::default()
+        };
+        let (set, _, _) = super::super::calibrate(&model, &corpus, &calib, Method::KqSvd);
+        let dir = std::env::temp_dir().join("kqsvd-test-projstore");
+        let path = dir.join("proj.bin");
+        set.save(&path).unwrap();
+        let back = ProjectionSet::load(&path).unwrap();
+        assert_eq!(back.method, Method::KqSvd);
+        assert_eq!(back.layers.len(), set.layers.len());
+        for (a, b) in set.layers.iter().zip(&back.layers) {
+            assert_eq!(a.ranks, b.ranks);
+            assert_eq!(a.groups.len(), b.groups.len());
+            for (ga, gb) in a.groups.iter().zip(&b.groups) {
+                assert!(ga.key.a.max_abs_diff(&gb.key.a) == 0.0);
+                assert!(ga.key.b.max_abs_diff(&gb.key.b) == 0.0);
+                assert!(ga.value_a.max_abs_diff(&gb.value_a) == 0.0);
+                assert_eq!(ga.value_folds.len(), gb.value_folds.len());
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_files() {
+        let dir = std::env::temp_dir().join("kqsvd-test-projstore-bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"JUNKJUNKJUNK").unwrap();
+        assert!(ProjectionSet::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

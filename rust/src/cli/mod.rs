@@ -1,0 +1,213 @@
+//! Minimal command-line argument parser (offline substitute for `clap`).
+//!
+//! Supports: a leading subcommand, `--key value`, `--key=value`, boolean
+//! flags (`--flag`), repeated flags, and `--help` text generation from
+//! declared options.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help output.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The first non-flag token, if any.
+    pub subcommand: Option<String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // "--" : everything after is positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let value = if let Some(v) = inline_val {
+                    v
+                } else {
+                    // Next token is the value unless it's another flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                        _ => "true".to_string(),
+                    }
+                };
+                args.flags.entry(key).or_default().push(value);
+            } else if tok.starts_with('-') && tok.len() > 1 && !tok[1..2].chars().all(|c| c.is_ascii_digit()) {
+                return Err(format!("short flags not supported: {tok}"));
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Raw string value of a flag (last occurrence wins).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of a repeated flag.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--betas 1,2,5,10`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nOptions:\n");
+    for o in opts {
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--config", "c.json", "--batch=8", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("config"), Some("c.json"));
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.bool_or("quiet", false));
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let a = parse(&["x", "--k=v"]);
+        let b = parse(&["x", "--k", "v"]);
+        assert_eq!(a.get("k"), b.get("k"));
+    }
+
+    #[test]
+    fn last_occurrence_wins_and_all_retained() {
+        let a = parse(&["x", "--m", "1", "--m", "2"]);
+        assert_eq!(a.get("m"), Some("2"));
+        assert_eq!(a.get_all("m"), &["1".to_string(), "2".to_string()]);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["x", "--lo", "-3.5"]);
+        assert_eq!(a.f64_or("lo", 0.0), -3.5);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["x", "--betas", "1,2,5,10"]);
+        assert_eq!(a.f64_list_or("betas", &[]), vec![1.0, 2.0, 5.0, 10.0]);
+        assert_eq!(a.f64_list_or("missing", &[0.5]), vec![0.5]);
+    }
+
+    #[test]
+    fn double_dash_stops_flag_parsing() {
+        let a = parse(&["run", "--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag".to_string()]);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["eval", "file1", "file2"]);
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.positional, vec!["file1".to_string(), "file2".to_string()]);
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--flag", "--k", "v"]);
+        assert!(a.bool_or("flag", false));
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn help_rendering() {
+        let h = render_help(
+            "serve",
+            "run the server",
+            &[OptSpec {
+                name: "config",
+                help: "config path",
+                default: Some("configs/mha-small.json"),
+            }],
+        );
+        assert!(h.contains("--config"));
+        assert!(h.contains("default"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Theorem 3: the exact optimality gap between K-SVD and KQ-SVD.
+//!
+//! `err_KSVD − opt = Σ_{i≤R} σ_i(KQᵀ)² − ‖K V̂_K V̂_Kᵀ Qᵀ‖²_F ≥ 0`, with
+//! equality iff the top-R left singular subspaces of `K` and `KQᵀ` coincide.
+//! This module computes every quantity in the identity so tests (and the
+//! TAB-RANK bench) can verify it numerically on real caches.
+
+use super::methods::{ksvd_key, score_error, score_singular_values};
+use crate::linalg::Mat;
+
+/// All terms of the Theorem-3 identity for a given `(K, Q, R)`.
+#[derive(Debug, Clone)]
+pub struct Theorem3Gap {
+    pub r: usize,
+    /// `opt = Σ_{i>R} σ_i(KQᵀ)²` — KQ-SVD's error (Theorem 2).
+    pub opt: f64,
+    /// `err_KSVD = ‖K V̂_K V̂_Kᵀ Qᵀ − KQᵀ‖²_F`.
+    pub err_ksvd: f64,
+    /// `Σ_{i≤R} σ_i(KQᵀ)²` — top-R score energy.
+    pub top_energy: f64,
+    /// `‖K V̂_K V̂_Kᵀ Qᵀ‖²_F` — energy captured by the K-SVD projection.
+    pub captured: f64,
+}
+
+impl Theorem3Gap {
+    /// Left-hand side `err_KSVD − opt`.
+    pub fn gap_lhs(&self) -> f64 {
+        self.err_ksvd - self.opt
+    }
+
+    /// Right-hand side `Σ_{i≤R} σ_i² − ‖K V̂ V̂ᵀ Qᵀ‖²`.
+    pub fn gap_rhs(&self) -> f64 {
+        self.top_energy - self.captured
+    }
+
+    /// Relative identity residual |lhs − rhs| / total energy.
+    pub fn identity_residual(&self) -> f64 {
+        let total = self.top_energy + self.opt;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (self.gap_lhs() - self.gap_rhs()).abs() / total
+    }
+}
+
+/// Evaluate every term of Theorem 3 on caches `(K, Q)` at rank `r`.
+pub fn theorem3_gap(k: &Mat, q: &Mat, r: usize) -> Theorem3Gap {
+    let sigma = score_singular_values(k, q);
+    let top_energy: f64 = sigma.iter().take(r).map(|x| x * x).sum();
+    let opt: f64 = sigma.iter().skip(r).map(|x| x * x).sum();
+    let proj = ksvd_key(k, r);
+    let err_ksvd = score_error(k, q, &proj);
+    let captured = proj.approx_scores(k, q).frob_norm_sq();
+    Theorem3Gap {
+        r,
+        opt,
+        err_ksvd,
+        top_energy,
+        captured,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity_holds_on_structured_caches() {
+        let mut rng = Pcg64::new(1, 1);
+        let k = Mat::rand_low_rank(60, 12, 0.7, 8.0, &mut rng);
+        let q = Mat::rand_low_rank(60, 12, 0.8, 6.0, &mut rng);
+        for r in [1, 3, 6, 10] {
+            let g = theorem3_gap(&k, &q, r);
+            assert!(
+                g.identity_residual() < 1e-4,
+                "r={r}: lhs={} rhs={} resid={}",
+                g.gap_lhs(),
+                g.gap_rhs(),
+                g.identity_residual()
+            );
+            assert!(g.gap_lhs() >= -1e-4 * (g.top_energy + g.opt), "gap must be ≥ 0");
+        }
+    }
+
+    #[test]
+    fn gap_vanishes_when_subspaces_coincide() {
+        // Construct K with left singular vectors aligned with those of KQᵀ:
+        // choose Q = K, then KQᵀ = KKᵀ shares K's left subspace exactly.
+        let mut rng = Pcg64::new(2, 1);
+        let k = Mat::rand_low_rank(40, 8, 0.6, 5.0, &mut rng);
+        let q = k.clone();
+        for r in [1, 2, 4] {
+            let g = theorem3_gap(&k, &q, r);
+            let total = g.top_energy + g.opt;
+            assert!(
+                g.gap_lhs().abs() < 1e-4 * total,
+                "r={r}: K-SVD should be optimal when Q=K, gap={}",
+                g.gap_lhs()
+            );
+        }
+    }
+
+    #[test]
+    fn gap_positive_when_query_rotates_energy() {
+        // Make Q concentrate mass on K's *weak* directions: K-SVD then keeps
+        // the wrong subspace and the gap is strictly positive.
+        let d = 6;
+        let t = 40;
+        let mut rng = Pcg64::new(3, 1);
+        // K: strong first directions.
+        let k = Mat::rand_low_rank(t, d, 0.4, 5.0, &mut rng);
+        // Q: amplify K's weak directions by building Q from K's trailing
+        // right singular vectors scaled hugely.
+        let svd_k = crate::linalg::Svd::compute(&k);
+        let v_weak = svd_k.v_top(d).slice_cols(d - 2, d); // d×2 weakest dirs
+        let coeff = Mat::randn(t, 2, 30.0, &mut rng);
+        let q = coeff.matmul_nt(&v_weak.transpose().transpose()).matmul_nt(&Mat::eye(d)); // t×d
+        let q = q.add(&Mat::randn(t, d, 0.01, &mut rng));
+        let g = theorem3_gap(&k, &q, 2);
+        let total = g.top_energy + g.opt;
+        assert!(
+            g.gap_lhs() > 1e-3 * total,
+            "expected strictly positive gap, got {}",
+            g.gap_lhs()
+        );
+    }
+
+    #[test]
+    fn prop_identity_and_nonnegativity() {
+        forall("Theorem 3 identity", 20, |g| {
+            let t = g.usize_in(8, 40);
+            let d = g.usize_in(2, 8);
+            let r = g.usize_in(1, d);
+            let k = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let q = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let gap = theorem3_gap(&k, &q, r);
+            assert!(gap.identity_residual() < 5e-4, "resid={}", gap.identity_residual());
+            let total = gap.top_energy + gap.opt;
+            assert!(gap.gap_lhs() >= -5e-4 * total.max(1e-12));
+        });
+    }
+}

@@ -1,0 +1,130 @@
+//! Grouped-Query Attention support (paper §5.3, Theorem 5).
+//!
+//! In GQA, `m` query heads share one KV head. Theorem 5 shows the optimal
+//! shared key projection is obtained by *stacking* the group's query caches
+//! `Q = [Q₁ᵀ … Q_mᵀ]ᵀ ∈ R^{mT×d}` and running plain KQ-SVD on `(K, Q)` —
+//! all per-head `B_i` can be taken equal, and the block-Frobenius objective
+//! splits into the sum of per-head objectives.
+
+use super::methods::{eigen_key, kqsvd_key, score_error};
+use super::projection::KeyProjection;
+use crate::linalg::Mat;
+
+/// Optimal shared key projection for a GQA group: KQ-SVD on the shared key
+/// cache and the vertically stacked query caches (Theorem 5). Cost
+/// `O(mTd²)`, i.e. `O(Td²)` amortized per query head (paper §5.3).
+pub fn kqsvd_key_gqa(k: &Mat, queries: &[&Mat], r: usize) -> KeyProjection {
+    assert!(!queries.is_empty(), "GQA group needs ≥ 1 query head");
+    let stacked = Mat::vcat_all(queries);
+    kqsvd_key(k, &stacked, r)
+}
+
+/// Eigen baseline in the GQA setting: SVD of `[K; Q₁; …; Q_m]`.
+pub fn eigen_key_gqa(k: &Mat, queries: &[&Mat], r: usize) -> KeyProjection {
+    assert!(!queries.is_empty());
+    let stacked = Mat::vcat_all(queries);
+    eigen_key(k, &stacked, r)
+}
+
+/// Total group score error `Σ_i ‖(Q_i B)(K A)ᵀ − Q_i Kᵀ‖²_F` for a shared
+/// projection — the objective of Theorem 5.
+pub fn group_score_error(k: &Mat, queries: &[&Mat], proj: &KeyProjection) -> f64 {
+    queries.iter().map(|q| score_error(k, q, proj)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::methods::{ksvd_key, opt_score_error};
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    fn make_group(t: usize, d: usize, m: usize, seed: u64) -> (Mat, Vec<Mat>) {
+        let mut rng = Pcg64::new(seed, 1);
+        let k = Mat::rand_low_rank(t, d, 0.7, (t as f32).sqrt(), &mut rng);
+        let queries = (0..m)
+            .map(|_| Mat::rand_low_rank(t, d, 0.8, 0.8 * (t as f32).sqrt(), &mut rng))
+            .collect();
+        (k, queries)
+    }
+
+    #[test]
+    fn stacked_solution_achieves_stacked_optimum() {
+        // Theorem 5 ⇒ group error of the stacked solution equals the
+        // Eckart–Young tail of K·Q_stackedᵀ.
+        let (k, queries) = make_group(30, 8, 4, 1);
+        let qrefs: Vec<&Mat> = queries.iter().collect();
+        for r in [2, 4, 6] {
+            let proj = kqsvd_key_gqa(&k, &qrefs, r);
+            let err = group_score_error(&k, &qrefs, &proj);
+            let stacked = Mat::vcat_all(&qrefs);
+            let opt = opt_score_error(&k, &stacked, r);
+            let total: f64 = qrefs
+                .iter()
+                .map(|q| q.matmul_nt(&k).frob_norm_sq())
+                .sum();
+            assert!(
+                (err - opt).abs() < 1e-4 * total,
+                "r={r}: err={err} opt={opt}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_frobenius_splits() {
+        // ‖[Q₁;Q₂]Kᵀ‖² = ‖Q₁Kᵀ‖² + ‖Q₂Kᵀ‖² — the block identity used in the
+        // proof of Theorem 5.
+        let (k, queries) = make_group(20, 6, 2, 2);
+        let stacked = queries[0].vcat(&queries[1]);
+        let whole = stacked.matmul_nt(&k).frob_norm_sq();
+        let parts: f64 = queries.iter().map(|q| q.matmul_nt(&k).frob_norm_sq()).sum();
+        assert!((whole - parts).abs() < 1e-3 * whole);
+    }
+
+    #[test]
+    fn shared_beats_baselines_on_group() {
+        let (k, queries) = make_group(40, 10, 4, 3);
+        let qrefs: Vec<&Mat> = queries.iter().collect();
+        let r = 4;
+        let e_kq = group_score_error(&k, &qrefs, &kqsvd_key_gqa(&k, &qrefs, r));
+        let e_ks = group_score_error(&k, &qrefs, &ksvd_key(&k, r));
+        let e_ei = group_score_error(&k, &qrefs, &eigen_key_gqa(&k, &qrefs, r));
+        let total: f64 = qrefs.iter().map(|q| q.matmul_nt(&k).frob_norm_sq()).sum();
+        let tol = 1e-5 * total;
+        assert!(e_kq <= e_ks + tol, "kq={e_kq} ks={e_ks}");
+        assert!(e_kq <= e_ei + tol, "kq={e_kq} ei={e_ei}");
+    }
+
+    #[test]
+    fn group_of_one_reduces_to_plain_kqsvd() {
+        let (k, queries) = make_group(25, 6, 1, 4);
+        let qrefs: Vec<&Mat> = queries.iter().collect();
+        let r = 3;
+        let shared = kqsvd_key_gqa(&k, &qrefs, r);
+        let plain = kqsvd_key(&k, &queries[0], r);
+        let e_shared = score_error(&k, &queries[0], &shared);
+        let e_plain = score_error(&k, &queries[0], &plain);
+        assert!((e_shared - e_plain).abs() < 1e-6 * e_plain.max(1e-9));
+    }
+
+    #[test]
+    fn prop_stacked_optimality() {
+        forall("GQA stacked optimality", 10, |g| {
+            let t = g.usize_in(6, 24);
+            let d = g.usize_in(2, 6);
+            let m = g.usize_in(2, 4);
+            let r = g.usize_in(1, d);
+            let k = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let queries: Vec<Mat> = (0..m)
+                .map(|_| Mat::from_vec(t, d, g.normal_vec(t * d, 1.0)))
+                .collect();
+            let qrefs: Vec<&Mat> = queries.iter().collect();
+            let proj = kqsvd_key_gqa(&k, &qrefs, r);
+            let err = group_score_error(&k, &qrefs, &proj);
+            let stacked = Mat::vcat_all(&qrefs);
+            let opt = opt_score_error(&k, &stacked, r);
+            let total: f64 = qrefs.iter().map(|q| q.matmul_nt(&k).frob_norm_sq()).sum();
+            assert!((err - opt).abs() < 5e-4 * total.max(1e-9), "err={err} opt={opt}");
+        });
+    }
+}

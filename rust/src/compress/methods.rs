@@ -1,0 +1,428 @@
+//! The three compression methods: K-SVD (§3.3), Eigen (§3.4) and KQ-SVD
+//! (§4, Theorem 2), on both the key–query and the value–output side
+//! (Appendix B).
+//!
+//! All functions take *aggregated calibration caches* — `K, Q ∈ R^{T×d}`
+//! built by concatenating per-sequence caches (paper §3.3: "These are
+//! concatenated to form large cache matrices") — and a target rank `R`, and
+//! return the runtime projection pairs defined in [`super::projection`].
+
+use super::projection::{KeyProjection, ValueProjection};
+use crate::linalg::{Mat, Svd};
+
+/// Relative singular-value cutoff used when inverting Σ_K in the KQ-SVD
+/// closed form (`A = V_K Σ_K⁻¹ U'`). f32 inputs have a noise floor around
+/// `1e-7·σ₁`; directions below the cutoff carry no signal and are dropped.
+pub const PINV_RCOND: f64 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// Key–query side
+// ---------------------------------------------------------------------------
+
+/// K-SVD (paper §3.3): truncated SVD of the key cache alone.
+/// `A = B = V̂_K` (top-R right singular vectors of K).
+pub fn ksvd_key(k: &Mat, r: usize) -> KeyProjection {
+    let svd = Svd::compute(k);
+    let v = svd.v_top(r);
+    KeyProjection { a: v.clone(), b: v }
+}
+
+/// Eigen (paper §3.4, EigenAttention/Zack style): truncated SVD of the
+/// vertical concatenation `[K; Q]`. `A = B = V̂_{[K;Q]}`.
+pub fn eigen_key(k: &Mat, q: &Mat, r: usize) -> KeyProjection {
+    assert_eq!(k.cols(), q.cols(), "K and Q must share head dim");
+    let stacked = k.vcat(q);
+    let svd = Svd::compute(&stacked);
+    let v = svd.v_top(r);
+    KeyProjection { a: v.clone(), b: v }
+}
+
+/// KQ-SVD (paper §4.3, Theorem 2): the optimal rank-R factorization of the
+/// score matrix `KQᵀ`, computed in `O(Td²)` without materializing the `T×T`
+/// product.
+///
+/// Derivation of the efficient form (paper §4.3): with thin SVDs
+/// `K = U_K Σ_K V_Kᵀ` and `Q = U_Q Σ_Q V_Qᵀ`, the `d×d` core
+/// `M = Σ_K V_Kᵀ V_Q Σ_Q = U' Σ' V'ᵀ` gives `KQᵀ = (U_K U') Σ' (U_Q V')ᵀ`,
+/// so the top-R left singular vectors of `KQᵀ` are `Û = U_K Û'` and
+///
+/// * `A = K⁺Û  = V_K Σ_K⁻¹ U_Kᵀ · U_K Û' = V_K Σ_K⁻¹ Û'`
+/// * `B = KᵀÛ  = V_K Σ_K U_Kᵀ · U_K Û'  = V_K Σ_K Û'`
+///
+/// — both `d×R`, touching only `d×d` objects after the two thin SVDs.
+pub fn kqsvd_key(k: &Mat, q: &Mat, r: usize) -> KeyProjection {
+    assert_eq!(k.cols(), q.cols(), "K and Q must share head dim");
+    let d = k.cols();
+    let svd_k = Svd::compute(k);
+    let svd_q = Svd::compute(q);
+    let kk = svd_k.k();
+
+    // M = Σ_K V_Kᵀ V_Q Σ_Q  (kk × kq)
+    let mut vk_t = svd_k.vt.clone(); // kk×d, rows are V_Kᵀ
+    for i in 0..kk {
+        let s = svd_k.s[i] as f32;
+        for j in 0..d {
+            vk_t[(i, j)] *= s;
+        }
+    }
+    let mut vq = svd_q.v_top(svd_q.k()); // d×kq
+    for j in 0..svd_q.k() {
+        let s = svd_q.s[j] as f32;
+        for i in 0..d {
+            vq[(i, j)] *= s;
+        }
+    }
+    let m = vk_t.matmul(&vq); // kk×kq
+    let svd_m = Svd::compute(&m);
+    let r = r.min(svd_m.k());
+    let u_prime = svd_m.u_top(r); // kk×r
+
+    // A = V_K Σ_K⁻¹ Û', B = V_K Σ_K Û'.
+    let s0 = svd_k.s.first().copied().unwrap_or(0.0);
+    let cutoff = s0 * PINV_RCOND;
+    let vk = svd_k.v_top(kk); // d×kk
+    let mut left_inv = u_prime.clone(); // kk×r, rows scaled by 1/σ or 0
+    let mut left_fwd = u_prime; // kk×r, rows scaled by σ
+    for i in 0..kk {
+        let s = svd_k.s[i];
+        let (inv, fwd) = if s > cutoff {
+            ((1.0 / s) as f32, s as f32)
+        } else {
+            (0.0, s as f32)
+        };
+        for j in 0..r {
+            left_inv[(i, j)] *= inv;
+            left_fwd[(i, j)] *= fwd;
+        }
+    }
+    KeyProjection {
+        a: vk.matmul(&left_inv),
+        b: vk.matmul(&left_fwd),
+    }
+}
+
+/// Singular values of `KQᵀ` computed via the same `O(Td²)` route (needed for
+/// rank selection and the Theorem-3 gap). Returns them descending.
+pub fn score_singular_values(k: &Mat, q: &Mat) -> Vec<f64> {
+    let d = k.cols();
+    let svd_k = Svd::compute(k);
+    let svd_q = Svd::compute(q);
+    let mut vk_t = svd_k.vt.clone();
+    for i in 0..svd_k.k() {
+        let s = svd_k.s[i] as f32;
+        for j in 0..d {
+            vk_t[(i, j)] *= s;
+        }
+    }
+    let mut vq = svd_q.v_top(svd_q.k());
+    for j in 0..svd_q.k() {
+        let s = svd_q.s[j] as f32;
+        for i in 0..d {
+            vq[(i, j)] *= s;
+        }
+    }
+    Svd::compute(&vk_t.matmul(&vq)).s
+}
+
+// ---------------------------------------------------------------------------
+// Value–output side (Appendix B)
+// ---------------------------------------------------------------------------
+
+/// V-SVD: truncated SVD of the value cache alone — the value-side analogue of
+/// K-SVD used by both baselines. `A_v = V̂_V`, fold `F = V̂_Vᵀ W^O`.
+pub fn vsvd_value(v: &Mat, w_o: &Mat, r: usize) -> ValueProjection {
+    assert_eq!(v.cols(), w_o.rows(), "V and W^O must share head dim");
+    let svd = Svd::compute(v);
+    let basis = svd.v_top(r); // d×R
+    let fold = basis.matmul_tn(w_o); // V̂ᵀ W^O  (R×D)
+    ValueProjection {
+        a: basis.clone(),
+        b: basis,
+        fold,
+    }
+}
+
+/// KQ-SVD on the value–output side (Appendix B): optimal rank-R factorization
+/// of `V W^O` via the same Theorem-2 machinery with `Qᵀ → W^O`:
+///
+/// * `Û` = top-R left singular vectors of `V W^O`
+/// * `A_v = V⁺Û = V_V Σ_V⁻¹ Û'` (with `Û = U_V Û'` from the small core SVD)
+/// * fold `F = Bᵀ W^O = Ûᵀ V W^O` — computed as `Û'ᵀ Σ_V V_Vᵀ W^O`.
+pub fn kqsvd_value(v: &Mat, w_o: &Mat, r: usize) -> ValueProjection {
+    assert_eq!(v.cols(), w_o.rows(), "V and W^O must share head dim");
+    let d = v.cols();
+    let svd_v = Svd::compute(v);
+    let kv = svd_v.k();
+
+    // Core M = Σ_V V_Vᵀ W^O  (kv × D) — small (d×D at most).
+    let mut core = svd_v.vt.clone(); // kv×d
+    for i in 0..kv {
+        let s = svd_v.s[i] as f32;
+        for j in 0..d {
+            core[(i, j)] *= s;
+        }
+    }
+    let m = core.matmul(w_o); // kv×D  == Σ_V V_Vᵀ W^O
+    let svd_m = Svd::compute(&m);
+    let r = r.min(svd_m.k());
+    let u_prime = svd_m.u_top(r); // kv×r
+
+    let s0 = svd_v.s.first().copied().unwrap_or(0.0);
+    let cutoff = s0 * PINV_RCOND;
+    let vv = svd_v.v_top(kv); // d×kv
+    let mut left_inv = u_prime.clone();
+    for i in 0..kv {
+        let s = svd_v.s[i];
+        let inv = if s > cutoff { (1.0 / s) as f32 } else { 0.0 };
+        for j in 0..r {
+            left_inv[(i, j)] *= inv;
+        }
+    }
+    let a = vv.matmul(&left_inv); // d×r
+    // B_v = V_V Σ_V Û' (the key-side construction with V in place of K).
+    let mut left_fwd = u_prime.clone();
+    for i in 0..kv {
+        let s = svd_v.s[i] as f32;
+        for j in 0..r {
+            left_fwd[(i, j)] *= s;
+        }
+    }
+    let b = vv.matmul(&left_fwd);
+    // F = Û'ᵀ (Σ_V V_Vᵀ W^O) = Û'ᵀ m  (r×D)
+    let fold = u_prime.matmul_tn(&m);
+    ValueProjection { a, b, fold }
+}
+
+// ---------------------------------------------------------------------------
+// Error functionals (used by tests, the Theorem-3 gap and the eval harness)
+// ---------------------------------------------------------------------------
+
+/// Squared Frobenius error of a key projection on the score matrix:
+/// `‖(Q B)(K A)ᵀ − Q Kᵀ‖²_F` (the objective of Eq. 2, with Q/K swapped to
+/// row-major convention; identical by transpose invariance).
+pub fn score_error(k: &Mat, q: &Mat, proj: &KeyProjection) -> f64 {
+    let exact = q.matmul_nt(k);
+    exact.sub(&proj.approx_scores(k, q)).frob_norm_sq()
+}
+
+/// Squared Frobenius error on the value–output product `‖(V A)F − V W^O‖²_F`.
+pub fn vo_error(v: &Mat, w_o: &Mat, proj: &ValueProjection) -> f64 {
+    let exact = v.matmul(w_o);
+    exact.sub(&proj.approx_vo(v)).frob_norm_sq()
+}
+
+/// The optimal (Eckart–Young) rank-R score error `Σ_{i>R} σ_i(KQᵀ)²` — the
+/// paper's `opt` (Theorem 3), via the O(Td²) spectrum.
+pub fn opt_score_error(k: &Mat, q: &Mat, r: usize) -> f64 {
+    let s = score_singular_values(k, q);
+    s.iter().skip(r).map(|x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    /// Random caches with decaying spectra + different K/Q geometry,
+    /// imitating real attention caches.
+    fn make_kq(t: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed, 1);
+        let k = Mat::rand_low_rank(t, d, 0.75, (t as f32).sqrt(), &mut rng);
+        let q = Mat::rand_low_rank(t, d, 0.85, 0.7 * (t as f32).sqrt(), &mut rng);
+        (k, q)
+    }
+
+    #[test]
+    fn kqsvd_achieves_eckart_young_bound() {
+        // Theorem 2: KQ-SVD's score error equals the optimal tail energy.
+        let (k, q) = make_kq(64, 12, 1);
+        for r in [1, 3, 6, 9] {
+            let proj = kqsvd_key(&k, &q, r);
+            let err = score_error(&k, &q, &proj);
+            // Direct dense check of opt: full SVD of the T×T score matrix.
+            let dense = Svd::compute(&k.matmul_nt(&q));
+            let opt: f64 = dense.s.iter().skip(r).map(|x| x * x).sum();
+            let total = dense.total_energy();
+            assert!(
+                (err - opt).abs() <= 1e-4 * total,
+                "r={r}: err={err} opt={opt}"
+            );
+            // And the efficient spectrum agrees with the dense one.
+            let fast = opt_score_error(&k, &q, r);
+            assert!((fast - opt).abs() <= 1e-4 * total, "fast={fast} opt={opt}");
+        }
+    }
+
+    #[test]
+    fn kqsvd_beats_or_ties_baselines() {
+        // Theorem 2 ⇒ KQ-SVD ≤ K-SVD and ≤ Eigen on score error, for any R.
+        for seed in 1..6 {
+            let (k, q) = make_kq(80, 16, seed);
+            for r in [2, 4, 8, 12] {
+                let e_kq = score_error(&k, &q, &kqsvd_key(&k, &q, r));
+                let e_ks = score_error(&k, &q, &ksvd_key(&k, r));
+                let e_ei = score_error(&k, &q, &eigen_key(&k, &q, r));
+                let tol = 1e-5 * k.matmul_nt(&q).frob_norm_sq();
+                assert!(e_kq <= e_ks + tol, "seed={seed} r={r}: kq={e_kq} ks={e_ks}");
+                assert!(e_kq <= e_ei + tol, "seed={seed} r={r}: kq={e_kq} ei={e_ei}");
+            }
+        }
+    }
+
+    #[test]
+    fn ksvd_is_optimal_on_keys_themselves() {
+        // K-SVD minimizes ‖K−K̃‖; verify it beats KQ-SVD *on the key error*
+        // (the effect visible in Figure 1's K panel).
+        let (k, q) = make_kq(60, 10, 7);
+        let r = 4;
+        let p_ks = ksvd_key(&k, r);
+        let p_kq = kqsvd_key(&k, &q, r);
+        let ek_ks = k.sub(&p_ks.approx_keys(&k)).frob_norm_sq();
+        let ek_kq = k.sub(&p_kq.approx_keys(&k)).frob_norm_sq();
+        assert!(ek_ks <= ek_kq + 1e-6 * k.frob_norm_sq());
+        // And equals the SVD tail energy of K.
+        let tail = Svd::compute(&k).tail_energy(r);
+        assert!((ek_ks - tail).abs() < 1e-4 * k.frob_norm_sq());
+    }
+
+    #[test]
+    fn full_rank_projections_are_exact() {
+        let (k, q) = make_kq(40, 8, 3);
+        let d = 8;
+        for proj in [ksvd_key(&k, d), eigen_key(&k, &q, d), kqsvd_key(&k, &q, d)] {
+            let err = score_error(&k, &q, &proj);
+            assert!(
+                err < 1e-5 * k.matmul_nt(&q).frob_norm_sq(),
+                "full-rank should be exact, err={err}"
+            );
+        }
+    }
+
+    #[test]
+    fn kqsvd_invariant_under_balanced_rescaling() {
+        // K→βK, Q→Q/β leaves KQᵀ unchanged; KQ-SVD's achieved score error
+        // must be identical (paper §5.2: "does not affect KQ-SVD").
+        let (k, q) = make_kq(50, 10, 11);
+        let r = 4;
+        let base = score_error(&k, &q, &kqsvd_key(&k, &q, r));
+        for beta in [0.1f32, 3.0, 10.0] {
+            let kb = k.scaled(beta);
+            let qb = q.scaled(1.0 / beta);
+            let err = score_error(&kb, &qb, &kqsvd_key(&kb, &qb, r));
+            // The score matrix itself is unchanged, so compare directly.
+            assert!(
+                (err - base).abs() < 2e-3 * base.max(1e-9),
+                "beta={beta}: {err} vs {base}"
+            );
+        }
+    }
+
+    #[test]
+    fn eigen_drifts_toward_ksvd_under_unbalance() {
+        // Theorem 4: as α = ‖Q‖/‖K‖ → 0, Eigen's error → K-SVD's error.
+        let (k, q) = make_kq(60, 12, 13);
+        let r = 5;
+        let e_ks = score_error(&k, &q, &ksvd_key(&k, r));
+        let mut prev_gap = f64::INFINITY;
+        for beta in [1.0f32, 4.0, 16.0, 64.0] {
+            let kb = k.scaled(beta);
+            let qb = q.scaled(1.0 / beta);
+            let proj = eigen_key(&kb, &qb, r);
+            // Evaluate on the *unscaled* problem (the score matrix is scale
+            // invariant; the projection basis is what changes).
+            let e_ei = score_error(&k, &q, &proj);
+            let gap = (e_ei - e_ks).abs();
+            assert!(gap <= prev_gap + 1e-3 * e_ks, "beta={beta}: gap grew {prev_gap}→{gap}");
+            prev_gap = gap;
+        }
+        assert!(
+            prev_gap < 0.05 * e_ks.max(1e-12),
+            "at beta=64 Eigen should ≈ K-SVD (gap {prev_gap}, e_ks {e_ks})"
+        );
+    }
+
+    #[test]
+    fn value_side_kqsvd_is_optimal() {
+        let mut rng = Pcg64::new(21, 1);
+        let (t, d, dd) = (48, 10, 20);
+        let v = Mat::rand_low_rank(t, d, 0.7, 8.0, &mut rng);
+        let w_o = Mat::rand_low_rank(d, dd, 0.8, 3.0, &mut rng);
+        for r in [2, 4, 8] {
+            let p_kq = kqsvd_value(&v, &w_o, r);
+            let p_vs = vsvd_value(&v, &w_o, r);
+            let e_kq = vo_error(&v, &w_o, &p_kq);
+            let e_vs = vo_error(&v, &w_o, &p_vs);
+            let dense = Svd::compute(&v.matmul(&w_o));
+            let opt = dense.tail_energy(r);
+            let total = dense.total_energy();
+            assert!((e_kq - opt).abs() < 1e-4 * total, "r={r}: e={e_kq} opt={opt}");
+            assert!(e_kq <= e_vs + 1e-5 * total);
+        }
+    }
+
+    #[test]
+    fn value_fold_shapes() {
+        let mut rng = Pcg64::new(22, 1);
+        let (t, d, dd) = (30, 8, 24);
+        let v = Mat::randn(t, d, 1.0, &mut rng);
+        let w_o = Mat::randn(d, dd, 0.5, &mut rng);
+        let p = kqsvd_value(&v, &w_o, 3);
+        assert_eq!(p.a.shape(), (d, 3));
+        assert_eq!(p.fold.shape(), (3, dd));
+        let p2 = vsvd_value(&v, &w_o, 5);
+        assert_eq!(p2.a.shape(), (d, 5));
+        assert_eq!(p2.fold.shape(), (5, dd));
+    }
+
+    #[test]
+    fn rank_saturates_gracefully() {
+        // Asking for r > d must clamp, not panic.
+        let (k, q) = make_kq(20, 6, 31);
+        let p = kqsvd_key(&k, &q, 100);
+        assert!(p.rank() <= 6);
+        let e = score_error(&k, &q, &p);
+        assert!(e < 1e-5 * k.matmul_nt(&q).frob_norm_sq());
+    }
+
+    #[test]
+    fn prop_kqsvd_optimality_random() {
+        forall("KQ-SVD ≤ baselines on score error", 15, |g| {
+            let t = g.usize_in(10, 50);
+            let d = g.usize_in(2, 10);
+            let r = g.usize_in(1, d);
+            let k = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let q = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let total = k.matmul_nt(&q).frob_norm_sq();
+            let e_kq = score_error(&k, &q, &kqsvd_key(&k, &q, r));
+            let e_ks = score_error(&k, &q, &ksvd_key(&k, r));
+            let e_ei = score_error(&k, &q, &eigen_key(&k, &q, r));
+            let opt = opt_score_error(&k, &q, r);
+            let tol = 1e-4 * total.max(1e-9);
+            assert!(e_kq <= e_ks + tol);
+            assert!(e_kq <= e_ei + tol);
+            assert!((e_kq - opt).abs() <= tol, "e_kq={e_kq} opt={opt}");
+        });
+    }
+
+    #[test]
+    fn prop_score_spectrum_matches_dense() {
+        forall("O(Td²) spectrum == dense spectrum", 10, |g| {
+            let t = g.usize_in(5, 30);
+            let d = g.usize_in(2, 8);
+            let k = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let q = Mat::from_vec(t, d, g.normal_vec(t * d, 1.0));
+            let fast = score_singular_values(&k, &q);
+            let dense = Svd::compute(&k.matmul_nt(&q)).s;
+            let s0 = dense.first().copied().unwrap_or(0.0).max(1e-9);
+            for i in 0..d.min(t) {
+                assert!(
+                    (fast[i] - dense[i]).abs() < 1e-4 * s0,
+                    "σ_{i}: fast={} dense={}",
+                    fast[i],
+                    dense[i]
+                );
+            }
+        });
+    }
+}

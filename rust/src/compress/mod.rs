@@ -1,0 +1,93 @@
+//! The paper's contribution: low-rank KV-cache compression methods.
+//!
+//! * [`methods`] — K-SVD (§3.3), Eigen (§3.4), KQ-SVD (Theorem 2) on the
+//!   key–query side, and V-SVD / KQ-SVD on the value–output side (App. B);
+//! * [`projection`] — the unified runtime artifact all methods produce;
+//! * [`rank`] — ε-spectral-energy rank selection (§3.3/§6.1);
+//! * [`gap`] — the exact Theorem-3 optimality gap;
+//! * [`gqa`] — Grouped-Query Attention stacking (Theorem 5).
+//!
+//! Unbalanced-rescaling experiments (Theorem 4 / Figure 2) need no dedicated
+//! code: scale `K` by β and `Q` by 1/β before calling any method (see
+//! `benches/fig2_unbalance.rs`).
+
+pub mod gap;
+pub mod gqa;
+pub mod methods;
+pub mod projection;
+pub mod rank;
+
+pub use gap::{theorem3_gap, Theorem3Gap};
+pub use gqa::{eigen_key_gqa, group_score_error, kqsvd_key_gqa};
+pub use methods::{
+    eigen_key, kqsvd_key, kqsvd_value, ksvd_key, opt_score_error, score_error,
+    score_singular_values, vo_error, vsvd_value,
+};
+pub use projection::{HeadProjection, KeyProjection, ValueProjection};
+pub use rank::{captured_energy, select_rank, select_rank_avg};
+
+use crate::config::Method;
+use crate::linalg::Mat;
+
+/// Compute the key-side projection for `method` (unified dispatch used by
+/// the calibration pipeline). `queries` is the stacked query cache for the
+/// KV head's group (a single entry for MHA).
+pub fn key_projection(method: Method, k: &Mat, queries: &[&Mat], r: usize) -> KeyProjection {
+    match method {
+        Method::None => KeyProjection {
+            a: Mat::eye(k.cols()),
+            b: Mat::eye(k.cols()),
+        },
+        Method::KSvd => methods::ksvd_key(k, r),
+        Method::Eigen => gqa::eigen_key_gqa(k, queries, r),
+        Method::KqSvd => gqa::kqsvd_key_gqa(k, queries, r),
+    }
+}
+
+/// Compute the value-side projection for `method`.
+pub fn value_projection(method: Method, v: &Mat, w_o: &Mat, r: usize) -> ValueProjection {
+    match method {
+        Method::None => ValueProjection {
+            a: Mat::eye(v.cols()),
+            b: Mat::eye(v.cols()),
+            fold: w_o.clone(),
+        },
+        // Both baselines compress values by plain SVD of V (paper §3.3; Eigen
+        // handles values the same way — only the key side differs).
+        Method::KSvd | Method::Eigen => methods::vsvd_value(v, w_o, r),
+        Method::KqSvd => methods::kqsvd_value(v, w_o, r),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dispatch_matches_direct_calls() {
+        let mut rng = Pcg64::new(9, 1);
+        let k = Mat::randn(30, 8, 1.0, &mut rng);
+        let q = Mat::randn(30, 8, 1.0, &mut rng);
+        let r = 4;
+        let via_dispatch = key_projection(Method::KqSvd, &k, &[&q], r);
+        let direct = methods::kqsvd_key(&k, &q, r);
+        assert!(via_dispatch.a.max_abs_diff(&direct.a) < 1e-6);
+        assert!(via_dispatch.b.max_abs_diff(&direct.b) < 1e-6);
+
+        let none = key_projection(Method::None, &k, &[&q], r);
+        assert_eq!(none.a, Mat::eye(8));
+    }
+
+    #[test]
+    fn value_dispatch() {
+        let mut rng = Pcg64::new(10, 1);
+        let v = Mat::randn(30, 8, 1.0, &mut rng);
+        let wo = Mat::randn(8, 16, 1.0, &mut rng);
+        let p = value_projection(Method::Eigen, &v, &wo, 3);
+        let direct = methods::vsvd_value(&v, &wo, 3);
+        assert!(p.a.max_abs_diff(&direct.a) < 1e-6);
+        let none = value_projection(Method::None, &v, &wo, 3);
+        assert!(none.approx_vo(&v).max_abs_diff(&v.matmul(&wo)) < 1e-4);
+    }
+}

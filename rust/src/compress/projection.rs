@@ -1,0 +1,170 @@
+//! Projection types shared by every compression method.
+//!
+//! All three methods the paper studies (K-SVD §3.3, Eigen §3.4, KQ-SVD §4)
+//! produce the *same runtime artifact*, only computed differently:
+//!
+//! * key side — a pair `(A, B)` of `d×R` matrices. The cache stores
+//!   `C_K = K·A ∈ R^{T×R}`; at decode time the query is hit with `B`
+//!   (`q̃ = q·B`) and scores are `q̃ C_Kᵀ ≈ q Kᵀ`. For projection methods
+//!   (K-SVD/Eigen) `A = B = V̂` with `V̂ᵀV̂ = I`; for KQ-SVD they differ
+//!   (`A = K⁺Û`, `B = KᵀÛ`, Theorem 2).
+//! * value side — a pair `(A_v, F)` with `A_v ∈ R^{d×R_v}` and the *fold*
+//!   matrix `F ∈ R^{R_v×D}` absorbed into the output projection: the cache
+//!   stores `C_V = V·A_v` and the head output contribution is
+//!   `p C_V F ≈ p V W^O` where `p` is the softmax row (Appendix B).
+//!
+//! Everything downstream — the KV-cache manager, the serving engine, the AOT
+//! kernels — consumes these two pairs and is method-agnostic.
+
+use crate::linalg::Mat;
+
+/// Key-side projection pair for one attention head.
+#[derive(Debug, Clone)]
+pub struct KeyProjection {
+    /// `A ∈ R^{d×R}` — applied to keys on cache write: stored row `k·A`.
+    pub a: Mat,
+    /// `B ∈ R^{d×R}` — applied to queries at decode time: `q̃ = q·B`.
+    pub b: Mat,
+}
+
+impl KeyProjection {
+    pub fn rank(&self) -> usize {
+        self.a.cols()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Approximate score matrix `(Q B)(K A)ᵀ ≈ Q Kᵀ`.
+    pub fn approx_scores(&self, k: &Mat, q: &Mat) -> Mat {
+        let ck = k.matmul(&self.a); // T×R
+        let qb = q.matmul(&self.b); // T'×R
+        qb.matmul_nt(&ck)
+    }
+
+    /// The effectively-projected key matrix `K̃ᵀ = A Bᵀ Kᵀ`, i.e.
+    /// `K̃ = K A Bᵀ` — what the paper calls the approximate keys.
+    pub fn approx_keys(&self, k: &Mat) -> Mat {
+        k.matmul(&self.a).matmul_nt(&self.b)
+    }
+
+    /// The effectively-projected query matrix `Q̃ = Q B Aᵀ` (for projection
+    /// methods where A=B=V̂ this is the idempotent projection of Q).
+    pub fn approx_queries(&self, q: &Mat) -> Mat {
+        q.matmul(&self.b).matmul_nt(&self.a)
+    }
+}
+
+/// Value-side projection pair for one attention head.
+#[derive(Debug, Clone)]
+pub struct ValueProjection {
+    /// `A_v ∈ R^{d×R_v}` — applied to values on cache write.
+    pub a: Mat,
+    /// `B_v ∈ R^{d×R_v}` — the second factor of the rank-R_v map
+    /// `S = A_v B_vᵀ` (for projection methods `B_v = A_v = V̂`). Only used by
+    /// the evaluation harness to report the effective `Ṽ = V A_v B_vᵀ`.
+    pub b: Mat,
+    /// Fold matrix `F ∈ R^{R_v×D}` — pre-multiplied into the output
+    /// projection slice `W_i^O`, so no extra work happens at decode time.
+    pub fold: Mat,
+}
+
+impl ValueProjection {
+    pub fn rank(&self) -> usize {
+        self.a.cols()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Approximate `Ṽ W^O = (V A_v) F ≈ V W^O`.
+    pub fn approx_vo(&self, v: &Mat) -> Mat {
+        v.matmul(&self.a).matmul(&self.fold)
+    }
+
+    /// Effective approximate values `Ṽ = V A_v B_vᵀ` (the Figure-1 V-error
+    /// metric; mirrors `K̃ = K A Bᵀ` on the key side).
+    pub fn approx_values(&self, v: &Mat) -> Mat {
+        v.matmul(&self.a).matmul_nt(&self.b)
+    }
+}
+
+/// Projections for a single (layer, head): key side + value side.
+#[derive(Debug, Clone)]
+pub struct HeadProjection {
+    pub key: KeyProjection,
+    pub value: ValueProjection,
+}
+
+impl HeadProjection {
+    /// Compressed bytes per cached token (f32): R + R_v floats.
+    pub fn bytes_per_token(&self) -> usize {
+        4 * (self.key.rank() + self.value.rank())
+    }
+
+    /// Uncompressed bytes per cached token for head dim d: 2·d floats.
+    pub fn uncompressed_bytes_per_token(&self) -> usize {
+        4 * (self.key.d() + self.value.d())
+    }
+
+    /// Cache compression ratio (compressed / uncompressed), < 1 is a win.
+    pub fn compression_ratio(&self) -> f64 {
+        self.bytes_per_token() as f64 / self.uncompressed_bytes_per_token() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity_projection_is_exact() {
+        let mut rng = Pcg64::new(1, 1);
+        let d = 8;
+        let k = Mat::randn(12, d, 1.0, &mut rng);
+        let q = Mat::randn(5, d, 1.0, &mut rng);
+        let proj = KeyProjection {
+            a: Mat::eye(d),
+            b: Mat::eye(d),
+        };
+        let exact = q.matmul_nt(&k);
+        assert!(proj.approx_scores(&k, &q).max_abs_diff(&exact) < 1e-4);
+        assert!(proj.approx_keys(&k).max_abs_diff(&k) < 1e-5);
+    }
+
+    #[test]
+    fn value_identity_fold_is_exact() {
+        let mut rng = Pcg64::new(2, 1);
+        let (d, dd) = (8, 16);
+        let v = Mat::randn(12, d, 1.0, &mut rng);
+        let wo = Mat::randn(d, dd, 1.0, &mut rng);
+        let proj = ValueProjection {
+            a: Mat::eye(d),
+            b: Mat::eye(d),
+            fold: wo.clone(),
+        };
+        let exact = v.matmul(&wo);
+        assert!(proj.approx_vo(&v).max_abs_diff(&exact) < 1e-4);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let hp = HeadProjection {
+            key: KeyProjection {
+                a: Mat::zeros(64, 16),
+                b: Mat::zeros(64, 16),
+            },
+            value: ValueProjection {
+                a: Mat::zeros(64, 24),
+                b: Mat::zeros(64, 24),
+                fold: Mat::zeros(24, 256),
+            },
+        };
+        assert_eq!(hp.bytes_per_token(), 4 * 40);
+        assert_eq!(hp.uncompressed_bytes_per_token(), 4 * 128);
+        assert!((hp.compression_ratio() - 40.0 / 128.0).abs() < 1e-12);
+    }
+}

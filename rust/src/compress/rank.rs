@@ -1,0 +1,130 @@
+//! Rank selection by spectral energy (paper §3.3 "Rank selection" / §6.1).
+//!
+//! For a matrix with singular values `{σ_j}` and tolerance ε, the selected
+//! rank is the smallest R such that `Σ_{j≤R} σ_j² / Σ_j σ_j² ≥ 1 − ε`,
+//! equivalent to a relative squared-Frobenius truncation error ≤ ε.
+//! The paper chooses R per *layer* from head-averaged spectra so all methods
+//! are compared at the same rank; we implement both the per-matrix and the
+//! head-averaged forms.
+
+/// Smallest R with `Σ_{j≤R} σ_j² ≥ (1−ε)·Σ σ_j²`. Returns at least 1 for a
+/// nonzero spectrum, and 0 for an all-zero one.
+pub fn select_rank(singular_values: &[f64], epsilon: f64) -> usize {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let target = (1.0 - epsilon) * total;
+    let mut acc = 0.0;
+    for (i, s) in singular_values.iter().enumerate() {
+        acc += s * s;
+        if acc >= target {
+            return i + 1;
+        }
+    }
+    singular_values.len()
+}
+
+/// Head-averaged rank selection (paper §6.1: "we analyze the singular value
+/// spectra of the key and value matrices, averaged across heads"): averages
+/// the squared spectra entrywise, then applies [`select_rank`].
+pub fn select_rank_avg(spectra: &[Vec<f64>], epsilon: f64) -> usize {
+    assert!(!spectra.is_empty());
+    let len = spectra.iter().map(|s| s.len()).max().unwrap();
+    let mut avg_sq = vec![0.0f64; len];
+    for s in spectra {
+        for (i, &x) in s.iter().enumerate() {
+            avg_sq[i] += x * x;
+        }
+    }
+    for x in &mut avg_sq {
+        *x /= spectra.len() as f64;
+    }
+    let avg: Vec<f64> = avg_sq.iter().map(|x| x.sqrt()).collect();
+    select_rank(&avg, epsilon)
+}
+
+/// Fraction of spectral energy captured by the top-R singular values.
+pub fn captured_energy(singular_values: &[f64], r: usize) -> f64 {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    singular_values.iter().take(r).map(|s| s * s).sum::<f64>() / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn flat_spectrum_needs_proportional_rank() {
+        // d equal singular values: need (1-ε)·d of them.
+        let s = vec![1.0; 100];
+        assert_eq!(select_rank(&s, 0.1), 90);
+        assert_eq!(select_rank(&s, 0.5), 50);
+        assert_eq!(select_rank(&s, 0.0), 100);
+    }
+
+    #[test]
+    fn decaying_spectrum_needs_few() {
+        let s: Vec<f64> = (0..64).map(|i| 0.5f64.powi(i)).collect();
+        // Energy halves by factor 4 each index: σ_i² = 4^-i, total = 4/3.
+        // One value captures 3/4; two capture 15/16 ≥ 0.9.
+        assert_eq!(select_rank(&s, 0.25), 1);
+        assert_eq!(select_rank(&s, 0.1), 2);
+    }
+
+    #[test]
+    fn zero_spectrum() {
+        assert_eq!(select_rank(&[0.0, 0.0], 0.1), 0);
+        assert_eq!(captured_energy(&[0.0], 1), 1.0);
+    }
+
+    #[test]
+    fn averaged_selection_between_extremes() {
+        // One flat head + one spiky head: averaged rank sits in between.
+        let flat = vec![1.0; 16];
+        let spiky: Vec<f64> = (0..16).map(|i| if i == 0 { 4.0 } else { 0.0 }).collect();
+        let r_flat = select_rank(&flat, 0.1);
+        let r_spiky = select_rank(&spiky, 0.1);
+        let r_avg = select_rank_avg(&[flat, spiky], 0.1);
+        assert!(r_spiky <= r_avg && r_avg <= r_flat, "{r_spiky} {r_avg} {r_flat}");
+    }
+
+    #[test]
+    fn selection_is_the_smallest_satisfying_rank() {
+        forall("rank selection minimality", 100, |g| {
+            let n = g.usize_in(1, 32);
+            let mut s: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 2.0)).collect();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let eps = g.f64_in(0.01, 0.5);
+            let r = select_rank(&s, eps);
+            if s.iter().all(|&x| x == 0.0) {
+                assert_eq!(r, 0);
+                return;
+            }
+            assert!(captured_energy(&s, r) >= 1.0 - eps - 1e-12);
+            if r > 1 {
+                assert!(captured_energy(&s, r - 1) < 1.0 - eps + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn captured_energy_monotone() {
+        forall("captured energy monotone in r", 50, |g| {
+            let n = g.usize_in(1, 20);
+            let mut s: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 3.0)).collect();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut prev = 0.0;
+            for r in 0..=n {
+                let e = captured_energy(&s, r);
+                assert!(e >= prev - 1e-12);
+                prev = e;
+            }
+            assert!((prev - 1.0).abs() < 1e-9 || s.iter().all(|&x| x == 0.0));
+        });
+    }
+}

@@ -1,0 +1,608 @@
+//! Typed configuration system.
+//!
+//! Everything an experiment or server run needs is described by a [`Config`]
+//! that can be (a) built from a named preset in the model zoo, (b) loaded from
+//! a JSON file, and (c) overridden by CLI flags. Configs serialize to JSON so
+//! every run directory carries an exact record of what produced it.
+
+use crate::jsonutil::{parse, Json};
+use std::path::Path;
+
+/// Which compression method to apply to the KV cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// No compression (exact attention baseline).
+    None,
+    /// Truncated SVD of the key (resp. value) cache alone (Palu/LoRC/ECKVH
+    /// family, paper §3.3).
+    KSvd,
+    /// SVD of the vertical concatenation [K; Q] (EigenAttention/Zack family,
+    /// paper §3.4).
+    Eigen,
+    /// This paper: optimal low-rank factorization of K Qᵀ (Theorem 2).
+    KqSvd,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::None => "none",
+            Method::KSvd => "ksvd",
+            Method::Eigen => "eigen",
+            Method::KqSvd => "kqsvd",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "exact" => Some(Method::None),
+            "ksvd" | "k-svd" | "k_svd" => Some(Method::KSvd),
+            "eigen" => Some(Method::Eigen),
+            "kqsvd" | "kq-svd" | "kq_svd" => Some(Method::KqSvd),
+            _ => None,
+        }
+    }
+
+    /// The three compression methods compared throughout the paper.
+    pub const COMPARED: [Method; 3] = [Method::KSvd, Method::Eigen, Method::KqSvd];
+}
+
+/// Transformer architecture description (LLaMA-family decoder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Number of KV heads; `== n_heads` for MHA, `< n_heads` for GQA.
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub seed: u64,
+}
+
+impl ModelConfig {
+    /// Per-head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// GQA group size m (query heads per KV head).
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn is_gqa(&self) -> bool {
+        self.n_kv_heads < self.n_heads
+    }
+
+    /// Approximate parameter count.
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let kv = self.n_kv_heads * self.d_head();
+        let per_layer = d * d          // Wq
+            + d * kv                   // Wk
+            + d * kv                   // Wv
+            + d * d                    // Wo
+            + 3 * d * self.d_ff        // SwiGLU
+            + 2 * d; // norms
+        self.vocab_size * d + self.n_layers * per_layer + d
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.d_model % self.n_heads != 0 {
+            return Err(format!(
+                "d_model {} not divisible by n_heads {}",
+                self.d_model, self.n_heads
+            ));
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(format!(
+                "n_heads {} not divisible by n_kv_heads {}",
+                self.n_heads, self.n_kv_heads
+            ));
+        }
+        if self.vocab_size == 0 || self.n_layers == 0 || self.max_seq == 0 {
+            return Err("zero-sized model dimension".into());
+        }
+        Ok(())
+    }
+}
+
+/// Calibration / evaluation protocol (paper §6.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibConfig {
+    /// Number of calibration sequences (paper: 128).
+    pub n_calib_seqs: usize,
+    /// Length of each calibration sequence (paper: 2048).
+    pub calib_seq_len: usize,
+    /// Number of held-out evaluation sequences (paper: 32).
+    pub n_eval_seqs: usize,
+    pub eval_seq_len: usize,
+    /// Spectral-energy tolerance ε for rank selection (paper: 0.1).
+    pub epsilon: f64,
+    /// Separate tolerance for the value side (defaults to `epsilon`).
+    pub value_epsilon: f64,
+    pub seed: u64,
+}
+
+/// Serving / coordinator parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Maximum decode batch size.
+    pub max_batch: usize,
+    /// Maximum admitted-but-unscheduled requests before backpressure.
+    pub max_queue: usize,
+    /// Prefill is chunked to at most this many tokens per engine step.
+    pub prefill_chunk: usize,
+    /// KV-cache memory budget in bytes (compressed bytes are what count).
+    pub cache_budget_bytes: u64,
+    /// Sequence-length buckets for AOT shape selection.
+    pub buckets: Vec<usize>,
+    /// "rust" (pure-rust attention) or "pjrt" (AOT artifacts via PJRT).
+    pub backend: String,
+    /// Number of engine worker threads.
+    pub workers: usize,
+}
+
+/// Tiny training loop parameters (to make the synthetic model non-degenerate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub model: ModelConfig,
+    pub calib: CalibConfig,
+    pub serve: ServeConfig,
+    pub train: TrainConfig,
+    pub method: Method,
+    /// Directory for run products (weights, projections, metrics).
+    pub run_dir: String,
+    /// Directory holding AOT artifacts (HLO text + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        // Scaled-down default protocol; `--paper-scale` switches to 128×2048.
+        Self {
+            n_calib_seqs: 32,
+            calib_seq_len: 512,
+            n_eval_seqs: 8,
+            eval_seq_len: 512,
+            epsilon: 0.1,
+            value_epsilon: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+impl CalibConfig {
+    /// The paper's full protocol (§6.1): 128 calibration sequences × 2048
+    /// tokens, 32 eval sequences × 2048 tokens, ε = 0.1.
+    pub fn paper_scale() -> Self {
+        Self {
+            n_calib_seqs: 128,
+            calib_seq_len: 2048,
+            n_eval_seqs: 32,
+            eval_seq_len: 2048,
+            epsilon: 0.1,
+            value_epsilon: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_queue: 256,
+            prefill_chunk: 256,
+            cache_budget_bytes: 512 * 1024 * 1024,
+            buckets: vec![128, 256, 512, 1024],
+            backend: "rust".to_string(),
+            workers: 1,
+        }
+    }
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            batch: 8,
+            seq_len: 128,
+            lr: 3e-3,
+            seed: 0,
+        }
+    }
+}
+
+/// The model zoo: four architectures mirroring the paper's evaluation set at
+/// ~1/16 width (see DESIGN.md §2 for the substitution argument).
+pub fn preset(name: &str) -> Option<ModelConfig> {
+    let m = match name {
+        // Llama2-7B analog: pure MHA, 32 heads → 8 heads, d_head 128 → 64.
+        "mha-small" => ModelConfig {
+            name: "mha-small".into(),
+            vocab_size: 512,
+            d_model: 256,
+            n_layers: 8,
+            n_heads: 8,
+            n_kv_heads: 8,
+            d_ff: 688,
+            max_seq: 2048,
+            rope_theta: 10_000.0,
+            seed: 0,
+        },
+        // Llama2-13B analog: deeper + wider MHA.
+        "mha-large" => ModelConfig {
+            name: "mha-large".into(),
+            vocab_size: 512,
+            d_model: 320,
+            n_layers: 10,
+            n_heads: 10,
+            n_kv_heads: 10,
+            d_ff: 864,
+            max_seq: 2048,
+            rope_theta: 10_000.0,
+            seed: 1,
+        },
+        // Llama3-8B analog: GQA with group size 4, higher rope theta.
+        "gqa-small" => ModelConfig {
+            name: "gqa-small".into(),
+            vocab_size: 512,
+            d_model: 256,
+            n_layers: 8,
+            n_heads: 8,
+            n_kv_heads: 2,
+            d_ff: 896,
+            max_seq: 2048,
+            rope_theta: 500_000.0,
+            seed: 2,
+        },
+        // Mistral-7B analog: GQA with group size 4, mistral-like theta.
+        "gqa-mistral" => ModelConfig {
+            name: "gqa-mistral".into(),
+            vocab_size: 512,
+            d_model: 256,
+            n_layers: 8,
+            n_heads: 8,
+            n_kv_heads: 2,
+            d_ff: 896,
+            max_seq: 2048,
+            rope_theta: 1_000_000.0,
+            seed: 3,
+        },
+        // Tiny config for unit tests / CI.
+        "test-tiny" => ModelConfig {
+            name: "test-tiny".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 4,
+            d_ff: 64,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            seed: 0,
+        },
+        // Tiny GQA config for unit tests.
+        "test-tiny-gqa" => ModelConfig {
+            name: "test-tiny-gqa".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 64,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            seed: 0,
+        },
+        _ => return None,
+    };
+    debug_assert!(m.validate().is_ok());
+    Some(m)
+}
+
+/// Names of the four evaluation models (Figure 1 x-axis groups).
+pub const ZOO: [&str; 4] = ["mha-small", "mha-large", "gqa-small", "gqa-mistral"];
+
+impl Config {
+    /// Build from a zoo preset with default protocol.
+    pub fn from_preset(name: &str) -> Result<Config, String> {
+        let model = preset(name).ok_or_else(|| format!("unknown preset '{name}' (known: {ZOO:?}, test-tiny, test-tiny-gqa)"))?;
+        Ok(Config {
+            run_dir: format!("runs/{}", model.name),
+            artifacts_dir: "artifacts".to_string(),
+            model,
+            calib: CalibConfig::default(),
+            serve: ServeConfig::default(),
+            train: TrainConfig::default(),
+            method: Method::KqSvd,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = &self.model;
+        let c = &self.calib;
+        let s = &self.serve;
+        let t = &self.train;
+        Json::obj()
+            .set(
+                "model",
+                Json::obj()
+                    .set("name", m.name.as_str())
+                    .set("vocab_size", m.vocab_size)
+                    .set("d_model", m.d_model)
+                    .set("n_layers", m.n_layers)
+                    .set("n_heads", m.n_heads)
+                    .set("n_kv_heads", m.n_kv_heads)
+                    .set("d_ff", m.d_ff)
+                    .set("max_seq", m.max_seq)
+                    .set("rope_theta", m.rope_theta)
+                    .set("seed", m.seed),
+            )
+            .set(
+                "calib",
+                Json::obj()
+                    .set("n_calib_seqs", c.n_calib_seqs)
+                    .set("calib_seq_len", c.calib_seq_len)
+                    .set("n_eval_seqs", c.n_eval_seqs)
+                    .set("eval_seq_len", c.eval_seq_len)
+                    .set("epsilon", c.epsilon)
+                    .set("value_epsilon", c.value_epsilon)
+                    .set("seed", c.seed),
+            )
+            .set(
+                "serve",
+                Json::obj()
+                    .set("max_batch", s.max_batch)
+                    .set("max_queue", s.max_queue)
+                    .set("prefill_chunk", s.prefill_chunk)
+                    .set("cache_budget_bytes", s.cache_budget_bytes)
+                    .set("buckets", s.buckets.clone())
+                    .set("backend", s.backend.as_str())
+                    .set("workers", s.workers),
+            )
+            .set(
+                "train",
+                Json::obj()
+                    .set("steps", t.steps)
+                    .set("batch", t.batch)
+                    .set("seq_len", t.seq_len)
+                    .set("lr", t.lr)
+                    .set("seed", t.seed),
+            )
+            .set("method", self.method.name())
+            .set("run_dir", self.run_dir.as_str())
+            .set("artifacts_dir", self.artifacts_dir.as_str())
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config, String> {
+        let mj = j.get("model").ok_or("missing 'model'")?;
+        let model = ModelConfig {
+            name: mj.str_or("name", "custom").to_string(),
+            vocab_size: mj.usize_or("vocab_size", 512),
+            d_model: mj.usize_or("d_model", 256),
+            n_layers: mj.usize_or("n_layers", 8),
+            n_heads: mj.usize_or("n_heads", 8),
+            n_kv_heads: mj.usize_or("n_kv_heads", 8),
+            d_ff: mj.usize_or("d_ff", 688),
+            max_seq: mj.usize_or("max_seq", 2048),
+            rope_theta: mj.f64_or("rope_theta", 10_000.0),
+            seed: mj.f64_or("seed", 0.0) as u64,
+        };
+        model.validate()?;
+        let cd = CalibConfig::default();
+        let calib = match j.get("calib") {
+            Some(cj) => CalibConfig {
+                n_calib_seqs: cj.usize_or("n_calib_seqs", cd.n_calib_seqs),
+                calib_seq_len: cj.usize_or("calib_seq_len", cd.calib_seq_len),
+                n_eval_seqs: cj.usize_or("n_eval_seqs", cd.n_eval_seqs),
+                eval_seq_len: cj.usize_or("eval_seq_len", cd.eval_seq_len),
+                epsilon: cj.f64_or("epsilon", cd.epsilon),
+                value_epsilon: cj.f64_or("value_epsilon", cd.value_epsilon),
+                seed: cj.f64_or("seed", 0.0) as u64,
+            },
+            None => cd,
+        };
+        let sd = ServeConfig::default();
+        let serve = match j.get("serve") {
+            Some(sj) => ServeConfig {
+                max_batch: sj.usize_or("max_batch", sd.max_batch),
+                max_queue: sj.usize_or("max_queue", sd.max_queue),
+                prefill_chunk: sj.usize_or("prefill_chunk", sd.prefill_chunk),
+                cache_budget_bytes: sj
+                    .get("cache_budget_bytes")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(sd.cache_budget_bytes),
+                buckets: sj
+                    .get("buckets")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or(sd.buckets.clone()),
+                backend: sj.str_or("backend", &sd.backend).to_string(),
+                workers: sj.usize_or("workers", sd.workers),
+            },
+            None => sd,
+        };
+        let td = TrainConfig::default();
+        let train = match j.get("train") {
+            Some(tj) => TrainConfig {
+                steps: tj.usize_or("steps", td.steps),
+                batch: tj.usize_or("batch", td.batch),
+                seq_len: tj.usize_or("seq_len", td.seq_len),
+                lr: tj.f64_or("lr", td.lr),
+                seed: tj.f64_or("seed", 0.0) as u64,
+            },
+            None => td,
+        };
+        let method = Method::from_name(j.str_or("method", "kqsvd"))
+            .ok_or_else(|| format!("bad method '{}'", j.str_or("method", "")))?;
+        Ok(Config {
+            run_dir: j.str_or("run_dir", &format!("runs/{}", model.name)).to_string(),
+            artifacts_dir: j.str_or("artifacts_dir", "artifacts").to_string(),
+            model,
+            calib,
+            serve,
+            train,
+            method,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+        let j = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        Config::from_json(&j)
+    }
+
+    /// Apply CLI overrides (`--method`, `--seed`, `--paper-scale`, ...).
+    pub fn apply_overrides(&mut self, args: &crate::cli::Args) {
+        if let Some(m) = args.get("method").and_then(Method::from_name) {
+            self.method = m;
+        }
+        if args.bool_or("paper-scale", false) {
+            self.calib = CalibConfig::paper_scale();
+        }
+        if let Some(s) = args.get("seed").and_then(|s| s.parse().ok()) {
+            self.model.seed = s;
+            self.calib.seed = s;
+            self.train.seed = s;
+        }
+        if let Some(e) = args.get("epsilon").and_then(|s| s.parse().ok()) {
+            self.calib.epsilon = e;
+            self.calib.value_epsilon = e;
+        }
+        if let Some(b) = args.get("backend") {
+            self.serve.backend = b.to_string();
+        }
+        if let Some(b) = args.get("max-batch").and_then(|s| s.parse().ok()) {
+            self.serve.max_batch = b;
+        }
+        if let Some(n) = args.get("calib-seqs").and_then(|s| s.parse().ok()) {
+            self.calib.n_calib_seqs = n;
+        }
+        if let Some(n) = args.get("calib-len").and_then(|s| s.parse().ok()) {
+            self.calib.calib_seq_len = n;
+        }
+        if let Some(n) = args.get("eval-seqs").and_then(|s| s.parse().ok()) {
+            self.calib.n_eval_seqs = n;
+        }
+        if let Some(n) = args.get("train-steps").and_then(|s| s.parse().ok()) {
+            self.train.steps = n;
+        }
+        if let Some(d) = args.get("run-dir") {
+            self.run_dir = d.to_string();
+        }
+        if let Some(d) = args.get("artifacts-dir") {
+            self.artifacts_dir = d.to_string();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for name in ZOO.iter().chain(["test-tiny", "test-tiny-gqa"].iter()) {
+            let m = preset(name).unwrap();
+            assert!(m.validate().is_ok(), "{name}");
+            assert!(m.d_head() * m.n_heads == m.d_model);
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn zoo_covers_mha_and_gqa() {
+        let mha: Vec<_> = ZOO.iter().filter(|n| !preset(n).unwrap().is_gqa()).collect();
+        let gqa: Vec<_> = ZOO.iter().filter(|n| preset(n).unwrap().is_gqa()).collect();
+        assert_eq!(mha.len(), 2, "two MHA models like the paper");
+        assert_eq!(gqa.len(), 2, "two GQA models like the paper");
+        for n in gqa {
+            assert_eq!(preset(n).unwrap().group_size(), 4, "paper-like group size");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_config() {
+        let mut cfg = Config::from_preset("gqa-small").unwrap();
+        cfg.method = Method::Eigen;
+        cfg.calib.epsilon = 0.05;
+        cfg.serve.buckets = vec![64, 128];
+        let j = cfg.to_json();
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = Config::from_preset("test-tiny").unwrap();
+        let dir = std::env::temp_dir().join("kqsvd-test-config");
+        let path = dir.join("cfg.json");
+        cfg.save(&path).unwrap();
+        let back = Config::load(&path).unwrap();
+        assert_eq!(cfg, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [Method::None, Method::KSvd, Method::Eigen, Method::KqSvd] {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("KQ-SVD"), Some(Method::KqSvd));
+        assert_eq!(Method::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = Config::from_preset("test-tiny").unwrap();
+        let args = crate::cli::Args::parse_from(
+            ["x", "--method", "eigen", "--paper-scale", "--seed", "7", "--epsilon", "0.05"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        cfg.apply_overrides(&args);
+        assert_eq!(cfg.method, Method::Eigen);
+        assert_eq!(cfg.calib.n_calib_seqs, 128);
+        assert_eq!(cfg.calib.calib_seq_len, 2048);
+        assert_eq!(cfg.model.seed, 7);
+        assert!((cfg.calib.epsilon - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_model_rejected() {
+        let j = parse(r#"{"model": {"d_model": 30, "n_heads": 4}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let m = preset("mha-small").unwrap();
+        let p = m.n_params();
+        // ~a few million params at this scale.
+        assert!(p > 1_000_000 && p < 50_000_000, "params={p}");
+    }
+}

@@ -1,0 +1,501 @@
+//! Continuous-batching scheduler: admission control, chunked prefill,
+//! grouped decode — the vLLM-router-shaped core of the serving layer.
+//!
+//! The scheduler is a pure state machine over an [`Engine`] implementation,
+//! which makes every invariant property-testable with a mock engine:
+//!
+//! * FCFS admission order; admission gated on the engine's cache budget;
+//! * prefill is chunked (`prefill_chunk` tokens per step) and prioritized
+//!   over decode (new requests reach their first token fast);
+//! * decode packs every running sequence (≤ `max_batch`) into one step;
+//! * a sequence's cache is freed exactly once, on completion;
+//! * token sampling is greedy and deterministic.
+
+use super::request::{Completion, Request, SeqState};
+#[cfg(test)]
+use super::request::FinishReason;
+use crate::kvcache::SeqId;
+use crate::model::argmax;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// What the scheduler needs from an inference engine.
+pub trait Engine {
+    /// Register a sequence, reserving budget for its worst-case
+    /// `max_total_tokens` (reservation-based admission: no preemption needed).
+    fn alloc(&mut self, id: SeqId, max_total_tokens: usize) -> anyhow::Result<()>;
+    /// Drop a sequence and release its cache.
+    fn free(&mut self, id: SeqId);
+    /// Would a sequence of `total_tokens` fit in the cache budget now?
+    fn can_admit(&self, total_tokens: usize) -> bool;
+    /// Feed prompt tokens `[pos0, pos0+tokens.len())`; returns last-position
+    /// logits when this chunk completes the prompt (pos0+len == prompt len).
+    fn prefill(
+        &mut self,
+        id: SeqId,
+        tokens: &[u32],
+        pos0: usize,
+        is_last_chunk: bool,
+    ) -> anyhow::Result<Option<Vec<f32>>>;
+    /// One decode step for a batch; returns logits per sequence.
+    fn decode(&mut self, batch: &[(SeqId, u32)]) -> anyhow::Result<Vec<Vec<f32>>>;
+    /// Model context limit.
+    fn max_seq(&self) -> usize;
+}
+
+/// Scheduler tuning knobs (a subset of [`crate::config::ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_queue: usize,
+    pub prefill_chunk: usize,
+}
+
+impl From<&crate::config::ServeConfig> for BatcherConfig {
+    fn from(s: &crate::config::ServeConfig) -> Self {
+        BatcherConfig {
+            max_batch: s.max_batch,
+            max_queue: s.max_queue,
+            prefill_chunk: s.prefill_chunk,
+        }
+    }
+}
+
+/// What one `step()` did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Prefilled `n_tokens` of a sequence's prompt.
+    Prefill { id: SeqId, n_tokens: usize },
+    /// Decoded one token for each of `n_seqs` sequences.
+    Decode { n_seqs: usize },
+    /// Nothing runnable (queue empty / all blocked on budget).
+    Idle,
+}
+
+/// Errors surfaced to submitters.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    PromptTooLong { len: usize, max: usize },
+}
+
+/// The continuous batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<SeqState>,
+    running: Vec<(SeqId, SeqState)>,
+    finished: Vec<Completion>,
+    next_seq_id: SeqId,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            next_seq_id: 1,
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+
+    /// Submit a request (router entry point). FCFS; bounded queue gives
+    /// backpressure.
+    pub fn submit<E: Engine>(&mut self, engine: &E, req: Request) -> Result<(), SubmitError> {
+        if req.prompt.len() >= engine.max_seq() {
+            return Err(SubmitError::PromptTooLong {
+                len: req.prompt.len(),
+                max: engine.max_seq(),
+            });
+        }
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err(SubmitError::QueueFull);
+        }
+        self.queue.push_back(SeqState::new(req, Instant::now()));
+        Ok(())
+    }
+
+    /// Drain finished completions.
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Admit queued requests while budget and batch slots allow (FCFS — we
+    /// never skip ahead of a blocked request, preventing starvation).
+    fn admit<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<()> {
+        while self.running.len() < self.cfg.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let need = front.req.max_total_tokens().min(engine.max_seq());
+            if !engine.can_admit(need) {
+                break;
+            }
+            let mut st = self.queue.pop_front().unwrap();
+            st.admitted_at = Instant::now();
+            let id = self.next_seq_id;
+            self.next_seq_id += 1;
+            engine.alloc(id, need)?;
+            self.running.push((id, st));
+        }
+        Ok(())
+    }
+
+    /// Run one engine step: admission, then prefill-priority scheduling.
+    pub fn step<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<StepOutcome> {
+        self.admit(engine)?;
+
+        // 1) Chunked prefill, oldest first.
+        if let Some(slot) = self.running.iter().position(|(_, s)| !s.prompt_done()) {
+            let (id, st) = &mut self.running[slot];
+            let id = *id;
+            let start = st.prefilled;
+            let end = (start + self.cfg.prefill_chunk).min(st.req.prompt.len());
+            let is_last = end == st.req.prompt.len();
+            let logits = engine.prefill(id, &st.req.prompt[start..end], start, is_last)?;
+            st.prefilled = end;
+            if is_last {
+                let logits = logits.expect("last prefill chunk must return logits");
+                let tok = argmax(&logits) as u32;
+                st.last_token = Some(tok);
+                st.generated.push(tok);
+                if st.first_token_at.is_none() {
+                    st.first_token_at = Some(Instant::now());
+                }
+                self.finish_if_done(engine, slot);
+            }
+            return Ok(StepOutcome::Prefill {
+                id,
+                n_tokens: end - start,
+            });
+        }
+
+        // 2) Decode everything running.
+        if !self.running.is_empty() {
+            let batch: Vec<(SeqId, u32)> = self
+                .running
+                .iter()
+                .take(self.cfg.max_batch)
+                .map(|(id, s)| (*id, s.last_token.expect("decoding seq has last token")))
+                .collect();
+            let logits = engine.decode(&batch)?;
+            anyhow::ensure!(logits.len() == batch.len(), "engine returned wrong batch size");
+            for (i, l) in logits.iter().enumerate() {
+                let tok = argmax(l) as u32;
+                let (_, st) = &mut self.running[i];
+                st.last_token = Some(tok);
+                st.generated.push(tok);
+                if st.first_token_at.is_none() {
+                    st.first_token_at = Some(Instant::now());
+                }
+            }
+            // Finish from the back so indices stay valid.
+            for i in (0..batch.len()).rev() {
+                self.finish_if_done(engine, i);
+            }
+            return Ok(StepOutcome::Decode { n_seqs: batch.len() });
+        }
+
+        Ok(StepOutcome::Idle)
+    }
+
+    fn finish_if_done<E: Engine>(&mut self, engine: &mut E, slot: usize) {
+        let (_id, st) = &self.running[slot];
+        let total = st.req.prompt.len() + st.generated.len();
+        if let Some(reason) = st.finished_reason(engine.max_seq(), total) {
+            let (id, st) = self.running.remove(slot);
+            engine.free(id);
+            self.finished.push(st.into_completion(reason));
+        }
+    }
+
+    /// Drive to completion (offline batch mode). Returns completions in
+    /// finish order.
+    pub fn run_to_completion<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        let mut idle_streak = 0;
+        while !self.idle() {
+            match self.step(engine)? {
+                StepOutcome::Idle => {
+                    idle_streak += 1;
+                    anyhow::ensure!(
+                        idle_streak < 1000,
+                        "scheduler wedged: {} queued, {} running",
+                        self.queue.len(),
+                        self.running.len()
+                    );
+                }
+                _ => idle_streak = 0,
+            }
+            out.append(&mut self.take_completions());
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock engine for scheduler tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+pub(crate) mod mock {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Deterministic fake engine: logits depend on (seq tokens so far), cache
+    /// bytes = 1 per token, vocab 16.
+    pub struct MockEngine {
+        pub budget_tokens: usize,
+        pub used: HashMap<SeqId, usize>,
+        pub reserved: HashMap<SeqId, usize>,
+        pub max_seq: usize,
+        pub prefill_calls: Vec<(SeqId, usize, usize)>,
+        pub decode_calls: Vec<usize>,
+        pub freed: Vec<SeqId>,
+    }
+
+    impl MockEngine {
+        pub fn new(budget_tokens: usize, max_seq: usize) -> MockEngine {
+            MockEngine {
+                budget_tokens,
+                used: HashMap::new(),
+                reserved: HashMap::new(),
+                max_seq,
+                prefill_calls: Vec::new(),
+                decode_calls: Vec::new(),
+                freed: Vec::new(),
+            }
+        }
+
+        fn logits_for(&self, id: SeqId, ntok: usize) -> Vec<f32> {
+            let mut l = vec![0.0f32; 16];
+            l[((id as usize * 7 + ntok * 3) % 16).max(1)] = 1.0;
+            l
+        }
+    }
+
+    impl Engine for MockEngine {
+        fn alloc(&mut self, id: SeqId, max_total_tokens: usize) -> anyhow::Result<()> {
+            self.used.insert(id, 0);
+            self.reserved.insert(id, max_total_tokens);
+            Ok(())
+        }
+
+        fn free(&mut self, id: SeqId) {
+            self.used.remove(&id);
+            self.reserved.remove(&id);
+            self.freed.push(id);
+        }
+
+        fn can_admit(&self, total_tokens: usize) -> bool {
+            let committed: usize = self.reserved.values().sum();
+            committed + total_tokens <= self.budget_tokens
+        }
+
+        fn prefill(
+            &mut self,
+            id: SeqId,
+            tokens: &[u32],
+            pos0: usize,
+            is_last: bool,
+        ) -> anyhow::Result<Option<Vec<f32>>> {
+            self.prefill_calls.push((id, pos0, tokens.len()));
+            *self.used.get_mut(&id).unwrap() += tokens.len();
+            if is_last {
+                let n = self.used[&id];
+                Ok(Some(self.logits_for(id, n)))
+            } else {
+                Ok(None)
+            }
+        }
+
+        fn decode(&mut self, batch: &[(SeqId, u32)]) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.decode_calls.push(batch.len());
+            let mut out = Vec::new();
+            for &(id, _tok) in batch {
+                *self.used.get_mut(&id).unwrap() += 1;
+                out.push(self.logits_for(id, self.used[&id]));
+            }
+            Ok(out)
+        }
+
+        fn max_seq(&self) -> usize {
+            self.max_seq
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mock::MockEngine;
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn cfg(max_batch: usize, chunk: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_queue: 64,
+            prefill_chunk: chunk,
+        }
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let mut eng = MockEngine::new(1000, 256);
+        let mut b = Batcher::new(cfg(4, 8));
+        b.submit(&eng, Request::new(1, vec![1, 2, 3], 5)).unwrap();
+        let done = b.run_to_completion(&mut eng).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].tokens.len(), 5);
+        assert_eq!(done[0].reason, FinishReason::Length);
+        assert_eq!(eng.freed, vec![1]);
+    }
+
+    #[test]
+    fn prefill_is_chunked() {
+        let mut eng = MockEngine::new(1000, 256);
+        let mut b = Batcher::new(cfg(4, 4));
+        b.submit(&eng, Request::new(1, (0..10).collect(), 1)).unwrap();
+        b.run_to_completion(&mut eng).unwrap();
+        // 10-token prompt in chunks of 4: 4+4+2.
+        let chunks: Vec<usize> = eng.prefill_calls.iter().map(|c| c.2).collect();
+        assert_eq!(chunks, vec![4, 4, 2]);
+        // Positions are contiguous.
+        assert_eq!(
+            eng.prefill_calls.iter().map(|c| c.1).collect::<Vec<_>>(),
+            vec![0, 4, 8]
+        );
+    }
+
+    #[test]
+    fn decode_batches_multiple_sequences() {
+        let mut eng = MockEngine::new(10_000, 256);
+        let mut b = Batcher::new(cfg(4, 64));
+        for i in 0..4 {
+            b.submit(&eng, Request::new(i, vec![1, 2], 6)).unwrap();
+        }
+        b.run_to_completion(&mut eng).unwrap();
+        // After all prefills, decodes should run at full batch.
+        assert!(eng.decode_calls.iter().any(|&n| n == 4), "{:?}", eng.decode_calls);
+    }
+
+    #[test]
+    fn admission_respects_budget_and_is_fcfs() {
+        // Budget fits only one request at a time.
+        let mut eng = MockEngine::new(12, 256);
+        let mut b = Batcher::new(cfg(4, 64));
+        for i in 0..3 {
+            b.submit(&eng, Request::new(i, vec![1, 2, 3, 4], 8)).unwrap();
+        }
+        let done = b.run_to_completion(&mut eng).unwrap();
+        assert_eq!(done.len(), 3);
+        // FCFS: completion order == submission order (serial execution).
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // Never more than one running at once: every decode batch has size 1.
+        assert!(eng.decode_calls.iter().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let eng = MockEngine::new(1000, 256);
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 1,
+            max_queue: 2,
+            prefill_chunk: 8,
+        });
+        b.submit(&eng, Request::new(1, vec![1], 1)).unwrap();
+        b.submit(&eng, Request::new(2, vec![1], 1)).unwrap();
+        assert_eq!(
+            b.submit(&eng, Request::new(3, vec![1], 1)),
+            Err(SubmitError::QueueFull)
+        );
+    }
+
+    #[test]
+    fn prompt_too_long_rejected() {
+        let eng = MockEngine::new(1000, 16);
+        let mut b = Batcher::new(cfg(1, 8));
+        let r = b.submit(&eng, Request::new(1, (0..20).collect(), 1));
+        assert!(matches!(r, Err(SubmitError::PromptTooLong { .. })));
+    }
+
+    #[test]
+    fn stop_token_finishes_early() {
+        let mut eng = MockEngine::new(1000, 256);
+        let mut b = Batcher::new(cfg(1, 8));
+        let mut req = Request::new(1, vec![1, 2], 50);
+        // MockEngine's first generated token for id=1 with 2 prompt tokens:
+        // index (1*7 + 2*3) % 16 = 13.
+        req.stop_token = Some(13);
+        b.submit(&eng, req).unwrap();
+        let done = b.run_to_completion(&mut eng).unwrap();
+        assert_eq!(done[0].reason, FinishReason::Stop);
+        assert_eq!(done[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn context_overflow_finishes() {
+        let mut eng = MockEngine::new(1000, 8);
+        let mut b = Batcher::new(cfg(1, 8));
+        b.submit(&eng, Request::new(1, vec![1, 2, 3], 100)).unwrap();
+        let done = b.run_to_completion(&mut eng).unwrap();
+        assert_eq!(done[0].reason, FinishReason::ContextOverflow);
+        assert!(done[0].tokens.len() <= 6);
+    }
+
+    #[test]
+    fn prop_scheduler_invariants() {
+        forall("batcher invariants under random workloads", 25, |g| {
+            let budget = g.usize_in(20, 400);
+            let max_batch = g.usize_in(1, 6);
+            let chunk = g.usize_in(1, 16);
+            let n_reqs = g.usize_in(1, 12);
+            let mut eng = MockEngine::new(budget, 64);
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch,
+                max_queue: 64,
+                prefill_chunk: chunk,
+            });
+            let mut submitted = 0;
+            for i in 0..n_reqs {
+                let plen = g.usize_in(1, 10);
+                let gen = g.usize_in(1, 10);
+                // Only submit requests that can ever be admitted.
+                if plen + gen <= budget {
+                    b.submit(&eng, Request::new(i as u64, (0..plen as u32).collect(), gen))
+                        .unwrap();
+                    submitted += 1;
+                }
+            }
+            let done = b.run_to_completion(&mut eng).unwrap();
+            // Everything submitted completes.
+            assert_eq!(done.len(), submitted);
+            // Every sequence freed exactly once.
+            assert_eq!(eng.freed.len(), submitted);
+            let mut freed = eng.freed.clone();
+            freed.sort_unstable();
+            freed.dedup();
+            assert_eq!(freed.len(), submitted, "double free detected");
+            // Batches never exceeded max_batch.
+            assert!(eng.decode_calls.iter().all(|&n| n <= max_batch));
+            // Engine cache is empty at the end.
+            assert!(eng.used.is_empty());
+            // Each completion generated ≥ 1 token and ≤ its max.
+            for c in &done {
+                assert!(!c.tokens.is_empty());
+            }
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Serving metrics registry: latency summaries, throughput counters, cache
+//! gauges. Thread-safe; cheap enough to update per request/step.
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Registry of named summaries + counters + gauges.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    summaries: BTreeMap<String, Summary>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Record a sample into a named summary (e.g. "ttft_ms").
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.summaries.entry(name.to_string()).or_default().add(value);
+    }
+
+    /// Increment a named counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a named gauge.
+    pub fn gauge(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Snapshot of a summary (count, mean, p50, p95, p99, max).
+    pub fn summary_stats(&self, name: &str) -> Option<(u64, f64, f64, f64, f64, f64)> {
+        let g = self.inner.lock().unwrap();
+        g.summaries
+            .get(name)
+            .map(|s| (s.count(), s.mean(), s.p50(), s.p95(), s.p99(), s.max()))
+    }
+
+    /// Human-readable report of everything recorded.
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        if !g.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in &g.counters {
+                out.push_str(&format!("  {k:<28} {v}\n"));
+            }
+        }
+        if !g.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, v) in &g.gauges {
+                out.push_str(&format!("  {k:<28} {v:.3}\n"));
+            }
+        }
+        if !g.summaries.is_empty() {
+            out.push_str("summaries (count / mean / p50 / p95 / p99 / max):\n");
+            for (k, s) in &g.summaries {
+                out.push_str(&format!(
+                    "  {k:<28} {} / {:.3} / {:.3} / {:.3} / {:.3} / {:.3}\n",
+                    s.count(),
+                    s.mean(),
+                    s.p50(),
+                    s.p95(),
+                    s.p99(),
+                    s.max()
+                ));
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot (for bench output files).
+    pub fn to_json(&self) -> crate::jsonutil::Json {
+        use crate::jsonutil::Json;
+        let g = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (k, v) in &g.counters {
+            counters = counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &g.gauges {
+            gauges = gauges.set(k, *v);
+        }
+        let mut summaries = Json::obj();
+        for (k, s) in &g.summaries {
+            summaries = summaries.set(
+                k,
+                Json::obj()
+                    .set("count", s.count())
+                    .set("mean", s.mean())
+                    .set("p50", s.p50())
+                    .set("p95", s.p95())
+                    .set("p99", s.p99())
+                    .set("max", s.max()),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("summaries", summaries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_summaries() {
+        let m = MetricsRegistry::new();
+        m.incr("tokens_out", 5);
+        m.incr("tokens_out", 3);
+        assert_eq!(m.counter("tokens_out"), 8);
+        assert_eq!(m.counter("missing"), 0);
+        m.gauge("cache_bytes", 123.0);
+        assert_eq!(m.gauge_value("cache_bytes"), Some(123.0));
+        for i in 0..100 {
+            m.observe("ttft_ms", i as f64);
+        }
+        let (count, mean, p50, ..) = m.summary_stats("ttft_ms").unwrap();
+        assert_eq!(count, 100);
+        assert!((mean - 49.5).abs() < 1e-9);
+        assert!((p50 - 50.0).abs() <= 1.0);
+        let rep = m.report();
+        assert!(rep.contains("tokens_out") && rep.contains("ttft_ms"));
+        let j = m.to_json();
+        assert!(j.get("summaries").unwrap().get("ttft_ms").is_some());
+    }
+
+    #[test]
+    fn thread_safe_updates() {
+        let m = std::sync::Arc::new(MetricsRegistry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 4000);
+    }
+}

@@ -1,0 +1,188 @@
+//! The L3 serving coordinator: request router, continuous batcher,
+//! prefill/decode scheduler and metrics — the system layer wrapping the
+//! paper's compressed KV cache (DESIGN.md §5).
+//!
+//! Two operating modes:
+//! * **offline batch** ([`Router::run_offline`]) — drive a request set to
+//!   completion on the calling thread (used by benches and examples;
+//!   deterministic);
+//! * **threaded serving** ([`Router::serve`]) — submission channel +
+//!   completion channel with a dedicated engine thread (used by
+//!   `kqsvd serve`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+
+pub use batcher::{Batcher, BatcherConfig, Engine, StepOutcome, SubmitError};
+pub use metrics::MetricsRegistry;
+pub use request::{Completion, FinishReason, Request};
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Router: owns the batcher + metrics, fronting an engine.
+pub struct Router {
+    batcher: Batcher,
+    pub metrics: Arc<MetricsRegistry>,
+}
+
+impl Router {
+    pub fn new(cfg: BatcherConfig) -> Router {
+        Router {
+            batcher: Batcher::new(cfg),
+            metrics: Arc::new(MetricsRegistry::new()),
+        }
+    }
+
+    /// Submit with metrics.
+    pub fn submit<E: Engine>(&mut self, engine: &E, req: Request) -> Result<(), SubmitError> {
+        let tokens_in = req.prompt.len() as u64;
+        match self.batcher.submit(engine, req) {
+            Ok(()) => {
+                self.metrics.incr("requests_accepted", 1);
+                self.metrics.incr("tokens_in", tokens_in);
+                Ok(())
+            }
+            Err(e) => {
+                self.metrics.incr("requests_rejected", 1);
+                Err(e)
+            }
+        }
+    }
+
+    /// Drive all submitted requests to completion, recording metrics.
+    pub fn run_offline<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<Vec<Completion>> {
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::new();
+        while !self.batcher.idle() {
+            match self.batcher.step(engine)? {
+                StepOutcome::Prefill { n_tokens, .. } => {
+                    self.metrics.incr("prefill_steps", 1);
+                    self.metrics.incr("prefill_tokens", n_tokens as u64);
+                }
+                StepOutcome::Decode { n_seqs } => {
+                    self.metrics.incr("decode_steps", 1);
+                    self.metrics.observe("decode_batch", n_seqs as f64);
+                }
+                StepOutcome::Idle => {}
+            }
+            for c in self.batcher.take_completions() {
+                self.metrics.incr("tokens_out", c.tokens.len() as u64);
+                self.metrics.observe("ttft_ms", c.ttft_s * 1e3);
+                self.metrics.observe("tpot_ms", c.tpot_s * 1e3);
+                self.metrics.observe("e2e_ms", c.e2e_s * 1e3);
+                out.push(c);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.gauge("wall_s", wall);
+        let toks = self.metrics.counter("tokens_out");
+        if wall > 0.0 {
+            self.metrics.gauge("decode_tok_per_s", toks as f64 / wall);
+        }
+        Ok(out)
+    }
+
+    /// Threaded serving loop: spawns an engine thread consuming requests from
+    /// the returned sender, pushing completions into the returned receiver.
+    /// Closing the sender drains in-flight work and ends the thread.
+    pub fn serve<E: Engine + Send + 'static>(
+        mut self,
+        mut engine: E,
+    ) -> (Sender<Request>, Receiver<Completion>, std::thread::JoinHandle<anyhow::Result<()>>) {
+        let (req_tx, req_rx) = channel::<Request>();
+        let (done_tx, done_rx) = channel::<Completion>();
+        let handle = std::thread::Builder::new()
+            .name("kqsvd-engine".into())
+            .spawn(move || -> anyhow::Result<()> {
+                let mut open = true;
+                loop {
+                    // Pull everything currently queued (non-blocking), or block
+                    // briefly when idle so submissions wake us up.
+                    loop {
+                        match req_rx.try_recv() {
+                            Ok(r) => {
+                                let _ = self.submit(&engine, r);
+                            }
+                            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                    let outcome = self.batcher.step(&mut engine)?;
+                    for c in self.batcher.take_completions() {
+                        self.metrics.observe("ttft_ms", c.ttft_s * 1e3);
+                        self.metrics.observe("e2e_ms", c.e2e_s * 1e3);
+                        let _ = done_tx.send(c);
+                    }
+                    if outcome == StepOutcome::Idle {
+                        if !open {
+                            return Ok(());
+                        }
+                        // Idle: block for the next request (or shutdown).
+                        match req_rx.recv() {
+                            Ok(r) => {
+                                let _ = self.submit(&engine, r);
+                            }
+                            Err(_) => return Ok(()),
+                        }
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        (req_tx, done_rx, handle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::batcher::mock::MockEngine;
+    use super::*;
+
+    #[test]
+    fn offline_records_metrics() {
+        let mut eng = MockEngine::new(1000, 128);
+        let mut router = Router::new(BatcherConfig {
+            max_batch: 2,
+            max_queue: 8,
+            prefill_chunk: 4,
+        });
+        for i in 0..3 {
+            router
+                .submit(&eng, Request::new(i, vec![1, 2, 3], 4))
+                .unwrap();
+        }
+        let done = router.run_offline(&mut eng).unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(router.metrics.counter("requests_accepted"), 3);
+        assert_eq!(router.metrics.counter("tokens_out"), 12);
+        assert!(router.metrics.summary_stats("ttft_ms").unwrap().0 == 3);
+        assert!(router.metrics.gauge_value("decode_tok_per_s").is_some());
+    }
+
+    #[test]
+    fn threaded_serving_roundtrip() {
+        let eng = MockEngine::new(1000, 128);
+        let router = Router::new(BatcherConfig {
+            max_batch: 2,
+            max_queue: 8,
+            prefill_chunk: 8,
+        });
+        let (tx, rx, handle) = router.serve(eng);
+        for i in 0..5 {
+            tx.send(Request::new(i, vec![1, 2], 3)).unwrap();
+        }
+        drop(tx);
+        let mut done: Vec<_> = rx.iter().collect();
+        handle.join().unwrap().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 5);
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.id, i as u64);
+            assert_eq!(c.tokens.len(), 3);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Request lifecycle types for the serving coordinator.
+
+use std::time::Instant;
+
+/// A generation request entering the router.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Stop generation at this token id (usually EOS), if any.
+    pub stop_token: Option<u32>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens > 0, "must generate at least one token");
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token: None,
+        }
+    }
+
+    /// Worst-case total tokens this request can occupy in the cache.
+    pub fn max_total_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit max_new_tokens.
+    Length,
+    /// Emitted the stop token.
+    Stop,
+    /// Hit the model's maximum context.
+    ContextOverflow,
+}
+
+/// Completed request with generation + timing data.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub reason: FinishReason,
+    /// Seconds from admission to first generated token.
+    pub ttft_s: f64,
+    /// Mean seconds per generated token after the first.
+    pub tpot_s: f64,
+    /// Seconds from submission to completion.
+    pub e2e_s: f64,
+}
+
+/// Internal per-sequence scheduler state.
+#[derive(Debug)]
+pub(crate) struct SeqState {
+    pub req: Request,
+    /// Tokens of the prompt already prefilled.
+    pub prefilled: usize,
+    /// Generated tokens so far.
+    pub generated: Vec<u32>,
+    /// The token to feed at the next decode step.
+    pub last_token: Option<u32>,
+    pub submitted_at: Instant,
+    pub admitted_at: Instant,
+    pub first_token_at: Option<Instant>,
+}
+
+impl SeqState {
+    pub fn new(req: Request, submitted_at: Instant) -> SeqState {
+        SeqState {
+            req,
+            prefilled: 0,
+            generated: Vec::new(),
+            last_token: None,
+            submitted_at,
+            admitted_at: Instant::now(),
+            first_token_at: None,
+        }
+    }
+
+    pub fn prompt_done(&self) -> bool {
+        self.prefilled >= self.req.prompt.len()
+    }
+
+    pub fn finished_reason(&self, max_seq: usize, current_tokens: usize) -> Option<FinishReason> {
+        if let (Some(stop), Some(&last)) = (self.req.stop_token, self.generated.last()) {
+            if last == stop {
+                return Some(FinishReason::Stop);
+            }
+        }
+        if self.generated.len() >= self.req.max_new_tokens {
+            return Some(FinishReason::Length);
+        }
+        if current_tokens >= max_seq {
+            return Some(FinishReason::ContextOverflow);
+        }
+        None
+    }
+
+    pub fn into_completion(self, reason: FinishReason) -> Completion {
+        let now = Instant::now();
+        let ttft_s = self
+            .first_token_at
+            .map(|t| t.duration_since(self.admitted_at).as_secs_f64())
+            .unwrap_or(0.0);
+        let n = self.generated.len();
+        let tpot_s = if n > 1 {
+            self.first_token_at
+                .map(|t| now.duration_since(t).as_secs_f64() / (n - 1) as f64)
+                .unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        Completion {
+            id: self.req.id,
+            tokens: self.generated,
+            reason,
+            ttft_s,
+            tpot_s,
+            e2e_s: now.duration_since(self.submitted_at).as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_accounting() {
+        let r = Request::new(1, vec![1, 2, 3], 10);
+        assert_eq!(r.max_total_tokens(), 13);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        Request::new(1, vec![], 10);
+    }
+
+    #[test]
+    fn finish_reasons() {
+        let mut req = Request::new(1, vec![1], 2);
+        req.stop_token = Some(9);
+        let mut s = SeqState::new(req, Instant::now());
+        assert_eq!(s.finished_reason(100, 1), None);
+        s.generated.push(4);
+        assert_eq!(s.finished_reason(100, 2), None);
+        s.generated.push(9);
+        assert_eq!(s.finished_reason(100, 3), Some(FinishReason::Stop));
+        s.generated.pop();
+        s.generated.push(5);
+        assert_eq!(s.finished_reason(100, 3), Some(FinishReason::Length));
+        s.generated.pop();
+        assert_eq!(s.finished_reason(2, 2), Some(FinishReason::ContextOverflow));
+    }
+
+    #[test]
+    fn completion_timing_fields() {
+        let req = Request::new(7, vec![1, 2], 3);
+        let mut s = SeqState::new(req, Instant::now());
+        s.generated = vec![1, 2, 3];
+        s.first_token_at = Some(Instant::now());
+        let c = s.into_completion(FinishReason::Length);
+        assert_eq!(c.id, 7);
+        assert_eq!(c.tokens.len(), 3);
+        assert!(c.e2e_s >= 0.0 && c.ttft_s >= 0.0 && c.tpot_s >= 0.0);
+    }
+}

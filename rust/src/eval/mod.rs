@@ -1,0 +1,314 @@
+//! Evaluation harness for the paper's §6 experiments.
+//!
+//! Metric (paper §6.1): relative squared Frobenius error
+//! `‖M − M̃‖²_F / ‖M‖²_F` on each component of the attention pipeline —
+//! K, Q, V, the score matrix `KQᵀ`, and the (masked) MHA output — measured
+//! on held-out validation sequences, averaged over sequences and heads.
+//!
+//! [`eval_method`] produces both the Figure-1 bottom panel (mean component
+//! errors) and the top panel (per-layer output error). Figure 2 reuses the
+//! same machinery with rescaled caches (`K·β`, `Q/β`).
+
+use crate::calib::{build_projections, collect_caches_from, select_ranks, LayerRanks, ProjectionSet};
+use crate::config::{CalibConfig, Method};
+use crate::linalg::Mat;
+use crate::model::{softmax_inplace, Transformer};
+use crate::text::{Corpus, Split};
+
+/// Mean relative errors on the attention pipeline components (Fig 1 bottom).
+#[derive(Debug, Clone, Default)]
+pub struct ComponentErrors {
+    pub k: f64,
+    pub q: f64,
+    pub v: f64,
+    pub scores: f64,
+    pub output: f64,
+}
+
+/// Full evaluation result for one (model, method) pair.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub method: Method,
+    /// Per-layer mean relative output error (Fig 1 top).
+    pub per_layer_output: Vec<f64>,
+    /// Component means across layers (Fig 1 bottom).
+    pub components: ComponentErrors,
+}
+
+/// Causal masked attention output for one head: softmax(scores·scale) V W.
+/// `scores` is any T×T score matrix (exact or approximated).
+fn masked_head_output(mut scores: Mat, v_eff: &Mat, scale: f32) -> Mat {
+    let t = scores.rows();
+    for i in 0..t {
+        let row = scores.row_mut(i);
+        for x in row.iter_mut().take(t).skip(i + 1) {
+            *x = f32::NEG_INFINITY;
+        }
+        for x in row.iter_mut() {
+            *x *= scale;
+        }
+        // NOTE: scale applied after masking; -inf stays -inf.
+        softmax_inplace(&mut row[..]);
+    }
+    scores.matmul(v_eff)
+}
+
+/// Evaluate a projection set against per-sequence validation caches.
+///
+/// `beta` rescales the caches (`K·β`, `Q/β`) *after* projection learning —
+/// the Figure-2 protocol evaluates projections learned on rescaled caches
+/// against the (scale-invariant) attention computation; pass 1.0 for Fig 1.
+pub fn eval_method(
+    model: &Transformer,
+    proj: &ProjectionSet,
+    corpus: &Corpus,
+    calib: &CalibConfig,
+    beta: f32,
+) -> EvalResult {
+    let cfg = &model.cfg;
+    let dh = cfg.d_head();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let group = cfg.group_size();
+
+    let mut per_layer_output = vec![0.0f64; cfg.n_layers];
+    let mut comp = ComponentErrors::default();
+    let mut n_outputs = 0usize;
+    let mut n_heads_seen = 0usize;
+
+    for s in 0..calib.n_eval_seqs {
+        let tokens = corpus.sequence(Split::Validation, s as u64, calib.eval_seq_len);
+        let (_, cap) = model.forward(&tokens, true);
+        let cap = cap.unwrap();
+        for (li, lc) in cap.layers.iter().enumerate() {
+            let lp = &proj.layers[li];
+            let mut exact_out: Option<Mat> = None;
+            let mut approx_out: Option<Mat> = None;
+            for kv in 0..cfg.n_kv_heads {
+                let g = &lp.groups[kv];
+                let k = lc.k[kv].scaled(beta);
+                let v = &lc.v[kv];
+                // Component errors shared per KV head.
+                comp.k += k.rel_err(&g.key.approx_keys(&k));
+                comp.v += v.rel_err(&v.matmul(&g.value_a).matmul_nt(&g.value_b));
+                for gi in 0..group {
+                    let h = kv * group + gi;
+                    let q = lc.q[h].scaled(1.0 / beta);
+                    comp.q += q.rel_err(&g.key.approx_queries(&q));
+                    let exact_scores = q.matmul_nt(&k);
+                    let approx_scores = g.key.approx_scores(&k, &q);
+                    comp.scores += exact_scores.rel_err(&approx_scores);
+                    n_heads_seen += 1;
+
+                    // Head contribution to the MHA output (causal).
+                    let w_head = model.weights.layers[li].wo_head(h, dh);
+                    let v_eff_exact = v.matmul(&w_head);
+                    let head_exact = masked_head_output(exact_scores, &v_eff_exact, scale);
+                    let v_eff_approx = v.matmul(&g.value_a).matmul(&g.value_folds[gi]);
+                    let head_approx = masked_head_output(approx_scores, &v_eff_approx, scale);
+                    exact_out = Some(match exact_out {
+                        Some(acc) => acc.add(&head_exact),
+                        None => head_exact,
+                    });
+                    approx_out = Some(match approx_out {
+                        Some(acc) => acc.add(&head_approx),
+                        None => head_approx,
+                    });
+                }
+            }
+            let e = exact_out.unwrap().rel_err(&approx_out.unwrap());
+            per_layer_output[li] += e;
+            comp.output += e;
+            n_outputs += 1;
+        }
+    }
+
+    let n_seq = calib.n_eval_seqs as f64;
+    for x in per_layer_output.iter_mut() {
+        *x /= n_seq;
+    }
+    let nh = n_heads_seen as f64;
+    let nkv = (calib.n_eval_seqs * cfg.n_layers * cfg.n_kv_heads) as f64;
+    comp.k /= nkv;
+    comp.v /= nkv;
+    comp.q /= nh;
+    comp.scores /= nh;
+    comp.output /= n_outputs as f64;
+
+    EvalResult {
+        method: proj.method,
+        per_layer_output,
+        components: comp,
+    }
+}
+
+/// The full Figure-1 protocol for one model: calibrate every method on the
+/// training split (at shared per-layer ranks), evaluate on validation.
+pub fn figure1_for_model(
+    model: &Transformer,
+    corpus: &Corpus,
+    calib: &CalibConfig,
+) -> (Vec<EvalResult>, Vec<LayerRanks>) {
+    let caches = collect_caches_from(
+        model,
+        corpus,
+        Split::Train,
+        0,
+        calib.n_calib_seqs,
+        calib.calib_seq_len,
+    );
+    let ranks = select_ranks(&caches, calib);
+    let wo: Vec<Mat> = model.weights.layers.iter().map(|l| l.wo.clone()).collect();
+    let results = Method::COMPARED
+        .iter()
+        .map(|&m| {
+            let proj = build_projections(&model.cfg, &wo, &caches, &ranks, m);
+            eval_method(model, &proj, corpus, calib, 1.0)
+        })
+        .collect();
+    (results, ranks)
+}
+
+/// The Figure-2 protocol: learn projections on β-rescaled calibration caches,
+/// report mean output error (averaged across layers) per method per β.
+pub fn figure2_for_model(
+    model: &Transformer,
+    corpus: &Corpus,
+    calib: &CalibConfig,
+    betas: &[f32],
+) -> Vec<(f32, Vec<(Method, f64)>)> {
+    let caches = collect_caches_from(
+        model,
+        corpus,
+        Split::Train,
+        0,
+        calib.n_calib_seqs,
+        calib.calib_seq_len,
+    );
+    let ranks = select_ranks(&caches, calib);
+    let wo: Vec<Mat> = model.weights.layers.iter().map(|l| l.wo.clone()).collect();
+
+    betas
+        .iter()
+        .map(|&beta| {
+            // Rescale the *calibration* caches: K·β, Q/β (§6.2 — equivalent
+            // to rescaling W_K/W_Q since it commutes with collection).
+            let mut scaled = caches.clone();
+            for layer in scaled.layers.iter_mut() {
+                for k in layer.k.iter_mut() {
+                    k.scale_inplace(beta);
+                }
+                for q in layer.q.iter_mut() {
+                    q.scale_inplace(1.0 / beta);
+                }
+            }
+            let per_method = Method::COMPARED
+                .iter()
+                .map(|&m| {
+                    let proj = build_projections(&model.cfg, &wo, &scaled, &ranks, m);
+                    let res = eval_method(model, &proj, corpus, calib, beta);
+                    (m, res.components.output)
+                })
+                .collect();
+            (beta, per_method)
+        })
+        .collect()
+}
+
+/// Config for a quick (CI-sized) evaluation.
+pub fn quick_calib() -> CalibConfig {
+    CalibConfig {
+        n_calib_seqs: 4,
+        calib_seq_len: 64,
+        n_eval_seqs: 2,
+        eval_seq_len: 48,
+        epsilon: 0.1,
+        value_epsilon: 0.1,
+        seed: 0,
+    }
+}
+
+/// Build a model for evaluation from a zoo preset name.
+pub fn model_for(preset_name: &str) -> Transformer {
+    let cfg = crate::config::preset(preset_name).expect("known preset");
+    Transformer::init(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn setup() -> (Transformer, Corpus, CalibConfig) {
+        let cfg = preset("test-tiny").unwrap();
+        let corpus = Corpus::new(cfg.vocab_size, 0);
+        (Transformer::init(cfg), corpus, quick_calib())
+    }
+
+    #[test]
+    fn figure1_ordering_holds_on_tiny_model() {
+        let (model, corpus, calib) = setup();
+        let (results, ranks) = figure1_for_model(&model, &corpus, &calib);
+        assert_eq!(results.len(), 3);
+        assert!(!ranks.is_empty());
+        let by = |m: Method| {
+            results
+                .iter()
+                .find(|r| r.method == m)
+                .unwrap()
+                .components
+                .clone()
+        };
+        let ks = by(Method::KSvd);
+        let ei = by(Method::Eigen);
+        let kq = by(Method::KqSvd);
+        // Paper's headline orderings:
+        // (1) KQ-SVD best on the score matrix.
+        assert!(kq.scores <= ks.scores + 1e-9, "kq {} vs ks {}", kq.scores, ks.scores);
+        assert!(kq.scores <= ei.scores + 1e-9, "kq {} vs ei {}", kq.scores, ei.scores);
+        // (2) K-SVD best on keys themselves.
+        assert!(ks.k <= kq.k + 1e-9);
+        assert!(ks.k <= ei.k + 1e-9);
+        // (3) K-SVD weakest on queries.
+        assert!(ks.q >= ei.q - 1e-9);
+        // (4) KQ-SVD best or tied on output error.
+        assert!(kq.output <= ks.output + 0.05 * ks.output.max(1e-12));
+        // All errors in [0, ~2].
+        for r in &results {
+            for e in [r.components.k, r.components.q, r.components.v, r.components.scores, r.components.output] {
+                assert!((0.0..2.5).contains(&e), "{:?}: {e}", r.method);
+            }
+        }
+    }
+
+    #[test]
+    fn figure2_eigen_approaches_ksvd() {
+        let (model, corpus, calib) = setup();
+        let sweep = figure2_for_model(&model, &corpus, &calib, &[1.0, 10.0]);
+        assert_eq!(sweep.len(), 2);
+        let get = |row: &Vec<(Method, f64)>, m: Method| {
+            row.iter().find(|(mm, _)| *mm == m).unwrap().1
+        };
+        let (b1, row1) = &sweep[0];
+        let (b10, row10) = &sweep[1];
+        assert_eq!((*b1, *b10), (1.0, 10.0));
+        // K-SVD and KQ-SVD errors are β-invariant.
+        let ks_drift = (get(row1, Method::KSvd) - get(row10, Method::KSvd)).abs();
+        let kq_drift = (get(row1, Method::KqSvd) - get(row10, Method::KqSvd)).abs();
+        assert!(ks_drift < 0.05 * get(row1, Method::KSvd).max(1e-9), "ksvd drift {ks_drift}");
+        assert!(kq_drift < 0.05 * get(row1, Method::KqSvd).max(1e-9), "kqsvd drift {kq_drift}");
+        // Eigen at β=10 sits near K-SVD (Theorem 4).
+        let gap10 = (get(row10, Method::Eigen) - get(row10, Method::KSvd)).abs();
+        let gap1 = (get(row1, Method::Eigen) - get(row1, Method::KSvd)).abs();
+        assert!(gap10 <= gap1 + 1e-9, "gap should shrink: {gap1} → {gap10}");
+    }
+
+    #[test]
+    fn per_layer_vector_has_model_depth() {
+        let (model, corpus, calib) = setup();
+        let (results, _) = figure1_for_model(&model, &corpus, &calib);
+        for r in &results {
+            assert_eq!(r.per_layer_output.len(), model.cfg.n_layers);
+            assert!(r.per_layer_output.iter().all(|e| e.is_finite() && *e >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,609 @@
+//! Compressed paged KV-cache manager.
+//!
+//! This is where the paper's method meets the serving stack: instead of
+//! storing per-token key/value rows of width `d`, the cache stores
+//! *projected* rows `k·A ∈ R^{R}` and `v·A_v ∈ R^{R_v}` (paper §3.3: "store
+//! only the compressed caches K V̂ and V V̂"), cutting cache bytes by
+//! `(R+R_v)/2d` per layer.
+//!
+//! Layout: per sequence × layer × KV head, a [`PagedBuf`] — fixed-capacity
+//! pages of `page_tokens` rows, allocated lazily as the sequence grows. Pages
+//! avoid both per-token allocation and large realloc copies, and make memory
+//! accounting exact: `used_bytes` is the sum of allocated pages, checked
+//! against a budget for admission control (backpressure to the coordinator).
+
+use std::collections::HashMap;
+
+/// Append-only paged row buffer (one head's K or V stream).
+#[derive(Debug, Clone)]
+pub struct PagedBuf {
+    width: usize,
+    page_rows: usize,
+    pages: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl PagedBuf {
+    pub fn new(width: usize, page_rows: usize) -> PagedBuf {
+        assert!(width > 0 && page_rows > 0);
+        PagedBuf {
+            width,
+            page_rows,
+            pages: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Bytes currently allocated (full pages).
+    pub fn allocated_bytes(&self) -> usize {
+        self.pages.len() * self.page_rows * self.width * 4
+    }
+
+    /// Bytes a new row would add (0 if the current page has room).
+    fn next_row_cost(&self) -> usize {
+        if self.len % self.page_rows == 0 {
+            self.page_rows * self.width * 4
+        } else {
+            0
+        }
+    }
+
+    /// Append one row. Returns bytes newly allocated.
+    pub fn push_row(&mut self, row: &[f32]) -> usize {
+        assert_eq!(row.len(), self.width, "row width mismatch");
+        let cost = self.next_row_cost();
+        if cost > 0 {
+            self.pages.push(vec![0.0; self.page_rows * self.width]);
+        }
+        let page = self.len / self.page_rows;
+        let slot = self.len % self.page_rows;
+        self.pages[page][slot * self.width..(slot + 1) * self.width].copy_from_slice(row);
+        self.len += 1;
+        cost
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.len, "row {i} out of {}", self.len);
+        let page = i / self.page_rows;
+        let slot = i % self.page_rows;
+        &self.pages[page][slot * self.width..(slot + 1) * self.width]
+    }
+
+    /// Iterate over contiguous filled chunks `(rows_slice, n_rows)` — lets
+    /// attention kernels stream page-by-page without a gather copy.
+    pub fn chunks(&self) -> impl Iterator<Item = (&[f32], usize)> {
+        let full_pages = self.len / self.page_rows;
+        let rem = self.len % self.page_rows;
+        let width = self.width;
+        let page_rows = self.page_rows;
+        self.pages.iter().enumerate().filter_map(move |(pi, p)| {
+            if pi < full_pages {
+                Some((&p[..page_rows * width], page_rows))
+            } else if pi == full_pages && rem > 0 {
+                Some((&p[..rem * width], rem))
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Copy out as a dense `len×width` matrix (used by AOT marshalling).
+    pub fn to_mat(&self) -> crate::linalg::Mat {
+        let mut data = Vec::with_capacity(self.len * self.width);
+        for (chunk, _rows) in self.chunks() {
+            data.extend_from_slice(chunk);
+        }
+        crate::linalg::Mat::from_vec(self.len, self.width, data)
+    }
+
+    /// Copy out, zero-padded to `rows` (AOT shape buckets need fixed shapes).
+    pub fn to_mat_padded(&self, rows: usize) -> crate::linalg::Mat {
+        assert!(rows >= self.len);
+        let mut data = Vec::with_capacity(rows * self.width);
+        for (chunk, _r) in self.chunks() {
+            data.extend_from_slice(chunk);
+        }
+        data.resize(rows * self.width, 0.0);
+        crate::linalg::Mat::from_vec(rows, self.width, data)
+    }
+}
+
+/// Per-layer cache geometry (ranks differ per layer after rank selection).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerGeom {
+    pub k_width: usize,
+    pub v_width: usize,
+}
+
+/// Cache geometry for a model + projection set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheSpec {
+    pub n_kv_heads: usize,
+    pub layers: Vec<LayerGeom>,
+    pub page_tokens: usize,
+}
+
+impl CacheSpec {
+    /// Bytes per cached token across all layers/heads.
+    pub fn bytes_per_token(&self) -> usize {
+        self.n_kv_heads
+            * self
+                .layers
+                .iter()
+                .map(|l| (l.k_width + l.v_width) * 4)
+                .sum::<usize>()
+    }
+}
+
+/// One sequence's caches: `[layer][kv_head]` K and V paged buffers.
+#[derive(Debug)]
+pub struct SeqCache {
+    pub k: Vec<Vec<PagedBuf>>,
+    pub v: Vec<Vec<PagedBuf>>,
+    tokens: usize,
+}
+
+impl SeqCache {
+    fn new(spec: &CacheSpec) -> SeqCache {
+        let k = spec
+            .layers
+            .iter()
+            .map(|g| {
+                (0..spec.n_kv_heads)
+                    .map(|_| PagedBuf::new(g.k_width, spec.page_tokens))
+                    .collect()
+            })
+            .collect();
+        let v = spec
+            .layers
+            .iter()
+            .map(|g| {
+                (0..spec.n_kv_heads)
+                    .map(|_| PagedBuf::new(g.v_width, spec.page_tokens))
+                    .collect()
+            })
+            .collect();
+        SeqCache { k, v, tokens: 0 }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn allocated_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .flatten()
+            .chain(self.v.iter().flatten())
+            .map(|b| b.allocated_bytes())
+            .sum()
+    }
+}
+
+/// Unique sequence id (assigned by the router).
+pub type SeqId = u64;
+
+/// Errors surfaced to the coordinator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheError {
+    /// Admitting/growing this sequence would exceed the memory budget.
+    OverBudget { needed: u64, available: u64 },
+    UnknownSeq(SeqId),
+    DuplicateSeq(SeqId),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::OverBudget { needed, available } => {
+                write!(f, "cache over budget: need {needed} B, have {available} B")
+            }
+            CacheError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+            CacheError::DuplicateSeq(id) => write!(f, "duplicate sequence {id}"),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+/// The cache manager: owns every live sequence's compressed pages and the
+/// global byte accounting.
+pub struct KvCacheManager {
+    spec: CacheSpec,
+    budget_bytes: u64,
+    used_bytes: u64,
+    seqs: HashMap<SeqId, SeqCache>,
+    /// Worst-case byte reservations per sequence (admission control without
+    /// preemption: a sequence never exceeds its reservation unexpectedly).
+    reserved: HashMap<SeqId, u64>,
+    /// Peak usage high-water mark (reported by metrics).
+    peak_bytes: u64,
+}
+
+impl KvCacheManager {
+    pub fn new(spec: CacheSpec, budget_bytes: u64) -> KvCacheManager {
+        KvCacheManager {
+            spec,
+            budget_bytes,
+            used_bytes: 0,
+            seqs: HashMap::new(),
+            reserved: HashMap::new(),
+            peak_bytes: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &CacheSpec {
+        &self.spec
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn live_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Worst-case bytes to hold `n_tokens` of one sequence (page-rounded).
+    pub fn bytes_for_tokens(&self, n_tokens: usize) -> u64 {
+        let pages = n_tokens.div_ceil(self.spec.page_tokens);
+        (pages * self.spec.page_tokens * self.spec.bytes_per_token()) as u64
+    }
+
+    /// Unallocated remainder of all reservations (bytes promised but not yet
+    /// backed by pages).
+    pub fn outstanding_reserved(&self) -> u64 {
+        self.reserved
+            .iter()
+            .map(|(id, &res)| {
+                let alloc = self.seqs.get(id).map(|s| s.allocated_bytes() as u64).unwrap_or(0);
+                res.saturating_sub(alloc)
+            })
+            .sum()
+    }
+
+    /// Can a sequence expected to reach `n_tokens` be admitted right now?
+    /// Counts both live pages and outstanding reservations.
+    pub fn can_admit(&self, n_tokens: usize) -> bool {
+        self.used_bytes + self.outstanding_reserved() + self.bytes_for_tokens(n_tokens)
+            <= self.budget_bytes
+    }
+
+    /// Reserve worst-case bytes for a sequence expected to reach `n_tokens`.
+    pub fn reserve(&mut self, id: SeqId, n_tokens: usize) -> Result<(), CacheError> {
+        if !self.seqs.contains_key(&id) {
+            return Err(CacheError::UnknownSeq(id));
+        }
+        let need = self.bytes_for_tokens(n_tokens);
+        let committed = self.used_bytes + self.outstanding_reserved();
+        if committed + need > self.budget_bytes {
+            return Err(CacheError::OverBudget {
+                needed: need,
+                available: self.budget_bytes.saturating_sub(committed),
+            });
+        }
+        self.reserved.insert(id, need);
+        Ok(())
+    }
+
+    /// Register a new sequence (no pages allocated yet).
+    pub fn alloc(&mut self, id: SeqId) -> Result<(), CacheError> {
+        if self.seqs.contains_key(&id) {
+            return Err(CacheError::DuplicateSeq(id));
+        }
+        self.seqs.insert(id, SeqCache::new(&self.spec));
+        Ok(())
+    }
+
+    /// Append one token's compressed rows for one layer. `k_rows`/`v_rows`
+    /// are per-KV-head slices. Call once per layer, then `commit_token`.
+    pub fn append_layer(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        k_rows: &[&[f32]],
+        v_rows: &[&[f32]],
+    ) -> Result<(), CacheError> {
+        // Pre-compute the allocation cost to enforce the budget atomically.
+        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let mut cost = 0usize;
+        for h in 0..self.spec.n_kv_heads {
+            cost += seq.k[layer][h].next_row_cost() + seq.v[layer][h].next_row_cost();
+        }
+        // Growth inside this sequence's reservation is pre-approved; growth
+        // beyond it must fit next to everyone else's outstanding reservations.
+        let alloc = seq.allocated_bytes() as u64;
+        let remaining_res = self
+            .reserved
+            .get(&id)
+            .map(|&r| r.saturating_sub(alloc))
+            .unwrap_or(0);
+        let outstanding_after = self.outstanding_reserved() - remaining_res.min(cost as u64);
+        if self.used_bytes + cost as u64 + outstanding_after > self.budget_bytes {
+            return Err(CacheError::OverBudget {
+                needed: cost as u64,
+                available: self.budget_bytes.saturating_sub(self.used_bytes + outstanding_after),
+            });
+        }
+        let seq = self.seqs.get_mut(&id).unwrap();
+        let mut actual = 0usize;
+        for h in 0..self.spec.n_kv_heads {
+            actual += seq.k[layer][h].push_row(k_rows[h]);
+            actual += seq.v[layer][h].push_row(v_rows[h]);
+        }
+        debug_assert_eq!(actual, cost);
+        self.used_bytes += actual as u64;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        Ok(())
+    }
+
+    /// Mark one full token appended (all layers done).
+    pub fn commit_token(&mut self, id: SeqId) -> Result<usize, CacheError> {
+        let seq = self.seqs.get_mut(&id).ok_or(CacheError::UnknownSeq(id))?;
+        seq.tokens += 1;
+        Ok(seq.tokens)
+    }
+
+    /// Current token count of a sequence.
+    pub fn seq_tokens(&self, id: SeqId) -> Result<usize, CacheError> {
+        self.seqs
+            .get(&id)
+            .map(|s| s.tokens)
+            .ok_or(CacheError::UnknownSeq(id))
+    }
+
+    /// Immutable access to a sequence's buffers (attention reads).
+    pub fn seq(&self, id: SeqId) -> Result<&SeqCache, CacheError> {
+        self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))
+    }
+
+    /// Free a sequence, returning its bytes to the pool. Freeing twice is an
+    /// error (the coordinator owns the lifecycle).
+    pub fn free(&mut self, id: SeqId) -> Result<u64, CacheError> {
+        self.reserved.remove(&id);
+        let seq = self.seqs.remove(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let bytes = seq.allocated_bytes() as u64;
+        debug_assert!(bytes <= self.used_bytes);
+        self.used_bytes -= bytes;
+        Ok(bytes)
+    }
+
+    /// Invariant check: accounted bytes equal the sum over live sequences.
+    /// (Used by tests and debug assertions.)
+    pub fn verify_accounting(&self) -> bool {
+        let actual: usize = self.seqs.values().map(|s| s.allocated_bytes()).sum();
+        actual as u64 == self.used_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn spec2() -> CacheSpec {
+        CacheSpec {
+            n_kv_heads: 2,
+            layers: vec![
+                LayerGeom { k_width: 4, v_width: 6 },
+                LayerGeom { k_width: 3, v_width: 5 },
+            ],
+            page_tokens: 8,
+        }
+    }
+
+    fn push_token(mgr: &mut KvCacheManager, id: SeqId, val: f32) -> Result<(), CacheError> {
+        let spec = mgr.spec().clone();
+        for l in 0..spec.layers.len() {
+            let k: Vec<Vec<f32>> = (0..spec.n_kv_heads)
+                .map(|h| vec![val + h as f32; spec.layers[l].k_width])
+                .collect();
+            let v: Vec<Vec<f32>> = (0..spec.n_kv_heads)
+                .map(|h| vec![-val - h as f32; spec.layers[l].v_width])
+                .collect();
+            let krefs: Vec<&[f32]> = k.iter().map(|r| r.as_slice()).collect();
+            let vrefs: Vec<&[f32]> = v.iter().map(|r| r.as_slice()).collect();
+            mgr.append_layer(id, l, &krefs, &vrefs)?;
+        }
+        mgr.commit_token(id)?;
+        Ok(())
+    }
+
+    #[test]
+    fn paged_buf_roundtrip() {
+        let mut b = PagedBuf::new(3, 4);
+        for i in 0..11 {
+            let row = vec![i as f32; 3];
+            b.push_row(&row);
+        }
+        assert_eq!(b.len(), 11);
+        for i in 0..11 {
+            assert_eq!(b.row(i), &[i as f32; 3][..]);
+        }
+        // 3 pages of 4 rows.
+        assert_eq!(b.allocated_bytes(), 3 * 4 * 3 * 4);
+        let m = b.to_mat();
+        assert_eq!(m.shape(), (11, 3));
+        assert_eq!(m.row(10), &[10.0, 10.0, 10.0]);
+        let p = b.to_mat_padded(16);
+        assert_eq!(p.shape(), (16, 3));
+        assert_eq!(p.row(15), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn chunks_cover_rows_in_order() {
+        let mut b = PagedBuf::new(2, 4);
+        for i in 0..10 {
+            b.push_row(&[i as f32, i as f32]);
+        }
+        let mut seen = 0usize;
+        for (chunk, rows) in b.chunks() {
+            assert_eq!(chunk.len(), rows * 2);
+            for r in 0..rows {
+                assert_eq!(chunk[r * 2], (seen + r) as f32);
+            }
+            seen += rows;
+        }
+        assert_eq!(seen, 10);
+    }
+
+    #[test]
+    fn alloc_append_free_accounting() {
+        let mut mgr = KvCacheManager::new(spec2(), 1 << 20);
+        mgr.alloc(1).unwrap();
+        mgr.alloc(2).unwrap();
+        assert_eq!(mgr.alloc(1), Err(CacheError::DuplicateSeq(1)));
+        for t in 0..20 {
+            push_token(&mut mgr, 1, t as f32).unwrap();
+        }
+        for t in 0..5 {
+            push_token(&mut mgr, 2, t as f32).unwrap();
+        }
+        assert!(mgr.verify_accounting());
+        assert_eq!(mgr.seq_tokens(1).unwrap(), 20);
+        let freed = mgr.free(1).unwrap();
+        assert!(freed > 0);
+        assert!(mgr.verify_accounting());
+        assert_eq!(mgr.free(1), Err(CacheError::UnknownSeq(1)));
+        mgr.free(2).unwrap();
+        assert_eq!(mgr.used_bytes(), 0);
+        assert!(mgr.peak_bytes() > 0);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let spec = spec2();
+        // Budget for exactly one page-set of one token... compute: page cost =
+        // page_tokens * (k+v widths) * heads * 4 per layer — give enough for
+        // sequence 1's first page only.
+        let one_page_all_layers: u64 = spec
+            .layers
+            .iter()
+            .map(|g| (g.k_width + g.v_width) * spec.page_tokens * spec.n_kv_heads * 4)
+            .sum::<usize>() as u64;
+        let mut mgr = KvCacheManager::new(spec, one_page_all_layers);
+        mgr.alloc(1).unwrap();
+        // 8 tokens fit in the first pages.
+        for t in 0..8 {
+            push_token(&mut mgr, 1, t as f32).unwrap();
+        }
+        // 9th token needs new pages → over budget.
+        let err = push_token(&mut mgr, 1, 9.0);
+        assert!(matches!(err, Err(CacheError::OverBudget { .. })));
+        assert!(mgr.verify_accounting());
+        // After freeing, admission works again.
+        mgr.free(1).unwrap();
+        mgr.alloc(2).unwrap();
+        push_token(&mut mgr, 2, 0.0).unwrap();
+    }
+
+    #[test]
+    fn can_admit_estimates() {
+        let spec = spec2();
+        let bpt = spec.bytes_per_token();
+        let mut mgr = KvCacheManager::new(spec, (bpt * 64) as u64);
+        assert!(mgr.can_admit(64));
+        assert!(!mgr.can_admit(65));
+        mgr.alloc(1).unwrap();
+        for t in 0..16 {
+            push_token(&mut mgr, 1, t as f32).unwrap();
+        }
+        assert!(mgr.can_admit(32));
+        assert!(!mgr.can_admit(64));
+    }
+
+    #[test]
+    fn compressed_spec_is_smaller() {
+        // The point of the paper: compressed widths shrink bytes/token.
+        let full = CacheSpec {
+            n_kv_heads: 8,
+            layers: vec![LayerGeom { k_width: 64, v_width: 64 }; 8],
+            page_tokens: 16,
+        };
+        let comp = CacheSpec {
+            n_kv_heads: 8,
+            layers: vec![LayerGeom { k_width: 20, v_width: 24 }; 8],
+            page_tokens: 16,
+        };
+        let ratio = comp.bytes_per_token() as f64 / full.bytes_per_token() as f64;
+        assert!((ratio - 44.0 / 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_accounting_under_random_workload() {
+        forall("cache accounting invariant", 30, |g| {
+            let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(5, 60) {
+                let action = g.usize_in(0, 2);
+                match action {
+                    0 => {
+                        mgr.alloc(next_id).unwrap();
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let id = live[idx];
+                        let n = g.usize_in(1, 12);
+                        for t in 0..n {
+                            push_token(&mut mgr, id, t as f32).unwrap();
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let id = live.swap_remove(idx);
+                        mgr.free(id).unwrap();
+                    }
+                    _ => {}
+                }
+                assert!(mgr.verify_accounting(), "accounting broke");
+                assert!(mgr.used_bytes() <= mgr.budget_bytes());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_paged_rows_survive_roundtrip() {
+        forall("paged buffer row integrity", 40, |g| {
+            let width = g.usize_in(1, 16);
+            let page = g.usize_in(1, 16);
+            let n = g.usize_in(0, 100);
+            let mut b = PagedBuf::new(width, page);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(width, 1.0)).collect();
+            for r in &rows {
+                b.push_row(r);
+            }
+            for (i, r) in rows.iter().enumerate() {
+                assert_eq!(b.row(i), r.as_slice());
+            }
+            if n > 0 {
+                let m = b.to_mat();
+                assert_eq!(m.rows(), n);
+                assert_eq!(m.row(n - 1), rows[n - 1].as_slice());
+            }
+        });
+    }
+}

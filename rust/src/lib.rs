@@ -1,0 +1,46 @@
+//! # kqsvd — KV-cache compression with provable attention-fidelity guarantees
+//!
+//! A production-quality, three-layer (Rust coordinator / JAX model / Pallas
+//! kernel) reproduction of *KQ-SVD: Compressing the KV Cache with Provable
+//! Guarantees on Attention Fidelity* (Lesens, Rakhshan & Rabusseau, 2025).
+//!
+//! The library implements:
+//!
+//! * the paper's contribution — closed-form optimal low-rank factorization of
+//!   the attention score matrix `KQᵀ` ([`compress`]), plus the two baselines
+//!   it is compared against (K-SVD, Eigen) and the value–output extension;
+//! * the post-training calibration pipeline that learns per-(layer, head)
+//!   projections from a calibration corpus ([`calib`]);
+//! * a compressed KV-cache serving stack: paged cache manager ([`kvcache`]),
+//!   request router + continuous batcher + prefill/decode scheduler
+//!   ([`coordinator`]), engine ([`server`]);
+//! * every substrate that stack needs, built from scratch for the offline
+//!   environment: linear algebra incl. SVD ([`linalg`]), a LLaMA-style
+//!   transformer ([`model`]), a tokenizer + synthetic corpus ([`text`]),
+//!   JSON ([`jsonutil`]), CLI ([`cli`]), config ([`config`]), thread pool and
+//!   deterministic RNG ([`util`]);
+//! * the AOT bridge: HLO-text artifacts produced by `python/compile/aot.py`
+//!   (JAX + Pallas) executed from Rust via PJRT ([`runtime`]), with a
+//!   numerically cross-checked pure-Rust fallback ([`attn`]);
+//! * the evaluation harness regenerating the paper's figures and tables
+//!   ([`eval`], `benches/`).
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod attn;
+pub mod bench_support;
+pub mod calib;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod text;
+pub mod jsonutil;
+pub mod kvcache;
+pub mod linalg;
+pub mod util;

@@ -1,0 +1,136 @@
+//! Internal dense f64 matrix used by the QR/SVD decompositions.
+//!
+//! The public API of the library is f32 ([`super::Mat`]); decompositions run
+//! in f64 for stability (the paper's projections involve pseudo-inverses of
+//! ill-conditioned cache matrices) and convert back at the boundary.
+
+use super::Mat;
+
+/// Row-major f64 matrix (internal).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> DMat {
+        DMat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> DMat {
+        let mut m = DMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_mat(m: &Mat) -> DMat {
+        DMat {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.to_f64(),
+        }
+    }
+
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_f64(self.rows, self.cols, &self.data)
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> DMat {
+        let mut out = DMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &DMat) -> DMat {
+        assert_eq!(self.cols, other.rows, "DMat matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = DMat::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let av = self[(i, p)];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                let crow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &DMat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DMat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DMat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_mat() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let d = DMat::from_mat(&m);
+        assert_eq!(d.to_mat(), m);
+    }
+
+    #[test]
+    fn matmul_and_transpose() {
+        let a = DMat {
+            rows: 2,
+            cols: 3,
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let at = a.transpose();
+        let g = at.matmul(&a); // 3x3 Gram
+        assert_eq!(g.rows, 3);
+        assert!((g[(0, 0)] - 17.0).abs() < 1e-12); // 1+16
+        assert!((g[(2, 2)] - 45.0).abs() < 1e-12); // 9+36
+        assert!((g[(0, 1)] - g[(1, 0)]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,665 @@
+//! Dense row-major f32 matrix type and core operations.
+//!
+//! This is the workhorse numeric type of the whole stack: caches, weights and
+//! projections are all `Mat`. The design favors predictable memory layout
+//! (row-major, contiguous) and a small set of carefully optimized kernels:
+//!
+//! * `matmul` / `matmul_tn` / `matmul_nt` — blocked, threaded (global pool),
+//!   with an `ikj` inner ordering that autovectorizes well;
+//! * norms, transposes, row slicing and concatenation used by the
+//!   calibration aggregation path (`K = [K¹; K²; …]`, paper §3.3).
+//!
+//! Heavier decompositions (QR, SVD) live in sibling modules and run in f64
+//! internally for stability; `Mat` converts losslessly in and out.
+
+use crate::util::rng::Pcg64;
+use std::fmt;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            writeln!(f)?;
+            for r in 0..self.rows {
+                write!(f, "  [")?;
+                for c in 0..self.cols {
+                    write!(f, "{:9.4} ", self[(r, c)])?;
+                }
+                writeln!(f, "]")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// From a slice of rows.
+    pub fn from_rows(rows: &[&[f32]]) -> Mat {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Mat {
+            rows: rows.len(),
+            cols,
+            data,
+        }
+    }
+
+    /// i.i.d. N(0, std) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Random matrix with a decaying singular-value profile:
+    /// `A = U diag(s) Vᵀ` with `s_i = decay^i`, then scaled so ‖A‖_F = scale.
+    /// Used by tests and synthetic workloads to mimic the empirically
+    /// low-rank structure of real KV caches.
+    pub fn rand_low_rank(rows: usize, cols: usize, decay: f32, scale: f32, rng: &mut Pcg64) -> Mat {
+        let k = rows.min(cols);
+        let u = Mat::randn(rows, k, 1.0, rng).orthonormalize_cols();
+        let v = Mat::randn(cols, k, 1.0, rng).orthonormalize_cols();
+        let mut us = u;
+        for j in 0..k {
+            let s = decay.powi(j as i32);
+            for i in 0..rows {
+                us[(i, j)] *= s;
+            }
+        }
+        let mut a = us.matmul_nt(&v);
+        let f = a.frob_norm();
+        if f > 0.0 {
+            a.scale_inplace(scale / f);
+        }
+        a
+    }
+
+    /// Gram-Schmidt orthonormalization of columns (helper for test
+    /// constructions; not used on the hot path).
+    pub fn orthonormalize_cols(&self) -> Mat {
+        let mut q = self.clone();
+        for j in 0..q.cols {
+            for p in 0..j {
+                let mut dot = 0.0f64;
+                for i in 0..q.rows {
+                    dot += q[(i, j)] as f64 * q[(i, p)] as f64;
+                }
+                for i in 0..q.rows {
+                    q[(i, j)] -= (dot as f32) * q[(i, p)];
+                }
+            }
+            let mut norm = 0.0f64;
+            for i in 0..q.rows {
+                norm += (q[(i, j)] as f64).powi(2);
+            }
+            let norm = norm.sqrt() as f32;
+            if norm > 1e-12 {
+                for i in 0..q.rows {
+                    q[(i, j)] /= norm;
+                }
+            }
+        }
+        q
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Rows `[start, end)` as a new matrix.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Mat {
+        assert!(start <= end && end <= self.rows);
+        Mat {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Columns `[start, end)` as a new matrix.
+    pub fn slice_cols(&self, start: usize, end: usize) -> Mat {
+        assert!(start <= end && end <= self.cols);
+        let mut out = Mat::zeros(self.rows, end - start);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[start..end]);
+        }
+        out
+    }
+
+    /// Vertical concatenation `[self; other]` (used by the Eigen baseline and
+    /// GQA query stacking).
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vcat column mismatch");
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat {
+            rows: self.rows + other.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// Horizontal concatenation `[self other]` (used by the GQA value–output
+    /// stacking: `W = [W_1^O … W_m^O]`).
+    pub fn hcat_all(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let rows = mats[0].rows;
+        let cols: usize = mats.iter().map(|m| m.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let orow = out.row_mut(i);
+            let mut off = 0;
+            for m in mats {
+                assert_eq!(m.rows, rows, "hcat_all row mismatch");
+                orow[off..off + m.cols].copy_from_slice(m.row(i));
+                off += m.cols;
+            }
+        }
+        out
+    }
+
+    /// Vertical concatenation of many matrices.
+    pub fn vcat_all(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        let rows: usize = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            assert_eq!(m.cols, cols, "vcat_all column mismatch");
+            data.extend_from_slice(&m.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn frob_norm(&self) -> f32 {
+        self.frob_norm_sq().sqrt() as f32
+    }
+
+    /// Squared Frobenius norm in f64.
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// Scale in place.
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scaled(&self, s: f32) -> Mat {
+        let mut m = self.clone();
+        m.scale_inplace(s);
+        m
+    }
+
+    /// Relative squared Frobenius error ‖self − other‖²_F / ‖self‖²_F — the
+    /// paper's evaluation metric (§6.1 "Metrics").
+    pub fn rel_err(&self, approx: &Mat) -> f64 {
+        let denom = self.frob_norm_sq();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        self.sub(approx).frob_norm_sq() / denom
+    }
+
+    /// Maximum absolute entry difference.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// `self @ other` — blocked, threaded matmul.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {:?} @ {:?}",
+            self.shape(),
+            other.shape()
+        );
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        matmul_into(
+            &self.data,
+            &other.data,
+            &mut out.data,
+            m,
+            k,
+            n,
+        );
+        out
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        // (k x m)ᵀ=(m x k): out[m=cols(self), n=cols(other)]
+        let at = self.transpose();
+        at.matmul(other)
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.cols,
+            "matmul_nt shape mismatch: {:?} @ {:?}ᵀ",
+            self.shape(),
+            other.shape()
+        );
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        // out[i, j] = dot(self.row(i), other.row(j)) — both contiguous, so a
+        // direct dot-product kernel is the fastest layout here.
+        let a = &self.data;
+        let b = &other.data;
+        let out_ptr = UnsafeSend(out.data.as_mut_ptr());
+        crate::util::threadpool::parallel_for(m, move |lo, hi| {
+            let o = &out_ptr; // capture the Sync wrapper, not the raw field
+            for i in lo..hi {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for p in 0..k {
+                        acc += arow[p] * brow[p];
+                    }
+                    unsafe { *o.0.add(i * n + j) = acc };
+                }
+            }
+        });
+        out
+    }
+
+    /// Matrix–vector product `self @ v`.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                let mut acc = 0.0f32;
+                for p in 0..self.cols {
+                    acc += row[p] * v[p];
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Row-vector–matrix product `v @ self`.
+    pub fn vecmat(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                out[j] += vi * row[j];
+            }
+        }
+        out
+    }
+
+    /// Convert to an f64 buffer (for QR/SVD internals).
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+
+    /// Build from an f64 buffer.
+    pub fn from_f64(rows: usize, cols: usize, data: &[f64]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// True if any entry is NaN/inf.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Wrapper making a raw pointer Send for disjoint parallel writes.
+#[derive(Clone, Copy)]
+struct UnsafeSend<T>(T);
+unsafe impl<T> Send for UnsafeSend<T> {}
+unsafe impl<T> Sync for UnsafeSend<T> {}
+
+/// Blocked `C = A @ B` kernel over raw buffers. Threads over row blocks;
+/// the inner `ikj` loop keeps B rows streaming and autovectorizes.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let c_ptr = UnsafeSend(c.as_mut_ptr());
+    // Tune: rows per task. Small matrices run single-threaded.
+    if m * k * n < 64 * 64 * 64 {
+        matmul_rows(a, b, c, 0, m, k, n);
+        return;
+    }
+    crate::util::threadpool::parallel_for(m, move |lo, hi| {
+        let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
+        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0, m * n) };
+        matmul_rows(a, b, c_slice, lo, hi, k, n);
+    });
+}
+
+#[inline]
+fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], lo: usize, hi: usize, k: usize, n: usize) {
+    // ikj ordering with k-blocking.
+    const KB: usize = 256;
+    for i in lo..hi {
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        let arow = &a[i * k..(i + 1) * k];
+        for pb in (0..k).step_by(KB) {
+            let pe = (pb + KB).min(k);
+            for p in pb..pe {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0f64;
+                for p in 0..a.cols() {
+                    acc += a[(i, p)] as f64 * b[(p, j)] as f64;
+                }
+                c[(i, j)] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_small() {
+        let mut rng = Pcg64::new(1, 1);
+        let a = Mat::randn(7, 5, 1.0, &mut rng);
+        let b = Mat::randn(5, 9, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        let expect = naive_matmul(&a, &b);
+        assert!(c.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_matches_naive_threaded_path() {
+        let mut rng = Pcg64::new(2, 1);
+        let a = Mat::randn(128, 96, 1.0, &mut rng);
+        let b = Mat::randn(96, 100, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        let expect = naive_matmul(&a, &b);
+        assert!(c.max_abs_diff(&expect) < 1e-2);
+    }
+
+    #[test]
+    fn matmul_nt_and_tn_match_explicit_transpose() {
+        let mut rng = Pcg64::new(3, 1);
+        let a = Mat::randn(20, 12, 1.0, &mut rng);
+        let b = Mat::randn(15, 12, 1.0, &mut rng);
+        let nt = a.matmul_nt(&b);
+        let expect = a.matmul(&b.transpose());
+        assert!(nt.max_abs_diff(&expect) < 1e-4);
+
+        let c = Mat::randn(20, 7, 1.0, &mut rng);
+        let tn = a.matmul_tn(&c);
+        let expect = a.transpose().matmul(&c);
+        assert!(tn.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(4, 1);
+        let a = Mat::randn(9, 9, 1.0, &mut rng);
+        assert!(a.matmul(&Mat::eye(9)).max_abs_diff(&a) < 1e-6);
+        assert!(Mat::eye(9).matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(5, 1);
+        let a = Mat::randn(33, 65, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn vcat_and_slices() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0]]);
+        let c = a.vcat(&b);
+        assert_eq!(c.shape(), (3, 2));
+        assert_eq!(c.row(2), &[5.0, 6.0]);
+        assert_eq!(c.slice_rows(1, 3).row(0), &[3.0, 4.0]);
+        let d = Mat::vcat_all(&[&a, &b, &a]);
+        assert_eq!(d.rows(), 5);
+        assert_eq!(c.slice_cols(1, 2).col(0), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn frob_norm_and_rel_err() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-6);
+        assert!(a.rel_err(&a) < 1e-12);
+        let zero = Mat::zeros(2, 2);
+        assert!((a.rel_err(&zero) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matvec_vecmat() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(a.vecmat(&[1.0, 0.0, 1.0]), vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn orthonormalize_cols_gives_orthonormal() {
+        let mut rng = Pcg64::new(6, 1);
+        let q = Mat::randn(40, 8, 1.0, &mut rng).orthonormalize_cols();
+        let g = q.matmul_tn(&q);
+        assert!(g.max_abs_diff(&Mat::eye(8)) < 1e-4);
+    }
+
+    #[test]
+    fn rand_low_rank_has_decaying_spectrum() {
+        let mut rng = Pcg64::new(7, 1);
+        let a = Mat::rand_low_rank(64, 16, 0.5, 10.0, &mut rng);
+        assert!((a.frob_norm() - 10.0).abs() < 0.1);
+        // The first column-energy should dominate after SVD; we check
+        // indirectly: rank-4 projection captures most energy. Done in svd
+        // tests; here just sanity.
+        assert!(!a.has_non_finite());
+    }
+
+    #[test]
+    fn prop_matmul_associativity_with_identityish() {
+        forall("A(BC) = (AB)C on small mats", 30, |g| {
+            let m = g.usize_in(1, 8);
+            let k = g.usize_in(1, 8);
+            let n = g.usize_in(1, 8);
+            let p = g.usize_in(1, 8);
+            let a = Mat::from_vec(m, k, g.normal_vec(m * k, 1.0));
+            let b = Mat::from_vec(k, n, g.normal_vec(k * n, 1.0));
+            let c = Mat::from_vec(n, p, g.normal_vec(n * p, 1.0));
+            let left = a.matmul(&b).matmul(&c);
+            let right = a.matmul(&b.matmul(&c));
+            assert!(left.max_abs_diff(&right) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn prop_frob_triangle_inequality() {
+        forall("triangle inequality", 50, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 10);
+            let a = Mat::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let b = Mat::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let lhs = a.add(&b).frob_norm() as f64;
+            let rhs = a.frob_norm() as f64 + b.frob_norm() as f64;
+            assert!(lhs <= rhs + 1e-4);
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear algebra built from scratch (no LAPACK/BLAS offline):
+//! f32 [`Mat`] with threaded blocked matmul, f64 Householder QR, one-sided
+//! Jacobi SVD with QR preconditioning, and the Moore–Penrose pseudo-inverse.
+//!
+//! These are the primitives the paper's closed-form solutions are made of:
+//! every method in [`crate::compress`] reduces to thin SVDs of `T×d` cache
+//! matrices plus small `d×d` products (paper §4.3).
+
+pub mod dmat;
+pub mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use mat::{matmul_into, Mat};
+pub use svd::{pinv, Svd};

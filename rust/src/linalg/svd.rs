@@ -1,0 +1,440 @@
+//! Singular value decomposition.
+//!
+//! Strategy (no LAPACK in the offline environment):
+//!
+//! * tall `m×n` (m ≥ n): Householder QR preconditioning (`O(mn²)`) followed by
+//!   **one-sided Jacobi** on the `n×n` factor — numerically robust, simple,
+//!   and accurate to ~1e-13 relative; the sizes the paper needs (`d ≤ 128`)
+//!   converge in a handful of sweeps.
+//! * wide `m×n` (m < n): SVD of the transpose, swap U/V.
+//!
+//! The public [`Svd`] is *thin*: `U (m×k), s (k), Vᵀ (k×n)` with
+//! `k = min(m,n)`, singular values sorted descending. This is exactly the
+//! form the paper's closed-form solutions consume (Theorems 2/3).
+
+use super::dmat::DMat;
+use super::qr::qr_thin;
+use super::Mat;
+
+/// Thin SVD result: `A ≈ U diag(s) Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// Left singular vectors, `m×k`.
+    pub u: Mat,
+    /// Singular values, descending, length `k`.
+    pub s: Vec<f64>,
+    /// Right singular vectors transposed, `k×n`.
+    pub vt: Mat,
+}
+
+impl Svd {
+    /// Compute the thin SVD of `a`.
+    pub fn compute(a: &Mat) -> Svd {
+        let (m, n) = a.shape();
+        assert!(m > 0 && n > 0, "SVD of empty matrix");
+        if m >= n {
+            let d = DMat::from_mat(a);
+            let (u, s, v) = svd_tall(&d);
+            Svd {
+                u: u.to_mat(),
+                s,
+                vt: v.transpose().to_mat(),
+            }
+        } else {
+            // A = (Aᵀ)ᵀ: SVD(Aᵀ) = U' S V'ᵀ  ⇒  A = V' S U'ᵀ.
+            let d = DMat::from_mat(&a.transpose());
+            let (u, s, v) = svd_tall(&d);
+            Svd {
+                u: v.to_mat(),
+                s,
+                vt: u.transpose().to_mat(),
+            }
+        }
+    }
+
+    /// Number of retained singular triplets.
+    pub fn k(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Truncate to rank `r` (keeps the top-r triplets).
+    pub fn truncate(&self, r: usize) -> Svd {
+        let r = r.min(self.k());
+        Svd {
+            u: self.u.slice_cols(0, r),
+            s: self.s[..r].to_vec(),
+            vt: self.vt.slice_rows(0, r),
+        }
+    }
+
+    /// Reconstruct `U diag(s) Vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let mut us = self.u.clone();
+        for j in 0..self.k() {
+            let sj = self.s[j] as f32;
+            for i in 0..us.rows() {
+                us[(i, j)] *= sj;
+            }
+        }
+        us.matmul(&self.vt)
+    }
+
+    /// Top-r left singular vectors as an `m×r` matrix (paper's Û).
+    pub fn u_top(&self, r: usize) -> Mat {
+        self.u.slice_cols(0, r.min(self.k()))
+    }
+
+    /// Top-r right singular vectors as an `n×r` matrix (paper's V̂).
+    pub fn v_top(&self, r: usize) -> Mat {
+        self.vt.slice_rows(0, r.min(self.k())).transpose()
+    }
+
+    /// Numerical rank with relative tolerance `rcond` (vs the largest σ).
+    pub fn rank(&self, rcond: f64) -> usize {
+        let s0 = self.s.first().copied().unwrap_or(0.0);
+        if s0 == 0.0 {
+            return 0;
+        }
+        self.s.iter().take_while(|&&x| x > rcond * s0).count()
+    }
+
+    /// Sum of squared singular values beyond index `r` — the optimal rank-r
+    /// approximation error (Eckart–Young), i.e. the paper's `opt`.
+    pub fn tail_energy(&self, r: usize) -> f64 {
+        self.s.iter().skip(r).map(|x| x * x).sum()
+    }
+
+    /// Total spectral energy Σσ².
+    pub fn total_energy(&self) -> f64 {
+        self.s.iter().map(|x| x * x).sum()
+    }
+}
+
+/// SVD of a tall (m ≥ n) f64 matrix via QR + one-sided Jacobi.
+/// Returns (U m×n, s n, V n×n) with s descending.
+fn svd_tall(a: &DMat) -> (DMat, Vec<f64>, DMat) {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    if m > n {
+        let qr = qr_thin(a);
+        let (ur, s, v) = jacobi_svd_square(&qr.r);
+        (qr.q.matmul(&ur), s, v)
+    } else {
+        jacobi_svd_square(a)
+    }
+}
+
+/// One-sided Jacobi SVD of a square n×n matrix.
+/// Returns (U n×n, s n, V n×n), s descending, zero singular values paired
+/// with orthonormal completion columns in U.
+fn jacobi_svd_square(a: &DMat) -> (DMat, Vec<f64>, DMat) {
+    let n = a.cols;
+    let mut w = a.clone(); // columns evolve into U·Σ
+    let mut v = DMat::eye(n);
+    let tol = 1e-14;
+    let max_sweeps = 60;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Column inner products.
+                let mut alpha = 0.0f64;
+                let mut beta = 0.0f64;
+                let mut gamma = 0.0f64;
+                for i in 0..n {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    alpha += wp * wp;
+                    beta += wq * wq;
+                    gamma += wp * wq;
+                }
+                if alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                let limit = gamma.abs() / (alpha * beta).sqrt();
+                off = off.max(limit);
+                if limit <= tol {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off <= tol {
+            break;
+        }
+    }
+
+    // Extract singular values and U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..n).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let mut u = DMat::zeros(n, n);
+    let mut vv = DMat::zeros(n, n);
+    let mut s = vec![0.0f64; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        s[new_j] = norms[old_j];
+        for i in 0..n {
+            vv[(i, new_j)] = v[(i, old_j)];
+        }
+        if norms[old_j] > 1e-300 {
+            for i in 0..n {
+                u[(i, new_j)] = w[(i, old_j)] / norms[old_j];
+            }
+        }
+    }
+    // Complete U's null columns (zero σ) to an orthonormal basis via
+    // Gram–Schmidt against existing columns, so UᵀU = I holds exactly.
+    complete_orthonormal(&mut u, &s);
+    (u, s, vv)
+}
+
+/// Replace columns of `u` whose singular value is (near) zero with vectors
+/// orthonormal to the rest.
+fn complete_orthonormal(u: &mut DMat, s: &[f64]) {
+    let n = u.rows;
+    let s0 = s.first().copied().unwrap_or(0.0);
+    let thresh = s0 * 1e-300; // only truly-zero columns (from exact zero σ)
+    for j in 0..u.cols {
+        let col_norm: f64 = (0..n).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+        if s[j] > thresh && col_norm > 0.5 {
+            continue; // healthy column
+        }
+        // Find a basis vector with small projection onto existing columns.
+        'candidates: for cand in 0..n {
+            let mut vcol = vec![0.0f64; n];
+            vcol[cand] = 1.0;
+            // Orthogonalize against all healthy columns (twice for stability).
+            for _ in 0..2 {
+                for p in 0..u.cols {
+                    if p == j {
+                        continue;
+                    }
+                    let dot: f64 = (0..n).map(|i| vcol[i] * u[(i, p)]).sum();
+                    for i in 0..n {
+                        vcol[i] -= dot * u[(i, p)];
+                    }
+                }
+            }
+            let norm: f64 = vcol.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-8 {
+                for i in 0..n {
+                    u[(i, j)] = vcol[i] / norm;
+                }
+                break 'candidates;
+            }
+        }
+    }
+}
+
+/// Moore–Penrose pseudo-inverse via the SVD, with relative cutoff `rcond`.
+///
+/// `K⁺ = V Σ⁻¹ Uᵀ` over singular values above `rcond·σ₁` (paper §4.3 uses
+/// exactly this construction for `A = K⁺Û`).
+pub fn pinv(a: &Mat, rcond: f64) -> Mat {
+    let svd = Svd::compute(a);
+    let s0 = svd.s.first().copied().unwrap_or(0.0);
+    let cutoff = s0 * rcond;
+    let k = svd.s.iter().take_while(|&&x| x > cutoff).count();
+    // V_k Σ_k⁻¹ U_kᵀ : (n×k)(k×k)(k×m)
+    let vk = svd.v_top(k); // n×k
+    let uk = svd.u_top(k); // m×k
+    let mut vs = vk;
+    for j in 0..k {
+        let inv = (1.0 / svd.s[j]) as f32;
+        for i in 0..vs.rows() {
+            vs[(i, j)] *= inv;
+        }
+    }
+    vs.matmul(&uk.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    fn check_svd(a: &Mat, tol: f32) {
+        let svd = Svd::compute(a);
+        let (m, n) = a.shape();
+        let k = m.min(n);
+        assert_eq!(svd.u.shape(), (m, k));
+        assert_eq!(svd.vt.shape(), (k, n));
+        assert_eq!(svd.s.len(), k);
+        // Descending.
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "not sorted: {:?}", svd.s);
+        }
+        // Non-negative.
+        assert!(svd.s.iter().all(|&x| x >= 0.0));
+        // Reconstruction.
+        let rec = svd.reconstruct();
+        assert!(
+            a.max_abs_diff(&rec) < tol,
+            "reconstruction err {} for {m}x{n}",
+            a.max_abs_diff(&rec)
+        );
+        // Orthonormality.
+        let utu = svd.u.matmul_tn(&svd.u);
+        assert!(utu.max_abs_diff(&Mat::eye(k)) < tol, "UᵀU ≠ I");
+        let vvt = svd.vt.matmul_nt(&svd.vt);
+        assert!(vvt.max_abs_diff(&Mat::eye(k)) < tol, "VᵀV ≠ I");
+    }
+
+    #[test]
+    fn svd_small_known() {
+        // Diagonal matrix: singular values are |entries| sorted.
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, -4.0]]);
+        let svd = Svd::compute(&a);
+        assert!((svd.s[0] - 4.0).abs() < 1e-10);
+        assert!((svd.s[1] - 3.0).abs() < 1e-10);
+        check_svd(&a, 1e-5);
+    }
+
+    #[test]
+    fn svd_random_shapes() {
+        let mut rng = Pcg64::new(1, 1);
+        for (m, n) in [(1, 1), (4, 4), (16, 8), (8, 16), (100, 12), (12, 100), (64, 64)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            check_svd(&a, 2e-4);
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        let mut rng = Pcg64::new(2, 1);
+        let u = Mat::randn(30, 3, 1.0, &mut rng);
+        let v = Mat::randn(10, 3, 1.0, &mut rng);
+        let a = u.matmul_nt(&v);
+        let svd = Svd::compute(&a);
+        check_svd(&a, 1e-3);
+        // f32 inputs put the noise floor near 1e-7·σ₁; rank detection must use
+        // an rcond above it.
+        assert_eq!(svd.rank(1e-4), 3);
+        // Rank-3 truncation reconstructs exactly.
+        let rec3 = svd.truncate(3).reconstruct();
+        assert!(a.max_abs_diff(&rec3) < 1e-3);
+    }
+
+    #[test]
+    fn svd_zero_matrix() {
+        let a = Mat::zeros(5, 3);
+        let svd = Svd::compute(&a);
+        assert!(svd.s.iter().all(|&x| x == 0.0));
+        assert_eq!(svd.rank(1e-10), 0);
+        check_svd(&a, 1e-6);
+    }
+
+    #[test]
+    fn eckart_young_truncation_is_optimal_vs_random() {
+        // ‖A − A_r‖ from the SVD must beat any random rank-r approximation.
+        let mut rng = Pcg64::new(3, 1);
+        let a = Mat::rand_low_rank(40, 12, 0.7, 10.0, &mut rng);
+        let svd = Svd::compute(&a);
+        let r = 4;
+        let best = a.sub(&svd.truncate(r).reconstruct()).frob_norm_sq();
+        // Tail energy identity.
+        assert!((best - svd.tail_energy(r)).abs() < 1e-3 * svd.total_energy());
+        for trial in 0..5 {
+            let mut rng2 = Pcg64::new(100 + trial, 1);
+            let x = Mat::randn(40, r, 1.0, &mut rng2);
+            let y = Mat::randn(12, r, 1.0, &mut rng2);
+            let approx = x.matmul_nt(&y);
+            let err = a.sub(&approx).frob_norm_sq();
+            assert!(err >= best - 1e-6);
+        }
+    }
+
+    #[test]
+    fn pinv_properties() {
+        let mut rng = Pcg64::new(4, 1);
+        // Full-rank tall matrix: A⁺A = I.
+        let a = Mat::randn(20, 6, 1.0, &mut rng);
+        let ap = pinv(&a, 1e-12);
+        assert_eq!(ap.shape(), (6, 20));
+        let apa = ap.matmul(&a);
+        assert!(apa.max_abs_diff(&Mat::eye(6)) < 1e-3);
+        // A A⁺ is the projector onto range(A): (AA⁺)² = AA⁺, symmetric.
+        let aap = a.matmul(&ap);
+        let proj2 = aap.matmul(&aap);
+        assert!(proj2.max_abs_diff(&aap) < 1e-3);
+        assert!(aap.max_abs_diff(&aap.transpose()) < 1e-3);
+    }
+
+    #[test]
+    fn pinv_rank_deficient_penrose_conditions() {
+        let mut rng = Pcg64::new(5, 1);
+        let u = Mat::randn(15, 2, 1.0, &mut rng);
+        let v = Mat::randn(8, 2, 1.0, &mut rng);
+        let a = u.matmul_nt(&v);
+        // rcond above the f32 noise floor so noise directions are not inverted.
+        let ap = pinv(&a, 1e-4);
+        // Penrose 1: A A⁺ A = A.
+        let a1 = a.matmul(&ap).matmul(&a);
+        assert!(a1.max_abs_diff(&a) < 1e-3);
+        // Penrose 2: A⁺ A A⁺ = A⁺.
+        let a2 = ap.matmul(&a).matmul(&ap);
+        assert!(a2.max_abs_diff(&ap) < 1e-3);
+    }
+
+    #[test]
+    fn singular_values_match_frobenius() {
+        let mut rng = Pcg64::new(6, 1);
+        let a = Mat::randn(25, 10, 1.0, &mut rng);
+        let svd = Svd::compute(&a);
+        assert!(((svd.total_energy() - a.frob_norm_sq()) / a.frob_norm_sq()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn prop_svd_reconstruction_random() {
+        forall("SVD reconstructs", 25, |g| {
+            let m = g.usize_in(1, 30);
+            let n = g.usize_in(1, 30);
+            let a = Mat::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            check_svd(&a, 5e-4);
+        });
+    }
+
+    #[test]
+    fn prop_truncation_error_equals_tail_energy() {
+        forall("Eckart-Young tail energy", 20, |g| {
+            let m = 10 + g.usize_in(0, 20);
+            let n = g.usize_in(2, 10);
+            let a = Mat::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let svd = Svd::compute(&a);
+            let r = g.usize_in(1, n);
+            let err = a.sub(&svd.truncate(r).reconstruct()).frob_norm_sq();
+            let tail = svd.tail_energy(r);
+            assert!(
+                (err - tail).abs() <= 1e-5 * svd.total_energy().max(1e-12),
+                "err={err} tail={tail}"
+            );
+        });
+    }
+
+    #[test]
+    fn svd_of_tall_skinny_paper_shape() {
+        // Representative calibration-cache shape: T×d with T ≫ d.
+        let mut rng = Pcg64::new(7, 1);
+        let a = Mat::rand_low_rank(2048, 32, 0.8, 50.0, &mut rng);
+        check_svd(&a, 2e-3);
+    }
+}

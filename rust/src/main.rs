@@ -1,0 +1,242 @@
+//! `kqsvd` — launcher CLI for the KQ-SVD serving stack.
+//!
+//! Subcommands:
+//!   info        — model zoo + environment summary
+//!   calibrate   — run the §3.3 calibration phase, save projection artifacts
+//!   eval-fig1   — regenerate Figure 1 (method comparison per model)
+//!   eval-fig2   — regenerate Figure 2 (unbalance sweep)
+//!   generate    — run one prompt through the compressed engine
+//!   serve       — threaded serving demo over a synthetic request stream
+//!
+//! Common flags: --preset, --method, --backend, --seed, --epsilon,
+//! --paper-scale, --calib-seqs, --calib-len, --eval-seqs, --run-dir.
+
+use kqsvd::bench_support::{f as fnum, Table};
+use kqsvd::cli::Args;
+use kqsvd::config::{preset, Config, Method, ZOO};
+use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::eval::{figure1_for_model, figure2_for_model};
+use kqsvd::model::Transformer;
+use kqsvd::server::build_engine;
+use kqsvd::text::{ByteTokenizer, Corpus};
+use kqsvd::util::stats::fmt_bytes;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("info") | None => cmd_info(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("eval-fig1") => cmd_fig1(&args),
+        Some("eval-fig2") => cmd_fig2(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            eprintln!("usage: kqsvd <info|calibrate|eval-fig1|eval-fig2|generate|serve> [flags]");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        Config::load(std::path::Path::new(path)).map_err(anyhow::Error::msg)?
+    } else {
+        let preset_name = args.str_or("preset", "mha-small");
+        Config::from_preset(&preset_name).map_err(anyhow::Error::msg)?
+    };
+    cfg.apply_overrides(args);
+    Ok(cfg)
+}
+
+fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+    println!("kqsvd — KQ-SVD KV-cache compression (Rust + JAX + Pallas reproduction)\n");
+    println!("model zoo (paper-analog evaluation set):");
+    let mut t = Table::new(&["preset", "layers", "d_model", "heads", "kv_heads", "group", "params"]);
+    for name in ZOO.iter().chain(["test-tiny", "test-tiny-gqa"].iter()) {
+        let m = preset(name).unwrap();
+        t.row(&[
+            m.name.clone(),
+            m.n_layers.to_string(),
+            m.d_model.to_string(),
+            m.n_heads.to_string(),
+            m.n_kv_heads.to_string(),
+            m.group_size().to_string(),
+            format!("{:.1}M", m.n_params() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    println!("\nmethods: none (exact) | ksvd | eigen | kqsvd (this paper)");
+    println!("backends: rust (online-softmax) | pjrt (AOT Pallas artifacts)");
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "calibrating {} / {} ({} seqs × {} tokens, ε={})",
+        cfg.model.name, cfg.method.name(), cfg.calib.n_calib_seqs, cfg.calib.calib_seq_len, cfg.calib.epsilon
+    );
+    let engine = build_engine(&cfg)?; // builds + caches weights and projections
+    let mut t = Table::new(&["layer", "r_key", "r_value"]);
+    for (li, lp) in engine.proj.layers.iter().enumerate() {
+        t.row(&[
+            li.to_string(),
+            lp.ranks.r_key.to_string(),
+            lp.ranks.r_value.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "cache: {} per token compressed vs {} exact (ratio {:.3}); artifacts in {}",
+        fmt_bytes(engine.proj.bytes_per_token() as u64),
+        fmt_bytes(engine.proj.uncompressed_bytes_per_token(&cfg.model) as u64),
+        engine.proj.compression_ratio(&cfg.model),
+        cfg.run_dir,
+    );
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
+    cfg.apply_overrides(args);
+    let calib = cfg.calib.clone();
+    println!(
+        "Figure 1 — relative errors per method ({} calib seqs × {}, {} eval seqs × {}, ε={})",
+        calib.n_calib_seqs, calib.calib_seq_len, calib.n_eval_seqs, calib.eval_seq_len, calib.epsilon
+    );
+    let mut bottom = Table::new(&["model", "method", "K", "Q", "V", "KQt", "output"]);
+    let mut top = Table::new(&["model", "method", "layer", "output_err"]);
+    for name in ZOO {
+        let model = kqsvd::eval::model_for(name);
+        let corpus = Corpus::new(model.cfg.vocab_size, calib.seed);
+        let (results, ranks) = figure1_for_model(&model, &corpus, &calib);
+        println!(
+            "\n== {name} (key ranks per layer: {:?})",
+            ranks.iter().map(|r| r.r_key).collect::<Vec<_>>()
+        );
+        for r in &results {
+            bottom.row(&[
+                name.to_string(),
+                r.method.name().to_string(),
+                fnum(r.components.k, 4),
+                fnum(r.components.q, 4),
+                fnum(r.components.v, 4),
+                fnum(r.components.scores, 4),
+                fnum(r.components.output, 4),
+            ]);
+            for (li, e) in r.per_layer_output.iter().enumerate() {
+                top.row(&[
+                    name.to_string(),
+                    r.method.name().to_string(),
+                    li.to_string(),
+                    fnum(*e, 5),
+                ]);
+            }
+        }
+    }
+    println!("\nFigure 1 (bottom): mean component errors");
+    bottom.print();
+    let p1 = bottom.write_csv("fig1_components.csv")?;
+    let p2 = top.write_csv("fig1_per_layer.csv")?;
+    println!("wrote {} and {}", p1.display(), p2.display());
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = Config::from_preset(&args.str_or("preset", "mha-small")).map_err(anyhow::Error::msg)?;
+    cfg.apply_overrides(args);
+    let betas: Vec<f32> = args
+        .f64_list_or("betas", &[1.0, 2.0, 5.0, 10.0])
+        .into_iter()
+        .map(|b| b as f32)
+        .collect();
+    println!(
+        "Figure 2 — output error vs unbalance β on {} (K·β, Q/β)",
+        cfg.model.name
+    );
+    let model = Transformer::init(cfg.model.clone());
+    let corpus = Corpus::new(cfg.model.vocab_size, cfg.calib.seed);
+    let sweep = figure2_for_model(&model, &corpus, &cfg.calib, &betas);
+    let mut t = Table::new(&["beta", "ksvd", "eigen", "kqsvd"]);
+    for (beta, row) in &sweep {
+        let get = |m: Method| row.iter().find(|(mm, _)| *mm == m).unwrap().1;
+        t.row(&[
+            format!("{beta}"),
+            fnum(get(Method::KSvd), 5),
+            fnum(get(Method::Eigen), 5),
+            fnum(get(Method::KqSvd), 5),
+        ]);
+    }
+    t.print();
+    let p = t.write_csv("fig2_unbalance.csv")?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let prompt_text = args.str_or("prompt", "the key to attention is");
+    let max_new = args.usize_or("max-new", 32);
+    let tok = ByteTokenizer;
+    let mut prompt = tok.encode(&prompt_text, true, false);
+    // Clamp into the model vocab (synthetic models have small vocabularies).
+    for t in prompt.iter_mut() {
+        *t %= cfg.model.vocab_size as u32;
+    }
+    println!(
+        "generate: model={} method={} backend={} prompt={prompt_text:?} ({} tokens)",
+        cfg.model.name, cfg.method.name(), cfg.serve.backend, prompt.len()
+    );
+    let mut engine = build_engine(&cfg)?;
+    let mut router = Router::new(BatcherConfig::from(&cfg.serve));
+    router.submit(&engine, Request::new(0, prompt, max_new)).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let done = router.run_offline(&mut engine)?;
+    let c = &done[0];
+    println!("tokens: {:?}", c.tokens);
+    println!("text:   {:?}", tok.decode(&c.tokens));
+    println!(
+        "ttft {:.2} ms · tpot {:.2} ms · e2e {:.2} ms · cache {} per token",
+        c.ttft_s * 1e3,
+        c.tpot_s * 1e3,
+        c.e2e_s * 1e3,
+        fmt_bytes(engine.cache_bytes_per_token() as u64),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let n_requests = args.usize_or("requests", 32);
+    let prompt_len = args.usize_or("prompt-len", 64);
+    let gen_len = args.usize_or("gen-len", 32);
+    println!(
+        "serve demo: {} requests (prompt {prompt_len}, gen {gen_len}) on {}/{} backend={}",
+        n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend
+    );
+    let engine = build_engine(&cfg)?;
+    let corpus = Corpus::new(cfg.model.vocab_size, 1234);
+    let router = Router::new(BatcherConfig::from(&cfg.serve));
+    let metrics = router.metrics.clone();
+    let (tx, rx, handle) = router.serve(engine);
+    for i in 0..n_requests {
+        let prompt = corpus.sequence(kqsvd::text::Split::Validation, 1000 + i as u64, prompt_len);
+        tx.send(Request::new(i as u64, prompt, gen_len)).unwrap();
+    }
+    drop(tx);
+    let done: Vec<_> = rx.iter().collect();
+    handle.join().expect("engine thread")?;
+    println!("completed {}/{} requests\n", done.len(), n_requests);
+    println!("{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,434 @@
+//! Transformer forward pass: full-sequence (with cache capture for
+//! calibration) and incremental exact decode (the uncompressed serving
+//! baseline).
+//!
+//! Architecture = LLaMA-family decoder: pre-RMSNorm, RoPE on q/k, causal
+//! attention with optional grouped KV heads, SwiGLU MLP, tied LM head.
+//! Caches captured here are *post-RoPE* — exactly what attention consumes
+//! and what the paper's methods compress.
+
+use super::ops::{rmsnorm, softmax_inplace, swiglu, RopeTable};
+use super::weights::ModelWeights;
+use crate::config::ModelConfig;
+use crate::linalg::Mat;
+
+/// Per-layer attention caches, split per head.
+#[derive(Debug, Clone)]
+pub struct LayerCaches {
+    /// Post-RoPE key cache per KV head: `T×d`.
+    pub k: Vec<Mat>,
+    /// Value cache per KV head: `T×d`.
+    pub v: Vec<Mat>,
+    /// Post-RoPE query cache per *query* head: `T×d`.
+    pub q: Vec<Mat>,
+}
+
+/// Caches for every layer of one forward pass.
+#[derive(Debug, Clone)]
+pub struct CacheCapture {
+    pub layers: Vec<LayerCaches>,
+}
+
+/// The model: config + weights + precomputed RoPE tables.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub weights: ModelWeights,
+    rope: RopeTable,
+}
+
+impl Transformer {
+    pub fn new(cfg: ModelConfig, weights: ModelWeights) -> Transformer {
+        let rope = RopeTable::new(cfg.d_head(), cfg.max_seq, cfg.rope_theta);
+        Transformer { cfg, weights, rope }
+    }
+
+    /// Initialize from config (deterministic seeded weights).
+    pub fn init(cfg: ModelConfig) -> Transformer {
+        let weights = ModelWeights::init(&cfg);
+        Transformer::new(cfg, weights)
+    }
+
+    pub fn rope(&self) -> &RopeTable {
+        &self.rope
+    }
+
+    /// Full-sequence forward. Returns `T×vocab` logits; when `capture` is
+    /// true, also returns per-layer/per-head post-RoPE caches.
+    pub fn forward(&self, tokens: &[u32], capture: bool) -> (Mat, Option<CacheCapture>) {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        assert!(t > 0 && t <= cfg.max_seq, "sequence length {t} out of range");
+        let d = cfg.d_model;
+        let dh = cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // Embedding lookup.
+        let mut x = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            assert!((tok as usize) < cfg.vocab_size, "token {tok} out of vocab");
+            x.row_mut(i)
+                .copy_from_slice(self.weights.embed.row(tok as usize));
+        }
+
+        let mut captured = capture.then(|| CacheCapture { layers: Vec::new() });
+
+        for layer in &self.weights.layers {
+            // ---- attention block ----
+            let xn = rmsnorm(&x, &layer.attn_norm);
+            let q_all = xn.matmul(&layer.wq); // T×(h·dh)
+            let k_all = xn.matmul(&layer.wk); // T×(h_kv·dh)
+            let v_all = xn.matmul(&layer.wv);
+
+            // Split per head + RoPE.
+            let mut q_heads: Vec<Mat> = (0..cfg.n_heads)
+                .map(|h| q_all.slice_cols(h * dh, (h + 1) * dh))
+                .collect();
+            let mut k_heads: Vec<Mat> = (0..cfg.n_kv_heads)
+                .map(|h| k_all.slice_cols(h * dh, (h + 1) * dh))
+                .collect();
+            let v_heads: Vec<Mat> = (0..cfg.n_kv_heads)
+                .map(|h| v_all.slice_cols(h * dh, (h + 1) * dh))
+                .collect();
+            for qh in &mut q_heads {
+                self.rope.apply_mat(qh, 0);
+            }
+            for kh in &mut k_heads {
+                self.rope.apply_mat(kh, 0);
+            }
+
+            // Causal attention per query head.
+            let mut attn_out = Mat::zeros(t, cfg.n_heads * dh);
+            let group = cfg.group_size();
+            for (h, qh) in q_heads.iter().enumerate() {
+                let kv = h / group;
+                let mut scores = qh.matmul_nt(&k_heads[kv]); // T×T
+                scores.scale_inplace(scale);
+                for i in 0..t {
+                    let row = scores.row_mut(i);
+                    for rj in row.iter_mut().skip(i + 1) {
+                        *rj = f32::NEG_INFINITY;
+                    }
+                    softmax_inplace(&mut row[..]);
+                }
+                let oh = scores.matmul(&v_heads[kv]); // T×dh
+                for i in 0..t {
+                    attn_out.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(oh.row(i));
+                }
+            }
+            let attn_proj = attn_out.matmul(&layer.wo);
+            x = x.add(&attn_proj);
+
+            // ---- MLP block ----
+            let xn2 = rmsnorm(&x, &layer.mlp_norm);
+            let mlp = swiglu(&xn2, &layer.w_gate, &layer.w_up, &layer.w_down);
+            x = x.add(&mlp);
+
+            if let Some(cap) = captured.as_mut() {
+                cap.layers.push(LayerCaches {
+                    k: k_heads,
+                    v: v_heads,
+                    q: q_heads,
+                });
+            }
+        }
+
+        // Final norm + tied LM head.
+        let xf = rmsnorm(&x, &self.weights.final_norm);
+        let logits = xf.matmul_nt(&self.weights.embed); // T×vocab
+        (logits, captured)
+    }
+
+    /// Mean next-token cross-entropy of `tokens` (nats). Used for model
+    /// quality checks and the training loop.
+    pub fn cross_entropy(&self, tokens: &[u32]) -> f64 {
+        assert!(tokens.len() >= 2);
+        let (logits, _) = self.forward(&tokens[..tokens.len() - 1], false);
+        let mut total = 0.0f64;
+        for i in 0..logits.rows() {
+            let target = tokens[i + 1] as usize;
+            let row = logits.row(i);
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f64 = row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln()
+                + max as f64;
+            total += lse - row[target] as f64;
+        }
+        total / logits.rows() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact incremental decode (uncompressed baseline)
+// ---------------------------------------------------------------------------
+
+/// Uncompressed per-sequence KV state for incremental decoding.
+pub struct ExactDecodeState {
+    /// `[layer][kv_head]` growing caches; rows are post-RoPE keys / values.
+    pub k: Vec<Vec<Mat>>,
+    pub v: Vec<Vec<Mat>>,
+    pub pos: usize,
+}
+
+impl ExactDecodeState {
+    pub fn new(cfg: &ModelConfig) -> ExactDecodeState {
+        ExactDecodeState {
+            k: (0..cfg.n_layers)
+                .map(|_| (0..cfg.n_kv_heads).map(|_| Mat::zeros(0, cfg.d_head())).collect())
+                .collect(),
+            v: (0..cfg.n_layers)
+                .map(|_| (0..cfg.n_kv_heads).map(|_| Mat::zeros(0, cfg.d_head())).collect())
+                .collect(),
+            pos: 0,
+        }
+    }
+
+    /// Cache bytes currently held (f32).
+    pub fn cache_bytes(&self) -> usize {
+        let per: usize = self
+            .k
+            .iter()
+            .flatten()
+            .chain(self.v.iter().flatten())
+            .map(|m| m.rows() * m.cols() * 4)
+            .sum();
+        per
+    }
+}
+
+impl Transformer {
+    /// Process one token at position `state.pos`, appending to the caches and
+    /// returning the next-token logits row.
+    pub fn decode_step(&self, state: &mut ExactDecodeState, token: u32) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let dh = cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let pos = state.pos;
+        assert!(pos < cfg.max_seq, "context overflow");
+
+        let mut x = self.weights.embed.row(token as usize).to_vec();
+
+        for (li, layer) in self.weights.layers.iter().enumerate() {
+            // attention
+            let mut xn = vec![0.0f32; d];
+            super::ops::rmsnorm_row(&x, &layer.attn_norm, &mut xn);
+            let xn_m = Mat::from_vec(1, d, xn);
+            let q_all = xn_m.matmul(&layer.wq);
+            let k_all = xn_m.matmul(&layer.wk);
+            let v_all = xn_m.matmul(&layer.wv);
+
+            // Append per-kv-head k/v with RoPE on k.
+            for h in 0..cfg.n_kv_heads {
+                let mut krow = k_all.row(0)[h * dh..(h + 1) * dh].to_vec();
+                self.rope.apply(&mut krow, pos);
+                let vrow = &v_all.row(0)[h * dh..(h + 1) * dh];
+                let kmat = &mut state.k[li][h];
+                let vmat = &mut state.v[li][h];
+                *kmat = kmat.vcat(&Mat::from_vec(1, dh, krow));
+                *vmat = vmat.vcat(&Mat::from_vec(1, dh, vrow.to_vec()));
+            }
+
+            let group = cfg.group_size();
+            let mut attn_out = vec![0.0f32; cfg.n_heads * dh];
+            for h in 0..cfg.n_heads {
+                let kv = h / group;
+                let mut qrow = q_all.row(0)[h * dh..(h + 1) * dh].to_vec();
+                self.rope.apply(&mut qrow, pos);
+                let kmat = &state.k[li][kv];
+                let mut scores = kmat.matvec(&qrow);
+                scores.iter_mut().for_each(|s| *s *= scale);
+                softmax_inplace(&mut scores);
+                let out = state.v[li][kv].vecmat(&scores);
+                attn_out[h * dh..(h + 1) * dh].copy_from_slice(&out);
+            }
+            let attn_proj = Mat::from_vec(1, cfg.n_heads * dh, attn_out).matmul(&layer.wo);
+            for i in 0..d {
+                x[i] += attn_proj.row(0)[i];
+            }
+
+            // mlp
+            let mut xn2 = vec![0.0f32; d];
+            super::ops::rmsnorm_row(&x, &layer.mlp_norm, &mut xn2);
+            let mlp = swiglu(
+                &Mat::from_vec(1, d, xn2),
+                &layer.w_gate,
+                &layer.w_up,
+                &layer.w_down,
+            );
+            for i in 0..d {
+                x[i] += mlp.row(0)[i];
+            }
+        }
+
+        state.pos += 1;
+        let mut xf = vec![0.0f32; d];
+        super::ops::rmsnorm_row(&x, &self.weights.final_norm, &mut xf);
+        self.weights.embed.matvec(&xf)
+    }
+
+    /// Greedy generation from a prompt using exact decode.
+    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let mut state = ExactDecodeState::new(&self.cfg);
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.decode_step(&mut state, t);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            if state.pos >= self.cfg.max_seq {
+                break;
+            }
+            logits = self.decode_step(&mut state, next);
+        }
+        out
+    }
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        for name in ["test-tiny", "test-tiny-gqa"] {
+            let cfg = preset(name).unwrap();
+            let model = Transformer::init(cfg.clone());
+            let tokens: Vec<u32> = (0..16).map(|i| (i * 3 % cfg.vocab_size) as u32).collect();
+            let (logits, cap) = model.forward(&tokens, true);
+            assert_eq!(logits.shape(), (16, cfg.vocab_size));
+            assert!(!logits.has_non_finite(), "{name}: non-finite logits");
+            let cap = cap.unwrap();
+            assert_eq!(cap.layers.len(), cfg.n_layers);
+            for lc in &cap.layers {
+                assert_eq!(lc.k.len(), cfg.n_kv_heads);
+                assert_eq!(lc.q.len(), cfg.n_heads);
+                assert_eq!(lc.k[0].shape(), (16, cfg.d_head()));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // Changing a future token must not change past logits.
+        let cfg = preset("test-tiny").unwrap();
+        let model = Transformer::init(cfg.clone());
+        let mut a: Vec<u32> = (0..12).map(|i| (i % cfg.vocab_size) as u32).collect();
+        let (la, _) = model.forward(&a, false);
+        a[11] = 63;
+        let (lb, _) = model.forward(&a, false);
+        for i in 0..11 {
+            for j in 0..cfg.vocab_size {
+                assert!(
+                    (la[(i, j)] - lb[(i, j)]).abs() < 1e-5,
+                    "logit ({i},{j}) changed with future token"
+                );
+            }
+        }
+        // The last position must change (otherwise the model ignores input).
+        let mut changed = false;
+        for j in 0..cfg.vocab_size {
+            if (la[(11, j)] - lb[(11, j)]).abs() > 1e-6 {
+                changed = true;
+            }
+        }
+        assert!(changed);
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        // Incremental exact decode must reproduce the full forward logits.
+        for name in ["test-tiny", "test-tiny-gqa"] {
+            let cfg = preset(name).unwrap();
+            let model = Transformer::init(cfg.clone());
+            let tokens: Vec<u32> = vec![5, 17, 3, 42, 8, 1, 33, 20];
+            let (full, _) = model.forward(&tokens, false);
+            let mut state = ExactDecodeState::new(&cfg);
+            for (i, &t) in tokens.iter().enumerate() {
+                let logits = model.decode_step(&mut state, t);
+                for j in 0..cfg.vocab_size {
+                    assert!(
+                        (logits[j] - full[(i, j)]).abs() < 2e-3,
+                        "{name}: step {i} logit {j}: {} vs {}",
+                        logits[j],
+                        full[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn captured_caches_match_decode_caches() {
+        // The calibration capture and the decode cache must agree (post-RoPE).
+        let cfg = preset("test-tiny-gqa").unwrap();
+        let model = Transformer::init(cfg.clone());
+        let tokens: Vec<u32> = vec![9, 2, 55, 13, 27];
+        let (_, cap) = model.forward(&tokens, true);
+        let cap = cap.unwrap();
+        let mut state = ExactDecodeState::new(&cfg);
+        for &t in &tokens {
+            model.decode_step(&mut state, t);
+        }
+        for li in 0..cfg.n_layers {
+            for h in 0..cfg.n_kv_heads {
+                assert!(
+                    cap.layers[li].k[h].max_abs_diff(&state.k[li][h]) < 2e-3,
+                    "layer {li} head {h} K mismatch"
+                );
+                assert!(cap.layers[li].v[h].max_abs_diff(&state.v[li][h]) < 2e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_entropy_reasonable() {
+        let cfg = preset("test-tiny").unwrap();
+        let model = Transformer::init(cfg.clone());
+        let corpus = crate::text::Corpus::new(cfg.vocab_size, 0);
+        let seq = corpus.sequence(crate::text::Split::Train, 0, 64);
+        let ce = model.cross_entropy(&seq);
+        // Untrained: near ln(vocab) = ln 64 ≈ 4.16; must be finite & positive.
+        assert!(ce.is_finite() && ce > 0.0 && ce < 10.0, "ce={ce}");
+    }
+
+    #[test]
+    fn generate_greedy_is_deterministic() {
+        let cfg = preset("test-tiny").unwrap();
+        let model = Transformer::init(cfg.clone());
+        let a = model.generate_greedy(&[1, 2, 3], 10);
+        let b = model.generate_greedy(&[1, 2, 3], 10);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().all(|&t| (t as usize) < cfg.vocab_size));
+    }
+
+    #[test]
+    fn cache_bytes_grow_linearly() {
+        let cfg = preset("test-tiny").unwrap();
+        let model = Transformer::init(cfg.clone());
+        let mut state = ExactDecodeState::new(&cfg);
+        model.decode_step(&mut state, 1);
+        let b1 = state.cache_bytes();
+        model.decode_step(&mut state, 2);
+        let b2 = state.cache_bytes();
+        assert_eq!(b2, 2 * b1);
+        // 2 (k+v) · layers · kv_heads · d_head · 4 bytes per token.
+        assert_eq!(
+            b1,
+            2 * cfg.n_layers * cfg.n_kv_heads * cfg.d_head() * 4
+        );
+    }
+}

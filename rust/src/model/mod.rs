@@ -1,0 +1,12 @@
+//! LLaMA-style transformer substrate (the "checkpoint" substitute — see
+//! DESIGN.md §2): spectrally-shaped seeded weights, full-sequence forward
+//! with post-RoPE cache capture for calibration, exact incremental decode
+//! for the uncompressed serving baseline, and greedy generation.
+
+pub mod forward;
+pub mod ops;
+pub mod weights;
+
+pub use forward::{argmax, CacheCapture, ExactDecodeState, LayerCaches, Transformer};
+pub use ops::{rmsnorm, softmax_inplace, RopeTable};
+pub use weights::{LayerWeights, ModelWeights};

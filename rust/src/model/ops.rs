@@ -1,0 +1,214 @@
+//! Transformer primitive ops: RMSNorm, SiLU/SwiGLU, softmax, RoPE.
+//!
+//! These follow the LLaMA-family conventions used by every model in the
+//! paper's evaluation set (Llama2/3, Mistral): pre-norm RMSNorm, rotary
+//! position embeddings applied to queries and keys per head, SwiGLU MLP.
+
+use crate::linalg::Mat;
+
+/// RMSNorm: `y = x / rms(x) * gain`, rms(x) = sqrt(mean(x²) + eps).
+pub fn rmsnorm_row(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    let n = x.len();
+    let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64;
+    let inv = 1.0 / (ms + 1e-6).sqrt() as f32;
+    for i in 0..n {
+        out[i] = x[i] * inv * gain[i];
+    }
+}
+
+/// RMSNorm over every row of a matrix.
+pub fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    for i in 0..x.rows() {
+        // Split borrow: copy the input row (cols is small).
+        let row = x.row(i).to_vec();
+        rmsnorm_row(&row, gain, out.row_mut(i));
+    }
+    out
+}
+
+/// SiLU activation x·σ(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Numerically-stable in-place softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !max.is_finite() {
+        // All -inf (fully masked): uniform over the slice as a safe fallback.
+        let u = 1.0 / xs.len() as f32;
+        xs.iter_mut().for_each(|x| *x = u);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    xs.iter_mut().for_each(|x| *x *= inv);
+}
+
+/// Precomputed RoPE rotation tables.
+#[derive(Debug, Clone)]
+pub struct RopeTable {
+    /// cos/sin per (position, pair index): `[max_seq][d_head/2]`.
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    half: usize,
+}
+
+impl RopeTable {
+    pub fn new(d_head: usize, max_seq: usize, theta: f64) -> RopeTable {
+        assert!(d_head % 2 == 0, "RoPE needs even head dim");
+        let half = d_head / 2;
+        let mut cos = Vec::with_capacity(max_seq * half);
+        let mut sin = Vec::with_capacity(max_seq * half);
+        for pos in 0..max_seq {
+            for i in 0..half {
+                let freq = theta.powf(-2.0 * i as f64 / d_head as f64);
+                let angle = pos as f64 * freq;
+                cos.push(angle.cos() as f32);
+                sin.push(angle.sin() as f32);
+            }
+        }
+        RopeTable { cos, sin, half }
+    }
+
+    /// Rotate a head vector `x` (length d_head) in place for position `pos`.
+    /// Pairs are `(x[i], x[i+half])` (the "rotate-half" convention).
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), 2 * self.half);
+        let base = pos * self.half;
+        for i in 0..self.half {
+            let c = self.cos[base + i];
+            let s = self.sin[base + i];
+            let a = x[i];
+            let b = x[i + self.half];
+            x[i] = a * c - b * s;
+            x[i + self.half] = a * s + b * c;
+        }
+    }
+
+    /// Apply to every row of a `T×d_head` matrix with positions
+    /// `pos0, pos0+1, …`.
+    pub fn apply_mat(&self, m: &mut Mat, pos0: usize) {
+        for i in 0..m.rows() {
+            self.apply(m.row_mut(i), pos0 + i);
+        }
+    }
+}
+
+/// SwiGLU MLP forward: `(silu(x W_g) ⊙ (x W_u)) W_d`.
+pub fn swiglu(x: &Mat, w_gate: &Mat, w_up: &Mat, w_down: &Mat) -> Mat {
+    let mut g = x.matmul(w_gate);
+    let u = x.matmul(w_up);
+    for (gv, uv) in g.data_mut().iter_mut().zip(u.data()) {
+        *gv = silu(*gv) * uv;
+    }
+    g.matmul(w_down)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let x = vec![3.0f32, -4.0, 0.0, 0.0];
+        let gain = vec![1.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        rmsnorm_row(&x, &gain, &mut out);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-3, "rms={}", ms.sqrt());
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut xs = vec![1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut xs);
+        let sum: f32 = xs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!(xs[1] > xs[0] && xs[0] > xs[2]);
+    }
+
+    #[test]
+    fn softmax_fully_masked_is_uniform() {
+        let mut xs = vec![f32::NEG_INFINITY; 4];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|&x| (x - 0.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_inner_product_shift() {
+        let d = 8;
+        let table = RopeTable::new(d, 64, 10_000.0);
+        let mut rng = Pcg64::new(1, 1);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        // Norm preservation (rotations are orthogonal).
+        let mut q5 = q.clone();
+        table.apply(&mut q5, 5);
+        let n0: f32 = q.iter().map(|x| x * x).sum();
+        let n5: f32 = q5.iter().map(|x| x * x).sum();
+        assert!((n0 - n5).abs() < 1e-4);
+
+        // Relative-position property: ⟨R_m q, R_n k⟩ depends only on m−n.
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let (mut q2, mut k7) = (q.clone(), k.clone());
+        table.apply(&mut q2, 2);
+        table.apply(&mut k7, 7);
+        let (mut q10, mut k15) = (q.clone(), k.clone());
+        table.apply(&mut q10, 10);
+        table.apply(&mut k15, 15);
+        assert!(
+            (dot(&q2, &k7) - dot(&q10, &k15)).abs() < 1e-3,
+            "RoPE must be relative"
+        );
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let table = RopeTable::new(6, 4, 10_000.0);
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut y = x.clone();
+        table.apply(&mut y, 0);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn swiglu_shapes_and_zero() {
+        let mut rng = Pcg64::new(2, 1);
+        let x = Mat::randn(3, 4, 1.0, &mut rng);
+        let wg = Mat::randn(4, 8, 1.0, &mut rng);
+        let wu = Mat::randn(4, 8, 1.0, &mut rng);
+        let wd = Mat::randn(8, 4, 1.0, &mut rng);
+        let y = swiglu(&x, &wg, &wu, &wd);
+        assert_eq!(y.shape(), (3, 4));
+        // Zero input → zero output (silu(0)=0).
+        let z = swiglu(&Mat::zeros(2, 4), &wg, &wu, &wd);
+        assert!(z.frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn prop_softmax_probabilities() {
+        forall("softmax output is a distribution", 64, |g| {
+            let n = g.usize_in(1, 32);
+            let mut xs = g.normal_vec(n, 5.0);
+            softmax_inplace(&mut xs);
+            assert!(xs.iter().all(|&x| (0.0..=1.0 + 1e-6).contains(&x)));
+            let sum: f32 = xs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+        });
+    }
+}

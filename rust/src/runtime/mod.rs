@@ -1,0 +1,309 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! The build pipeline (`make artifacts`) has Python lower the L2 decode graph
+//! (which embeds the L1 Pallas kernel) to HLO *text* plus a `manifest.json`
+//! describing every shape bucket. This module:
+//!
+//! * parses the manifest ([`ArtifactMeta`], [`Registry`]);
+//! * selects the smallest compatible bucket for a request shape
+//!   ([`Registry::select`]) — inputs are zero-padded up to the bucket (the
+//!   additive mask and zero-rank-padding neutrality are proven in
+//!   `python/tests/test_model.py`);
+//! * compiles each artifact once on the PJRT CPU client and caches the
+//!   loaded executable ([`PjrtEngine`]);
+//! * marshals `Mat`/buffer data into literals and back.
+//!
+//! Python never runs here — the Rust binary is self-contained once
+//! `artifacts/` exists.
+
+use crate::jsonutil::{parse, Json};
+use crate::linalg::Mat;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact's geometry (mirrors `python/compile/aot.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub preset: String,
+    pub variant: String, // "comp" | "exact"
+    pub batch: usize,
+    pub t: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub r: usize,
+    pub rv: usize,
+    pub scale: f64,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        Ok(ArtifactMeta {
+            file: j
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing 'file'"))?
+                .to_string(),
+            preset: j.str_or("preset", "").to_string(),
+            variant: j.str_or("variant", "comp").to_string(),
+            batch: j.usize_or("batch", 0),
+            t: j.usize_or("t", 0),
+            n_heads: j.usize_or("n_heads", 0),
+            n_kv_heads: j.usize_or("n_kv_heads", 0),
+            d_head: j.usize_or("d_head", 0),
+            r: j.usize_or("r", 0),
+            rv: j.usize_or("rv", 0),
+            scale: j.f64_or("scale", 0.0),
+        })
+    }
+}
+
+/// Manifest-backed artifact registry.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub metas: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let j = parse(&text).map_err(|e| anyhow!("{manifest_path:?}: {e}"))?;
+        let version = j.usize_or("version", 0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let metas = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            metas,
+        })
+    }
+
+    /// Presets present in the registry.
+    pub fn presets(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.iter().map(|m| m.preset.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Smallest bucket with `batch ≥ batch_needed`, `t ≥ t_needed`,
+    /// `r ≥ r_needed` for the given preset+variant. "Smallest" minimizes
+    /// padded work: ordered by (batch, t, r).
+    pub fn select(
+        &self,
+        preset: &str,
+        variant: &str,
+        batch_needed: usize,
+        t_needed: usize,
+        r_needed: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .filter(|m| {
+                m.preset == preset
+                    && m.variant == variant
+                    && m.batch >= batch_needed
+                    && m.t >= t_needed
+                    && m.r >= r_needed
+                    && m.rv >= r_needed
+            })
+            .min_by_key(|m| (m.batch, m.t, m.r))
+    }
+}
+
+/// Inputs to one attention-layer decode call, already padded to a bucket.
+/// All buffers are row-major flattened f32.
+pub struct AttnDecodeInputs {
+    /// `(B, H, d)` raw post-RoPE queries.
+    pub q: Vec<f32>,
+    /// `(B, Hkv, T, R)` compressed key cache, zero padded.
+    pub ck: Vec<f32>,
+    /// `(B, Hkv, T, Rv)` compressed value cache.
+    pub cv: Vec<f32>,
+    /// `(B, T)` additive mask (0 valid / −1e9 padding).
+    pub mask: Vec<f32>,
+    /// `(Hkv, d, R)` query projections.
+    pub bproj: Vec<f32>,
+    /// `(H, Rv, D)` folded output projections.
+    pub folds: Vec<f32>,
+}
+
+/// PJRT engine: CPU client + compiled-executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    loaded: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla crate's PjRtClient/PjRtLoadedExecutable hold `Rc`s and raw
+// PJRT pointers, so they are not auto-Send. A `PjrtEngine` owns the client
+// AND every executable/Rc clone derived from it; the whole bundle is moved
+// to the engine thread as one unit (Router::serve) and never used from two
+// threads concurrently, which is exactly the single-owner usage the PJRT C
+// API requires.
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtEngine> {
+        let registry = Registry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            registry,
+            loaded: HashMap::new(),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn get_or_compile(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.loaded.contains_key(&meta.file) {
+            let path = self.registry.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.file))?;
+            self.loaded.insert(meta.file.clone(), exe);
+        }
+        Ok(&self.loaded[&meta.file])
+    }
+
+    /// Number of compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.loaded.len()
+    }
+
+    /// Execute one attention-layer decode step. Returns the `(B, D)` output.
+    pub fn run_attn_decode(&mut self, meta: &ArtifactMeta, inp: &AttnDecodeInputs) -> Result<Mat> {
+        let (b, t) = (meta.batch, meta.t);
+        let (h, hkv, d) = (meta.n_heads, meta.n_kv_heads, meta.d_head);
+        let (r, rv) = (meta.r, meta.rv);
+        let dm = h * d;
+        // Shape sanity before handing buffers to PJRT.
+        anyhow::ensure!(inp.q.len() == b * h * d, "q size");
+        anyhow::ensure!(inp.ck.len() == b * hkv * t * r, "ck size");
+        anyhow::ensure!(inp.cv.len() == b * hkv * t * rv, "cv size");
+        anyhow::ensure!(inp.mask.len() == b * t, "mask size");
+        anyhow::ensure!(inp.bproj.len() == hkv * d * r, "bproj size");
+        anyhow::ensure!(inp.folds.len() == h * rv * dm, "folds size");
+
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("literal reshape {dims:?}: {e:?}"))
+        };
+        let args = [
+            lit(&inp.q, &[b as i64, h as i64, d as i64])?,
+            lit(&inp.ck, &[b as i64, hkv as i64, t as i64, r as i64])?,
+            lit(&inp.cv, &[b as i64, hkv as i64, t as i64, rv as i64])?,
+            lit(&inp.mask, &[b as i64, t as i64])?,
+            lit(&inp.bproj, &[hkv as i64, d as i64, r as i64])?,
+            lit(&inp.folds, &[h as i64, rv as i64, dm as i64])?,
+        ];
+        let exe = self.get_or_compile(meta)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.file))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(values.len() == b * dm, "output size {} != {}", values.len(), b * dm);
+        Ok(Mat::from_vec(b, dm, values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = Json::obj().set("version", 1usize).set(
+            "artifacts",
+            Json::Arr(vec![
+                artifact_json("a1", "p", "comp", 1, 128, 4),
+                artifact_json("a2", "p", "comp", 8, 128, 4),
+                artifact_json("a3", "p", "comp", 8, 512, 4),
+                artifact_json("a4", "p", "comp", 8, 512, 8),
+                artifact_json("a5", "p", "exact", 8, 512, 8),
+            ]),
+        );
+        std::fs::write(dir.join("manifest.json"), manifest.to_string_compact()).unwrap();
+    }
+
+    fn artifact_json(file: &str, preset: &str, variant: &str, b: usize, t: usize, r: usize) -> Json {
+        Json::obj()
+            .set("file", file)
+            .set("preset", preset)
+            .set("variant", variant)
+            .set("batch", b)
+            .set("t", t)
+            .set("n_heads", 4usize)
+            .set("n_kv_heads", 2usize)
+            .set("d_head", 8usize)
+            .set("r", r)
+            .set("rv", r)
+            .set("scale", 0.353553)
+    }
+
+    #[test]
+    fn registry_selects_smallest_compatible_bucket() {
+        let dir = std::env::temp_dir().join("kqsvd-test-registry");
+        fake_manifest(&dir);
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.metas.len(), 5);
+        assert_eq!(reg.presets(), vec!["p"]);
+
+        // Exact fit.
+        assert_eq!(reg.select("p", "comp", 1, 100, 4).unwrap().file, "a1");
+        // Needs bigger batch.
+        assert_eq!(reg.select("p", "comp", 3, 100, 4).unwrap().file, "a2");
+        // Needs bigger T.
+        assert_eq!(reg.select("p", "comp", 2, 300, 3).unwrap().file, "a3");
+        // Needs bigger rank.
+        assert_eq!(reg.select("p", "comp", 1, 128, 6).unwrap().file, "a4");
+        // Exact variant.
+        assert_eq!(reg.select("p", "exact", 1, 1, 1).unwrap().file, "a5");
+        // Impossible.
+        assert!(reg.select("p", "comp", 16, 128, 4).is_none());
+        assert!(reg.select("p", "comp", 1, 1024, 4).is_none());
+        assert!(reg.select("nope", "comp", 1, 1, 1).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn registry_missing_manifest_is_actionable() {
+        let dir = std::env::temp_dir().join("kqsvd-test-noreg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Registry::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

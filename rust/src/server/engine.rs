@@ -1,0 +1,491 @@
+//! The serving engine: model weights + calibrated projections + compressed
+//! KV cache + an attention backend, implementing [`coordinator::Engine`].
+//!
+//! Per decode token, per layer:
+//!
+//! 1. RMSNorm + q/k/v projections + RoPE (pure Rust, cheap);
+//! 2. cache write: `k̃ = k·A`, `ṽ = v·A_v` appended to the paged compressed
+//!    cache — *the original k/v rows are never stored* (paper §3.3);
+//! 3. attention over the compressed cache — either the pure-Rust online
+//!    softmax backend ([`crate::attn`]) or one PJRT call per layer executing
+//!    the AOT Pallas graph across the whole batch ([`crate::runtime`]);
+//! 4. residual add + SwiGLU MLP (pure Rust).
+//!
+//! With `Method::None` projections (identity), the engine is bit-comparable
+//! to [`crate::model::Transformer::decode_step`] — tested below — so every
+//! divergence under compression is attributable to the projections, not the
+//! serving plumbing.
+
+use crate::calib::ProjectionSet;
+use crate::config::{Config, Method};
+use crate::coordinator::Engine;
+use crate::kvcache::{CacheSpec, KvCacheManager, LayerGeom, SeqId};
+use crate::linalg::Mat;
+use crate::model::{softmax_inplace, Transformer};
+use crate::runtime::{AttnDecodeInputs, PjrtEngine};
+use anyhow::{anyhow, Context, Result};
+
+/// Attention execution backend.
+pub enum Backend {
+    /// Pure-Rust online-softmax attention over the paged cache.
+    Rust,
+    /// AOT HLO artifacts (Pallas kernel inside) via PJRT, one call per layer
+    /// per step, batched across sequences.
+    Pjrt(Box<PjrtEngine>),
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Rust => "rust",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// The engine (one per serving process).
+pub struct ServingEngine {
+    pub model: Transformer,
+    pub proj: ProjectionSet,
+    pub cache: KvCacheManager,
+    pub backend: Backend,
+    preset: String,
+}
+
+impl ServingEngine {
+    /// Assemble an engine from config + calibrated projections.
+    pub fn new(
+        cfg: &Config,
+        model: Transformer,
+        proj: ProjectionSet,
+        backend: Backend,
+    ) -> Result<ServingEngine> {
+        anyhow::ensure!(
+            proj.layers.len() == model.cfg.n_layers,
+            "projection set has {} layers, model has {}",
+            proj.layers.len(),
+            model.cfg.n_layers
+        );
+        let spec = CacheSpec {
+            n_kv_heads: model.cfg.n_kv_heads,
+            layers: proj
+                .layers
+                .iter()
+                .map(|l| LayerGeom {
+                    k_width: l.groups[0].key.rank(),
+                    v_width: l.groups[0].value_a.cols(),
+                })
+                .collect(),
+            page_tokens: 16,
+        };
+        let cache = KvCacheManager::new(spec, cfg.serve.cache_budget_bytes);
+        Ok(ServingEngine {
+            preset: model.cfg.name.clone(),
+            model,
+            proj,
+            cache,
+            backend,
+        })
+    }
+
+    /// Compressed cache bytes per token (the paper's memory metric).
+    pub fn cache_bytes_per_token(&self) -> usize {
+        self.cache.spec().bytes_per_token()
+    }
+
+    /// Process one token for one sequence; returns the logits row.
+    /// Used by both prefill (chunk loop) and the Rust decode path.
+    fn forward_token(&mut self, id: SeqId, token: u32, pos: usize) -> Result<Vec<f32>> {
+        let cfg = self.model.cfg.clone();
+        let dh = cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let group = cfg.group_size();
+        anyhow::ensure!(pos < cfg.max_seq, "context overflow at pos {pos}");
+
+        let mut x = self.model.weights.embed.row(token as usize).to_vec();
+
+        for li in 0..cfg.n_layers {
+            let (q_heads, _) = self.project_and_append(id, li, &x, pos)?;
+
+            // Attention over the compressed cache (Rust path; the PJRT path
+            // goes through decode_batch instead).
+            let lp = &self.proj.layers[li];
+            let seq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
+            let bproj: Vec<&Mat> = lp.groups.iter().map(|g| &g.key.b).collect();
+            let folds: Vec<&Mat> = (0..cfg.n_heads)
+                .map(|h| &lp.groups[h / group].value_folds[h % group])
+                .collect();
+            let attn_out = crate::attn::decode_attn_layer(
+                &q_heads,
+                &bproj,
+                &folds,
+                &seq.k[li],
+                &seq.v[li],
+                scale,
+                group,
+                cfg.d_model,
+            );
+            for (xi, a) in x.iter_mut().zip(&attn_out) {
+                *xi += a;
+            }
+            self.mlp_inplace(li, &mut x);
+        }
+        Ok(self.final_logits(&x))
+    }
+
+    /// Shared front half of a layer: norm, q/k/v, RoPE, compressed cache
+    /// append. Returns the roped per-head queries (and the layer index for
+    /// symmetry).
+    fn project_and_append(
+        &mut self,
+        id: SeqId,
+        li: usize,
+        x: &[f32],
+        pos: usize,
+    ) -> Result<(Vec<Vec<f32>>, usize)> {
+        let cfg = &self.model.cfg;
+        let dh = cfg.d_head();
+        let layer = &self.model.weights.layers[li];
+        let lp = &self.proj.layers[li];
+
+        let mut xn = vec![0.0f32; cfg.d_model];
+        crate::model::ops::rmsnorm_row(x, &layer.attn_norm, &mut xn);
+        let q_all = layer.wq.vecmat(&xn);
+        let k_all = layer.wk.vecmat(&xn);
+        let v_all = layer.wv.vecmat(&xn);
+
+        // Compress and append k/v per KV head.
+        let mut k_rows: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_kv_heads);
+        let mut v_rows: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_kv_heads);
+        for h in 0..cfg.n_kv_heads {
+            let mut krow = k_all[h * dh..(h + 1) * dh].to_vec();
+            self.model.rope().apply(&mut krow, pos);
+            let vrow = &v_all[h * dh..(h + 1) * dh];
+            k_rows.push(lp.groups[h].key.a.vecmat(&krow));
+            v_rows.push(lp.groups[h].value_a.vecmat(vrow));
+        }
+        let krefs: Vec<&[f32]> = k_rows.iter().map(|r| r.as_slice()).collect();
+        let vrefs: Vec<&[f32]> = v_rows.iter().map(|r| r.as_slice()).collect();
+        self.cache
+            .append_layer(id, li, &krefs, &vrefs)
+            .map_err(|e| anyhow!("cache append: {e}"))?;
+
+        // Roped queries.
+        let q_heads: Vec<Vec<f32>> = (0..cfg.n_heads)
+            .map(|h| {
+                let mut q = q_all[h * dh..(h + 1) * dh].to_vec();
+                self.model.rope().apply(&mut q, pos);
+                q
+            })
+            .collect();
+        Ok((q_heads, li))
+    }
+
+    fn mlp_inplace(&self, li: usize, x: &mut Vec<f32>) {
+        let layer = &self.model.weights.layers[li];
+        let mut xn = vec![0.0f32; x.len()];
+        crate::model::ops::rmsnorm_row(x, &layer.mlp_norm, &mut xn);
+        let g = layer.w_gate.vecmat(&xn);
+        let u = layer.w_up.vecmat(&xn);
+        let act: Vec<f32> = g
+            .iter()
+            .zip(&u)
+            .map(|(&gv, &uv)| crate::model::ops::silu(gv) * uv)
+            .collect();
+        let out = layer.w_down.vecmat(&act);
+        for (xi, o) in x.iter_mut().zip(&out) {
+            *xi += o;
+        }
+    }
+
+    fn final_logits(&self, x: &[f32]) -> Vec<f32> {
+        let mut xf = vec![0.0f32; x.len()];
+        crate::model::ops::rmsnorm_row(x, &self.model.weights.final_norm, &mut xf);
+        self.model.weights.embed.matvec(&xf)
+    }
+
+    /// PJRT-batched decode: one artifact call per layer for the whole batch.
+    fn decode_batch_pjrt(&mut self, batch: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        let cfg = self.model.cfg.clone();
+        let (h, hkv, dh, dm) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head(), cfg.d_model);
+        let group = cfg.group_size();
+        let b_needed = batch.len();
+        let variant = if self.proj.method == Method::None { "exact" } else { "comp" };
+
+        // Per-sequence residual streams + positions.
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(b_needed);
+        let mut lens: Vec<usize> = Vec::with_capacity(b_needed);
+        for &(id, tok) in batch {
+            xs.push(self.model.weights.embed.row(tok as usize).to_vec());
+            lens.push(self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?);
+        }
+
+        for li in 0..cfg.n_layers {
+            // Front half per sequence (appends grow lens by one).
+            let mut q_all: Vec<Vec<Vec<f32>>> = Vec::with_capacity(b_needed);
+            for (bi, &(id, _)) in batch.iter().enumerate() {
+                let pos = lens[bi];
+                let (q_heads, _) = self.project_and_append(id, li, &xs[bi], pos)?;
+                q_all.push(q_heads);
+            }
+
+            let lp = &self.proj.layers[li];
+            let r_need = lp.ranks.r_key.max(lp.groups[0].value_a.cols());
+            let t_need: usize = lens.iter().map(|&l| l + 1).max().unwrap();
+            let Backend::Pjrt(engine) = &mut self.backend else {
+                unreachable!("decode_batch_pjrt requires PJRT backend")
+            };
+            let meta = engine
+                .registry()
+                .select(&self.preset, variant, b_needed, t_need, r_need)
+                .with_context(|| {
+                    format!(
+                        "no AOT bucket for preset={} variant={variant} b={b_needed} t={t_need} r={r_need}",
+                        self.preset
+                    )
+                })?
+                .clone();
+            let (bb, tt, rr, rrv) = (meta.batch, meta.t, meta.r, meta.rv);
+
+            // Marshal padded inputs.
+            let mut inp = AttnDecodeInputs {
+                q: vec![0.0; bb * h * dh],
+                ck: vec![0.0; bb * hkv * tt * rr],
+                cv: vec![0.0; bb * hkv * tt * rrv],
+                mask: vec![-1e9; bb * tt],
+                bproj: vec![0.0; hkv * dh * rr],
+                folds: vec![0.0; h * rrv * dm],
+            };
+            for (bi, &(id, _)) in batch.iter().enumerate() {
+                let valid = lens[bi] + 1;
+                for (hi, qh) in q_all[bi].iter().enumerate() {
+                    inp.q[(bi * h + hi) * dh..(bi * h + hi + 1) * dh].copy_from_slice(qh);
+                }
+                let seq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
+                for kv in 0..hkv {
+                    let (kb, vb) = (&seq.k[li][kv], &seq.v[li][kv]);
+                    let rk = kb.width();
+                    let rv = vb.width();
+                    for ti in 0..valid {
+                        let off = ((bi * hkv + kv) * tt + ti) * rr;
+                        inp.ck[off..off + rk].copy_from_slice(kb.row(ti));
+                        let offv = ((bi * hkv + kv) * tt + ti) * rrv;
+                        inp.cv[offv..offv + rv].copy_from_slice(vb.row(ti));
+                    }
+                }
+                for ti in 0..valid {
+                    inp.mask[bi * tt + ti] = 0.0;
+                }
+            }
+            for kv in 0..hkv {
+                let bm = &lp.groups[kv].key.b; // d×r_l
+                for i in 0..dh {
+                    let dst = (kv * dh + i) * rr;
+                    inp.bproj[dst..dst + bm.cols()].copy_from_slice(bm.row(i));
+                }
+            }
+            for hi in 0..h {
+                let fold = &lp.groups[hi / group].value_folds[hi % group]; // rv_l×D
+                for i in 0..fold.rows() {
+                    let dst = (hi * rrv + i) * dm;
+                    inp.folds[dst..dst + dm].copy_from_slice(fold.row(i));
+                }
+            }
+
+            let Backend::Pjrt(engine) = &mut self.backend else { unreachable!() };
+            let out = engine.run_attn_decode(&meta, &inp)?; // (bb, dm)
+            for bi in 0..b_needed {
+                for (xi, o) in xs[bi].iter_mut().zip(out.row(bi)) {
+                    *xi += o;
+                }
+                self.mlp_inplace(li, &mut xs[bi]);
+            }
+        }
+
+        Ok(xs.iter().map(|x| self.final_logits(x)).collect())
+    }
+}
+
+impl Engine for ServingEngine {
+    fn alloc(&mut self, id: SeqId, max_total_tokens: usize) -> Result<()> {
+        self.cache.alloc(id).map_err(|e| anyhow!("{e}"))?;
+        self.cache
+            .reserve(id, max_total_tokens)
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    fn free(&mut self, id: SeqId) {
+        let _ = self.cache.free(id);
+    }
+
+    fn can_admit(&self, total_tokens: usize) -> bool {
+        self.cache.can_admit(total_tokens)
+    }
+
+    fn prefill(
+        &mut self,
+        id: SeqId,
+        tokens: &[u32],
+        pos0: usize,
+        is_last_chunk: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let mut last = None;
+        for (i, &tok) in tokens.iter().enumerate() {
+            last = Some(self.forward_token(id, tok, pos0 + i)?);
+            self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
+        }
+        Ok(if is_last_chunk { last } else { None })
+    }
+
+    fn decode(&mut self, batch: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        match self.backend {
+            Backend::Rust => {
+                let mut out = Vec::with_capacity(batch.len());
+                for &(id, tok) in batch {
+                    let pos = self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?;
+                    out.push(self.forward_token(id, tok, pos)?);
+                    self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
+                }
+                Ok(out)
+            }
+            Backend::Pjrt(_) => {
+                let out = self.decode_batch_pjrt(batch)?;
+                for &(id, _) in batch {
+                    self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn max_seq(&self) -> usize {
+        self.model.cfg.max_seq
+    }
+}
+
+/// Softmax of logits (helper for perplexity-style quality metrics).
+pub fn logits_to_probs(mut logits: Vec<f32>) -> Vec<f32> {
+    softmax_inplace(&mut logits);
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::calibrate;
+    use crate::config::{preset, CalibConfig};
+    use crate::model::ExactDecodeState;
+    use crate::text::Corpus;
+
+    fn build_engine(preset_name: &str, method: Method) -> ServingEngine {
+        let mcfg = preset(preset_name).unwrap();
+        let corpus = Corpus::new(mcfg.vocab_size, 0);
+        let model = Transformer::init(mcfg.clone());
+        let calib_cfg = CalibConfig {
+            n_calib_seqs: 3,
+            calib_seq_len: 48,
+            ..CalibConfig::default()
+        };
+        let (proj, _, _) = calibrate(&model, &corpus, &calib_cfg, method);
+        let mut cfg = Config::from_preset(preset_name).unwrap();
+        cfg.method = method;
+        ServingEngine::new(&cfg, model, proj, Backend::Rust).unwrap()
+    }
+
+    #[test]
+    fn identity_projections_match_exact_decoder() {
+        for name in ["test-tiny", "test-tiny-gqa"] {
+            let mut eng = build_engine(name, Method::None);
+            let tokens = [5u32, 17, 3, 42, 8];
+            eng.alloc(1, 16).unwrap();
+            let model = Transformer::init(preset(name).unwrap());
+            let mut exact = ExactDecodeState::new(&model.cfg);
+            for (i, &t) in tokens.iter().enumerate() {
+                let got = eng.forward_token(1, t, i).unwrap();
+                eng.cache.commit_token(1).unwrap();
+                let want = model.decode_step(&mut exact, t);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 2e-3, "{name} pos {i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kqsvd_engine_tracks_exact_closely() {
+        // Compressed serving should approximate the exact path (quality gate).
+        let mut eng = build_engine("test-tiny", Method::KqSvd);
+        let model = Transformer::init(preset("test-tiny").unwrap());
+        let tokens = [9u32, 2, 55, 13, 27, 40, 7];
+        eng.alloc(1, 32).unwrap();
+        let mut exact = ExactDecodeState::new(&model.cfg);
+        let mut max_rel = 0.0f64;
+        for (i, &t) in tokens.iter().enumerate() {
+            let got = eng.forward_token(1, t, i).unwrap();
+            eng.cache.commit_token(1).unwrap();
+            let want = model.decode_step(&mut exact, t);
+            let num: f64 = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let den: f64 = want.iter().map(|&b| (b as f64).powi(2)).sum();
+            max_rel = max_rel.max(num / den.max(1e-12));
+        }
+        assert!(max_rel < 0.5, "relative logit error too large: {max_rel}");
+    }
+
+    #[test]
+    fn engine_through_coordinator_end_to_end() {
+        use crate::coordinator::{BatcherConfig, Request, Router};
+        let mut eng = build_engine("test-tiny", Method::KqSvd);
+        let mut router = Router::new(BatcherConfig {
+            max_batch: 2,
+            max_queue: 16,
+            prefill_chunk: 4,
+        });
+        for i in 0..3 {
+            router
+                .submit(&eng, Request::new(i, vec![1 + i as u32, 2, 3, 4, 5, 6], 4))
+                .unwrap();
+        }
+        let done = router.run_offline(&mut eng).unwrap();
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 4);
+        }
+        // All caches released.
+        assert_eq!(eng.cache.live_sequences(), 0);
+        assert_eq!(eng.cache.used_bytes(), 0);
+    }
+
+    #[test]
+    fn compressed_cache_is_smaller_than_exact() {
+        let eng_none = build_engine("test-tiny", Method::None);
+        let eng_kq = build_engine("test-tiny", Method::KqSvd);
+        assert!(
+            eng_kq.cache_bytes_per_token() < eng_none.cache_bytes_per_token(),
+            "{} vs {}",
+            eng_kq.cache_bytes_per_token(),
+            eng_none.cache_bytes_per_token()
+        );
+    }
+
+    #[test]
+    fn deterministic_generation_via_coordinator() {
+        use crate::coordinator::{BatcherConfig, Request, Router};
+        let run = || {
+            let mut eng = build_engine("test-tiny-gqa", Method::KqSvd);
+            let mut router = Router::new(BatcherConfig {
+                max_batch: 4,
+                max_queue: 8,
+                prefill_chunk: 8,
+            });
+            router
+                .submit(&eng, Request::new(0, vec![3, 1, 4, 1, 5], 6))
+                .unwrap();
+            router.run_offline(&mut eng).unwrap()[0].tokens.clone()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving facade: assembles model + projections + cache + backend into a
+//! runnable engine and exposes the offline/online entry points used by the
+//! CLI (`kqsvd serve`), the examples and the e2e benches.
+
+pub mod engine;
+
+pub use engine::{Backend, ServingEngine};
+
+use crate::calib::{calibrate, ProjectionSet};
+use crate::config::Config;
+use crate::model::{ModelWeights, Transformer};
+use crate::runtime::PjrtEngine;
+use crate::text::Corpus;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Build (or load cached) weights + projections for a config, then assemble
+/// the engine. `run_dir` caches both artifacts so repeated runs are instant.
+pub fn build_engine(cfg: &Config) -> Result<ServingEngine> {
+    let run_dir = Path::new(&cfg.run_dir);
+    let weights_path = run_dir.join("weights.bin");
+    let proj_path = run_dir.join(format!("proj_{}.bin", cfg.method.name()));
+
+    let model = if weights_path.exists() {
+        Transformer::new(cfg.model.clone(), ModelWeights::load(&weights_path)?)
+    } else {
+        let model = Transformer::init(cfg.model.clone());
+        model.weights.save(&weights_path).ok(); // cache best-effort
+        model
+    };
+
+    let proj = if proj_path.exists() {
+        let p = ProjectionSet::load(&proj_path)?;
+        anyhow::ensure!(
+            p.method == cfg.method && p.layers.len() == cfg.model.n_layers,
+            "cached projections at {proj_path:?} don't match config; delete the run dir"
+        );
+        p
+    } else {
+        let corpus = Corpus::new(cfg.model.vocab_size, cfg.calib.seed);
+        let (p, _, _) = calibrate(&model, &corpus, &cfg.calib, cfg.method);
+        p.save(&proj_path).ok();
+        p
+    };
+
+    let backend = match cfg.serve.backend.as_str() {
+        "rust" => Backend::Rust,
+        "pjrt" => Backend::Pjrt(Box::new(
+            PjrtEngine::new(Path::new(&cfg.artifacts_dir))
+                .context("building PJRT backend (run `make artifacts`)")?,
+        )),
+        other => anyhow::bail!("unknown backend '{other}' (rust|pjrt)"),
+    };
+    ServingEngine::new(cfg, model, proj, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    #[test]
+    fn build_engine_caches_run_products() {
+        let mut cfg = Config::from_preset("test-tiny").unwrap();
+        cfg.calib.n_calib_seqs = 2;
+        cfg.calib.calib_seq_len = 32;
+        cfg.method = Method::KqSvd;
+        let dir = std::env::temp_dir().join("kqsvd-test-buildengine");
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.run_dir = dir.to_str().unwrap().to_string();
+
+        let eng1 = build_engine(&cfg).unwrap();
+        assert!(dir.join("weights.bin").exists());
+        assert!(dir.join("proj_kqsvd.bin").exists());
+        // Second build loads from cache and matches.
+        let eng2 = build_engine(&cfg).unwrap();
+        assert_eq!(
+            eng1.model.weights.embed.data()[..8],
+            eng2.model.weights.embed.data()[..8]
+        );
+        assert_eq!(eng1.cache_bytes_per_token(), eng2.cache_bytes_per_token());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let mut cfg = Config::from_preset("test-tiny").unwrap();
+        cfg.calib.n_calib_seqs = 2;
+        cfg.calib.calib_seq_len = 32;
+        cfg.serve.backend = "cuda".into();
+        let dir = std::env::temp_dir().join("kqsvd-test-badbackend");
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.run_dir = dir.to_str().unwrap().to_string();
+        assert!(build_engine(&cfg).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

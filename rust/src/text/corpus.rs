@@ -1,0 +1,207 @@
+//! Synthetic Zipfian–Markov corpus generator (the C4 substitute).
+//!
+//! Produces deterministic token streams over the model vocabulary with:
+//!
+//! * Zipf-distributed unigram frequencies (`p_i ∝ 1/(i+2)^1.1`);
+//! * a sparse random second-order Markov transition structure so sequences
+//!   carry learnable short-range dependencies;
+//! * BOS-separated "documents" of random length, mimicking packed shards;
+//! * disjoint `Train` / `Validation` splits driven by independent RNG
+//!   streams (the paper learns projections on C4-train and evaluates on
+//!   C4-validation, §6.1).
+
+use crate::text::tokenizer::{BOS, SPECIALS};
+use crate::util::rng::Pcg64;
+
+/// Which split a sequence is drawn from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Validation,
+}
+
+impl Split {
+    fn stream_tag(&self) -> u64 {
+        match self {
+            Split::Train => 0x7261_494E, // "raIN"
+            Split::Validation => 0x7641_4C69,
+        }
+    }
+}
+
+/// Deterministic synthetic corpus over a given vocabulary.
+pub struct Corpus {
+    vocab_size: usize,
+    seed: u64,
+    /// Zipf weights for the unconditioned distribution.
+    zipf: Vec<f64>,
+    /// Sparse per-context candidate sets: for context hash h, the candidates
+    /// are `cands[h % CTX]`.
+    cands: Vec<Vec<u32>>,
+}
+
+const CTX_BUCKETS: usize = 4096;
+const CANDS_PER_CTX: usize = 12;
+/// Probability of following the Markov structure vs sampling from the Zipf
+/// marginal (controls how "predictable" the corpus is).
+const STRUCTURE_P: f64 = 0.75;
+
+impl Corpus {
+    /// Build a corpus generator for `vocab_size ≥ SPECIALS + 2` tokens.
+    pub fn new(vocab_size: usize, seed: u64) -> Corpus {
+        assert!(vocab_size > SPECIALS as usize + 1, "vocab too small");
+        let usable = vocab_size - SPECIALS as usize;
+        let zipf: Vec<f64> = (0..usable).map(|i| 1.0 / ((i + 2) as f64).powf(1.1)).collect();
+        // Deterministic sparse transition table.
+        let mut rng = Pcg64::from_root(seed, 0xC0 + 1);
+        let cands = (0..CTX_BUCKETS)
+            .map(|_| {
+                (0..CANDS_PER_CTX)
+                    .map(|_| {
+                        // Candidates themselves Zipf-biased.
+                        let mut r = rng.uniform();
+                        let total: f64 = zipf.iter().sum();
+                        r *= total;
+                        let mut idx = 0;
+                        for (i, &w) in zipf.iter().enumerate() {
+                            r -= w;
+                            if r <= 0.0 {
+                                idx = i;
+                                break;
+                            }
+                        }
+                        idx as u32 + SPECIALS
+                    })
+                    .collect()
+            })
+            .collect();
+        Corpus {
+            vocab_size,
+            seed,
+            zipf,
+            cands,
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    fn ctx_hash(a: u32, b: u32) -> usize {
+        let h = (a as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(b as u64)
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        (h >> 16) as usize % CTX_BUCKETS
+    }
+
+    /// Generate the `idx`-th sequence of `len` tokens from `split`.
+    /// Sequences are deterministic in `(seed, split, idx)` and independent
+    /// across both `idx` and split (disjoint RNG streams).
+    pub fn sequence(&self, split: Split, idx: u64, len: usize) -> Vec<u32> {
+        let mut rng = Pcg64::from_root(self.seed ^ split.stream_tag(), idx);
+        let mut out = Vec::with_capacity(len);
+        let mut doc_left = 0usize;
+        let (mut prev2, mut prev1) = (BOS, BOS);
+        while out.len() < len {
+            if doc_left == 0 {
+                out.push(BOS);
+                doc_left = 32 + rng.below_usize(192);
+                prev2 = BOS;
+                prev1 = BOS;
+                continue;
+            }
+            let tok = if rng.uniform() < STRUCTURE_P {
+                // Markov: pick among the context's candidate set.
+                let cs = &self.cands[Self::ctx_hash(prev2, prev1)];
+                cs[rng.below_usize(cs.len())]
+            } else {
+                // Marginal Zipf draw.
+                (rng.weighted_choice(&self.zipf) as u32) + SPECIALS
+            };
+            // Clamp into vocab (candidates were built over usable range).
+            let tok = tok.min(self.vocab_size as u32 - 1);
+            out.push(tok);
+            prev2 = prev1;
+            prev1 = tok;
+            doc_left -= 1;
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// Convenience: a batch of sequences `[idx₀, idx₀+n)`.
+    pub fn batch(&self, split: Split, idx0: u64, n: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..n).map(|i| self.sequence(split, idx0 + i as u64, len)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_split_disjoint() {
+        let c = Corpus::new(512, 0);
+        let a = c.sequence(Split::Train, 0, 256);
+        let b = c.sequence(Split::Train, 0, 256);
+        assert_eq!(a, b);
+        let v = c.sequence(Split::Validation, 0, 256);
+        assert_ne!(a, v, "train and validation streams must differ");
+        let a1 = c.sequence(Split::Train, 1, 256);
+        assert_ne!(a, a1);
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_len_exact() {
+        let c = Corpus::new(128, 7);
+        for idx in 0..5 {
+            let s = c.sequence(Split::Train, idx, 333);
+            assert_eq!(s.len(), 333);
+            assert!(s.iter().all(|&t| (t as usize) < 128));
+        }
+    }
+
+    #[test]
+    fn zipf_marginals_are_skewed() {
+        let c = Corpus::new(512, 0);
+        let mut counts = vec![0usize; 512];
+        for idx in 0..20 {
+            for &t in &c.sequence(Split::Train, idx, 1024) {
+                counts[t as usize] += 1;
+            }
+        }
+        // Top-32 tokens should dominate a uniform share.
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top: usize = sorted.iter().take(32).sum();
+        let total: usize = sorted.iter().sum();
+        assert!(
+            top as f64 > 0.5 * total as f64,
+            "expected skewed distribution, top32={top} total={total}"
+        );
+    }
+
+    #[test]
+    fn documents_are_bos_separated() {
+        let c = Corpus::new(512, 0);
+        let s = c.sequence(Split::Train, 3, 2048);
+        let bos_count = s.iter().filter(|&&t| t == BOS).count();
+        assert!(bos_count >= 2, "long sequences span multiple documents");
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // Bigram repetition: structured corpus repeats context→token pairs
+        // far more than a uniform one would.
+        let c = Corpus::new(512, 0);
+        let s = c.sequence(Split::Train, 0, 8192);
+        use std::collections::HashMap;
+        let mut bigrams: HashMap<(u32, u32), usize> = HashMap::new();
+        for w in s.windows(2) {
+            *bigrams.entry((w[0], w[1])).or_default() += 1;
+        }
+        let max_rep = bigrams.values().copied().max().unwrap();
+        assert!(max_rep > 8, "expected repeated bigrams, max={max_rep}");
+    }
+}

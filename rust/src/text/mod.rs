@@ -1,0 +1,20 @@
+//! Tokenizer and synthetic corpus — the C4 substitute.
+//!
+//! The paper calibrates and evaluates on C4 (Raffel et al. 2020), which is
+//! unavailable offline. What the compression methods actually consume is the
+//! *distribution of KV-cache activations*, which requires (i) a non-trivial
+//! token distribution (Zipfian unigrams, local syntax-like structure) and
+//! (ii) disjoint train/validation splits. We generate such a corpus with a
+//! seeded second-order Markov chain over a small vocabulary:
+//!
+//! * unigram marginals follow a Zipf law (like natural text);
+//! * bigram transitions are sparse and deterministic given the seed, giving
+//!   the model real sequential structure to learn during the short training
+//!   phase (so caches are data-adapted, not random-projections of noise);
+//! * "documents" are separated by a BOS token, mirroring packed C4 shards.
+
+pub mod corpus;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, Split};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,93 @@
+//! Byte-level tokenizer with a few reserved special tokens.
+//!
+//! Requests entering the serving stack are plain text; the engine needs a
+//! deterministic, training-free tokenizer. We use byte-level tokenization
+//! (every UTF-8 byte is a token, offset by the number of specials), which is
+//! lossless and vocabulary-bounded — the same trick Llama-family tokenizers
+//! use as their byte fallback.
+
+/// Special token ids.
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const PAD: u32 = 2;
+/// Number of reserved special tokens; byte `b` maps to `b + SPECIALS`.
+pub const SPECIALS: u32 = 3;
+
+/// Byte-level tokenizer. Vocab size is `256 + SPECIALS`.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256 + SPECIALS as usize
+    }
+
+    /// Encode text to token ids, optionally wrapping with BOS/EOS.
+    pub fn encode(&self, text: &str, add_bos: bool, add_eos: bool) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 2);
+        if add_bos {
+            out.push(BOS);
+        }
+        out.extend(text.bytes().map(|b| b as u32 + SPECIALS));
+        if add_eos {
+            out.push(EOS);
+        }
+        out
+    }
+
+    /// Decode token ids back to text; specials are dropped, invalid UTF-8 is
+    /// replaced (lossy) — decoding never fails.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t >= SPECIALS && t < 256 + SPECIALS)
+            .map(|&t| (t - SPECIALS) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tok = ByteTokenizer;
+        let s = "hello, kv-cache!";
+        let ids = tok.encode(s, true, true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(tok.decode(&ids), s);
+    }
+
+    #[test]
+    fn roundtrip_unicode() {
+        let tok = ByteTokenizer;
+        let s = "σ₁ ≥ σ₂ — attention! é";
+        assert_eq!(tok.decode(&tok.encode(s, false, false)), s);
+    }
+
+    #[test]
+    fn specials_are_disjoint_from_bytes() {
+        let tok = ByteTokenizer;
+        let ids = tok.encode("\u{0}\u{1}\u{2}", false, false);
+        // Raw control bytes encode above SPECIALS, never colliding with
+        // BOS/EOS/PAD.
+        assert!(ids.iter().all(|&t| t >= SPECIALS));
+        assert_eq!(tok.vocab_size(), 259);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_bytes() {
+        forall("byte tokenizer roundtrip", 64, |g| {
+            let n = g.usize_in(0, 64);
+            let s: String = (0..n)
+                .map(|_| char::from_u32(g.usize_in(32, 126) as u32).unwrap())
+                .collect();
+            let tok = ByteTokenizer;
+            assert_eq!(tok.decode(&tok.encode(&s, true, false)), s);
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation utilities: deterministic RNG, thread pool, stats/timing, and a
+//! mini property-testing harness. These replace `rand`, `rayon`, `criterion`
+//! and `proptest`, none of which are available in the offline build
+//! environment (see DESIGN.md §7).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use rng::{Pcg64, SplitMix64};
+pub use stats::{fmt_bytes, fmt_duration, Summary, Timer};
+pub use threadpool::{global_pool, parallel_for, ThreadPool};

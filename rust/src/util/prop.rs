@@ -1,0 +1,172 @@
+//! A miniature property-based testing harness.
+//!
+//! `proptest` is unavailable in the offline build environment, so this module
+//! provides the small subset the test suite needs: run a property over many
+//! seeded random cases, and on failure report the exact case index + seed so
+//! the failure replays deterministically. Generators are just closures over
+//! [`Pcg64`].
+//!
+//! Usage (`no_run`: doctest binaries don't get the xla rpath in this image):
+//! ```no_run
+//! use kqsvd::util::prop::{forall, Gen};
+//! forall("sum is commutative", 256, |g| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Case-local generator handle passed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    /// Human-readable log of the values drawn, shown on failure.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Self {
+            rng: Pcg64::from_root(seed, case),
+            log: Vec::new(),
+        }
+    }
+
+    /// Raw access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// usize uniform in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = lo + self.rng.below_usize(hi - lo + 1);
+        self.log.push(format!("usize {v}"));
+        v
+    }
+
+    /// f64 uniform in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.log.push(format!("f64 {v:.6}"));
+        v
+    }
+
+    /// bool with probability `p` of true.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        let v = self.rng.uniform() < p;
+        self.log.push(format!("bool {v}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below_usize(xs.len());
+        self.log.push(format!("choice idx {i}"));
+        &xs[i]
+    }
+
+    /// Vec of standard-normal f32 of length n.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal(&mut v, std);
+        self.log.push(format!("normal_vec len {n}"));
+        v
+    }
+}
+
+/// Root seed for the whole property run; override with KQSVD_PROP_SEED to
+/// replay a failure.
+fn root_seed() -> u64 {
+    std::env::var("KQSVD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Number of cases multiplier; KQSVD_PROP_CASES scales all `forall` calls.
+fn case_multiplier() -> f64 {
+    std::env::var("KQSVD_PROP_CASES_MULT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Run `prop` over `cases` random cases. Panics (with replay info) on the
+/// first failing case.
+pub fn forall<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let seed = root_seed();
+    let cases = ((cases as f64 * case_multiplier()) as u64).max(1);
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}):\n  {msg}\n  drawn: [{}]\n  replay: KQSVD_PROP_SEED={seed}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reflexive eq", 64, |g| {
+            let x = g.usize_in(0, 100);
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    fn generators_stay_in_bounds() {
+        forall("bounds", 256, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f64_in(-1.0, 2.0);
+            assert!((-1.0..2.0).contains(&f));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 8, |_g| {
+                panic!("intentional");
+            });
+        });
+        let err = r.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic_given_seed() {
+        use std::sync::Mutex;
+        let first: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        forall("collect1", 16, |g| {
+            first.lock().unwrap().push(g.usize_in(0, 1000));
+        });
+        let second: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        forall("collect2", 16, |g| {
+            second.lock().unwrap().push(g.usize_in(0, 1000));
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+}

@@ -1,0 +1,288 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment provides no `rand` crate, and reproducibility
+//! of every experiment is a hard requirement (the paper fixes seed 0 for all
+//! runs, Appendix C), so we implement a small, well-understood generator stack
+//! from scratch:
+//!
+//! * [`SplitMix64`] — the seeding/stream-splitting generator (Steele et al.,
+//!   "Fast Splittable Pseudorandom Number Generators", OOPSLA 2014). Used to
+//!   expand a single `u64` seed into independent streams.
+//! * [`Pcg64`] — PCG-XSH-RR 64/32 (O'Neill 2014) as the workhorse generator:
+//!   small state, excellent statistical quality, trivially portable.
+//! * Gaussian sampling via the Marsaglia polar method, cached spare variate.
+//!
+//! All experiment entry points derive their streams from a root seed so that
+//! `--seed 0` reproduces the paper protocol exactly run-to-run.
+
+/// SplitMix64: used for seeding and for cheap stream derivation.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32: the main generator used throughout the library.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Cached spare normal variate from the polar method.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg64 {
+    /// Seed a generator. `seed` selects the starting state, `stream` selects
+    /// one of 2^63 independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+            spare_normal: None,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed from a root seed, expanding through SplitMix64 (recommended).
+    pub fn from_root(root_seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(root_seed ^ stream.wrapping_mul(0xA24B_AED4_963E_E407));
+        Self::new(sm.next_u64(), sm.next_u64())
+    }
+
+    /// Derive an independent child generator (for per-layer / per-head / per
+    /// worker streams).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let a = self.next_u64();
+        Pcg64::from_root(a ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15), tag)
+    }
+
+    /// Next 32 random bits.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection
+    /// method to avoid modulo bias.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0, "below(0) is meaningless");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via the Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare_normal.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with given mean/std, as f32.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        (self.normal() as f32) * std + mean
+    }
+
+    /// Fill a slice with N(0, std) f32 values.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(0.0, std);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "weighted_choice needs positive mass");
+        let mut t = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values for SplitMix64 with seed 1234567 (computed from the
+        // canonical algorithm definition).
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(sm2.next_u64(), a);
+        assert_eq!(sm2.next_u64(), b);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        let mut c = Pcg64::new(42, 2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::new(7, 7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut rng = Pcg64::new(3, 1);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg64::new(11, 4);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 7;
+            assert!(
+                (c as i64 - expected as i64).abs() < (expected as i64) / 10,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5, 9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut root = Pcg64::new(0, 0);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let xs: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(1, 1);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut rng = Pcg64::new(2, 2);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.weighted_choice(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,242 @@
+//! A small scoped work-stealing-free thread pool.
+//!
+//! `rayon` is unavailable in the offline build environment; the library's
+//! data-parallel needs are simple (parallel row-blocks in matmul, parallel
+//! per-head calibration, parallel workers in the coordinator), so we provide a
+//! long-lived pool with a `scope`-style `parallel_for` built on
+//! `std::thread::scope` semantics via channels.
+//!
+//! Design notes:
+//! * One global pool, lazily initialized, sized to `available_parallelism`.
+//!   (Overridable via `KQSVD_THREADS` for benchmarking.)
+//! * `parallel_for(n, chunk, f)` executes `f(range)` over disjoint index
+//!   ranges on the pool and blocks until all chunks complete. Panics in
+//!   workers are propagated to the caller.
+//! * Jobs borrow from the caller's stack: internally we erase lifetimes with
+//!   a raw pointer + completion latch, which is sound because `parallel_for`
+//!   does not return until every job has finished running.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: Mutex<bool>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Self {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            panicked: Mutex::new(false),
+        }
+    }
+
+    fn done(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn mark_panic(&self) {
+        *self.panicked.lock().unwrap() = true;
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r != 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+/// A fixed-size thread pool executing boxed jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Sender<Job>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` worker threads.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("kqsvd-worker-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn worker");
+        }
+        Self { tx, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a `'static` job.
+    pub fn submit(&self, job: Job) {
+        self.tx.send(job).expect("pool alive");
+    }
+
+    /// Run `f` over `0..n` split into contiguous ranges of at most
+    /// `chunk` elements, in parallel; blocks until all complete.
+    ///
+    /// `f` receives `(start, end)` half-open ranges.
+    pub fn parallel_for<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let njobs = n.div_ceil(chunk);
+        if njobs == 1 {
+            f(0, n);
+            return;
+        }
+        let latch = Arc::new(Latch::new(njobs));
+        // Erase the borrow: safe because `latch.wait()` below keeps this stack
+        // frame alive until every job referencing `f` has completed.
+        let f_ptr = &f as *const F as usize;
+        for j in 0..njobs {
+            let start = j * chunk;
+            let end = ((j + 1) * chunk).min(n);
+            let latch = Arc::clone(&latch);
+            self.submit(Box::new(move || {
+                let fr = unsafe { &*(f_ptr as *const F) };
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    fr(start, end);
+                }));
+                if result.is_err() {
+                    latch.mark_panic();
+                }
+                latch.done();
+            }));
+        }
+        latch.wait();
+        if *latch.panicked.lock().unwrap() {
+            panic!("worker panicked inside parallel_for");
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // pool dropped
+        }
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-global pool. Size = `KQSVD_THREADS` env var if set, else
+/// `available_parallelism`.
+pub fn global_pool() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let size = std::env::var("KQSVD_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            });
+        ThreadPool::new(size)
+    })
+}
+
+/// Convenience: `parallel_for` on the global pool with an automatically
+/// chosen chunk size (≈4 chunks per worker for load balance).
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let pool = global_pool();
+    let chunk = n.div_ceil(pool.size() * 4).max(1);
+    pool.parallel_for(n, chunk, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(n, 17, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..10_000).collect();
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(data.len(), 128, |s, e| {
+            let part: u64 = data[s..e].iter().sum();
+            total.fetch_add(part as usize, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst) as u64, (0..10_000u64).sum());
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, 8, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn single_chunk_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let flag = AtomicUsize::new(0);
+        pool.parallel_for(5, 100, |s, e| {
+            assert_eq!((s, e), (0, 5));
+            flag.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(10, 1, |s, _| {
+            if s == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_works() {
+        let sum = AtomicUsize::new(0);
+        parallel_for(100, |s, e| {
+            sum.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 100);
+    }
+}

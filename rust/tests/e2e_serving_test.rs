@@ -1,0 +1,99 @@
+//! End-to-end serving integration: full request lifecycle through the router
+//! + continuous batcher + compressed KV cache, on both backends, checking
+//! that the PJRT path (AOT Pallas artifacts) generates the *same tokens* as
+//! the pure-Rust path.
+//!
+//! PJRT cases self-skip when `artifacts/` is missing (`make artifacts`).
+
+use kqsvd::config::{Config, Method};
+use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::server::{build_engine, ServingEngine};
+use std::path::Path;
+
+fn engine_for(preset: &str, method: Method, backend: &str, tag: &str) -> anyhow::Result<ServingEngine> {
+    let mut cfg = Config::from_preset(preset).map_err(anyhow::Error::msg)?;
+    cfg.method = method;
+    cfg.calib.n_calib_seqs = 2;
+    cfg.calib.calib_seq_len = 48;
+    cfg.serve.backend = backend.to_string();
+    let dir = std::env::temp_dir().join(format!("kqsvd-e2e-{preset}-{}-{tag}", method.name()));
+    std::fs::remove_dir_all(&dir).ok();
+    cfg.run_dir = dir.to_str().unwrap().to_string();
+    build_engine(&cfg)
+}
+
+fn run_workload(engine: &mut ServingEngine, n_reqs: u64) -> Vec<kqsvd::coordinator::Completion> {
+    let mut router = Router::new(BatcherConfig {
+        max_batch: 4,
+        max_queue: 64,
+        prefill_chunk: 16,
+    });
+    for i in 0..n_reqs {
+        let prompt: Vec<u32> = (0..8).map(|j| 1 + ((i * 13 + j * 7) % 60) as u32).collect();
+        router.submit(engine, Request::new(i, prompt, 6)).unwrap();
+    }
+    let mut done = router.run_offline(engine).unwrap();
+    done.sort_by_key(|c| c.id);
+    done
+}
+
+#[test]
+fn rust_backend_serves_all_methods() {
+    for method in [Method::None, Method::KSvd, Method::Eigen, Method::KqSvd] {
+        let mut eng = engine_for("test-tiny", method, "rust", "srv").unwrap();
+        let done = run_workload(&mut eng, 5);
+        assert_eq!(done.len(), 5, "{method:?}");
+        for c in &done {
+            assert_eq!(c.tokens.len(), 6);
+        }
+        assert_eq!(eng.cache.live_sequences(), 0);
+    }
+}
+
+#[test]
+fn pjrt_backend_generates_identical_tokens_to_rust() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for (preset, method) in [
+        ("test-tiny", Method::KqSvd),
+        ("test-tiny-gqa", Method::KqSvd),
+        ("test-tiny", Method::None),
+    ] {
+        let mut rust_eng = engine_for(preset, method, "rust", "cmp-r").unwrap();
+        let rust_out = run_workload(&mut rust_eng, 4);
+        let mut pjrt_eng = engine_for(preset, method, "pjrt", "cmp-p").unwrap();
+        let pjrt_out = run_workload(&mut pjrt_eng, 4);
+        assert_eq!(rust_out.len(), pjrt_out.len());
+        for (a, b) in rust_out.iter().zip(&pjrt_out) {
+            assert_eq!(
+                a.tokens, b.tokens,
+                "{preset}/{method:?}: token divergence between backends"
+            );
+        }
+    }
+}
+
+#[test]
+fn backpressure_under_tiny_budget() {
+    let mut eng = engine_for("test-tiny", Method::KqSvd, "rust", "bp").unwrap();
+    // Shrink the budget to roughly two sequences' worth.
+    let two_seqs = eng.cache.bytes_for_tokens(14) * 2;
+    eng.cache = kqsvd::kvcache::KvCacheManager::new(eng.cache.spec().clone(), two_seqs);
+    let done = run_workload(&mut eng, 6);
+    assert_eq!(done.len(), 6, "everything must eventually complete");
+    assert_eq!(eng.cache.used_bytes(), 0);
+}
+
+#[test]
+fn compressed_cache_reports_smaller_footprint() {
+    let eng_exact = engine_for("test-tiny", Method::None, "rust", "fp").unwrap();
+    let eng_comp = engine_for("test-tiny", Method::KqSvd, "rust", "fp").unwrap();
+    let full = eng_exact.cache_bytes_per_token();
+    let comp = eng_comp.cache_bytes_per_token();
+    assert!(
+        comp < full,
+        "compressed {comp} B/token must beat uncompressed {full} B/token"
+    );
+}

@@ -1,0 +1,237 @@
+//! Cross-layer integration: the AOT PJRT path (Python-lowered L2 graph with
+//! the L1 Pallas kernel inside) must agree numerically with the pure-Rust
+//! attention backend on identical inputs.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests self-skip with a
+//! warning when artifacts are absent so `cargo test` works standalone.
+
+use kqsvd::attn::{decode_attn_layer, online_attn};
+use kqsvd::kvcache::PagedBuf;
+use kqsvd::linalg::Mat;
+use kqsvd::runtime::{AttnDecodeInputs, PjrtEngine, Registry};
+use kqsvd::util::rng::Pcg64;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn fill_buf(rows: &Mat, page: usize) -> PagedBuf {
+    let mut b = PagedBuf::new(rows.cols(), page);
+    for i in 0..rows.rows() {
+        b.push_row(rows.row(i));
+    }
+    b
+}
+
+/// Build random-but-deterministic inputs for a bucket and the equivalent
+/// per-sequence Rust-side structures.
+struct Case {
+    inp: AttnDecodeInputs,
+    expect: Mat, // (B, D) from the rust backend
+}
+
+fn make_case(meta: &kqsvd::runtime::ArtifactMeta, valid_lens: &[usize], seed: u64) -> Case {
+    let (b, t) = (meta.batch, meta.t);
+    let (h, hkv, d) = (meta.n_heads, meta.n_kv_heads, meta.d_head);
+    let (r, rv) = (meta.r, meta.rv);
+    let dm = h * d;
+    let group = h / hkv;
+    assert_eq!(valid_lens.len(), b);
+    let mut rng = Pcg64::new(seed, 7);
+
+    let bproj: Vec<Mat> = (0..hkv).map(|_| Mat::randn(d, r, 0.5, &mut rng)).collect();
+    let folds: Vec<Mat> = (0..h).map(|_| Mat::randn(rv, dm, 0.5, &mut rng)).collect();
+
+    let mut q = Vec::with_capacity(b * h * d);
+    let mut ck = vec![0.0f32; b * hkv * t * r];
+    let mut cv = vec![0.0f32; b * hkv * t * rv];
+    let mut mask = vec![-1e9f32; b * t];
+    let mut expect = Mat::zeros(b, dm);
+
+    for bi in 0..b {
+        let len = valid_lens[bi];
+        let q_heads: Vec<Vec<f32>> = (0..h)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let cks: Vec<Mat> = (0..hkv).map(|_| Mat::randn(len, r, 1.0, &mut rng)).collect();
+        let cvs: Vec<Mat> = (0..hkv).map(|_| Mat::randn(len, rv, 1.0, &mut rng)).collect();
+
+        for qh in &q_heads {
+            q.extend_from_slice(qh);
+        }
+        for kv in 0..hkv {
+            for ti in 0..len {
+                let off = ((bi * hkv + kv) * t + ti) * r;
+                ck[off..off + r].copy_from_slice(cks[kv].row(ti));
+                let offv = ((bi * hkv + kv) * t + ti) * rv;
+                cv[offv..offv + rv].copy_from_slice(cvs[kv].row(ti));
+            }
+        }
+        for ti in 0..len {
+            mask[bi * t + ti] = 0.0;
+        }
+
+        // Rust-side expectation.
+        let k_bufs: Vec<PagedBuf> = cks.iter().map(|m| fill_buf(m, 16)).collect();
+        let v_bufs: Vec<PagedBuf> = cvs.iter().map(|m| fill_buf(m, 16)).collect();
+        let out = decode_attn_layer(
+            &q_heads,
+            &bproj.iter().collect::<Vec<_>>(),
+            &folds.iter().collect::<Vec<_>>(),
+            &k_bufs,
+            &v_bufs,
+            meta.scale as f32,
+            group,
+            dm,
+        );
+        expect.row_mut(bi).copy_from_slice(&out);
+    }
+
+    let mut bproj_flat = Vec::with_capacity(hkv * d * r);
+    for m in &bproj {
+        bproj_flat.extend_from_slice(m.data());
+    }
+    let mut folds_flat = Vec::with_capacity(h * rv * dm);
+    for m in &folds {
+        folds_flat.extend_from_slice(m.data());
+    }
+
+    Case {
+        inp: AttnDecodeInputs {
+            q,
+            ck,
+            cv,
+            mask,
+            bproj: bproj_flat,
+            folds: folds_flat,
+        },
+        expect,
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_backend_comp_and_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    for (preset, variant, batch, valid) in [
+        ("test-tiny", "comp", 1usize, vec![100usize]),
+        ("test-tiny", "exact", 1, vec![128]),
+        ("test-tiny-gqa", "comp", 1, vec![77]),
+        ("test-tiny-gqa", "comp", 8, vec![1, 17, 40, 64, 100, 128, 90, 3]),
+        ("test-tiny-gqa", "exact", 8, vec![5, 128, 33, 64, 2, 90, 128, 1]),
+    ] {
+        let meta = engine
+            .registry()
+            .select(preset, variant, batch, 128, 4)
+            .unwrap_or_else(|| panic!("no artifact for {preset}/{variant}"))
+            .clone();
+        let case = make_case(&meta, &pad_lens(&valid, meta.batch), 42);
+        let got = engine.run_attn_decode(&meta, &case.inp).expect("execute");
+        let diff = got.max_abs_diff(&case.expect);
+        assert!(
+            diff < 2e-3,
+            "{preset}/{variant} b{batch}: PJRT vs rust diff {diff}"
+        );
+    }
+}
+
+fn pad_lens(valid: &[usize], b: usize) -> Vec<usize> {
+    let mut v = valid.to_vec();
+    while v.len() < b {
+        v.push(1);
+    }
+    v.truncate(b);
+    v
+}
+
+#[test]
+fn pjrt_executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    let meta = engine
+        .registry()
+        .select("test-tiny", "comp", 1, 128, 4)
+        .unwrap()
+        .clone();
+    let case = make_case(&meta, &[64], 1);
+    engine.run_attn_decode(&meta, &case.inp).unwrap();
+    assert_eq!(engine.compiled_count(), 1);
+    engine.run_attn_decode(&meta, &case.inp).unwrap();
+    assert_eq!(engine.compiled_count(), 1, "second call must hit the cache");
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::new(dir).expect("engine");
+    let meta = engine
+        .registry()
+        .select("test-tiny", "comp", 1, 128, 4)
+        .unwrap()
+        .clone();
+    let mut case = make_case(&meta, &[64], 2);
+    case.inp.q.pop();
+    assert!(engine.run_attn_decode(&meta, &case.inp).is_err());
+}
+
+#[test]
+fn manifest_covers_declared_presets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).expect("registry");
+    for preset in ["mha-small", "test-tiny", "test-tiny-gqa"] {
+        assert!(
+            reg.metas.iter().any(|m| m.preset == preset),
+            "missing artifacts for {preset}"
+        );
+        // Every preset has both variants.
+        for variant in ["comp", "exact"] {
+            assert!(reg
+                .metas
+                .iter()
+                .any(|m| m.preset == preset && m.variant == variant));
+        }
+    }
+}
+
+#[test]
+fn online_attn_handles_bucket_padding_semantics() {
+    // Validates the padding contract locally (mask handles T-padding, zero
+    // columns handle rank padding) — mirrors python/tests/test_model.py.
+    let mut rng = Pcg64::new(5, 5);
+    let t = 33;
+    let r = 4;
+    let ck = Mat::randn(t, r, 1.0, &mut rng);
+    let cv = Mat::randn(t, r, 1.0, &mut rng);
+    let q: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let base = online_attn(&q, &fill(&ck, 8), &fill(&cv, 8), 0.5);
+
+    // Rank padding with zero columns.
+    let pad_cols = |m: &Mat, extra: usize| {
+        let mut out = Mat::zeros(m.rows(), m.cols() + extra);
+        for i in 0..m.rows() {
+            out.row_mut(i)[..m.cols()].copy_from_slice(m.row(i));
+        }
+        out
+    };
+    let mut qp = q.clone();
+    qp.extend([0.0; 3]);
+    let padded = online_attn(&qp, &fill(&pad_cols(&ck, 3), 8), &fill(&cv, 8), 0.5);
+    for (a, b) in base.iter().zip(&padded) {
+        assert!((a - b).abs() < 1e-5);
+    }
+
+    fn fill(rows: &Mat, page: usize) -> PagedBuf {
+        let mut b = PagedBuf::new(rows.cols(), page);
+        for i in 0..rows.rows() {
+            b.push_row(rows.row(i));
+        }
+        b
+    }
+}
