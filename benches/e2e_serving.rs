@@ -1,16 +1,33 @@
 //! E2E — end-to-end serving benchmark: throughput, latency and cache bytes,
 //! exact vs KQ-SVD-compressed cache, through the full router/batcher stack.
-//! Adds a batch-size sweep (the serving-side payoff of cache compression:
-//! more sequences fit in the same budget).
+//! Covers both serving modes — offline drain (`Router::run_offline`) and the
+//! streaming session API (`Router::serve` + `EngineHandle`) — which share
+//! one scheduling path, so the delta between the rows is pure session
+//! overhead (channels + engine thread).
 //!
 //! Run: `cargo bench --bench e2e_serving`  (PJRT row needs `make artifacts`)
 
 use kqsvd::bench_support::{f as fnum, Table};
 use kqsvd::config::{Config, Method};
-use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::coordinator::{BatcherConfig, Request, RequestHandle, Router};
 use kqsvd::server::build_engine;
 use kqsvd::text::{Corpus, Split};
 use kqsvd::util::stats::fmt_bytes;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Offline,
+    Session,
+}
+
+impl Mode {
+    fn name(self) -> &'static str {
+        match self {
+            Mode::Offline => "offline",
+            Mode::Session => "session",
+        }
+    }
+}
 
 struct RunResult {
     tok_per_s: f64,
@@ -21,7 +38,13 @@ struct RunResult {
     peak_bytes: u64,
 }
 
-fn run(method: Method, backend: &str, max_batch: usize, n_requests: usize) -> anyhow::Result<RunResult> {
+fn run(
+    method: Method,
+    backend: &str,
+    max_batch: usize,
+    n_requests: usize,
+    mode: Mode,
+) -> anyhow::Result<RunResult> {
     let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
     cfg.method = method;
     cfg.serve.backend = backend.into();
@@ -30,26 +53,49 @@ fn run(method: Method, backend: &str, max_batch: usize, n_requests: usize) -> an
     cfg.calib.calib_seq_len = 256;
     cfg.run_dir = format!("runs/bench_e2e_{}_{}", method.name(), backend);
     let mut engine = build_engine(&cfg)?;
+    let cache_per_tok = engine.cache_bytes_per_token();
     let mut router = Router::new(BatcherConfig::from(&cfg.serve));
     let corpus = Corpus::new(cfg.model.vocab_size, 99);
-    for i in 0..n_requests {
-        let prompt = corpus.sequence(Split::Validation, 2_000 + i as u64, 96);
-        router
-            .submit(&engine, Request::new(i as u64, prompt, 32))
-            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
-    }
-    let done = router.run_offline(&mut engine)?;
-    assert_eq!(done.len(), n_requests);
-    let m = &router.metrics;
-    let (_, _, ttft_p50, ttft_p95, ..) = m.summary_stats("ttft_ms").unwrap();
-    let (_, tpot_mean, ..) = m.summary_stats("tpot_ms").unwrap();
+    let prompts: Vec<Vec<u32>> = (0..n_requests)
+        .map(|i| corpus.sequence(Split::Validation, 2_000 + i as u64, 96))
+        .collect();
+
+    let metrics = match mode {
+        Mode::Offline => {
+            for (i, prompt) in prompts.into_iter().enumerate() {
+                router
+                    .submit(&engine, Request::new(i as u64, prompt, 32))
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            }
+            let done = router.run_offline(&mut engine)?;
+            assert_eq!(done.len(), n_requests);
+            router.metrics.clone()
+        }
+        Mode::Session => {
+            let handle = router.serve(Box::new(engine));
+            let submissions: Vec<RequestHandle> = prompts
+                .into_iter()
+                .enumerate()
+                .map(|(i, prompt)| handle.submit(Request::new(i as u64, prompt, 32)))
+                .collect();
+            for rh in submissions {
+                rh.wait()?;
+            }
+            let m = handle.metrics();
+            handle.join()?;
+            m
+        }
+    };
+
+    let (_, _, ttft_p50, ttft_p95, ..) = metrics.summary_stats("ttft_ms").unwrap();
+    let (_, tpot_mean, ..) = metrics.summary_stats("tpot_ms").unwrap();
     Ok(RunResult {
-        tok_per_s: m.gauge_value("decode_tok_per_s").unwrap_or(0.0),
+        tok_per_s: metrics.gauge_value("decode_tok_per_s").unwrap_or(0.0),
         ttft_p50,
         ttft_p95,
         tpot_mean,
-        cache_per_tok: engine.cache_bytes_per_token(),
-        peak_bytes: engine.cache.peak_bytes(),
+        cache_per_tok,
+        peak_bytes: metrics.gauge_value("cache_peak_bytes").unwrap_or(0.0) as u64,
     })
 }
 
@@ -57,8 +103,8 @@ fn main() -> anyhow::Result<()> {
     let n_requests = 16;
     println!("E2E serving bench: {n_requests} requests × (96 prompt + 32 gen), mha-small\n");
     let mut t = Table::new(&[
-        "method", "backend", "batch", "tok/s", "ttft p50(ms)", "ttft p95(ms)", "tpot(ms)",
-        "cache/tok", "peak cache",
+        "method", "backend", "mode", "batch", "tok/s", "ttft p50(ms)", "ttft p95(ms)",
+        "tpot(ms)", "cache/tok", "peak cache",
     ]);
     let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
     let mut comp_vs_exact = (0.0f64, 0.0f64);
@@ -72,33 +118,43 @@ fn main() -> anyhow::Result<()> {
             println!("  (skipping pjrt rows — run `make artifacts`)");
             continue;
         }
+        // The session rows only run on the rust backend: they measure
+        // streaming overhead, which is backend-independent.
+        let modes: &[Mode] = if backend == "rust" {
+            &[Mode::Offline, Mode::Session]
+        } else {
+            &[Mode::Offline]
+        };
         for batch in [1usize, 8] {
-            let r = run(method, backend, batch, n_requests)?;
-            if backend == "rust" && batch == 8 {
-                if method == Method::None {
-                    comp_vs_exact.0 = r.tok_per_s;
-                } else {
-                    comp_vs_exact.1 = r.tok_per_s;
+            for &mode in modes {
+                let r = run(method, backend, batch, n_requests, mode)?;
+                if backend == "rust" && batch == 8 && mode == Mode::Offline {
+                    if method == Method::None {
+                        comp_vs_exact.0 = r.tok_per_s;
+                    } else {
+                        comp_vs_exact.1 = r.tok_per_s;
+                    }
                 }
+                t.row(&[
+                    method.name().into(),
+                    backend.into(),
+                    mode.name().into(),
+                    batch.to_string(),
+                    fnum(r.tok_per_s, 1),
+                    fnum(r.ttft_p50, 2),
+                    fnum(r.ttft_p95, 2),
+                    fnum(r.tpot_mean, 3),
+                    fmt_bytes(r.cache_per_tok as u64),
+                    fmt_bytes(r.peak_bytes),
+                ]);
             }
-            t.row(&[
-                method.name().into(),
-                backend.into(),
-                batch.to_string(),
-                fnum(r.tok_per_s, 1),
-                fnum(r.ttft_p50, 2),
-                fnum(r.ttft_p95, 2),
-                fnum(r.tpot_mean, 3),
-                fmt_bytes(r.cache_per_tok as u64),
-                fmt_bytes(r.peak_bytes),
-            ]);
         }
     }
     t.print();
     t.write_csv("e2e_serving.csv")?;
     let (exact, comp) = comp_vs_exact;
     println!(
-        "\ncompressed/exact decode throughput at batch 8 (rust): {:.2}×",
+        "\ncompressed/exact decode throughput at batch 8 (rust, offline): {:.2}×",
         comp / exact.max(1e-9)
     );
     println!("CSV → bench_out/e2e_serving.csv");

@@ -7,9 +7,11 @@
 //! Run: `cargo run --release --example quickstart`
 
 use kqsvd::calib::calibrate;
-use kqsvd::config::{preset, CalibConfig, Method};
+use kqsvd::config::{preset, CalibConfig, Config, Method};
+use kqsvd::coordinator::{BatcherConfig, Request, Router, TokenEvent};
 use kqsvd::eval::{eval_method, quick_calib};
 use kqsvd::model::Transformer;
+use kqsvd::server::{Backend, EngineBuilder};
 use kqsvd::text::Corpus;
 use kqsvd::util::stats::fmt_bytes;
 
@@ -56,4 +58,40 @@ fn main() {
         fmt_bytes((mcfg.n_layers * mcfg.n_kv_heads * 2 * mcfg.d_head() * 4) as u64)
     );
     println!("→ KQ-SVD gives the lowest score/output error at identical rank (Theorem 2).");
+
+    // 4. Serve one request through the streaming session API: assemble a
+    //    tiny engine fully in memory with the builder, submit, and print
+    //    tokens as the engine emits them.
+    let cfg = Config::from_preset("test-tiny").expect("preset");
+    let tmodel = Transformer::init(cfg.model.clone());
+    let tcorpus = Corpus::new(cfg.model.vocab_size, 0);
+    let tcalib = CalibConfig {
+        n_calib_seqs: 2,
+        calib_seq_len: 32,
+        ..quick_calib()
+    };
+    let (tproj, _, _) = calibrate(&tmodel, &tcorpus, &tcalib, Method::KqSvd);
+    let engine = EngineBuilder::new(&cfg)
+        .with_model(tmodel)
+        .with_projections(tproj)
+        .with_backend(Backend::Rust)
+        .build()
+        .expect("engine assembly");
+    let handle = Router::new(BatcherConfig::from(&cfg.serve)).serve(Box::new(engine));
+    let rh = handle.submit(Request::new(0, vec![3, 1, 4, 1, 5], 8));
+    print!("\nstreaming one request on test-tiny: ");
+    for ev in rh.events().iter() {
+        match ev {
+            TokenEvent::Token { token, .. } => print!("{token} "),
+            TokenEvent::Finished(c) => {
+                println!("→ finished ({:?})", c.reason);
+                break;
+            }
+            TokenEvent::Rejected { error, .. } => {
+                println!("→ rejected ({error})");
+                break;
+            }
+        }
+    }
+    handle.join().expect("engine shutdown");
 }

@@ -1,18 +1,18 @@
-//! End-to-end serving driver (the DESIGN.md E2E experiment).
+//! End-to-end serving driver (the DESIGN.md §5 E2E experiment).
 //!
 //! Loads the mha-small model, calibrates KQ-SVD projections, then serves a
-//! batched request workload through the full stack — router → continuous
-//! batcher → compressed paged KV cache → attention backend — once with the
-//! exact cache and once compressed, reporting latency, throughput and cache
-//! bytes. Pass `--backend pjrt` to run the decode hot path through the AOT
-//! Pallas artifacts instead of the pure-Rust kernel (requires
-//! `make artifacts`).
+//! batched request workload through the full streaming stack — session
+//! handles → router → continuous batcher → compressed paged KV cache →
+//! attention backend — once with the exact cache and once compressed,
+//! reporting latency, throughput and cache bytes. Pass `--backend pjrt` to
+//! run the decode hot path through the AOT Pallas artifacts instead of the
+//! pure-Rust kernel (requires `make artifacts` and the `pjrt` feature).
 //!
 //! Run: `cargo run --release --example serve_batch [-- --requests 32 --backend rust]`
 
 use kqsvd::cli::Args;
 use kqsvd::config::{Config, Method};
-use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::coordinator::{BatcherConfig, Request, RequestHandle, Router};
 use kqsvd::server::build_engine;
 use kqsvd::text::{Corpus, Split};
 use kqsvd::util::stats::fmt_bytes;
@@ -25,23 +25,30 @@ fn run(method: Method, backend: &str, n_requests: usize, prompt_len: usize, gen_
     cfg.calib.calib_seq_len = 256;
     cfg.run_dir = format!("runs/serve_batch_{}_{}", method.name(), backend);
 
-    let mut engine = build_engine(&cfg)?;
+    let engine = build_engine(&cfg)?;
     let bytes_per_token = engine.cache_bytes_per_token();
-    let mut router = Router::new(BatcherConfig::from(&cfg.serve));
+    let router = Router::new(BatcherConfig::from(&cfg.serve));
+    let handle = router.serve(Box::new(engine));
     let corpus = Corpus::new(cfg.model.vocab_size, 777);
-    for i in 0..n_requests {
-        let prompt = corpus.sequence(Split::Validation, 500 + i as u64, prompt_len);
-        router
-            .submit(&engine, Request::new(i as u64, prompt, gen_len))
-            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let submissions: Vec<RequestHandle> = (0..n_requests)
+        .map(|i| {
+            let prompt = corpus.sequence(Split::Validation, 500 + i as u64, prompt_len);
+            handle.submit(Request::new(i as u64, prompt, gen_len))
+        })
+        .collect();
+    let mut completed = 0usize;
+    for rh in submissions {
+        rh.wait()?;
+        completed += 1;
     }
-    let done = router.run_offline(&mut engine)?;
-    assert_eq!(done.len(), n_requests);
+    assert_eq!(completed, n_requests);
 
-    let m = &router.metrics;
+    let m = handle.metrics();
+    handle.join()?;
     let (_, ttft_mean, ttft_p50, ttft_p95, ..) = m.summary_stats("ttft_ms").unwrap();
     let (_, tpot_mean, ..) = m.summary_stats("tpot_ms").unwrap();
     let tok_s = m.gauge_value("decode_tok_per_s").unwrap_or(0.0);
+    let peak = m.gauge_value("cache_peak_bytes").unwrap_or(0.0) as u64;
     println!(
         "{:<8} {:<5} | {:>9.1} | {:>8.2} / {:>8.2} / {:>8.2} | {:>8.3} | {:>12} | {:>10}",
         method.name(),
@@ -52,7 +59,7 @@ fn run(method: Method, backend: &str, n_requests: usize, prompt_len: usize, gen_
         ttft_p95,
         tpot_mean,
         fmt_bytes(bytes_per_token as u64),
-        fmt_bytes(engine.cache.peak_bytes()),
+        fmt_bytes(peak),
     );
     Ok(())
 }
@@ -65,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     let backend = args.str_or("backend", "rust");
 
     println!(
-        "E2E serving: {n_requests} requests × (prompt {prompt_len} + gen {gen_len}) on mha-small\n"
+        "E2E serving: {n_requests} requests × (prompt {prompt_len} + gen {gen_len}) on mha-small, streaming sessions\n"
     );
     println!(
         "{:<8} {:<5} | {:>9} | {:>8} / {:>8} / {:>8} | {:>8} | {:>12} | {:>10}",

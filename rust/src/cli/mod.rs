@@ -84,6 +84,12 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Typed optional flag: `args.parsed::<u32>("stop-token")`. Returns
+    /// `None` when the flag is absent or fails to parse.
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|s| s.parse().ok())
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -167,6 +173,14 @@ mod tests {
     fn negative_numbers_are_values_not_flags() {
         let a = parse(&["x", "--lo", "-3.5"]);
         assert_eq!(a.f64_or("lo", 0.0), -3.5);
+    }
+
+    #[test]
+    fn typed_optional_flag() {
+        let a = parse(&["x", "--stop-token", "13", "--bad", "zz"]);
+        assert_eq!(a.parsed::<u32>("stop-token"), Some(13));
+        assert_eq!(a.parsed::<u32>("bad"), None);
+        assert_eq!(a.parsed::<i32>("missing"), None);
     }
 
     #[test]

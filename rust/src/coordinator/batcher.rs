@@ -1,25 +1,30 @@
 //! Continuous-batching scheduler: admission control, chunked prefill,
 //! grouped decode — the vLLM-router-shaped core of the serving layer.
 //!
-//! The scheduler is a pure state machine over an [`Engine`] implementation,
-//! which makes every invariant property-testable with a mock engine:
+//! The scheduler is a pure state machine over a `dyn` [`Engine`], which makes
+//! every invariant property-testable with a mock engine and lets backends
+//! (pure Rust, PJRT, future accelerators) live behind `Box<dyn Engine>`:
 //!
-//! * FCFS admission order; admission gated on the engine's cache budget;
+//! * priority admission (FIFO within a priority class); admission gated on
+//!   the engine's cache budget, never skipping past a blocked request;
 //! * prefill is chunked (`prefill_chunk` tokens per step) and prioritized
 //!   over decode (new requests reach their first token fast);
 //! * decode packs every running sequence (≤ `max_batch`) into one step;
+//! * cancellation is observed at every step boundary: a cancelled sequence's
+//!   cache pages are freed immediately, whether queued, mid-prefill, or
+//!   mid-decode;
 //! * a sequence's cache is freed exactly once, on completion;
-//! * token sampling is greedy and deterministic.
+//! * token selection is deterministic per request (greedy, or seeded
+//!   temperature sampling via [`super::request::GenParams`]).
 
-use super::request::{Completion, Request, SeqState};
-#[cfg(test)]
-use super::request::FinishReason;
+use super::request::{CancelToken, Completion, FinishReason, Request, SeqState, SubmitError, TokenEvent};
 use crate::kvcache::SeqId;
-use crate::model::argmax;
 use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-/// What the scheduler needs from an inference engine.
+/// What the scheduler needs from an inference engine. Object-safe: the
+/// coordinator only ever sees `&mut dyn Engine`.
 pub trait Engine {
     /// Register a sequence, reserving budget for its worst-case
     /// `max_total_tokens` (reservation-based admission: no preemption needed).
@@ -41,6 +46,21 @@ pub trait Engine {
     fn decode(&mut self, batch: &[(SeqId, u32)]) -> anyhow::Result<Vec<Vec<f32>>>;
     /// Model context limit.
     fn max_seq(&self) -> usize;
+    /// Could a sequence of `total_tokens` fit an *empty* cache? Used to
+    /// reject impossible requests at submission instead of queueing work
+    /// that can never be admitted (which would wedge offline mode and leave
+    /// streaming clients waiting forever). Default is permissive.
+    fn can_ever_admit(&self, _total_tokens: usize) -> bool {
+        true
+    }
+    /// Cache bytes currently allocated (0 when the engine doesn't track it).
+    fn cache_used_bytes(&self) -> u64 {
+        0
+    }
+    /// Peak cache bytes allocated (0 when the engine doesn't track it).
+    fn cache_peak_bytes(&self) -> u64 {
+        0
+    }
 }
 
 /// Scheduler tuning knobs (a subset of [`crate::config::ServeConfig`]).
@@ -70,13 +90,6 @@ pub enum StepOutcome {
     Decode { n_seqs: usize },
     /// Nothing runnable (queue empty / all blocked on budget).
     Idle,
-}
-
-/// Errors surfaced to submitters.
-#[derive(Debug, PartialEq, Eq)]
-pub enum SubmitError {
-    QueueFull,
-    PromptTooLong { len: usize, max: usize },
 }
 
 /// The continuous batcher.
@@ -111,19 +124,42 @@ impl Batcher {
         self.queue.is_empty() && self.running.is_empty()
     }
 
-    /// Submit a request (router entry point). FCFS; bounded queue gives
-    /// backpressure.
-    pub fn submit<E: Engine>(&mut self, engine: &E, req: Request) -> Result<(), SubmitError> {
+    /// Submit a request (router entry point). Bounded queue gives
+    /// backpressure. Returns a [`CancelToken`] the caller may use to abort
+    /// the request at any point in its lifecycle.
+    pub fn submit(&mut self, engine: &dyn Engine, req: Request) -> Result<CancelToken, SubmitError> {
+        let cancel = CancelToken::new();
+        self.submit_session(engine, req, None, cancel.clone())?;
+        Ok(cancel)
+    }
+
+    /// Submit with an explicit event sink and cancellation token (streaming
+    /// session path). Token events and the terminal
+    /// [`TokenEvent::Finished`] are sent to `events` as they happen.
+    pub fn submit_session(
+        &mut self,
+        engine: &dyn Engine,
+        req: Request,
+        events: Option<Sender<TokenEvent>>,
+        cancel: CancelToken,
+    ) -> Result<(), SubmitError> {
         if req.prompt.len() >= engine.max_seq() {
             return Err(SubmitError::PromptTooLong {
                 len: req.prompt.len(),
                 max: engine.max_seq(),
             });
         }
+        let need = req.max_total_tokens().min(engine.max_seq());
+        if !engine.can_ever_admit(need) {
+            return Err(SubmitError::OverBudget { tokens: need });
+        }
         if self.queue.len() >= self.cfg.max_queue {
             return Err(SubmitError::QueueFull);
         }
-        self.queue.push_back(SeqState::new(req, Instant::now()));
+        let mut st = SeqState::new(req, Instant::now());
+        st.events = events;
+        st.cancel = cancel;
+        self.queue.push_back(st);
         Ok(())
     }
 
@@ -132,16 +168,69 @@ impl Batcher {
         std::mem::take(&mut self.finished)
     }
 
-    /// Admit queued requests while budget and batch slots allow (FCFS — we
-    /// never skip ahead of a blocked request, preventing starvation).
-    fn admit<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<()> {
+    /// Mark every queued (not yet admitted) request cancelled. Used at
+    /// shutdown when remaining queued work can never be admitted.
+    pub fn cancel_all_queued(&mut self) {
+        for st in &self.queue {
+            st.cancel.cancel();
+        }
+    }
+
+    /// Retire a sequence: emit the terminal event and record the completion.
+    fn retire(&mut self, st: SeqState, reason: FinishReason) {
+        let events = st.events.clone();
+        let completion = st.into_completion(reason);
+        if let Some(tx) = events {
+            let _ = tx.send(TokenEvent::Finished(completion.clone()));
+        }
+        self.finished.push(completion);
+    }
+
+    /// Remove cancelled sequences, freeing engine cache for any that were
+    /// already admitted. Runs at every step boundary so cancellation
+    /// reclaims pages immediately, even mid-prefill.
+    fn sweep_cancelled(&mut self, engine: &mut dyn Engine) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].cancel.is_cancelled() {
+                let st = self.queue.remove(i).expect("index checked");
+                self.retire(st, FinishReason::Cancelled);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].1.cancel.is_cancelled() {
+                let (id, st) = self.running.remove(i);
+                engine.free(id);
+                self.retire(st, FinishReason::Cancelled);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Admit queued requests while budget and batch slots allow. Highest
+    /// priority first, FIFO within a priority class; we never skip past the
+    /// chosen candidate when it is blocked on budget, so lower-priority or
+    /// smaller requests cannot starve it.
+    fn admit(&mut self, engine: &mut dyn Engine) -> anyhow::Result<()> {
         while self.running.len() < self.cfg.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            let need = front.req.max_total_tokens().min(engine.max_seq());
+            let Some(best) = self
+                .queue
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, s)| (s.req.params.priority, std::cmp::Reverse(*i)))
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let need = self.queue[best].req.max_total_tokens().min(engine.max_seq());
             if !engine.can_admit(need) {
                 break;
             }
-            let mut st = self.queue.pop_front().unwrap();
+            let mut st = self.queue.remove(best).expect("index checked");
             st.admitted_at = Instant::now();
             let id = self.next_seq_id;
             self.next_seq_id += 1;
@@ -151,8 +240,10 @@ impl Batcher {
         Ok(())
     }
 
-    /// Run one engine step: admission, then prefill-priority scheduling.
-    pub fn step<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<StepOutcome> {
+    /// Run one engine step: cancellation sweep, admission, then
+    /// prefill-priority scheduling.
+    pub fn step(&mut self, engine: &mut dyn Engine) -> anyhow::Result<StepOutcome> {
+        self.sweep_cancelled(engine);
         self.admit(engine)?;
 
         // 1) Chunked prefill, oldest first.
@@ -166,12 +257,7 @@ impl Batcher {
             st.prefilled = end;
             if is_last {
                 let logits = logits.expect("last prefill chunk must return logits");
-                let tok = argmax(&logits) as u32;
-                st.last_token = Some(tok);
-                st.generated.push(tok);
-                if st.first_token_at.is_none() {
-                    st.first_token_at = Some(Instant::now());
-                }
+                st.push_next_token(&logits);
                 self.finish_if_done(engine, slot);
             }
             return Ok(StepOutcome::Prefill {
@@ -191,13 +277,8 @@ impl Batcher {
             let logits = engine.decode(&batch)?;
             anyhow::ensure!(logits.len() == batch.len(), "engine returned wrong batch size");
             for (i, l) in logits.iter().enumerate() {
-                let tok = argmax(l) as u32;
                 let (_, st) = &mut self.running[i];
-                st.last_token = Some(tok);
-                st.generated.push(tok);
-                if st.first_token_at.is_none() {
-                    st.first_token_at = Some(Instant::now());
-                }
+                st.push_next_token(l);
             }
             // Finish from the back so indices stay valid.
             for i in (0..batch.len()).rev() {
@@ -209,34 +290,46 @@ impl Batcher {
         Ok(StepOutcome::Idle)
     }
 
-    fn finish_if_done<E: Engine>(&mut self, engine: &mut E, slot: usize) {
+    fn finish_if_done(&mut self, engine: &mut dyn Engine, slot: usize) {
         let (_id, st) = &self.running[slot];
         let total = st.req.prompt.len() + st.generated.len();
         if let Some(reason) = st.finished_reason(engine.max_seq(), total) {
             let (id, st) = self.running.remove(slot);
             engine.free(id);
-            self.finished.push(st.into_completion(reason));
+            self.retire(st, reason);
         }
+    }
+
+    /// Track consecutive no-progress steps while work remains; errors once
+    /// the scheduler is provably wedged. Shared by every drain-until-idle
+    /// loop ([`Batcher::run_to_completion`], `Router::run_offline`).
+    pub fn check_progress(
+        &self,
+        outcome: &StepOutcome,
+        idle_streak: &mut usize,
+    ) -> anyhow::Result<()> {
+        if *outcome == StepOutcome::Idle {
+            *idle_streak += 1;
+            anyhow::ensure!(
+                *idle_streak < 1000,
+                "scheduler wedged: {} queued, {} running",
+                self.queue.len(),
+                self.running.len()
+            );
+        } else {
+            *idle_streak = 0;
+        }
+        Ok(())
     }
 
     /// Drive to completion (offline batch mode). Returns completions in
     /// finish order.
-    pub fn run_to_completion<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<Vec<Completion>> {
+    pub fn run_to_completion(&mut self, engine: &mut dyn Engine) -> anyhow::Result<Vec<Completion>> {
         let mut out = Vec::new();
         let mut idle_streak = 0;
         while !self.idle() {
-            match self.step(engine)? {
-                StepOutcome::Idle => {
-                    idle_streak += 1;
-                    anyhow::ensure!(
-                        idle_streak < 1000,
-                        "scheduler wedged: {} queued, {} running",
-                        self.queue.len(),
-                        self.running.len()
-                    );
-                }
-                _ => idle_streak = 0,
-            }
+            let outcome = self.step(engine)?;
+            self.check_progress(&outcome, &mut idle_streak)?;
             out.append(&mut self.take_completions());
         }
         Ok(out)
@@ -332,6 +425,14 @@ pub(crate) mod mock {
         fn max_seq(&self) -> usize {
             self.max_seq
         }
+
+        fn can_ever_admit(&self, total_tokens: usize) -> bool {
+            total_tokens <= self.budget_tokens
+        }
+
+        fn cache_used_bytes(&self) -> u64 {
+            self.used.values().sum::<usize>() as u64
+        }
     }
 }
 
@@ -339,6 +440,7 @@ pub(crate) mod mock {
 mod tests {
     use super::mock::MockEngine;
     use super::*;
+    use crate::coordinator::GenParams;
     use crate::util::prop::forall;
 
     fn cfg(max_batch: usize, chunk: usize) -> BatcherConfig {
@@ -400,11 +502,28 @@ mod tests {
         }
         let done = b.run_to_completion(&mut eng).unwrap();
         assert_eq!(done.len(), 3);
-        // FCFS: completion order == submission order (serial execution).
+        // FCFS at equal priority: completion order == submission order.
         let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
         // Never more than one running at once: every decode batch has size 1.
         assert!(eng.decode_calls.iter().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn higher_priority_is_admitted_first() {
+        // Budget fits only one request at a time; the high-priority request
+        // submitted last must be served first.
+        let mut eng = MockEngine::new(12, 256);
+        let mut b = Batcher::new(cfg(4, 64));
+        for (i, prio) in [(0u64, 0), (1, 5), (2, 0)] {
+            let mut params = GenParams::greedy(8);
+            params.priority = prio;
+            b.submit(&eng, Request::with_params(i, vec![1, 2, 3, 4], params))
+                .unwrap();
+        }
+        let done = b.run_to_completion(&mut eng).unwrap();
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![1, 0, 2], "priority first, then FIFO");
     }
 
     #[test]
@@ -417,10 +536,21 @@ mod tests {
         });
         b.submit(&eng, Request::new(1, vec![1], 1)).unwrap();
         b.submit(&eng, Request::new(2, vec![1], 1)).unwrap();
-        assert_eq!(
+        assert!(matches!(
             b.submit(&eng, Request::new(3, vec![1], 1)),
             Err(SubmitError::QueueFull)
-        );
+        ));
+    }
+
+    #[test]
+    fn never_admittable_request_rejected_at_submit() {
+        // prompt 2 + gen 10 = 12 tokens can never fit an 8-token budget:
+        // rejected up front instead of queueing work that would wedge the
+        // scheduler (offline) or hang the client's stream (sessions).
+        let eng = MockEngine::new(8, 256);
+        let mut b = Batcher::new(cfg(1, 8));
+        let r = b.submit(&eng, Request::new(1, vec![1, 2], 10));
+        assert!(matches!(r, Err(SubmitError::OverBudget { tokens: 12 })));
     }
 
     #[test]
@@ -435,11 +565,12 @@ mod tests {
     fn stop_token_finishes_early() {
         let mut eng = MockEngine::new(1000, 256);
         let mut b = Batcher::new(cfg(1, 8));
-        let mut req = Request::new(1, vec![1, 2], 50);
         // MockEngine's first generated token for id=1 with 2 prompt tokens:
         // index (1*7 + 2*3) % 16 = 13.
-        req.stop_token = Some(13);
-        b.submit(&eng, req).unwrap();
+        let mut params = GenParams::greedy(50);
+        params.stop_tokens = vec![13];
+        b.submit(&eng, Request::with_params(1, vec![1, 2], params))
+            .unwrap();
         let done = b.run_to_completion(&mut eng).unwrap();
         assert_eq!(done[0].reason, FinishReason::Stop);
         assert_eq!(done[0].tokens.len(), 1);
@@ -453,6 +584,43 @@ mod tests {
         let done = b.run_to_completion(&mut eng).unwrap();
         assert_eq!(done[0].reason, FinishReason::ContextOverflow);
         assert!(done[0].tokens.len() <= 6);
+    }
+
+    #[test]
+    fn cancel_queued_request_never_allocates() {
+        let mut eng = MockEngine::new(4, 256); // budget for one request only
+        let mut b = Batcher::new(cfg(1, 8));
+        b.submit(&eng, Request::new(1, vec![1, 2], 2)).unwrap();
+        let tok = b.submit(&eng, Request::new(2, vec![1, 2], 2)).unwrap();
+        tok.cancel();
+        let done = b.run_to_completion(&mut eng).unwrap();
+        assert_eq!(done.len(), 2);
+        let c2 = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.reason, FinishReason::Cancelled);
+        assert!(c2.tokens.is_empty());
+        // Only sequence 1 ever touched the engine.
+        assert_eq!(eng.freed.len(), 1);
+    }
+
+    #[test]
+    fn cancel_running_request_frees_engine_cache() {
+        let mut eng = MockEngine::new(1000, 256);
+        let mut b = Batcher::new(cfg(1, 2));
+        let tok = b
+            .submit(&eng, Request::new(1, (0..8).collect(), 50))
+            .unwrap();
+        // One step: first prefill chunk only (2 of 8 prompt tokens).
+        let out = b.step(&mut eng).unwrap();
+        assert!(matches!(out, StepOutcome::Prefill { n_tokens: 2, .. }));
+        assert_eq!(b.running(), 1);
+        tok.cancel();
+        b.step(&mut eng).unwrap();
+        let done = b.take_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::Cancelled);
+        assert!(b.idle());
+        assert!(eng.used.is_empty(), "engine cache must be freed");
+        assert_eq!(eng.freed, vec![1]);
     }
 
     #[test]

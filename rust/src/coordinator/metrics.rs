@@ -5,6 +5,22 @@ use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+/// Canonical names for the metrics recorded by the serving path, so the
+/// router, CLI and tests agree on spelling (see DESIGN.md §7 for the full
+/// inventory).
+pub mod names {
+    /// Counter: requests admitted to the scheduler.
+    pub const REQUESTS_ACCEPTED: &str = "requests_accepted";
+    /// Counter: requests refused at submission (queue full / prompt too long).
+    pub const REQUESTS_REJECTED: &str = "requests_rejected";
+    /// Counter: requests cancelled by the client (pages reclaimed).
+    pub const REQUESTS_CANCELLED: &str = "requests_cancelled";
+    /// Gauge: requests submitted but not yet admitted to the running batch
+    /// (pre-admission queue), sampled every scheduler step. Admitted
+    /// sequences are tracked by the `running_seqs` gauge instead.
+    pub const QUEUE_DEPTH: &str = "queue_depth";
+}
+
 /// Registry of named summaries + counters + gauges.
 #[derive(Default)]
 pub struct MetricsRegistry {
@@ -146,6 +162,24 @@ mod tests {
         assert!(rep.contains("tokens_out") && rep.contains("ttft_ms"));
         let j = m.to_json();
         assert!(j.get("summaries").unwrap().get("ttft_ms").is_some());
+    }
+
+    #[test]
+    fn canonical_names_are_distinct() {
+        let all = [
+            names::REQUESTS_ACCEPTED,
+            names::REQUESTS_REJECTED,
+            names::REQUESTS_CANCELLED,
+            names::QUEUE_DEPTH,
+        ];
+        let mut uniq = all.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), all.len());
+        // `incr(name, 0)` materializes a counter for report visibility.
+        let m = MetricsRegistry::new();
+        m.incr(names::REQUESTS_CANCELLED, 0);
+        assert!(m.report().contains(names::REQUESTS_CANCELLED));
     }
 
     #[test]

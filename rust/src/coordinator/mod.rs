@@ -1,25 +1,37 @@
 //! The L3 serving coordinator: request router, continuous batcher,
-//! prefill/decode scheduler and metrics — the system layer wrapping the
-//! paper's compressed KV cache (DESIGN.md §5).
+//! prefill/decode scheduler, session handles and metrics — the system layer
+//! wrapping the paper's compressed KV cache (DESIGN.md §5).
 //!
-//! Two operating modes:
-//! * **offline batch** ([`Router::run_offline`]) — drive a request set to
-//!   completion on the calling thread (used by benches and examples;
-//!   deterministic);
-//! * **threaded serving** ([`Router::serve`]) — submission channel +
-//!   completion channel with a dedicated engine thread (used by
-//!   `kqsvd serve`).
+//! Two operating modes sharing one scheduling path ([`Router::pump`]):
+//! * **offline batch** ([`Router::run_offline`]) — a thin drain-until-idle
+//!   wrapper that drives submitted requests to completion on the calling
+//!   thread (used by benches and examples; deterministic);
+//! * **streaming sessions** ([`Router::serve`]) — a dedicated engine thread
+//!   fronted by an [`EngineHandle`]; each submission gets its own
+//!   [`RequestHandle`] streaming [`TokenEvent`]s, with per-request
+//!   [`GenParams`] and immediate-cache-reclaim cancellation (used by
+//!   `kqsvd serve` and `kqsvd generate`).
+//!
+//! Both modes produce identical token sequences for identical requests:
+//! token selection is deterministic per request and independent of batch
+//! composition (tested in `tests/e2e_serving_test.rs`).
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub mod session;
 
-pub use batcher::{Batcher, BatcherConfig, Engine, StepOutcome, SubmitError};
+pub use batcher::{Batcher, BatcherConfig, Engine, StepOutcome};
 pub use metrics::MetricsRegistry;
-pub use request::{Completion, FinishReason, Request};
+pub use request::{
+    CancelToken, Completion, FinishReason, GenParams, Request, SubmitError, TokenEvent,
+};
+pub use session::{EngineHandle, RequestHandle};
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use session::EngineMsg;
+use std::sync::mpsc::{channel, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Router: owns the batcher + metrics, fronting an engine.
 pub struct Router {
@@ -35,105 +47,177 @@ impl Router {
         }
     }
 
-    /// Submit with metrics.
-    pub fn submit<E: Engine>(&mut self, engine: &E, req: Request) -> Result<(), SubmitError> {
+    /// Submit with metrics. Returns a [`CancelToken`] for aborting the
+    /// request later.
+    pub fn submit(&mut self, engine: &dyn Engine, req: Request) -> Result<CancelToken, SubmitError> {
         let tokens_in = req.prompt.len() as u64;
         match self.batcher.submit(engine, req) {
-            Ok(()) => {
-                self.metrics.incr("requests_accepted", 1);
+            Ok(tok) => {
+                self.metrics.incr(metrics::names::REQUESTS_ACCEPTED, 1);
                 self.metrics.incr("tokens_in", tokens_in);
-                Ok(())
+                Ok(tok)
             }
             Err(e) => {
-                self.metrics.incr("requests_rejected", 1);
+                self.metrics.incr(metrics::names::REQUESTS_REJECTED, 1);
                 Err(e)
             }
         }
     }
 
-    /// Drive all submitted requests to completion, recording metrics.
-    pub fn run_offline<E: Engine>(&mut self, engine: &mut E) -> anyhow::Result<Vec<Completion>> {
-        let t0 = std::time::Instant::now();
-        let mut out = Vec::new();
-        while !self.batcher.idle() {
-            match self.batcher.step(engine)? {
-                StepOutcome::Prefill { n_tokens, .. } => {
-                    self.metrics.incr("prefill_steps", 1);
-                    self.metrics.incr("prefill_tokens", n_tokens as u64);
-                }
-                StepOutcome::Decode { n_seqs } => {
-                    self.metrics.incr("decode_steps", 1);
-                    self.metrics.observe("decode_batch", n_seqs as f64);
-                }
-                StepOutcome::Idle => {}
+    /// Handle one client message on the engine thread (streaming path).
+    fn handle_msg(&mut self, engine: &dyn Engine, msg: EngineMsg) {
+        let EngineMsg::Submit { req, events, cancel } = msg;
+        let id = req.id;
+        if cancel.is_cancelled() {
+            // Cancelled before ever reaching the scheduler.
+            self.metrics.incr(metrics::names::REQUESTS_CANCELLED, 1);
+            let _ = events.send(TokenEvent::Finished(Completion::cancelled(id)));
+            return;
+        }
+        let tokens_in = req.prompt.len() as u64;
+        match self.batcher.submit_session(engine, req, Some(events.clone()), cancel) {
+            Ok(()) => {
+                self.metrics.incr(metrics::names::REQUESTS_ACCEPTED, 1);
+                self.metrics.incr("tokens_in", tokens_in);
             }
-            for c in self.batcher.take_completions() {
-                self.metrics.incr("tokens_out", c.tokens.len() as u64);
+            Err(error) => {
+                self.metrics.incr(metrics::names::REQUESTS_REJECTED, 1);
+                let _ = events.send(TokenEvent::Rejected { id, error });
+            }
+        }
+    }
+
+    /// One scheduler step + metrics recording. The single code path under
+    /// both offline and streaming modes.
+    fn pump(&mut self, engine: &mut dyn Engine) -> anyhow::Result<(StepOutcome, Vec<Completion>)> {
+        let outcome = self.batcher.step(engine)?;
+        match &outcome {
+            StepOutcome::Prefill { n_tokens, .. } => {
+                self.metrics.incr("prefill_steps", 1);
+                self.metrics.incr("prefill_tokens", *n_tokens as u64);
+            }
+            StepOutcome::Decode { n_seqs } => {
+                self.metrics.incr("decode_steps", 1);
+                self.metrics.observe("decode_batch", *n_seqs as f64);
+            }
+            StepOutcome::Idle => {}
+        }
+        self.metrics
+            .gauge(metrics::names::QUEUE_DEPTH, self.batcher.queued() as f64);
+        self.metrics
+            .gauge("running_seqs", self.batcher.running() as f64);
+        self.metrics
+            .gauge("cache_used_bytes", engine.cache_used_bytes() as f64);
+        let done = self.batcher.take_completions();
+        for c in &done {
+            self.metrics.incr("tokens_out", c.tokens.len() as u64);
+            if c.reason == FinishReason::Cancelled {
+                self.metrics.incr(metrics::names::REQUESTS_CANCELLED, 1);
+            } else {
                 self.metrics.observe("ttft_ms", c.ttft_s * 1e3);
                 self.metrics.observe("tpot_ms", c.tpot_s * 1e3);
                 self.metrics.observe("e2e_ms", c.e2e_s * 1e3);
-                out.push(c);
             }
         }
-        let wall = t0.elapsed().as_secs_f64();
-        self.metrics.gauge("wall_s", wall);
+        Ok((outcome, done))
+    }
+
+    /// Record end-of-run throughput gauges.
+    fn finish_run_metrics(&self, engine: &dyn Engine, wall_s: f64) {
+        self.metrics.gauge("wall_s", wall_s);
         let toks = self.metrics.counter("tokens_out");
-        if wall > 0.0 {
-            self.metrics.gauge("decode_tok_per_s", toks as f64 / wall);
+        if wall_s > 0.0 {
+            self.metrics.gauge("decode_tok_per_s", toks as f64 / wall_s);
         }
+        self.metrics
+            .gauge("cache_peak_bytes", engine.cache_peak_bytes() as f64);
+    }
+
+    /// Drive all submitted requests to completion on the calling thread: a
+    /// thin drain-until-idle wrapper over the same [`Router::pump`] path the
+    /// streaming engine thread runs.
+    pub fn run_offline(&mut self, engine: &mut dyn Engine) -> anyhow::Result<Vec<Completion>> {
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        let mut idle_streak = 0;
+        while !self.batcher.idle() {
+            let (outcome, mut done) = self.pump(engine)?;
+            out.append(&mut done);
+            self.batcher.check_progress(&outcome, &mut idle_streak)?;
+        }
+        self.finish_run_metrics(engine, t0.elapsed().as_secs_f64());
         Ok(out)
     }
 
-    /// Threaded serving loop: spawns an engine thread consuming requests from
-    /// the returned sender, pushing completions into the returned receiver.
-    /// Closing the sender drains in-flight work and ends the thread.
-    pub fn serve<E: Engine + Send + 'static>(
-        mut self,
-        mut engine: E,
-    ) -> (Sender<Request>, Receiver<Completion>, std::thread::JoinHandle<anyhow::Result<()>>) {
-        let (req_tx, req_rx) = channel::<Request>();
-        let (done_tx, done_rx) = channel::<Completion>();
-        let handle = std::thread::Builder::new()
+    /// Streaming serving: move the router + engine onto a dedicated thread
+    /// and return the client-side [`EngineHandle`]. Every
+    /// [`EngineHandle::submit`] streams tokens on its own channel and can be
+    /// cancelled mid-flight; dropping/joining the handle drains in-flight
+    /// work and stops the thread.
+    pub fn serve(self, engine: Box<dyn Engine + Send>) -> EngineHandle {
+        let (tx, rx) = channel::<EngineMsg>();
+        let metrics = self.metrics.clone();
+        // Materialize the headline counters so `report()` shows them even
+        // when zero.
+        for name in [
+            metrics::names::REQUESTS_ACCEPTED,
+            metrics::names::REQUESTS_REJECTED,
+            metrics::names::REQUESTS_CANCELLED,
+        ] {
+            metrics.incr(name, 0);
+        }
+        let join = std::thread::Builder::new()
             .name("kqsvd-engine".into())
             .spawn(move || -> anyhow::Result<()> {
+                let mut this = self;
+                let mut engine = engine;
+                let t0 = Instant::now();
                 let mut open = true;
                 loop {
-                    // Pull everything currently queued (non-blocking), or block
-                    // briefly when idle so submissions wake us up.
+                    // Pull everything currently queued (non-blocking).
                     loop {
-                        match req_rx.try_recv() {
-                            Ok(r) => {
-                                let _ = self.submit(&engine, r);
-                            }
-                            Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        match rx.try_recv() {
+                            Ok(msg) => this.handle_msg(engine.as_ref(), msg),
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
                                 open = false;
                                 break;
                             }
                         }
                     }
-                    let outcome = self.batcher.step(&mut engine)?;
-                    for c in self.batcher.take_completions() {
-                        self.metrics.observe("ttft_ms", c.ttft_s * 1e3);
-                        self.metrics.observe("e2e_ms", c.e2e_s * 1e3);
-                        let _ = done_tx.send(c);
+                    let (outcome, _done) = this.pump(engine.as_mut())?;
+                    if outcome != StepOutcome::Idle {
+                        continue;
                     }
-                    if outcome == StepOutcome::Idle {
+                    if this.batcher.idle() {
                         if !open {
-                            return Ok(());
+                            break;
                         }
-                        // Idle: block for the next request (or shutdown).
-                        match req_rx.recv() {
-                            Ok(r) => {
-                                let _ = self.submit(&engine, r);
-                            }
-                            Err(_) => return Ok(()),
+                        // Fully idle: block for the next message (or shutdown).
+                        match rx.recv() {
+                            Ok(msg) => this.handle_msg(engine.as_ref(), msg),
+                            Err(_) => break,
+                        }
+                    } else if !open {
+                        // Shutdown with queued requests that can never be
+                        // admitted (nothing running to free budget): cancel
+                        // them so their streams terminate.
+                        this.batcher.cancel_all_queued();
+                    } else {
+                        // Queued work blocked on budget: wait briefly so a
+                        // new message or a cancellation can unwedge us.
+                        match rx.recv_timeout(Duration::from_millis(5)) {
+                            Ok(msg) => this.handle_msg(engine.as_ref(), msg),
+                            Err(RecvTimeoutError::Timeout) => {}
+                            Err(RecvTimeoutError::Disconnected) => open = false,
                         }
                     }
                 }
+                this.finish_run_metrics(engine.as_ref(), t0.elapsed().as_secs_f64());
+                Ok(())
             })
             .expect("spawn engine thread");
-        (req_tx, done_rx, handle)
+        EngineHandle::new(tx, metrics, join)
     }
 }
 
@@ -161,28 +245,173 @@ mod tests {
         assert_eq!(router.metrics.counter("tokens_out"), 12);
         assert!(router.metrics.summary_stats("ttft_ms").unwrap().0 == 3);
         assert!(router.metrics.gauge_value("decode_tok_per_s").is_some());
+        assert!(router.metrics.gauge_value("queue_depth").is_some());
     }
 
     #[test]
-    fn threaded_serving_roundtrip() {
+    fn offline_cancellation_counts_and_completes() {
+        let mut eng = MockEngine::new(1000, 128);
+        let mut router = Router::new(BatcherConfig {
+            max_batch: 2,
+            max_queue: 8,
+            prefill_chunk: 4,
+        });
+        let mut tokens = Vec::new();
+        for i in 0..3 {
+            tokens.push(router.submit(&eng, Request::new(i, vec![1, 2, 3], 4)).unwrap());
+        }
+        tokens[1].cancel();
+        let done = router.run_offline(&mut eng).unwrap();
+        assert_eq!(done.len(), 3);
+        let cancelled: Vec<_> = done
+            .iter()
+            .filter(|c| c.reason == FinishReason::Cancelled)
+            .collect();
+        assert_eq!(cancelled.len(), 1);
+        assert_eq!(cancelled[0].id, 1);
+        assert_eq!(router.metrics.counter("requests_cancelled"), 1);
+        assert!(eng.used.is_empty());
+    }
+
+    #[test]
+    fn session_roundtrip_streams_tokens() {
         let eng = MockEngine::new(1000, 128);
         let router = Router::new(BatcherConfig {
             max_batch: 2,
             max_queue: 8,
             prefill_chunk: 8,
         });
-        let (tx, rx, handle) = router.serve(eng);
-        for i in 0..5 {
-            tx.send(Request::new(i, vec![1, 2], 3)).unwrap();
+        let handle = router.serve(Box::new(eng));
+        let reqs: Vec<RequestHandle> = (0..5)
+            .map(|i| handle.submit(Request::new(i, vec![1, 2], 3)))
+            .collect();
+        let mut done: Vec<Completion> = Vec::new();
+        for rh in reqs {
+            // Count streamed tokens, then compare with the completion.
+            let mut streamed = Vec::new();
+            let completion = loop {
+                match rh.next_event().expect("stream open") {
+                    TokenEvent::Token { token, index, .. } => {
+                        assert_eq!(index, streamed.len());
+                        streamed.push(token);
+                    }
+                    TokenEvent::Finished(c) => break c,
+                    TokenEvent::Rejected { error, .. } => panic!("rejected: {error}"),
+                }
+            };
+            assert_eq!(streamed, completion.tokens);
+            done.push(completion);
         }
-        drop(tx);
-        let mut done: Vec<_> = rx.iter().collect();
-        handle.join().unwrap().unwrap();
+        let metrics = handle.metrics();
+        handle.join().unwrap();
         done.sort_by_key(|c| c.id);
         assert_eq!(done.len(), 5);
         for (i, c) in done.iter().enumerate() {
             assert_eq!(c.id, i as u64);
             assert_eq!(c.tokens.len(), 3);
         }
+        assert_eq!(metrics.counter("requests_accepted"), 5);
+        assert_eq!(metrics.counter("tokens_out"), 15);
+        assert!(metrics.gauge_value("decode_tok_per_s").is_some());
+    }
+
+    /// MockEngine that sleeps per decode step so client-side cancellation
+    /// deterministically lands while the request is still in flight.
+    struct SlowMock(MockEngine);
+
+    impl Engine for SlowMock {
+        fn alloc(&mut self, id: u64, n: usize) -> anyhow::Result<()> {
+            self.0.alloc(id, n)
+        }
+        fn free(&mut self, id: u64) {
+            self.0.free(id)
+        }
+        fn can_admit(&self, n: usize) -> bool {
+            self.0.can_admit(n)
+        }
+        fn prefill(
+            &mut self,
+            id: u64,
+            tokens: &[u32],
+            pos0: usize,
+            is_last: bool,
+        ) -> anyhow::Result<Option<Vec<f32>>> {
+            self.0.prefill(id, tokens, pos0, is_last)
+        }
+        fn decode(&mut self, batch: &[(u64, u32)]) -> anyhow::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            self.0.decode(batch)
+        }
+        fn max_seq(&self) -> usize {
+            self.0.max_seq()
+        }
+        fn can_ever_admit(&self, total_tokens: usize) -> bool {
+            self.0.can_ever_admit(total_tokens)
+        }
+        fn cache_used_bytes(&self) -> u64 {
+            self.0.cache_used_bytes()
+        }
+    }
+
+    #[test]
+    fn session_cancellation_mid_stream() {
+        let eng = SlowMock(MockEngine::new(1000, 128));
+        let router = Router::new(BatcherConfig {
+            max_batch: 1,
+            max_queue: 8,
+            prefill_chunk: 8,
+        });
+        let handle = router.serve(Box::new(eng));
+        let rh = handle.submit(Request::new(0, vec![1, 2], 100));
+        // Wait for the first token so we cancel mid-decode.
+        match rh.next_event().expect("stream open") {
+            TokenEvent::Token { .. } => {}
+            other => panic!("expected first token, got {other:?}"),
+        }
+        rh.cancel();
+        let c = rh.wait().unwrap();
+        assert_eq!(c.reason, FinishReason::Cancelled);
+        assert!(!c.tokens.is_empty() && c.tokens.len() < 100);
+        let metrics = handle.metrics();
+        handle.join().unwrap();
+        assert_eq!(metrics.counter("requests_cancelled"), 1);
+        // Final cache gauge must be back to baseline.
+        assert_eq!(metrics.gauge_value("cache_used_bytes"), Some(0.0));
+    }
+
+    #[test]
+    fn session_rejects_oversized_prompt() {
+        let eng = MockEngine::new(1000, 16);
+        let router = Router::new(BatcherConfig {
+            max_batch: 1,
+            max_queue: 8,
+            prefill_chunk: 8,
+        });
+        let handle = router.serve(Box::new(eng));
+        let rh = handle.submit(Request::new(7, (0..32).collect(), 4));
+        let err = rh.wait().unwrap_err().to_string();
+        assert!(err.contains("rejected"), "{err}");
+        let metrics = handle.metrics();
+        handle.join().unwrap();
+        assert_eq!(metrics.counter("requests_rejected"), 1);
+    }
+
+    #[test]
+    fn drop_handle_shuts_down_engine() {
+        let eng = MockEngine::new(1000, 128);
+        let router = Router::new(BatcherConfig {
+            max_batch: 1,
+            max_queue: 8,
+            prefill_chunk: 8,
+        });
+        let handle = router.serve(Box::new(eng));
+        let rh = handle.submit(Request::new(0, vec![1], 2));
+        rh.wait().unwrap();
+        // Dropping the handle closes the channel; the engine thread drains
+        // and records its end-of-run gauges before exiting.
+        let metrics = handle.metrics();
+        drop(handle);
+        assert!(metrics.gauge_value("wall_s").is_some());
+        assert_eq!(metrics.counter("requests_cancelled"), 0);
     }
 }

@@ -1,44 +1,157 @@
-//! Request lifecycle types for the serving coordinator.
+//! Request lifecycle types for the serving coordinator: per-request
+//! generation parameters, streamed token events, cancellation tokens, and
+//! the internal per-sequence scheduler state (DESIGN.md §5).
 
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Per-request generation parameters (session API: every request carries its
+/// own knobs instead of inheriting global serve config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenParams {
+    /// Maximum number of tokens to generate.
+    pub max_new_tokens: usize,
+    /// `0.0` (default) is greedy argmax decoding; `> 0.0` samples from the
+    /// temperature-scaled softmax using a per-request deterministic RNG, so
+    /// identical (request id, seed, prompt) always yield identical output
+    /// regardless of batch composition or serving mode.
+    pub temperature: f32,
+    /// Generation stops when any of these token ids is emitted.
+    pub stop_tokens: Vec<u32>,
+    /// Scheduling priority: higher values are admitted first; FIFO within a
+    /// priority class.
+    pub priority: i32,
+    /// Seed for temperature sampling (combined with the request id).
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams {
+            max_new_tokens: 16,
+            temperature: 0.0,
+            stop_tokens: Vec::new(),
+            priority: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl GenParams {
+    /// Greedy decoding with a token budget (the common case).
+    pub fn greedy(max_new_tokens: usize) -> GenParams {
+        GenParams {
+            max_new_tokens,
+            ..GenParams::default()
+        }
+    }
+}
 
 /// A generation request entering the router.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
-    /// Stop generation at this token id (usually EOS), if any.
-    pub stop_token: Option<u32>,
+    pub params: GenParams,
 }
 
 impl Request {
+    /// Greedy request with default params (back-compat constructor).
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request::with_params(id, prompt, GenParams::greedy(max_new_tokens))
+    }
+
+    /// Request with explicit per-request generation parameters.
+    pub fn with_params(id: u64, prompt: Vec<u32>, params: GenParams) -> Request {
         assert!(!prompt.is_empty(), "empty prompt");
-        assert!(max_new_tokens > 0, "must generate at least one token");
-        Request {
-            id,
-            prompt,
-            max_new_tokens,
-            stop_token: None,
-        }
+        assert!(
+            params.max_new_tokens > 0,
+            "must generate at least one token"
+        );
+        Request { id, prompt, params }
     }
 
     /// Worst-case total tokens this request can occupy in the cache.
     pub fn max_total_tokens(&self) -> usize {
-        self.prompt.len() + self.max_new_tokens
+        self.prompt.len() + self.params.max_new_tokens
     }
 }
+
+/// Errors surfaced to submitters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    PromptTooLong { len: usize, max: usize },
+    /// prompt + max_new_tokens can never fit the engine's cache budget,
+    /// even with nothing else running.
+    OverBudget { tokens: usize },
+    /// The engine is no longer accepting requests.
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::PromptTooLong { len, max } => {
+                write!(f, "prompt of {len} tokens exceeds the {max}-token context")
+            }
+            SubmitError::OverBudget { tokens } => {
+                write!(f, "request of {tokens} tokens can never fit the cache budget")
+            }
+            SubmitError::Shutdown => write!(f, "engine is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Why a sequence finished.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
     /// Hit max_new_tokens.
     Length,
-    /// Emitted the stop token.
+    /// Emitted a stop token.
     Stop,
     /// Hit the model's maximum context.
     ContextOverflow,
+    /// Cancelled by the client; cache pages were reclaimed immediately.
+    Cancelled,
+}
+
+/// Cancellation token shared between a client handle and the scheduler.
+/// Setting it is advisory and thread-safe; the scheduler observes it at the
+/// next step boundary and frees the sequence's cache pages immediately.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Request cancellation. Idempotent.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-request event stream emitted by the engine (session API).
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// One generated token; `index` counts from 0 within the request.
+    Token { id: u64, token: u32, index: usize },
+    /// Terminal: the request finished (including cancellation).
+    Finished(Completion),
+    /// Terminal: the request never entered the scheduler.
+    Rejected { id: u64, error: SubmitError },
 }
 
 /// Completed request with generation + timing data.
@@ -55,8 +168,43 @@ pub struct Completion {
     pub e2e_s: f64,
 }
 
+impl Completion {
+    /// A request cancelled before it ever entered the scheduler.
+    pub fn cancelled(id: u64) -> Completion {
+        Completion {
+            id,
+            tokens: Vec::new(),
+            reason: FinishReason::Cancelled,
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            e2e_s: 0.0,
+        }
+    }
+}
+
+/// Sample a token index from logits: greedy argmax at `temperature <= 0`,
+/// otherwise a draw from the temperature-scaled softmax.
+pub(crate) fn sample_token(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> usize {
+    if temperature <= 0.0 {
+        return crate::model::argmax(logits);
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u < 0.0 {
+            return i;
+        }
+    }
+    logits.len() - 1
+}
+
 /// Internal per-sequence scheduler state.
-#[derive(Debug)]
 pub(crate) struct SeqState {
     pub req: Request,
     /// Tokens of the prompt already prefilled.
@@ -68,10 +216,18 @@ pub(crate) struct SeqState {
     pub submitted_at: Instant,
     pub admitted_at: Instant,
     pub first_token_at: Option<Instant>,
+    /// Streaming sink (None in offline mode — completions are still
+    /// collected via [`super::Batcher::take_completions`]).
+    pub events: Option<Sender<TokenEvent>>,
+    /// Shared cancellation flag, observed at step boundaries.
+    pub cancel: CancelToken,
+    /// Per-request sampling RNG (deterministic from id + params.seed).
+    rng: Pcg64,
 }
 
 impl SeqState {
     pub fn new(req: Request, submitted_at: Instant) -> SeqState {
+        let rng = Pcg64::new(req.params.seed ^ 0x5eed_cafe, req.id);
         SeqState {
             req,
             prefilled: 0,
@@ -80,6 +236,9 @@ impl SeqState {
             submitted_at,
             admitted_at: Instant::now(),
             first_token_at: None,
+            events: None,
+            cancel: CancelToken::new(),
+            rng,
         }
     }
 
@@ -87,13 +246,32 @@ impl SeqState {
         self.prefilled >= self.req.prompt.len()
     }
 
+    /// Sample the next token from logits, record it, and stream it to the
+    /// session (shared by the prefill-completion and decode paths).
+    pub fn push_next_token(&mut self, logits: &[f32]) -> u32 {
+        let tok = sample_token(logits, self.req.params.temperature, &mut self.rng) as u32;
+        self.last_token = Some(tok);
+        self.generated.push(tok);
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        if let Some(tx) = &self.events {
+            let _ = tx.send(TokenEvent::Token {
+                id: self.req.id,
+                token: tok,
+                index: self.generated.len() - 1,
+            });
+        }
+        tok
+    }
+
     pub fn finished_reason(&self, max_seq: usize, current_tokens: usize) -> Option<FinishReason> {
-        if let (Some(stop), Some(&last)) = (self.req.stop_token, self.generated.last()) {
-            if last == stop {
+        if let Some(&last) = self.generated.last() {
+            if self.req.params.stop_tokens.contains(&last) {
                 return Some(FinishReason::Stop);
             }
         }
-        if self.generated.len() >= self.req.max_new_tokens {
+        if self.generated.len() >= self.req.params.max_new_tokens {
             return Some(FinishReason::Length);
         }
         if current_tokens >= max_seq {
@@ -135,6 +313,7 @@ mod tests {
     fn request_accounting() {
         let r = Request::new(1, vec![1, 2, 3], 10);
         assert_eq!(r.max_total_tokens(), 13);
+        assert_eq!(r.params.temperature, 0.0);
     }
 
     #[test]
@@ -145,8 +324,9 @@ mod tests {
 
     #[test]
     fn finish_reasons() {
-        let mut req = Request::new(1, vec![1], 2);
-        req.stop_token = Some(9);
+        let mut params = GenParams::greedy(2);
+        params.stop_tokens = vec![9];
+        let req = Request::with_params(1, vec![1], params);
         let mut s = SeqState::new(req, Instant::now());
         assert_eq!(s.finished_reason(100, 1), None);
         s.generated.push(4);
@@ -170,5 +350,58 @@ mod tests {
         assert_eq!(c.id, 7);
         assert_eq!(c.tokens.len(), 3);
         assert!(c.e2e_s >= 0.0 && c.ttft_s >= 0.0 && c.tpot_s >= 0.0);
+    }
+
+    #[test]
+    fn cancel_token_is_shared() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!u.is_cancelled());
+        t.cancel();
+        assert!(u.is_cancelled());
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Pcg64::new(1, 1);
+        let logits = [0.0f32, 3.0, 1.0, 2.0];
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+        assert_eq!(sample_token(&logits, -1.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_is_deterministic_per_seed() {
+        let logits = [0.5f32, 1.0, 0.2, 0.9, 0.0];
+        let draw = |seed: u64| {
+            let mut rng = Pcg64::new(seed, 3);
+            (0..32)
+                .map(|_| sample_token(&logits, 0.8, &mut rng))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42));
+        // Samples stay in range and visit more than one token.
+        let xs = draw(7);
+        assert!(xs.iter().all(|&i| i < logits.len()));
+        assert!(xs.iter().any(|&i| i != xs[0]));
+    }
+
+    #[test]
+    fn token_events_stream_to_sender() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request::new(3, vec![1], 4);
+        let mut s = SeqState::new(req, Instant::now());
+        s.events = Some(tx);
+        s.push_next_token(&[0.0, 1.0]);
+        s.push_next_token(&[1.0, 0.0]);
+        match rx.try_recv().unwrap() {
+            TokenEvent::Token { id, token, index } => {
+                assert_eq!((id, token, index), (3, 1, 0));
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        match rx.try_recv().unwrap() {
+            TokenEvent::Token { token, index, .. } => assert_eq!((token, index), (0, 1)),
+            other => panic!("unexpected event {other:?}"),
+        }
     }
 }

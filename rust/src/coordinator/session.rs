@@ -1,0 +1,169 @@
+//! Session-oriented client surface of the serving engine (DESIGN.md §5).
+//!
+//! [`crate::coordinator::Router::serve`] moves the router + engine onto a
+//! dedicated thread and returns an [`EngineHandle`] — the client object for
+//! the whole engine. Each [`EngineHandle::submit`] returns a
+//! [`RequestHandle`] owning that request's private event stream:
+//!
+//! ```text
+//! EngineHandle::submit(Request) ─┬─▶ TokenEvent::Token { .. }   (0..n times)
+//!                                ├─▶ TokenEvent::Finished(Completion)  (terminal)
+//!                                └─▶ TokenEvent::Rejected { .. }       (terminal)
+//! ```
+//!
+//! Cancellation ([`RequestHandle::cancel`]) is observed by the scheduler at
+//! the next step boundary: the sequence's compressed cache pages are freed
+//! immediately and the stream terminates with a
+//! [`crate::coordinator::FinishReason::Cancelled`] completion.
+
+use super::metrics::MetricsRegistry;
+use super::request::{CancelToken, Completion, Request, SubmitError, TokenEvent};
+use anyhow::anyhow;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Message from client handles to the engine thread.
+pub(crate) enum EngineMsg {
+    Submit {
+        req: Request,
+        events: Sender<TokenEvent>,
+        cancel: CancelToken,
+    },
+}
+
+/// Client handle to a running engine thread. Dropping (or [`Self::join`]ing)
+/// the handle closes the submission side; the engine drains in-flight work
+/// and exits.
+pub struct EngineHandle {
+    tx: Option<Sender<EngineMsg>>,
+    metrics: Arc<MetricsRegistry>,
+    join: Option<JoinHandle<anyhow::Result<()>>>,
+}
+
+impl EngineHandle {
+    pub(crate) fn new(
+        tx: Sender<EngineMsg>,
+        metrics: Arc<MetricsRegistry>,
+        join: JoinHandle<anyhow::Result<()>>,
+    ) -> EngineHandle {
+        EngineHandle {
+            tx: Some(tx),
+            metrics,
+            join: Some(join),
+        }
+    }
+
+    /// Submit a request; never blocks. Outcomes — acceptance, every generated
+    /// token, rejection, completion — arrive on the returned handle's event
+    /// stream.
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let (etx, erx) = channel();
+        let cancel = CancelToken::new();
+        let id = req.id;
+        let sent = match &self.tx {
+            Some(tx) => tx
+                .send(EngineMsg::Submit {
+                    req,
+                    events: etx.clone(),
+                    cancel: cancel.clone(),
+                })
+                .is_ok(),
+            None => false,
+        };
+        if !sent {
+            // Engine already gone: terminate the stream immediately.
+            let _ = etx.send(TokenEvent::Rejected {
+                id,
+                error: SubmitError::Shutdown,
+            });
+        }
+        RequestHandle {
+            id,
+            cancel,
+            events: erx,
+        }
+    }
+
+    /// The engine's metrics registry (shared with the engine thread).
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.metrics.clone()
+    }
+
+    /// Close the submission side and wait for the engine thread to drain
+    /// in-flight work and exit.
+    pub fn join(mut self) -> anyhow::Result<()> {
+        self.shutdown()
+    }
+
+    fn shutdown(&mut self) -> anyhow::Result<()> {
+        drop(self.tx.take());
+        match self.join.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("engine thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// Client handle to one in-flight request: its private event stream plus a
+/// cancellation token.
+pub struct RequestHandle {
+    id: u64,
+    cancel: CancelToken,
+    events: Receiver<TokenEvent>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation. The engine frees the sequence's cache pages at
+    /// the next step boundary and terminates the stream with a
+    /// `Finished(Completion { reason: Cancelled, .. })` event. Idempotent;
+    /// a no-op if the request already finished.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clonable token for cancelling from another thread.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// The raw event stream (for `iter()` / `try_recv()` style consumption).
+    pub fn events(&self) -> &Receiver<TokenEvent> {
+        &self.events
+    }
+
+    /// Block for the next event; `None` once the stream is closed.
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Drain the stream to its terminal event, discarding intermediate
+    /// tokens (they are also recorded in the returned [`Completion`]).
+    pub fn wait(self) -> anyhow::Result<Completion> {
+        loop {
+            match self.events.recv() {
+                Ok(TokenEvent::Token { .. }) => {}
+                Ok(TokenEvent::Finished(c)) => return Ok(c),
+                Ok(TokenEvent::Rejected { id, error }) => {
+                    return Err(anyhow!("request {id} rejected: {error}"))
+                }
+                Err(_) => {
+                    return Err(anyhow!(
+                        "engine dropped the stream for request {} without a terminal event",
+                        self.id
+                    ))
+                }
+            }
+        }
+    }
+}

@@ -46,6 +46,11 @@ impl PagedBuf {
         self.width
     }
 
+    /// Number of pages currently allocated.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
     /// Bytes currently allocated (full pages).
     pub fn allocated_bytes(&self) -> usize {
         self.pages.len() * self.page_rows * self.width * 4
@@ -263,6 +268,21 @@ impl KvCacheManager {
 
     pub fn live_sequences(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// Total pages allocated across all live sequences (cancellation tests
+    /// assert this returns to its pre-admission baseline).
+    pub fn live_pages(&self) -> usize {
+        self.seqs
+            .values()
+            .map(|s| {
+                s.k.iter()
+                    .flatten()
+                    .chain(s.v.iter().flatten())
+                    .map(|b| b.n_pages())
+                    .sum::<usize>()
+            })
+            .sum()
     }
 
     /// Worst-case bytes to hold `n_tokens` of one sequence (page-rounded).

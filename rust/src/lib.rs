@@ -12,8 +12,13 @@
 //! * the post-training calibration pipeline that learns per-(layer, head)
 //!   projections from a calibration corpus ([`calib`]);
 //! * a compressed KV-cache serving stack: paged cache manager ([`kvcache`]),
-//!   request router + continuous batcher + prefill/decode scheduler
-//!   ([`coordinator`]), engine ([`server`]);
+//!   request router + continuous batcher + prefill/decode scheduler with a
+//!   session-oriented streaming client API — per-request
+//!   [`coordinator::GenParams`], token streaming via
+//!   [`coordinator::EngineHandle`]/[`coordinator::RequestHandle`], and
+//!   cancellation with immediate cache-page reclamation ([`coordinator`]) —
+//!   plus builder-based engine assembly
+//!   ([`server::EngineBuilder`]);
 //! * every substrate that stack needs, built from scratch for the offline
 //!   environment: linear algebra incl. SVD ([`linalg`]), a LLaMA-style
 //!   transformer ([`model`]), a tokenizer + synthetic corpus ([`text`]),
@@ -25,8 +30,10 @@
 //! * the evaluation harness regenerating the paper's figures and tables
 //!   ([`eval`], `benches/`).
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repository root) for the full system inventory — in
+//! particular §5 for the session API lifecycle (submit → stream → cancel),
+//! the [`coordinator::Engine`] trait contract, and
+//! [`server::EngineBuilder`] usage.
 
 pub mod attn;
 pub mod bench_support;

@@ -5,21 +5,25 @@
 //!   calibrate   — run the §3.3 calibration phase, save projection artifacts
 //!   eval-fig1   — regenerate Figure 1 (method comparison per model)
 //!   eval-fig2   — regenerate Figure 2 (unbalance sweep)
-//!   generate    — run one prompt through the compressed engine
-//!   serve       — threaded serving demo over a synthetic request stream
+//!   generate    — stream one prompt through the compressed engine
+//!   serve       — streaming session demo over a synthetic request stream
+//!                 (per-request GenParams, cancellation via --cancel-every)
 //!
 //! Common flags: --preset, --method, --backend, --seed, --epsilon,
 //! --paper-scale, --calib-seqs, --calib-len, --eval-seqs, --run-dir.
 
 use kqsvd::bench_support::{f as fnum, Table};
-use kqsvd::cli::Args;
+use kqsvd::cli::{render_help, Args, OptSpec};
 use kqsvd::config::{preset, Config, Method, ZOO};
-use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::coordinator::{
+    BatcherConfig, FinishReason, GenParams, Request, RequestHandle, Router, TokenEvent,
+};
 use kqsvd::eval::{figure1_for_model, figure2_for_model};
 use kqsvd::model::Transformer;
 use kqsvd::server::build_engine;
 use kqsvd::text::{ByteTokenizer, Corpus};
 use kqsvd::util::stats::fmt_bytes;
+use std::io::Write;
 
 fn main() {
     let args = match Args::from_env() {
@@ -188,6 +192,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
     let prompt_text = args.str_or("prompt", "the key to attention is");
     let max_new = args.usize_or("max-new", 32);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
     let tok = ByteTokenizer;
     let mut prompt = tok.encode(&prompt_text, true, false);
     // Clamp into the model vocab (synthetic models have small vocabularies).
@@ -198,28 +203,82 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         "generate: model={} method={} backend={} prompt={prompt_text:?} ({} tokens)",
         cfg.model.name, cfg.method.name(), cfg.serve.backend, prompt.len()
     );
-    let mut engine = build_engine(&cfg)?;
-    let mut router = Router::new(BatcherConfig::from(&cfg.serve));
-    router.submit(&engine, Request::new(0, prompt, max_new)).map_err(|e| anyhow::anyhow!("{e:?}"))?;
-    let done = router.run_offline(&mut engine)?;
-    let c = &done[0];
-    println!("tokens: {:?}", c.tokens);
+    let engine = build_engine(&cfg)?;
+    let bytes_per_token = engine.cache_bytes_per_token();
+    let router = Router::new(BatcherConfig::from(&cfg.serve));
+    let handle = router.serve(Box::new(engine));
+    let params = GenParams {
+        max_new_tokens: max_new,
+        temperature,
+        seed: args.u64_or("seed", 0),
+        ..GenParams::default()
+    };
+    let rh = handle.submit(Request::with_params(0, prompt, params));
+
+    // Stream tokens as the engine emits them.
+    print!("tokens:");
+    let mut completion = None;
+    for ev in rh.events().iter() {
+        match ev {
+            TokenEvent::Token { token, .. } => {
+                print!(" {token}");
+                std::io::stdout().flush().ok();
+            }
+            TokenEvent::Finished(c) => {
+                completion = Some(c);
+                break;
+            }
+            TokenEvent::Rejected { error, .. } => {
+                println!();
+                anyhow::bail!("request rejected: {error}");
+            }
+        }
+    }
+    println!();
+    handle.join()?;
+    let c = completion.ok_or_else(|| anyhow::anyhow!("stream ended without a completion"))?;
     println!("text:   {:?}", tok.decode(&c.tokens));
     println!(
-        "ttft {:.2} ms · tpot {:.2} ms · e2e {:.2} ms · cache {} per token",
+        "finish {:?} · ttft {:.2} ms · tpot {:.2} ms · e2e {:.2} ms · cache {} per token",
+        c.reason,
         c.ttft_s * 1e3,
         c.tpot_s * 1e3,
         c.e2e_s * 1e3,
-        fmt_bytes(engine.cache_bytes_per_token() as u64),
+        fmt_bytes(bytes_per_token as u64),
     );
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has("help") {
+        println!(
+            "{}",
+            render_help(
+                "serve",
+                "streaming session demo over a synthetic request stream",
+                &[
+                    OptSpec { name: "preset", help: "model zoo preset", default: Some("mha-small") },
+                    OptSpec { name: "requests", help: "number of requests", default: Some("32") },
+                    OptSpec { name: "prompt-len", help: "prompt tokens per request", default: Some("64") },
+                    OptSpec { name: "gen-len", help: "max new tokens per request", default: Some("32") },
+                    OptSpec { name: "temperature", help: "sampling temperature (0 = greedy)", default: Some("0") },
+                    OptSpec { name: "stop-token", help: "stop generation at this token id", default: None },
+                    OptSpec { name: "cancel-every", help: "cancel every k-th request mid-stream (0 = never)", default: Some("0") },
+                    OptSpec { name: "backend", help: "rust | pjrt", default: Some("rust") },
+                ],
+            )
+        );
+        return Ok(());
+    }
     let cfg = config_from(args)?;
     let n_requests = args.usize_or("requests", 32);
     let prompt_len = args.usize_or("prompt-len", 64);
     let gen_len = args.usize_or("gen-len", 32);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
+    // Cancel every k-th request after its first token, demonstrating
+    // immediate cache-page reclamation (0 = never cancel).
+    let cancel_every = args.usize_or("cancel-every", 0);
+    let stop_token: Option<u32> = args.parsed("stop-token");
     println!(
         "serve demo: {} requests (prompt {prompt_len}, gen {gen_len}) on {}/{} backend={}",
         n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend
@@ -227,16 +286,63 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let engine = build_engine(&cfg)?;
     let corpus = Corpus::new(cfg.model.vocab_size, 1234);
     let router = Router::new(BatcherConfig::from(&cfg.serve));
-    let metrics = router.metrics.clone();
-    let (tx, rx, handle) = router.serve(engine);
-    for i in 0..n_requests {
-        let prompt = corpus.sequence(kqsvd::text::Split::Validation, 1000 + i as u64, prompt_len);
-        tx.send(Request::new(i as u64, prompt, gen_len)).unwrap();
+    let handle = router.serve(Box::new(engine));
+
+    let submissions: Vec<RequestHandle> = (0..n_requests)
+        .map(|i| {
+            let prompt =
+                corpus.sequence(kqsvd::text::Split::Validation, 1000 + i as u64, prompt_len);
+            let params = GenParams {
+                max_new_tokens: gen_len,
+                temperature,
+                stop_tokens: stop_token.into_iter().collect(),
+                ..GenParams::default()
+            };
+            handle.submit(Request::with_params(i as u64, prompt, params))
+        })
+        .collect();
+
+    let (mut finished, mut cancelled, mut rejected) = (0usize, 0usize, 0usize);
+    for (i, rh) in submissions.into_iter().enumerate() {
+        // Selected requests are cancelled once they reach their first token,
+        // exercising the mid-decode page-reclamation path whenever the
+        // request is still in flight. A terminal event consumed while
+        // waiting for that token is recorded directly.
+        let mut early: Option<anyhow::Result<kqsvd::coordinator::Completion>> = None;
+        if cancel_every > 0 && (i + 1) % cancel_every == 0 {
+            loop {
+                match rh.next_event() {
+                    Some(TokenEvent::Token { .. }) => {
+                        rh.cancel();
+                        break;
+                    }
+                    Some(TokenEvent::Finished(c)) => {
+                        early = Some(Ok(c));
+                        break;
+                    }
+                    Some(TokenEvent::Rejected { id, error }) => {
+                        early = Some(Err(anyhow::anyhow!("request {id} rejected: {error}")));
+                        break;
+                    }
+                    None => {
+                        early = Some(Err(anyhow::anyhow!("stream closed")));
+                        break;
+                    }
+                }
+            }
+        }
+        let outcome = early.unwrap_or_else(|| rh.wait());
+        match outcome {
+            Ok(c) if c.reason == FinishReason::Cancelled => cancelled += 1,
+            Ok(_) => finished += 1,
+            Err(_) => rejected += 1,
+        }
     }
-    drop(tx);
-    let done: Vec<_> = rx.iter().collect();
-    handle.join().expect("engine thread")?;
-    println!("completed {}/{} requests\n", done.len(), n_requests);
+    let metrics = handle.metrics();
+    handle.join()?;
+    println!(
+        "completed {finished} · cancelled {cancelled} · rejected {rejected} / {n_requests} requests\n"
+    );
     println!("{}", metrics.report());
     Ok(())
 }

@@ -361,6 +361,18 @@ impl Engine for ServingEngine {
     fn max_seq(&self) -> usize {
         self.model.cfg.max_seq
     }
+
+    fn can_ever_admit(&self, total_tokens: usize) -> bool {
+        self.cache.bytes_for_tokens(total_tokens) <= self.cache.budget_bytes()
+    }
+
+    fn cache_used_bytes(&self) -> u64 {
+        self.cache.used_bytes()
+    }
+
+    fn cache_peak_bytes(&self) -> u64 {
+        self.cache.peak_bytes()
+    }
 }
 
 /// Softmax of logits (helper for perplexity-style quality metrics).

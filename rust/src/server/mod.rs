@@ -1,6 +1,12 @@
 //! Serving facade: assembles model + projections + cache + backend into a
 //! runnable engine and exposes the offline/online entry points used by the
 //! CLI (`kqsvd serve`), the examples and the e2e benches.
+//!
+//! Assembly goes through [`EngineBuilder`] (DESIGN.md §5): every component —
+//! model weights, calibrated projections, attention backend, cache manager —
+//! is independently overridable, and anything not provided is built from the
+//! [`Config`] with on-disk artifact caching in `run_dir` so repeated runs
+//! are instant.
 
 pub mod engine;
 
@@ -8,66 +14,173 @@ pub use engine::{Backend, ServingEngine};
 
 use crate::calib::{calibrate, ProjectionSet};
 use crate::config::Config;
+use crate::kvcache::KvCacheManager;
 use crate::model::{ModelWeights, Transformer};
 use crate::runtime::PjrtEngine;
 use crate::text::Corpus;
 use anyhow::{Context, Result};
 use std::path::Path;
 
+/// Step-by-step engine assembly with per-component overrides.
+///
+/// ```no_run
+/// # use kqsvd::config::Config;
+/// # use kqsvd::server::{Backend, EngineBuilder};
+/// let cfg = Config::from_preset("test-tiny").unwrap();
+/// let engine = EngineBuilder::new(&cfg)
+///     .with_backend(Backend::Rust)
+///     .build()
+///     .unwrap();
+/// ```
+pub struct EngineBuilder {
+    cfg: Config,
+    model: Option<Transformer>,
+    proj: Option<ProjectionSet>,
+    backend: Option<Backend>,
+    cache: Option<KvCacheManager>,
+}
+
+impl EngineBuilder {
+    pub fn new(cfg: &Config) -> EngineBuilder {
+        EngineBuilder {
+            cfg: cfg.clone(),
+            model: None,
+            proj: None,
+            backend: None,
+            cache: None,
+        }
+    }
+
+    /// Use these weights instead of loading/initializing from `run_dir`.
+    pub fn with_model(mut self, model: Transformer) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Use these projections instead of loading/calibrating.
+    pub fn with_projections(mut self, proj: ProjectionSet) -> Self {
+        self.proj = Some(proj);
+        self
+    }
+
+    /// Use this attention backend instead of resolving `cfg.serve.backend`.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Use this cache manager (e.g. a different budget). Its spec must match
+    /// the geometry derived from the projections.
+    pub fn with_cache(mut self, cache: KvCacheManager) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Assemble the engine. Components not overridden are built from the
+    /// config, with weights/projections cached under `run_dir` (created up
+    /// front; save failures are logged, never swallowed).
+    pub fn build(self) -> Result<ServingEngine> {
+        let cfg = &self.cfg;
+        let run_dir = Path::new(&cfg.run_dir);
+        let needs_disk = self.model.is_none() || self.proj.is_none();
+        if needs_disk {
+            std::fs::create_dir_all(run_dir)
+                .with_context(|| format!("creating run dir {run_dir:?}"))?;
+        }
+
+        let model = match self.model {
+            Some(m) => m,
+            None => {
+                let weights_path = run_dir.join("weights.bin");
+                if weights_path.exists() {
+                    Transformer::new(
+                        cfg.model.clone(),
+                        ModelWeights::load(&weights_path)
+                            .with_context(|| format!("loading cached {weights_path:?}"))?,
+                    )
+                } else {
+                    let model = Transformer::init(cfg.model.clone());
+                    if let Err(e) = model.weights.save(&weights_path) {
+                        eprintln!("warning: failed to cache weights at {weights_path:?}: {e}");
+                    }
+                    model
+                }
+            }
+        };
+
+        let proj = match self.proj {
+            Some(p) => p,
+            None => {
+                let proj_path = run_dir.join(format!("proj_{}.bin", cfg.method.name()));
+                if proj_path.exists() {
+                    let p = ProjectionSet::load(&proj_path)
+                        .with_context(|| format!("loading cached {proj_path:?}"))?;
+                    anyhow::ensure!(
+                        p.method == cfg.method && p.layers.len() == cfg.model.n_layers,
+                        "cached projections at {proj_path:?} don't match config; delete the run dir"
+                    );
+                    p
+                } else {
+                    let corpus = Corpus::new(cfg.model.vocab_size, cfg.calib.seed);
+                    let (p, _, _) = calibrate(&model, &corpus, &cfg.calib, cfg.method);
+                    if let Err(e) = p.save(&proj_path) {
+                        eprintln!("warning: failed to cache projections at {proj_path:?}: {e}");
+                    }
+                    p
+                }
+            }
+        };
+
+        let backend = match self.backend {
+            Some(b) => b,
+            None => match cfg.serve.backend.as_str() {
+                "rust" => Backend::Rust,
+                "pjrt" => Backend::Pjrt(Box::new(
+                    PjrtEngine::new(Path::new(&cfg.artifacts_dir))
+                        .context("building PJRT backend (run `make artifacts`)")?,
+                )),
+                other => anyhow::bail!("unknown backend '{other}' (rust|pjrt)"),
+            },
+        };
+
+        let mut engine = ServingEngine::new(cfg, model, proj, backend)?;
+        if let Some(cache) = self.cache {
+            anyhow::ensure!(
+                cache.spec() == engine.cache.spec(),
+                "provided cache spec doesn't match the projection geometry"
+            );
+            engine.cache = cache;
+        }
+        Ok(engine)
+    }
+}
+
 /// Build (or load cached) weights + projections for a config, then assemble
-/// the engine. `run_dir` caches both artifacts so repeated runs are instant.
+/// the engine — the no-overrides path through [`EngineBuilder`].
 pub fn build_engine(cfg: &Config) -> Result<ServingEngine> {
-    let run_dir = Path::new(&cfg.run_dir);
-    let weights_path = run_dir.join("weights.bin");
-    let proj_path = run_dir.join(format!("proj_{}.bin", cfg.method.name()));
-
-    let model = if weights_path.exists() {
-        Transformer::new(cfg.model.clone(), ModelWeights::load(&weights_path)?)
-    } else {
-        let model = Transformer::init(cfg.model.clone());
-        model.weights.save(&weights_path).ok(); // cache best-effort
-        model
-    };
-
-    let proj = if proj_path.exists() {
-        let p = ProjectionSet::load(&proj_path)?;
-        anyhow::ensure!(
-            p.method == cfg.method && p.layers.len() == cfg.model.n_layers,
-            "cached projections at {proj_path:?} don't match config; delete the run dir"
-        );
-        p
-    } else {
-        let corpus = Corpus::new(cfg.model.vocab_size, cfg.calib.seed);
-        let (p, _, _) = calibrate(&model, &corpus, &cfg.calib, cfg.method);
-        p.save(&proj_path).ok();
-        p
-    };
-
-    let backend = match cfg.serve.backend.as_str() {
-        "rust" => Backend::Rust,
-        "pjrt" => Backend::Pjrt(Box::new(
-            PjrtEngine::new(Path::new(&cfg.artifacts_dir))
-                .context("building PJRT backend (run `make artifacts`)")?,
-        )),
-        other => anyhow::bail!("unknown backend '{other}' (rust|pjrt)"),
-    };
-    ServingEngine::new(cfg, model, proj, backend)
+    EngineBuilder::new(cfg).build()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Method;
+    use crate::config::{CalibConfig, Method};
 
-    #[test]
-    fn build_engine_caches_run_products() {
+    fn tiny_cfg(dir_tag: &str) -> Config {
         let mut cfg = Config::from_preset("test-tiny").unwrap();
         cfg.calib.n_calib_seqs = 2;
         cfg.calib.calib_seq_len = 32;
         cfg.method = Method::KqSvd;
-        let dir = std::env::temp_dir().join("kqsvd-test-buildengine");
+        let dir = std::env::temp_dir().join(format!("kqsvd-test-{dir_tag}"));
         std::fs::remove_dir_all(&dir).ok();
         cfg.run_dir = dir.to_str().unwrap().to_string();
+        cfg
+    }
+
+    #[test]
+    fn build_engine_caches_run_products() {
+        let cfg = tiny_cfg("buildengine");
+        let dir = Path::new(&cfg.run_dir).to_path_buf();
 
         let eng1 = build_engine(&cfg).unwrap();
         assert!(dir.join("weights.bin").exists());
@@ -83,15 +196,73 @@ mod tests {
     }
 
     #[test]
+    fn build_engine_creates_missing_nested_run_dir() {
+        let mut cfg = tiny_cfg("nested");
+        cfg.run_dir = format!("{}/a/b/c", cfg.run_dir);
+        let eng = build_engine(&cfg).unwrap();
+        assert!(Path::new(&cfg.run_dir).join("weights.bin").exists());
+        assert!(eng.cache_bytes_per_token() > 0);
+        std::fs::remove_dir_all(std::env::temp_dir().join("kqsvd-test-nested")).ok();
+    }
+
+    #[test]
     fn bad_backend_rejected() {
-        let mut cfg = Config::from_preset("test-tiny").unwrap();
-        cfg.calib.n_calib_seqs = 2;
-        cfg.calib.calib_seq_len = 32;
+        let mut cfg = tiny_cfg("badbackend");
         cfg.serve.backend = "cuda".into();
-        let dir = std::env::temp_dir().join("kqsvd-test-badbackend");
-        std::fs::remove_dir_all(&dir).ok();
-        cfg.run_dir = dir.to_str().unwrap().to_string();
         assert!(build_engine(&cfg).is_err());
-        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(Path::new(&cfg.run_dir)).ok();
+    }
+
+    #[test]
+    fn builder_overrides_skip_disk_artifacts() {
+        use crate::calib::calibrate;
+        use crate::text::Corpus;
+        let cfg = tiny_cfg("builder-mem");
+        let calib = CalibConfig {
+            n_calib_seqs: 2,
+            calib_seq_len: 32,
+            ..CalibConfig::default()
+        };
+        let model = Transformer::init(cfg.model.clone());
+        let corpus = Corpus::new(cfg.model.vocab_size, cfg.calib.seed);
+        let (proj, _, _) = calibrate(&model, &corpus, &calib, cfg.method);
+        let eng = EngineBuilder::new(&cfg)
+            .with_model(model)
+            .with_projections(proj)
+            .with_backend(Backend::Rust)
+            .build()
+            .unwrap();
+        assert!(eng.cache_bytes_per_token() > 0);
+        // Fully in-memory assembly: nothing written to run_dir.
+        assert!(!Path::new(&cfg.run_dir).join("weights.bin").exists());
+    }
+
+    #[test]
+    fn builder_cache_override_changes_budget() {
+        let cfg = tiny_cfg("builder-cache");
+        let eng1 = build_engine(&cfg).unwrap();
+        let spec = eng1.cache.spec().clone();
+        let eng2 = EngineBuilder::new(&cfg)
+            .with_cache(KvCacheManager::new(spec, 1234 * 1024))
+            .build()
+            .unwrap();
+        assert_eq!(eng2.cache.budget_bytes(), 1234 * 1024);
+        std::fs::remove_dir_all(Path::new(&cfg.run_dir)).ok();
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_cache_spec() {
+        use crate::kvcache::{CacheSpec, LayerGeom};
+        let cfg = tiny_cfg("builder-badcache");
+        let bad_spec = CacheSpec {
+            n_kv_heads: 1,
+            layers: vec![LayerGeom { k_width: 1, v_width: 1 }],
+            page_tokens: 4,
+        };
+        let r = EngineBuilder::new(&cfg)
+            .with_cache(KvCacheManager::new(bad_spec, 1 << 20))
+            .build();
+        assert!(r.is_err());
+        std::fs::remove_dir_all(Path::new(&cfg.run_dir)).ok();
     }
 }

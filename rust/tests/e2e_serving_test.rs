@@ -6,9 +6,13 @@
 //! PJRT cases self-skip when `artifacts/` is missing (`make artifacts`).
 
 use kqsvd::config::{Config, Method};
-use kqsvd::coordinator::{BatcherConfig, Request, Router};
+use kqsvd::coordinator::{BatcherConfig, Completion, Request, RequestHandle, Router};
 use kqsvd::server::{build_engine, ServingEngine};
 use std::path::Path;
+
+fn workload_prompt(i: u64) -> Vec<u32> {
+    (0..8).map(|j| 1 + ((i * 13 + j * 7) % 60) as u32).collect()
+}
 
 fn engine_for(preset: &str, method: Method, backend: &str, tag: &str) -> anyhow::Result<ServingEngine> {
     let mut cfg = Config::from_preset(preset).map_err(anyhow::Error::msg)?;
@@ -29,10 +33,31 @@ fn run_workload(engine: &mut ServingEngine, n_reqs: u64) -> Vec<kqsvd::coordinat
         prefill_chunk: 16,
     });
     for i in 0..n_reqs {
-        let prompt: Vec<u32> = (0..8).map(|j| 1 + ((i * 13 + j * 7) % 60) as u32).collect();
-        router.submit(engine, Request::new(i, prompt, 6)).unwrap();
+        router
+            .submit(engine, Request::new(i, workload_prompt(i), 6))
+            .unwrap();
     }
     let mut done = router.run_offline(engine).unwrap();
+    done.sort_by_key(|c| c.id);
+    done
+}
+
+/// The same workload through the streaming session API.
+fn run_workload_streaming(engine: ServingEngine, n_reqs: u64) -> Vec<Completion> {
+    let router = Router::new(BatcherConfig {
+        max_batch: 4,
+        max_queue: 64,
+        prefill_chunk: 16,
+    });
+    let handle = router.serve(Box::new(engine));
+    let submissions: Vec<RequestHandle> = (0..n_reqs)
+        .map(|i| handle.submit(Request::new(i, workload_prompt(i), 6)))
+        .collect();
+    let mut done: Vec<Completion> = submissions
+        .into_iter()
+        .map(|rh| rh.wait().expect("completion"))
+        .collect();
+    handle.join().unwrap();
     done.sort_by_key(|c| c.id);
     done
 }
@@ -72,6 +97,23 @@ fn pjrt_backend_generates_identical_tokens_to_rust() {
                 "{preset}/{method:?}: token divergence between backends"
             );
         }
+    }
+}
+
+#[test]
+fn offline_and_streaming_modes_produce_identical_completions() {
+    // Acceptance: Router::run_offline and the streaming EngineHandle are two
+    // wrappers over the same scheduling path, so the same request set on the
+    // test-tiny preset must generate identical tokens and finish reasons.
+    let mut offline_eng = engine_for("test-tiny", Method::KqSvd, "rust", "det-off").unwrap();
+    let offline = run_workload(&mut offline_eng, 5);
+    let streaming_eng = engine_for("test-tiny", Method::KqSvd, "rust", "det-str").unwrap();
+    let streamed = run_workload_streaming(streaming_eng, 5);
+    assert_eq!(offline.len(), streamed.len());
+    for (a, b) in offline.iter().zip(&streamed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {}: mode divergence", a.id);
+        assert_eq!(a.reason, b.reason);
     }
 }
 
