@@ -3,13 +3,23 @@
 //! Covers both serving modes — offline drain (`Router::run_offline`) and the
 //! streaming session API (`Router::serve` + `EngineHandle`) — which share
 //! one scheduling path, so the delta between the rows is pure session
-//! overhead (channels + engine thread).
+//! overhead (channels + engine thread) — plus a **serial-vs-batch** section
+//! comparing the batch-major GEMM execution path against the serial
+//! `forward_token` oracle on the `test-tiny` preset.
+//!
+//! Results are printed as a table, written to `bench_out/e2e_serving.csv`,
+//! and summarized into `BENCH_serving.json` at the repository root so the
+//! perf trajectory is machine-readable across PRs.
 //!
 //! Run: `cargo bench --bench e2e_serving`  (PJRT row needs `make artifacts`)
+//! CI smoke mode: `KQSVD_BENCH_SMOKE=1 cargo bench --bench e2e_serving`
+//! shrinks calibration and the request count so the job finishes quickly.
 
 use kqsvd::bench_support::{f as fnum, Table};
 use kqsvd::config::{Config, Method};
+use kqsvd::coordinator::metrics::names as metric_names;
 use kqsvd::coordinator::{BatcherConfig, Request, RequestHandle, Router};
+use kqsvd::jsonutil::Json;
 use kqsvd::server::build_engine;
 use kqsvd::text::{Corpus, Split};
 use kqsvd::util::stats::fmt_bytes;
@@ -30,7 +40,8 @@ impl Mode {
 }
 
 struct RunResult {
-    tok_per_s: f64,
+    decode_tok_per_s: f64,
+    prefill_tok_per_s: f64,
     ttft_p50: f64,
     ttft_p95: f64,
     tpot_mean: f64,
@@ -38,37 +49,48 @@ struct RunResult {
     peak_bytes: u64,
 }
 
+struct Workload {
+    preset: &'static str,
+    n_requests: usize,
+    prompt_len: usize,
+    gen_len: usize,
+    calib_seqs: usize,
+    calib_len: usize,
+}
+
 fn run(
+    w: &Workload,
     method: Method,
     backend: &str,
     max_batch: usize,
-    n_requests: usize,
     mode: Mode,
+    serial_oracle: bool,
 ) -> anyhow::Result<RunResult> {
-    let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
+    let mut cfg = Config::from_preset(w.preset).map_err(anyhow::Error::msg)?;
     cfg.method = method;
     cfg.serve.backend = backend.into();
     cfg.serve.max_batch = max_batch;
-    cfg.calib.n_calib_seqs = 8;
-    cfg.calib.calib_seq_len = 256;
-    cfg.run_dir = format!("runs/bench_e2e_{}_{}", method.name(), backend);
+    cfg.calib.n_calib_seqs = w.calib_seqs;
+    cfg.calib.calib_seq_len = w.calib_len;
+    cfg.run_dir = format!("runs/bench_e2e_{}_{}_{}", w.preset, method.name(), backend);
     let mut engine = build_engine(&cfg)?;
+    engine.set_serial_oracle(serial_oracle);
     let cache_per_tok = engine.cache_bytes_per_token();
     let mut router = Router::new(BatcherConfig::from(&cfg.serve));
     let corpus = Corpus::new(cfg.model.vocab_size, 99);
-    let prompts: Vec<Vec<u32>> = (0..n_requests)
-        .map(|i| corpus.sequence(Split::Validation, 2_000 + i as u64, 96))
+    let prompts: Vec<Vec<u32>> = (0..w.n_requests)
+        .map(|i| corpus.sequence(Split::Validation, 2_000 + i as u64, w.prompt_len))
         .collect();
 
     let metrics = match mode {
         Mode::Offline => {
             for (i, prompt) in prompts.into_iter().enumerate() {
                 router
-                    .submit(&engine, Request::new(i as u64, prompt, 32))
+                    .submit(&engine, Request::new(i as u64, prompt, w.gen_len))
                     .map_err(|e| anyhow::anyhow!("{e:?}"))?;
             }
             let done = router.run_offline(&mut engine)?;
-            assert_eq!(done.len(), n_requests);
+            assert_eq!(done.len(), w.n_requests);
             router.metrics.clone()
         }
         Mode::Session => {
@@ -76,7 +98,7 @@ fn run(
             let submissions: Vec<RequestHandle> = prompts
                 .into_iter()
                 .enumerate()
-                .map(|(i, prompt)| handle.submit(Request::new(i as u64, prompt, 32)))
+                .map(|(i, prompt)| handle.submit(Request::new(i as u64, prompt, w.gen_len)))
                 .collect();
             for rh in submissions {
                 rh.wait()?;
@@ -90,7 +112,12 @@ fn run(
     let (_, _, ttft_p50, ttft_p95, ..) = metrics.summary_stats("ttft_ms").unwrap();
     let (_, tpot_mean, ..) = metrics.summary_stats("tpot_ms").unwrap();
     Ok(RunResult {
-        tok_per_s: metrics.gauge_value("decode_tok_per_s").unwrap_or(0.0),
+        decode_tok_per_s: metrics
+            .gauge_value(metric_names::DECODE_TOK_PER_S)
+            .unwrap_or(0.0),
+        prefill_tok_per_s: metrics
+            .gauge_value(metric_names::PREFILL_TOK_PER_S)
+            .unwrap_or(0.0),
         ttft_p50,
         ttft_p95,
         tpot_mean,
@@ -100,22 +127,52 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let n_requests = 16;
-    println!("E2E serving bench: {n_requests} requests × (96 prompt + 32 gen), mha-small\n");
+    let smoke = std::env::var("KQSVD_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let main_w = if smoke {
+        Workload {
+            preset: "mha-small",
+            n_requests: 4,
+            prompt_len: 32,
+            gen_len: 8,
+            calib_seqs: 2,
+            calib_len: 64,
+        }
+    } else {
+        Workload {
+            preset: "mha-small",
+            n_requests: 16,
+            prompt_len: 96,
+            gen_len: 32,
+            calib_seqs: 8,
+            calib_len: 256,
+        }
+    };
+    println!(
+        "E2E serving bench{}: {} requests × ({} prompt + {} gen), {}\n",
+        if smoke { " (smoke)" } else { "" },
+        main_w.n_requests,
+        main_w.prompt_len,
+        main_w.gen_len,
+        main_w.preset,
+    );
     let mut t = Table::new(&[
-        "method", "backend", "mode", "batch", "tok/s", "ttft p50(ms)", "ttft p95(ms)",
-        "tpot(ms)", "cache/tok", "peak cache",
+        "method", "backend", "mode", "batch", "decode tok/s", "prefill tok/s",
+        "ttft p50(ms)", "ttft p95(ms)", "tpot(ms)", "cache/tok", "peak cache",
     ]);
+    let mut main_rows: Vec<Json> = Vec::new();
     let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
-    let mut comp_vs_exact = (0.0f64, 0.0f64);
     for (method, backend) in [
         (Method::None, "rust"),
         (Method::KqSvd, "rust"),
         (Method::None, "pjrt"),
         (Method::KqSvd, "pjrt"),
     ] {
-        if backend == "pjrt" && !have_artifacts {
-            println!("  (skipping pjrt rows — run `make artifacts`)");
+        if backend == "pjrt" && (!have_artifacts || smoke) {
+            if !smoke {
+                println!("  (skipping pjrt rows — run `make artifacts`)");
+            }
             continue;
         }
         // The session rows only run on the rust backend: they measure
@@ -127,36 +184,101 @@ fn main() -> anyhow::Result<()> {
         };
         for batch in [1usize, 8] {
             for &mode in modes {
-                let r = run(method, backend, batch, n_requests, mode)?;
-                if backend == "rust" && batch == 8 && mode == Mode::Offline {
-                    if method == Method::None {
-                        comp_vs_exact.0 = r.tok_per_s;
-                    } else {
-                        comp_vs_exact.1 = r.tok_per_s;
-                    }
-                }
+                let r = run(&main_w, method, backend, batch, mode, false)?;
                 t.row(&[
                     method.name().into(),
                     backend.into(),
                     mode.name().into(),
                     batch.to_string(),
-                    fnum(r.tok_per_s, 1),
+                    fnum(r.decode_tok_per_s, 1),
+                    fnum(r.prefill_tok_per_s, 1),
                     fnum(r.ttft_p50, 2),
                     fnum(r.ttft_p95, 2),
                     fnum(r.tpot_mean, 3),
                     fmt_bytes(r.cache_per_tok as u64),
                     fmt_bytes(r.peak_bytes),
                 ]);
+                main_rows.push(
+                    Json::obj()
+                        .set("method", method.name())
+                        .set("backend", backend)
+                        .set("mode", mode.name())
+                        .set("max_batch", batch)
+                        .set("decode_tok_per_s", r.decode_tok_per_s)
+                        .set("prefill_tok_per_s", r.prefill_tok_per_s)
+                        .set("ttft_p50_ms", r.ttft_p50)
+                        .set("ttft_p95_ms", r.ttft_p95)
+                        .set("tpot_mean_ms", r.tpot_mean)
+                        .set("cache_bytes_per_token", r.cache_per_tok)
+                        .set("cache_peak_bytes", r.peak_bytes),
+                );
             }
         }
     }
     t.print();
     t.write_csv("e2e_serving.csv")?;
-    let (exact, comp) = comp_vs_exact;
+
+    // Serial-vs-batch: the acceptance comparison for the batch-major GEMM
+    // execution path, at batch 8 on the test-tiny preset.
+    let tiny_w = Workload {
+        preset: "test-tiny",
+        n_requests: 16,
+        prompt_len: 32,
+        gen_len: 32,
+        calib_seqs: 3,
+        calib_len: 48,
+    };
+    println!("\nserial-vs-batch decode ({}, batch 8, method kqsvd):", tiny_w.preset);
+    let serial = run(&tiny_w, Method::KqSvd, "rust", 8, Mode::Offline, true)?;
+    let batch = run(&tiny_w, Method::KqSvd, "rust", 8, Mode::Offline, false)?;
+    let speedup = batch.decode_tok_per_s / serial.decode_tok_per_s.max(1e-9);
     println!(
-        "\ncompressed/exact decode throughput at batch 8 (rust, offline): {:.2}×",
-        comp / exact.max(1e-9)
+        "  serial oracle: decode {:.1} tok/s · prefill {:.1} tok/s",
+        serial.decode_tok_per_s, serial.prefill_tok_per_s
     );
-    println!("CSV → bench_out/e2e_serving.csv");
+    println!(
+        "  batch-major:   decode {:.1} tok/s · prefill {:.1} tok/s",
+        batch.decode_tok_per_s, batch.prefill_tok_per_s
+    );
+    println!("  batch-major decode speedup: {speedup:.2}× (target ≥ 3×)");
+
+    let json = Json::obj()
+        .set("bench", "e2e_serving")
+        .set("smoke", smoke)
+        .set(
+            "workload",
+            Json::obj()
+                .set("preset", main_w.preset)
+                .set("n_requests", main_w.n_requests)
+                .set("prompt_len", main_w.prompt_len)
+                .set("gen_len", main_w.gen_len),
+        )
+        .set("rows", Json::Arr(main_rows))
+        .set(
+            "serial_vs_batch",
+            Json::obj()
+                .set("preset", tiny_w.preset)
+                .set("method", Method::KqSvd.name())
+                .set("max_batch", 8usize)
+                .set("n_requests", tiny_w.n_requests)
+                .set("prompt_len", tiny_w.prompt_len)
+                .set("gen_len", tiny_w.gen_len)
+                .set("serial_decode_tok_per_s", serial.decode_tok_per_s)
+                .set("serial_prefill_tok_per_s", serial.prefill_tok_per_s)
+                .set("batch_decode_tok_per_s", batch.decode_tok_per_s)
+                .set("batch_prefill_tok_per_s", batch.prefill_tok_per_s)
+                .set("decode_speedup", speedup),
+        );
+    std::fs::write("BENCH_serving.json", json.to_string_pretty())?;
+    println!("\nCSV → bench_out/e2e_serving.csv · JSON → BENCH_serving.json");
+
+    // Enforce the acceptance gate (recorded above regardless). Smoke mode is
+    // advisory: 2-core CI runners make the ratio too noisy to fail on.
+    if !smoke {
+        anyhow::ensure!(
+            speedup >= 3.0,
+            "batch-major decode speedup {speedup:.2}× is below the 3× acceptance floor"
+        );
+    }
     Ok(())
 }

@@ -9,6 +9,7 @@
 
 use crate::kvcache::PagedBuf;
 use crate::linalg::Mat;
+use crate::util::threadpool::SendPtr;
 
 /// Single-pass (online-softmax) attention of one projected query `q̃ (R)`
 /// over a compressed cache pair `(C_K, C_V)`, returning the compressed
@@ -17,13 +18,23 @@ use crate::linalg::Mat;
 /// Exactly the flash-decoding recurrence the Pallas kernel uses, so the two
 /// backends agree to float tolerance.
 pub fn online_attn(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32) -> Vec<f32> {
+    let mut acc = vec![0.0f32; cv.width()];
+    online_attn_into(q_proj, ck, cv, scale, &mut acc);
+    acc
+}
+
+/// Allocation-free [`online_attn`]: writes the compressed context into a
+/// caller-owned `acc` slice (length `cv.width()`), so the steady-state decode
+/// path never allocates per token.
+pub fn online_attn_into(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32, acc: &mut [f32]) {
     let r = ck.width();
     let rv = cv.width();
     assert_eq!(q_proj.len(), r, "projected query width mismatch");
     assert_eq!(ck.len(), cv.len(), "K/V cache length mismatch");
+    assert_eq!(acc.len(), rv, "context accumulator width mismatch");
     let mut m_run = f32::NEG_INFINITY;
     let mut l_run = 0.0f32;
-    let mut acc = vec![0.0f32; rv];
+    acc.fill(0.0);
 
     let mut row = 0usize;
     let mut kv_chunks = cv.chunks();
@@ -62,7 +73,6 @@ pub fn online_attn(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32) -> 
             *a *= inv;
         }
     }
-    acc
 }
 
 /// One attention layer's decode step for a single sequence: project each
@@ -90,21 +100,119 @@ pub fn decode_attn_layer(
         let kv = hi / group;
         let q_proj = bproj[kv].vecmat(q); // (R)
         let ctx = online_attn(&q_proj, &k_bufs[kv], &v_bufs[kv], scale); // (Rv)
-        // out += ctx · F_hi
-        let fold = folds[hi];
-        debug_assert_eq!(fold.rows(), ctx.len());
-        debug_assert_eq!(fold.cols(), d_model);
-        for (i, &c) in ctx.iter().enumerate() {
-            if c == 0.0 {
-                continue;
-            }
-            let frow = fold.row(i);
-            for j in 0..d_model {
-                out[j] += c * frow[j];
-            }
-        }
+        fold_ctx_head(&mut out, &ctx, folds[hi]); // out += ctx · F_hi
     }
     out
+}
+
+/// Accumulate one head's compressed context into model space:
+/// `out += ctx · fold`. This single kernel is shared by the serial oracle
+/// ([`decode_attn_layer`]) and the batch path ([`decode_attn_batch`]), so
+/// their f32 accumulation order (ascending rank index, zero-skip) is
+/// identical *by construction* — the bit-parity guarantee depends on it.
+#[inline]
+fn fold_ctx_head(out: &mut [f32], ctx: &[f32], fold: &Mat) {
+    debug_assert_eq!(fold.rows(), ctx.len());
+    debug_assert_eq!(fold.cols(), out.len());
+    for (i, &c) in ctx.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        let frow = fold.row(i);
+        for (o, &f) in out.iter_mut().zip(frow) {
+            *o += c * f;
+        }
+    }
+}
+
+/// Batch-major decode attention for one layer: every `(sequence × kv-head)`
+/// pair is an independent work item on the global threadpool, writing its
+/// group's compressed contexts into disjoint slices of the caller's `ctx`
+/// scratch; a second row-parallel pass folds contexts into model space.
+///
+/// Per row the math (and the f32 operation order) is exactly
+/// [`decode_attn_layer`], so batch-major decode is bit-identical to the
+/// serial oracle — tested in `server::engine`.
+///
+/// * `qp` — `B × (H·R)` projected post-RoPE queries (`q̃ = q·B_kv` per head);
+/// * `seqs` — per batch item, this layer's per-KV-head `(K, V)` paged buffers;
+/// * `folds` — `H` per-query-head fold matrices `R_v×D`;
+/// * `ctx` — `B × (H·R_v)` scratch, fully overwritten;
+/// * `out` — `B × D` attention output, fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attn_batch(
+    qp: &Mat,
+    seqs: &[(&[PagedBuf], &[PagedBuf])],
+    folds: &[&Mat],
+    scale: f32,
+    group: usize,
+    r: usize,
+    rv: usize,
+    ctx: &mut Mat,
+    out: &mut Mat,
+) {
+    let b = seqs.len();
+    let h = folds.len();
+    assert!(group > 0 && h % group == 0, "bad GQA group");
+    let hkv = h / group;
+    assert_eq!(qp.rows(), b, "query batch mismatch");
+    assert_eq!(qp.cols(), h * r, "projected query width mismatch");
+    let d_model = folds[0].cols();
+    ctx.resize(b, h * rv);
+    out.resize(b, d_model);
+
+    // Pass 1: online-softmax contexts, parallel over (sequence × kv-head).
+    // Disjoint writes: item (bi, kv) owns ctx rows `bi`, columns
+    // `[kv·group·rv, (kv+1)·group·rv)`.
+    let ctx_ptr = SendPtr(ctx.data_mut().as_mut_ptr());
+    crate::util::threadpool::parallel_for(b * hkv, |lo, hi| {
+        let ctx_ptr = &ctx_ptr; // capture the Sync wrapper, not the raw field
+        for item in lo..hi {
+            let (bi, kv) = (item / hkv, item % hkv);
+            let (k_bufs, v_bufs) = seqs[bi];
+            for g in 0..group {
+                let hq = kv * group + g;
+                let q_proj = &qp.row(bi)[hq * r..(hq + 1) * r];
+                let acc = unsafe {
+                    std::slice::from_raw_parts_mut(ctx_ptr.0.add(bi * h * rv + hq * rv), rv)
+                };
+                online_attn_into(q_proj, &k_bufs[kv], &v_bufs[kv], scale, acc);
+            }
+        }
+    });
+
+    // Pass 2: fold into model space, parallel over batch rows (disjoint
+    // output rows). Heads accumulate in ascending order with the same
+    // zero-skip as the serial path, preserving bit-identity.
+    let ctx_ref: &Mat = ctx;
+    let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+    crate::util::threadpool::parallel_for(b, |lo, hi| {
+        let out_ptr = &out_ptr;
+        for bi in lo..hi {
+            let orow =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(bi * d_model), d_model) };
+            orow.fill(0.0);
+            let crow = ctx_ref.row(bi);
+            for (hq, &fold) in folds.iter().enumerate() {
+                fold_ctx_head(orow, &crow[hq * rv..(hq + 1) * rv], fold);
+            }
+        }
+    });
+}
+
+/// Causal masking + row softmax for the GEMM prefill path: row `i` of a
+/// `chunk×T` score matrix (absolute position `pos0 + i`) may attend to cache
+/// rows `0..=pos0+i`; later columns are masked to −∞ before the softmax.
+pub fn causal_softmax_rows(scores: &mut Mat, pos0: usize) {
+    let t = scores.cols();
+    for i in 0..scores.rows() {
+        let row = scores.row_mut(i);
+        let valid = (pos0 + i + 1).min(t);
+        for s in row[valid..].iter_mut() {
+            *s = f32::NEG_INFINITY;
+        }
+        crate::model::softmax_inplace(row);
+    }
 }
 
 /// Dense reference for tests: materialized softmax over a dense cache.
@@ -203,6 +311,86 @@ mod tests {
         }
         for (a, b) in out.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_decode_matches_serial_layer_bitwise() {
+        // decode_attn_batch over mixed-length sequences must equal per-seq
+        // decode_attn_layer exactly (same f32 op order), including GQA.
+        let mut rng = Pcg64::new(9, 1);
+        let (h, group, d, r, rv, dm) = (4usize, 2usize, 8, 4, 6, 16);
+        let hkv = h / group;
+        let b = 3usize;
+        let lens = [1usize, 13, 40];
+        let bproj: Vec<Mat> = (0..hkv).map(|_| Mat::randn(d, r, 1.0, &mut rng)).collect();
+        let folds: Vec<Mat> = (0..h).map(|_| Mat::randn(rv, dm, 1.0, &mut rng)).collect();
+        let caches: Vec<(Vec<PagedBuf>, Vec<PagedBuf>)> = lens
+            .iter()
+            .map(|&t| {
+                let k: Vec<PagedBuf> = (0..hkv)
+                    .map(|_| fill_buf(&Mat::randn(t, r, 1.0, &mut rng), 8))
+                    .collect();
+                let v: Vec<PagedBuf> = (0..hkv)
+                    .map(|_| fill_buf(&Mat::randn(t, rv, 1.0, &mut rng), 8))
+                    .collect();
+                (k, v)
+            })
+            .collect();
+        let q_heads: Vec<Vec<Vec<f32>>> = (0..b)
+            .map(|_| {
+                (0..h)
+                    .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                    .collect()
+            })
+            .collect();
+
+        // Batch inputs: projected queries, per-seq buffer refs.
+        let mut qp = Mat::zeros(b, h * r);
+        for bi in 0..b {
+            for hq in 0..h {
+                let qproj = bproj[hq / group].vecmat(&q_heads[bi][hq]);
+                qp.row_mut(bi)[hq * r..(hq + 1) * r].copy_from_slice(&qproj);
+            }
+        }
+        let seqs: Vec<(&[PagedBuf], &[PagedBuf])> = caches
+            .iter()
+            .map(|(k, v)| (k.as_slice(), v.as_slice()))
+            .collect();
+        let fold_refs: Vec<&Mat> = folds.iter().collect();
+        let mut ctx = Mat::zeros(0, 0);
+        let mut out = Mat::zeros(0, 0);
+        decode_attn_batch(&qp, &seqs, &fold_refs, 0.35, group, r, rv, &mut ctx, &mut out);
+
+        for bi in 0..b {
+            let serial = decode_attn_layer(
+                &q_heads[bi],
+                &bproj.iter().collect::<Vec<_>>(),
+                &fold_refs,
+                &caches[bi].0,
+                &caches[bi].1,
+                0.35,
+                group,
+                dm,
+            );
+            assert_eq!(out.row(bi), serial.as_slice(), "seq {bi} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn causal_softmax_masks_future_rows() {
+        let mut rng = Pcg64::new(10, 1);
+        let (chunk, pos0) = (4usize, 3usize);
+        let t = pos0 + chunk;
+        let mut scores = Mat::randn(chunk, t, 1.0, &mut rng);
+        causal_softmax_rows(&mut scores, pos0);
+        for i in 0..chunk {
+            let row = scores.row(i);
+            let valid = pos0 + i + 1;
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} not a distribution");
+            assert!(row[valid..].iter().all(|&p| p == 0.0), "future leak row {i}");
+            assert!(row[..valid].iter().all(|&p| p > 0.0));
         }
     }
 

@@ -19,6 +19,12 @@ pub mod names {
     /// (pre-admission queue), sampled every scheduler step. Admitted
     /// sequences are tracked by the `running_seqs` gauge instead.
     pub const QUEUE_DEPTH: &str = "queue_depth";
+    /// Gauge: decoded tokens per second of engine time spent in decode steps
+    /// (batch decode emits one token per running sequence per step).
+    pub const DECODE_TOK_PER_S: &str = "decode_tok_per_s";
+    /// Gauge: prefilled prompt tokens per second of engine time spent in
+    /// prefill steps (the chunked-GEMM prompt path).
+    pub const PREFILL_TOK_PER_S: &str = "prefill_tok_per_s";
 }
 
 /// Registry of named summaries + counters + gauges.
@@ -171,6 +177,8 @@ mod tests {
             names::REQUESTS_REJECTED,
             names::REQUESTS_CANCELLED,
             names::QUEUE_DEPTH,
+            names::DECODE_TOK_PER_S,
+            names::PREFILL_TOK_PER_S,
         ];
         let mut uniq = all.to_vec();
         uniq.sort_unstable();

@@ -37,6 +37,11 @@ use std::time::{Duration, Instant};
 pub struct Router {
     batcher: Batcher,
     pub metrics: Arc<MetricsRegistry>,
+    /// Cumulative engine seconds spent in decode / prefill steps, attributed
+    /// per [`StepOutcome`] by [`Router::pump`]; the per-phase denominators of
+    /// the `decode_tok_per_s` / `prefill_tok_per_s` throughput gauges.
+    decode_s: f64,
+    prefill_s: f64,
 }
 
 impl Router {
@@ -44,6 +49,8 @@ impl Router {
         Router {
             batcher: Batcher::new(cfg),
             metrics: Arc::new(MetricsRegistry::new()),
+            decode_s: 0.0,
+            prefill_s: 0.0,
         }
     }
 
@@ -90,15 +97,20 @@ impl Router {
     /// One scheduler step + metrics recording. The single code path under
     /// both offline and streaming modes.
     fn pump(&mut self, engine: &mut dyn Engine) -> anyhow::Result<(StepOutcome, Vec<Completion>)> {
+        let step_t0 = Instant::now();
         let outcome = self.batcher.step(engine)?;
+        let step_s = step_t0.elapsed().as_secs_f64();
         match &outcome {
             StepOutcome::Prefill { n_tokens, .. } => {
                 self.metrics.incr("prefill_steps", 1);
                 self.metrics.incr("prefill_tokens", *n_tokens as u64);
+                self.prefill_s += step_s;
             }
             StepOutcome::Decode { n_seqs } => {
                 self.metrics.incr("decode_steps", 1);
+                self.metrics.incr("decode_tokens", *n_seqs as u64);
                 self.metrics.observe("decode_batch", *n_seqs as f64);
+                self.decode_s += step_s;
             }
             StepOutcome::Idle => {}
         }
@@ -122,12 +134,25 @@ impl Router {
         Ok((outcome, done))
     }
 
-    /// Record end-of-run throughput gauges.
+    /// Record end-of-run throughput gauges. Decode/prefill tokens/sec are
+    /// measured against engine time actually spent in each phase (accumulated
+    /// by [`Router::pump`]), not total wall clock, so the two phases are
+    /// separately comparable across runs.
     fn finish_run_metrics(&self, engine: &dyn Engine, wall_s: f64) {
         self.metrics.gauge("wall_s", wall_s);
-        let toks = self.metrics.counter("tokens_out");
-        if wall_s > 0.0 {
-            self.metrics.gauge("decode_tok_per_s", toks as f64 / wall_s);
+        let decode_toks = self.metrics.counter("decode_tokens");
+        if decode_toks > 0 {
+            self.metrics.gauge(
+                metrics::names::DECODE_TOK_PER_S,
+                decode_toks as f64 / self.decode_s.max(1e-9),
+            );
+        }
+        let prefill_toks = self.metrics.counter("prefill_tokens");
+        if prefill_toks > 0 {
+            self.metrics.gauge(
+                metrics::names::PREFILL_TOK_PER_S,
+                prefill_toks as f64 / self.prefill_s.max(1e-9),
+            );
         }
         self.metrics
             .gauge("cache_peak_bytes", engine.cache_peak_bytes() as f64);

@@ -58,10 +58,17 @@ impl PagedBuf {
 
     /// Bytes a new row would add (0 if the current page has room).
     fn next_row_cost(&self) -> usize {
-        if self.len % self.page_rows == 0 {
-            self.page_rows * self.width * 4
-        } else {
+        self.next_rows_cost(1)
+    }
+
+    /// Bytes that appending `n` rows would newly allocate (page-granular).
+    fn next_rows_cost(&self, n: usize) -> usize {
+        let capacity = self.pages.len() * self.page_rows;
+        let need = self.len + n;
+        if need <= capacity {
             0
+        } else {
+            (need - capacity).div_ceil(self.page_rows) * self.page_rows * self.width * 4
         }
     }
 
@@ -77,6 +84,18 @@ impl PagedBuf {
         self.pages[page][slot * self.width..(slot + 1) * self.width].copy_from_slice(row);
         self.len += 1;
         cost
+    }
+
+    /// Append `n_rows` rows from a contiguous row-major buffer (the chunked-
+    /// prefill path appends a whole chunk per layer in one call). Returns
+    /// bytes newly allocated; copies page-by-page.
+    pub fn push_rows(&mut self, data: &[f32], n_rows: usize) -> usize {
+        assert_eq!(data.len(), n_rows * self.width, "chunk size mismatch");
+        let mut total = 0;
+        for i in 0..n_rows {
+            total += self.push_row(&data[i * self.width..(i + 1) * self.width]);
+        }
+        total
     }
 
     /// Row `i` as a slice.
@@ -107,11 +126,23 @@ impl PagedBuf {
 
     /// Copy out as a dense `len×width` matrix (used by AOT marshalling).
     pub fn to_mat(&self) -> crate::linalg::Mat {
-        let mut data = Vec::with_capacity(self.len * self.width);
+        let mut out = crate::linalg::Mat::zeros(0, 0);
+        self.copy_into(&mut out);
+        out
+    }
+
+    /// Densify into a reusable `len×width` buffer (resized in place) — the
+    /// allocation-free [`PagedBuf::to_mat`] for scratch-arena callers like
+    /// the GEMM prefill path.
+    pub fn copy_into(&self, out: &mut crate::linalg::Mat) {
+        out.resize(self.len, self.width);
+        let mut off = 0;
+        let data = out.data_mut();
         for (chunk, _rows) in self.chunks() {
-            data.extend_from_slice(chunk);
+            data[off..off + chunk.len()].copy_from_slice(chunk);
+            off += chunk.len();
         }
-        crate::linalg::Mat::from_vec(self.len, self.width, data)
+        debug_assert_eq!(off, self.len * self.width);
     }
 
     /// Copy out, zero-padded to `rows` (AOT shape buckets need fixed shapes).
@@ -336,6 +367,26 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Budget check for appending `cost` new bytes to sequence `id`: growth
+    /// inside this sequence's reservation is pre-approved; growth beyond it
+    /// must fit next to everyone else's outstanding reservations.
+    fn check_append_budget(&self, id: SeqId, seq: &SeqCache, cost: usize) -> Result<(), CacheError> {
+        let alloc = seq.allocated_bytes() as u64;
+        let remaining_res = self
+            .reserved
+            .get(&id)
+            .map(|&r| r.saturating_sub(alloc))
+            .unwrap_or(0);
+        let outstanding_after = self.outstanding_reserved() - remaining_res.min(cost as u64);
+        if self.used_bytes + cost as u64 + outstanding_after > self.budget_bytes {
+            return Err(CacheError::OverBudget {
+                needed: cost as u64,
+                available: self.budget_bytes.saturating_sub(self.used_bytes + outstanding_after),
+            });
+        }
+        Ok(())
+    }
+
     /// Append one token's compressed rows for one layer. `k_rows`/`v_rows`
     /// are per-KV-head slices. Call once per layer, then `commit_token`.
     pub fn append_layer(
@@ -351,21 +402,7 @@ impl KvCacheManager {
         for h in 0..self.spec.n_kv_heads {
             cost += seq.k[layer][h].next_row_cost() + seq.v[layer][h].next_row_cost();
         }
-        // Growth inside this sequence's reservation is pre-approved; growth
-        // beyond it must fit next to everyone else's outstanding reservations.
-        let alloc = seq.allocated_bytes() as u64;
-        let remaining_res = self
-            .reserved
-            .get(&id)
-            .map(|&r| r.saturating_sub(alloc))
-            .unwrap_or(0);
-        let outstanding_after = self.outstanding_reserved() - remaining_res.min(cost as u64);
-        if self.used_bytes + cost as u64 + outstanding_after > self.budget_bytes {
-            return Err(CacheError::OverBudget {
-                needed: cost as u64,
-                available: self.budget_bytes.saturating_sub(self.used_bytes + outstanding_after),
-            });
-        }
+        self.check_append_budget(id, seq, cost)?;
         let seq = self.seqs.get_mut(&id).unwrap();
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
@@ -378,10 +415,82 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Append one token's compressed rows for one layer, reading row `row` of
+    /// per-KV-head matrices (`k_mats[h]` is `B×R_l`, `v_mats[h]` is `B×R_v`).
+    /// The batch-major decode path calls this per sequence without building
+    /// per-token slice vectors.
+    pub fn append_layer_row(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        k_mats: &[crate::linalg::Mat],
+        v_mats: &[crate::linalg::Mat],
+        row: usize,
+    ) -> Result<(), CacheError> {
+        assert_eq!(k_mats.len(), self.spec.n_kv_heads, "k head count mismatch");
+        assert_eq!(v_mats.len(), self.spec.n_kv_heads, "v head count mismatch");
+        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let mut cost = 0usize;
+        for h in 0..self.spec.n_kv_heads {
+            cost += seq.k[layer][h].next_row_cost() + seq.v[layer][h].next_row_cost();
+        }
+        self.check_append_budget(id, seq, cost)?;
+        let seq = self.seqs.get_mut(&id).unwrap();
+        let mut actual = 0usize;
+        for h in 0..self.spec.n_kv_heads {
+            actual += seq.k[layer][h].push_row(k_mats[h].row(row));
+            actual += seq.v[layer][h].push_row(v_mats[h].row(row));
+        }
+        debug_assert_eq!(actual, cost);
+        self.used_bytes += actual as u64;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        Ok(())
+    }
+
+    /// Append a whole chunk of compressed rows for one layer in one call
+    /// (`k_mats[h]` is `chunk×R_l`, `v_mats[h]` is `chunk×R_v`). The GEMM
+    /// prefill path appends each chunk per layer with one budget check
+    /// instead of per-token bookkeeping. Atomic: either the whole chunk fits
+    /// or nothing is appended.
+    pub fn append_layer_rows(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        k_mats: &[crate::linalg::Mat],
+        v_mats: &[crate::linalg::Mat],
+    ) -> Result<(), CacheError> {
+        assert_eq!(k_mats.len(), self.spec.n_kv_heads, "k head count mismatch");
+        assert_eq!(v_mats.len(), self.spec.n_kv_heads, "v head count mismatch");
+        let n = k_mats[0].rows();
+        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let mut cost = 0usize;
+        for h in 0..self.spec.n_kv_heads {
+            assert_eq!(k_mats[h].rows(), n, "ragged chunk");
+            assert_eq!(v_mats[h].rows(), n, "ragged chunk");
+            cost += seq.k[layer][h].next_rows_cost(n) + seq.v[layer][h].next_rows_cost(n);
+        }
+        self.check_append_budget(id, seq, cost)?;
+        let seq = self.seqs.get_mut(&id).unwrap();
+        let mut actual = 0usize;
+        for h in 0..self.spec.n_kv_heads {
+            actual += seq.k[layer][h].push_rows(k_mats[h].data(), n);
+            actual += seq.v[layer][h].push_rows(v_mats[h].data(), n);
+        }
+        debug_assert_eq!(actual, cost);
+        self.used_bytes += actual as u64;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        Ok(())
+    }
+
     /// Mark one full token appended (all layers done).
     pub fn commit_token(&mut self, id: SeqId) -> Result<usize, CacheError> {
+        self.commit_tokens(id, 1)
+    }
+
+    /// Mark `n` full tokens appended in one go (chunked prefill).
+    pub fn commit_tokens(&mut self, id: SeqId, n: usize) -> Result<usize, CacheError> {
         let seq = self.seqs.get_mut(&id).ok_or(CacheError::UnknownSeq(id))?;
-        seq.tokens += 1;
+        seq.tokens += n;
         Ok(seq.tokens)
     }
 
@@ -536,6 +645,80 @@ mod tests {
         mgr.free(1).unwrap();
         mgr.alloc(2).unwrap();
         push_token(&mut mgr, 2, 0.0).unwrap();
+    }
+
+    #[test]
+    fn chunk_append_matches_per_token_append() {
+        use crate::linalg::Mat;
+        let spec = spec2();
+        let chunk = 13usize; // crosses a page boundary (page_tokens = 8)
+        let mk_mats = |widths: &dyn Fn(&LayerGeom) -> usize, l: usize, sign: f32| -> Vec<Mat> {
+            (0..spec.n_kv_heads)
+                .map(|h| {
+                    let w = widths(&spec.layers[l]);
+                    let data: Vec<f32> = (0..chunk * w)
+                        .map(|i| sign * (i as f32 + h as f32 * 100.0 + l as f32 * 1e4))
+                        .collect();
+                    Mat::from_vec(chunk, w, data)
+                })
+                .collect()
+        };
+        let mut bulk = KvCacheManager::new(spec.clone(), 1 << 20);
+        let mut single = KvCacheManager::new(spec.clone(), 1 << 20);
+        bulk.alloc(1).unwrap();
+        single.alloc(1).unwrap();
+        for l in 0..spec.layers.len() {
+            let k = mk_mats(&|g: &LayerGeom| g.k_width, l, 1.0);
+            let v = mk_mats(&|g: &LayerGeom| g.v_width, l, -1.0);
+            bulk.append_layer_rows(1, l, &k, &v).unwrap();
+            for row in 0..chunk {
+                single.append_layer_row(1, l, &k, &v, row).unwrap();
+            }
+        }
+        bulk.commit_tokens(1, chunk).unwrap();
+        for _ in 0..chunk {
+            single.commit_token(1).unwrap();
+        }
+        assert_eq!(bulk.seq_tokens(1).unwrap(), chunk);
+        assert_eq!(single.seq_tokens(1).unwrap(), chunk);
+        assert_eq!(bulk.used_bytes(), single.used_bytes());
+        assert!(bulk.verify_accounting() && single.verify_accounting());
+        for l in 0..spec.layers.len() {
+            for h in 0..spec.n_kv_heads {
+                let (a, b) = (bulk.seq(1).unwrap(), single.seq(1).unwrap());
+                for row in 0..chunk {
+                    assert_eq!(a.k[l][h].row(row), b.k[l][h].row(row));
+                    assert_eq!(a.v[l][h].row(row), b.v[l][h].row(row));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_append_is_atomic_under_budget() {
+        use crate::linalg::Mat;
+        let spec = spec2();
+        let one_page_all_layers: u64 = spec
+            .layers
+            .iter()
+            .map(|g| (g.k_width + g.v_width) * spec.page_tokens * spec.n_kv_heads * 4)
+            .sum::<usize>() as u64;
+        // Budget for one page-set only; a 9-row chunk needs two pages.
+        let mut mgr = KvCacheManager::new(spec.clone(), one_page_all_layers);
+        mgr.alloc(1).unwrap();
+        let chunk = 9usize;
+        let k: Vec<Mat> = (0..spec.n_kv_heads)
+            .map(|_| Mat::zeros(chunk, spec.layers[0].k_width))
+            .collect();
+        let v: Vec<Mat> = (0..spec.n_kv_heads)
+            .map(|_| Mat::zeros(chunk, spec.layers[0].v_width))
+            .collect();
+        let before = mgr.used_bytes();
+        let err = mgr.append_layer_rows(1, 0, &k, &v);
+        assert!(matches!(err, Err(CacheError::OverBudget { .. })));
+        assert_eq!(mgr.used_bytes(), before, "failed chunk append must not allocate");
+        assert_eq!(mgr.seq(1).unwrap().k[0][0].len(), 0);
+        assert!(mgr.verify_accounting());
     }
 
     #[test]

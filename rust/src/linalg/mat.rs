@@ -13,6 +13,7 @@
 //! internally for stability; `Mat` converts losslessly in and out.
 
 use crate::util::rng::Pcg64;
+use crate::util::threadpool::SendPtr;
 use std::fmt;
 
 /// Dense row-major f32 matrix.
@@ -198,6 +199,31 @@ impl Mat {
         out
     }
 
+    /// Append one row in place. Amortized O(row) via `Vec` growth — the
+    /// append-friendly alternative to `vcat`, which reallocates and copies
+    /// the whole matrix (O(rows) per append, O(T²) over a decode).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Reshape in place to `rows×cols`, reusing the existing allocation
+    /// (grow-only capacity). Prior contents are unspecified afterwards;
+    /// callers must overwrite every element they read. This is the scratch-
+    /// arena primitive: steady-state reuse never reallocates.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Contiguous row-major view of rows `[start, end)` without copying.
+    pub fn rows_range(&self, start: usize, end: usize) -> &[f32] {
+        assert!(start <= end && end <= self.rows);
+        &self.data[start * self.cols..end * self.cols]
+    }
+
     /// Vertical concatenation `[self; other]` (used by the Eigen baseline and
     /// GQA query stacking).
     pub fn vcat(&self, other: &Mat) -> Mat {
@@ -339,6 +365,14 @@ impl Mat {
 
     /// `self @ other` — blocked, threaded matmul.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_to(other, &mut out);
+        out
+    }
+
+    /// `self @ other` into a reusable output buffer (resized in place, no
+    /// allocation once capacity is reached). Every output element is written.
+    pub fn matmul_to(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(
             self.cols, other.rows,
             "matmul shape mismatch: {:?} @ {:?}",
@@ -346,16 +380,8 @@ impl Mat {
             other.shape()
         );
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        matmul_into(
-            &self.data,
-            &other.data,
-            &mut out.data,
-            m,
-            k,
-            n,
-        );
-        out
+        out.resize(m, n);
+        matmul_into(&self.data, &other.data, &mut out.data, m, k, n);
     }
 
     /// `selfᵀ @ other` without materializing the transpose.
@@ -368,6 +394,14 @@ impl Mat {
 
     /// `self @ otherᵀ` without materializing the transpose.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.rows);
+        self.matmul_nt_to(other, &mut out);
+        out
+    }
+
+    /// `self @ otherᵀ` into a reusable output buffer (no transpose, no
+    /// allocation once capacity is reached). Every output element is written.
+    pub fn matmul_nt_to(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(
             self.cols, other.cols,
             "matmul_nt shape mismatch: {:?} @ {:?}ᵀ",
@@ -375,12 +409,12 @@ impl Mat {
             other.shape()
         );
         let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Mat::zeros(m, n);
+        out.resize(m, n);
         // out[i, j] = dot(self.row(i), other.row(j)) — both contiguous, so a
         // direct dot-product kernel is the fastest layout here.
         let a = &self.data;
         let b = &other.data;
-        let out_ptr = UnsafeSend(out.data.as_mut_ptr());
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
         crate::util::threadpool::parallel_for(m, move |lo, hi| {
             let o = &out_ptr; // capture the Sync wrapper, not the raw field
             for i in lo..hi {
@@ -395,7 +429,6 @@ impl Mat {
                 }
             }
         });
-        out
     }
 
     /// Matrix–vector product `self @ v`.
@@ -468,19 +501,13 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
-/// Wrapper making a raw pointer Send for disjoint parallel writes.
-#[derive(Clone, Copy)]
-struct UnsafeSend<T>(T);
-unsafe impl<T> Send for UnsafeSend<T> {}
-unsafe impl<T> Sync for UnsafeSend<T> {}
-
 /// Blocked `C = A @ B` kernel over raw buffers. Threads over row blocks;
 /// the inner `ikj` loop keeps B rows streaming and autovectorizes.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    let c_ptr = UnsafeSend(c.as_mut_ptr());
+    let c_ptr = SendPtr(c.as_mut_ptr());
     // Tune: rows per task. Small matrices run single-threaded.
     if m * k * n < 64 * 64 * 64 {
         matmul_rows(a, b, c, 0, m, k, n);
@@ -597,6 +624,38 @@ mod tests {
         let d = Mat::vcat_all(&[&a, &b, &a]);
         assert_eq!(d.rows(), 5);
         assert_eq!(c.slice_cols(1, 2).col(0), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn push_row_matches_vcat() {
+        let mut grown = Mat::zeros(0, 3);
+        let mut cat = Mat::zeros(0, 3);
+        for i in 0..17 {
+            let row = [i as f32, 2.0 * i as f32, -(i as f32)];
+            grown.push_row(&row);
+            cat = cat.vcat(&Mat::from_vec(1, 3, row.to_vec()));
+        }
+        assert_eq!(grown, cat);
+        assert_eq!(grown.rows_range(2, 5), cat.slice_rows(2, 5).data());
+    }
+
+    #[test]
+    fn resize_reuses_and_to_variants_match_alloc_versions() {
+        let mut rng = Pcg64::new(8, 1);
+        let a = Mat::randn(13, 7, 1.0, &mut rng);
+        let b = Mat::randn(7, 11, 1.0, &mut rng);
+        let c = Mat::randn(9, 7, 1.0, &mut rng);
+        // Dirty, wrongly-shaped output buffers must be fully overwritten.
+        let mut out = Mat::randn(40, 2, 1.0, &mut rng);
+        a.matmul_to(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        a.matmul_nt_to(&c, &mut out);
+        assert_eq!(out, a.matmul_nt(&c));
+        // Shrinking then regrowing stays consistent.
+        out.resize(2, 2);
+        out.resize(13, 11);
+        a.matmul_to(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
     }
 
     #[test]

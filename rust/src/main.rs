@@ -15,6 +15,7 @@
 use kqsvd::bench_support::{f as fnum, Table};
 use kqsvd::cli::{render_help, Args, OptSpec};
 use kqsvd::config::{preset, Config, Method, ZOO};
+use kqsvd::coordinator::metrics::names as metric_names;
 use kqsvd::coordinator::{
     BatcherConfig, FinishReason, GenParams, Request, RequestHandle, Router, TokenEvent,
 };
@@ -344,5 +345,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "completed {finished} · cancelled {cancelled} · rejected {rejected} / {n_requests} requests\n"
     );
     println!("{}", metrics.report());
+    let tok_per_s = |name: &str| {
+        metrics
+            .gauge_value(name)
+            .map(|v| format!("{v:.1} tok/s"))
+            .unwrap_or_else(|| "n/a".to_string())
+    };
+    println!(
+        "throughput: decode {} · prefill {}",
+        tok_per_s(metric_names::DECODE_TOK_PER_S),
+        tok_per_s(metric_names::PREFILL_TOK_PER_S),
+    );
     Ok(())
 }

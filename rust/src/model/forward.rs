@@ -216,15 +216,15 @@ impl Transformer {
             let k_all = xn_m.matmul(&layer.wk);
             let v_all = xn_m.matmul(&layer.wv);
 
-            // Append per-kv-head k/v with RoPE on k.
+            // Append per-kv-head k/v with RoPE on k. `push_row` grows the
+            // cache with amortized-O(1) row appends (the old `vcat` rebuilt
+            // the whole cache every token — O(T²) over a decode).
             for h in 0..cfg.n_kv_heads {
                 let mut krow = k_all.row(0)[h * dh..(h + 1) * dh].to_vec();
                 self.rope.apply(&mut krow, pos);
                 let vrow = &v_all.row(0)[h * dh..(h + 1) * dh];
-                let kmat = &mut state.k[li][h];
-                let vmat = &mut state.v[li][h];
-                *kmat = kmat.vcat(&Mat::from_vec(1, dh, krow));
-                *vmat = vmat.vcat(&Mat::from_vec(1, dh, vrow.to_vec()));
+                state.k[li][h].push_row(&krow);
+                state.v[li][h].push_row(vrow);
             }
 
             let group = cfg.group_size();

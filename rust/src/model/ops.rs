@@ -20,12 +20,19 @@ pub fn rmsnorm_row(x: &[f32], gain: &[f32], out: &mut [f32]) {
 /// RMSNorm over every row of a matrix.
 pub fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
     let mut out = Mat::zeros(x.rows(), x.cols());
-    for i in 0..x.rows() {
-        // Split borrow: copy the input row (cols is small).
-        let row = x.row(i).to_vec();
-        rmsnorm_row(&row, gain, out.row_mut(i));
-    }
+    rmsnorm_into(x, gain, &mut out);
     out
+}
+
+/// RMSNorm over every row, into a reusable output buffer (resized in place;
+/// no allocation once capacity is reached). Row-for-row identical to
+/// [`rmsnorm_row`], so the batch-major path stays bit-comparable to the
+/// serial one.
+pub fn rmsnorm_into(x: &Mat, gain: &[f32], out: &mut Mat) {
+    out.resize(x.rows(), x.cols());
+    for i in 0..x.rows() {
+        rmsnorm_row(x.row(i), gain, out.row_mut(i));
+    }
 }
 
 /// SiLU activation x·σ(x).

@@ -1,15 +1,33 @@
 //! The serving engine: model weights + calibrated projections + compressed
 //! KV cache + an attention backend, implementing [`coordinator::Engine`].
 //!
-//! Per decode token, per layer:
+//! Execution is **batch-major, layer by layer** (DESIGN.md §5b): the batch's
+//! residual streams are stacked into a `B×d` [`Mat`], so per layer
 //!
-//! 1. RMSNorm + q/k/v projections + RoPE (pure Rust, cheap);
-//! 2. cache write: `k̃ = k·A`, `ṽ = v·A_v` appended to the paged compressed
-//!    cache — *the original k/v rows are never stored* (paper §3.3);
+//! 1. RMSNorm + q/k/v projections run as one blocked/threaded GEMM each
+//!    (not `B` `vecmat`s), RoPE per row at each sequence's position;
+//! 2. cache write: `k̃ = k·A`, `ṽ = v·A_v` as one `B×d_h` GEMM per KV head,
+//!    rows appended to the paged compressed cache — *the original k/v rows
+//!    are never stored* (paper §3.3);
 //! 3. attention over the compressed cache — either the pure-Rust online
-//!    softmax backend ([`crate::attn`]) or one PJRT call per layer executing
-//!    the AOT Pallas graph across the whole batch ([`crate::runtime`]);
-//! 4. residual add + SwiGLU MLP (pure Rust).
+//!    softmax backend parallelized across `(sequence × kv-head)` work items
+//!    ([`crate::attn::decode_attn_batch`]) or one PJRT call per layer
+//!    executing the AOT Pallas graph across the whole batch
+//!    ([`crate::runtime`]);
+//! 4. residual add + SwiGLU MLP as full-batch GEMMs.
+//!
+//! Chunked prefill pushes the whole `chunk×d` chunk through the same GEMMs
+//! with dense causal attention over the compressed cache — no per-token
+//! [`ServingEngine::forward_token`] calls on either hot path. All
+//! intermediates live in a grow-only [`BatchScratch`] arena owned by the
+//! engine, so the steady state allocates nothing per token.
+//!
+//! The serial per-token path (`forward_token`) is kept as the **parity
+//! oracle**: batch-major decode reproduces it *bit-identically* (same f32
+//! operation order everywhere), which the property tests below enforce.
+//! Enable it at runtime with `KQSVD_SERIAL_ORACLE=1` or
+//! [`ServingEngine::set_serial_oracle`] (used by the serial-vs-batch rows in
+//! `benches/e2e_serving.rs`).
 //!
 //! With `Method::None` projections (identity), the engine is bit-comparable
 //! to [`crate::model::Transformer::decode_step`] — tested below — so every
@@ -19,8 +37,9 @@
 use crate::calib::ProjectionSet;
 use crate::config::{Config, Method};
 use crate::coordinator::Engine;
-use crate::kvcache::{CacheSpec, KvCacheManager, LayerGeom, SeqId};
+use crate::kvcache::{CacheSpec, KvCacheManager, LayerGeom, PagedBuf, SeqId};
 use crate::linalg::Mat;
+use crate::model::ops::{rmsnorm_into, rmsnorm_row, silu};
 use crate::model::{softmax_inplace, Transformer};
 use crate::runtime::{AttnDecodeInputs, PjrtEngine};
 use anyhow::{anyhow, Context, Result};
@@ -43,6 +62,149 @@ impl Backend {
     }
 }
 
+/// Grow-only scratch arena for the batch-major forward paths.
+///
+/// Ownership contract (DESIGN.md §5b): the arena is owned by the engine and
+/// only ever borrowed for the duration of one `decode`/`prefill` call;
+/// buffers are `resize`d in place (allocation-free once warm) and every
+/// element read is written first within the same call, so no state leaks
+/// between steps. Layers with different ranks just reshape the same buffers.
+struct BatchScratch {
+    /// Per-sequence absolute positions for the current step.
+    pos: Vec<usize>,
+    /// Residual streams `B×d` (or `chunk×d` during prefill).
+    x: Mat,
+    /// RMSNorm output (shared by the attention and MLP blocks).
+    xn: Mat,
+    /// Full q/k/v projections (`B×h·d_h`, `B×h_kv·d_h`).
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// Per-KV-head gathers (`B×d_h`) and per-head projected queries.
+    khead: Mat,
+    vhead: Mat,
+    qhead: Mat,
+    qtmp: Mat,
+    /// Compressed cache rows per KV head (`B×R_l`, `B×R_v,l`).
+    kc: Vec<Mat>,
+    vc: Vec<Mat>,
+    /// Projected queries for all heads (`B×h·R_l`).
+    qp: Mat,
+    /// Compressed attention contexts (`B×h·R_v,l`) and folded output (`B×d`).
+    ctx: Mat,
+    attn_out: Mat,
+    /// SwiGLU intermediates.
+    gate: Mat,
+    up: Mat,
+    mlp_out: Mat,
+    /// Prefill-only: dense causal scores (`chunk×T`), per-head fold output,
+    /// and densified per-head cache views (`T×R`, `T×R_v`).
+    scores: Mat,
+    head_out: Mat,
+    ckd: Mat,
+    cvd: Mat,
+    /// Final logits (`B×vocab`).
+    logits: Mat,
+}
+
+impl BatchScratch {
+    fn new(n_kv_heads: usize) -> BatchScratch {
+        let m = || Mat::zeros(0, 0);
+        BatchScratch {
+            pos: Vec::new(),
+            x: m(),
+            xn: m(),
+            q: m(),
+            k: m(),
+            v: m(),
+            khead: m(),
+            vhead: m(),
+            qhead: m(),
+            qtmp: m(),
+            kc: (0..n_kv_heads).map(|_| m()).collect(),
+            vc: (0..n_kv_heads).map(|_| m()).collect(),
+            qp: m(),
+            ctx: m(),
+            attn_out: m(),
+            gate: m(),
+            up: m(),
+            mlp_out: m(),
+            scores: m(),
+            head_out: m(),
+            ckd: m(),
+            cvd: m(),
+            logits: m(),
+        }
+    }
+}
+
+/// Shared batch-major front half of a layer (decode *and* GEMM prefill):
+/// RMSNorm, q/k/v GEMMs, per-row RoPE at `s.pos[i]`, and per-KV-head
+/// compression into `s.kc`/`s.vc`. Callers fill `s.pos` and `s.x` first.
+/// One implementation for both paths keeps their numerics in lockstep with
+/// the serial oracle by construction.
+fn batch_layer_front(
+    s: &mut BatchScratch,
+    rope: &crate::model::RopeTable,
+    layer: &crate::model::LayerWeights,
+    lp: &crate::calib::LayerProjection,
+    h: usize,
+    hkv: usize,
+    dh: usize,
+) {
+    let b = s.x.rows();
+    debug_assert_eq!(s.pos.len(), b);
+    rmsnorm_into(&s.x, &layer.attn_norm, &mut s.xn);
+    s.xn.matmul_to(&layer.wq, &mut s.q);
+    s.xn.matmul_to(&layer.wk, &mut s.k);
+    s.xn.matmul_to(&layer.wv, &mut s.v);
+    for i in 0..b {
+        let pos = s.pos[i];
+        let qrow = s.q.row_mut(i);
+        for hq in 0..h {
+            rope.apply(&mut qrow[hq * dh..(hq + 1) * dh], pos);
+        }
+    }
+    // Compress k/v per KV head (one B×d_h GEMM each).
+    for kv in 0..hkv {
+        s.khead.resize(b, dh);
+        s.vhead.resize(b, dh);
+        for i in 0..b {
+            s.khead
+                .row_mut(i)
+                .copy_from_slice(&s.k.row(i)[kv * dh..(kv + 1) * dh]);
+            rope.apply(s.khead.row_mut(i), s.pos[i]);
+            s.vhead
+                .row_mut(i)
+                .copy_from_slice(&s.v.row(i)[kv * dh..(kv + 1) * dh]);
+        }
+        s.khead.matmul_to(&lp.groups[kv].key.a, &mut s.kc[kv]);
+        s.vhead.matmul_to(&lp.groups[kv].value_a, &mut s.vc[kv]);
+    }
+}
+
+/// Shared batch-major back half of a layer: RMSNorm + SwiGLU MLP as
+/// full-batch GEMMs, residual-added into `s.x`.
+fn batch_layer_mlp(s: &mut BatchScratch, layer: &crate::model::LayerWeights) {
+    rmsnorm_into(&s.x, &layer.mlp_norm, &mut s.xn);
+    s.xn.matmul_to(&layer.w_gate, &mut s.gate);
+    s.xn.matmul_to(&layer.w_up, &mut s.up);
+    for (gv, &uv) in s.gate.data_mut().iter_mut().zip(s.up.data()) {
+        *gv = silu(*gv) * uv;
+    }
+    s.gate.matmul_to(&layer.w_down, &mut s.mlp_out);
+    add_inplace(&mut s.x, &s.mlp_out);
+}
+
+/// `x += delta`, elementwise over row-major data. Each output element is one
+/// f32 add, exactly as the serial oracle's per-row residual loop.
+fn add_inplace(x: &mut Mat, delta: &Mat) {
+    debug_assert_eq!(x.shape(), delta.shape());
+    for (xi, &dv) in x.data_mut().iter_mut().zip(delta.data()) {
+        *xi += dv;
+    }
+}
+
 /// The engine (one per serving process).
 pub struct ServingEngine {
     pub model: Transformer,
@@ -50,6 +212,10 @@ pub struct ServingEngine {
     pub cache: KvCacheManager,
     pub backend: Backend,
     preset: String,
+    scratch: BatchScratch,
+    /// When set, `decode`/`prefill` run the serial per-token oracle path
+    /// instead of the batch-major GEMM path (parity tests, benches).
+    serial_oracle: bool,
 }
 
 impl ServingEngine {
@@ -81,6 +247,10 @@ impl ServingEngine {
         let cache = KvCacheManager::new(spec, cfg.serve.cache_budget_bytes);
         Ok(ServingEngine {
             preset: model.cfg.name.clone(),
+            scratch: BatchScratch::new(model.cfg.n_kv_heads),
+            serial_oracle: std::env::var("KQSVD_SERIAL_ORACLE")
+                .map(|v| v == "1")
+                .unwrap_or(false),
             model,
             proj,
             cache,
@@ -88,13 +258,28 @@ impl ServingEngine {
         })
     }
 
+    /// Route `decode`/`prefill` through the serial per-token oracle path
+    /// (`true`) or the default batch-major GEMM path (`false`). The oracle is
+    /// what parity tests and the serial-vs-batch bench rows compare against.
+    pub fn set_serial_oracle(&mut self, on: bool) {
+        self.serial_oracle = on;
+    }
+
+    /// Whether the serial oracle path is active.
+    pub fn serial_oracle(&self) -> bool {
+        self.serial_oracle
+    }
+
     /// Compressed cache bytes per token (the paper's memory metric).
     pub fn cache_bytes_per_token(&self) -> usize {
         self.cache.spec().bytes_per_token()
     }
 
-    /// Process one token for one sequence; returns the logits row.
-    /// Used by both prefill (chunk loop) and the Rust decode path.
+    /// Process one token for one sequence; returns the logits row. This is
+    /// the **serial parity oracle**: the batch-major decode path must match
+    /// it bit-for-bit, and the GEMM prefill path to float tolerance. It only
+    /// runs when [`ServingEngine::set_serial_oracle`] (or
+    /// `KQSVD_SERIAL_ORACLE=1`) routes the hot paths through it.
     fn forward_token(&mut self, id: SeqId, token: u32, pos: usize) -> Result<Vec<f32>> {
         let cfg = self.model.cfg.clone();
         let dh = cfg.d_head();
@@ -200,8 +385,186 @@ impl ServingEngine {
 
     fn final_logits(&self, x: &[f32]) -> Vec<f32> {
         let mut xf = vec![0.0f32; x.len()];
-        crate::model::ops::rmsnorm_row(x, &self.model.weights.final_norm, &mut xf);
+        rmsnorm_row(x, &self.model.weights.final_norm, &mut xf);
         self.model.weights.embed.matvec(&xf)
+    }
+
+    /// Batch-major decode on the Rust backend: one blocked/threaded GEMM per
+    /// projection per layer for the whole batch, compressed attention
+    /// parallelized across `(sequence × kv-head)` work items, everything in
+    /// the reusable scratch arena. Row-for-row **bit-identical** to
+    /// [`ServingEngine::forward_token`] (same f32 op order throughout);
+    /// property-tested below.
+    fn decode_batch_rust(&mut self, batch: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
+        let b = batch.len();
+        let cfg = &self.model.cfg;
+        let (h, hkv, dh, d) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head(), cfg.d_model);
+        let group = cfg.group_size();
+        let (n_layers, max_seq) = (cfg.n_layers, cfg.max_seq);
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let s = &mut self.scratch;
+        s.pos.clear();
+        for &(id, _) in batch {
+            let pos = self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?;
+            anyhow::ensure!(pos < max_seq, "context overflow at pos {pos}");
+            s.pos.push(pos);
+        }
+        s.x.resize(b, d);
+        for (bi, &(_, tok)) in batch.iter().enumerate() {
+            s.x.row_mut(bi)
+                .copy_from_slice(self.model.weights.embed.row(tok as usize));
+        }
+
+        for li in 0..n_layers {
+            let layer = &self.model.weights.layers[li];
+            let lp = &self.proj.layers[li];
+            let r = lp.groups[0].key.rank();
+            let rv = lp.groups[0].value_a.cols();
+            debug_assert!(
+                lp.groups.iter().all(|g| g.key.rank() == r),
+                "per-layer rank must be uniform"
+            );
+
+            // Norm, q/k/v GEMMs, RoPE, per-head compression (shared half).
+            batch_layer_front(s, self.model.rope(), layer, lp, h, hkv, dh);
+            for (bi, &(id, _)) in batch.iter().enumerate() {
+                self.cache
+                    .append_layer_row(id, li, &s.kc, &s.vc, bi)
+                    .map_err(|e| anyhow!("cache append: {e}"))?;
+            }
+
+            // Project queries into compressed space (`q̃ = q·B`, GEMM per head).
+            s.qp.resize(b, h * r);
+            for hq in 0..h {
+                let kv = hq / group;
+                s.qhead.resize(b, dh);
+                for bi in 0..b {
+                    s.qhead
+                        .row_mut(bi)
+                        .copy_from_slice(&s.q.row(bi)[hq * dh..(hq + 1) * dh]);
+                }
+                s.qhead.matmul_to(&lp.groups[kv].key.b, &mut s.qtmp);
+                for bi in 0..b {
+                    s.qp.row_mut(bi)[hq * r..(hq + 1) * r].copy_from_slice(s.qtmp.row(bi));
+                }
+            }
+
+            // Compressed attention, threaded over (sequence × kv-head).
+            let folds: Vec<&Mat> = (0..h)
+                .map(|hq| &lp.groups[hq / group].value_folds[hq % group])
+                .collect();
+            let mut seqs: Vec<(&[PagedBuf], &[PagedBuf])> = Vec::with_capacity(b);
+            for &(id, _) in batch {
+                let sq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
+                seqs.push((sq.k[li].as_slice(), sq.v[li].as_slice()));
+            }
+            crate::attn::decode_attn_batch(
+                &s.qp,
+                &seqs,
+                &folds,
+                scale,
+                group,
+                r,
+                rv,
+                &mut s.ctx,
+                &mut s.attn_out,
+            );
+            add_inplace(&mut s.x, &s.attn_out);
+            batch_layer_mlp(s, layer);
+        }
+
+        // Final norm + tied LM head, one GEMM for the whole batch.
+        rmsnorm_into(&s.x, &self.model.weights.final_norm, &mut s.xn);
+        s.xn.matmul_nt_to(&self.model.weights.embed, &mut s.logits);
+        Ok((0..b).map(|bi| s.logits.row(bi).to_vec()).collect())
+    }
+
+    /// GEMM chunked prefill: the whole `chunk×d` chunk flows through
+    /// full-matrix projections and dense causal attention over the compressed
+    /// cache — no per-token [`ServingEngine::forward_token`] calls. Cache
+    /// rows are identical to the serial path (same projection GEMM rows);
+    /// attention uses a materialized causal softmax instead of the online
+    /// recurrence, so logits agree to float tolerance rather than bitwise.
+    /// Returns last-row logits when `want_logits`.
+    fn prefill_chunk_gemm(
+        &mut self,
+        id: SeqId,
+        tokens: &[u32],
+        pos0: usize,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let n = tokens.len();
+        if n == 0 {
+            return Ok(None);
+        }
+        let cfg = &self.model.cfg;
+        let (h, hkv, dh, d) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head(), cfg.d_model);
+        let group = cfg.group_size();
+        let n_layers = cfg.n_layers;
+        anyhow::ensure!(
+            pos0 + n <= cfg.max_seq,
+            "context overflow at pos {}",
+            pos0 + n - 1
+        );
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let s = &mut self.scratch;
+        s.pos.clear();
+        s.pos.extend(pos0..pos0 + n);
+        s.x.resize(n, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            s.x.row_mut(i)
+                .copy_from_slice(self.model.weights.embed.row(tok as usize));
+        }
+
+        for li in 0..n_layers {
+            let layer = &self.model.weights.layers[li];
+            let lp = &self.proj.layers[li];
+
+            // Norm, q/k/v GEMMs, RoPE, per-head chunk compression (shared
+            // half); then the whole chunk appends per layer in one call.
+            batch_layer_front(s, self.model.rope(), layer, lp, h, hkv, dh);
+            self.cache
+                .append_layer_rows(id, li, &s.kc, &s.vc)
+                .map_err(|e| anyhow!("cache append: {e}"))?;
+
+            // Dense causal attention over the compressed cache (GEMMs):
+            // S = q̃·C_Kᵀ, causal softmax, ctx = P·C_V, out += ctx·F_i.
+            let seq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
+            s.attn_out.resize(n, d);
+            s.attn_out.data_mut().fill(0.0);
+            for kv in 0..hkv {
+                seq.k[li][kv].copy_into(&mut s.ckd);
+                seq.v[li][kv].copy_into(&mut s.cvd);
+                for g in 0..group {
+                    let hq = kv * group + g;
+                    s.qhead.resize(n, dh);
+                    for i in 0..n {
+                        s.qhead
+                            .row_mut(i)
+                            .copy_from_slice(&s.q.row(i)[hq * dh..(hq + 1) * dh]);
+                    }
+                    s.qhead.matmul_to(&lp.groups[kv].key.b, &mut s.qtmp);
+                    s.qtmp.matmul_nt_to(&s.ckd, &mut s.scores);
+                    s.scores.scale_inplace(scale);
+                    crate::attn::causal_softmax_rows(&mut s.scores, pos0);
+                    s.scores.matmul_to(&s.cvd, &mut s.ctx);
+                    s.ctx
+                        .matmul_to(&lp.groups[kv].value_folds[g], &mut s.head_out);
+                    add_inplace(&mut s.attn_out, &s.head_out);
+                }
+            }
+            add_inplace(&mut s.x, &s.attn_out);
+            batch_layer_mlp(s, layer);
+        }
+
+        if !want_logits {
+            return Ok(None);
+        }
+        let mut xf = vec![0.0f32; d];
+        rmsnorm_row(s.x.row(n - 1), &self.model.weights.final_norm, &mut xf);
+        Ok(Some(self.model.weights.embed.matvec(&xf)))
     }
 
     /// PJRT-batched decode: one artifact call per layer for the whole batch.
@@ -329,21 +692,37 @@ impl Engine for ServingEngine {
         pos0: usize,
         is_last_chunk: bool,
     ) -> Result<Option<Vec<f32>>> {
-        let mut last = None;
-        for (i, &tok) in tokens.iter().enumerate() {
-            last = Some(self.forward_token(id, tok, pos0 + i)?);
-            self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
+        if self.serial_oracle {
+            // Serial oracle: one forward_token per prompt token.
+            let mut last = None;
+            for (i, &tok) in tokens.iter().enumerate() {
+                last = Some(self.forward_token(id, tok, pos0 + i)?);
+                self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
+            }
+            return Ok(if is_last_chunk { last } else { None });
         }
-        Ok(if is_last_chunk { last } else { None })
+        let logits = self.prefill_chunk_gemm(id, tokens, pos0, is_last_chunk)?;
+        self.cache
+            .commit_tokens(id, tokens.len())
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(logits)
     }
 
     fn decode(&mut self, batch: &[(SeqId, u32)]) -> Result<Vec<Vec<f32>>> {
         match self.backend {
             Backend::Rust => {
-                let mut out = Vec::with_capacity(batch.len());
-                for &(id, tok) in batch {
-                    let pos = self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?;
-                    out.push(self.forward_token(id, tok, pos)?);
+                if self.serial_oracle {
+                    // Serial oracle: one sequence at a time via forward_token.
+                    let mut out = Vec::with_capacity(batch.len());
+                    for &(id, tok) in batch {
+                        let pos = self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?;
+                        out.push(self.forward_token(id, tok, pos)?);
+                        self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
+                    }
+                    return Ok(out);
+                }
+                let out = self.decode_batch_rust(batch)?;
+                for &(id, _) in batch {
                     self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
                 }
                 Ok(out)
@@ -445,6 +824,119 @@ mod tests {
             max_rel = max_rel.max(num / den.max(1e-12));
         }
         assert!(max_rel < 0.5, "relative logit error too large: {max_rel}");
+    }
+
+    /// Satellite: batch-major decode must be *bit-identical* to the serial
+    /// `forward_token` oracle across mixed-length batches, GQA presets and
+    /// both compressed/identity projections. Caches are built by the serial
+    /// path on both engines so every divergence would come from decode.
+    #[test]
+    fn prop_batch_decode_bit_identical_to_serial() {
+        use crate::util::prop::forall;
+        forall("batch decode == serial oracle (bitwise)", 4, |g| {
+            let preset_name = *g.choose(&["test-tiny", "test-tiny-gqa"]);
+            let method = *g.choose(&[Method::None, Method::KqSvd]);
+            let mut batch_eng = build_engine(preset_name, method);
+            let mut serial_eng = build_engine(preset_name, method);
+            serial_eng.set_serial_oracle(true);
+            batch_eng.set_serial_oracle(true); // identical prefill caches
+
+            let b = g.usize_in(2, 4);
+            let mut batch: Vec<(SeqId, u32)> = Vec::new();
+            for sid in 0..b as SeqId {
+                let plen = g.usize_in(1, 9); // mixed lengths
+                let prompt: Vec<u32> = (0..plen).map(|_| g.usize_in(0, 63) as u32).collect();
+                for eng in [&mut batch_eng, &mut serial_eng] {
+                    eng.alloc(sid, plen + 8).unwrap();
+                    eng.prefill(sid, &prompt, 0, true).unwrap();
+                }
+                batch.push((sid, g.usize_in(0, 63) as u32));
+            }
+
+            batch_eng.set_serial_oracle(false);
+            for step in 0..3 {
+                let got = batch_eng.decode(&batch).unwrap();
+                let want = serial_eng.decode(&batch).unwrap();
+                for (bi, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        a == b,
+                        "{preset_name}/{method:?} step {step} seq {bi}: logits not bit-identical"
+                    );
+                }
+                for (bi, (_, tok)) in batch.iter_mut().enumerate() {
+                    *tok = crate::model::argmax(&got[bi]) as u32;
+                }
+            }
+        });
+    }
+
+    /// Satellite: GEMM chunked prefill must agree with the serial oracle
+    /// across chunk boundaries (cache rows are bit-identical; logits agree to
+    /// float tolerance since the softmax algorithms differ), and a decode
+    /// step from the resulting caches must stay equally close.
+    #[test]
+    fn prop_gemm_prefill_matches_serial_across_chunk_boundaries() {
+        use crate::util::prop::forall;
+        forall("GEMM prefill == serial prefill", 4, |g| {
+            let preset_name = *g.choose(&["test-tiny", "test-tiny-gqa"]);
+            let method = *g.choose(&[Method::None, Method::KqSvd]);
+            let mut gemm_eng = build_engine(preset_name, method);
+            let mut serial_eng = build_engine(preset_name, method);
+            serial_eng.set_serial_oracle(true);
+
+            let plen = g.usize_in(5, 24);
+            let chunk = g.usize_in(1, 7);
+            let prompt: Vec<u32> = (0..plen).map(|_| g.usize_in(0, 63) as u32).collect();
+            for eng in [&mut gemm_eng, &mut serial_eng] {
+                eng.alloc(1, plen + 4).unwrap();
+            }
+            let mut gemm_logits = None;
+            let mut serial_logits = None;
+            let mut pos = 0;
+            while pos < plen {
+                let end = (pos + chunk).min(plen);
+                let is_last = end == plen;
+                gemm_logits = gemm_eng.prefill(1, &prompt[pos..end], pos, is_last).unwrap();
+                serial_logits = serial_eng.prefill(1, &prompt[pos..end], pos, is_last).unwrap();
+                pos = end;
+            }
+            let (gl, sl) = (gemm_logits.unwrap(), serial_logits.unwrap());
+            for (a, b) in gl.iter().zip(&sl) {
+                assert!(
+                    (a - b).abs() < 2e-3,
+                    "{preset_name}/{method:?} chunk {chunk}: prefill logits {a} vs {b}"
+                );
+            }
+            // One decode step from each cache stays within tolerance too.
+            let batch = [(1 as SeqId, 7u32)];
+            let got = gemm_eng.decode(&batch).unwrap();
+            let want = serial_eng.decode(&batch).unwrap();
+            for (a, b) in got[0].iter().zip(&want[0]) {
+                assert!((a - b).abs() < 2e-3, "decode after prefill: {a} vs {b}");
+            }
+        });
+    }
+
+    /// Acceptance: a 256-token prompt prefilled in chunks through the GEMM
+    /// path matches the full-sequence forward logits to 2e-3 (identity
+    /// projections make the two mathematically equal).
+    #[test]
+    fn gemm_prefill_256_matches_full_forward() {
+        let mut eng = build_engine("test-tiny", Method::None);
+        assert!(!eng.serial_oracle(), "GEMM path must be the default");
+        let tokens: Vec<u32> = (0..256).map(|i| ((i * 7 + 3) % 64) as u32).collect();
+        eng.alloc(1, 256).unwrap();
+        let mut last = None;
+        for (ci, chunk) in tokens.chunks(64).enumerate() {
+            last = eng.prefill(1, chunk, ci * 64, ci == 3).unwrap();
+        }
+        let logits = last.expect("last chunk returns logits");
+        assert_eq!(eng.cache.seq_tokens(1).unwrap(), 256);
+        let model = Transformer::init(preset("test-tiny").unwrap());
+        let (full, _) = model.forward(&tokens, false);
+        for (j, (a, b)) in logits.iter().zip(full.row(255)).enumerate() {
+            assert!((a - b).abs() < 2e-3, "logit {j}: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -19,6 +19,15 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+/// Wrapper making a raw pointer `Send + Sync` for *disjoint* parallel writes
+/// from `parallel_for` jobs. Soundness contract: every job must write through
+/// non-overlapping offsets, and the spawning call must not return until all
+/// jobs complete (which `parallel_for` guarantees via its latch).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Latch {
