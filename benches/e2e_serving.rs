@@ -5,7 +5,11 @@
 //! one scheduling path, so the delta between the rows is pure session
 //! overhead (channels + engine thread) — plus a **serial-vs-batch** section
 //! comparing the batch-major GEMM execution path against the serial
-//! `forward_token` oracle on the `test-tiny` preset.
+//! `forward_token` oracle on the `test-tiny` preset, and two scheduler-v2
+//! acceptance scenarios: **long-prompt interleave** (decode streams must not
+//! stall while a long prompt prefills) and **preemption under pressure** (a
+//! priority-1 request is admitted under a full budget by evicting a
+//! priority-0 stream, which later resumes and completes).
 //!
 //! Results are printed as a table, written to `bench_out/e2e_serving.csv`,
 //! and summarized into `BENCH_serving.json` at the repository root so the
@@ -18,7 +22,7 @@
 use kqsvd::bench_support::{f as fnum, Table};
 use kqsvd::config::{Config, Method};
 use kqsvd::coordinator::metrics::names as metric_names;
-use kqsvd::coordinator::{BatcherConfig, Request, RequestHandle, Router};
+use kqsvd::coordinator::{BatcherConfig, GenParams, Request, RequestHandle, Router};
 use kqsvd::jsonutil::Json;
 use kqsvd::server::build_engine;
 use kqsvd::text::{Corpus, Split};
@@ -124,6 +128,128 @@ fn run(
         cache_per_tok,
         peak_bytes: metrics.gauge_value("cache_peak_bytes").unwrap_or(0.0) as u64,
     })
+}
+
+/// Long-prompt-interleave scenario: short-prompt decode streams must keep
+/// emitting tokens while one long prompt prefills. Asserts the scheduler-v2
+/// contract — fused steps actually overlapped the phases (`mixed_steps > 0`)
+/// and decode never stalled (`decode_stall_steps == 0`).
+fn long_prompt_interleave(smoke: bool) -> anyhow::Result<Json> {
+    let (short_n, short_prompt, short_gen, long_prompt, long_gen) =
+        if smoke { (4usize, 8usize, 24usize, 96usize, 4usize) } else { (8, 8, 48, 160, 8) };
+    let mut cfg = Config::from_preset("test-tiny").map_err(anyhow::Error::msg)?;
+    cfg.method = Method::KqSvd;
+    cfg.calib.n_calib_seqs = 2;
+    cfg.calib.calib_seq_len = 48;
+    cfg.serve.max_batch = short_n + 1;
+    cfg.serve.prefill_chunk = 16;
+    cfg.run_dir = "runs/bench_e2e_interleave".into();
+    let mut engine = build_engine(&cfg)?;
+    let mut router = Router::new(BatcherConfig::from(&cfg.serve));
+    let corpus = Corpus::new(cfg.model.vocab_size, 77);
+    for i in 0..short_n {
+        let prompt = corpus.sequence(Split::Validation, 3_000 + i as u64, short_prompt);
+        router
+            .submit(&engine, Request::new(i as u64, prompt, short_gen))
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    }
+    let long = corpus.sequence(Split::Validation, 4_000, long_prompt);
+    router
+        .submit(&engine, Request::new(short_n as u64, long, long_gen))
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let done = router.run_offline(&mut engine)?;
+    anyhow::ensure!(done.len() == short_n + 1, "all requests must complete");
+
+    let m = &router.metrics;
+    let mixed = m.counter(metric_names::MIXED_STEPS);
+    let stalls = m.counter(metric_names::DECODE_STALL_STEPS);
+    let (_, prefill_per_step_mean, ..) = m
+        .summary_stats(metric_names::PREFILL_TOKENS_PER_STEP)
+        .unwrap_or((0, 0.0, 0.0, 0.0, 0.0, 0.0));
+    println!(
+        "\nlong-prompt interleave ({} short streams × {short_gen} gen + 1×{long_prompt}-token prompt):",
+        short_n
+    );
+    println!(
+        "  mixed prefill+decode steps: {mixed} · decode-stall steps: {stalls} · {:.1} prefill tok/step",
+        prefill_per_step_mean
+    );
+    anyhow::ensure!(
+        mixed > 0,
+        "scheduler never overlapped prefill with decode (mixed_steps == 0)"
+    );
+    anyhow::ensure!(
+        stalls == 0,
+        "decode stalled during prefill on {stalls} steps — the head-of-line \
+         blocking scheduler v2 removes"
+    );
+    Ok(Json::obj()
+        .set("short_streams", short_n)
+        .set("short_prompt_len", short_prompt)
+        .set("short_gen_len", short_gen)
+        .set("long_prompt_len", long_prompt)
+        .set("mixed_steps", mixed)
+        .set("decode_stall_steps", stalls)
+        .set("prefill_tokens_per_step_mean", prefill_per_step_mean)
+        .set(
+            "decode_tok_per_s",
+            m.gauge_value(metric_names::DECODE_TOK_PER_S).unwrap_or(0.0),
+        ))
+}
+
+/// Preemption scenario: two priority-0 streams hold the whole budget and run
+/// mid-generation; a priority-1 request submitted afterwards must be
+/// admitted by evicting a victim (preemptions > 0) and every request —
+/// including the resumed victim — must still complete. Drives the batcher
+/// directly so the high-priority request genuinely arrives *after* the
+/// victims started decoding (an offline drain would admit it first).
+fn preemption_under_pressure() -> anyhow::Result<Json> {
+    use kqsvd::coordinator::Batcher;
+    let mut cfg = Config::from_preset("test-tiny").map_err(anyhow::Error::msg)?;
+    cfg.method = Method::KqSvd;
+    cfg.calib.n_calib_seqs = 2;
+    cfg.calib.calib_seq_len = 48;
+    cfg.serve.max_batch = 4;
+    cfg.serve.prefill_chunk = 16;
+    cfg.run_dir = "runs/bench_e2e_preemption".into();
+    let mut engine = build_engine(&cfg)?;
+    // Budget fits exactly two 16-token reservations.
+    let budget = engine.cache.bytes_for_tokens(16) * 2;
+    engine.cache =
+        kqsvd::kvcache::KvCacheManager::new(engine.cache.spec().clone(), budget);
+    let mut b = Batcher::new(BatcherConfig::from(&cfg.serve));
+    let corpus = Corpus::new(cfg.model.vocab_size, 78);
+    for i in 0..2u64 {
+        let prompt = corpus.sequence(Split::Validation, 5_000 + i, 8);
+        b.submit(&engine, Request::new(i, prompt, 8))
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    }
+    // Let both priority-0 streams prefill and decode past the preemption
+    // cooldown before the high-priority request arrives.
+    let mut done = Vec::new();
+    for _ in 0..6 {
+        b.step(&mut engine)?;
+        done.append(&mut b.take_completions());
+    }
+    let mut hi = GenParams::greedy(8);
+    hi.priority = 1;
+    let prompt = corpus.sequence(Split::Validation, 5_100, 8);
+    b.submit(&engine, Request::with_params(2, prompt, hi))
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    done.append(&mut b.run_to_completion(&mut engine)?);
+    anyhow::ensure!(done.len() == 3, "victims must resume and complete");
+    let preemptions = b.preempted();
+    anyhow::ensure!(
+        preemptions > 0,
+        "the priority-1 request must be admitted by preemption"
+    );
+    println!(
+        "preemption under pressure: {preemptions} preemption(s), all {} requests completed",
+        done.len()
+    );
+    Ok(Json::obj()
+        .set("preemptions", preemptions)
+        .set("completed", done.len()))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -242,6 +368,11 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  batch-major decode speedup: {speedup:.2}× (target ≥ 3×)");
 
+    // Scheduler-v2 acceptance scenarios (assertions inside; structural, so
+    // they run in smoke mode too).
+    let interleave = long_prompt_interleave(smoke)?;
+    let preemption = preemption_under_pressure()?;
+
     let json = Json::obj()
         .set("bench", "e2e_serving")
         .set("smoke", smoke)
@@ -268,7 +399,9 @@ fn main() -> anyhow::Result<()> {
                 .set("batch_decode_tok_per_s", batch.decode_tok_per_s)
                 .set("batch_prefill_tok_per_s", batch.prefill_tok_per_s)
                 .set("decode_speedup", speedup),
-        );
+        )
+        .set("long_prompt_interleave", interleave)
+        .set("preemption_under_pressure", preemption);
     std::fs::write("BENCH_serving.json", json.to_string_pretty())?;
     println!("\nCSV → bench_out/e2e_serving.csv · JSON → BENCH_serving.json");
 

@@ -104,6 +104,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 8,
                 max_queue: 128,
                 prefill_chunk: 16,
+                ..Default::default()
             });
             for i in 0..64 {
                 router

@@ -135,8 +135,13 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Maximum admitted-but-unscheduled requests before backpressure.
     pub max_queue: usize,
-    /// Prefill is chunked to at most this many tokens per engine step.
+    /// Prefill is chunked to at most this many tokens per sequence per
+    /// engine step.
     pub prefill_chunk: usize,
+    /// Total prompt tokens prefilled per fused engine step across all
+    /// sequences (0 = use `prefill_chunk`). Caps how much prefill work can
+    /// ride in front of the decode half of a step.
+    pub prefill_token_budget: usize,
     /// KV-cache memory budget in bytes (compressed bytes are what count).
     pub cache_budget_bytes: u64,
     /// Sequence-length buckets for AOT shape selection.
@@ -208,6 +213,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_queue: 256,
             prefill_chunk: 256,
+            prefill_token_budget: 0,
             cache_budget_bytes: 512 * 1024 * 1024,
             buckets: vec![128, 256, 512, 1024],
             backend: "rust".to_string(),
@@ -371,6 +377,7 @@ impl Config {
                     .set("max_batch", s.max_batch)
                     .set("max_queue", s.max_queue)
                     .set("prefill_chunk", s.prefill_chunk)
+                    .set("prefill_token_budget", s.prefill_token_budget)
                     .set("cache_budget_bytes", s.cache_budget_bytes)
                     .set("buckets", s.buckets.clone())
                     .set("backend", s.backend.as_str())
@@ -424,6 +431,8 @@ impl Config {
                 max_batch: sj.usize_or("max_batch", sd.max_batch),
                 max_queue: sj.usize_or("max_queue", sd.max_queue),
                 prefill_chunk: sj.usize_or("prefill_chunk", sd.prefill_chunk),
+                prefill_token_budget: sj
+                    .usize_or("prefill_token_budget", sd.prefill_token_budget),
                 cache_budget_bytes: sj
                     .get("cache_budget_bytes")
                     .and_then(Json::as_u64)
@@ -497,6 +506,9 @@ impl Config {
         }
         if let Some(b) = args.get("max-batch").and_then(|s| s.parse().ok()) {
             self.serve.max_batch = b;
+        }
+        if let Some(n) = args.get("prefill-budget").and_then(|s| s.parse().ok()) {
+            self.serve.prefill_token_budget = n;
         }
         if let Some(n) = args.get("calib-seqs").and_then(|s| s.parse().ok()) {
             self.calib.n_calib_seqs = n;

@@ -15,6 +15,11 @@ pub mod names {
     pub const REQUESTS_REJECTED: &str = "requests_rejected";
     /// Counter: requests cancelled by the client (pages reclaimed).
     pub const REQUESTS_CANCELLED: &str = "requests_cancelled";
+    /// Counter: accepted requests later retired because the engine
+    /// repeatedly failed to allocate them (terminal `Rejected { Engine }`
+    /// event / `FinishReason::Failed`). Distinct from `requests_rejected`,
+    /// which counts submission-time refusals only.
+    pub const REQUESTS_FAILED: &str = "requests_failed";
     /// Gauge: requests submitted but not yet admitted to the running batch
     /// (pre-admission queue), sampled every scheduler step. Admitted
     /// sequences are tracked by the `running_seqs` gauge instead.
@@ -25,6 +30,20 @@ pub mod names {
     /// Gauge: prefilled prompt tokens per second of engine time spent in
     /// prefill steps (the chunked-GEMM prompt path).
     pub const PREFILL_TOK_PER_S: &str = "prefill_tok_per_s";
+    /// Counter: running sequences evicted (pages freed, requeued for
+    /// resume-by-re-prefill) so a strictly higher-priority request could be
+    /// admitted under cache-budget pressure.
+    pub const PREEMPTIONS: &str = "preemptions";
+    /// Counter: fused steps in which decode-ready sequences existed but no
+    /// decode ran. Always 0 under the v2 scheduler — a nonzero value is the
+    /// head-of-line decode stall the fused step exists to prevent.
+    pub const DECODE_STALL_STEPS: &str = "decode_stall_steps";
+    /// Counter: fused steps that carried both prefill chunks and a decode
+    /// batch (prefill/decode overlap actually happening).
+    pub const MIXED_STEPS: &str = "mixed_steps";
+    /// Summary: prompt tokens prefilled per fused step (utilization of the
+    /// per-step prefill token budget).
+    pub const PREFILL_TOKENS_PER_STEP: &str = "prefill_tokens_per_step";
 }
 
 /// Registry of named summaries + counters + gauges.
@@ -176,9 +195,14 @@ mod tests {
             names::REQUESTS_ACCEPTED,
             names::REQUESTS_REJECTED,
             names::REQUESTS_CANCELLED,
+            names::REQUESTS_FAILED,
             names::QUEUE_DEPTH,
             names::DECODE_TOK_PER_S,
             names::PREFILL_TOK_PER_S,
+            names::PREEMPTIONS,
+            names::DECODE_STALL_STEPS,
+            names::MIXED_STEPS,
+            names::PREFILL_TOKENS_PER_STEP,
         ];
         let mut uniq = all.to_vec();
         uniq.sort_unstable();

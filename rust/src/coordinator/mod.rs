@@ -21,7 +21,7 @@ pub mod metrics;
 pub mod request;
 pub mod session;
 
-pub use batcher::{Batcher, BatcherConfig, Engine, StepOutcome};
+pub use batcher::{Batcher, BatcherConfig, Engine, FusedStep, PrefillChunk, StepOutcome};
 pub use metrics::MetricsRegistry;
 pub use request::{
     CancelToken, Completion, FinishReason, GenParams, Request, SubmitError, TokenEvent,
@@ -37,9 +37,11 @@ use std::time::{Duration, Instant};
 pub struct Router {
     batcher: Batcher,
     pub metrics: Arc<MetricsRegistry>,
-    /// Cumulative engine seconds spent in decode / prefill steps, attributed
-    /// per [`StepOutcome`] by [`Router::pump`]; the per-phase denominators of
-    /// the `decode_tok_per_s` / `prefill_tok_per_s` throughput gauges.
+    /// Cumulative engine seconds spent in the decode / prefill halves of
+    /// fused steps. [`Router::pump`] splits each step's duration between the
+    /// phases proportionally to the tokens each processed; these are the
+    /// per-phase denominators of the `decode_tok_per_s` /
+    /// `prefill_tok_per_s` throughput gauges.
     decode_s: f64,
     prefill_s: f64,
 }
@@ -101,16 +103,44 @@ impl Router {
         let outcome = self.batcher.step(engine)?;
         let step_s = step_t0.elapsed().as_secs_f64();
         match &outcome {
-            StepOutcome::Prefill { n_tokens, .. } => {
-                self.metrics.incr("prefill_steps", 1);
-                self.metrics.incr("prefill_tokens", *n_tokens as u64);
-                self.prefill_s += step_s;
-            }
-            StepOutcome::Decode { n_seqs } => {
-                self.metrics.incr("decode_steps", 1);
-                self.metrics.incr("decode_tokens", *n_seqs as u64);
-                self.metrics.observe("decode_batch", *n_seqs as f64);
-                self.decode_s += step_s;
+            StepOutcome::Step {
+                prefill_tokens,
+                decode_seqs,
+                decode_ready,
+                preemptions,
+                ..
+            } => {
+                let (pt, ds) = (*prefill_tokens, *decode_seqs);
+                if pt > 0 {
+                    self.metrics.incr("prefill_steps", 1);
+                    self.metrics.incr("prefill_tokens", pt as u64);
+                    self.metrics
+                        .observe(metrics::names::PREFILL_TOKENS_PER_STEP, pt as f64);
+                }
+                if ds > 0 {
+                    self.metrics.incr("decode_steps", 1);
+                    self.metrics.incr("decode_tokens", ds as u64);
+                    self.metrics.observe("decode_batch", ds as f64);
+                }
+                if pt > 0 && ds > 0 {
+                    self.metrics.incr(metrics::names::MIXED_STEPS, 1);
+                }
+                if *decode_ready > 0 && ds == 0 {
+                    // Decode-ready sequences existed but none decoded — the
+                    // stall the fused scheduler exists to prevent.
+                    self.metrics.incr(metrics::names::DECODE_STALL_STEPS, 1);
+                }
+                if *preemptions > 0 {
+                    self.metrics
+                        .incr(metrics::names::PREEMPTIONS, *preemptions as u64);
+                }
+                // Fused steps carry both phases: attribute engine time to
+                // each phase proportionally to the tokens it processed.
+                let total = (pt + ds) as f64;
+                if total > 0.0 {
+                    self.prefill_s += step_s * pt as f64 / total;
+                    self.decode_s += step_s * ds as f64 / total;
+                }
             }
             StepOutcome::Idle => {}
         }
@@ -123,12 +153,21 @@ impl Router {
         let done = self.batcher.take_completions();
         for c in &done {
             self.metrics.incr("tokens_out", c.tokens.len() as u64);
-            if c.reason == FinishReason::Cancelled {
-                self.metrics.incr(metrics::names::REQUESTS_CANCELLED, 1);
-            } else {
-                self.metrics.observe("ttft_ms", c.ttft_s * 1e3);
-                self.metrics.observe("tpot_ms", c.tpot_s * 1e3);
-                self.metrics.observe("e2e_ms", c.e2e_s * 1e3);
+            match c.reason {
+                FinishReason::Cancelled => {
+                    self.metrics.incr(metrics::names::REQUESTS_CANCELLED, 1);
+                }
+                // Alloc-failure retirement: not a serve — keep it out of the
+                // latency summaries (and out of `requests_rejected`, which
+                // counts submission-time refusals only).
+                FinishReason::Failed => {
+                    self.metrics.incr(metrics::names::REQUESTS_FAILED, 1);
+                }
+                _ => {
+                    self.metrics.observe("ttft_ms", c.ttft_s * 1e3);
+                    self.metrics.observe("tpot_ms", c.tpot_s * 1e3);
+                    self.metrics.observe("e2e_ms", c.e2e_s * 1e3);
+                }
             }
         }
         Ok((outcome, done))
@@ -188,6 +227,10 @@ impl Router {
             metrics::names::REQUESTS_ACCEPTED,
             metrics::names::REQUESTS_REJECTED,
             metrics::names::REQUESTS_CANCELLED,
+            metrics::names::REQUESTS_FAILED,
+            metrics::names::PREEMPTIONS,
+            metrics::names::DECODE_STALL_STEPS,
+            metrics::names::MIXED_STEPS,
         ] {
             metrics.incr(name, 0);
         }
@@ -258,6 +301,7 @@ mod tests {
             max_batch: 2,
             max_queue: 8,
             prefill_chunk: 4,
+            ..Default::default()
         });
         for i in 0..3 {
             router
@@ -271,6 +315,9 @@ mod tests {
         assert!(router.metrics.summary_stats("ttft_ms").unwrap().0 == 3);
         assert!(router.metrics.gauge_value("decode_tok_per_s").is_some());
         assert!(router.metrics.gauge_value("queue_depth").is_some());
+        // The fused scheduler never leaves decode-ready work stalled.
+        assert_eq!(router.metrics.counter("decode_stall_steps"), 0);
+        assert_eq!(router.metrics.counter("preemptions"), 0);
     }
 
     #[test]
@@ -280,6 +327,7 @@ mod tests {
             max_batch: 2,
             max_queue: 8,
             prefill_chunk: 4,
+            ..Default::default()
         });
         let mut tokens = Vec::new();
         for i in 0..3 {
@@ -305,6 +353,7 @@ mod tests {
             max_batch: 2,
             max_queue: 8,
             prefill_chunk: 8,
+            ..Default::default()
         });
         let handle = router.serve(Box::new(eng));
         let reqs: Vec<RequestHandle> = (0..5)
@@ -385,6 +434,7 @@ mod tests {
             max_batch: 1,
             max_queue: 8,
             prefill_chunk: 8,
+            ..Default::default()
         });
         let handle = router.serve(Box::new(eng));
         let rh = handle.submit(Request::new(0, vec![1, 2], 100));
@@ -411,6 +461,7 @@ mod tests {
             max_batch: 1,
             max_queue: 8,
             prefill_chunk: 8,
+            ..Default::default()
         });
         let handle = router.serve(Box::new(eng));
         let rh = handle.submit(Request::new(7, (0..32).collect(), 4));
@@ -428,6 +479,7 @@ mod tests {
             max_batch: 1,
             max_queue: 8,
             prefill_chunk: 8,
+            ..Default::default()
         });
         let handle = router.serve(Box::new(eng));
         let rh = handle.submit(Request::new(0, vec![1], 2));

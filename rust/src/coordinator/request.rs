@@ -90,6 +90,10 @@ pub enum SubmitError {
     OverBudget { tokens: usize },
     /// The engine is no longer accepting requests.
     Shutdown,
+    /// The engine repeatedly failed to allocate resources for the request
+    /// after admission was attempted (terminal; the request was retried
+    /// first — see `Batcher::admit`).
+    Engine { msg: String },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -103,6 +107,7 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "request of {tokens} tokens can never fit the cache budget")
             }
             SubmitError::Shutdown => write!(f, "engine is shut down"),
+            SubmitError::Engine { msg } => write!(f, "engine allocation failed: {msg}"),
         }
     }
 }
@@ -120,6 +125,9 @@ pub enum FinishReason {
     ContextOverflow,
     /// Cancelled by the client; cache pages were reclaimed immediately.
     Cancelled,
+    /// The engine repeatedly failed to allocate the sequence (streaming
+    /// clients additionally receive a terminal [`TokenEvent::Rejected`]).
+    Failed,
 }
 
 /// Cancellation token shared between a client handle and the scheduler.
@@ -207,7 +215,9 @@ pub(crate) fn sample_token(logits: &[f32], temperature: f32, rng: &mut Pcg64) ->
 /// Internal per-sequence scheduler state.
 pub(crate) struct SeqState {
     pub req: Request,
-    /// Tokens of the prompt already prefilled.
+    /// Tokens of the prefill source already prefilled (see
+    /// [`SeqState::prefill_src`] — the prompt, or prompt + generated tokens
+    /// after a preemption).
     pub prefilled: usize,
     /// Generated tokens so far.
     pub generated: Vec<u32>,
@@ -221,6 +231,20 @@ pub(crate) struct SeqState {
     pub events: Option<Sender<TokenEvent>>,
     /// Shared cancellation flag, observed at step boundaries.
     pub cancel: CancelToken,
+    /// Engine sequence id, assigned at first admission and kept stable
+    /// across preemptions so the sequence's engine-side identity (and any
+    /// id-keyed state) survives eviction + resume.
+    pub assigned_id: Option<crate::kvcache::SeqId>,
+    /// When preempted after generating tokens, the resumed prefill replays
+    /// prompt + generated tokens; None before any preemption.
+    pub resume_prefill: Option<Vec<u32>>,
+    /// Times this sequence was preempted (evicted + requeued).
+    pub preemptions: u32,
+    /// Scheduler steps run since the last (re)admission — the preemption
+    /// hysteresis clock.
+    pub ran_steps: u32,
+    /// Consecutive engine alloc failures while at the head of admission.
+    pub alloc_failures: u32,
     /// Per-request sampling RNG (deterministic from id + params.seed).
     rng: Pcg64,
 }
@@ -238,12 +262,43 @@ impl SeqState {
             first_token_at: None,
             events: None,
             cancel: CancelToken::new(),
+            assigned_id: None,
+            resume_prefill: None,
+            preemptions: 0,
+            ran_steps: 0,
+            alloc_failures: 0,
             rng,
         }
     }
 
+    /// The token stream the next prefill must feed the engine: the prompt,
+    /// or — after a preemption that already generated tokens — prompt +
+    /// generated, so the resumed sequence's cache is rebuilt exactly and its
+    /// next sampled token continues where it left off.
+    pub fn prefill_src(&self) -> &[u32] {
+        self.resume_prefill.as_deref().unwrap_or(&self.req.prompt)
+    }
+
     pub fn prompt_done(&self) -> bool {
-        self.prefilled >= self.req.prompt.len()
+        self.prefilled >= self.prefill_src().len()
+    }
+
+    /// Transition into the requeued-after-preemption state: prefill restarts
+    /// from position 0 over prompt + generated tokens. Generated tokens and
+    /// the sampling RNG are untouched, so no token is ever re-emitted or
+    /// re-sampled — [`TokenEvent`] indices stay contiguous across the
+    /// eviction (DESIGN.md §5).
+    pub fn begin_resume(&mut self) {
+        self.preemptions += 1;
+        self.prefilled = 0;
+        self.ran_steps = 0;
+        self.alloc_failures = 0;
+        if !self.generated.is_empty() {
+            let mut src = Vec::with_capacity(self.req.prompt.len() + self.generated.len());
+            src.extend_from_slice(&self.req.prompt);
+            src.extend_from_slice(&self.generated);
+            self.resume_prefill = Some(src);
+        }
     }
 
     /// Sample the next token from logits, record it, and stream it to the
@@ -383,6 +438,30 @@ mod tests {
         let xs = draw(7);
         assert!(xs.iter().all(|&i| i < logits.len()));
         assert!(xs.iter().any(|&i| i != xs[0]));
+    }
+
+    #[test]
+    fn begin_resume_replays_prompt_plus_generated() {
+        let req = Request::new(5, vec![10, 11, 12], 8);
+        let mut s = SeqState::new(req, Instant::now());
+        assert_eq!(s.prefill_src(), &[10, 11, 12]);
+        // Preempted mid-prefill, nothing generated: replay the prompt only.
+        s.prefilled = 2;
+        s.begin_resume();
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.prefilled, 0);
+        assert_eq!(s.prefill_src(), &[10, 11, 12]);
+        assert!(!s.prompt_done());
+        // Preempted after generating: resume replays prompt + generated, and
+        // prompt_done tracks the extended source.
+        s.prefilled = 3;
+        s.generated = vec![7, 8];
+        s.begin_resume();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.prefill_src(), &[10, 11, 12, 7, 8]);
+        assert!(!s.prompt_done());
+        s.prefilled = 5;
+        assert!(s.prompt_done());
     }
 
     #[test]

@@ -190,6 +190,11 @@ pub struct SeqCache {
     pub k: Vec<Vec<PagedBuf>>,
     pub v: Vec<Vec<PagedBuf>>,
     tokens: usize,
+    /// Page bytes allocated across all buffers, maintained incrementally on
+    /// every append so per-token bookkeeping never rescans the buffers
+    /// (checked against [`SeqCache::recompute_allocated_bytes`] by
+    /// [`KvCacheManager::verify_accounting`]).
+    alloc_bytes: usize,
 }
 
 impl SeqCache {
@@ -212,7 +217,12 @@ impl SeqCache {
                     .collect()
             })
             .collect();
-        SeqCache { k, v, tokens: 0 }
+        SeqCache {
+            k,
+            v,
+            tokens: 0,
+            alloc_bytes: 0,
+        }
     }
 
     pub fn tokens(&self) -> usize {
@@ -220,6 +230,11 @@ impl SeqCache {
     }
 
     fn allocated_bytes(&self) -> usize {
+        self.alloc_bytes
+    }
+
+    /// O(layers × heads) recomputation of the incremental counter.
+    fn recompute_allocated_bytes(&self) -> usize {
         self.k
             .iter()
             .flatten()
@@ -239,6 +254,11 @@ pub enum CacheError {
     OverBudget { needed: u64, available: u64 },
     UnknownSeq(SeqId),
     DuplicateSeq(SeqId),
+    /// Byte accounting went inconsistent: an operation would drive a counter
+    /// below zero. Indicates a bookkeeping bug — the manager refuses the
+    /// operation (loudly, in every build profile) instead of wrapping the
+    /// counter and wedging admission forever.
+    AccountingDrift { counter: &'static str, value: u64, delta: u64 },
 }
 
 impl std::fmt::Display for CacheError {
@@ -249,6 +269,10 @@ impl std::fmt::Display for CacheError {
             }
             CacheError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
             CacheError::DuplicateSeq(id) => write!(f, "duplicate sequence {id}"),
+            CacheError::AccountingDrift { counter, value, delta } => write!(
+                f,
+                "cache accounting drift: {counter} = {value} B cannot shrink by {delta} B"
+            ),
         }
     }
 }
@@ -262,10 +286,21 @@ pub struct KvCacheManager {
     budget_bytes: u64,
     used_bytes: u64,
     seqs: HashMap<SeqId, SeqCache>,
-    /// Worst-case byte reservations per sequence (admission control without
-    /// preemption: a sequence never exceeds its reservation unexpectedly).
+    /// Worst-case byte reservations per sequence (admission control; the
+    /// coordinator may preempt a sequence to reclaim both its pages and its
+    /// reservation).
     reserved: HashMap<SeqId, u64>,
-    /// Peak usage high-water mark (reported by metrics).
+    /// Incrementally-maintained Σ over live sequences of
+    /// `max(reserved − allocated, 0)` — the bytes promised but not yet
+    /// backed by pages. Kept in lockstep by `reserve`/append/`free` so the
+    /// per-token hot path never rescans all sequences; equals
+    /// [`KvCacheManager::outstanding_reserved_recomputed`]
+    /// (property-tested).
+    outstanding: u64,
+    /// Peak *commitment* high-water mark: max over time of
+    /// `used_bytes + outstanding`. Reported by the `cache_peak_bytes` gauge
+    /// for capacity planning — tracking backed pages alone would understate
+    /// the worst case the admission controller actually promised.
     peak_bytes: u64,
 }
 
@@ -277,6 +312,7 @@ impl KvCacheManager {
             used_bytes: 0,
             seqs: HashMap::new(),
             reserved: HashMap::new(),
+            outstanding: 0,
             peak_bytes: 0,
         }
     }
@@ -323,8 +359,15 @@ impl KvCacheManager {
     }
 
     /// Unallocated remainder of all reservations (bytes promised but not yet
-    /// backed by pages).
+    /// backed by pages). O(1): maintained incrementally by
+    /// `reserve`/append/`free`.
     pub fn outstanding_reserved(&self) -> u64 {
+        self.outstanding
+    }
+
+    /// O(n_seqs) recomputation of [`KvCacheManager::outstanding_reserved`]
+    /// (verification only).
+    fn outstanding_reserved_recomputed(&self) -> u64 {
         self.reserved
             .iter()
             .map(|(id, &res)| {
@@ -337,24 +380,63 @@ impl KvCacheManager {
     /// Can a sequence expected to reach `n_tokens` be admitted right now?
     /// Counts both live pages and outstanding reservations.
     pub fn can_admit(&self, n_tokens: usize) -> bool {
-        self.used_bytes + self.outstanding_reserved() + self.bytes_for_tokens(n_tokens)
-            <= self.budget_bytes
+        self.used_bytes + self.outstanding + self.bytes_for_tokens(n_tokens) <= self.budget_bytes
+    }
+
+    /// Bytes sequence `id` currently commits against the budget — backed
+    /// pages plus its outstanding reservation remainder, i.e. what freeing
+    /// it would return to the pool.
+    pub fn committed_bytes_for(&self, id: SeqId) -> u64 {
+        let alloc = self
+            .seqs
+            .get(&id)
+            .map(|s| s.allocated_bytes() as u64)
+            .unwrap_or(0);
+        let res = self.reserved.get(&id).copied().unwrap_or(0);
+        alloc.max(res)
+    }
+
+    /// [`KvCacheManager::can_admit`], hypothetically: would a sequence of
+    /// `n_tokens` fit if the sequences in `freed` were freed first? The
+    /// scheduler uses this to plan preemption before evicting anyone
+    /// (`Engine::can_admit_if_freed`). Kept here, next to `can_admit`, so
+    /// the admission predicate has a single source of truth.
+    pub fn can_admit_if_freed(&self, n_tokens: usize, freed: &[SeqId]) -> bool {
+        let reclaim: u64 = freed.iter().map(|&id| self.committed_bytes_for(id)).sum();
+        let committed = (self.used_bytes + self.outstanding).saturating_sub(reclaim);
+        committed + self.bytes_for_tokens(n_tokens) <= self.budget_bytes
+    }
+
+    /// Record a new commitment high-water mark (pages + reservations).
+    fn note_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes + self.outstanding);
     }
 
     /// Reserve worst-case bytes for a sequence expected to reach `n_tokens`.
     pub fn reserve(&mut self, id: SeqId, n_tokens: usize) -> Result<(), CacheError> {
-        if !self.seqs.contains_key(&id) {
+        let Some(seq) = self.seqs.get(&id) else {
             return Err(CacheError::UnknownSeq(id));
-        }
+        };
+        let alloc = seq.allocated_bytes() as u64;
         let need = self.bytes_for_tokens(n_tokens);
-        let committed = self.used_bytes + self.outstanding_reserved();
-        if committed + need > self.budget_bytes {
+        // Replace this sequence's old outstanding contribution (0 for a
+        // fresh sequence) with the new one.
+        let old = self
+            .reserved
+            .get(&id)
+            .map(|&r| r.saturating_sub(alloc))
+            .unwrap_or(0);
+        let new = need.saturating_sub(alloc);
+        let committed = self.used_bytes + self.outstanding - old;
+        if committed + new > self.budget_bytes {
             return Err(CacheError::OverBudget {
                 needed: need,
                 available: self.budget_bytes.saturating_sub(committed),
             });
         }
         self.reserved.insert(id, need);
+        self.outstanding = self.outstanding - old + new;
+        self.note_peak();
         Ok(())
     }
 
@@ -377,7 +459,7 @@ impl KvCacheManager {
             .get(&id)
             .map(|&r| r.saturating_sub(alloc))
             .unwrap_or(0);
-        let outstanding_after = self.outstanding_reserved() - remaining_res.min(cost as u64);
+        let outstanding_after = self.outstanding - remaining_res.min(cost as u64);
         if self.used_bytes + cost as u64 + outstanding_after > self.budget_bytes {
             return Err(CacheError::OverBudget {
                 needed: cost as u64,
@@ -385,6 +467,20 @@ impl KvCacheManager {
             });
         }
         Ok(())
+    }
+
+    /// Commit `actual` freshly-allocated bytes to the global counters after
+    /// an append: pages move from "promised" to "backed", consuming this
+    /// sequence's outstanding reservation first.
+    fn finish_append(&mut self, id: SeqId, alloc_before: u64, actual: u64) {
+        let remaining_res = self
+            .reserved
+            .get(&id)
+            .map(|&r| r.saturating_sub(alloc_before))
+            .unwrap_or(0);
+        self.outstanding -= remaining_res.min(actual);
+        self.used_bytes += actual;
+        self.note_peak();
     }
 
     /// Append one token's compressed rows for one layer. `k_rows`/`v_rows`
@@ -404,14 +500,15 @@ impl KvCacheManager {
         }
         self.check_append_budget(id, seq, cost)?;
         let seq = self.seqs.get_mut(&id).unwrap();
+        let alloc_before = seq.alloc_bytes as u64;
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
             actual += seq.k[layer][h].push_row(k_rows[h]);
             actual += seq.v[layer][h].push_row(v_rows[h]);
         }
         debug_assert_eq!(actual, cost);
-        self.used_bytes += actual as u64;
-        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        seq.alloc_bytes += actual;
+        self.finish_append(id, alloc_before, actual as u64);
         Ok(())
     }
 
@@ -436,14 +533,15 @@ impl KvCacheManager {
         }
         self.check_append_budget(id, seq, cost)?;
         let seq = self.seqs.get_mut(&id).unwrap();
+        let alloc_before = seq.alloc_bytes as u64;
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
             actual += seq.k[layer][h].push_row(k_mats[h].row(row));
             actual += seq.v[layer][h].push_row(v_mats[h].row(row));
         }
         debug_assert_eq!(actual, cost);
-        self.used_bytes += actual as u64;
-        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        seq.alloc_bytes += actual;
+        self.finish_append(id, alloc_before, actual as u64);
         Ok(())
     }
 
@@ -471,14 +569,15 @@ impl KvCacheManager {
         }
         self.check_append_budget(id, seq, cost)?;
         let seq = self.seqs.get_mut(&id).unwrap();
+        let alloc_before = seq.alloc_bytes as u64;
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
             actual += seq.k[layer][h].push_rows(k_mats[h].data(), n);
             actual += seq.v[layer][h].push_rows(v_mats[h].data(), n);
         }
         debug_assert_eq!(actual, cost);
-        self.used_bytes += actual as u64;
-        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        seq.alloc_bytes += actual;
+        self.finish_append(id, alloc_before, actual as u64);
         Ok(())
     }
 
@@ -508,21 +607,56 @@ impl KvCacheManager {
     }
 
     /// Free a sequence, returning its bytes to the pool. Freeing twice is an
-    /// error (the coordinator owns the lifecycle).
+    /// error (the coordinator owns the lifecycle). Uses checked arithmetic
+    /// in every build profile: on accounting drift the call fails with
+    /// [`CacheError::AccountingDrift`] and leaves the manager untouched,
+    /// instead of silently wrapping `used_bytes` and permanently wedging
+    /// admission.
     pub fn free(&mut self, id: SeqId) -> Result<u64, CacheError> {
-        self.reserved.remove(&id);
-        let seq = self.seqs.remove(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
         let bytes = seq.allocated_bytes() as u64;
-        debug_assert!(bytes <= self.used_bytes);
-        self.used_bytes -= bytes;
+        let used_after = self.used_bytes.checked_sub(bytes).ok_or(
+            CacheError::AccountingDrift {
+                counter: "used_bytes",
+                value: self.used_bytes,
+                delta: bytes,
+            },
+        )?;
+        let res = self.reserved.get(&id).copied().unwrap_or(0);
+        let contribution = res.saturating_sub(bytes);
+        let outstanding_after = self.outstanding.checked_sub(contribution).ok_or(
+            CacheError::AccountingDrift {
+                counter: "outstanding_reserved",
+                value: self.outstanding,
+                delta: contribution,
+            },
+        )?;
+        self.used_bytes = used_after;
+        self.outstanding = outstanding_after;
+        self.reserved.remove(&id);
+        self.seqs.remove(&id);
         Ok(bytes)
     }
 
-    /// Invariant check: accounted bytes equal the sum over live sequences.
-    /// (Used by tests and debug assertions.)
+    /// Invariant check: the incremental counters (`used_bytes`, per-sequence
+    /// allocated bytes, outstanding reservations) all equal their
+    /// recomputed-from-scratch values. Used by tests and by the batcher's
+    /// debug-path step via `Engine::check_invariants`.
     pub fn verify_accounting(&self) -> bool {
-        let actual: usize = self.seqs.values().map(|s| s.allocated_bytes()).sum();
-        actual as u64 == self.used_bytes
+        let per_seq_ok = self
+            .seqs
+            .values()
+            .all(|s| s.alloc_bytes == s.recompute_allocated_bytes());
+        let actual: usize = self.seqs.values().map(|s| s.recompute_allocated_bytes()).sum();
+        per_seq_ok
+            && actual as u64 == self.used_bytes
+            && self.outstanding == self.outstanding_reserved_recomputed()
+    }
+
+    /// Test-only: force `used_bytes` to simulate accounting drift.
+    #[cfg(test)]
+    fn corrupt_used_bytes_for_test(&mut self, v: u64) {
+        self.used_bytes = v;
     }
 }
 
@@ -753,6 +887,10 @@ mod tests {
         assert!((ratio - 44.0 / 128.0).abs() < 1e-9);
     }
 
+    /// Satellite: the incremental `outstanding_reserved` counter and the
+    /// per-sequence allocated-bytes counters always equal their recomputed
+    /// sums under random alloc/reserve/append/free workloads
+    /// (`verify_accounting` checks all three).
     #[test]
     fn prop_accounting_under_random_workload() {
         forall("cache accounting invariant", 30, |g| {
@@ -760,7 +898,7 @@ mod tests {
             let mut live: Vec<SeqId> = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..g.usize_in(5, 60) {
-                let action = g.usize_in(0, 2);
+                let action = g.usize_in(0, 3);
                 match action {
                     0 => {
                         mgr.alloc(next_id).unwrap();
@@ -780,12 +918,73 @@ mod tests {
                         let id = live.swap_remove(idx);
                         mgr.free(id).unwrap();
                     }
+                    3 if !live.is_empty() => {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let id = live[idx];
+                        // Reservations may legitimately be refused on budget.
+                        let _ = mgr.reserve(id, g.usize_in(1, 48));
+                    }
                     _ => {}
                 }
                 assert!(mgr.verify_accounting(), "accounting broke");
                 assert!(mgr.used_bytes() <= mgr.budget_bytes());
+                assert!(
+                    mgr.peak_bytes() >= mgr.used_bytes() + mgr.outstanding_reserved(),
+                    "peak must dominate current commitment"
+                );
             }
         });
+    }
+
+    /// Satellite: `free` detects accounting drift with checked arithmetic in
+    /// every build profile instead of wrapping `used_bytes` (which would
+    /// permanently wedge admission).
+    #[test]
+    fn free_surfaces_accounting_drift_instead_of_wrapping() {
+        let mut mgr = KvCacheManager::new(spec2(), 1 << 20);
+        mgr.alloc(1).unwrap();
+        for t in 0..4 {
+            push_token(&mut mgr, 1, t as f32).unwrap();
+        }
+        // Simulate drift: pretend fewer bytes are accounted than this
+        // sequence holds.
+        mgr.corrupt_used_bytes_for_test(1);
+        let err = mgr.free(1);
+        assert!(
+            matches!(err, Err(CacheError::AccountingDrift { counter: "used_bytes", .. })),
+            "{err:?}"
+        );
+        // The failed free left the sequence in place (no partial mutation).
+        assert_eq!(mgr.live_sequences(), 1);
+    }
+
+    /// Satellite: `peak_bytes` tracks the commitment high-water mark
+    /// (used + outstanding reservations), not just backed pages.
+    #[test]
+    fn peak_includes_outstanding_reservations() {
+        let spec = spec2();
+        let bpt = spec.bytes_per_token();
+        let mut mgr = KvCacheManager::new(spec, (bpt * 64) as u64);
+        mgr.alloc(1).unwrap();
+        mgr.reserve(1, 32).unwrap();
+        let reserved = mgr.bytes_for_tokens(32);
+        assert_eq!(mgr.used_bytes(), 0, "nothing backed yet");
+        assert_eq!(mgr.outstanding_reserved(), reserved);
+        assert!(
+            mgr.peak_bytes() >= reserved,
+            "peak {} must cover the un-backed reservation {reserved}",
+            mgr.peak_bytes()
+        );
+        // Backing pages inside the reservation doesn't inflate the peak.
+        for t in 0..8 {
+            push_token(&mut mgr, 1, t as f32).unwrap();
+        }
+        assert_eq!(mgr.peak_bytes(), reserved);
+        assert!(mgr.verify_accounting());
+        // Free returns both pages and the reservation remainder.
+        mgr.free(1).unwrap();
+        assert_eq!(mgr.used_bytes(), 0);
+        assert_eq!(mgr.outstanding_reserved(), 0);
     }
 
     #[test]

@@ -265,6 +265,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "temperature", help: "sampling temperature (0 = greedy)", default: Some("0") },
                     OptSpec { name: "stop-token", help: "stop generation at this token id", default: None },
                     OptSpec { name: "cancel-every", help: "cancel every k-th request mid-stream (0 = never)", default: Some("0") },
+                    OptSpec { name: "prefill-budget", help: "prompt tokens prefilled per fused step across sequences (0 = prefill-chunk)", default: Some("0") },
                     OptSpec { name: "backend", help: "rust | pjrt", default: Some("rust") },
                 ],
             )

@@ -672,9 +672,13 @@ impl ServingEngine {
 impl Engine for ServingEngine {
     fn alloc(&mut self, id: SeqId, max_total_tokens: usize) -> Result<()> {
         self.cache.alloc(id).map_err(|e| anyhow!("{e}"))?;
-        self.cache
-            .reserve(id, max_total_tokens)
-            .map_err(|e| anyhow!("{e}"))
+        if let Err(e) = self.cache.reserve(id, max_total_tokens) {
+            // Leave no residue on failure (Engine contract): the scheduler
+            // keeps the request queued and may retry the same id.
+            let _ = self.cache.free(id);
+            return Err(anyhow!("{e}"));
+        }
+        Ok(())
     }
 
     fn free(&mut self, id: SeqId) {
@@ -683,6 +687,10 @@ impl Engine for ServingEngine {
 
     fn can_admit(&self, total_tokens: usize) -> bool {
         self.cache.can_admit(total_tokens)
+    }
+
+    fn can_admit_if_freed(&self, total_tokens: usize, freed: &[SeqId]) -> bool {
+        self.cache.can_admit_if_freed(total_tokens, freed)
     }
 
     fn prefill(
@@ -737,6 +745,12 @@ impl Engine for ServingEngine {
         }
     }
 
+    // `step_fused` uses the trait's default composition: the prefill chunks
+    // and the decode batch already run back to back through this engine's
+    // single scratch arena (both paths resize the same `BatchScratch`
+    // buffers in place), so there is no extra fusion to exploit on the CPU
+    // backends — overriding would just duplicate the composition.
+
     fn max_seq(&self) -> usize {
         self.model.cfg.max_seq
     }
@@ -751,6 +765,16 @@ impl Engine for ServingEngine {
 
     fn cache_peak_bytes(&self) -> u64 {
         self.cache.peak_bytes()
+    }
+
+    fn check_invariants(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.cache.verify_accounting(),
+            "kv-cache accounting drift: used={} B, outstanding={} B disagree with recomputed sums",
+            self.cache.used_bytes(),
+            self.cache.outstanding_reserved()
+        );
+        Ok(())
     }
 }
 
@@ -947,6 +971,7 @@ mod tests {
             max_batch: 2,
             max_queue: 16,
             prefill_chunk: 4,
+            ..Default::default()
         });
         for i in 0..3 {
             router
@@ -961,6 +986,24 @@ mod tests {
         // All caches released.
         assert_eq!(eng.cache.live_sequences(), 0);
         assert_eq!(eng.cache.used_bytes(), 0);
+    }
+
+    /// Satellite: a failed `alloc` (reservation over budget) must leave no
+    /// residue — no sequence, no reservation — so the scheduler can keep the
+    /// request queued and retry the same id (Engine contract).
+    #[test]
+    fn alloc_failure_leaves_no_residue() {
+        let mut eng = build_engine("test-tiny", Method::KqSvd);
+        let tiny = eng.cache.bytes_for_tokens(4);
+        eng.cache = KvCacheManager::new(eng.cache.spec().clone(), tiny);
+        assert!(eng.alloc(1, 64).is_err(), "reservation cannot fit");
+        assert_eq!(eng.cache.live_sequences(), 0);
+        assert_eq!(eng.cache.outstanding_reserved(), 0);
+        assert!(eng.cache.verify_accounting());
+        // The same id works once the request fits.
+        eng.alloc(1, 4).unwrap();
+        assert_eq!(eng.cache.live_sequences(), 1);
+        eng.free(1);
     }
 
     #[test]
@@ -984,6 +1027,7 @@ mod tests {
                 max_batch: 4,
                 max_queue: 8,
                 prefill_chunk: 8,
+                ..Default::default()
             });
             router
                 .submit(&eng, Request::new(0, vec![3, 1, 4, 1, 5], 6))

@@ -31,6 +31,7 @@ fn run_workload(engine: &mut ServingEngine, n_reqs: u64) -> Vec<kqsvd::coordinat
         max_batch: 4,
         max_queue: 64,
         prefill_chunk: 16,
+        ..Default::default()
     });
     for i in 0..n_reqs {
         router
@@ -48,6 +49,7 @@ fn run_workload_streaming(engine: ServingEngine, n_reqs: u64) -> Vec<Completion>
         max_batch: 4,
         max_queue: 64,
         prefill_chunk: 16,
+        ..Default::default()
     });
     let handle = router.serve(Box::new(engine));
     let submissions: Vec<RequestHandle> = (0..n_reqs)
