@@ -5,11 +5,14 @@
 //! one scheduling path, so the delta between the rows is pure session
 //! overhead (channels + engine thread) — plus a **serial-vs-batch** section
 //! comparing the batch-major GEMM execution path against the serial
-//! `forward_token` oracle on the `test-tiny` preset, and two scheduler-v2
-//! acceptance scenarios: **long-prompt interleave** (decode streams must not
-//! stall while a long prompt prefills) and **preemption under pressure** (a
+//! `forward_token` oracle on the `test-tiny` preset, and three acceptance
+//! scenarios: **long-prompt interleave** (decode streams must not stall
+//! while a long prompt prefills), **preemption under pressure** (a
 //! priority-1 request is admitted under a full budget by evicting a
-//! priority-0 stream, which later resumes and completes).
+//! priority-0 stream, which later resumes and completes), and
+//! **shared prefix** (N requests with a common 256-token system prompt hit
+//! the shared-page prefix cache; pool bytes grow sublinearly in the number
+//! of concurrent same-prefix sequences).
 //!
 //! Results are printed as a table, written to `bench_out/e2e_serving.csv`,
 //! and summarized into `BENCH_serving.json` at the repository root so the
@@ -22,9 +25,9 @@
 use kqsvd::bench_support::{f as fnum, Table};
 use kqsvd::config::{Config, Method};
 use kqsvd::coordinator::metrics::names as metric_names;
-use kqsvd::coordinator::{BatcherConfig, GenParams, Request, RequestHandle, Router};
+use kqsvd::coordinator::{Batcher, BatcherConfig, GenParams, Request, RequestHandle, Router, StepOutcome};
 use kqsvd::jsonutil::Json;
-use kqsvd::server::build_engine;
+use kqsvd::server::{build_engine, ServingEngine};
 use kqsvd::text::{Corpus, Split};
 use kqsvd::util::stats::fmt_bytes;
 
@@ -252,6 +255,101 @@ fn preemption_under_pressure() -> anyhow::Result<Json> {
         .set("completed", done.len()))
 }
 
+/// Drive the batcher to idle, tracking the pool's peak physical bytes and
+/// the prefix-cache hit tokens reported by `StepOutcome`.
+fn drain_tracking(b: &mut Batcher, engine: &mut ServingEngine) -> anyhow::Result<(u64, usize)> {
+    let mut peak_used = 0u64;
+    let mut hits = 0usize;
+    let mut idle_streak = 0usize;
+    while !b.idle() {
+        let out = b.step(engine)?;
+        if let StepOutcome::Step { prefix_hit_tokens, .. } = out {
+            hits += prefix_hit_tokens;
+        }
+        b.check_progress(&out, &mut idle_streak)?;
+        peak_used = peak_used.max(engine.cache.used_bytes());
+        b.take_completions();
+    }
+    Ok((peak_used, hits))
+}
+
+/// Shared-system-prompt scenario (satellite): N concurrent requests with a
+/// common 256-token prefix through the shared-page pool. Asserts prefix
+/// hits > 0 and pool `used_bytes` growing **sublinearly** in the number of
+/// concurrent same-prefix sequences (shared bytes are charged once), and
+/// records `prefix_hit_tokens` + effective bytes/token in
+/// `BENCH_serving.json`.
+fn shared_prefix_scenario(smoke: bool) -> anyhow::Result<Json> {
+    let n = if smoke { 4usize } else { 8 };
+    let (prefix_len, suffix_len, gen_len) = (256usize, 8usize, 4usize);
+    let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
+    cfg.method = Method::KqSvd;
+    cfg.calib.n_calib_seqs = 2;
+    cfg.calib.calib_seq_len = 64;
+    cfg.serve.max_batch = n;
+    cfg.serve.prefill_chunk = 64;
+    cfg.serve.prefix_cache = true;
+    cfg.run_dir = "runs/bench_e2e_shared_prefix".into();
+    let mut engine = build_engine(&cfg)?;
+    let corpus = Corpus::new(cfg.model.vocab_size, 79);
+    let prefix = corpus.sequence(Split::Validation, 6_000, prefix_len);
+    let prompt_for = |i: u64| {
+        let mut p = prefix.clone();
+        p.extend(corpus.sequence(Split::Validation, 6_100 + i, suffix_len));
+        p
+    };
+
+    let mut b = Batcher::new(BatcherConfig::from(&cfg.serve));
+    // Warm pass: one request runs alone, registering the prefix chunks.
+    b.submit(&engine, Request::new(0, prompt_for(0), gen_len))
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    drain_tracking(&mut b, &mut engine)?;
+    let warm_bytes = engine.cache.used_bytes(); // the now-cold cached prefix
+
+    // Concurrent pass: N same-prefix requests in flight together.
+    for i in 1..=n as u64 {
+        b.submit(&engine, Request::new(i, prompt_for(i), gen_len))
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    }
+    let (peak_used, hit_tokens) = drain_tracking(&mut b, &mut engine)?;
+    anyhow::ensure!(hit_tokens > 0, "same-prefix requests must hit the prefix cache");
+    anyhow::ensure!(
+        hit_tokens >= n * prefix_len,
+        "every concurrent request should map the whole prefix ({hit_tokens} hit tokens)"
+    );
+    let naive = engine.cache.bytes_for_tokens(prefix_len + suffix_len + gen_len) * n as u64;
+    anyhow::ensure!(
+        peak_used < engine.cache.bytes_for_tokens(prefix_len) * 2,
+        "pool bytes must grow sublinearly in same-prefix sequences: \
+         {n} concurrent sequences peaked at {peak_used} B"
+    );
+    let total_tokens = (n * (prefix_len + suffix_len + gen_len)) as f64;
+    let eff_bytes_per_token = peak_used as f64 / total_tokens;
+    println!(
+        "\nshared-prefix scenario ({n} requests × {prefix_len}-token common prefix + {suffix_len} suffix):"
+    );
+    println!(
+        "  prefix hit tokens: {hit_tokens} · peak pool {} (naive per-seq {}) · {:.1} effective B/token",
+        fmt_bytes(peak_used),
+        fmt_bytes(naive),
+        eff_bytes_per_token
+    );
+    Ok(Json::obj()
+        .set("n_requests", n)
+        .set("prefix_len", prefix_len)
+        .set("suffix_len", suffix_len)
+        .set("gen_len", gen_len)
+        .set("prefix_hit_tokens", hit_tokens)
+        .set("warm_prefix_bytes", warm_bytes)
+        .set("peak_pool_bytes", peak_used)
+        .set("naive_unshared_bytes", naive)
+        .set("effective_bytes_per_token", eff_bytes_per_token)
+        .set(
+            "bytes_per_token_unshared",
+            engine.cache_bytes_per_token(),
+        ))
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("KQSVD_BENCH_SMOKE")
         .map(|v| v == "1")
@@ -368,10 +466,11 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  batch-major decode speedup: {speedup:.2}× (target ≥ 3×)");
 
-    // Scheduler-v2 acceptance scenarios (assertions inside; structural, so
-    // they run in smoke mode too).
+    // Scheduler-v2 + shared-page-pool acceptance scenarios (assertions
+    // inside; structural, so they run in smoke mode too).
     let interleave = long_prompt_interleave(smoke)?;
     let preemption = preemption_under_pressure()?;
+    let shared_prefix = shared_prefix_scenario(smoke)?;
 
     let json = Json::obj()
         .set("bench", "e2e_serving")
@@ -401,7 +500,8 @@ fn main() -> anyhow::Result<()> {
                 .set("decode_speedup", speedup),
         )
         .set("long_prompt_interleave", interleave)
-        .set("preemption_under_pressure", preemption);
+        .set("preemption_under_pressure", preemption)
+        .set("shared_prefix", shared_prefix);
     std::fs::write("BENCH_serving.json", json.to_string_pretty())?;
     println!("\nCSV → bench_out/e2e_serving.csv · JSON → BENCH_serving.json");
 

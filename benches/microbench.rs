@@ -8,7 +8,7 @@ use kqsvd::attn::online_attn;
 use kqsvd::bench_support::{bench, f as fnum, Table};
 use kqsvd::config::{Config, Method};
 use kqsvd::coordinator::Engine;
-use kqsvd::kvcache::PagedBuf;
+use kqsvd::kvcache::{BlockTable, PagePool};
 use kqsvd::linalg::{Mat, Svd};
 use kqsvd::server::build_engine;
 use kqsvd::util::rng::Pcg64;
@@ -46,15 +46,16 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Pcg64::new((t * r) as u64, 3);
         let ck_m = Mat::randn(t, r, 1.0, &mut rng);
         let cv_m = Mat::randn(t, r, 1.0, &mut rng);
-        let mut ck = PagedBuf::new(r, 16);
-        let mut cv = PagedBuf::new(r, 16);
+        let mut pool = PagePool::new(16);
+        let mut ck = BlockTable::new(r);
+        let mut cv = BlockTable::new(r);
         for i in 0..t {
-            ck.push_row(ck_m.row(i));
-            cv.push_row(cv_m.row(i));
+            pool.push_row(&mut ck, ck_m.row(i));
+            pool.push_row(&mut cv, cv_m.row(i));
         }
         let q: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let m = bench(&format!("online_attn T={t} R={r}"), 10, 50, || {
-            std::hint::black_box(online_attn(&q, &ck, &cv, 0.125));
+            std::hint::black_box(online_attn(&q, &pool, &ck, &cv, 0.125));
         });
         // Bytes streamed per call: T·(R+R)·4.
         let gbs = (t * r * 2 * 4) as f64 / m.min_s / 1e9;

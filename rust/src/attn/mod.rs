@@ -1,13 +1,21 @@
-//! Pure-Rust decode attention over compressed paged caches.
+//! Pure-Rust decode attention over the shared compressed page pool.
 //!
 //! This is the Rust twin of the L1 Pallas kernel + L2 fold graph
 //! (`python/compile/`): same math, same single-pass online softmax, but
-//! streaming directly over [`crate::kvcache::PagedBuf`] pages with zero
-//! copies. It serves as (a) the default serving backend, (b) the
-//! numerically-cross-checked fallback when AOT artifacts are absent, and
-//! (c) the oracle the PJRT path is validated against in integration tests.
+//! streaming directly over [`crate::kvcache::PagePool`] pages through each
+//! sequence's [`crate::kvcache::BlockTable`] with zero copies — shared
+//! prefix pages are read in place, never gathered. It serves as (a) the
+//! default serving backend, (b) the numerically-cross-checked fallback when
+//! AOT artifacts are absent, and (c) the oracle the PJRT path is validated
+//! against in integration tests.
+//!
+//! The paged GEMM helpers ([`matmul_nt_paged`], [`matmul_paged`]) let the
+//! chunked-prefill path consume cache pages directly; they reproduce the
+//! dense `Mat::matmul_nt_to` / `Mat::matmul_to` kernels element-for-element
+//! (same dot-product order, same zero-skip), so switching from
+//! densify-then-GEMM to paged GEMMs changed no bits.
 
-use crate::kvcache::PagedBuf;
+use crate::kvcache::{BlockTable, PagePool};
 use crate::linalg::Mat;
 use crate::util::threadpool::SendPtr;
 
@@ -17,16 +25,29 @@ use crate::util::threadpool::SendPtr;
 ///
 /// Exactly the flash-decoding recurrence the Pallas kernel uses, so the two
 /// backends agree to float tolerance.
-pub fn online_attn(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32) -> Vec<f32> {
+pub fn online_attn(
+    q_proj: &[f32],
+    pool: &PagePool,
+    ck: &BlockTable,
+    cv: &BlockTable,
+    scale: f32,
+) -> Vec<f32> {
     let mut acc = vec![0.0f32; cv.width()];
-    online_attn_into(q_proj, ck, cv, scale, &mut acc);
+    online_attn_into(q_proj, pool, ck, cv, scale, &mut acc);
     acc
 }
 
 /// Allocation-free [`online_attn`]: writes the compressed context into a
 /// caller-owned `acc` slice (length `cv.width()`), so the steady-state decode
 /// path never allocates per token.
-pub fn online_attn_into(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32, acc: &mut [f32]) {
+pub fn online_attn_into(
+    q_proj: &[f32],
+    pool: &PagePool,
+    ck: &BlockTable,
+    cv: &BlockTable,
+    scale: f32,
+    acc: &mut [f32],
+) {
     let r = ck.width();
     let rv = cv.width();
     assert_eq!(q_proj.len(), r, "projected query width mismatch");
@@ -37,8 +58,8 @@ pub fn online_attn_into(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32
     acc.fill(0.0);
 
     let mut row = 0usize;
-    let mut kv_chunks = cv.chunks();
-    for (k_chunk, rows) in ck.chunks() {
+    let mut kv_chunks = cv.chunks(pool);
+    for (k_chunk, rows) in ck.chunks(pool) {
         let (v_chunk, v_rows) = kv_chunks.next().expect("chunk parity");
         debug_assert_eq!(rows, v_rows);
         for i in 0..rows {
@@ -82,24 +103,25 @@ pub fn online_attn_into(q_proj: &[f32], ck: &PagedBuf, cv: &PagedBuf, scale: f32
 /// Mirrors `python/compile/model.py::attn_decode_layer` for batch 1.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_attn_layer(
-    q_heads: &[Vec<f32>],   // H raw query vectors (len d, post-RoPE)
-    bproj: &[&Mat],         // per KV head: d×R
-    folds: &[&Mat],         // per query head: R_v×D
-    k_bufs: &[PagedBuf],    // per KV head compressed K
-    v_bufs: &[PagedBuf],    // per KV head compressed V
+    q_heads: &[Vec<f32>],     // H raw query vectors (len d, post-RoPE)
+    bproj: &[&Mat],           // per KV head: d×R
+    folds: &[&Mat],           // per query head: R_v×D
+    pool: &PagePool,          // the shared page pool
+    k_tables: &[BlockTable],  // per KV head compressed K
+    v_tables: &[BlockTable],  // per KV head compressed V
     scale: f32,
     group: usize,
     d_model: usize,
 ) -> Vec<f32> {
     let h = q_heads.len();
     assert_eq!(folds.len(), h);
-    assert_eq!(bproj.len(), k_bufs.len());
-    assert_eq!(h, k_bufs.len() * group);
+    assert_eq!(bproj.len(), k_tables.len());
+    assert_eq!(h, k_tables.len() * group);
     let mut out = vec![0.0f32; d_model];
     for (hi, q) in q_heads.iter().enumerate() {
         let kv = hi / group;
         let q_proj = bproj[kv].vecmat(q); // (R)
-        let ctx = online_attn(&q_proj, &k_bufs[kv], &v_bufs[kv], scale); // (Rv)
+        let ctx = online_attn(&q_proj, pool, &k_tables[kv], &v_tables[kv], scale); // (Rv)
         fold_ctx_head(&mut out, &ctx, folds[hi]); // out += ctx · F_hi
     }
     out
@@ -135,14 +157,16 @@ fn fold_ctx_head(out: &mut [f32], ctx: &[f32], fold: &Mat) {
 /// serial oracle — tested in `server::engine`.
 ///
 /// * `qp` — `B × (H·R)` projected post-RoPE queries (`q̃ = q·B_kv` per head);
-/// * `seqs` — per batch item, this layer's per-KV-head `(K, V)` paged buffers;
+/// * `pool` — the shared page pool (threads read it concurrently);
+/// * `seqs` — per batch item, this layer's per-KV-head `(K, V)` block tables;
 /// * `folds` — `H` per-query-head fold matrices `R_v×D`;
 /// * `ctx` — `B × (H·R_v)` scratch, fully overwritten;
 /// * `out` — `B × D` attention output, fully overwritten.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_attn_batch(
     qp: &Mat,
-    seqs: &[(&[PagedBuf], &[PagedBuf])],
+    pool: &PagePool,
+    seqs: &[(&[BlockTable], &[BlockTable])],
     folds: &[&Mat],
     scale: f32,
     group: usize,
@@ -169,14 +193,14 @@ pub fn decode_attn_batch(
         let ctx_ptr = &ctx_ptr; // capture the Sync wrapper, not the raw field
         for item in lo..hi {
             let (bi, kv) = (item / hkv, item % hkv);
-            let (k_bufs, v_bufs) = seqs[bi];
+            let (k_tables, v_tables) = seqs[bi];
             for g in 0..group {
                 let hq = kv * group + g;
                 let q_proj = &qp.row(bi)[hq * r..(hq + 1) * r];
                 let acc = unsafe {
                     std::slice::from_raw_parts_mut(ctx_ptr.0.add(bi * h * rv + hq * rv), rv)
                 };
-                online_attn_into(q_proj, &k_bufs[kv], &v_bufs[kv], scale, acc);
+                online_attn_into(q_proj, pool, &k_tables[kv], &v_tables[kv], scale, acc);
             }
         }
     });
@@ -198,6 +222,66 @@ pub fn decode_attn_batch(
             }
         }
     });
+}
+
+/// `out = a · Tᵀ` where `T` is a paged cache stream, consumed page by page —
+/// the prefill score GEMM (`S = q̃·C_Kᵀ`) without densifying the cache
+/// first. Each output element is one dot product over `a`'s width, so the
+/// values are identical to the dense `Mat::matmul_nt_to` regardless of the
+/// page partition.
+pub fn matmul_nt_paged(a: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat) {
+    assert_eq!(a.cols(), table.width(), "paged matmul_nt width mismatch");
+    let (m, k) = (a.rows(), a.cols());
+    let n = table.len();
+    out.resize(m, n);
+    let mut col0 = 0usize;
+    for (chunk, rows) in table.chunks(pool) {
+        for i in 0..m {
+            let arow = a.row(i);
+            for j in 0..rows {
+                let brow = &chunk[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                out.data_mut()[i * n + col0 + j] = acc;
+            }
+        }
+        col0 += rows;
+    }
+    debug_assert_eq!(col0, n);
+}
+
+/// `out = p · T` where `T` is a paged cache stream — the prefill context
+/// GEMM (`ctx = P·C_V`) without densifying the cache first. Accumulates page
+/// row-blocks in ascending token order with the same ikj loop and zero-skip
+/// as `Mat::matmul_to`, so the results match the dense product bitwise (the
+/// zero-skip matters: causal masking makes exact 0.0 probabilities common).
+pub fn matmul_paged(p: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat) {
+    assert_eq!(p.cols(), table.len(), "paged matmul length mismatch");
+    let (m, w) = (p.rows(), table.width());
+    out.resize(m, w);
+    for i in 0..m {
+        let orow = out.row_mut(i);
+        orow.fill(0.0);
+    }
+    for i in 0..m {
+        let mut t0 = 0usize;
+        for (chunk, rows) in table.chunks(pool) {
+            for j in 0..rows {
+                let coef = p.row(i)[t0 + j];
+                if coef == 0.0 {
+                    continue;
+                }
+                let vrow = &chunk[j * w..(j + 1) * w];
+                let orow = &mut out.data_mut()[i * w..(i + 1) * w];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += coef * vv;
+                }
+            }
+            t0 += rows;
+        }
+    }
 }
 
 /// Causal masking + row softmax for the GEMM prefill path: row `i` of a
@@ -229,24 +313,25 @@ mod tests {
     use crate::util::prop::forall;
     use crate::util::rng::Pcg64;
 
-    fn fill_buf(rows: &Mat, page: usize) -> PagedBuf {
-        let mut b = PagedBuf::new(rows.cols(), page);
+    fn fill_buf(pool: &mut PagePool, rows: &Mat) -> BlockTable {
+        let mut t = BlockTable::new(rows.cols());
         for i in 0..rows.rows() {
-            b.push_row(rows.row(i));
+            pool.push_row(&mut t, rows.row(i));
         }
-        b
+        t
     }
 
     #[test]
     fn online_matches_dense() {
         let mut rng = Pcg64::new(1, 1);
         for (t, r, rv, page) in [(1, 4, 4, 8), (17, 8, 6, 4), (100, 16, 16, 16), (64, 2, 10, 64)] {
+            let mut pool = PagePool::new(page);
             let ck = Mat::randn(t, r, 1.0, &mut rng);
             let cv = Mat::randn(t, rv, 1.0, &mut rng);
             let q: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-            let kb = fill_buf(&ck, page);
-            let vb = fill_buf(&cv, page);
-            let fast = online_attn(&q, &kb, &vb, 0.3);
+            let kb = fill_buf(&mut pool, &ck);
+            let vb = fill_buf(&mut pool, &cv);
+            let fast = online_attn(&q, &pool, &kb, &vb, 0.3);
             let slow = dense_attn_reference(&q, &ck, &cv, 0.3);
             for (a, b) in fast.iter().zip(&slow) {
                 assert!((a - b).abs() < 1e-4, "t={t}: {a} vs {b}");
@@ -257,18 +342,24 @@ mod tests {
     #[test]
     fn online_is_stable_under_large_scores() {
         let mut rng = Pcg64::new(2, 1);
+        let mut pool = PagePool::new(8);
         let ck = Mat::randn(32, 4, 100.0, &mut rng);
         let cv = Mat::randn(32, 4, 1.0, &mut rng);
         let q: Vec<f32> = vec![50.0; 4];
-        let out = online_attn(&q, &fill_buf(&ck, 8), &fill_buf(&cv, 8), 1.0);
+        let kb = fill_buf(&mut pool, &ck);
+        let vb = fill_buf(&mut pool, &cv);
+        let out = online_attn(&q, &pool, &kb, &vb, 1.0);
         assert!(out.iter().all(|x| x.is_finite()));
     }
 
     #[test]
     fn single_row_returns_value() {
+        let mut pool = PagePool::new(4);
         let ck = Mat::from_rows(&[&[1.0, 2.0]]);
         let cv = Mat::from_rows(&[&[5.0, -3.0, 7.0]]);
-        let out = online_attn(&[0.5, 0.5], &fill_buf(&ck, 4), &fill_buf(&cv, 4), 1.0);
+        let kb = fill_buf(&mut pool, &ck);
+        let vb = fill_buf(&mut pool, &cv);
+        let out = online_attn(&[0.5, 0.5], &pool, &kb, &vb, 1.0);
         assert_eq!(out, vec![5.0, -3.0, 7.0]);
     }
 
@@ -277,6 +368,7 @@ mod tests {
         let mut rng = Pcg64::new(3, 1);
         let (h, group, d, r, rv, dm, t) = (4usize, 2usize, 8, 4, 6, 16, 30);
         let hkv = h / group;
+        let mut pool = PagePool::new(8);
         let q_heads: Vec<Vec<f32>> = (0..h)
             .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
             .collect();
@@ -284,15 +376,16 @@ mod tests {
         let folds: Vec<Mat> = (0..h).map(|_| Mat::randn(rv, dm, 1.0, &mut rng)).collect();
         let ck: Vec<Mat> = (0..hkv).map(|_| Mat::randn(t, r, 1.0, &mut rng)).collect();
         let cv: Vec<Mat> = (0..hkv).map(|_| Mat::randn(t, rv, 1.0, &mut rng)).collect();
-        let k_bufs: Vec<PagedBuf> = ck.iter().map(|m| fill_buf(m, 8)).collect();
-        let v_bufs: Vec<PagedBuf> = cv.iter().map(|m| fill_buf(m, 8)).collect();
+        let k_tables: Vec<BlockTable> = ck.iter().map(|m| fill_buf(&mut pool, m)).collect();
+        let v_tables: Vec<BlockTable> = cv.iter().map(|m| fill_buf(&mut pool, m)).collect();
 
         let out = decode_attn_layer(
             &q_heads,
             &bproj.iter().collect::<Vec<_>>(),
             &folds.iter().collect::<Vec<_>>(),
-            &k_bufs,
-            &v_bufs,
+            &pool,
+            &k_tables,
+            &v_tables,
             0.35,
             group,
             dm,
@@ -323,16 +416,23 @@ mod tests {
         let hkv = h / group;
         let b = 3usize;
         let lens = [1usize, 13, 40];
+        let mut pool = PagePool::new(8);
         let bproj: Vec<Mat> = (0..hkv).map(|_| Mat::randn(d, r, 1.0, &mut rng)).collect();
         let folds: Vec<Mat> = (0..h).map(|_| Mat::randn(rv, dm, 1.0, &mut rng)).collect();
-        let caches: Vec<(Vec<PagedBuf>, Vec<PagedBuf>)> = lens
+        let caches: Vec<(Vec<BlockTable>, Vec<BlockTable>)> = lens
             .iter()
             .map(|&t| {
-                let k: Vec<PagedBuf> = (0..hkv)
-                    .map(|_| fill_buf(&Mat::randn(t, r, 1.0, &mut rng), 8))
+                let k: Vec<BlockTable> = (0..hkv)
+                    .map(|_| {
+                        let m = Mat::randn(t, r, 1.0, &mut rng);
+                        fill_buf(&mut pool, &m)
+                    })
                     .collect();
-                let v: Vec<PagedBuf> = (0..hkv)
-                    .map(|_| fill_buf(&Mat::randn(t, rv, 1.0, &mut rng), 8))
+                let v: Vec<BlockTable> = (0..hkv)
+                    .map(|_| {
+                        let m = Mat::randn(t, rv, 1.0, &mut rng);
+                        fill_buf(&mut pool, &m)
+                    })
                     .collect();
                 (k, v)
             })
@@ -345,7 +445,7 @@ mod tests {
             })
             .collect();
 
-        // Batch inputs: projected queries, per-seq buffer refs.
+        // Batch inputs: projected queries, per-seq table refs.
         let mut qp = Mat::zeros(b, h * r);
         for bi in 0..b {
             for hq in 0..h {
@@ -353,20 +453,21 @@ mod tests {
                 qp.row_mut(bi)[hq * r..(hq + 1) * r].copy_from_slice(&qproj);
             }
         }
-        let seqs: Vec<(&[PagedBuf], &[PagedBuf])> = caches
+        let seqs: Vec<(&[BlockTable], &[BlockTable])> = caches
             .iter()
             .map(|(k, v)| (k.as_slice(), v.as_slice()))
             .collect();
         let fold_refs: Vec<&Mat> = folds.iter().collect();
         let mut ctx = Mat::zeros(0, 0);
         let mut out = Mat::zeros(0, 0);
-        decode_attn_batch(&qp, &seqs, &fold_refs, 0.35, group, r, rv, &mut ctx, &mut out);
+        decode_attn_batch(&qp, &pool, &seqs, &fold_refs, 0.35, group, r, rv, &mut ctx, &mut out);
 
         for bi in 0..b {
             let serial = decode_attn_layer(
                 &q_heads[bi],
                 &bproj.iter().collect::<Vec<_>>(),
                 &fold_refs,
+                &pool,
                 &caches[bi].0,
                 &caches[bi].1,
                 0.35,
@@ -394,6 +495,44 @@ mod tests {
         }
     }
 
+    /// Satellite: the paged GEMMs that replaced densify-then-GEMM on the
+    /// prefill path are bit-identical to the dense kernels across page
+    /// partitions (including exact-zero coefficients from causal masking).
+    #[test]
+    fn prop_paged_gemms_match_dense_bitwise() {
+        forall("paged GEMMs == dense GEMMs (bitwise)", 30, |g| {
+            let t = g.usize_in(1, 60);
+            let w = g.usize_in(1, 12);
+            let m = g.usize_in(1, 8);
+            let page = g.usize_in(1, 16);
+            let mut pool = PagePool::new(page);
+            let cache = Mat::from_vec(t, w, g.normal_vec(t * w, 1.0));
+            let table = fill_buf(&mut pool, &cache);
+
+            // S = A·Cᵀ
+            let a = Mat::from_vec(m, w, g.normal_vec(m * w, 1.0));
+            let mut paged = Mat::zeros(0, 0);
+            matmul_nt_paged(&a, &pool, &table, &mut paged);
+            let mut dense = Mat::zeros(0, 0);
+            a.matmul_nt_to(&cache, &mut dense);
+            assert_eq!(paged.data(), dense.data(), "matmul_nt_paged diverged");
+
+            // ctx = P·C with exact zeros sprinkled in (causal-mask shape).
+            let mut pm = Mat::from_vec(m, t, g.normal_vec(m * t, 1.0));
+            for i in 0..m {
+                let cut = g.usize_in(0, t);
+                for s in pm.row_mut(i)[cut..].iter_mut() {
+                    *s = 0.0;
+                }
+            }
+            let mut paged2 = Mat::zeros(0, 0);
+            matmul_paged(&pm, &pool, &table, &mut paged2);
+            let mut dense2 = Mat::zeros(0, 0);
+            pm.matmul_to(&cache, &mut dense2);
+            assert_eq!(paged2.data(), dense2.data(), "matmul_paged diverged");
+        });
+    }
+
     #[test]
     fn prop_online_equals_dense() {
         forall("online softmax == dense attention", 30, |g| {
@@ -401,11 +540,14 @@ mod tests {
             let r = g.usize_in(1, 12);
             let rv = g.usize_in(1, 12);
             let page = g.usize_in(1, 16);
+            let mut pool = PagePool::new(page);
             let ck = Mat::from_vec(t, r, g.normal_vec(t * r, 1.0));
             let cv = Mat::from_vec(t, rv, g.normal_vec(t * rv, 1.0));
             let q = g.normal_vec(r, 1.0);
             let scale = g.f64_in(0.05, 2.0) as f32;
-            let fast = online_attn(&q, &fill_buf(&ck, page), &fill_buf(&cv, page), scale);
+            let kb = fill_buf(&mut pool, &ck);
+            let vb = fill_buf(&mut pool, &cv);
+            let fast = online_attn(&q, &pool, &kb, &vb, scale);
             let slow = dense_attn_reference(&q, &ck, &cv, scale);
             for (a, b) in fast.iter().zip(&slow) {
                 assert!((a - b).abs() < 2e-4, "{a} vs {b}");

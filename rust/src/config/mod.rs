@@ -144,6 +144,11 @@ pub struct ServeConfig {
     pub prefill_token_budget: usize,
     /// KV-cache memory budget in bytes (compressed bytes are what count).
     pub cache_budget_bytes: u64,
+    /// Share page-aligned prompt-prefix pages across sequences (refcounted
+    /// pool + prefix trie): admissions map cached chunks instead of
+    /// re-prefilling them. Off by default; `kqsvd serve --prefix-cache`
+    /// turns it on.
+    pub prefix_cache: bool,
     /// Sequence-length buckets for AOT shape selection.
     pub buckets: Vec<usize>,
     /// "rust" (pure-rust attention) or "pjrt" (AOT artifacts via PJRT).
@@ -215,6 +220,7 @@ impl Default for ServeConfig {
             prefill_chunk: 256,
             prefill_token_budget: 0,
             cache_budget_bytes: 512 * 1024 * 1024,
+            prefix_cache: false,
             buckets: vec![128, 256, 512, 1024],
             backend: "rust".to_string(),
             workers: 1,
@@ -379,6 +385,7 @@ impl Config {
                     .set("prefill_chunk", s.prefill_chunk)
                     .set("prefill_token_budget", s.prefill_token_budget)
                     .set("cache_budget_bytes", s.cache_budget_bytes)
+                    .set("prefix_cache", s.prefix_cache)
                     .set("buckets", s.buckets.clone())
                     .set("backend", s.backend.as_str())
                     .set("workers", s.workers),
@@ -437,6 +444,7 @@ impl Config {
                     .get("cache_budget_bytes")
                     .and_then(Json::as_u64)
                     .unwrap_or(sd.cache_budget_bytes),
+                prefix_cache: sj.bool_or("prefix_cache", sd.prefix_cache),
                 buckets: sj
                     .get("buckets")
                     .and_then(Json::as_arr)
@@ -510,6 +518,10 @@ impl Config {
         if let Some(n) = args.get("prefill-budget").and_then(|s| s.parse().ok()) {
             self.serve.prefill_token_budget = n;
         }
+        if args.has("prefix-cache") {
+            // Bare `--prefix-cache` enables; `--prefix-cache 0` disables.
+            self.serve.prefix_cache = args.bool_or("prefix-cache", true);
+        }
         if let Some(n) = args.get("calib-seqs").and_then(|s| s.parse().ok()) {
             self.calib.n_calib_seqs = n;
         }
@@ -562,6 +574,7 @@ mod tests {
         cfg.method = Method::Eigen;
         cfg.calib.epsilon = 0.05;
         cfg.serve.buckets = vec![64, 128];
+        cfg.serve.prefix_cache = true;
         let j = cfg.to_json();
         let back = Config::from_json(&j).unwrap();
         assert_eq!(cfg, back);
@@ -591,9 +604,12 @@ mod tests {
     fn overrides_apply() {
         let mut cfg = Config::from_preset("test-tiny").unwrap();
         let args = crate::cli::Args::parse_from(
-            ["x", "--method", "eigen", "--paper-scale", "--seed", "7", "--epsilon", "0.05"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "x", "--method", "eigen", "--paper-scale", "--seed", "7", "--epsilon", "0.05",
+                "--prefix-cache",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         )
         .unwrap();
         cfg.apply_overrides(&args);
@@ -602,6 +618,13 @@ mod tests {
         assert_eq!(cfg.calib.calib_seq_len, 2048);
         assert_eq!(cfg.model.seed, 7);
         assert!((cfg.calib.epsilon - 0.05).abs() < 1e-12);
+        assert!(cfg.serve.prefix_cache, "bare --prefix-cache enables sharing");
+        let off = crate::cli::Args::parse_from(
+            ["x", "--prefix-cache", "0"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        cfg.apply_overrides(&off);
+        assert!(!cfg.serve.prefix_cache);
     }
 
     #[test]

@@ -8,6 +8,10 @@
 //!
 //! * priority admission (FIFO within a priority class); admission gated on
 //!   the engine's cache budget, never skipping past a blocked request;
+//! * **prefix-aware admission**: sequences are registered with their prompt
+//!   ([`Engine::alloc_with_prompt`]); a prefix-cache hit starts the prefill
+//!   plan past the cached tokens, and a full-prefix hit samples its first
+//!   token from the engine's memoized logits with zero prefill scheduled;
 //! * **preemption**: when a strictly higher-priority request is blocked on
 //!   budget, the lowest-priority running sequence is evicted (pages freed,
 //!   requeued to resume later by re-prefilling prompt + generated tokens),
@@ -55,6 +59,18 @@ pub struct FusedStep {
     pub decode_logits: Vec<Vec<f32>>,
 }
 
+/// Result of a prefix-aware sequence registration
+/// ([`Engine::alloc_with_prompt`]).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixHit {
+    /// Prompt tokens already present in the shared cache; the scheduler's
+    /// prefill plan starts at this offset.
+    pub cached_tokens: usize,
+    /// Last-position logits when the *entire* prompt was cached: the
+    /// scheduler samples the first token directly and runs zero prefill.
+    pub full_logits: Option<Vec<f32>>,
+}
+
 /// What the scheduler needs from an inference engine. Object-safe: the
 /// coordinator only ever sees `&mut dyn Engine`.
 pub trait Engine {
@@ -63,12 +79,34 @@ pub trait Engine {
     /// `id` (no sequence, no reservation): the scheduler keeps the request
     /// queued and will retry the same id.
     fn alloc(&mut self, id: SeqId, max_total_tokens: usize) -> anyhow::Result<()>;
+    /// Prefix-aware [`Engine::alloc`]: additionally match `prompt` against
+    /// the engine's prefix cache and map any cached prefix into the new
+    /// sequence, so the scheduler prefills only the uncached suffix. The
+    /// same no-residue contract applies on error. Engines without a prefix
+    /// cache inherit this default (plain alloc, no hit).
+    fn alloc_with_prompt(
+        &mut self,
+        id: SeqId,
+        prompt: &[u32],
+        max_total_tokens: usize,
+    ) -> anyhow::Result<PrefixHit> {
+        let _ = prompt;
+        self.alloc(id, max_total_tokens)?;
+        Ok(PrefixHit::default())
+    }
     /// Drop a sequence and release its cache (completion, cancellation, or
     /// preemption — a preempted sequence is later re-`alloc`ed under the
     /// same id).
     fn free(&mut self, id: SeqId);
     /// Would a sequence of `total_tokens` fit in the cache budget now?
     fn can_admit(&self, total_tokens: usize) -> bool;
+    /// Prompt-aware [`Engine::can_admit`]: a prefix-caching engine may admit
+    /// a request whose worst case wouldn't fit cold, because cached prompt
+    /// chunks are already paid for. Default ignores the prompt.
+    fn can_admit_request(&self, prompt: &[u32], total_tokens: usize) -> bool {
+        let _ = prompt;
+        self.can_admit(total_tokens)
+    }
     /// Would a sequence of `total_tokens` fit if the sequences in `freed`
     /// were evicted first? Lets the scheduler verify that preemption can
     /// actually unblock a blocked candidate *before* destroying any
@@ -77,6 +115,17 @@ pub trait Engine {
     fn can_admit_if_freed(&self, total_tokens: usize, freed: &[SeqId]) -> bool {
         let _ = freed;
         self.can_admit(total_tokens)
+    }
+    /// Prompt-aware [`Engine::can_admit_if_freed`] (preemption planning over
+    /// *incremental* bytes). Default ignores the prompt.
+    fn can_admit_request_if_freed(
+        &self,
+        prompt: &[u32],
+        total_tokens: usize,
+        freed: &[SeqId],
+    ) -> bool {
+        let _ = prompt;
+        self.can_admit_if_freed(total_tokens, freed)
     }
     /// Feed prompt tokens `[pos0, pos0+tokens.len())`; returns last-position
     /// logits when this chunk completes the prompt (pos0+len == prompt len).
@@ -130,6 +179,20 @@ pub trait Engine {
     /// reservations (0 when the engine doesn't track it).
     fn cache_peak_bytes(&self) -> u64 {
         0
+    }
+    /// Whether a prompt-prefix cache is active. Engines returning nonzero
+    /// [`PrefixHit::cached_tokens`] from [`Engine::alloc_with_prompt`] MUST
+    /// report `true` here; the scheduler records prefix hit/miss telemetry
+    /// only for enabled engines (otherwise every prompt would read as a
+    /// miss of a cache that doesn't exist).
+    fn prefix_cache_enabled(&self) -> bool {
+        false
+    }
+    /// Prefix-sharing telemetry: `(shared_pages, bytes_saved_by_sharing)`
+    /// right now ((0, 0) when the engine has no prefix cache). Recorded as
+    /// gauges by the router's pump.
+    fn prefix_cache_stats(&self) -> (u64, u64) {
+        (0, 0)
     }
     /// Engine-internal invariant check (e.g. cache byte accounting), run by
     /// the scheduler after every debug-build step so accounting drift fails
@@ -198,6 +261,12 @@ pub enum StepOutcome {
         decode_ready: usize,
         /// Running sequences evicted for higher-priority admissions.
         preemptions: usize,
+        /// Prompt tokens served from the shared prefix cache at admissions
+        /// this step (a full-prefix hit admits decode-ready with zero
+        /// prefill scheduled).
+        prefix_hit_tokens: usize,
+        /// Prompt tokens admissions this step must actually prefill.
+        prefix_miss_tokens: usize,
     },
     /// Nothing runnable (queue empty / all blocked on budget).
     Idle,
@@ -365,31 +434,47 @@ impl Batcher {
         victims
     }
 
-    /// Admit queued requests while budget and batch slots allow; returns the
-    /// number of preemptions performed. Highest priority first, FIFO within
-    /// a priority class; we never skip past the chosen candidate when it is
-    /// blocked on budget, so lower-priority or smaller requests cannot
-    /// starve it. When the blocked candidate strictly outranks running
-    /// work, the scheduler preempts — but only after planning: the smallest
-    /// victim prefix that actually unblocks the candidate
-    /// ([`Engine::can_admit_if_freed`]) is evicted (pages freed via
+    /// Highest-priority queued request, FIFO within a class.
+    fn select_candidate(&self) -> Option<usize> {
+        self.queue
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, s)| (s.req.params.priority, std::cmp::Reverse(*i)))
+            .map(|(i, _)| i)
+    }
+
+    /// Admit queued requests while budget and batch slots allow; returns
+    /// `(preemptions, prefix_hit_tokens, prefix_miss_tokens)`. Highest
+    /// priority first, FIFO within a priority class; we never skip past the
+    /// chosen candidate when it is blocked on budget, so lower-priority or
+    /// smaller requests cannot starve it. Admission is prompt-aware
+    /// ([`Engine::can_admit_request`] / [`Engine::alloc_with_prompt`]): a
+    /// prefix-cache hit starts the prefill plan past the cached tokens, and
+    /// a full-prefix hit samples its first token here from the memoized
+    /// boundary logits. When the blocked candidate strictly outranks
+    /// running work, the scheduler preempts — but only after planning: the
+    /// smallest victim prefix that actually unblocks the candidate
+    /// ([`Engine::can_admit_request_if_freed`]) is evicted (pages freed via
     /// [`Engine::free`]) and requeued at the front to resume later by
     /// re-prefilling prompt + generated tokens; if no prefix can unblock,
     /// nothing is evicted.
-    fn admit(&mut self, engine: &mut dyn Engine) -> anyhow::Result<usize> {
+    fn admit(&mut self, engine: &mut dyn Engine) -> anyhow::Result<(usize, usize, usize)> {
         let mut preemptions = 0usize;
+        let (mut hit_tokens, mut miss_tokens) = (0usize, 0usize);
+        // Hit/miss telemetry only means something when a prefix cache
+        // exists; engines returning hits must report enabled (trait
+        // contract), so gating the counters never drops a real hit.
+        let prefix_enabled = engine.prefix_cache_enabled();
         while self.running.len() < self.cfg.max_batch {
-            let Some(best) = self
-                .queue
-                .iter()
-                .enumerate()
-                .max_by_key(|(i, s)| (s.req.params.priority, std::cmp::Reverse(*i)))
-                .map(|(i, _)| i)
-            else {
+            let Some(best) = self.select_candidate() else {
                 break;
             };
             let need = self.queue[best].req.max_total_tokens().min(engine.max_seq());
-            if !engine.can_admit(need) {
+            let admissible = {
+                let src = self.queue[best].prefill_src();
+                engine.can_admit_request(src, need)
+            };
+            if !admissible {
                 // Plan eviction before destroying any progress: find the
                 // smallest prefix of eligible victims whose reclamation
                 // actually unblocks the candidate. If no prefix can (e.g.
@@ -398,16 +483,20 @@ impl Batcher {
                 // progress for zero admission gain.
                 let prio = self.queue[best].req.params.priority;
                 let mut planned: Vec<(usize, SeqId)> = Vec::new();
-                let mut planned_ids: Vec<SeqId> = Vec::new();
-                let mut unblocks = false;
-                for slot in self.eviction_candidates(prio) {
-                    planned.push((slot, self.running[slot].0));
-                    planned_ids.push(self.running[slot].0);
-                    if engine.can_admit_if_freed(need, &planned_ids) {
-                        unblocks = true;
-                        break;
+                let unblocks = {
+                    let src = self.queue[best].prefill_src();
+                    let mut planned_ids: Vec<SeqId> = Vec::new();
+                    let mut unblocks = false;
+                    for slot in self.eviction_candidates(prio) {
+                        planned.push((slot, self.running[slot].0));
+                        planned_ids.push(self.running[slot].0);
+                        if engine.can_admit_request_if_freed(src, need, &planned_ids) {
+                            unblocks = true;
+                            break;
+                        }
                     }
-                }
+                    unblocks
+                };
                 if !unblocks {
                     break; // cannot be unblocked; never skip past the candidate
                 }
@@ -422,10 +511,19 @@ impl Batcher {
                     preemptions += 1;
                     self.preempted_total += 1;
                 }
-                if !engine.can_admit(need) {
+                // Guard against spinning when the engine's plan was
+                // optimistic: re-select (requeues shifted indices) and stop
+                // if the candidate still can't be admitted.
+                let Some(best) = self.select_candidate() else { break };
+                let need = self.queue[best].req.max_total_tokens().min(engine.max_seq());
+                let still_blocked = {
+                    let src = self.queue[best].prefill_src();
+                    !engine.can_admit_request(src, need)
+                };
+                if still_blocked {
                     break; // engine predicted wrong; don't spin on eviction
                 }
-                continue; // requeues shifted indices: re-select the candidate
+                continue;
             }
             // Alloc while still enqueued: a failed alloc must never lose the
             // request (its stream would hang forever). It stays queued for
@@ -433,8 +531,12 @@ impl Batcher {
             // keeps failing.
             let first_admission = self.queue[best].assigned_id.is_none();
             let id = self.queue[best].assigned_id.unwrap_or(self.next_seq_id);
-            match engine.alloc(id, need) {
-                Ok(()) => {
+            let alloc_result = {
+                let src = self.queue[best].prefill_src();
+                engine.alloc_with_prompt(id, src, need)
+            };
+            match alloc_result {
+                Ok(hit) => {
                     let mut st = self.queue.remove(best).expect("index checked");
                     if first_admission {
                         self.next_seq_id += 1;
@@ -443,6 +545,23 @@ impl Batcher {
                     st.assigned_id = Some(id);
                     st.ran_steps = 0;
                     st.alloc_failures = 0;
+                    // Prefix hit: the prefill plan starts past the cached
+                    // tokens. On a full hit the first token is sampled from
+                    // the memoized boundary logits — zero prefill runs.
+                    let src_len = st.prefill_src().len();
+                    let cached = hit.cached_tokens.min(src_len);
+                    st.prefilled = cached;
+                    if prefix_enabled {
+                        hit_tokens += cached;
+                        miss_tokens += src_len - cached;
+                    }
+                    if cached == src_len {
+                        let logits = hit
+                            .full_logits
+                            .as_deref()
+                            .expect("full prefix hit must carry last-position logits");
+                        st.push_next_token(logits);
+                    }
                     self.running.push((id, st));
                 }
                 Err(e) => {
@@ -455,7 +574,7 @@ impl Batcher {
                 }
             }
         }
-        Ok(preemptions)
+        Ok((preemptions, hit_tokens, miss_tokens))
     }
 
     /// Run one fused scheduler step: cancellation sweep, admission (with
@@ -464,7 +583,16 @@ impl Batcher {
     /// decode latency no longer collapses while long prompts prefill.
     pub fn step(&mut self, engine: &mut dyn Engine) -> anyhow::Result<StepOutcome> {
         self.sweep_cancelled(engine);
-        let preemptions = self.admit(engine)?;
+        let (preemptions, prefix_hit_tokens, prefix_miss_tokens) = self.admit(engine)?;
+        if prefix_hit_tokens > 0 {
+            // A full-prefix hit samples its first token at admission, which
+            // may already satisfy the request (stop token, max_new_tokens of
+            // one): retire before planning so it never decodes past its
+            // bounds.
+            for slot in (0..self.running.len()).rev() {
+                self.finish_if_done(engine, slot);
+            }
+        }
 
         // Plan the prefill half: oldest running sequences first, each capped
         // at `prefill_chunk`, all capped by the per-step token budget.
@@ -501,14 +629,17 @@ impl Batcher {
 
         if plan.is_empty() && decode_slots.is_empty() {
             // Nothing runnable. (Preemptions without a subsequent admission
-            // can leave us here only when the engine's alloc failed.)
-            return Ok(if preemptions > 0 {
+            // can leave us here only when the engine's alloc failed; a
+            // full-prefix hit that finished at admission also lands here.)
+            return Ok(if preemptions > 0 || prefix_hit_tokens > 0 {
                 StepOutcome::Step {
                     prefill_seqs: 0,
                     prefill_tokens: 0,
                     decode_seqs: 0,
                     decode_ready: 0,
                     preemptions,
+                    prefix_hit_tokens,
+                    prefix_miss_tokens,
                 }
             } else {
                 StepOutcome::Idle
@@ -577,6 +708,8 @@ impl Batcher {
             decode_seqs: decode_batch.len(),
             decode_ready: decode_slots.len(),
             preemptions,
+            prefix_hit_tokens,
+            prefix_miss_tokens,
         })
     }
 
@@ -1235,6 +1368,149 @@ mod tests {
             let want: Vec<u64> = expect.iter().map(|&(id, _)| id).collect();
             assert_eq!(got, want, "priorities {meta:?}");
         });
+    }
+
+    /// MockEngine wrapper with a canned prefix cache: prompts starting with
+    /// `prefix` report it as cached; an exact-prefix prompt is a full hit
+    /// carrying logits.
+    struct PrefixMock {
+        inner: MockEngine,
+        prefix: Vec<u32>,
+    }
+
+    impl Engine for PrefixMock {
+        fn alloc(&mut self, id: SeqId, n: usize) -> anyhow::Result<()> {
+            self.inner.alloc(id, n)
+        }
+        fn alloc_with_prompt(
+            &mut self,
+            id: SeqId,
+            prompt: &[u32],
+            n: usize,
+        ) -> anyhow::Result<PrefixHit> {
+            self.inner.alloc(id, n)?;
+            if !prompt.starts_with(&self.prefix) {
+                return Ok(PrefixHit::default());
+            }
+            let cached = self.prefix.len();
+            // The mock's prefill side effect for the cached region.
+            *self.inner.used.get_mut(&id).unwrap() += cached;
+            let full_logits = (cached == prompt.len()).then(|| {
+                let mut l = vec![0.0f32; 16];
+                l[((id as usize * 7 + cached * 3) % 16).max(1)] = 1.0;
+                l
+            });
+            Ok(PrefixHit { cached_tokens: cached, full_logits })
+        }
+        fn free(&mut self, id: SeqId) {
+            self.inner.free(id)
+        }
+        fn can_admit(&self, n: usize) -> bool {
+            self.inner.can_admit(n)
+        }
+        fn prefill(
+            &mut self,
+            id: SeqId,
+            tokens: &[u32],
+            pos0: usize,
+            is_last: bool,
+        ) -> anyhow::Result<Option<Vec<f32>>> {
+            self.inner.prefill(id, tokens, pos0, is_last)
+        }
+        fn decode(&mut self, batch: &[(SeqId, u32)]) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.inner.decode(batch)
+        }
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq()
+        }
+        fn prefix_cache_enabled(&self) -> bool {
+            true
+        }
+    }
+
+    /// Tentpole: a partial prefix hit prefills only the uncached suffix
+    /// (positions start at the cached offset), and a full-prefix hit
+    /// schedules zero prefill tokens — the sequence decodes immediately.
+    #[test]
+    fn prefix_hits_skip_cached_prefill() {
+        let prefix: Vec<u32> = (0..8).collect();
+        let mut eng = PrefixMock {
+            inner: MockEngine::new(1000, 256),
+            prefix: prefix.clone(),
+        };
+        let mut b = Batcher::new(cfg(4, 64));
+        // Partial hit: prefix + 3-token suffix.
+        let mut prompt = prefix.clone();
+        prompt.extend([100, 101, 102]);
+        b.submit(&eng, Request::new(1, prompt, 2)).unwrap();
+        let out = b.step(&mut eng).unwrap();
+        assert!(
+            matches!(
+                out,
+                StepOutcome::Step {
+                    prefill_tokens: 3,
+                    prefix_hit_tokens: 8,
+                    prefix_miss_tokens: 3,
+                    ..
+                }
+            ),
+            "{out:?}"
+        );
+        // The engine saw one suffix-only chunk at the cached offset.
+        assert_eq!(eng.inner.prefill_calls, vec![(1, 8, 3)]);
+        b.run_to_completion(&mut eng).unwrap();
+
+        // Full hit: the exact prefix as the whole prompt → zero prefill,
+        // decode-ready at admission.
+        eng.inner.prefill_calls.clear();
+        b.submit(&eng, Request::new(2, prefix, 2)).unwrap();
+        let out = b.step(&mut eng).unwrap();
+        assert!(
+            matches!(
+                out,
+                StepOutcome::Step {
+                    prefill_tokens: 0,
+                    prefill_seqs: 0,
+                    prefix_hit_tokens: 8,
+                    prefix_miss_tokens: 0,
+                    decode_seqs: 1,
+                    ..
+                }
+            ),
+            "{out:?}"
+        );
+        let done = b.run_to_completion(&mut eng).unwrap();
+        assert!(eng.inner.prefill_calls.is_empty(), "full hit must never prefill");
+        assert_eq!(done[0].tokens.len(), 2);
+        assert!(b.idle());
+    }
+
+    /// A full-prefix hit whose first (admission-sampled) token already
+    /// satisfies the request retires immediately instead of decoding past
+    /// its bounds.
+    #[test]
+    fn full_prefix_hit_with_one_token_budget_retires_at_admission() {
+        let prefix: Vec<u32> = (0..8).collect();
+        let mut eng = PrefixMock {
+            inner: MockEngine::new(1000, 256),
+            prefix: prefix.clone(),
+        };
+        let mut b = Batcher::new(cfg(4, 64));
+        b.submit(&eng, Request::new(1, prefix, 1)).unwrap();
+        let out = b.step(&mut eng).unwrap();
+        assert!(
+            matches!(
+                out,
+                StepOutcome::Step { prefill_tokens: 0, decode_seqs: 0, prefix_hit_tokens: 8, .. }
+            ),
+            "{out:?}"
+        );
+        let done = b.take_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 1, "exactly the admission-sampled token");
+        assert_eq!(done[0].reason, FinishReason::Length);
+        assert!(b.idle());
+        assert_eq!(eng.inner.freed, vec![1]);
     }
 
     #[test]

@@ -44,6 +44,17 @@ pub mod names {
     /// Summary: prompt tokens prefilled per fused step (utilization of the
     /// per-step prefill token budget).
     pub const PREFILL_TOKENS_PER_STEP: &str = "prefill_tokens_per_step";
+    /// Counter: prompt tokens served from the shared prefix cache at
+    /// admission (mapped shared pages instead of prefilling).
+    pub const PREFIX_CACHE_HIT_TOKENS: &str = "prefix_cache_hit_tokens";
+    /// Counter: prompt tokens admissions actually had to prefill (the
+    /// prefix-cache miss side of the hit-rate ratio).
+    pub const PREFIX_CACHE_MISS_TOKENS: &str = "prefix_cache_miss_tokens";
+    /// Gauge: pool pages currently mapped by more than one sequence.
+    pub const SHARED_PAGES: &str = "shared_pages";
+    /// Gauge: bytes the current residency would additionally cost without
+    /// page sharing (Σ (refs−1)·page_bytes).
+    pub const BYTES_SAVED_BY_SHARING: &str = "bytes_saved_by_sharing";
 }
 
 /// Registry of named summaries + counters + gauges.
@@ -203,6 +214,10 @@ mod tests {
             names::DECODE_STALL_STEPS,
             names::MIXED_STEPS,
             names::PREFILL_TOKENS_PER_STEP,
+            names::PREFIX_CACHE_HIT_TOKENS,
+            names::PREFIX_CACHE_MISS_TOKENS,
+            names::SHARED_PAGES,
+            names::BYTES_SAVED_BY_SHARING,
         ];
         let mut uniq = all.to_vec();
         uniq.sort_unstable();

@@ -21,7 +21,7 @@ pub mod metrics;
 pub mod request;
 pub mod session;
 
-pub use batcher::{Batcher, BatcherConfig, Engine, FusedStep, PrefillChunk, StepOutcome};
+pub use batcher::{Batcher, BatcherConfig, Engine, FusedStep, PrefillChunk, PrefixHit, StepOutcome};
 pub use metrics::MetricsRegistry;
 pub use request::{
     CancelToken, Completion, FinishReason, GenParams, Request, SubmitError, TokenEvent,
@@ -108,6 +108,8 @@ impl Router {
                 decode_seqs,
                 decode_ready,
                 preemptions,
+                prefix_hit_tokens,
+                prefix_miss_tokens,
                 ..
             } => {
                 let (pt, ds) = (*prefill_tokens, *decode_seqs);
@@ -134,6 +136,18 @@ impl Router {
                     self.metrics
                         .incr(metrics::names::PREEMPTIONS, *preemptions as u64);
                 }
+                if *prefix_hit_tokens > 0 {
+                    self.metrics.incr(
+                        metrics::names::PREFIX_CACHE_HIT_TOKENS,
+                        *prefix_hit_tokens as u64,
+                    );
+                }
+                if *prefix_miss_tokens > 0 {
+                    self.metrics.incr(
+                        metrics::names::PREFIX_CACHE_MISS_TOKENS,
+                        *prefix_miss_tokens as u64,
+                    );
+                }
                 // Fused steps carry both phases: attribute engine time to
                 // each phase proportionally to the tokens it processed.
                 let total = (pt + ds) as f64;
@@ -150,6 +164,11 @@ impl Router {
             .gauge("running_seqs", self.batcher.running() as f64);
         self.metrics
             .gauge("cache_used_bytes", engine.cache_used_bytes() as f64);
+        let (shared_pages, bytes_saved) = engine.prefix_cache_stats();
+        self.metrics
+            .gauge(metrics::names::SHARED_PAGES, shared_pages as f64);
+        self.metrics
+            .gauge(metrics::names::BYTES_SAVED_BY_SHARING, bytes_saved as f64);
         let done = self.batcher.take_completions();
         for c in &done {
             self.metrics.incr("tokens_out", c.tokens.len() as u64);
@@ -231,6 +250,8 @@ impl Router {
             metrics::names::PREEMPTIONS,
             metrics::names::DECODE_STALL_STEPS,
             metrics::names::MIXED_STEPS,
+            metrics::names::PREFIX_CACHE_HIT_TOKENS,
+            metrics::names::PREFIX_CACHE_MISS_TOKENS,
         ] {
             metrics.incr(name, 0);
         }

@@ -1,34 +1,334 @@
-//! Compressed paged KV-cache manager.
+//! Shared-page compressed KV cache: a global refcounted page pool,
+//! per-sequence block tables, and copy-on-write prefix sharing.
 //!
 //! This is where the paper's method meets the serving stack: instead of
 //! storing per-token key/value rows of width `d`, the cache stores
 //! *projected* rows `k·A ∈ R^{R}` and `v·A_v ∈ R^{R_v}` (paper §3.3: "store
 //! only the compressed caches K V̂ and V V̂"), cutting cache bytes by
-//! `(R+R_v)/2d` per layer.
+//! `(R+R_v)/2d` per layer. Because the stored latents are a pure function of
+//! the token prefix, identical prompt prefixes produce *bit-identical* pages
+//! — so deduplicating them across sequences multiplies the paper's
+//! compression win by the fleet's prefix-sharing factor.
 //!
-//! Layout: per sequence × layer × KV head, a [`PagedBuf`] — fixed-capacity
-//! pages of `page_tokens` rows, allocated lazily as the sequence grows. Pages
-//! avoid both per-token allocation and large realloc copies, and make memory
-//! accounting exact: `used_bytes` is the sum of allocated pages, checked
-//! against a budget for admission control (backpressure to the coordinator).
+//! Layout: all pages live in one [`PagePool`]; a sequence holds, per layer ×
+//! KV head, a [`BlockTable`] of page ids for its K and V streams. Pages are
+//! fixed-capacity (`page_tokens` rows of one stream's width), refcounted,
+//! and immutable once another sequence maps them: a partially-filled tail
+//! page that is shared (or owned by the prefix trie) is copied to a fresh
+//! private page on the first divergent append (copy-on-write). Memory
+//! accounting is exact and global: a page's bytes are charged to
+//! `used_bytes` once, no matter how many sequences map it.
+//!
+//! Prefix caching: when enabled, completed page-aligned prompt chunks are
+//! registered in a trie keyed by their token ids. A new sequence's prompt is
+//! matched against the trie at admission ([`KvCacheManager::map_prefix`]);
+//! matched chunks are mapped directly into its block tables so the scheduler
+//! prefills only the uncached suffix. Trie nodes also memoize the
+//! last-position logits at their chunk boundary, so a *full*-prefix hit
+//! costs zero prefill tokens — the first token is sampled from the cached
+//! logits. Pages whose last sequence reference drops become **cold** (still
+//! cached, reclaimable); admission treats cold bytes as available and
+//! [`KvCacheManager::evict_cold`] releases least-recently-used unreferenced
+//! chunks under budget pressure.
 
 use std::collections::HashMap;
 
-/// Append-only paged row buffer (one head's K or V stream).
-#[derive(Debug, Clone)]
-pub struct PagedBuf {
+/// Unique sequence id (assigned by the router).
+pub type SeqId = u64;
+
+/// Index of a page inside the global [`PagePool`].
+pub type PageId = u32;
+
+/// One fixed-capacity page: `page_rows` rows of one stream's width.
+struct PageSlot {
+    data: Vec<f32>,
     width: usize,
+    /// Number of sequence block tables mapping this page.
+    refs: u32,
+    /// Whether the prefix trie holds a claim on this page (keeps it alive —
+    /// possibly *cold*, with `refs == 0` — until evicted).
+    cached: bool,
+}
+
+/// Global refcounted page store shared by every sequence.
+///
+/// All counters (`live_pages`, `used_bytes`, `cold_bytes`, `shared_pages`,
+/// `bytes_saved_by_sharing`) are maintained incrementally on every page
+/// transition, so per-step telemetry never walks the pool
+/// (property-checked against full recomputation by
+/// [`KvCacheManager::verify_accounting`]).
+pub struct PagePool {
     page_rows: usize,
-    pages: Vec<Vec<f32>>,
+    slots: Vec<Option<PageSlot>>,
+    free: Vec<PageId>,
+    live_pages: usize,
+    used_bytes: u64,
+    /// Bytes of cached pages with no sequence references (reclaimable).
+    cold_bytes: u64,
+    /// Pages currently mapped by more than one sequence.
+    shared_pages: usize,
+    /// Σ over pages of `(refs − 1) · bytes` — what the same residency would
+    /// cost without sharing, minus what it actually costs.
+    bytes_saved: u64,
+}
+
+impl PagePool {
+    pub fn new(page_rows: usize) -> PagePool {
+        assert!(page_rows > 0);
+        PagePool {
+            page_rows,
+            slots: Vec::new(),
+            free: Vec::new(),
+            live_pages: 0,
+            used_bytes: 0,
+            cold_bytes: 0,
+            shared_pages: 0,
+            bytes_saved: 0,
+        }
+    }
+
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    pub fn live_pages(&self) -> usize {
+        self.live_pages
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn cold_bytes(&self) -> u64 {
+        self.cold_bytes
+    }
+
+    pub fn shared_pages(&self) -> usize {
+        self.shared_pages
+    }
+
+    pub fn bytes_saved_by_sharing(&self) -> u64 {
+        self.bytes_saved
+    }
+
+    fn page_bytes(&self, width: usize) -> u64 {
+        (self.page_rows * width * 4) as u64
+    }
+
+    fn slot(&self, id: PageId) -> &PageSlot {
+        self.slots[id as usize].as_ref().expect("dangling page id")
+    }
+
+    fn slot_mut(&mut self, id: PageId) -> &mut PageSlot {
+        self.slots[id as usize].as_mut().expect("dangling page id")
+    }
+
+    /// Raw page data (full capacity; callers slice by row count).
+    pub fn page(&self, id: PageId) -> &[f32] {
+        &self.slot(id).data
+    }
+
+    pub(crate) fn page_refs(&self, id: PageId) -> u32 {
+        self.slot(id).refs
+    }
+
+    /// Bytes `free`ing a sole reference would physically release (0 when the
+    /// page is shared or survives as a cold cached page).
+    fn freeable_bytes(&self, id: PageId) -> u64 {
+        let s = self.slot(id);
+        if s.refs == 1 && !s.cached {
+            self.page_bytes(s.width)
+        } else {
+            0
+        }
+    }
+
+    /// Bytes this page stops committing once its sole mapper frees it
+    /// (released outright *or* turned cold — both count as available).
+    fn solely_referenced_bytes(&self, id: PageId) -> u64 {
+        let s = self.slot(id);
+        if s.refs == 1 {
+            self.page_bytes(s.width)
+        } else {
+            0
+        }
+    }
+
+    fn alloc_page(&mut self, width: usize) -> PageId {
+        self.live_pages += 1;
+        self.used_bytes += self.page_bytes(width);
+        let slot = PageSlot {
+            data: vec![0.0; self.page_rows * width],
+            width,
+            refs: 1,
+            cached: false,
+        };
+        match self.free.pop() {
+            Some(id) => {
+                self.slots[id as usize] = Some(slot);
+                id
+            }
+            None => {
+                self.slots.push(Some(slot));
+                (self.slots.len() - 1) as PageId
+            }
+        }
+    }
+
+    /// Add one sequence reference (mapping a shared/cached page).
+    pub(crate) fn ref_page(&mut self, id: PageId) {
+        let b = self.page_bytes(self.slot(id).width);
+        let s = self.slots[id as usize].as_mut().unwrap();
+        s.refs += 1;
+        if s.refs == 1 {
+            // Warmed a cold cached page: its bytes are committed again.
+            self.cold_bytes -= b;
+        } else {
+            self.bytes_saved += b;
+            if s.refs == 2 {
+                self.shared_pages += 1;
+            }
+        }
+    }
+
+    /// Drop one sequence reference. Returns bytes physically released (0
+    /// when other references remain or the trie keeps the page cold).
+    pub(crate) fn deref_page(&mut self, id: PageId) -> u64 {
+        let b = self.page_bytes(self.slot(id).width);
+        let s = self.slots[id as usize].as_mut().unwrap();
+        debug_assert!(s.refs > 0, "deref of unreferenced page");
+        if s.refs >= 2 {
+            self.bytes_saved -= b;
+            if s.refs == 2 {
+                self.shared_pages -= 1;
+            }
+        }
+        s.refs -= 1;
+        if s.refs > 0 {
+            return 0;
+        }
+        if s.cached {
+            self.cold_bytes += b;
+            return 0;
+        }
+        self.release(id, b)
+    }
+
+    fn release(&mut self, id: PageId, bytes: u64) -> u64 {
+        self.slots[id as usize] = None;
+        self.free.push(id);
+        self.live_pages -= 1;
+        self.used_bytes -= bytes;
+        bytes
+    }
+
+    /// Record the prefix trie's claim on a page.
+    pub(crate) fn mark_cached(&mut self, id: PageId) {
+        self.slot_mut(id).cached = true;
+    }
+
+    /// Drop the trie's claim; releases the page when no sequence maps it.
+    /// Returns bytes physically released.
+    pub(crate) fn uncache_page(&mut self, id: PageId) -> u64 {
+        let b = self.page_bytes(self.slot(id).width);
+        let s = self.slots[id as usize].as_mut().unwrap();
+        debug_assert!(s.cached, "uncache of non-cached page");
+        s.cached = false;
+        if s.refs == 0 {
+            self.cold_bytes -= b;
+            self.release(id, b)
+        } else {
+            0
+        }
+    }
+
+    /// May a sequence write new rows into this page in place? Shared or
+    /// trie-cached pages are immutable — divergent appends copy first.
+    fn writable(&self, id: PageId) -> bool {
+        let s = self.slot(id);
+        s.refs == 1 && !s.cached
+    }
+
+    /// Bytes a copy-on-write of `table`'s tail would newly allocate (0 when
+    /// the tail is writable in place). COW replaces a page id rather than
+    /// adding one, so these bytes are *charged* (`used_bytes`) but do not
+    /// grow the table's mapping.
+    pub fn cow_cost(&self, table: &BlockTable) -> usize {
+        let cow = table.len % self.page_rows != 0
+            && !self.writable(*table.pages.last().expect("partial tail implies a page"));
+        cow as usize * self.page_rows * table.width * 4
+    }
+
+    /// Bytes that appending `n` rows to `table` would newly allocate
+    /// (page-granular, including a copy-on-write of a non-writable tail).
+    pub fn next_rows_cost(&self, table: &BlockTable, n: usize) -> usize {
+        let cap = table.pages.len() * self.page_rows;
+        let need = table.len + n;
+        let grow = if need > cap {
+            (need - cap).div_ceil(self.page_rows)
+        } else {
+            0
+        };
+        grow * self.page_rows * table.width * 4 + self.cow_cost(table)
+    }
+
+    /// Append one row. Returns bytes newly allocated.
+    pub fn push_row(&mut self, table: &mut BlockTable, row: &[f32]) -> usize {
+        self.push_rows(table, row, 1)
+    }
+
+    /// Append `n_rows` rows from a contiguous row-major buffer (the chunked
+    /// prefill path appends a whole chunk per layer in one call). Returns
+    /// bytes newly allocated; copy-on-writes a shared tail page first.
+    pub fn push_rows(&mut self, table: &mut BlockTable, data: &[f32], n_rows: usize) -> usize {
+        assert_eq!(data.len(), n_rows * table.width, "chunk size mismatch");
+        let w = table.width;
+        let mut actual = 0usize;
+        // Copy-on-write: a partially-filled tail page that is shared or
+        // trie-cached must never be written; move its filled rows to a
+        // fresh private page before the first divergent append.
+        if table.len % self.page_rows != 0 {
+            let tail = *table.pages.last().unwrap();
+            if !self.writable(tail) {
+                let filled = table.len - (table.pages.len() - 1) * self.page_rows;
+                let fresh = self.alloc_page(w);
+                actual += self.page_bytes(w) as usize;
+                let src: Vec<f32> = self.page(tail)[..filled * w].to_vec();
+                self.slot_mut(fresh).data[..src.len()].copy_from_slice(&src);
+                self.deref_page(tail);
+                *table.pages.last_mut().unwrap() = fresh;
+            }
+        }
+        for i in 0..n_rows {
+            if table.len == table.pages.len() * self.page_rows {
+                let id = self.alloc_page(w);
+                actual += self.page_bytes(w) as usize;
+                table.pages.push(id);
+            }
+            let page = *table.pages.last().unwrap();
+            let slot_i = table.len % self.page_rows;
+            self.slot_mut(page).data[slot_i * w..(slot_i + 1) * w]
+                .copy_from_slice(&data[i * w..(i + 1) * w]);
+            table.len += 1;
+        }
+        actual
+    }
+}
+
+/// One stream's (a head's K or V) view into the pool: an ordered list of
+/// page ids plus a row count. Replaces the old per-sequence owned `PagedBuf`.
+#[derive(Debug, Clone)]
+pub struct BlockTable {
+    width: usize,
+    pages: Vec<PageId>,
     len: usize,
 }
 
-impl PagedBuf {
-    pub fn new(width: usize, page_rows: usize) -> PagedBuf {
-        assert!(width > 0 && page_rows > 0);
-        PagedBuf {
+impl BlockTable {
+    pub fn new(width: usize) -> BlockTable {
+        assert!(width > 0);
+        BlockTable {
             width,
-            page_rows,
             pages: Vec::new(),
             len: 0,
         }
@@ -46,114 +346,45 @@ impl PagedBuf {
         self.width
     }
 
-    /// Number of pages currently allocated.
+    /// Number of pages currently mapped.
     pub fn n_pages(&self) -> usize {
         self.pages.len()
     }
 
-    /// Bytes currently allocated (full pages).
-    pub fn allocated_bytes(&self) -> usize {
-        self.pages.len() * self.page_rows * self.width * 4
+    pub fn page_ids(&self) -> &[PageId] {
+        &self.pages
     }
 
-    /// Bytes a new row would add (0 if the current page has room).
-    fn next_row_cost(&self) -> usize {
-        self.next_rows_cost(1)
-    }
-
-    /// Bytes that appending `n` rows would newly allocate (page-granular).
-    fn next_rows_cost(&self, n: usize) -> usize {
-        let capacity = self.pages.len() * self.page_rows;
-        let need = self.len + n;
-        if need <= capacity {
-            0
-        } else {
-            (need - capacity).div_ceil(self.page_rows) * self.page_rows * self.width * 4
-        }
-    }
-
-    /// Append one row. Returns bytes newly allocated.
-    pub fn push_row(&mut self, row: &[f32]) -> usize {
-        assert_eq!(row.len(), self.width, "row width mismatch");
-        let cost = self.next_row_cost();
-        if cost > 0 {
-            self.pages.push(vec![0.0; self.page_rows * self.width]);
-        }
-        let page = self.len / self.page_rows;
-        let slot = self.len % self.page_rows;
-        self.pages[page][slot * self.width..(slot + 1) * self.width].copy_from_slice(row);
-        self.len += 1;
-        cost
-    }
-
-    /// Append `n_rows` rows from a contiguous row-major buffer (the chunked-
-    /// prefill path appends a whole chunk per layer in one call). Returns
-    /// bytes newly allocated; copies page-by-page.
-    pub fn push_rows(&mut self, data: &[f32], n_rows: usize) -> usize {
-        assert_eq!(data.len(), n_rows * self.width, "chunk size mismatch");
-        let mut total = 0;
-        for i in 0..n_rows {
-            total += self.push_row(&data[i * self.width..(i + 1) * self.width]);
-        }
-        total
+    /// Bytes of the pages this table maps (shared pages counted fully —
+    /// this is the *mapping*, not the charge).
+    pub fn mapped_bytes(&self, pool: &PagePool) -> usize {
+        self.pages.len() * pool.page_rows * self.width * 4
     }
 
     /// Row `i` as a slice.
-    pub fn row(&self, i: usize) -> &[f32] {
+    pub fn row<'a>(&self, pool: &'a PagePool, i: usize) -> &'a [f32] {
         assert!(i < self.len, "row {i} out of {}", self.len);
-        let page = i / self.page_rows;
-        let slot = i % self.page_rows;
-        &self.pages[page][slot * self.width..(slot + 1) * self.width]
+        let page = self.pages[i / pool.page_rows];
+        let slot = i % pool.page_rows;
+        &pool.page(page)[slot * self.width..(slot + 1) * self.width]
     }
 
     /// Iterate over contiguous filled chunks `(rows_slice, n_rows)` — lets
     /// attention kernels stream page-by-page without a gather copy.
-    pub fn chunks(&self) -> impl Iterator<Item = (&[f32], usize)> {
-        let full_pages = self.len / self.page_rows;
-        let rem = self.len % self.page_rows;
+    pub fn chunks<'a>(&'a self, pool: &'a PagePool) -> impl Iterator<Item = (&'a [f32], usize)> {
+        let page_rows = pool.page_rows;
+        let full = self.len / page_rows;
+        let rem = self.len % page_rows;
         let width = self.width;
-        let page_rows = self.page_rows;
-        self.pages.iter().enumerate().filter_map(move |(pi, p)| {
-            if pi < full_pages {
-                Some((&p[..page_rows * width], page_rows))
-            } else if pi == full_pages && rem > 0 {
-                Some((&p[..rem * width], rem))
+        self.pages.iter().enumerate().filter_map(move |(pi, &id)| {
+            if pi < full {
+                Some((&pool.page(id)[..page_rows * width], page_rows))
+            } else if pi == full && rem > 0 {
+                Some((&pool.page(id)[..rem * width], rem))
             } else {
                 None
             }
         })
-    }
-
-    /// Copy out as a dense `len×width` matrix (used by AOT marshalling).
-    pub fn to_mat(&self) -> crate::linalg::Mat {
-        let mut out = crate::linalg::Mat::zeros(0, 0);
-        self.copy_into(&mut out);
-        out
-    }
-
-    /// Densify into a reusable `len×width` buffer (resized in place) — the
-    /// allocation-free [`PagedBuf::to_mat`] for scratch-arena callers like
-    /// the GEMM prefill path.
-    pub fn copy_into(&self, out: &mut crate::linalg::Mat) {
-        out.resize(self.len, self.width);
-        let mut off = 0;
-        let data = out.data_mut();
-        for (chunk, _rows) in self.chunks() {
-            data[off..off + chunk.len()].copy_from_slice(chunk);
-            off += chunk.len();
-        }
-        debug_assert_eq!(off, self.len * self.width);
-    }
-
-    /// Copy out, zero-padded to `rows` (AOT shape buckets need fixed shapes).
-    pub fn to_mat_padded(&self, rows: usize) -> crate::linalg::Mat {
-        assert!(rows >= self.len);
-        let mut data = Vec::with_capacity(rows * self.width);
-        for (chunk, _r) in self.chunks() {
-            data.extend_from_slice(chunk);
-        }
-        data.resize(rows * self.width, 0.0);
-        crate::linalg::Mat::from_vec(rows, self.width, data)
     }
 }
 
@@ -184,17 +415,28 @@ impl CacheSpec {
     }
 }
 
-/// One sequence's caches: `[layer][kv_head]` K and V paged buffers.
+/// One sequence's cache: `[layer][kv_head]` K and V block tables into the
+/// shared pool, plus its prefix-trie cursor.
 #[derive(Debug)]
 pub struct SeqCache {
-    pub k: Vec<Vec<PagedBuf>>,
-    pub v: Vec<Vec<PagedBuf>>,
+    pub k: Vec<Vec<BlockTable>>,
+    pub v: Vec<Vec<BlockTable>>,
     tokens: usize,
-    /// Page bytes allocated across all buffers, maintained incrementally on
-    /// every append so per-token bookkeeping never rescans the buffers
-    /// (checked against [`SeqCache::recompute_allocated_bytes`] by
-    /// [`KvCacheManager::verify_accounting`]).
-    alloc_bytes: usize,
+    /// Bytes of pages this sequence maps (shared pages counted fully) —
+    /// the denominator its reservation is consumed against. Maintained
+    /// incrementally; checked by [`KvCacheManager::verify_accounting`].
+    mapped_bytes: usize,
+    /// Prefix-trie node the last consumed page-aligned chunk ended on
+    /// (0 = root), plus the node's generation at the time — the cursor is
+    /// ignored (a miss) if the node has since been evicted.
+    trie_node: usize,
+    trie_gen: u64,
+    /// Page-aligned chunks consumed so far (mapped at admission or
+    /// registered during prefill) — index of the next chunk's pages in the
+    /// block tables.
+    next_chunk: usize,
+    /// Prompt tokens of the currently-filling chunk (registration buffer).
+    chunk_buf: Vec<u32>,
 }
 
 impl SeqCache {
@@ -204,7 +446,7 @@ impl SeqCache {
             .iter()
             .map(|g| {
                 (0..spec.n_kv_heads)
-                    .map(|_| PagedBuf::new(g.k_width, spec.page_tokens))
+                    .map(|_| BlockTable::new(g.k_width))
                     .collect()
             })
             .collect();
@@ -213,7 +455,7 @@ impl SeqCache {
             .iter()
             .map(|g| {
                 (0..spec.n_kv_heads)
-                    .map(|_| PagedBuf::new(g.v_width, spec.page_tokens))
+                    .map(|_| BlockTable::new(g.v_width))
                     .collect()
             })
             .collect();
@@ -221,7 +463,11 @@ impl SeqCache {
             k,
             v,
             tokens: 0,
-            alloc_bytes: 0,
+            mapped_bytes: 0,
+            trie_node: TRIE_ROOT,
+            trie_gen: 0,
+            next_chunk: 0,
+            chunk_buf: Vec::new(),
         }
     }
 
@@ -229,23 +475,162 @@ impl SeqCache {
         self.tokens
     }
 
-    fn allocated_bytes(&self) -> usize {
-        self.alloc_bytes
+    fn tables(&self) -> impl Iterator<Item = &BlockTable> {
+        self.k.iter().flatten().chain(self.v.iter().flatten())
     }
 
     /// O(layers × heads) recomputation of the incremental counter.
-    fn recompute_allocated_bytes(&self) -> usize {
-        self.k
-            .iter()
-            .flatten()
-            .chain(self.v.iter().flatten())
-            .map(|b| b.allocated_bytes())
-            .sum()
+    fn recompute_mapped_bytes(&self, pool: &PagePool) -> usize {
+        self.tables().map(|t| t.mapped_bytes(pool)).sum()
     }
 }
 
-/// Unique sequence id (assigned by the router).
-pub type SeqId = u64;
+// ---------------------------------------------------------------------------
+// Prefix trie
+// ---------------------------------------------------------------------------
+
+const TRIE_ROOT: usize = 0;
+
+/// Sentinel cursor: registration stopped (hash collision); the sequence's
+/// remaining chunks are not registered — a miss, never a wrong hit.
+const TRIE_DEAD: usize = usize::MAX;
+
+fn chunk_hash(tokens: &[u32]) -> u64 {
+    // FNV-1a over the token bytes; children are verified by exact token
+    // comparison, so a collision can only cost a cache miss, never a wrong
+    // hit.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One cached page-aligned chunk: the node at depth `d` covers prompt tokens
+/// `[(d-1)·page_tokens, d·page_tokens)` of every prefix reaching it.
+struct TrieNode {
+    parent: usize,
+    tokens: Vec<u32>,
+    children: HashMap<u64, usize>,
+    /// `[layer][kv_head]` page per stream for this chunk (always full pages).
+    k_pages: Vec<Vec<PageId>>,
+    v_pages: Vec<Vec<PageId>>,
+    /// Last-position logits at this chunk boundary, when a prefill ended
+    /// exactly here — enables zero-prefill full-prefix hits. A pure function
+    /// of the token prefix this node spells, so replaying it is bit-exact.
+    logits: Option<Vec<f32>>,
+    /// LRU stamp for cold eviction.
+    last_used: u64,
+}
+
+struct PrefixTrie {
+    nodes: Vec<Option<TrieNode>>,
+    /// Per-slot generation, bumped on eviction so a sequence's registration
+    /// cursor (node id + generation) can detect that its node was evicted
+    /// and recycled — the cursor then reads as dead (a miss), never as a
+    /// different chunk. This keeps cold chunks evictable at any time: no
+    /// pinning, so admission's "cold bytes are reclaimable" arithmetic is
+    /// always physically honest.
+    gens: Vec<u64>,
+    free: Vec<usize>,
+}
+
+impl PrefixTrie {
+    fn new() -> PrefixTrie {
+        PrefixTrie {
+            nodes: vec![Some(TrieNode {
+                parent: TRIE_ROOT,
+                tokens: Vec::new(),
+                children: HashMap::new(),
+                k_pages: Vec::new(),
+                v_pages: Vec::new(),
+                logits: None,
+                last_used: 0,
+            })],
+            gens: vec![0],
+            free: Vec::new(),
+        }
+    }
+
+    fn node(&self, id: usize) -> &TrieNode {
+        self.nodes[id].as_ref().expect("dangling trie node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut TrieNode {
+        self.nodes[id].as_mut().expect("dangling trie node")
+    }
+
+    /// Child of `node` spelling exactly `chunk`, if cached.
+    fn child(&self, node: usize, chunk: &[u32]) -> Option<usize> {
+        let &c = self.node(node).children.get(&chunk_hash(chunk))?;
+        (self.node(c).tokens == chunk).then_some(c)
+    }
+
+    fn insert(
+        &mut self,
+        parent: usize,
+        tokens: Vec<u32>,
+        k_pages: Vec<Vec<PageId>>,
+        v_pages: Vec<Vec<PageId>>,
+        stamp: u64,
+    ) -> usize {
+        let h = chunk_hash(&tokens);
+        let node = TrieNode {
+            parent,
+            tokens,
+            children: HashMap::new(),
+            k_pages,
+            v_pages,
+            logits: None,
+            last_used: stamp,
+        };
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(node);
+                i
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.gens.push(0);
+                self.nodes.len() - 1
+            }
+        };
+        let h_entry = self.node_mut(parent).children.insert(h, id);
+        debug_assert!(h_entry.is_none(), "hash collision on insert is a miss, not a replace");
+        id
+    }
+
+    /// Current generation of a node slot (for cursor validation).
+    fn gen(&self, node: usize) -> u64 {
+        self.gens[node]
+    }
+
+    /// Is `(node, gen)` still the cursor's node? Root is eternal; the dead
+    /// sentinel and evicted/recycled slots are not.
+    fn cursor_valid(&self, node: usize, gen: u64) -> bool {
+        node == TRIE_ROOT
+            || (node != TRIE_DEAD && self.nodes[node].is_some() && self.gens[node] == gen)
+    }
+
+    /// Unlink and drop a leaf node, returning its page ids. Bumps the slot
+    /// generation so any sequence cursor resting here reads as dead.
+    fn remove_leaf(&mut self, id: usize) -> (Vec<Vec<PageId>>, Vec<Vec<PageId>>) {
+        let node = self.nodes[id].take().expect("dangling trie node");
+        debug_assert!(node.children.is_empty(), "evicting a non-leaf");
+        let h = chunk_hash(&node.tokens);
+        self.node_mut(node.parent).children.remove(&h);
+        self.gens[id] += 1;
+        self.free.push(id);
+        (node.k_pages, node.v_pages)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
 
 /// Errors surfaced to the coordinator.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -279,41 +664,51 @@ impl std::fmt::Display for CacheError {
 
 impl std::error::Error for CacheError {}
 
-/// The cache manager: owns every live sequence's compressed pages and the
-/// global byte accounting.
+// ---------------------------------------------------------------------------
+// Manager
+// ---------------------------------------------------------------------------
+
+/// The cache manager: the shared page pool, every live sequence's block
+/// tables, the prefix trie, and the global byte accounting.
 pub struct KvCacheManager {
     spec: CacheSpec,
     budget_bytes: u64,
-    used_bytes: u64,
+    pool: PagePool,
     seqs: HashMap<SeqId, SeqCache>,
     /// Worst-case byte reservations per sequence (admission control; the
     /// coordinator may preempt a sequence to reclaim both its pages and its
     /// reservation).
     reserved: HashMap<SeqId, u64>,
     /// Incrementally-maintained Σ over live sequences of
-    /// `max(reserved − allocated, 0)` — the bytes promised but not yet
-    /// backed by pages. Kept in lockstep by `reserve`/append/`free` so the
-    /// per-token hot path never rescans all sequences; equals
-    /// [`KvCacheManager::outstanding_reserved_recomputed`]
-    /// (property-tested).
+    /// `max(reserved − mapped, 0)` — the bytes promised but not yet backed
+    /// by mapped pages. Kept in lockstep by `reserve`/append/`free` so the
+    /// per-token hot path never rescans all sequences (property-tested
+    /// against [`KvCacheManager::outstanding_reserved_recomputed`]).
     outstanding: u64,
     /// Peak *commitment* high-water mark: max over time of
-    /// `used_bytes + outstanding`. Reported by the `cache_peak_bytes` gauge
-    /// for capacity planning — tracking backed pages alone would understate
-    /// the worst case the admission controller actually promised.
+    /// `used − cold + outstanding`. Reported by the `cache_peak_bytes`
+    /// gauge for capacity planning.
     peak_bytes: u64,
+    prefix_enabled: bool,
+    trie: PrefixTrie,
+    /// Monotone clock for trie LRU stamps.
+    clock: u64,
 }
 
 impl KvCacheManager {
     pub fn new(spec: CacheSpec, budget_bytes: u64) -> KvCacheManager {
+        let pool = PagePool::new(spec.page_tokens);
         KvCacheManager {
             spec,
             budget_bytes,
-            used_bytes: 0,
+            pool,
             seqs: HashMap::new(),
             reserved: HashMap::new(),
             outstanding: 0,
             peak_bytes: 0,
+            prefix_enabled: false,
+            trie: PrefixTrie::new(),
+            clock: 0,
         }
     }
 
@@ -321,8 +716,37 @@ impl KvCacheManager {
         &self.spec
     }
 
+    /// The shared page pool (attention kernels read block tables through it).
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Toggle prompt-prefix sharing (off by default; `ServeConfig` wires it).
+    pub fn set_prefix_cache(&mut self, enabled: bool) {
+        self.prefix_enabled = enabled;
+    }
+
+    pub fn prefix_cache(&self) -> bool {
+        self.prefix_enabled
+    }
+
     pub fn used_bytes(&self) -> u64 {
-        self.used_bytes
+        self.pool.used_bytes
+    }
+
+    /// Bytes held by cached pages no live sequence maps (reclaimable).
+    pub fn cold_bytes(&self) -> u64 {
+        self.pool.cold_bytes
+    }
+
+    /// Pages currently mapped by more than one sequence.
+    pub fn shared_pages(&self) -> usize {
+        self.pool.shared_pages
+    }
+
+    /// Bytes sharing saves right now versus per-sequence owned storage.
+    pub fn bytes_saved_by_sharing(&self) -> u64 {
+        self.pool.bytes_saved
     }
 
     pub fn peak_bytes(&self) -> u64 {
@@ -337,19 +761,16 @@ impl KvCacheManager {
         self.seqs.len()
     }
 
-    /// Total pages allocated across all live sequences (cancellation tests
-    /// assert this returns to its pre-admission baseline).
+    /// Total pages allocated in the pool. O(1): the pool maintains the
+    /// counter incrementally (it used to walk every buffer of every
+    /// sequence per metrics tick); property-tested against the recomputed
+    /// walk in [`KvCacheManager::verify_accounting`].
     pub fn live_pages(&self) -> usize {
-        self.seqs
-            .values()
-            .map(|s| {
-                s.k.iter()
-                    .flatten()
-                    .chain(s.v.iter().flatten())
-                    .map(|b| b.n_pages())
-                    .sum::<usize>()
-            })
-            .sum()
+        self.pool.live_pages
+    }
+
+    fn live_pages_recomputed(&self) -> usize {
+        self.pool.slots.iter().filter(|s| s.is_some()).count()
     }
 
     /// Worst-case bytes to hold `n_tokens` of one sequence (page-rounded).
@@ -359,8 +780,7 @@ impl KvCacheManager {
     }
 
     /// Unallocated remainder of all reservations (bytes promised but not yet
-    /// backed by pages). O(1): maintained incrementally by
-    /// `reserve`/append/`free`.
+    /// backed by mapped pages). O(1): maintained incrementally.
     pub fn outstanding_reserved(&self) -> u64 {
         self.outstanding
     }
@@ -371,63 +791,128 @@ impl KvCacheManager {
         self.reserved
             .iter()
             .map(|(id, &res)| {
-                let alloc = self.seqs.get(id).map(|s| s.allocated_bytes() as u64).unwrap_or(0);
-                res.saturating_sub(alloc)
+                let mapped = self
+                    .seqs
+                    .get(id)
+                    .map(|s| s.mapped_bytes as u64)
+                    .unwrap_or(0);
+                res.saturating_sub(mapped)
             })
             .sum()
     }
 
-    /// Can a sequence expected to reach `n_tokens` be admitted right now?
-    /// Counts both live pages and outstanding reservations.
-    pub fn can_admit(&self, n_tokens: usize) -> bool {
-        self.used_bytes + self.outstanding + self.bytes_for_tokens(n_tokens) <= self.budget_bytes
+    /// Bytes currently committed against the budget: backed pages minus
+    /// reclaimable cold pages, plus outstanding reservations.
+    fn committed(&self) -> u64 {
+        self.pool.used_bytes - self.pool.cold_bytes + self.outstanding
     }
 
-    /// Bytes sequence `id` currently commits against the budget — backed
-    /// pages plus its outstanding reservation remainder, i.e. what freeing
-    /// it would return to the pool.
+    /// Can a sequence expected to reach `n_tokens` be admitted right now?
+    /// Counts hot pages and outstanding reservations; cold cached pages are
+    /// reclaimable on demand and therefore treated as available.
+    pub fn can_admit(&self, n_tokens: usize) -> bool {
+        self.committed() + self.bytes_for_tokens(n_tokens) <= self.budget_bytes
+    }
+
+    /// Prompt-aware [`KvCacheManager::can_admit`]: chunks of `prompt` that
+    /// are cached *and currently hot* (mapped by live sequences) are already
+    /// paid for — the candidate maps them instead of allocating, so its
+    /// incremental need shrinks by exactly those bytes. Cold cached chunks
+    /// are neutral: warming them consumes the same bytes admission already
+    /// counts as available.
+    pub fn can_admit_prompt(&self, prompt: &[u32], n_tokens: usize) -> bool {
+        self.committed() + self.bytes_for_tokens(n_tokens)
+            <= self.budget_bytes + self.hot_cached_prefix_bytes(prompt)
+    }
+
+    fn hot_cached_prefix_bytes(&self, prompt: &[u32]) -> u64 {
+        if !self.prefix_enabled {
+            return 0;
+        }
+        let p = self.spec.page_tokens;
+        let chunk_bytes = (p * self.spec.bytes_per_token()) as u64;
+        let mut node = TRIE_ROOT;
+        let mut depth = 0usize;
+        let mut hot = 0u64;
+        while (depth + 1) * p <= prompt.len() {
+            let Some(c) = self.trie.child(node, &prompt[depth * p..(depth + 1) * p]) else {
+                break;
+            };
+            // A chunk's pages are referenced and released as a unit, so one
+            // probe answers for the whole chunk.
+            if self.pool.page_refs(self.trie.node(c).k_pages[0][0]) > 0 {
+                hot += chunk_bytes;
+            }
+            node = c;
+            depth += 1;
+        }
+        hot
+    }
+
+    /// Bytes sequence `id` currently commits against the budget — pages only
+    /// it maps (freeing releases them or turns them cold; either way they
+    /// become available) plus its outstanding reservation remainder.
     pub fn committed_bytes_for(&self, id: SeqId) -> u64 {
-        let alloc = self
-            .seqs
-            .get(&id)
-            .map(|s| s.allocated_bytes() as u64)
-            .unwrap_or(0);
         let res = self.reserved.get(&id).copied().unwrap_or(0);
-        alloc.max(res)
+        let Some(seq) = self.seqs.get(&id) else {
+            return res;
+        };
+        let private: u64 = seq
+            .tables()
+            .flat_map(|t| t.pages.iter())
+            .map(|&p| self.pool.solely_referenced_bytes(p))
+            .sum();
+        private + res.saturating_sub(seq.mapped_bytes as u64)
     }
 
     /// [`KvCacheManager::can_admit`], hypothetically: would a sequence of
     /// `n_tokens` fit if the sequences in `freed` were freed first? The
-    /// scheduler uses this to plan preemption before evicting anyone
-    /// (`Engine::can_admit_if_freed`). Kept here, next to `can_admit`, so
-    /// the admission predicate has a single source of truth.
+    /// scheduler uses this to plan preemption before evicting anyone.
     pub fn can_admit_if_freed(&self, n_tokens: usize, freed: &[SeqId]) -> bool {
         let reclaim: u64 = freed.iter().map(|&id| self.committed_bytes_for(id)).sum();
-        let committed = (self.used_bytes + self.outstanding).saturating_sub(reclaim);
-        committed + self.bytes_for_tokens(n_tokens) <= self.budget_bytes
+        self.committed().saturating_sub(reclaim) + self.bytes_for_tokens(n_tokens)
+            <= self.budget_bytes
     }
 
-    /// Record a new commitment high-water mark (pages + reservations).
+    /// Prompt-aware [`KvCacheManager::can_admit_if_freed`]. Mildly
+    /// optimistic when a victim is the sole mapper of a chunk the candidate
+    /// would hit (the chunk is counted both as reclaim and as hot); the
+    /// scheduler re-checks admission after actually evicting, so the
+    /// optimism can cost at most one refused admission, never a wrong one.
+    pub fn can_admit_prompt_if_freed(
+        &self,
+        prompt: &[u32],
+        n_tokens: usize,
+        freed: &[SeqId],
+    ) -> bool {
+        let reclaim: u64 = freed.iter().map(|&id| self.committed_bytes_for(id)).sum();
+        self.committed().saturating_sub(reclaim) + self.bytes_for_tokens(n_tokens)
+            <= self.budget_bytes + self.hot_cached_prefix_bytes(prompt)
+    }
+
+    /// Record a new commitment high-water mark.
     fn note_peak(&mut self) {
-        self.peak_bytes = self.peak_bytes.max(self.used_bytes + self.outstanding);
+        self.peak_bytes = self.peak_bytes.max(self.committed());
     }
 
     /// Reserve worst-case bytes for a sequence expected to reach `n_tokens`.
+    /// Pages already mapped from the prefix cache consume the reservation up
+    /// front, so a prefix hit reserves only the *incremental* bytes.
     pub fn reserve(&mut self, id: SeqId, n_tokens: usize) -> Result<(), CacheError> {
         let Some(seq) = self.seqs.get(&id) else {
             return Err(CacheError::UnknownSeq(id));
         };
-        let alloc = seq.allocated_bytes() as u64;
+        let mapped = seq.mapped_bytes as u64;
         let need = self.bytes_for_tokens(n_tokens);
         // Replace this sequence's old outstanding contribution (0 for a
         // fresh sequence) with the new one.
         let old = self
             .reserved
             .get(&id)
-            .map(|&r| r.saturating_sub(alloc))
+            .map(|&r| r.saturating_sub(mapped))
             .unwrap_or(0);
-        let new = need.saturating_sub(alloc);
-        let committed = self.used_bytes + self.outstanding - old;
+        let new = need.saturating_sub(mapped);
+        let committed = self.committed() - old;
         if committed + new > self.budget_bytes {
             return Err(CacheError::OverBudget {
                 needed: need,
@@ -440,7 +925,7 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Register a new sequence (no pages allocated yet).
+    /// Register a new sequence (no pages mapped yet).
     pub fn alloc(&mut self, id: SeqId) -> Result<(), CacheError> {
         if self.seqs.contains_key(&id) {
             return Err(CacheError::DuplicateSeq(id));
@@ -449,37 +934,266 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Budget check for appending `cost` new bytes to sequence `id`: growth
-    /// inside this sequence's reservation is pre-approved; growth beyond it
-    /// must fit next to everyone else's outstanding reservations.
-    fn check_append_budget(&self, id: SeqId, seq: &SeqCache, cost: usize) -> Result<(), CacheError> {
-        let alloc = seq.allocated_bytes() as u64;
+    // -- prefix cache ------------------------------------------------------
+
+    /// Match `prompt` against the prefix trie and map every cached
+    /// page-aligned chunk directly into sequence `id`'s block tables
+    /// (refcounts bumped, nothing copied). Returns the number of prompt
+    /// tokens now in cache, plus the memoized last-position logits when the
+    /// *entire* prompt was covered (the caller samples the first token from
+    /// them and schedules zero prefill). When the full-cover boundary logits
+    /// are unknown, the match backs off one chunk so at least one token
+    /// prefills. Call on a freshly-allocated sequence, before `reserve`.
+    pub fn map_prefix(
+        &mut self,
+        id: SeqId,
+        prompt: &[u32],
+    ) -> Result<(usize, Option<Vec<f32>>), CacheError> {
+        let Some(seq) = self.seqs.get(&id) else {
+            return Err(CacheError::UnknownSeq(id));
+        };
+        assert_eq!(seq.tokens, 0, "map_prefix on a non-empty sequence");
+        if !self.prefix_enabled {
+            return Ok((0, None));
+        }
+        let p = self.spec.page_tokens;
+        let mut path: Vec<usize> = Vec::new();
+        let mut node = TRIE_ROOT;
+        while (path.len() + 1) * p <= prompt.len() {
+            let chunk = &prompt[path.len() * p..(path.len() + 1) * p];
+            match self.trie.child(node, chunk) {
+                Some(c) => {
+                    node = c;
+                    path.push(c);
+                }
+                None => break,
+            }
+        }
+        if path.len() * p == prompt.len()
+            && !path.is_empty()
+            && self.trie.node(node).logits.is_none()
+        {
+            path.pop();
+            node = path.last().copied().unwrap_or(TRIE_ROOT);
+        }
+        if path.is_empty() {
+            return Ok((0, None));
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        let seq = self.seqs.get_mut(&id).unwrap();
+        for &n in &path {
+            self.trie.node_mut(n).last_used = stamp;
+            let nd = self.trie.nodes[n].as_ref().unwrap();
+            for li in 0..seq.k.len() {
+                for h in 0..nd.k_pages[li].len() {
+                    let (kp, vp) = (nd.k_pages[li][h], nd.v_pages[li][h]);
+                    self.pool.ref_page(kp);
+                    self.pool.ref_page(vp);
+                    seq.k[li][h].pages.push(kp);
+                    seq.k[li][h].len += p;
+                    seq.v[li][h].pages.push(vp);
+                    seq.v[li][h].len += p;
+                }
+            }
+        }
+        let tokens = path.len() * p;
+        seq.tokens = tokens;
+        seq.mapped_bytes += tokens * self.spec.bytes_per_token();
+        seq.trie_node = node;
+        seq.trie_gen = self.trie.gen(node);
+        seq.next_chunk = path.len();
+        seq.chunk_buf.clear();
+        let logits = if tokens == prompt.len() {
+            let l = self.trie.node(node).logits.clone();
+            debug_assert!(l.is_some(), "full-cover match requires boundary logits");
+            l
+        } else {
+            None
+        };
+        self.note_peak();
+        Ok((tokens, logits))
+    }
+
+    /// Record prefilled prompt tokens for prefix registration: every
+    /// completed page-aligned chunk becomes a trie node claiming this
+    /// sequence's (now immutable, full) pages for that chunk. When the
+    /// prompt ends exactly on a chunk boundary, `last_logits` (the
+    /// last-position logits the engine just computed) are memoized on the
+    /// node so identical future prompts hit with zero prefill. No-op when
+    /// prefix caching is off.
+    pub fn note_prefill_tokens(&mut self, id: SeqId, tokens: &[u32], last_logits: Option<&[f32]>) {
+        if !self.prefix_enabled {
+            return;
+        }
+        let p = self.spec.page_tokens;
+        let Some(seq) = self.seqs.get_mut(&id) else {
+            return;
+        };
+        if !self.trie.cursor_valid(seq.trie_node, seq.trie_gen) {
+            // Dead cursor (hash collision earlier, or the node was evicted
+            // while this sequence was mid-prefill): stop registering — a
+            // miss for future prompts, never a wrong link.
+            seq.chunk_buf.clear();
+            return;
+        }
+        seq.chunk_buf.extend_from_slice(tokens);
+        let mut consumed = 0usize;
+        while seq.chunk_buf.len() - consumed >= p {
+            let chunk: Vec<u32> = seq.chunk_buf[consumed..consumed + p].to_vec();
+            consumed += p;
+            let ci = seq.next_chunk;
+            self.clock += 1;
+            match self.trie.child(seq.trie_node, &chunk) {
+                Some(c) => {
+                    // Already cached (e.g. a concurrent identical prompt
+                    // registered first): keep this sequence's private pages;
+                    // future admissions dedup against the existing entry.
+                    self.trie.node_mut(c).last_used = self.clock;
+                    seq.trie_node = c;
+                    seq.trie_gen = self.trie.gen(c);
+                }
+                None if self
+                    .trie
+                    .node(seq.trie_node)
+                    .children
+                    .contains_key(&chunk_hash(&chunk)) =>
+                {
+                    // Hash collision with a different chunk: stop registering
+                    // this sequence (inserting would orphan the existing
+                    // subtree). Vanishingly rare with 64-bit FNV.
+                    seq.trie_node = TRIE_DEAD;
+                    seq.chunk_buf.clear();
+                    return;
+                }
+                None => {
+                    let k_pages: Vec<Vec<PageId>> = seq
+                        .k
+                        .iter()
+                        .map(|row| row.iter().map(|t| t.pages[ci]).collect())
+                        .collect();
+                    let v_pages: Vec<Vec<PageId>> = seq
+                        .v
+                        .iter()
+                        .map(|row| row.iter().map(|t| t.pages[ci]).collect())
+                        .collect();
+                    for &pid in k_pages.iter().flatten().chain(v_pages.iter().flatten()) {
+                        self.pool.mark_cached(pid);
+                    }
+                    let c = self
+                        .trie
+                        .insert(seq.trie_node, chunk, k_pages, v_pages, self.clock);
+                    seq.trie_node = c;
+                    seq.trie_gen = self.trie.gen(c);
+                }
+            }
+            seq.next_chunk += 1;
+        }
+        seq.chunk_buf.drain(..consumed);
+        if let Some(lg) = last_logits {
+            if seq.chunk_buf.is_empty() && seq.trie_node != TRIE_ROOT {
+                let nd = self.trie.node_mut(seq.trie_node);
+                if nd.logits.is_none() {
+                    nd.logits = Some(lg.to_vec());
+                }
+            }
+        }
+    }
+
+    /// Release least-recently-used unreferenced cached chunks until `need`
+    /// bytes are physically freed (or nothing evictable remains). Returns
+    /// bytes freed. Called by the append path under physical budget
+    /// pressure; harmless to call any time. Each pass collects every
+    /// evictable leaf in one scan and evicts in LRU order (a further pass
+    /// only runs when evictions exposed new leaves), so freeing k chunks
+    /// costs O(nodes + k·log k) per pass, not k full scans.
+    pub fn evict_cold(&mut self, need: u64) -> u64 {
+        let mut freed = 0u64;
+        'passes: while freed < need {
+            let mut candidates: Vec<(u64, usize)> = self
+                .trie
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, slot)| {
+                    let nd = slot.as_ref()?;
+                    if i == TRIE_ROOT || !nd.children.is_empty() {
+                        return None; // only leaves keep the root-path invariant
+                    }
+                    if self.pool.page_refs(nd.k_pages[0][0]) > 0 {
+                        return None; // hot: a live sequence still maps this chunk
+                    }
+                    Some((nd.last_used, i))
+                })
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            candidates.sort_unstable();
+            for (_, i) in candidates {
+                if freed >= need {
+                    break 'passes;
+                }
+                let (k_pages, v_pages) = self.trie.remove_leaf(i);
+                for pid in k_pages.into_iter().flatten().chain(v_pages.into_iter().flatten()) {
+                    freed += self.pool.uncache_page(pid);
+                }
+            }
+        }
+        freed
+    }
+
+    /// Evict every unreferenced cached chunk (tests and shutdown: returns
+    /// the pool to its no-cold-pages baseline).
+    pub fn release_cold(&mut self) -> u64 {
+        self.evict_cold(u64::MAX)
+    }
+
+    // -- appends -----------------------------------------------------------
+
+    /// Budget check for appending `cost` new bytes (of which `cow` are
+    /// copy-on-write copies that charge memory without growing the mapping)
+    /// to sequence `id`: growth inside this sequence's reservation is
+    /// pre-approved; growth beyond it must fit next to everyone else's
+    /// outstanding reservations.
+    fn check_append_budget(&self, id: SeqId, cost: usize, cow: usize) -> Result<(), CacheError> {
+        let seq = self.seqs.get(&id).expect("caller verified");
+        let mapped = seq.mapped_bytes as u64;
         let remaining_res = self
             .reserved
             .get(&id)
-            .map(|&r| r.saturating_sub(alloc))
+            .map(|&r| r.saturating_sub(mapped))
             .unwrap_or(0);
-        let outstanding_after = self.outstanding - remaining_res.min(cost as u64);
-        if self.used_bytes + cost as u64 + outstanding_after > self.budget_bytes {
+        let outstanding_after = self.outstanding - remaining_res.min((cost - cow) as u64);
+        let hot = self.pool.used_bytes - self.pool.cold_bytes;
+        if hot + cost as u64 + outstanding_after > self.budget_bytes {
             return Err(CacheError::OverBudget {
                 needed: cost as u64,
-                available: self.budget_bytes.saturating_sub(self.used_bytes + outstanding_after),
+                available: self.budget_bytes.saturating_sub(hot + outstanding_after),
             });
         }
         Ok(())
     }
 
+    /// Make physical room for `cost` fresh bytes by evicting cold chunks if
+    /// the pool would otherwise exceed the budget.
+    fn make_room(&mut self, cost: usize) {
+        let after = self.pool.used_bytes + cost as u64;
+        if after > self.budget_bytes {
+            self.evict_cold(after - self.budget_bytes);
+        }
+    }
+
     /// Commit `actual` freshly-allocated bytes to the global counters after
     /// an append: pages move from "promised" to "backed", consuming this
     /// sequence's outstanding reservation first.
-    fn finish_append(&mut self, id: SeqId, alloc_before: u64, actual: u64) {
+    fn finish_append(&mut self, id: SeqId, mapped_before: u64, actual: u64) {
         let remaining_res = self
             .reserved
             .get(&id)
-            .map(|&r| r.saturating_sub(alloc_before))
+            .map(|&r| r.saturating_sub(mapped_before))
             .unwrap_or(0);
         self.outstanding -= remaining_res.min(actual);
-        self.used_bytes += actual;
         self.note_peak();
     }
 
@@ -494,21 +1208,25 @@ impl KvCacheManager {
     ) -> Result<(), CacheError> {
         // Pre-compute the allocation cost to enforce the budget atomically.
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let mut cost = 0usize;
+        let (mut cost, mut cow) = (0usize, 0usize);
         for h in 0..self.spec.n_kv_heads {
-            cost += seq.k[layer][h].next_row_cost() + seq.v[layer][h].next_row_cost();
+            cost += self.pool.next_rows_cost(&seq.k[layer][h], 1)
+                + self.pool.next_rows_cost(&seq.v[layer][h], 1);
+            cow += self.pool.cow_cost(&seq.k[layer][h]) + self.pool.cow_cost(&seq.v[layer][h]);
         }
-        self.check_append_budget(id, seq, cost)?;
+        self.make_room(cost);
+        self.check_append_budget(id, cost, cow)?;
         let seq = self.seqs.get_mut(&id).unwrap();
-        let alloc_before = seq.alloc_bytes as u64;
+        let mapped_before = seq.mapped_bytes as u64;
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
-            actual += seq.k[layer][h].push_row(k_rows[h]);
-            actual += seq.v[layer][h].push_row(v_rows[h]);
+            actual += self.pool.push_row(&mut seq.k[layer][h], k_rows[h]);
+            actual += self.pool.push_row(&mut seq.v[layer][h], v_rows[h]);
         }
         debug_assert_eq!(actual, cost);
-        seq.alloc_bytes += actual;
-        self.finish_append(id, alloc_before, actual as u64);
+        // COW copies charge memory but replace a mapped page in place.
+        seq.mapped_bytes += actual - cow;
+        self.finish_append(id, mapped_before, (actual - cow) as u64);
         Ok(())
     }
 
@@ -527,21 +1245,25 @@ impl KvCacheManager {
         assert_eq!(k_mats.len(), self.spec.n_kv_heads, "k head count mismatch");
         assert_eq!(v_mats.len(), self.spec.n_kv_heads, "v head count mismatch");
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let mut cost = 0usize;
+        let (mut cost, mut cow) = (0usize, 0usize);
         for h in 0..self.spec.n_kv_heads {
-            cost += seq.k[layer][h].next_row_cost() + seq.v[layer][h].next_row_cost();
+            cost += self.pool.next_rows_cost(&seq.k[layer][h], 1)
+                + self.pool.next_rows_cost(&seq.v[layer][h], 1);
+            cow += self.pool.cow_cost(&seq.k[layer][h]) + self.pool.cow_cost(&seq.v[layer][h]);
         }
-        self.check_append_budget(id, seq, cost)?;
+        self.make_room(cost);
+        self.check_append_budget(id, cost, cow)?;
         let seq = self.seqs.get_mut(&id).unwrap();
-        let alloc_before = seq.alloc_bytes as u64;
+        let mapped_before = seq.mapped_bytes as u64;
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
-            actual += seq.k[layer][h].push_row(k_mats[h].row(row));
-            actual += seq.v[layer][h].push_row(v_mats[h].row(row));
+            actual += self.pool.push_row(&mut seq.k[layer][h], k_mats[h].row(row));
+            actual += self.pool.push_row(&mut seq.v[layer][h], v_mats[h].row(row));
         }
         debug_assert_eq!(actual, cost);
-        seq.alloc_bytes += actual;
-        self.finish_append(id, alloc_before, actual as u64);
+        // COW copies charge memory but replace a mapped page in place.
+        seq.mapped_bytes += actual - cow;
+        self.finish_append(id, mapped_before, (actual - cow) as u64);
         Ok(())
     }
 
@@ -561,23 +1283,27 @@ impl KvCacheManager {
         assert_eq!(v_mats.len(), self.spec.n_kv_heads, "v head count mismatch");
         let n = k_mats[0].rows();
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let mut cost = 0usize;
+        let (mut cost, mut cow) = (0usize, 0usize);
         for h in 0..self.spec.n_kv_heads {
             assert_eq!(k_mats[h].rows(), n, "ragged chunk");
             assert_eq!(v_mats[h].rows(), n, "ragged chunk");
-            cost += seq.k[layer][h].next_rows_cost(n) + seq.v[layer][h].next_rows_cost(n);
+            cost += self.pool.next_rows_cost(&seq.k[layer][h], n)
+                + self.pool.next_rows_cost(&seq.v[layer][h], n);
+            cow += self.pool.cow_cost(&seq.k[layer][h]) + self.pool.cow_cost(&seq.v[layer][h]);
         }
-        self.check_append_budget(id, seq, cost)?;
+        self.make_room(cost);
+        self.check_append_budget(id, cost, cow)?;
         let seq = self.seqs.get_mut(&id).unwrap();
-        let alloc_before = seq.alloc_bytes as u64;
+        let mapped_before = seq.mapped_bytes as u64;
         let mut actual = 0usize;
         for h in 0..self.spec.n_kv_heads {
-            actual += seq.k[layer][h].push_rows(k_mats[h].data(), n);
-            actual += seq.v[layer][h].push_rows(v_mats[h].data(), n);
+            actual += self.pool.push_rows(&mut seq.k[layer][h], k_mats[h].data(), n);
+            actual += self.pool.push_rows(&mut seq.v[layer][h], v_mats[h].data(), n);
         }
         debug_assert_eq!(actual, cost);
-        seq.alloc_bytes += actual;
-        self.finish_append(id, alloc_before, actual as u64);
+        // COW copies charge memory but replace a mapped page in place.
+        seq.mapped_bytes += actual - cow;
+        self.finish_append(id, mapped_before, (actual - cow) as u64);
         Ok(())
     }
 
@@ -601,29 +1327,35 @@ impl KvCacheManager {
             .ok_or(CacheError::UnknownSeq(id))
     }
 
-    /// Immutable access to a sequence's buffers (attention reads).
+    /// Immutable access to a sequence's block tables (attention reads; pair
+    /// with [`KvCacheManager::pool`]).
     pub fn seq(&self, id: SeqId) -> Result<&SeqCache, CacheError> {
         self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))
     }
 
-    /// Free a sequence, returning its bytes to the pool. Freeing twice is an
-    /// error (the coordinator owns the lifecycle). Uses checked arithmetic
-    /// in every build profile: on accounting drift the call fails with
-    /// [`CacheError::AccountingDrift`] and leaves the manager untouched,
-    /// instead of silently wrapping `used_bytes` and permanently wedging
-    /// admission.
+    /// Free a sequence: every mapped page drops one reference; pages only
+    /// this sequence mapped are released (or turn cold when the prefix trie
+    /// still claims them). Freeing twice is an error (the coordinator owns
+    /// the lifecycle). Uses checked arithmetic in every build profile: on
+    /// accounting drift the call fails with [`CacheError::AccountingDrift`]
+    /// and leaves the manager untouched.
     pub fn free(&mut self, id: SeqId) -> Result<u64, CacheError> {
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let bytes = seq.allocated_bytes() as u64;
-        let used_after = self.used_bytes.checked_sub(bytes).ok_or(
+        // Dry-run the release so drift is detected before any mutation.
+        let released: u64 = seq
+            .tables()
+            .flat_map(|t| t.pages.iter())
+            .map(|&p| self.pool.freeable_bytes(p))
+            .sum();
+        self.pool.used_bytes.checked_sub(released).ok_or(
             CacheError::AccountingDrift {
                 counter: "used_bytes",
-                value: self.used_bytes,
-                delta: bytes,
+                value: self.pool.used_bytes,
+                delta: released,
             },
         )?;
         let res = self.reserved.get(&id).copied().unwrap_or(0);
-        let contribution = res.saturating_sub(bytes);
+        let contribution = res.saturating_sub(seq.mapped_bytes as u64);
         let outstanding_after = self.outstanding.checked_sub(contribution).ok_or(
             CacheError::AccountingDrift {
                 counter: "outstanding_reserved",
@@ -631,32 +1363,74 @@ impl KvCacheManager {
                 delta: contribution,
             },
         )?;
-        self.used_bytes = used_after;
+        let seq = self.seqs.remove(&id).unwrap();
+        let mut actually = 0u64;
+        for t in seq.k.into_iter().flatten().chain(seq.v.into_iter().flatten()) {
+            for pid in t.pages {
+                actually += self.pool.deref_page(pid);
+            }
+        }
+        debug_assert_eq!(actually, released);
         self.outstanding = outstanding_after;
         self.reserved.remove(&id);
-        self.seqs.remove(&id);
-        Ok(bytes)
+        Ok(released)
     }
 
-    /// Invariant check: the incremental counters (`used_bytes`, per-sequence
-    /// allocated bytes, outstanding reservations) all equal their
-    /// recomputed-from-scratch values. Used by tests and by the batcher's
+    /// Invariant check: every incrementally-maintained counter — pool
+    /// used/cold/live-page/shared/saved bytes, per-sequence mapped bytes,
+    /// per-page refcounts, outstanding reservations — equals its
+    /// recomputed-from-scratch value. Used by tests and by the batcher's
     /// debug-path step via `Engine::check_invariants`.
     pub fn verify_accounting(&self) -> bool {
-        let per_seq_ok = self
+        let mapped_ok = self
             .seqs
             .values()
-            .all(|s| s.alloc_bytes == s.recompute_allocated_bytes());
-        let actual: usize = self.seqs.values().map(|s| s.recompute_allocated_bytes()).sum();
-        per_seq_ok
-            && actual as u64 == self.used_bytes
+            .all(|s| s.mapped_bytes == s.recompute_mapped_bytes(&self.pool));
+        let mut refs_expected: HashMap<PageId, u32> = HashMap::new();
+        for s in self.seqs.values() {
+            for t in s.tables() {
+                for &p in &t.pages {
+                    *refs_expected.entry(p).or_insert(0) += 1;
+                }
+            }
+        }
+        let (mut used, mut cold, mut saved) = (0u64, 0u64, 0u64);
+        let (mut live, mut shared) = (0usize, 0usize);
+        for (i, slot) in self.pool.slots.iter().enumerate() {
+            let Some(s) = slot else { continue };
+            let b = self.pool.page_bytes(s.width);
+            used += b;
+            live += 1;
+            if s.refs == 0 {
+                if !s.cached {
+                    return false; // unreferenced uncached pages must be released
+                }
+                cold += b;
+            }
+            if s.refs > 1 {
+                shared += 1;
+            }
+            if s.refs >= 1 {
+                saved += (s.refs as u64 - 1) * b;
+            }
+            if s.refs != refs_expected.get(&(i as PageId)).copied().unwrap_or(0) {
+                return false;
+            }
+        }
+        mapped_ok
+            && used == self.pool.used_bytes
+            && cold == self.pool.cold_bytes
+            && live == self.pool.live_pages
+            && live == self.live_pages_recomputed()
+            && shared == self.pool.shared_pages
+            && saved == self.pool.bytes_saved
             && self.outstanding == self.outstanding_reserved_recomputed()
     }
 
     /// Test-only: force `used_bytes` to simulate accounting drift.
     #[cfg(test)]
     fn corrupt_used_bytes_for_test(&mut self, v: u64) {
-        self.used_bytes = v;
+        self.pool.used_bytes = v;
     }
 }
 
@@ -693,35 +1467,50 @@ mod tests {
         Ok(())
     }
 
+    /// Prefill `prompt` into `id` row by row and register it in the trie
+    /// (rows are a function of the token id, mimicking the engine contract
+    /// that cache rows are a pure function of the token prefix).
+    fn prefill_prompt(
+        mgr: &mut KvCacheManager,
+        id: SeqId,
+        prompt: &[u32],
+        start: usize,
+        logits: Option<&[f32]>,
+    ) {
+        for &t in &prompt[start..] {
+            push_token(mgr, id, t as f32).unwrap();
+        }
+        mgr.note_prefill_tokens(id, &prompt[start..], logits);
+    }
+
     #[test]
-    fn paged_buf_roundtrip() {
-        let mut b = PagedBuf::new(3, 4);
+    fn pool_table_roundtrip() {
+        let mut pool = PagePool::new(4);
+        let mut t = BlockTable::new(3);
         for i in 0..11 {
             let row = vec![i as f32; 3];
-            b.push_row(&row);
+            pool.push_row(&mut t, &row);
         }
-        assert_eq!(b.len(), 11);
+        assert_eq!(t.len(), 11);
         for i in 0..11 {
-            assert_eq!(b.row(i), &[i as f32; 3][..]);
+            assert_eq!(t.row(&pool, i), &[i as f32; 3][..]);
         }
         // 3 pages of 4 rows.
-        assert_eq!(b.allocated_bytes(), 3 * 4 * 3 * 4);
-        let m = b.to_mat();
-        assert_eq!(m.shape(), (11, 3));
-        assert_eq!(m.row(10), &[10.0, 10.0, 10.0]);
-        let p = b.to_mat_padded(16);
-        assert_eq!(p.shape(), (16, 3));
-        assert_eq!(p.row(15), &[0.0, 0.0, 0.0]);
+        assert_eq!(t.n_pages(), 3);
+        assert_eq!(pool.live_pages(), 3);
+        assert_eq!(pool.used_bytes(), 3 * 4 * 3 * 4);
+        assert_eq!(t.mapped_bytes(&pool), 3 * 4 * 3 * 4);
     }
 
     #[test]
     fn chunks_cover_rows_in_order() {
-        let mut b = PagedBuf::new(2, 4);
+        let mut pool = PagePool::new(4);
+        let mut t = BlockTable::new(2);
         for i in 0..10 {
-            b.push_row(&[i as f32, i as f32]);
+            pool.push_row(&mut t, &[i as f32, i as f32]);
         }
         let mut seen = 0usize;
-        for (chunk, rows) in b.chunks() {
+        for (chunk, rows) in t.chunks(&pool) {
             assert_eq!(chunk.len(), rows * 2);
             for r in 0..rows {
                 assert_eq!(chunk[r * 2], (seen + r) as f32);
@@ -729,6 +1518,40 @@ mod tests {
             seen += rows;
         }
         assert_eq!(seen, 10);
+    }
+
+    /// Tentpole: a partially-filled tail page that is shared is
+    /// copy-on-write — the first divergent append moves the filled rows to
+    /// a fresh private page and never disturbs the other mapper.
+    #[test]
+    fn cow_divergent_append_isolates_shared_tail() {
+        let mut pool = PagePool::new(4);
+        let mut t1 = BlockTable::new(2);
+        for i in 0..5 {
+            pool.push_row(&mut t1, &[i as f32, i as f32]);
+        }
+        // t2 maps the same pages (a shared 5-row prefix, tail partial).
+        let mut t2 = t1.clone();
+        for &p in t2.page_ids() {
+            pool.ref_page(p);
+        }
+        assert_eq!(pool.shared_pages(), 2);
+        let cow_cost = pool.next_rows_cost(&t2, 1);
+        assert_eq!(cow_cost, 4 * 2 * 4, "divergent append must charge a COW page");
+        let actual = pool.push_row(&mut t2, &[9.0, 9.0]);
+        assert_eq!(actual, cow_cost);
+        // t2 sees its own history + the new row; t1 is untouched.
+        for i in 0..5 {
+            assert_eq!(t1.row(&pool, i), &[i as f32, i as f32][..]);
+            assert_eq!(t2.row(&pool, i), &[i as f32, i as f32][..]);
+        }
+        assert_eq!(t2.row(&pool, 5), &[9.0, 9.0][..]);
+        assert_eq!(t1.len(), 5);
+        // The old tail is no longer shared; the full first page still is.
+        assert_eq!(pool.shared_pages(), 1);
+        assert_ne!(t1.page_ids()[1], t2.page_ids()[1]);
+        // A second append to the now-private tail is free until the page fills.
+        assert_eq!(pool.next_rows_cost(&t2, 1), 0);
     }
 
     #[test]
@@ -751,15 +1574,14 @@ mod tests {
         assert_eq!(mgr.free(1), Err(CacheError::UnknownSeq(1)));
         mgr.free(2).unwrap();
         assert_eq!(mgr.used_bytes(), 0);
+        assert_eq!(mgr.live_pages(), 0);
         assert!(mgr.peak_bytes() > 0);
     }
 
     #[test]
     fn budget_enforced() {
         let spec = spec2();
-        // Budget for exactly one page-set of one token... compute: page cost =
-        // page_tokens * (k+v widths) * heads * 4 per layer — give enough for
-        // sequence 1's first page only.
+        // Budget for exactly one page-set of every layer/head stream.
         let one_page_all_layers: u64 = spec
             .layers
             .iter()
@@ -821,8 +1643,8 @@ mod tests {
             for h in 0..spec.n_kv_heads {
                 let (a, b) = (bulk.seq(1).unwrap(), single.seq(1).unwrap());
                 for row in 0..chunk {
-                    assert_eq!(a.k[l][h].row(row), b.k[l][h].row(row));
-                    assert_eq!(a.v[l][h].row(row), b.v[l][h].row(row));
+                    assert_eq!(a.k[l][h].row(bulk.pool(), row), b.k[l][h].row(single.pool(), row));
+                    assert_eq!(a.v[l][h].row(bulk.pool(), row), b.v[l][h].row(single.pool(), row));
                 }
             }
         }
@@ -887,10 +1709,10 @@ mod tests {
         assert!((ratio - 44.0 / 128.0).abs() < 1e-9);
     }
 
-    /// Satellite: the incremental `outstanding_reserved` counter and the
-    /// per-sequence allocated-bytes counters always equal their recomputed
-    /// sums under random alloc/reserve/append/free workloads
-    /// (`verify_accounting` checks all three).
+    /// Satellite: the incremental counters — pool pages/bytes, per-sequence
+    /// mapped bytes, outstanding reservations — always equal their
+    /// recomputed sums under random alloc/reserve/append/free workloads
+    /// (`verify_accounting` checks all of them, including `live_pages`).
     #[test]
     fn prop_accounting_under_random_workload() {
         forall("cache accounting invariant", 30, |g| {
@@ -936,9 +1758,66 @@ mod tests {
         });
     }
 
+    /// Tentpole property: accounting stays exact under prefix sharing —
+    /// random prompts over a tiny alphabet (so prefixes genuinely collide),
+    /// mapped at admission, registered during prefill, freed, and evicted,
+    /// with every incremental counter checked against recomputation.
+    #[test]
+    fn prop_prefix_sharing_accounting() {
+        forall("prefix sharing accounting invariant", 25, |g| {
+            let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+            mgr.set_prefix_cache(true);
+            let logits = vec![0.5f32; 4];
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(4, 30) {
+                match g.usize_in(0, 3) {
+                    0 | 1 => {
+                        let id = next_id;
+                        next_id += 1;
+                        // Tiny alphabet + page-multiple-biased lengths make
+                        // shared prefixes common.
+                        let len = g.usize_in(1, 4) * 8 + g.usize_in(0, 1) * g.usize_in(0, 5);
+                        let prompt: Vec<u32> =
+                            (0..len).map(|_| g.usize_in(0, 1) as u32).collect();
+                        mgr.alloc(id).unwrap();
+                        let (cached, full) = mgr.map_prefix(id, &prompt).unwrap();
+                        assert!(cached <= prompt.len());
+                        assert_eq!(cached % 8, 0, "hits are page-aligned");
+                        if cached == prompt.len() {
+                            assert!(full.is_some(), "full hit must carry logits");
+                        } else {
+                            mgr.reserve(id, prompt.len() + 4).unwrap();
+                            prefill_prompt(&mut mgr, id, &prompt, cached, Some(&logits));
+                        }
+                        live.push(id);
+                    }
+                    2 if !live.is_empty() => {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        mgr.free(live.swap_remove(idx)).unwrap();
+                    }
+                    3 => {
+                        mgr.evict_cold(g.usize_in(0, 4096) as u64);
+                    }
+                    _ => {}
+                }
+                assert!(mgr.verify_accounting(), "accounting broke");
+            }
+            for id in live {
+                mgr.free(id).unwrap();
+            }
+            assert!(mgr.verify_accounting());
+            // Everything left is cold cache; a full eviction returns the
+            // pool to its empty baseline.
+            mgr.release_cold();
+            assert_eq!(mgr.used_bytes(), 0);
+            assert_eq!(mgr.live_pages(), 0);
+            assert!(mgr.verify_accounting());
+        });
+    }
+
     /// Satellite: `free` detects accounting drift with checked arithmetic in
-    /// every build profile instead of wrapping `used_bytes` (which would
-    /// permanently wedge admission).
+    /// every build profile instead of wrapping `used_bytes`.
     #[test]
     fn free_surfaces_accounting_drift_instead_of_wrapping() {
         let mut mgr = KvCacheManager::new(spec2(), 1 << 20);
@@ -987,25 +1866,176 @@ mod tests {
         assert_eq!(mgr.outstanding_reserved(), 0);
     }
 
+    /// Tentpole: a registered prompt is mapped page-for-page by an identical
+    /// later prompt (full hit, memoized logits, shared refcounts, bytes
+    /// charged once), and freeing mappers leaves reclaimable cold pages.
+    #[test]
+    fn map_prefix_full_hit_shares_pages_and_logits() {
+        let spec = spec2();
+        let mut mgr = KvCacheManager::new(spec.clone(), 1 << 22);
+        mgr.set_prefix_cache(true);
+        let prompt: Vec<u32> = (0..16).map(|i| (i % 3) as u32).collect(); // two chunks
+        let logits = vec![1.0f32, 2.0, 3.0];
+        mgr.alloc(1).unwrap();
+        let (cached, _) = mgr.map_prefix(1, &prompt).unwrap();
+        assert_eq!(cached, 0, "cold trie");
+        mgr.reserve(1, 20).unwrap();
+        prefill_prompt(&mut mgr, 1, &prompt, 0, Some(&logits));
+        let one_seq_bytes = mgr.used_bytes();
+        assert!(mgr.verify_accounting());
+
+        // Identical prompt: full-prefix hit, zero bytes charged, memoized
+        // logits returned, pages shared.
+        mgr.alloc(2).unwrap();
+        let (cached2, full) = mgr.map_prefix(2, &prompt).unwrap();
+        assert_eq!(cached2, 16);
+        assert_eq!(full.as_deref(), Some(&logits[..]));
+        assert_eq!(mgr.used_bytes(), one_seq_bytes, "shared bytes charged once");
+        assert!(mgr.shared_pages() > 0);
+        assert!(mgr.bytes_saved_by_sharing() > 0);
+        assert_eq!(mgr.seq_tokens(2).unwrap(), 16);
+        // Both sequences read the same rows.
+        let (s1, s2) = (mgr.seq(1).unwrap(), mgr.seq(2).unwrap());
+        for l in 0..2 {
+            for h in 0..2 {
+                assert_eq!(s1.k[l][h].page_ids(), s2.k[l][h].page_ids());
+                assert_eq!(s1.k[l][h].row(mgr.pool(), 9), s2.k[l][h].row(mgr.pool(), 9));
+            }
+        }
+        assert!(mgr.verify_accounting());
+
+        // Freeing the owner releases nothing (seq 2 still maps everything).
+        mgr.free(1).unwrap();
+        assert_eq!(mgr.used_bytes(), one_seq_bytes);
+        assert_eq!(mgr.shared_pages(), 0);
+        assert!(mgr.verify_accounting());
+        // Freeing the last mapper turns the pages cold, not freed…
+        mgr.free(2).unwrap();
+        assert_eq!(mgr.used_bytes(), one_seq_bytes);
+        assert_eq!(mgr.cold_bytes(), one_seq_bytes);
+        // …and cold bytes don't block admission.
+        let bpt = spec.bytes_per_token() as u64;
+        assert!(mgr.can_admit(((1 << 22) / bpt) as usize - 16));
+        // Eviction returns the pool to baseline.
+        mgr.release_cold();
+        assert_eq!(mgr.used_bytes(), 0);
+        assert_eq!(mgr.live_pages(), 0);
+        assert!(mgr.verify_accounting());
+    }
+
+    /// A fully-cached prompt whose boundary logits are unknown backs off one
+    /// chunk so at least one token prefills (the engine needs last-position
+    /// logits to sample the first token).
+    #[test]
+    fn map_prefix_backs_off_without_boundary_logits() {
+        let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+        mgr.set_prefix_cache(true);
+        let prompt: Vec<u32> = (0..16).map(|i| (7 + i % 2) as u32).collect();
+        mgr.alloc(1).unwrap();
+        mgr.map_prefix(1, &prompt).unwrap();
+        prefill_prompt(&mut mgr, 1, &prompt, 0, None); // no logits memoized
+        mgr.free(1).unwrap();
+
+        mgr.alloc(2).unwrap();
+        let (cached, full) = mgr.map_prefix(2, &prompt).unwrap();
+        assert_eq!(cached, 8, "backed off one chunk");
+        assert!(full.is_none());
+        // A longer prompt with the same prefix still hits both chunks.
+        let mut longer = prompt.clone();
+        longer.extend([0, 1, 2]);
+        mgr.alloc(3).unwrap();
+        let (cached3, _) = mgr.map_prefix(3, &longer).unwrap();
+        assert_eq!(cached3, 16);
+        assert!(mgr.verify_accounting());
+    }
+
+    /// Cold chunks are evicted least-recently-used first, and only
+    /// unreferenced ones.
+    #[test]
+    fn evict_cold_is_lru_and_spares_hot_chunks() {
+        let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+        mgr.set_prefix_cache(true);
+        let pa: Vec<u32> = vec![1; 8];
+        let pb: Vec<u32> = vec![2; 8];
+        for (id, p) in [(1u64, &pa), (2, &pb)] {
+            mgr.alloc(id).unwrap();
+            mgr.map_prefix(id, p).unwrap();
+            prefill_prompt(&mut mgr, id, p, 0, Some(&[0.0]));
+        }
+        // Re-map A so its chunk is more recently used, then free both.
+        mgr.alloc(3).unwrap();
+        let (c, _) = mgr.map_prefix(3, &pa).unwrap();
+        assert_eq!(c, 8);
+        mgr.free(1).unwrap();
+        mgr.free(2).unwrap();
+        // B is cold; A is still hot through seq 3.
+        let chunk_bytes = mgr.bytes_for_tokens(8);
+        assert_eq!(mgr.cold_bytes(), chunk_bytes);
+        let freed = mgr.evict_cold(1);
+        assert_eq!(freed, chunk_bytes, "evicts the cold LRU chunk (B)");
+        // A's chunk survives: seq 4 still hits it.
+        mgr.alloc(4).unwrap();
+        let (c4, full4) = mgr.map_prefix(4, &pa).unwrap();
+        assert_eq!(c4, 8);
+        assert!(full4.is_some());
+        assert!(mgr.verify_accounting());
+    }
+
+    /// Regression: a sequence that advanced its cursor *through* chunks
+    /// registered by another (since-freed) sequence must not pin them —
+    /// cold chunks stay evictable (admission counts them as reclaimable),
+    /// and the survivor's generation-validated cursor goes dead harmlessly
+    /// (registration stops; no panic, no wrong link).
+    #[test]
+    fn evicting_a_pass_through_cursor_node_is_safe() {
+        let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+        mgr.set_prefix_cache(true);
+        let prompt: Vec<u32> = vec![3; 24]; // 3 chunks of 8
+        for id in [1u64, 2] {
+            mgr.alloc(id).unwrap();
+            let (cached, _) = mgr.map_prefix(id, &prompt).unwrap();
+            assert_eq!(cached, 0, "trie is cold at admission for both");
+        }
+        // Interleaved prefill: A registers each chunk first; B advances its
+        // cursor through A's nodes while keeping private pages.
+        for id in [1u64, 2] {
+            prefill_prompt(&mut mgr, id, &prompt[..8], 0, None);
+        }
+        prefill_prompt(&mut mgr, 1, &prompt[..16], 8, None);
+        prefill_prompt(&mut mgr, 2, &prompt[..16], 8, None);
+        mgr.free(1).unwrap();
+        // A's chunks are cold and evictable even though B's cursor rests on
+        // the chain.
+        let freed = mgr.release_cold();
+        assert!(freed > 0, "pass-through cursors must not pin cold chunks");
+        assert!(mgr.verify_accounting());
+        // B keeps prefilling: the dead cursor only stops registration.
+        prefill_prompt(&mut mgr, 2, &prompt, 16, Some(&[1.0]));
+        assert!(mgr.verify_accounting());
+        mgr.free(2).unwrap();
+        mgr.release_cold();
+        assert_eq!(mgr.used_bytes(), 0);
+        assert_eq!(mgr.live_pages(), 0);
+        assert!(mgr.verify_accounting());
+    }
+
     #[test]
     fn prop_paged_rows_survive_roundtrip() {
         forall("paged buffer row integrity", 40, |g| {
             let width = g.usize_in(1, 16);
             let page = g.usize_in(1, 16);
             let n = g.usize_in(0, 100);
-            let mut b = PagedBuf::new(width, page);
+            let mut pool = PagePool::new(page);
+            let mut t = BlockTable::new(width);
             let rows: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(width, 1.0)).collect();
             for r in &rows {
-                b.push_row(r);
+                pool.push_row(&mut t, r);
             }
             for (i, r) in rows.iter().enumerate() {
-                assert_eq!(b.row(i), r.as_slice());
+                assert_eq!(t.row(&pool, i), r.as_slice());
             }
-            if n > 0 {
-                let m = b.to_mat();
-                assert_eq!(m.rows(), n);
-                assert_eq!(m.row(n - 1), rows[n - 1].as_slice());
-            }
+            let total: usize = t.chunks(&pool).map(|(_, r)| r).sum();
+            assert_eq!(total, n);
         });
     }
 }

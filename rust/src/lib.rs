@@ -11,7 +11,8 @@
 //!   it is compared against (K-SVD, Eigen) and the value–output extension;
 //! * the post-training calibration pipeline that learns per-(layer, head)
 //!   projections from a calibration corpus ([`calib`]);
-//! * a compressed KV-cache serving stack: paged cache manager ([`kvcache`]),
+//! * a compressed KV-cache serving stack: a shared refcounted page pool
+//!   with copy-on-write prefix caching ([`kvcache`]),
 //!   request router + continuous batcher + prefill/decode scheduler with a
 //!   session-oriented streaming client API — per-request
 //!   [`coordinator::GenParams`], token streaming via

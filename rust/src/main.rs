@@ -266,6 +266,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "stop-token", help: "stop generation at this token id", default: None },
                     OptSpec { name: "cancel-every", help: "cancel every k-th request mid-stream (0 = never)", default: Some("0") },
                     OptSpec { name: "prefill-budget", help: "prompt tokens prefilled per fused step across sequences (0 = prefill-chunk)", default: Some("0") },
+                    OptSpec { name: "prefix-cache", help: "share prompt-prefix pages across sequences (bare flag enables; 0 disables)", default: Some("0") },
+                    OptSpec { name: "shared-prefix", help: "tokens of common prompt prefix across the synthetic requests (demo for --prefix-cache)", default: Some("0") },
                     OptSpec { name: "backend", help: "rust | pjrt", default: Some("rust") },
                 ],
             )
@@ -281,19 +283,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // immediate cache-page reclamation (0 = never cancel).
     let cancel_every = args.usize_or("cancel-every", 0);
     let stop_token: Option<u32> = args.parsed("stop-token");
+    // Optional shared system prompt: the first `shared_prefix` tokens of
+    // every request are identical, demonstrating prefix-cache hits.
+    let shared_prefix = args.usize_or("shared-prefix", 0).min(prompt_len);
     println!(
-        "serve demo: {} requests (prompt {prompt_len}, gen {gen_len}) on {}/{} backend={}",
-        n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend
+        "serve demo: {} requests (prompt {prompt_len}, gen {gen_len}, shared prefix {shared_prefix}) on {}/{} backend={} prefix_cache={}",
+        n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend, cfg.serve.prefix_cache
     );
     let engine = build_engine(&cfg)?;
     let corpus = Corpus::new(cfg.model.vocab_size, 1234);
     let router = Router::new(BatcherConfig::from(&cfg.serve));
     let handle = router.serve(Box::new(engine));
 
+    let prefix = corpus.sequence(kqsvd::text::Split::Validation, 999, shared_prefix);
     let submissions: Vec<RequestHandle> = (0..n_requests)
         .map(|i| {
-            let prompt =
-                corpus.sequence(kqsvd::text::Split::Validation, 1000 + i as u64, prompt_len);
+            let mut prompt = prefix.clone();
+            prompt.extend(corpus.sequence(
+                kqsvd::text::Split::Validation,
+                1000 + i as u64,
+                prompt_len - shared_prefix,
+            ));
             let params = GenParams {
                 max_new_tokens: gen_len,
                 temperature,
@@ -356,6 +366,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "throughput: decode {} · prefill {}",
         tok_per_s(metric_names::DECODE_TOK_PER_S),
         tok_per_s(metric_names::PREFILL_TOK_PER_S),
+    );
+    let hit = metrics.counter(metric_names::PREFIX_CACHE_HIT_TOKENS);
+    let miss = metrics.counter(metric_names::PREFIX_CACHE_MISS_TOKENS);
+    println!(
+        "prefix cache: {hit} hit / {miss} miss prompt tokens · {} shared pages · {} saved",
+        metrics
+            .gauge_value(metric_names::SHARED_PAGES)
+            .unwrap_or(0.0) as u64,
+        fmt_bytes(
+            metrics
+                .gauge_value(metric_names::BYTES_SAVED_BY_SHARING)
+                .unwrap_or(0.0) as u64
+        ),
     );
     Ok(())
 }

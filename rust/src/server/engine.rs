@@ -36,8 +36,8 @@
 
 use crate::calib::ProjectionSet;
 use crate::config::{Config, Method};
-use crate::coordinator::Engine;
-use crate::kvcache::{CacheSpec, KvCacheManager, LayerGeom, PagedBuf, SeqId};
+use crate::coordinator::{Engine, PrefixHit};
+use crate::kvcache::{BlockTable, CacheSpec, KvCacheManager, LayerGeom, SeqId};
 use crate::linalg::Mat;
 use crate::model::ops::{rmsnorm_into, rmsnorm_row, silu};
 use crate::model::{softmax_inplace, Transformer};
@@ -97,12 +97,11 @@ struct BatchScratch {
     gate: Mat,
     up: Mat,
     mlp_out: Mat,
-    /// Prefill-only: dense causal scores (`chunk×T`), per-head fold output,
-    /// and densified per-head cache views (`T×R`, `T×R_v`).
+    /// Prefill-only: dense causal scores (`chunk×T`) and per-head fold
+    /// output (the cache itself is consumed page-by-page via the paged
+    /// GEMMs in [`crate::attn`] — never densified).
     scores: Mat,
     head_out: Mat,
-    ckd: Mat,
-    cvd: Mat,
     /// Final logits (`B×vocab`).
     logits: Mat,
 }
@@ -131,8 +130,6 @@ impl BatchScratch {
             mlp_out: m(),
             scores: m(),
             head_out: m(),
-            ckd: m(),
-            cvd: m(),
             logits: m(),
         }
     }
@@ -244,7 +241,8 @@ impl ServingEngine {
                 .collect(),
             page_tokens: 16,
         };
-        let cache = KvCacheManager::new(spec, cfg.serve.cache_budget_bytes);
+        let mut cache = KvCacheManager::new(spec, cfg.serve.cache_budget_bytes);
+        cache.set_prefix_cache(cfg.serve.prefix_cache);
         Ok(ServingEngine {
             preset: model.cfg.name.clone(),
             scratch: BatchScratch::new(model.cfg.n_kv_heads),
@@ -304,6 +302,7 @@ impl ServingEngine {
                 &q_heads,
                 &bproj,
                 &folds,
+                self.cache.pool(),
                 &seq.k[li],
                 &seq.v[li],
                 scale,
@@ -450,17 +449,19 @@ impl ServingEngine {
                 }
             }
 
-            // Compressed attention, threaded over (sequence × kv-head).
+            // Compressed attention, threaded over (sequence × kv-head);
+            // shared prefix pages are read in place through the pool.
             let folds: Vec<&Mat> = (0..h)
                 .map(|hq| &lp.groups[hq / group].value_folds[hq % group])
                 .collect();
-            let mut seqs: Vec<(&[PagedBuf], &[PagedBuf])> = Vec::with_capacity(b);
+            let mut seqs: Vec<(&[BlockTable], &[BlockTable])> = Vec::with_capacity(b);
             for &(id, _) in batch {
                 let sq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
                 seqs.push((sq.k[li].as_slice(), sq.v[li].as_slice()));
             }
             crate::attn::decode_attn_batch(
                 &s.qp,
+                self.cache.pool(),
                 &seqs,
                 &folds,
                 scale,
@@ -531,12 +532,13 @@ impl ServingEngine {
 
             // Dense causal attention over the compressed cache (GEMMs):
             // S = q̃·C_Kᵀ, causal softmax, ctx = P·C_V, out += ctx·F_i.
+            // The score and context GEMMs consume the cache page-by-page
+            // (no densify copy), bit-identical to the dense kernels.
             let seq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
+            let pool = self.cache.pool();
             s.attn_out.resize(n, d);
             s.attn_out.data_mut().fill(0.0);
             for kv in 0..hkv {
-                seq.k[li][kv].copy_into(&mut s.ckd);
-                seq.v[li][kv].copy_into(&mut s.cvd);
                 for g in 0..group {
                     let hq = kv * group + g;
                     s.qhead.resize(n, dh);
@@ -546,10 +548,10 @@ impl ServingEngine {
                             .copy_from_slice(&s.q.row(i)[hq * dh..(hq + 1) * dh]);
                     }
                     s.qhead.matmul_to(&lp.groups[kv].key.b, &mut s.qtmp);
-                    s.qtmp.matmul_nt_to(&s.ckd, &mut s.scores);
+                    crate::attn::matmul_nt_paged(&s.qtmp, pool, &seq.k[li][kv], &mut s.scores);
                     s.scores.scale_inplace(scale);
                     crate::attn::causal_softmax_rows(&mut s.scores, pos0);
-                    s.scores.matmul_to(&s.cvd, &mut s.ctx);
+                    crate::attn::matmul_paged(&s.scores, pool, &seq.v[li][kv], &mut s.ctx);
                     s.ctx
                         .matmul_to(&lp.groups[kv].value_folds[g], &mut s.head_out);
                     add_inplace(&mut s.attn_out, &s.head_out);
@@ -625,15 +627,16 @@ impl ServingEngine {
                     inp.q[(bi * h + hi) * dh..(bi * h + hi + 1) * dh].copy_from_slice(qh);
                 }
                 let seq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
+                let pool = self.cache.pool();
                 for kv in 0..hkv {
                     let (kb, vb) = (&seq.k[li][kv], &seq.v[li][kv]);
                     let rk = kb.width();
                     let rv = vb.width();
                     for ti in 0..valid {
                         let off = ((bi * hkv + kv) * tt + ti) * rr;
-                        inp.ck[off..off + rk].copy_from_slice(kb.row(ti));
+                        inp.ck[off..off + rk].copy_from_slice(kb.row(pool, ti));
                         let offv = ((bi * hkv + kv) * tt + ti) * rrv;
-                        inp.cv[offv..offv + rv].copy_from_slice(vb.row(ti));
+                        inp.cv[offv..offv + rv].copy_from_slice(vb.row(pool, ti));
                     }
                 }
                 for ti in 0..valid {
@@ -681,6 +684,33 @@ impl Engine for ServingEngine {
         Ok(())
     }
 
+    fn alloc_with_prompt(
+        &mut self,
+        id: SeqId,
+        prompt: &[u32],
+        max_total_tokens: usize,
+    ) -> Result<PrefixHit> {
+        self.cache.alloc(id).map_err(|e| anyhow!("{e}"))?;
+        // Map cached prompt chunks before reserving: the reservation then
+        // covers only the incremental (unshared) bytes.
+        let (cached_tokens, full_logits) = match self.cache.map_prefix(id, prompt) {
+            Ok(hit) => hit,
+            Err(e) => {
+                let _ = self.cache.free(id);
+                return Err(anyhow!("{e}"));
+            }
+        };
+        if let Err(e) = self.cache.reserve(id, max_total_tokens) {
+            // No residue on failure: free() drops the mapped page refs too.
+            let _ = self.cache.free(id);
+            return Err(anyhow!("{e}"));
+        }
+        Ok(PrefixHit {
+            cached_tokens,
+            full_logits,
+        })
+    }
+
     fn free(&mut self, id: SeqId) {
         let _ = self.cache.free(id);
     }
@@ -689,8 +719,21 @@ impl Engine for ServingEngine {
         self.cache.can_admit(total_tokens)
     }
 
+    fn can_admit_request(&self, prompt: &[u32], total_tokens: usize) -> bool {
+        self.cache.can_admit_prompt(prompt, total_tokens)
+    }
+
     fn can_admit_if_freed(&self, total_tokens: usize, freed: &[SeqId]) -> bool {
         self.cache.can_admit_if_freed(total_tokens, freed)
+    }
+
+    fn can_admit_request_if_freed(
+        &self,
+        prompt: &[u32],
+        total_tokens: usize,
+        freed: &[SeqId],
+    ) -> bool {
+        self.cache.can_admit_prompt_if_freed(prompt, total_tokens, freed)
     }
 
     fn prefill(
@@ -700,19 +743,30 @@ impl Engine for ServingEngine {
         pos0: usize,
         is_last_chunk: bool,
     ) -> Result<Option<Vec<f32>>> {
-        if self.serial_oracle {
+        let logits = if self.serial_oracle {
             // Serial oracle: one forward_token per prompt token.
             let mut last = None;
             for (i, &tok) in tokens.iter().enumerate() {
                 last = Some(self.forward_token(id, tok, pos0 + i)?);
                 self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
             }
-            return Ok(if is_last_chunk { last } else { None });
-        }
-        let logits = self.prefill_chunk_gemm(id, tokens, pos0, is_last_chunk)?;
-        self.cache
-            .commit_tokens(id, tokens.len())
-            .map_err(|e| anyhow!("{e}"))?;
+            if is_last_chunk {
+                last
+            } else {
+                None
+            }
+        } else {
+            let logits = self.prefill_chunk_gemm(id, tokens, pos0, is_last_chunk)?;
+            self.cache
+                .commit_tokens(id, tokens.len())
+                .map_err(|e| anyhow!("{e}"))?;
+            logits
+        };
+        // Register completed page-aligned chunks in the prefix trie (no-op
+        // when prefix caching is off); memoize the boundary logits when the
+        // prompt ends exactly on a page boundary so identical future prompts
+        // hit with zero prefill.
+        self.cache.note_prefill_tokens(id, tokens, logits.as_deref());
         Ok(logits)
     }
 
@@ -765,6 +819,17 @@ impl Engine for ServingEngine {
 
     fn cache_peak_bytes(&self) -> u64 {
         self.cache.peak_bytes()
+    }
+
+    fn prefix_cache_enabled(&self) -> bool {
+        self.cache.prefix_cache()
+    }
+
+    fn prefix_cache_stats(&self) -> (u64, u64) {
+        (
+            self.cache.shared_pages() as u64,
+            self.cache.bytes_saved_by_sharing(),
+        )
     }
 
     fn check_invariants(&self) -> Result<()> {
@@ -1016,6 +1081,99 @@ mod tests {
             eng_kq.cache_bytes_per_token(),
             eng_none.cache_bytes_per_token()
         );
+    }
+
+    /// Acceptance: for a batch of requests sharing a random common prefix,
+    /// decode logits with the prefix cache enabled are **bit-identical** to
+    /// a cold (cache-disabled) run, across GQA presets and methods. The
+    /// warm engine registers the prefix while prefilling the first request
+    /// and maps it for every later one, so sequences 1.. genuinely share
+    /// pages and prefill only their suffixes.
+    #[test]
+    fn prop_prefix_cache_decode_bit_identical_to_cold() {
+        use crate::util::prop::forall;
+        forall("prefix-cache decode == cold run (bitwise)", 4, |g| {
+            let preset_name = *g.choose(&["test-tiny", "test-tiny-gqa"]);
+            let method = *g.choose(&[Method::None, Method::KqSvd]);
+            let mut warm = build_engine(preset_name, method);
+            warm.cache.set_prefix_cache(true);
+            let mut cold = build_engine(preset_name, method); // identical weights
+            let page = warm.cache.spec().page_tokens;
+            let chunks = g.usize_in(1, 2);
+            let prefix: Vec<u32> = (0..chunks * page)
+                .map(|_| g.usize_in(0, 63) as u32)
+                .collect();
+
+            let b = g.usize_in(2, 3);
+            let mut batch: Vec<(SeqId, u32)> = Vec::new();
+            for sid in 0..b as SeqId {
+                let suffix_len = g.usize_in(1, 6);
+                let mut prompt = prefix.clone();
+                prompt.extend((0..suffix_len).map(|_| g.usize_in(0, 63) as u32));
+                for (eng, expect_hit) in [(&mut warm, sid > 0), (&mut cold, false)] {
+                    let hit = eng
+                        .alloc_with_prompt(sid, &prompt, prompt.len() + 8)
+                        .unwrap();
+                    if expect_hit {
+                        assert_eq!(
+                            hit.cached_tokens,
+                            chunks * page,
+                            "later sequences must hit the registered prefix"
+                        );
+                    } else {
+                        assert_eq!(hit.cached_tokens, 0);
+                    }
+                    let start = hit.cached_tokens;
+                    eng.prefill(sid, &prompt[start..], start, true).unwrap();
+                }
+                batch.push((sid, g.usize_in(0, 63) as u32));
+            }
+            assert!(warm.cache.shared_pages() > 0, "prefix must actually be shared");
+
+            for step in 0..3 {
+                let got = warm.decode(&batch).unwrap();
+                let want = cold.decode(&batch).unwrap();
+                for (bi, (a, c)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        a == c,
+                        "{preset_name}/{method:?} step {step} seq {bi}: logits not bit-identical"
+                    );
+                }
+                for (bi, (_, tok)) in batch.iter_mut().enumerate() {
+                    *tok = crate::model::argmax(&got[bi]) as u32;
+                }
+            }
+        });
+    }
+
+    /// A resubmitted identical (page-aligned) prompt is a full-prefix hit:
+    /// the memoized boundary logits equal the cold prefill's logits bit for
+    /// bit, and the sequence needs no prefill at all.
+    #[test]
+    fn full_prefix_hit_returns_cached_logits() {
+        let mut eng = build_engine("test-tiny", Method::KqSvd);
+        eng.cache.set_prefix_cache(true);
+        let prompt: Vec<u32> = (0..32).map(|i| ((i * 7 + 5) % 64) as u32).collect();
+        let hit1 = eng.alloc_with_prompt(1, &prompt, 40).unwrap();
+        assert_eq!(hit1.cached_tokens, 0);
+        let cold_logits = eng.prefill(1, &prompt, 0, true).unwrap().unwrap();
+
+        let hit2 = eng.alloc_with_prompt(2, &prompt, 40).unwrap();
+        assert_eq!(hit2.cached_tokens, 32, "whole prompt cached");
+        assert_eq!(
+            hit2.full_logits.as_deref(),
+            Some(cold_logits.as_slice()),
+            "memoized boundary logits must be the cold prefill's, bit for bit"
+        );
+        assert_eq!(eng.cache.seq_tokens(2).unwrap(), 32);
+        assert!(eng.cache.shared_pages() > 0);
+        // Both sequences decode from identical state.
+        let a = eng.decode(&[(1, 9)]).unwrap().remove(0);
+        let b = eng.decode(&[(2, 9)]).unwrap().remove(0);
+        assert!(a == b, "shared-cache decode must be bit-identical");
+        eng.free(1);
+        eng.free(2);
+        assert!(eng.cache.verify_accounting());
     }
 
     #[test]

@@ -150,6 +150,7 @@ impl EngineBuilder {
                 "provided cache spec doesn't match the projection geometry"
             );
             engine.cache = cache;
+            engine.cache.set_prefix_cache(cfg.serve.prefix_cache);
         }
         Ok(engine)
     }

@@ -6,7 +6,7 @@
 //! warning when artifacts are absent so `cargo test` works standalone.
 
 use kqsvd::attn::{decode_attn_layer, online_attn};
-use kqsvd::kvcache::PagedBuf;
+use kqsvd::kvcache::{BlockTable, PagePool};
 use kqsvd::linalg::Mat;
 use kqsvd::runtime::{AttnDecodeInputs, PjrtEngine, Registry};
 use kqsvd::util::rng::Pcg64;
@@ -22,10 +22,10 @@ fn artifacts_dir() -> Option<&'static Path> {
     }
 }
 
-fn fill_buf(rows: &Mat, page: usize) -> PagedBuf {
-    let mut b = PagedBuf::new(rows.cols(), page);
+fn fill_buf(pool: &mut PagePool, rows: &Mat) -> BlockTable {
+    let mut b = BlockTable::new(rows.cols());
     for i in 0..rows.rows() {
-        b.push_row(rows.row(i));
+        pool.push_row(&mut b, rows.row(i));
     }
     b
 }
@@ -79,14 +79,16 @@ fn make_case(meta: &kqsvd::runtime::ArtifactMeta, valid_lens: &[usize], seed: u6
         }
 
         // Rust-side expectation.
-        let k_bufs: Vec<PagedBuf> = cks.iter().map(|m| fill_buf(m, 16)).collect();
-        let v_bufs: Vec<PagedBuf> = cvs.iter().map(|m| fill_buf(m, 16)).collect();
+        let mut pool = PagePool::new(16);
+        let k_tables: Vec<BlockTable> = cks.iter().map(|m| fill_buf(&mut pool, m)).collect();
+        let v_tables: Vec<BlockTable> = cvs.iter().map(|m| fill_buf(&mut pool, m)).collect();
         let out = decode_attn_layer(
             &q_heads,
             &bproj.iter().collect::<Vec<_>>(),
             &folds.iter().collect::<Vec<_>>(),
-            &k_bufs,
-            &v_bufs,
+            &pool,
+            &k_tables,
+            &v_tables,
             meta.scale as f32,
             group,
             dm,
@@ -210,7 +212,9 @@ fn online_attn_handles_bucket_padding_semantics() {
     let ck = Mat::randn(t, r, 1.0, &mut rng);
     let cv = Mat::randn(t, r, 1.0, &mut rng);
     let q: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let base = online_attn(&q, &fill(&ck, 8), &fill(&cv, 8), 0.5);
+    let mut pool = PagePool::new(8);
+    let (ckb, cvb) = (fill(&mut pool, &ck), fill(&mut pool, &cv));
+    let base = online_attn(&q, &pool, &ckb, &cvb, 0.5);
 
     // Rank padding with zero columns.
     let pad_cols = |m: &Mat, extra: usize| {
@@ -222,15 +226,16 @@ fn online_attn_handles_bucket_padding_semantics() {
     };
     let mut qp = q.clone();
     qp.extend([0.0; 3]);
-    let padded = online_attn(&qp, &fill(&pad_cols(&ck, 3), 8), &fill(&cv, 8), 0.5);
+    let ckp = fill(&mut pool, &pad_cols(&ck, 3));
+    let padded = online_attn(&qp, &pool, &ckp, &cvb, 0.5);
     for (a, b) in base.iter().zip(&padded) {
         assert!((a - b).abs() < 1e-5);
     }
 
-    fn fill(rows: &Mat, page: usize) -> PagedBuf {
-        let mut b = PagedBuf::new(rows.cols(), page);
+    fn fill(pool: &mut PagePool, rows: &Mat) -> BlockTable {
+        let mut b = BlockTable::new(rows.cols());
         for i in 0..rows.rows() {
-            b.push_row(rows.row(i));
+            pool.push_row(&mut b, rows.row(i));
         }
         b
     }

@@ -36,6 +36,13 @@ fn tiny_engine() -> ServingEngine {
         .unwrap()
 }
 
+/// [`tiny_engine`] with the shared-page prefix cache enabled.
+fn tiny_engine_prefix() -> ServingEngine {
+    let mut eng = tiny_engine();
+    eng.cache.set_prefix_cache(true);
+    eng
+}
+
 fn batcher(max_batch: usize, chunk: usize) -> Batcher {
     Batcher::new(BatcherConfig {
         max_batch,
@@ -203,6 +210,7 @@ fn streaming_cancellation_reclaims_cache_and_counts() {
         max_batch: 2,
         max_queue: 16,
         prefill_chunk: 4,
+        ..Default::default()
     });
     let handle = router.serve(Box::new(eng));
     let rh = handle.submit(Request::new(0, vec![9, 2, 55, 13], 200));
@@ -232,6 +240,7 @@ fn streaming_rejection_terminates_the_stream() {
         max_batch: 2,
         max_queue: 16,
         prefill_chunk: 4,
+        ..Default::default()
     });
     let handle = router.serve(Box::new(eng));
     let too_long: Vec<u32> = (0..max_seq as u32 + 8).map(|t| t % 60).collect();
@@ -333,4 +342,124 @@ fn temperature_sampling_is_reproducible_end_to_end() {
         b.run_to_completion(&mut eng).unwrap()[0].tokens.clone()
     };
     assert_eq!(run(11), run(11), "same seed must reproduce");
+}
+
+#[test]
+fn prefix_cache_full_hit_schedules_zero_prefill() {
+    // Acceptance: resubmitting an identical page-aligned prompt maps every
+    // chunk from the trie — the first step runs ZERO prefill tokens (the
+    // first token comes from the memoized boundary logits) and the warm
+    // token stream is identical to the cold one.
+    let mut eng = tiny_engine_prefix();
+    let mut b = batcher(2, 16);
+    let prompt: Vec<u32> = (0..32).map(|i| ((i * 5 + 1) % 64) as u32).collect();
+    b.submit(&eng, Request::new(1, prompt.clone(), 4)).unwrap();
+    let done1 = b.run_to_completion(&mut eng).unwrap();
+    assert_eq!(done1[0].tokens.len(), 4);
+
+    b.submit(&eng, Request::new(2, prompt, 4)).unwrap();
+    let out = b.step(&mut eng).unwrap();
+    match out {
+        StepOutcome::Step {
+            prefill_seqs,
+            prefill_tokens,
+            decode_seqs,
+            prefix_hit_tokens,
+            prefix_miss_tokens,
+            ..
+        } => {
+            assert_eq!(prefill_tokens, 0, "full hit must not prefill");
+            assert_eq!(prefill_seqs, 0);
+            assert_eq!(prefix_hit_tokens, 32);
+            assert_eq!(prefix_miss_tokens, 0);
+            assert_eq!(decode_seqs, 1, "decode-ready straight from admission");
+        }
+        other => panic!("expected a step, got {other:?}"),
+    }
+    let done2 = b.run_to_completion(&mut eng).unwrap();
+    assert_eq!(done1[0].tokens, done2[0].tokens, "warm run must match cold run");
+    // Nothing leaks: what survives is exactly the cold cached prefix, and
+    // evicting it returns the pool to baseline.
+    assert_eq!(eng.cache.live_sequences(), 0);
+    assert_eq!(eng.cache.cold_bytes(), eng.cache.used_bytes());
+    eng.cache.release_cold();
+    assert_eq!(eng.cache.live_pages(), 0);
+    assert_eq!(eng.cache.used_bytes(), 0);
+    assert!(eng.cache.verify_accounting());
+}
+
+#[test]
+fn cow_shared_prefix_isolation_and_reclaim() {
+    // Two sequences share a 16-token prefix then diverge. Neither may ever
+    // observe the other's appends (decode logits bit-identical to solo cold
+    // runs); freeing one returns only its private bytes; freeing both plus
+    // cold eviction returns the pool to baseline.
+    let solo_logits = |prompt: &[u32]| -> Vec<Vec<f32>> {
+        let mut solo = tiny_engine(); // prefix cache off: the cold reference
+        solo.alloc(1, prompt.len() + 4).unwrap();
+        solo.prefill(1, prompt, 0, true).unwrap();
+        let mut out = Vec::new();
+        let mut tok = 7u32;
+        for _ in 0..3 {
+            let l = solo.decode(&[(1, tok)]).unwrap().remove(0);
+            tok = kqsvd::model::argmax(&l) as u32;
+            out.push(l);
+        }
+        out
+    };
+    let prefix: Vec<u32> = (0..16).map(|i| ((i * 3 + 2) % 64) as u32).collect();
+    let mut pa = prefix.clone();
+    pa.extend([1, 2, 3]);
+    let mut pb = prefix;
+    pb.extend([4, 5, 6]);
+    let ref_a = solo_logits(&pa);
+    let ref_b = solo_logits(&pb);
+
+    let mut eng = tiny_engine_prefix();
+    let hit_a = eng.alloc_with_prompt(1, &pa, pa.len() + 4).unwrap();
+    assert_eq!(hit_a.cached_tokens, 0, "cold trie");
+    eng.prefill(1, &pa, 0, true).unwrap();
+    let used_a = eng.cache.used_bytes();
+    let hit_b = eng.alloc_with_prompt(2, &pb, pb.len() + 4).unwrap();
+    assert_eq!(hit_b.cached_tokens, 16, "B maps A's registered prefix");
+    eng.prefill(2, &pb[16..], 16, true).unwrap();
+    assert!(eng.cache.shared_pages() > 0, "prefix pages are shared");
+    assert!(eng.cache.bytes_saved_by_sharing() > 0);
+    let used_both = eng.cache.used_bytes();
+    assert!(
+        used_both - used_a < used_a,
+        "B's incremental bytes ({}) must be less than a full prompt ({used_a})",
+        used_both - used_a
+    );
+
+    // Interleaved decode: divergent appends never cross over.
+    let (mut ta, mut tb) = (7u32, 7u32);
+    for step in 0..2 {
+        let la = eng.decode(&[(1, ta)]).unwrap().remove(0);
+        let lb = eng.decode(&[(2, tb)]).unwrap().remove(0);
+        assert!(la == ref_a[step], "A diverged at step {step}");
+        assert!(lb == ref_b[step], "B diverged at step {step}");
+        ta = kqsvd::model::argmax(&la) as u32;
+        tb = kqsvd::model::argmax(&lb) as u32;
+    }
+
+    // Freeing B returns only its private bytes; A keeps decoding bit-exact.
+    let before = eng.cache.used_bytes();
+    eng.free(2);
+    let after_b = eng.cache.used_bytes();
+    assert!(after_b < before, "B's private pages must be released");
+    assert_eq!(eng.cache.shared_pages(), 0, "A is the sole mapper again");
+    let la = eng.decode(&[(1, ta)]).unwrap().remove(0);
+    assert!(la == ref_a[2], "A diverged after B was freed");
+    assert!(eng.cache.verify_accounting());
+
+    // Freeing A leaves only the cold cached prefix; eviction → baseline.
+    eng.free(1);
+    assert_eq!(eng.cache.live_sequences(), 0);
+    assert!(eng.cache.used_bytes() > 0, "registered prefix stays cold");
+    assert_eq!(eng.cache.cold_bytes(), eng.cache.used_bytes());
+    eng.cache.release_cold();
+    assert_eq!(eng.cache.used_bytes(), 0);
+    assert_eq!(eng.cache.live_pages(), 0);
+    assert!(eng.cache.verify_accounting());
 }
