@@ -27,6 +27,7 @@ use kqsvd::config::{Config, Method};
 use kqsvd::coordinator::metrics::names as metric_names;
 use kqsvd::coordinator::{Batcher, BatcherConfig, GenParams, Request, RequestHandle, Router, StepOutcome};
 use kqsvd::jsonutil::Json;
+use kqsvd::kvcache::KvDtype;
 use kqsvd::server::{build_engine, ServingEngine};
 use kqsvd::text::{Corpus, Split};
 use kqsvd::util::stats::fmt_bytes;
@@ -52,7 +53,7 @@ struct RunResult {
     ttft_p50: f64,
     ttft_p95: f64,
     tpot_mean: f64,
-    cache_per_tok: usize,
+    cache_per_tok: u64,
     peak_bytes: u64,
 }
 
@@ -65,6 +66,7 @@ struct Workload {
     calib_len: usize,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     w: &Workload,
     method: Method,
@@ -72,14 +74,22 @@ fn run(
     max_batch: usize,
     mode: Mode,
     serial_oracle: bool,
+    kv_dtype: KvDtype,
 ) -> anyhow::Result<RunResult> {
     let mut cfg = Config::from_preset(w.preset).map_err(anyhow::Error::msg)?;
     cfg.method = method;
     cfg.serve.backend = backend.into();
     cfg.serve.max_batch = max_batch;
+    cfg.serve.kv_dtype = kv_dtype;
     cfg.calib.n_calib_seqs = w.calib_seqs;
     cfg.calib.calib_seq_len = w.calib_len;
-    cfg.run_dir = format!("runs/bench_e2e_{}_{}_{}", w.preset, method.name(), backend);
+    cfg.run_dir = format!(
+        "runs/bench_e2e_{}_{}_{}_{}",
+        w.preset,
+        method.name(),
+        backend,
+        kv_dtype.name()
+    );
     let mut engine = build_engine(&cfg)?;
     engine.set_serial_oracle(serial_oracle);
     let cache_per_tok = engine.cache_bytes_per_token();
@@ -350,6 +360,70 @@ fn shared_prefix_scenario(smoke: bool) -> anyhow::Result<Json> {
         ))
 }
 
+/// Quantized-vs-f32 scenario (tentpole): the same kqsvd workload at batch 8
+/// with f32 vs int8 page storage. Asserts the int8 spec shrinks bytes/token
+/// by ≥ 3.5× (the acceptance floor; per-row int8+scale gives `Σ4w/Σ(w+1)`)
+/// and records decode tok/s + bytes/token for both modes in
+/// `BENCH_serving.json`.
+fn quantized_vs_f32(smoke: bool) -> anyhow::Result<Json> {
+    let w = if smoke {
+        Workload {
+            preset: "mha-small",
+            n_requests: 4,
+            prompt_len: 32,
+            gen_len: 8,
+            calib_seqs: 2,
+            calib_len: 64,
+        }
+    } else {
+        Workload {
+            preset: "mha-small",
+            n_requests: 8,
+            prompt_len: 64,
+            gen_len: 16,
+            calib_seqs: 4,
+            calib_len: 128,
+        }
+    };
+    let f32_r = run(&w, Method::KqSvd, "rust", 8, Mode::Offline, false, KvDtype::F32)?;
+    let i8_r = run(&w, Method::KqSvd, "rust", 8, Mode::Offline, false, KvDtype::Int8)?;
+    let ratio = f32_r.cache_per_tok as f64 / i8_r.cache_per_tok as f64;
+    println!("\nquantized vs f32 cache ({}, batch 8, method kqsvd):", w.preset);
+    println!(
+        "  f32 : decode {:.1} tok/s · {} /token · peak {}",
+        f32_r.decode_tok_per_s,
+        fmt_bytes(f32_r.cache_per_tok),
+        fmt_bytes(f32_r.peak_bytes)
+    );
+    println!(
+        "  int8: decode {:.1} tok/s · {} /token · peak {}",
+        i8_r.decode_tok_per_s,
+        fmt_bytes(i8_r.cache_per_tok),
+        fmt_bytes(i8_r.peak_bytes)
+    );
+    println!("  bytes/token ratio: {ratio:.2}× (target ≥ 3.5×)");
+    anyhow::ensure!(
+        ratio >= 3.5,
+        "int8 bytes/token reduction {ratio:.2}× is below the 3.5× acceptance floor"
+    );
+    anyhow::ensure!(
+        i8_r.peak_bytes < f32_r.peak_bytes,
+        "int8 peak cache must be smaller"
+    );
+    Ok(Json::obj()
+        .set("preset", w.preset)
+        .set("n_requests", w.n_requests)
+        .set("prompt_len", w.prompt_len)
+        .set("gen_len", w.gen_len)
+        .set("f32_decode_tok_per_s", f32_r.decode_tok_per_s)
+        .set("int8_decode_tok_per_s", i8_r.decode_tok_per_s)
+        .set("f32_bytes_per_token", f32_r.cache_per_tok)
+        .set("int8_bytes_per_token", i8_r.cache_per_tok)
+        .set("bytes_per_token_ratio", ratio)
+        .set("f32_peak_bytes", f32_r.peak_bytes)
+        .set("int8_peak_bytes", i8_r.peak_bytes))
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("KQSVD_BENCH_SMOKE")
         .map(|v| v == "1")
@@ -408,7 +482,7 @@ fn main() -> anyhow::Result<()> {
         };
         for batch in [1usize, 8] {
             for &mode in modes {
-                let r = run(&main_w, method, backend, batch, mode, false)?;
+                let r = run(&main_w, method, backend, batch, mode, false, KvDtype::F32)?;
                 t.row(&[
                     method.name().into(),
                     backend.into(),
@@ -419,7 +493,7 @@ fn main() -> anyhow::Result<()> {
                     fnum(r.ttft_p50, 2),
                     fnum(r.ttft_p95, 2),
                     fnum(r.tpot_mean, 3),
-                    fmt_bytes(r.cache_per_tok as u64),
+                    fmt_bytes(r.cache_per_tok),
                     fmt_bytes(r.peak_bytes),
                 ]);
                 main_rows.push(
@@ -453,8 +527,8 @@ fn main() -> anyhow::Result<()> {
         calib_len: 48,
     };
     println!("\nserial-vs-batch decode ({}, batch 8, method kqsvd):", tiny_w.preset);
-    let serial = run(&tiny_w, Method::KqSvd, "rust", 8, Mode::Offline, true)?;
-    let batch = run(&tiny_w, Method::KqSvd, "rust", 8, Mode::Offline, false)?;
+    let serial = run(&tiny_w, Method::KqSvd, "rust", 8, Mode::Offline, true, KvDtype::F32)?;
+    let batch = run(&tiny_w, Method::KqSvd, "rust", 8, Mode::Offline, false, KvDtype::F32)?;
     let speedup = batch.decode_tok_per_s / serial.decode_tok_per_s.max(1e-9);
     println!(
         "  serial oracle: decode {:.1} tok/s · prefill {:.1} tok/s",
@@ -471,6 +545,7 @@ fn main() -> anyhow::Result<()> {
     let interleave = long_prompt_interleave(smoke)?;
     let preemption = preemption_under_pressure()?;
     let shared_prefix = shared_prefix_scenario(smoke)?;
+    let quantized = quantized_vs_f32(smoke)?;
 
     let json = Json::obj()
         .set("bench", "e2e_serving")
@@ -501,7 +576,8 @@ fn main() -> anyhow::Result<()> {
         )
         .set("long_prompt_interleave", interleave)
         .set("preemption_under_pressure", preemption)
-        .set("shared_prefix", shared_prefix);
+        .set("shared_prefix", shared_prefix)
+        .set("quantized_vs_f32", quantized);
     std::fs::write("BENCH_serving.json", json.to_string_pretty())?;
     println!("\nCSV → bench_out/e2e_serving.csv · JSON → BENCH_serving.json");
 

@@ -58,7 +58,7 @@ fn run(method: Method, backend: &str, n_requests: usize, prompt_len: usize, gen_
         ttft_p50,
         ttft_p95,
         tpot_mean,
-        fmt_bytes(bytes_per_token as u64),
+        fmt_bytes(bytes_per_token),
         fmt_bytes(peak),
     );
     Ok(())

@@ -14,8 +14,17 @@
 //! dense `Mat::matmul_nt_to` / `Mat::matmul_to` kernels element-for-element
 //! (same dot-product order, same zero-skip), so switching from
 //! densify-then-GEMM to paged GEMMs changed no bits.
+//!
+//! Every kernel here is **dequant-fused**: quantized pages
+//! (`ServeConfig::kv_dtype = int8`) are read in place — each int8 code is
+//! dequantized per element inside the inner loop (`q · 2^e`, exact in f32)
+//! with no densify pass and no per-step dequant buffer. Because the
+//! dequantization is exact, the fused kernels are *bitwise* equal to the
+//! dense kernels applied to the dequantized matrix (property-tested below),
+//! and the only approximation is the write-side quantization, whose bound
+//! is documented in [`crate::kvcache::KvDtype`].
 
-use crate::kvcache::{BlockTable, PagePool};
+use crate::kvcache::{dequant_i8, exp_scale, BlockTable, PagePool, PageRows};
 use crate::linalg::Mat;
 use crate::util::threadpool::SendPtr;
 
@@ -63,10 +72,24 @@ pub fn online_attn_into(
         let (v_chunk, v_rows) = kv_chunks.next().expect("chunk parity");
         debug_assert_eq!(rows, v_rows);
         for i in 0..rows {
-            let krow = &k_chunk[i * r..(i + 1) * r];
+            // Score: fused dequant dot product. The int8 arm dequantizes per
+            // element (`q·2^e` is exact), so its f32 op order matches the
+            // f32 arm run on the dequantized row — bitwise.
             let mut s = 0.0f32;
-            for p in 0..r {
-                s += krow[p] * q_proj[p];
+            match &k_chunk {
+                PageRows::F32(d) => {
+                    let krow = &d[i * r..(i + 1) * r];
+                    for p in 0..r {
+                        s += krow[p] * q_proj[p];
+                    }
+                }
+                PageRows::I8 { q, exps } => {
+                    let sc = exp_scale(exps[i]);
+                    let krow = &q[i * r..(i + 1) * r];
+                    for p in 0..r {
+                        s += dequant_i8(krow[p], sc) * q_proj[p];
+                    }
+                }
             }
             s *= scale;
             // Online softmax update.
@@ -80,9 +103,20 @@ pub fn online_attn_into(
             }
             let p_i = (s - m_run).exp();
             l_run += p_i;
-            let vrow = &v_chunk[i * rv..(i + 1) * rv];
-            for (a, &vv) in acc.iter_mut().zip(vrow) {
-                *a += p_i * vv;
+            match &v_chunk {
+                PageRows::F32(d) => {
+                    let vrow = &d[i * rv..(i + 1) * rv];
+                    for (a, &vv) in acc.iter_mut().zip(vrow) {
+                        *a += p_i * vv;
+                    }
+                }
+                PageRows::I8 { q, exps } => {
+                    let sc = exp_scale(exps[i]);
+                    let vrow = &q[i * rv..(i + 1) * rv];
+                    for (a, &vq) in acc.iter_mut().zip(vrow) {
+                        *a += p_i * dequant_i8(vq, sc);
+                    }
+                }
             }
         }
         row += rows;
@@ -239,10 +273,23 @@ pub fn matmul_nt_paged(a: &Mat, pool: &PagePool, table: &BlockTable, out: &mut M
         for i in 0..m {
             let arow = a.row(i);
             for j in 0..rows {
-                let brow = &chunk[j * k..(j + 1) * k];
                 let mut acc = 0.0f32;
-                for p in 0..k {
-                    acc += arow[p] * brow[p];
+                match &chunk {
+                    PageRows::F32(d) => {
+                        let brow = &d[j * k..(j + 1) * k];
+                        for p in 0..k {
+                            acc += arow[p] * brow[p];
+                        }
+                    }
+                    PageRows::I8 { q, exps } => {
+                        // Fused dequant: same per-element op order as the
+                        // f32 arm on the (exactly) dequantized row.
+                        let sc = exp_scale(exps[j]);
+                        let brow = &q[j * k..(j + 1) * k];
+                        for p in 0..k {
+                            acc += arow[p] * dequant_i8(brow[p], sc);
+                        }
+                    }
                 }
                 out.data_mut()[i * n + col0 + j] = acc;
             }
@@ -273,10 +320,22 @@ pub fn matmul_paged(p: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat)
                 if coef == 0.0 {
                     continue;
                 }
-                let vrow = &chunk[j * w..(j + 1) * w];
-                let orow = &mut out.data_mut()[i * w..(i + 1) * w];
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += coef * vv;
+                match &chunk {
+                    PageRows::F32(d) => {
+                        let vrow = &d[j * w..(j + 1) * w];
+                        let orow = &mut out.data_mut()[i * w..(i + 1) * w];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += coef * vv;
+                        }
+                    }
+                    PageRows::I8 { q, exps } => {
+                        let sc = exp_scale(exps[j]);
+                        let vrow = &q[j * w..(j + 1) * w];
+                        let orow = &mut out.data_mut()[i * w..(i + 1) * w];
+                        for (o, &vq) in orow.iter_mut().zip(vrow) {
+                            *o += coef * dequant_i8(vq, sc);
+                        }
+                    }
                 }
             }
             t0 += rows;
@@ -530,6 +589,150 @@ mod tests {
             let mut dense2 = Mat::zeros(0, 0);
             pm.matmul_to(&cache, &mut dense2);
             assert_eq!(paged2.data(), dense2.data(), "matmul_paged diverged");
+        });
+    }
+
+    /// Fill an int8 pool from a dense matrix and return the block table plus
+    /// the exactly-dequantized dense copy the fused kernels must reproduce.
+    fn fill_quantized(pool: &mut PagePool, rows: &Mat) -> (BlockTable, Mat) {
+        let mut t = BlockTable::new(rows.cols());
+        for i in 0..rows.rows() {
+            pool.push_row(&mut t, rows.row(i));
+        }
+        let mut deq = Mat::zeros(rows.rows(), rows.cols());
+        for i in 0..rows.rows() {
+            t.read_row_into(pool, i, deq.row_mut(i));
+        }
+        (t, deq)
+    }
+
+    /// Tentpole: the dequant-fused paged GEMMs are **bitwise** equal to the
+    /// dense kernels applied to the dequantized cache — dequantization is
+    /// exact and the fused loops keep the dense kernels' f32 op order, so
+    /// reading int8 pages in place changes no bits relative to a
+    /// dequantize-then-GEMM reference (which therefore never needs to
+    /// exist at runtime).
+    #[test]
+    fn prop_int8_paged_gemms_match_dense_on_dequantized_bitwise() {
+        use crate::kvcache::KvDtype;
+        forall("int8 paged GEMMs == dense on dequantized (bitwise)", 30, |g| {
+            let t = g.usize_in(1, 60);
+            let w = g.usize_in(1, 12);
+            let m = g.usize_in(1, 8);
+            let page = g.usize_in(1, 16);
+            let mut pool = PagePool::with_dtype(page, KvDtype::Int8);
+            let cache = Mat::from_vec(t, w, g.normal_vec(t * w, 1.0));
+            let (table, deq) = fill_quantized(&mut pool, &cache);
+
+            // S = A·Ĉᵀ, fused vs dense-on-dequantized.
+            let a = Mat::from_vec(m, w, g.normal_vec(m * w, 1.0));
+            let mut fused = Mat::zeros(0, 0);
+            matmul_nt_paged(&a, &pool, &table, &mut fused);
+            let mut dense = Mat::zeros(0, 0);
+            a.matmul_nt_to(&deq, &mut dense);
+            assert_eq!(fused.data(), dense.data(), "int8 matmul_nt_paged diverged");
+
+            // ctx = P·Ĉ with causal-mask-style exact zeros.
+            let mut pm = Mat::from_vec(m, t, g.normal_vec(m * t, 1.0));
+            for i in 0..m {
+                let cut = g.usize_in(0, t);
+                for s in pm.row_mut(i)[cut..].iter_mut() {
+                    *s = 0.0;
+                }
+            }
+            let mut fused2 = Mat::zeros(0, 0);
+            matmul_paged(&pm, &pool, &table, &mut fused2);
+            let mut dense2 = Mat::zeros(0, 0);
+            pm.matmul_to(&deq, &mut dense2);
+            assert_eq!(fused2.data(), dense2.data(), "int8 matmul_paged diverged");
+        });
+    }
+
+    /// The fused online-softmax kernel over int8 pages equals the dense
+    /// reference over the dequantized cache (same tolerance as the f32
+    /// online-vs-dense property — the quantization cancels out of this
+    /// comparison entirely).
+    #[test]
+    fn prop_int8_online_attn_matches_dequantized_dense() {
+        use crate::kvcache::KvDtype;
+        forall("int8 online softmax == dense on dequantized", 30, |g| {
+            let t = g.usize_in(1, 60);
+            let r = g.usize_in(1, 12);
+            let rv = g.usize_in(1, 12);
+            let page = g.usize_in(1, 16);
+            let mut pool = PagePool::with_dtype(page, KvDtype::Int8);
+            let ck = Mat::from_vec(t, r, g.normal_vec(t * r, 1.0));
+            let cv = Mat::from_vec(t, rv, g.normal_vec(t * rv, 1.0));
+            let (kb, kdeq) = fill_quantized(&mut pool, &ck);
+            let (vb, vdeq) = fill_quantized(&mut pool, &cv);
+            let q = g.normal_vec(r, 1.0);
+            let scale = g.f64_in(0.05, 2.0) as f32;
+            let fused = online_attn(&q, &pool, &kb, &vb, scale);
+            let dense = dense_attn_reference(&q, &kdeq, &vdeq, scale);
+            for (a, b) in fused.iter().zip(&dense) {
+                assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    /// Tentpole acceptance: attention over the int8 cache stays within an
+    /// **analytic** error bound of attention over the f32 cache. With
+    /// per-element quantization errors `εK = max_i max|K_i|/126` and
+    /// `εV = max_i max|V_i|/126` (the documented codec bound), every score
+    /// shifts by at most `δ = scale·‖q̃‖₁·εK`, each softmax weight by the
+    /// factor `e^{±2δ}`, so per output element
+    /// `|out − ôut| ≤ εV + max|V|·(e^{2δ} − 1)`.
+    #[test]
+    fn prop_int8_attn_error_within_documented_bound() {
+        use crate::kvcache::KvDtype;
+        forall("int8 attention error ≤ analytic bound", 40, |g| {
+            let t = g.usize_in(1, 48);
+            let r = g.usize_in(1, 10);
+            let rv = g.usize_in(1, 10);
+            let page = g.usize_in(1, 16);
+            let ck = Mat::from_vec(t, r, g.normal_vec(t * r, 1.0));
+            let cv = Mat::from_vec(t, rv, g.normal_vec(t * rv, 1.0));
+            let q = g.normal_vec(r, 1.0);
+            let scale = g.f64_in(0.05, 0.5) as f32;
+
+            let mut fpool = PagePool::new(page);
+            let fk = fill_buf(&mut fpool, &ck);
+            let fv = fill_buf(&mut fpool, &cv);
+            let exact = online_attn(&q, &fpool, &fk, &fv, scale);
+
+            let mut qpool = PagePool::with_dtype(page, KvDtype::Int8);
+            let (qk, kdeq) = fill_quantized(&mut qpool, &ck);
+            let (qv, vdeq) = fill_quantized(&mut qpool, &cv);
+            let approx = online_attn(&q, &qpool, &qk, &qv, scale);
+
+            let row_eps = |m: &Mat| -> f64 {
+                (0..m.rows())
+                    .map(|i| {
+                        m.row(i).iter().fold(0.0f32, |mx, &x| mx.max(x.abs())) as f64 / 126.0
+                    })
+                    .fold(0.0, f64::max)
+            };
+            let eps_k = row_eps(&ck);
+            let eps_v = row_eps(&cv);
+            let q_l1: f64 = q.iter().map(|&x| x.abs() as f64).sum();
+            let delta = scale as f64 * q_l1 * eps_k;
+            let vmax = cv
+                .data()
+                .iter()
+                .chain(vdeq.data())
+                .fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+            let bound = eps_v + vmax * ((2.0 * delta).exp() - 1.0);
+            // Sanity: the codec respected its per-element bound.
+            assert!(ck.max_abs_diff(&kdeq) as f64 <= eps_k + 1e-12);
+            assert!(cv.max_abs_diff(&vdeq) as f64 <= eps_v + 1e-12);
+            for (a, b) in approx.iter().zip(&exact) {
+                let err = (a - b).abs() as f64;
+                assert!(
+                    err <= bound * 1.02 + 1e-4,
+                    "attention error {err} exceeds analytic bound {bound} \
+                     (t={t} r={r} rv={rv} scale={scale})"
+                );
+            }
         });
     }
 

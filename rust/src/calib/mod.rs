@@ -138,17 +138,28 @@ pub struct ProjectionSet {
 }
 
 impl ProjectionSet {
-    /// Compressed KV-cache bytes per token across all layers/KV heads.
+    /// Compressed KV-cache bytes per token across all layers/KV heads for a
+    /// given storage dtype. Computed by the **same** canonical function as
+    /// `kvcache::CacheSpec::bytes_per_token`
+    /// ([`crate::kvcache::cache_bytes_per_token`]), so the calibration
+    /// artifact and the cache accounting cannot silently diverge —
+    /// `ServingEngine::check_invariants` asserts their agreement on every
+    /// debug-path scheduler step.
+    pub fn bytes_per_token_for(&self, dtype: crate::kvcache::KvDtype) -> u64 {
+        let n_kv_heads = self.layers.first().map(|l| l.groups.len()).unwrap_or(0);
+        crate::kvcache::cache_bytes_per_token(
+            n_kv_heads,
+            self.layers
+                .iter()
+                .map(|l| (l.groups[0].key.rank(), l.groups[0].value_a.cols())),
+            dtype,
+        )
+    }
+
+    /// Compressed KV-cache bytes per token at f32 storage (the paper's
+    /// headline memory metric; CLI reports use it).
     pub fn bytes_per_token(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| {
-                l.groups
-                    .iter()
-                    .map(|g| 4 * (g.key.rank() + g.value_a.cols()))
-                    .sum::<usize>()
-            })
-            .sum()
+        self.bytes_per_token_for(crate::kvcache::KvDtype::F32) as usize
     }
 
     /// Uncompressed bytes per token for the same geometry.

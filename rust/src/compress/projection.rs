@@ -99,9 +99,14 @@ pub struct HeadProjection {
 }
 
 impl HeadProjection {
-    /// Compressed bytes per cached token (f32): R + R_v floats.
+    /// Compressed bytes per cached token (f32): R + R_v floats. Routed
+    /// through the canonical per-stream formula
+    /// ([`crate::kvcache::KvDtype::token_bytes`]) so the eval harness agrees
+    /// with the cache accounting by construction.
     pub fn bytes_per_token(&self) -> usize {
-        4 * (self.key.rank() + self.value.rank())
+        use crate::kvcache::KvDtype;
+        (KvDtype::F32.token_bytes(self.key.rank()) + KvDtype::F32.token_bytes(self.value.rank()))
+            as usize
     }
 
     /// Uncompressed bytes per cached token for head dim d: 2·d floats.

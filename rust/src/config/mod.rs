@@ -6,6 +6,7 @@
 //! every run directory carries an exact record of what produced it.
 
 use crate::jsonutil::{parse, Json};
+use crate::kvcache::KvDtype;
 use std::path::Path;
 
 /// Which compression method to apply to the KV cache.
@@ -149,6 +150,10 @@ pub struct ServeConfig {
     /// re-prefilling them. Off by default; `kqsvd serve --prefix-cache`
     /// turns it on.
     pub prefix_cache: bool,
+    /// Storage dtype of the cached compressed rows: `f32` (default) or
+    /// `int8` (symmetric per-row quantization, ~4× fewer bytes/token on top
+    /// of the rank compression; `kqsvd serve --kv-dtype int8`).
+    pub kv_dtype: KvDtype,
     /// Sequence-length buckets for AOT shape selection.
     pub buckets: Vec<usize>,
     /// "rust" (pure-rust attention) or "pjrt" (AOT artifacts via PJRT).
@@ -214,6 +219,14 @@ impl CalibConfig {
 
 impl Default for ServeConfig {
     fn default() -> Self {
+        // KQSVD_KV_DTYPE flips the *default* page dtype for a whole process
+        // — the CI `test-int8` job sets it to run the entire dtype-agnostic
+        // test suite over quantized pages (tests that compare dtypes pin
+        // theirs explicitly and are unaffected). Unset/unknown → f32.
+        let kv_dtype = std::env::var("KQSVD_KV_DTYPE")
+            .ok()
+            .and_then(|s| KvDtype::from_name(&s))
+            .unwrap_or(KvDtype::F32);
         Self {
             max_batch: 8,
             max_queue: 256,
@@ -221,6 +234,7 @@ impl Default for ServeConfig {
             prefill_token_budget: 0,
             cache_budget_bytes: 512 * 1024 * 1024,
             prefix_cache: false,
+            kv_dtype,
             buckets: vec![128, 256, 512, 1024],
             backend: "rust".to_string(),
             workers: 1,
@@ -386,6 +400,7 @@ impl Config {
                     .set("prefill_token_budget", s.prefill_token_budget)
                     .set("cache_budget_bytes", s.cache_budget_bytes)
                     .set("prefix_cache", s.prefix_cache)
+                    .set("kv_dtype", s.kv_dtype.name())
                     .set("buckets", s.buckets.clone())
                     .set("backend", s.backend.as_str())
                     .set("workers", s.workers),
@@ -445,6 +460,10 @@ impl Config {
                     .and_then(Json::as_u64)
                     .unwrap_or(sd.cache_budget_bytes),
                 prefix_cache: sj.bool_or("prefix_cache", sd.prefix_cache),
+                kv_dtype: KvDtype::from_name(sj.str_or("kv_dtype", sd.kv_dtype.name()))
+                    .ok_or_else(|| {
+                        format!("bad kv_dtype '{}' (f32|int8)", sj.str_or("kv_dtype", ""))
+                    })?,
                 buckets: sj
                     .get("buckets")
                     .and_then(Json::as_arr)
@@ -493,7 +512,10 @@ impl Config {
     }
 
     /// Apply CLI overrides (`--method`, `--seed`, `--paper-scale`, ...).
-    pub fn apply_overrides(&mut self, args: &crate::cli::Args) {
+    /// Errors on values that would otherwise silently fall back (a typo'd
+    /// `--kv-dtype` must not quietly benchmark the wrong storage dtype —
+    /// the JSON config path rejects the same input).
+    pub fn apply_overrides(&mut self, args: &crate::cli::Args) -> Result<(), String> {
         if let Some(m) = args.get("method").and_then(Method::from_name) {
             self.method = m;
         }
@@ -522,6 +544,10 @@ impl Config {
             // Bare `--prefix-cache` enables; `--prefix-cache 0` disables.
             self.serve.prefix_cache = args.bool_or("prefix-cache", true);
         }
+        if let Some(d) = args.get("kv-dtype") {
+            self.serve.kv_dtype =
+                KvDtype::from_name(d).ok_or_else(|| format!("bad --kv-dtype '{d}' (f32|int8)"))?;
+        }
         if let Some(n) = args.get("calib-seqs").and_then(|s| s.parse().ok()) {
             self.calib.n_calib_seqs = n;
         }
@@ -540,6 +566,7 @@ impl Config {
         if let Some(d) = args.get("artifacts-dir") {
             self.artifacts_dir = d.to_string();
         }
+        Ok(())
     }
 }
 
@@ -575,9 +602,28 @@ mod tests {
         cfg.calib.epsilon = 0.05;
         cfg.serve.buckets = vec![64, 128];
         cfg.serve.prefix_cache = true;
+        cfg.serve.kv_dtype = KvDtype::Int8;
         let j = cfg.to_json();
         let back = Config::from_json(&j).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn kv_dtype_int8_parses_and_rejects_garbage() {
+        for (name, want) in [("f32", KvDtype::F32), ("int8", KvDtype::Int8)] {
+            assert_eq!(KvDtype::from_name(name), Some(want));
+            assert_eq!(want.name(), name);
+        }
+        assert_eq!(KvDtype::from_name("int4"), None, "int4 packing is deferred");
+        let j = parse(r#"{"model": {}, "serve": {"kv_dtype": "int9"}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err(), "bad kv_dtype must be rejected");
+        let mut cfg = Config::from_preset("test-tiny").unwrap();
+        let args = crate::cli::Args::parse_from(
+            ["x", "--kv-dtype", "int8"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        cfg.apply_overrides(&args).unwrap();
+        assert_eq!(cfg.serve.kv_dtype, KvDtype::Int8);
     }
 
     #[test]
@@ -612,7 +658,7 @@ mod tests {
             .map(|s| s.to_string()),
         )
         .unwrap();
-        cfg.apply_overrides(&args);
+        cfg.apply_overrides(&args).unwrap();
         assert_eq!(cfg.method, Method::Eigen);
         assert_eq!(cfg.calib.n_calib_seqs, 128);
         assert_eq!(cfg.calib.calib_seq_len, 2048);
@@ -623,7 +669,7 @@ mod tests {
             ["x", "--prefix-cache", "0"].iter().map(|s| s.to_string()),
         )
         .unwrap();
-        cfg.apply_overrides(&off);
+        cfg.apply_overrides(&off).unwrap();
         assert!(!cfg.serve.prefix_cache);
     }
 

@@ -194,6 +194,18 @@ pub trait Engine {
     fn prefix_cache_stats(&self) -> (u64, u64) {
         (0, 0)
     }
+    /// Cache bytes per token in the engine's storage dtype (0 when the
+    /// engine has no real cache). Recorded as the `kv_bytes_per_token`
+    /// gauge so dashboards can see the quantization win directly.
+    fn kv_bytes_per_token(&self) -> u64 {
+        0
+    }
+    /// Max observed per-row relative KV quantization error (0 for f32
+    /// storage or engines without a cache; provably ≤ 1/126 for the int8
+    /// codec). Recorded as the `quant_dequant_error` gauge.
+    fn kv_quant_error(&self) -> f64 {
+        0.0
+    }
     /// Engine-internal invariant check (e.g. cache byte accounting), run by
     /// the scheduler after every debug-build step so accounting drift fails
     /// loudly next to the step that caused it.

@@ -55,6 +55,13 @@ pub mod names {
     /// Gauge: bytes the current residency would additionally cost without
     /// page sharing (Σ (refs−1)·page_bytes).
     pub const BYTES_SAVED_BY_SHARING: &str = "bytes_saved_by_sharing";
+    /// Gauge: cache bytes per token in the configured `kv_dtype` — the
+    /// paper's memory metric, further shrunk ~4× under int8 page storage.
+    pub const KV_BYTES_PER_TOKEN: &str = "kv_bytes_per_token";
+    /// Gauge: max observed per-row relative KV quantization error
+    /// (`max|x − x̂| / max|row|`; 0 under f32 storage, ≤ 1/126 by the int8
+    /// codec's bound — a larger value means the codec is broken).
+    pub const QUANT_DEQUANT_ERROR: &str = "quant_dequant_error";
 }
 
 /// Registry of named summaries + counters + gauges.
@@ -218,6 +225,8 @@ mod tests {
             names::PREFIX_CACHE_MISS_TOKENS,
             names::SHARED_PAGES,
             names::BYTES_SAVED_BY_SHARING,
+            names::KV_BYTES_PER_TOKEN,
+            names::QUANT_DEQUANT_ERROR,
         ];
         let mut uniq = all.to_vec();
         uniq.sort_unstable();

@@ -169,6 +169,12 @@ impl Router {
             .gauge(metrics::names::SHARED_PAGES, shared_pages as f64);
         self.metrics
             .gauge(metrics::names::BYTES_SAVED_BY_SHARING, bytes_saved as f64);
+        self.metrics.gauge(
+            metrics::names::KV_BYTES_PER_TOKEN,
+            engine.kv_bytes_per_token() as f64,
+        );
+        self.metrics
+            .gauge(metrics::names::QUANT_DEQUANT_ERROR, engine.kv_quant_error());
         let done = self.batcher.take_completions();
         for c in &done {
             self.metrics.incr("tokens_out", c.tokens.len() as u64);

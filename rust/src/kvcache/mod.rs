@@ -11,7 +11,12 @@
 //! compression win by the fleet's prefix-sharing factor.
 //!
 //! Layout: all pages live in one [`PagePool`]; a sequence holds, per layer ×
-//! KV head, a [`BlockTable`] of page ids for its K and V streams. Pages are
+//! KV head, a [`BlockTable`] of page ids for its K and V streams. Pages
+//! store rows in the pool's [`KvDtype`] — raw f32, or symmetric int8 codes
+//! with one power-of-two scale per row (`ServeConfig::kv_dtype`), shrinking
+//! bytes/token by ~4× on top of the rank compression; attention reads
+//! quantized pages in place through dequant-fused kernels
+//! ([`crate::attn`]), never densifying. Pages are
 //! fixed-capacity (`page_tokens` rows of one stream's width), refcounted,
 //! and immutable once another sequence maps them: a partially-filled tail
 //! page that is shared (or owned by the prefix trie) is copied to a fresh
@@ -39,9 +44,191 @@ pub type SeqId = u64;
 /// Index of a page inside the global [`PagePool`].
 pub type PageId = u32;
 
+// ---------------------------------------------------------------------------
+// Storage dtype & quantization codec
+// ---------------------------------------------------------------------------
+
+/// Storage dtype of the cached compressed rows (`ServeConfig::kv_dtype`).
+///
+/// `Int8` stores each row as symmetric int8 codes plus one power-of-two
+/// scale per row, kept as an 8-bit exponent (E8M0, the MX-format shared
+/// scale): `x̂ = q · 2^e` with `q ∈ [−127, 127]` and `e` the smallest
+/// exponent such that `2^e ≥ max|row|/127`. Two properties make this the
+/// right codec for an append-only page cache:
+///
+/// * **dequantization is exact** — `q · 2^e` is a 7-bit integer times a
+///   power of two, always representable in f32, so the dequantized value a
+///   kernel reads *is* the stored value (no read-side rounding, and the
+///   dequant-fused kernels are bitwise equal to dense kernels run on the
+///   dequantized matrix);
+/// * **rows are quantized once** — per-row scales mean appends never touch
+///   previously-written rows, and copy-on-write moves codes bitwise.
+///
+/// Error bound (see DESIGN.md §5d): per element,
+/// `|x − x̂| ≤ 2^e / 2 ≤ max|row| / 126` (the 127 of the ideal bound
+/// conservatively relaxed by one f32 ulp of slop in computing `e`). The
+/// relative form assumes `max|row| ≥ 127·2⁻¹²⁶` (≈1.5e-36); below that the
+/// exponent clamps at −126 and only the absolute bound `|x − x̂| ≤ 2⁻¹²⁷`
+/// holds — physically zero for attention purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KvDtype {
+    /// Raw f32 rows (4 bytes/channel).
+    F32,
+    /// Symmetric int8 codes + per-row E8M0 scale (1 byte/channel + 1
+    /// byte/row).
+    Int8,
+}
+
+impl KvDtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<KvDtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(KvDtype::F32),
+            "int8" | "i8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+
+    /// Bytes one cached token costs for a single stream of `width` channels.
+    ///
+    /// This is **the** canonical per-token byte formula: page allocation
+    /// ([`PagePool`]), admission accounting ([`CacheSpec::bytes_per_token`])
+    /// and the calibration artifact (`calib::ProjectionSet`) all derive
+    /// their numbers from it, so they cannot silently diverge
+    /// (`ServingEngine::check_invariants` asserts the agreement).
+    pub fn token_bytes(&self, width: usize) -> u64 {
+        match self {
+            KvDtype::F32 => 4 * width as u64,
+            KvDtype::Int8 => width as u64 + 1,
+        }
+    }
+}
+
+/// Bytes per cached token across all `n_kv_heads × layers` K and V streams —
+/// the single source of truth shared by [`CacheSpec::bytes_per_token`] and
+/// `calib::ProjectionSet::bytes_per_token_for`.
+pub fn cache_bytes_per_token(
+    n_kv_heads: usize,
+    stream_widths: impl Iterator<Item = (usize, usize)>,
+    dtype: KvDtype,
+) -> u64 {
+    n_kv_heads as u64
+        * stream_widths
+            .map(|(k_w, v_w)| dtype.token_bytes(k_w) + dtype.token_bytes(v_w))
+            .sum::<u64>()
+}
+
+/// `2^e` as f32, exact for `e ∈ [−126, 127]`.
+#[inline]
+pub fn exp_scale(e: i8) -> f32 {
+    f32::from_bits(((e as i32 + 127) as u32) << 23)
+}
+
+/// Smallest exponent `e` (clamped to the normal-f32 range) with
+/// `2^e ≥ max_abs / 127`.
+fn quant_exp(max_abs: f32) -> i8 {
+    debug_assert!(max_abs.is_finite(), "non-finite cache row");
+    if max_abs == 0.0 {
+        return 0;
+    }
+    let t = max_abs / 127.0;
+    let bits = t.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let frac = bits & 0x007f_ffff;
+    let e = if exp <= -127 {
+        // Subnormal t: any normal power of two dominates it.
+        -126
+    } else if frac == 0 {
+        exp
+    } else {
+        exp + 1
+    };
+    e.clamp(-126, 127) as i8
+}
+
+/// Quantize one f32 row to symmetric int8 with a per-row power-of-two scale;
+/// returns the scale exponent. Round-trip is idempotent: because
+/// [`dequant_i8`] is exact, re-quantizing a dequantized row reproduces the
+/// same dequantized values bit for bit (property-tested below).
+pub fn quantize_row_i8(src: &[f32], q: &mut [i8]) -> i8 {
+    quantize_row_i8_tracked(src, q).0
+}
+
+/// [`quantize_row_i8`] that also returns the row's relative quantization
+/// error (`max|x − x̂| / max|row|`), accumulated inside the quantization
+/// loop itself so the append path's error gauge costs no extra pass.
+///
+/// Rows entirely below the denormal floor (`max|row| < 127·2⁻¹²⁶`, where
+/// the exponent clamp binds and the ≤ 1/126 *relative* bound no longer
+/// holds) report a relative error of 0: their absolute error is ≤ 2⁻¹²⁷ —
+/// below anything attention can observe — and a relative number at that
+/// scale would only poison the `quant_dequant_error` gauge's
+/// codec-is-broken signal.
+fn quantize_row_i8_tracked(src: &[f32], q: &mut [i8]) -> (i8, f32) {
+    debug_assert_eq!(src.len(), q.len());
+    let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let e = quant_exp(max);
+    if max == 0.0 {
+        q.fill(0);
+        return (e, 0.0);
+    }
+    // Division by a power of two is exact; `round` then lands in
+    // [−127, 127] by the choice of `e` (float→int `as` saturates anyway).
+    let scale = exp_scale(e);
+    let inv = 1.0 / scale;
+    let mut err = 0.0f32;
+    for (qi, &x) in q.iter_mut().zip(src) {
+        *qi = (x * inv).round() as i8;
+        err = err.max((x - dequant_i8(*qi, scale)).abs());
+    }
+    let clamped = max < 127.0 * exp_scale(-126);
+    (e, if clamped { 0.0 } else { err / max })
+}
+
+/// Exact dequantization: an int8 code times a power-of-two scale is always
+/// representable in f32.
+#[inline]
+pub fn dequant_i8(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// One page's row storage, dtype-selected at pool construction.
+enum PageData {
+    F32(Vec<f32>),
+    /// `q` is `page_rows × width` codes; `exps` one scale exponent per row.
+    I8 { q: Vec<i8>, exps: Vec<i8> },
+}
+
+/// A borrowed view of the filled rows of one page — what
+/// [`BlockTable::chunks`] hands to the (dequant-fused) attention kernels.
+pub enum PageRows<'a> {
+    F32(&'a [f32]),
+    /// `q` covers the filled rows (`rows × width` codes), `exps` one
+    /// exponent per filled row; dequantize with
+    /// `dequant_i8(q[i*w + p], exp_scale(exps[i]))`.
+    I8 { q: &'a [i8], exps: &'a [i8] },
+}
+
+impl<'a> PageRows<'a> {
+    /// The raw f32 slice of an f32 page (tests / f32-only paths). Panics on
+    /// quantized pages — use [`BlockTable::read_row_into`] there.
+    pub fn as_f32(&self) -> &'a [f32] {
+        match self {
+            PageRows::F32(d) => *d,
+            PageRows::I8 { .. } => panic!("as_f32 on a quantized page"),
+        }
+    }
+}
+
 /// One fixed-capacity page: `page_rows` rows of one stream's width.
 struct PageSlot {
-    data: Vec<f32>,
+    data: PageData,
     width: usize,
     /// Number of sequence block tables mapping this page.
     refs: u32,
@@ -59,6 +246,7 @@ struct PageSlot {
 /// [`KvCacheManager::verify_accounting`]).
 pub struct PagePool {
     page_rows: usize,
+    dtype: KvDtype,
     slots: Vec<Option<PageSlot>>,
     free: Vec<PageId>,
     live_pages: usize,
@@ -70,13 +258,23 @@ pub struct PagePool {
     /// Σ over pages of `(refs − 1) · bytes` — what the same residency would
     /// cost without sharing, minus what it actually costs.
     bytes_saved: u64,
+    /// Max observed per-row *relative* quant error
+    /// (`max|x − x̂| / max|row|`); provably ≤ 1/126, 0 on f32 pools.
+    /// Reported by the `quant_dequant_error` gauge.
+    quant_rel_err_max: f32,
 }
 
 impl PagePool {
+    /// An f32 pool (the historical default; tests use it freely).
     pub fn new(page_rows: usize) -> PagePool {
+        PagePool::with_dtype(page_rows, KvDtype::F32)
+    }
+
+    pub fn with_dtype(page_rows: usize, dtype: KvDtype) -> PagePool {
         assert!(page_rows > 0);
         PagePool {
             page_rows,
+            dtype,
             slots: Vec::new(),
             free: Vec::new(),
             live_pages: 0,
@@ -84,11 +282,21 @@ impl PagePool {
             cold_bytes: 0,
             shared_pages: 0,
             bytes_saved: 0,
+            quant_rel_err_max: 0.0,
         }
     }
 
     pub fn page_rows(&self) -> usize {
         self.page_rows
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Max observed per-row relative quantization error (0 on f32 pools).
+    pub fn quant_dequant_error(&self) -> f32 {
+        self.quant_rel_err_max
     }
 
     pub fn live_pages(&self) -> usize {
@@ -111,8 +319,11 @@ impl PagePool {
         self.bytes_saved
     }
 
+    /// Bytes one page of `width` channels occupies — exactly
+    /// `page_rows · dtype.token_bytes(width)`, so page-granular accounting
+    /// and per-token accounting agree without rounding.
     fn page_bytes(&self, width: usize) -> u64 {
-        (self.page_rows * width * 4) as u64
+        self.page_rows as u64 * self.dtype.token_bytes(width)
     }
 
     fn slot(&self, id: PageId) -> &PageSlot {
@@ -123,9 +334,17 @@ impl PagePool {
         self.slots[id as usize].as_mut().expect("dangling page id")
     }
 
-    /// Raw page data (full capacity; callers slice by row count).
-    pub fn page(&self, id: PageId) -> &[f32] {
-        &self.slot(id).data
+    /// View of the first `rows` filled rows of a page, in the page's storage
+    /// dtype.
+    fn view(&self, id: PageId, rows: usize) -> PageRows<'_> {
+        let s = self.slot(id);
+        match &s.data {
+            PageData::F32(d) => PageRows::F32(&d[..rows * s.width]),
+            PageData::I8 { q, exps } => PageRows::I8 {
+                q: &q[..rows * s.width],
+                exps: &exps[..rows],
+            },
+        }
     }
 
     pub(crate) fn page_refs(&self, id: PageId) -> u32 {
@@ -157,8 +376,15 @@ impl PagePool {
     fn alloc_page(&mut self, width: usize) -> PageId {
         self.live_pages += 1;
         self.used_bytes += self.page_bytes(width);
+        let data = match self.dtype {
+            KvDtype::F32 => PageData::F32(vec![0.0; self.page_rows * width]),
+            KvDtype::Int8 => PageData::I8 {
+                q: vec![0; self.page_rows * width],
+                exps: vec![0; self.page_rows],
+            },
+        };
         let slot = PageSlot {
-            data: vec![0.0; self.page_rows * width],
+            data,
             width,
             refs: 1,
             cached: false,
@@ -253,15 +479,19 @@ impl PagePool {
     /// the tail is writable in place). COW replaces a page id rather than
     /// adding one, so these bytes are *charged* (`used_bytes`) but do not
     /// grow the table's mapping.
-    pub fn cow_cost(&self, table: &BlockTable) -> usize {
+    pub fn cow_cost(&self, table: &BlockTable) -> u64 {
         let cow = table.len % self.page_rows != 0
             && !self.writable(*table.pages.last().expect("partial tail implies a page"));
-        cow as usize * self.page_rows * table.width * 4
+        if cow {
+            self.page_bytes(table.width)
+        } else {
+            0
+        }
     }
 
     /// Bytes that appending `n` rows to `table` would newly allocate
     /// (page-granular, including a copy-on-write of a non-writable tail).
-    pub fn next_rows_cost(&self, table: &BlockTable, n: usize) -> usize {
+    pub fn next_rows_cost(&self, table: &BlockTable, n: usize) -> u64 {
         let cap = table.pages.len() * self.page_rows;
         let need = table.len + n;
         let grow = if need > cap {
@@ -269,46 +499,81 @@ impl PagePool {
         } else {
             0
         };
-        grow * self.page_rows * table.width * 4 + self.cow_cost(table)
+        grow as u64 * self.page_bytes(table.width) + self.cow_cost(table)
     }
 
     /// Append one row. Returns bytes newly allocated.
-    pub fn push_row(&mut self, table: &mut BlockTable, row: &[f32]) -> usize {
+    pub fn push_row(&mut self, table: &mut BlockTable, row: &[f32]) -> u64 {
         self.push_rows(table, row, 1)
     }
 
     /// Append `n_rows` rows from a contiguous row-major buffer (the chunked
     /// prefill path appends a whole chunk per layer in one call). Returns
-    /// bytes newly allocated; copy-on-writes a shared tail page first.
-    pub fn push_rows(&mut self, table: &mut BlockTable, data: &[f32], n_rows: usize) -> usize {
+    /// bytes newly allocated; copy-on-writes a shared tail page first. On a
+    /// quantized pool each row is quantized here, once, on its way into the
+    /// page — the engine's append paths are dtype-oblivious and no dequant
+    /// buffer ever exists.
+    pub fn push_rows(&mut self, table: &mut BlockTable, data: &[f32], n_rows: usize) -> u64 {
         assert_eq!(data.len(), n_rows * table.width, "chunk size mismatch");
         let w = table.width;
-        let mut actual = 0usize;
+        let page_rows = self.page_rows;
+        let mut actual = 0u64;
         // Copy-on-write: a partially-filled tail page that is shared or
         // trie-cached must never be written; move its filled rows to a
-        // fresh private page before the first divergent append.
-        if table.len % self.page_rows != 0 {
+        // fresh private page before the first divergent append. Quantized
+        // pages move their codes + scales bitwise — COW never re-quantizes.
+        if table.len % page_rows != 0 {
             let tail = *table.pages.last().unwrap();
             if !self.writable(tail) {
-                let filled = table.len - (table.pages.len() - 1) * self.page_rows;
+                let filled = table.len - (table.pages.len() - 1) * page_rows;
+                // Copy the filled rows out first (bitwise, dtype-matched),
+                // then allocate and fill the private replacement.
+                enum CowCopy {
+                    F32(Vec<f32>),
+                    I8(Vec<i8>, Vec<i8>),
+                }
+                let copy = match &self.slot(tail).data {
+                    PageData::F32(d) => CowCopy::F32(d[..filled * w].to_vec()),
+                    PageData::I8 { q, exps } => {
+                        CowCopy::I8(q[..filled * w].to_vec(), exps[..filled].to_vec())
+                    }
+                };
                 let fresh = self.alloc_page(w);
-                actual += self.page_bytes(w) as usize;
-                let src: Vec<f32> = self.page(tail)[..filled * w].to_vec();
-                self.slot_mut(fresh).data[..src.len()].copy_from_slice(&src);
+                actual += self.page_bytes(w);
+                match (&mut self.slot_mut(fresh).data, copy) {
+                    (PageData::F32(dst), CowCopy::F32(src)) => {
+                        dst[..src.len()].copy_from_slice(&src)
+                    }
+                    (PageData::I8 { q: qd, exps: ed }, CowCopy::I8(qs, es)) => {
+                        qd[..qs.len()].copy_from_slice(&qs);
+                        ed[..es.len()].copy_from_slice(&es);
+                    }
+                    _ => unreachable!("pool dtype is uniform"),
+                }
                 self.deref_page(tail);
                 *table.pages.last_mut().unwrap() = fresh;
             }
         }
         for i in 0..n_rows {
-            if table.len == table.pages.len() * self.page_rows {
+            if table.len == table.pages.len() * page_rows {
                 let id = self.alloc_page(w);
-                actual += self.page_bytes(w) as usize;
+                actual += self.page_bytes(w);
                 table.pages.push(id);
             }
             let page = *table.pages.last().unwrap();
-            let slot_i = table.len % self.page_rows;
-            self.slot_mut(page).data[slot_i * w..(slot_i + 1) * w]
-                .copy_from_slice(&data[i * w..(i + 1) * w]);
+            let slot_i = table.len % page_rows;
+            let row = &data[i * w..(i + 1) * w];
+            let mut rel_err = 0.0f32;
+            match &mut self.slots[page as usize].as_mut().unwrap().data {
+                PageData::F32(d) => d[slot_i * w..(slot_i + 1) * w].copy_from_slice(row),
+                PageData::I8 { q, exps } => {
+                    let qrow = &mut q[slot_i * w..(slot_i + 1) * w];
+                    let (e, row_err) = quantize_row_i8_tracked(row, qrow);
+                    exps[slot_i] = e;
+                    rel_err = row_err;
+                }
+            }
+            self.quant_rel_err_max = self.quant_rel_err_max.max(rel_err);
             table.len += 1;
         }
         actual
@@ -357,30 +622,58 @@ impl BlockTable {
 
     /// Bytes of the pages this table maps (shared pages counted fully —
     /// this is the *mapping*, not the charge).
-    pub fn mapped_bytes(&self, pool: &PagePool) -> usize {
-        self.pages.len() * pool.page_rows * self.width * 4
+    pub fn mapped_bytes(&self, pool: &PagePool) -> u64 {
+        self.pages.len() as u64 * pool.page_bytes(self.width)
     }
 
-    /// Row `i` as a slice.
+    /// Row `i` of an **f32** pool as a borrowed slice. Panics on quantized
+    /// pools — use [`BlockTable::read_row_into`] for dtype-generic reads.
     pub fn row<'a>(&self, pool: &'a PagePool, i: usize) -> &'a [f32] {
         assert!(i < self.len, "row {i} out of {}", self.len);
         let page = self.pages[i / pool.page_rows];
         let slot = i % pool.page_rows;
-        &pool.page(page)[slot * self.width..(slot + 1) * self.width]
+        match &pool.slot(page).data {
+            PageData::F32(d) => &d[slot * self.width..(slot + 1) * self.width],
+            PageData::I8 { .. } => panic!("row() on a quantized page; use read_row_into"),
+        }
     }
 
-    /// Iterate over contiguous filled chunks `(rows_slice, n_rows)` — lets
-    /// attention kernels stream page-by-page without a gather copy.
-    pub fn chunks<'a>(&'a self, pool: &'a PagePool) -> impl Iterator<Item = (&'a [f32], usize)> {
+    /// Copy (dequantizing if needed) row `i` into `out` (length `width`).
+    /// On quantized pools this is the only materializing read; the attention
+    /// kernels never use it — they consume [`PageRows`] in place.
+    pub fn read_row_into(&self, pool: &PagePool, i: usize, out: &mut [f32]) {
+        assert!(i < self.len, "row {i} out of {}", self.len);
+        assert_eq!(out.len(), self.width, "row width mismatch");
+        let page = self.pages[i / pool.page_rows];
+        let slot = i % pool.page_rows;
+        match &pool.slot(page).data {
+            PageData::F32(d) => {
+                out.copy_from_slice(&d[slot * self.width..(slot + 1) * self.width])
+            }
+            PageData::I8 { q, exps } => {
+                let scale = exp_scale(exps[slot]);
+                for (o, &qi) in out
+                    .iter_mut()
+                    .zip(&q[slot * self.width..(slot + 1) * self.width])
+                {
+                    *o = dequant_i8(qi, scale);
+                }
+            }
+        }
+    }
+
+    /// Iterate over contiguous filled chunks `(rows_view, n_rows)` — lets
+    /// attention kernels stream page-by-page without a gather copy, reading
+    /// quantized pages in place via the dtype-matched [`PageRows`] view.
+    pub fn chunks<'a>(&'a self, pool: &'a PagePool) -> impl Iterator<Item = (PageRows<'a>, usize)> {
         let page_rows = pool.page_rows;
         let full = self.len / page_rows;
         let rem = self.len % page_rows;
-        let width = self.width;
         self.pages.iter().enumerate().filter_map(move |(pi, &id)| {
             if pi < full {
-                Some((&pool.page(id)[..page_rows * width], page_rows))
+                Some((pool.view(id, page_rows), page_rows))
             } else if pi == full && rem > 0 {
-                Some((&pool.page(id)[..rem * width], rem))
+                Some((pool.view(id, rem), rem))
             } else {
                 None
             }
@@ -401,17 +694,21 @@ pub struct CacheSpec {
     pub n_kv_heads: usize,
     pub layers: Vec<LayerGeom>,
     pub page_tokens: usize,
+    /// Storage dtype of every page in the pool (`ServeConfig::kv_dtype`).
+    pub kv_dtype: KvDtype,
 }
 
 impl CacheSpec {
-    /// Bytes per cached token across all layers/heads.
-    pub fn bytes_per_token(&self) -> usize {
-        self.n_kv_heads
-            * self
-                .layers
-                .iter()
-                .map(|l| (l.k_width + l.v_width) * 4)
-                .sum::<usize>()
+    /// Bytes per cached token across all layers/heads, in the spec's
+    /// storage dtype — delegates to the canonical
+    /// [`cache_bytes_per_token`], the same function the calibration
+    /// artifact reports through.
+    pub fn bytes_per_token(&self) -> u64 {
+        cache_bytes_per_token(
+            self.n_kv_heads,
+            self.layers.iter().map(|l| (l.k_width, l.v_width)),
+            self.kv_dtype,
+        )
     }
 }
 
@@ -425,7 +722,7 @@ pub struct SeqCache {
     /// Bytes of pages this sequence maps (shared pages counted fully) —
     /// the denominator its reservation is consumed against. Maintained
     /// incrementally; checked by [`KvCacheManager::verify_accounting`].
-    mapped_bytes: usize,
+    mapped_bytes: u64,
     /// Prefix-trie node the last consumed page-aligned chunk ended on
     /// (0 = root), plus the node's generation at the time — the cursor is
     /// ignored (a miss) if the node has since been evicted.
@@ -480,7 +777,7 @@ impl SeqCache {
     }
 
     /// O(layers × heads) recomputation of the incremental counter.
-    fn recompute_mapped_bytes(&self, pool: &PagePool) -> usize {
+    fn recompute_mapped_bytes(&self, pool: &PagePool) -> u64 {
         self.tables().map(|t| t.mapped_bytes(pool)).sum()
     }
 }
@@ -697,7 +994,7 @@ pub struct KvCacheManager {
 
 impl KvCacheManager {
     pub fn new(spec: CacheSpec, budget_bytes: u64) -> KvCacheManager {
-        let pool = PagePool::new(spec.page_tokens);
+        let pool = PagePool::with_dtype(spec.page_tokens, spec.kv_dtype);
         KvCacheManager {
             spec,
             budget_bytes,
@@ -749,6 +1046,12 @@ impl KvCacheManager {
         self.pool.bytes_saved
     }
 
+    /// Max observed per-row relative quantization error across every row
+    /// ever appended (0 on f32 pools; provably ≤ 1/126 on int8 pools).
+    pub fn quant_dequant_error(&self) -> f32 {
+        self.pool.quant_rel_err_max
+    }
+
     pub fn peak_bytes(&self) -> u64 {
         self.peak_bytes
     }
@@ -774,9 +1077,12 @@ impl KvCacheManager {
     }
 
     /// Worst-case bytes to hold `n_tokens` of one sequence (page-rounded).
+    /// u64-native: the product is never formed in `usize`, so the result is
+    /// exact even on 32-bit targets (regression-tested below under the
+    /// `release-test` overflow-checked profile).
     pub fn bytes_for_tokens(&self, n_tokens: usize) -> u64 {
-        let pages = n_tokens.div_ceil(self.spec.page_tokens);
-        (pages * self.spec.page_tokens * self.spec.bytes_per_token()) as u64
+        let pages = n_tokens.div_ceil(self.spec.page_tokens) as u64;
+        pages * self.spec.page_tokens as u64 * self.spec.bytes_per_token()
     }
 
     /// Unallocated remainder of all reservations (bytes promised but not yet
@@ -791,11 +1097,7 @@ impl KvCacheManager {
         self.reserved
             .iter()
             .map(|(id, &res)| {
-                let mapped = self
-                    .seqs
-                    .get(id)
-                    .map(|s| s.mapped_bytes as u64)
-                    .unwrap_or(0);
+                let mapped = self.seqs.get(id).map(|s| s.mapped_bytes).unwrap_or(0);
                 res.saturating_sub(mapped)
             })
             .sum()
@@ -830,7 +1132,7 @@ impl KvCacheManager {
             return 0;
         }
         let p = self.spec.page_tokens;
-        let chunk_bytes = (p * self.spec.bytes_per_token()) as u64;
+        let chunk_bytes = p as u64 * self.spec.bytes_per_token();
         let mut node = TRIE_ROOT;
         let mut depth = 0usize;
         let mut hot = 0u64;
@@ -862,7 +1164,7 @@ impl KvCacheManager {
             .flat_map(|t| t.pages.iter())
             .map(|&p| self.pool.solely_referenced_bytes(p))
             .sum();
-        private + res.saturating_sub(seq.mapped_bytes as u64)
+        private + res.saturating_sub(seq.mapped_bytes)
     }
 
     /// [`KvCacheManager::can_admit`], hypothetically: would a sequence of
@@ -902,7 +1204,7 @@ impl KvCacheManager {
         let Some(seq) = self.seqs.get(&id) else {
             return Err(CacheError::UnknownSeq(id));
         };
-        let mapped = seq.mapped_bytes as u64;
+        let mapped = seq.mapped_bytes;
         let need = self.bytes_for_tokens(n_tokens);
         // Replace this sequence's old outstanding contribution (0 for a
         // fresh sequence) with the new one.
@@ -999,7 +1301,9 @@ impl KvCacheManager {
         }
         let tokens = path.len() * p;
         seq.tokens = tokens;
-        seq.mapped_bytes += tokens * self.spec.bytes_per_token();
+        // Whole pages only, so tokens · bytes/token equals the mapped pages'
+        // byte sum exactly in every dtype.
+        seq.mapped_bytes += tokens as u64 * self.spec.bytes_per_token();
         seq.trie_node = node;
         seq.trie_gen = self.trie.gen(node);
         seq.next_chunk = path.len();
@@ -1156,19 +1460,19 @@ impl KvCacheManager {
     /// to sequence `id`: growth inside this sequence's reservation is
     /// pre-approved; growth beyond it must fit next to everyone else's
     /// outstanding reservations.
-    fn check_append_budget(&self, id: SeqId, cost: usize, cow: usize) -> Result<(), CacheError> {
+    fn check_append_budget(&self, id: SeqId, cost: u64, cow: u64) -> Result<(), CacheError> {
         let seq = self.seqs.get(&id).expect("caller verified");
-        let mapped = seq.mapped_bytes as u64;
+        let mapped = seq.mapped_bytes;
         let remaining_res = self
             .reserved
             .get(&id)
             .map(|&r| r.saturating_sub(mapped))
             .unwrap_or(0);
-        let outstanding_after = self.outstanding - remaining_res.min((cost - cow) as u64);
+        let outstanding_after = self.outstanding - remaining_res.min(cost - cow);
         let hot = self.pool.used_bytes - self.pool.cold_bytes;
-        if hot + cost as u64 + outstanding_after > self.budget_bytes {
+        if hot + cost + outstanding_after > self.budget_bytes {
             return Err(CacheError::OverBudget {
-                needed: cost as u64,
+                needed: cost,
                 available: self.budget_bytes.saturating_sub(hot + outstanding_after),
             });
         }
@@ -1177,8 +1481,8 @@ impl KvCacheManager {
 
     /// Make physical room for `cost` fresh bytes by evicting cold chunks if
     /// the pool would otherwise exceed the budget.
-    fn make_room(&mut self, cost: usize) {
-        let after = self.pool.used_bytes + cost as u64;
+    fn make_room(&mut self, cost: u64) {
+        let after = self.pool.used_bytes + cost;
         if after > self.budget_bytes {
             self.evict_cold(after - self.budget_bytes);
         }
@@ -1208,7 +1512,7 @@ impl KvCacheManager {
     ) -> Result<(), CacheError> {
         // Pre-compute the allocation cost to enforce the budget atomically.
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let (mut cost, mut cow) = (0usize, 0usize);
+        let (mut cost, mut cow) = (0u64, 0u64);
         for h in 0..self.spec.n_kv_heads {
             cost += self.pool.next_rows_cost(&seq.k[layer][h], 1)
                 + self.pool.next_rows_cost(&seq.v[layer][h], 1);
@@ -1217,8 +1521,8 @@ impl KvCacheManager {
         self.make_room(cost);
         self.check_append_budget(id, cost, cow)?;
         let seq = self.seqs.get_mut(&id).unwrap();
-        let mapped_before = seq.mapped_bytes as u64;
-        let mut actual = 0usize;
+        let mapped_before = seq.mapped_bytes;
+        let mut actual = 0u64;
         for h in 0..self.spec.n_kv_heads {
             actual += self.pool.push_row(&mut seq.k[layer][h], k_rows[h]);
             actual += self.pool.push_row(&mut seq.v[layer][h], v_rows[h]);
@@ -1226,7 +1530,7 @@ impl KvCacheManager {
         debug_assert_eq!(actual, cost);
         // COW copies charge memory but replace a mapped page in place.
         seq.mapped_bytes += actual - cow;
-        self.finish_append(id, mapped_before, (actual - cow) as u64);
+        self.finish_append(id, mapped_before, actual - cow);
         Ok(())
     }
 
@@ -1245,7 +1549,7 @@ impl KvCacheManager {
         assert_eq!(k_mats.len(), self.spec.n_kv_heads, "k head count mismatch");
         assert_eq!(v_mats.len(), self.spec.n_kv_heads, "v head count mismatch");
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let (mut cost, mut cow) = (0usize, 0usize);
+        let (mut cost, mut cow) = (0u64, 0u64);
         for h in 0..self.spec.n_kv_heads {
             cost += self.pool.next_rows_cost(&seq.k[layer][h], 1)
                 + self.pool.next_rows_cost(&seq.v[layer][h], 1);
@@ -1254,8 +1558,8 @@ impl KvCacheManager {
         self.make_room(cost);
         self.check_append_budget(id, cost, cow)?;
         let seq = self.seqs.get_mut(&id).unwrap();
-        let mapped_before = seq.mapped_bytes as u64;
-        let mut actual = 0usize;
+        let mapped_before = seq.mapped_bytes;
+        let mut actual = 0u64;
         for h in 0..self.spec.n_kv_heads {
             actual += self.pool.push_row(&mut seq.k[layer][h], k_mats[h].row(row));
             actual += self.pool.push_row(&mut seq.v[layer][h], v_mats[h].row(row));
@@ -1263,7 +1567,7 @@ impl KvCacheManager {
         debug_assert_eq!(actual, cost);
         // COW copies charge memory but replace a mapped page in place.
         seq.mapped_bytes += actual - cow;
-        self.finish_append(id, mapped_before, (actual - cow) as u64);
+        self.finish_append(id, mapped_before, actual - cow);
         Ok(())
     }
 
@@ -1283,7 +1587,7 @@ impl KvCacheManager {
         assert_eq!(v_mats.len(), self.spec.n_kv_heads, "v head count mismatch");
         let n = k_mats[0].rows();
         let seq = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let (mut cost, mut cow) = (0usize, 0usize);
+        let (mut cost, mut cow) = (0u64, 0u64);
         for h in 0..self.spec.n_kv_heads {
             assert_eq!(k_mats[h].rows(), n, "ragged chunk");
             assert_eq!(v_mats[h].rows(), n, "ragged chunk");
@@ -1294,8 +1598,8 @@ impl KvCacheManager {
         self.make_room(cost);
         self.check_append_budget(id, cost, cow)?;
         let seq = self.seqs.get_mut(&id).unwrap();
-        let mapped_before = seq.mapped_bytes as u64;
-        let mut actual = 0usize;
+        let mapped_before = seq.mapped_bytes;
+        let mut actual = 0u64;
         for h in 0..self.spec.n_kv_heads {
             actual += self.pool.push_rows(&mut seq.k[layer][h], k_mats[h].data(), n);
             actual += self.pool.push_rows(&mut seq.v[layer][h], v_mats[h].data(), n);
@@ -1303,7 +1607,7 @@ impl KvCacheManager {
         debug_assert_eq!(actual, cost);
         // COW copies charge memory but replace a mapped page in place.
         seq.mapped_bytes += actual - cow;
-        self.finish_append(id, mapped_before, (actual - cow) as u64);
+        self.finish_append(id, mapped_before, actual - cow);
         Ok(())
     }
 
@@ -1355,7 +1659,7 @@ impl KvCacheManager {
             },
         )?;
         let res = self.reserved.get(&id).copied().unwrap_or(0);
-        let contribution = res.saturating_sub(seq.mapped_bytes as u64);
+        let contribution = res.saturating_sub(seq.mapped_bytes);
         let outstanding_after = self.outstanding.checked_sub(contribution).ok_or(
             CacheError::AccountingDrift {
                 counter: "outstanding_reserved",
@@ -1439,7 +1743,7 @@ mod tests {
     use super::*;
     use crate::util::prop::forall;
 
-    fn spec2() -> CacheSpec {
+    fn spec2_dtype(kv_dtype: KvDtype) -> CacheSpec {
         CacheSpec {
             n_kv_heads: 2,
             layers: vec![
@@ -1447,7 +1751,12 @@ mod tests {
                 LayerGeom { k_width: 3, v_width: 5 },
             ],
             page_tokens: 8,
+            kv_dtype,
         }
+    }
+
+    fn spec2() -> CacheSpec {
+        spec2_dtype(KvDtype::F32)
     }
 
     fn push_token(mgr: &mut KvCacheManager, id: SeqId, val: f32) -> Result<(), CacheError> {
@@ -1511,6 +1820,7 @@ mod tests {
         }
         let mut seen = 0usize;
         for (chunk, rows) in t.chunks(&pool) {
+            let chunk = chunk.as_f32();
             assert_eq!(chunk.len(), rows * 2);
             for r in 0..rows {
                 assert_eq!(chunk[r * 2], (seen + r) as f32);
@@ -1681,7 +1991,7 @@ mod tests {
     fn can_admit_estimates() {
         let spec = spec2();
         let bpt = spec.bytes_per_token();
-        let mut mgr = KvCacheManager::new(spec, (bpt * 64) as u64);
+        let mut mgr = KvCacheManager::new(spec, bpt * 64);
         assert!(mgr.can_admit(64));
         assert!(!mgr.can_admit(65));
         mgr.alloc(1).unwrap();
@@ -1699,11 +2009,13 @@ mod tests {
             n_kv_heads: 8,
             layers: vec![LayerGeom { k_width: 64, v_width: 64 }; 8],
             page_tokens: 16,
+            kv_dtype: KvDtype::F32,
         };
         let comp = CacheSpec {
             n_kv_heads: 8,
             layers: vec![LayerGeom { k_width: 20, v_width: 24 }; 8],
             page_tokens: 16,
+            kv_dtype: KvDtype::F32,
         };
         let ratio = comp.bytes_per_token() as f64 / full.bytes_per_token() as f64;
         assert!((ratio - 44.0 / 128.0).abs() < 1e-9);
@@ -1716,7 +2028,8 @@ mod tests {
     #[test]
     fn prop_accounting_under_random_workload() {
         forall("cache accounting invariant", 30, |g| {
-            let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+            let dtype = *g.choose(&[KvDtype::F32, KvDtype::Int8]);
+            let mut mgr = KvCacheManager::new(spec2_dtype(dtype), 1 << 22);
             let mut live: Vec<SeqId> = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..g.usize_in(5, 60) {
@@ -1765,7 +2078,8 @@ mod tests {
     #[test]
     fn prop_prefix_sharing_accounting() {
         forall("prefix sharing accounting invariant", 25, |g| {
-            let mut mgr = KvCacheManager::new(spec2(), 1 << 22);
+            let dtype = *g.choose(&[KvDtype::F32, KvDtype::Int8]);
+            let mut mgr = KvCacheManager::new(spec2_dtype(dtype), 1 << 22);
             mgr.set_prefix_cache(true);
             let logits = vec![0.5f32; 4];
             let mut live: Vec<SeqId> = Vec::new();
@@ -1843,7 +2157,7 @@ mod tests {
     fn peak_includes_outstanding_reservations() {
         let spec = spec2();
         let bpt = spec.bytes_per_token();
-        let mut mgr = KvCacheManager::new(spec, (bpt * 64) as u64);
+        let mut mgr = KvCacheManager::new(spec, bpt * 64);
         mgr.alloc(1).unwrap();
         mgr.reserve(1, 32).unwrap();
         let reserved = mgr.bytes_for_tokens(32);
@@ -1914,7 +2228,7 @@ mod tests {
         assert_eq!(mgr.used_bytes(), one_seq_bytes);
         assert_eq!(mgr.cold_bytes(), one_seq_bytes);
         // …and cold bytes don't block admission.
-        let bpt = spec.bytes_per_token() as u64;
+        let bpt = spec.bytes_per_token();
         assert!(mgr.can_admit(((1 << 22) / bpt) as usize - 16));
         // Eviction returns the pool to baseline.
         mgr.release_cold();
@@ -2016,6 +2330,229 @@ mod tests {
         mgr.release_cold();
         assert_eq!(mgr.used_bytes(), 0);
         assert_eq!(mgr.live_pages(), 0);
+        assert!(mgr.verify_accounting());
+    }
+
+    // -- quantized storage (tentpole) --------------------------------------
+
+    /// Tentpole: the int8 codec round-trips **bitwise** — dequantization is
+    /// exact (int8 code × power-of-two scale is always f32-representable),
+    /// so quantize→dequantize→quantize→dequantize reproduces the first
+    /// dequantized row bit for bit.
+    #[test]
+    fn prop_int8_codec_roundtrip_bitwise() {
+        forall("int8 codec bitwise round-trip", 60, |g| {
+            let w = g.usize_in(1, 64);
+            let std = g.f64_in(1e-6, 1e4) as f32;
+            let mut row = g.normal_vec(w, std);
+            if g.bool_with(0.1) {
+                row.fill(0.0); // zero rows must round-trip too
+            }
+            let mut q1 = vec![0i8; w];
+            let e1 = quantize_row_i8(&row, &mut q1);
+            let s1 = exp_scale(e1);
+            let deq1: Vec<f32> = q1.iter().map(|&q| dequant_i8(q, s1)).collect();
+            let mut q2 = vec![0i8; w];
+            let e2 = quantize_row_i8(&deq1, &mut q2);
+            let s2 = exp_scale(e2);
+            let deq2: Vec<f32> = q2.iter().map(|&q| dequant_i8(q, s2)).collect();
+            for (a, b) in deq1.iter().zip(&deq2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round-trip not bitwise");
+            }
+        });
+    }
+
+    /// Tentpole: documented codec error bound — per element,
+    /// `|x − x̂| ≤ max|row| / 126`.
+    #[test]
+    fn prop_int8_codec_error_bound() {
+        forall("int8 codec error bound", 60, |g| {
+            let w = g.usize_in(1, 64);
+            let std = g.f64_in(1e-6, 1e4) as f32;
+            let row = g.normal_vec(w, std);
+            let max = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let mut q = vec![0i8; w];
+            let scale = exp_scale(quantize_row_i8(&row, &mut q));
+            for (&x, &qi) in row.iter().zip(&q) {
+                let err = (x - dequant_i8(qi, scale)).abs();
+                assert!(err <= max / 126.0, "err {err} > bound {} (max {max})", max / 126.0);
+            }
+        });
+    }
+
+    /// Rows entirely below the denormal floor (max|row| < 127·2⁻¹²⁶) flush
+    /// toward zero with absolute error ≤ 2⁻¹²⁷ and must not trip the
+    /// relative-error gauge (the ≤ 1/126 bound is relative-form-only above
+    /// the floor; see `quantize_row_i8_tracked`).
+    #[test]
+    fn int8_denormal_floor_rows_keep_gauge_honest() {
+        let mut pool = PagePool::with_dtype(4, KvDtype::Int8);
+        let mut t = BlockTable::new(2);
+        let row = [1e-40f32, -1e-39];
+        pool.push_row(&mut t, &row);
+        let mut out = vec![0.0f32; 2];
+        t.read_row_into(&pool, 0, &mut out);
+        for (&x, &x_hat) in row.iter().zip(&out) {
+            assert!(
+                (x - x_hat).abs() <= exp_scale(-126) / 2.0,
+                "absolute error above the 2^-127 floor: {x} vs {x_hat}"
+            );
+        }
+        assert_eq!(pool.quant_dequant_error(), 0.0, "denormal rows must not trip the gauge");
+    }
+
+    /// Quantized pages round-trip through the pool within the codec bound,
+    /// and the pool's quant-error gauge respects the provable ceiling.
+    #[test]
+    fn prop_int8_pool_rows_roundtrip_within_bound() {
+        forall("int8 paged rows round-trip", 30, |g| {
+            let width = g.usize_in(1, 16);
+            let page = g.usize_in(1, 16);
+            let n = g.usize_in(1, 60);
+            let mut pool = PagePool::with_dtype(page, KvDtype::Int8);
+            let mut t = BlockTable::new(width);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(width, 1.0)).collect();
+            for r in &rows {
+                pool.push_row(&mut t, r);
+            }
+            let mut out = vec![0.0f32; width];
+            for (i, r) in rows.iter().enumerate() {
+                t.read_row_into(&pool, i, &mut out);
+                let max = r.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                for (a, b) in r.iter().zip(&out) {
+                    assert!((a - b).abs() <= max / 126.0, "{a} vs {b} (max {max})");
+                }
+            }
+            let total: usize = t.chunks(&pool).map(|(_, r)| r).sum();
+            assert_eq!(total, n);
+            assert!(pool.quant_dequant_error() <= 1.0 / 126.0);
+        });
+    }
+
+    /// Tentpole: copy-on-write on a quantized shared tail moves the int8
+    /// codes and scales **bitwise** — no re-quantization, no added error —
+    /// and the byte accounting charges the int8 page size.
+    #[test]
+    fn int8_cow_preserves_quantized_rows_bitwise() {
+        let mut pool = PagePool::with_dtype(4, KvDtype::Int8);
+        let mut t1 = BlockTable::new(3);
+        for i in 0..5 {
+            pool.push_row(&mut t1, &[0.1 * i as f32, -1.5, 2.5 + i as f32]);
+        }
+        let before: Vec<Vec<f32>> = (0..5)
+            .map(|i| {
+                let mut out = vec![0.0; 3];
+                t1.read_row_into(&pool, i, &mut out);
+                out
+            })
+            .collect();
+        let mut t2 = t1.clone();
+        for &p in t2.page_ids() {
+            pool.ref_page(p);
+        }
+        let cow = pool.cow_cost(&t2);
+        assert_eq!(cow, pool.page_bytes(3), "int8 COW charges the int8 page size");
+        assert_eq!(pool.page_bytes(3), 4 * (3 + 1), "page bytes = rows·(w+1) for int8");
+        let actual = pool.push_row(&mut t2, &[9.0, 9.0, 9.0]);
+        assert_eq!(actual, cow);
+        let mut out = vec![0.0; 3];
+        for i in 0..5 {
+            t2.read_row_into(&pool, i, &mut out);
+            for (a, b) in before[i].iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "COW must copy codes bitwise");
+            }
+            t1.read_row_into(&pool, i, &mut out);
+            for (a, b) in before[i].iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "the shared source must be untouched");
+            }
+        }
+        assert_ne!(t1.page_ids()[1], t2.page_ids()[1]);
+    }
+
+    /// Acceptance: int8 mode shrinks `CacheSpec::bytes_per_token()` by at
+    /// least 3.5× versus f32 on realistic geometries. With one scale byte
+    /// per row the ratio is `Σ 4w / Σ (w+1)`, ≥ 3.5 whenever the mean
+    /// stream width is ≥ 7 — which holds for every zoo preset's rank range
+    /// (d_head 32–64, ε = 0.1).
+    #[test]
+    fn int8_bytes_per_token_ratio_at_least_3_5x() {
+        let geoms: [(usize, Vec<LayerGeom>); 3] = [
+            // mha-small-like: d_head 64, mid-range ranks.
+            (8, vec![LayerGeom { k_width: 40, v_width: 48 }; 8]),
+            // gqa-small-like: d_head 32, lower ranks.
+            (2, vec![LayerGeom { k_width: 20, v_width: 24 }; 8]),
+            // Conservative floor: every stream at the width-7 boundary.
+            (4, vec![LayerGeom { k_width: 7, v_width: 7 }; 4]),
+        ];
+        for (n_kv_heads, layers) in geoms {
+            let f32_spec = CacheSpec {
+                n_kv_heads,
+                layers: layers.clone(),
+                page_tokens: 16,
+                kv_dtype: KvDtype::F32,
+            };
+            let i8_spec = CacheSpec { kv_dtype: KvDtype::Int8, ..f32_spec.clone() };
+            let ratio = f32_spec.bytes_per_token() as f64 / i8_spec.bytes_per_token() as f64;
+            assert!(
+                ratio >= 3.5,
+                "int8 must shrink bytes/token ≥3.5× (got {ratio:.3} for {layers:?})"
+            );
+        }
+    }
+
+    /// Satellite regression: byte accounting is u64-native — a sequence
+    /// length that overflows 32-bit arithmetic (the old
+    /// `(pages * page_tokens * bytes_per_token) as u64` pattern) still
+    /// computes the exact product. Runs under the `release-test` profile
+    /// (overflow-checks on) in CI, where a usize-intermediate would abort
+    /// on 32-bit targets.
+    #[test]
+    fn bytes_accounting_is_u64_native() {
+        let spec = CacheSpec {
+            n_kv_heads: 8,
+            layers: vec![LayerGeom { k_width: 64, v_width: 64 }; 32],
+            page_tokens: 16,
+            kv_dtype: KvDtype::F32,
+        };
+        let bpt = spec.bytes_per_token();
+        assert_eq!(bpt, 8 * 32 * (64 + 64) * 4);
+        let mgr = KvCacheManager::new(spec, u64::MAX);
+        // 2^33 tokens × 131072 B/token ≈ 2^50 B — far past u32/usize-32.
+        // (64-bit-only: a 2^33 usize doesn't exist on 32-bit targets; there
+        // the 17-token case below still exercises the u64-native product.)
+        #[cfg(target_pointer_width = "64")]
+        {
+            let n: usize = 1 << 33;
+            assert_eq!(mgr.bytes_for_tokens(n), n as u64 * bpt);
+        }
+        // Non-page-aligned lengths round up to whole pages.
+        assert_eq!(mgr.bytes_for_tokens(17), 32 * bpt);
+    }
+
+    /// Int8 specs drive the whole manager lifecycle: appends quantize in
+    /// place, accounting stays exact, the quant-error gauge moves, and
+    /// freeing returns to baseline.
+    #[test]
+    fn int8_manager_lifecycle_accounts_exactly() {
+        let spec = spec2_dtype(KvDtype::Int8);
+        let bpt = spec.bytes_per_token();
+        let f32_bpt = spec2().bytes_per_token();
+        assert!(bpt < f32_bpt);
+        let mut mgr = KvCacheManager::new(spec, 1 << 20);
+        mgr.alloc(1).unwrap();
+        // 0.3 is not 8-bit-dyadic, so at least one row quantizes inexactly
+        // and the error gauge must move.
+        for t in 0..20 {
+            push_token(&mut mgr, 1, 0.3 + t as f32).unwrap();
+        }
+        assert!(mgr.verify_accounting());
+        // 20 tokens → 3 pages of 8 per stream; bytes scale exactly with the
+        // dtype's per-token formula.
+        assert_eq!(mgr.used_bytes(), 3 * 8 * bpt);
+        let err = mgr.quant_dequant_error();
+        assert!(err > 0.0 && err <= 1.0 / 126.0, "quant error gauge: {err}");
+        mgr.free(1).unwrap();
+        assert_eq!(mgr.used_bytes(), 0);
         assert!(mgr.verify_accounting());
     }
 

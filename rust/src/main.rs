@@ -60,7 +60,7 @@ fn config_from(args: &Args) -> anyhow::Result<Config> {
         let preset_name = args.str_or("preset", "mha-small");
         Config::from_preset(&preset_name).map_err(anyhow::Error::msg)?
     };
-    cfg.apply_overrides(args);
+    cfg.apply_overrides(args).map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
 
@@ -114,7 +114,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
     let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
-    cfg.apply_overrides(args);
+    cfg.apply_overrides(args).map_err(anyhow::Error::msg)?;
     let calib = cfg.calib.clone();
     println!(
         "Figure 1 — relative errors per method ({} calib seqs × {}, {} eval seqs × {}, ε={})",
@@ -160,7 +160,7 @@ fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
     let mut cfg = Config::from_preset(&args.str_or("preset", "mha-small")).map_err(anyhow::Error::msg)?;
-    cfg.apply_overrides(args);
+    cfg.apply_overrides(args).map_err(anyhow::Error::msg)?;
     let betas: Vec<f32> = args
         .f64_list_or("betas", &[1.0, 2.0, 5.0, 10.0])
         .into_iter()
@@ -245,7 +245,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         c.ttft_s * 1e3,
         c.tpot_s * 1e3,
         c.e2e_s * 1e3,
-        fmt_bytes(bytes_per_token as u64),
+        fmt_bytes(bytes_per_token),
     );
     Ok(())
 }
@@ -267,6 +267,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "cancel-every", help: "cancel every k-th request mid-stream (0 = never)", default: Some("0") },
                     OptSpec { name: "prefill-budget", help: "prompt tokens prefilled per fused step across sequences (0 = prefill-chunk)", default: Some("0") },
                     OptSpec { name: "prefix-cache", help: "share prompt-prefix pages across sequences (bare flag enables; 0 disables)", default: Some("0") },
+                    OptSpec { name: "kv-dtype", help: "cache page storage dtype: f32 | int8 (per-row quantized, ~4x fewer bytes/token)", default: Some("f32") },
                     OptSpec { name: "shared-prefix", help: "tokens of common prompt prefix across the synthetic requests (demo for --prefix-cache)", default: Some("0") },
                     OptSpec { name: "backend", help: "rust | pjrt", default: Some("rust") },
                 ],
@@ -287,8 +288,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // every request are identical, demonstrating prefix-cache hits.
     let shared_prefix = args.usize_or("shared-prefix", 0).min(prompt_len);
     println!(
-        "serve demo: {} requests (prompt {prompt_len}, gen {gen_len}, shared prefix {shared_prefix}) on {}/{} backend={} prefix_cache={}",
-        n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend, cfg.serve.prefix_cache
+        "serve demo: {} requests (prompt {prompt_len}, gen {gen_len}, shared prefix {shared_prefix}) on {}/{} backend={} prefix_cache={} kv_dtype={}",
+        n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend, cfg.serve.prefix_cache,
+        cfg.serve.kv_dtype.name()
     );
     let engine = build_engine(&cfg)?;
     let corpus = Corpus::new(cfg.model.vocab_size, 1234);
@@ -366,6 +368,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "throughput: decode {} · prefill {}",
         tok_per_s(metric_names::DECODE_TOK_PER_S),
         tok_per_s(metric_names::PREFILL_TOK_PER_S),
+    );
+    println!(
+        "kv cache: {} per token ({}) · max quant error {:.2e}",
+        fmt_bytes(
+            metrics
+                .gauge_value(metric_names::KV_BYTES_PER_TOKEN)
+                .unwrap_or(0.0) as u64
+        ),
+        cfg.serve.kv_dtype.name(),
+        metrics
+            .gauge_value(metric_names::QUANT_DEQUANT_ERROR)
+            .unwrap_or(0.0),
     );
     let hit = metrics.counter(metric_names::PREFIX_CACHE_HIT_TOKENS);
     let miss = metrics.counter(metric_names::PREFIX_CACHE_MISS_TOKENS);

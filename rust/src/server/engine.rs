@@ -240,6 +240,7 @@ impl ServingEngine {
                 })
                 .collect(),
             page_tokens: 16,
+            kv_dtype: cfg.serve.kv_dtype,
         };
         let mut cache = KvCacheManager::new(spec, cfg.serve.cache_budget_bytes);
         cache.set_prefix_cache(cfg.serve.prefix_cache);
@@ -268,8 +269,9 @@ impl ServingEngine {
         self.serial_oracle
     }
 
-    /// Compressed cache bytes per token (the paper's memory metric).
-    pub fn cache_bytes_per_token(&self) -> usize {
+    /// Compressed cache bytes per token in the configured storage dtype
+    /// (the paper's memory metric, further shrunk ~4× under `int8`).
+    pub fn cache_bytes_per_token(&self) -> u64 {
         self.cache.spec().bytes_per_token()
     }
 
@@ -633,10 +635,13 @@ impl ServingEngine {
                     let rk = kb.width();
                     let rv = vb.width();
                     for ti in 0..valid {
+                        // read_row_into dequantizes int8 pages on the way
+                        // into the padded PJRT buffers (the AOT graphs run
+                        // on f32 inputs).
                         let off = ((bi * hkv + kv) * tt + ti) * rr;
-                        inp.ck[off..off + rk].copy_from_slice(kb.row(pool, ti));
+                        kb.read_row_into(pool, ti, &mut inp.ck[off..off + rk]);
                         let offv = ((bi * hkv + kv) * tt + ti) * rrv;
-                        inp.cv[offv..offv + rv].copy_from_slice(vb.row(pool, ti));
+                        vb.read_row_into(pool, ti, &mut inp.cv[offv..offv + rv]);
                     }
                 }
                 for ti in 0..valid {
@@ -832,12 +837,32 @@ impl Engine for ServingEngine {
         )
     }
 
+    fn kv_bytes_per_token(&self) -> u64 {
+        self.cache.spec().bytes_per_token()
+    }
+
+    fn kv_quant_error(&self) -> f64 {
+        self.cache.quant_dequant_error() as f64
+    }
+
     fn check_invariants(&self) -> Result<()> {
         anyhow::ensure!(
             self.cache.verify_accounting(),
             "kv-cache accounting drift: used={} B, outstanding={} B disagree with recomputed sums",
             self.cache.used_bytes(),
             self.cache.outstanding_reserved()
+        );
+        // Satellite: the calibration artifact and the cache spec must report
+        // the same bytes/token — both delegate to the one canonical
+        // `kvcache::cache_bytes_per_token`, and this assert keeps anyone
+        // from re-forking the formula.
+        let spec = self.cache.spec();
+        let proj_bpt = self.proj.bytes_per_token_for(spec.kv_dtype);
+        anyhow::ensure!(
+            proj_bpt == spec.bytes_per_token(),
+            "bytes-per-token drift: projections report {} B, cache spec {} B",
+            proj_bpt,
+            spec.bytes_per_token()
         );
         Ok(())
     }
@@ -857,7 +882,11 @@ mod tests {
     use crate::model::ExactDecodeState;
     use crate::text::Corpus;
 
-    fn build_engine(preset_name: &str, method: Method) -> ServingEngine {
+    fn build_engine_dtype(
+        preset_name: &str,
+        method: Method,
+        kv_dtype: crate::kvcache::KvDtype,
+    ) -> ServingEngine {
         let mcfg = preset(preset_name).unwrap();
         let corpus = Corpus::new(mcfg.vocab_size, 0);
         let model = Transformer::init(mcfg.clone());
@@ -869,7 +898,12 @@ mod tests {
         let (proj, _, _) = calibrate(&model, &corpus, &calib_cfg, method);
         let mut cfg = Config::from_preset(preset_name).unwrap();
         cfg.method = method;
+        cfg.serve.kv_dtype = kv_dtype;
         ServingEngine::new(&cfg, model, proj, Backend::Rust).unwrap()
+    }
+
+    fn build_engine(preset_name: &str, method: Method) -> ServingEngine {
+        build_engine_dtype(preset_name, method, crate::kvcache::KvDtype::F32)
     }
 
     #[test]
@@ -1083,6 +1117,32 @@ mod tests {
         );
     }
 
+    /// Satellite: the calibration artifact and the cache spec report the
+    /// same bytes/token in every storage dtype (both delegate to the one
+    /// canonical `kvcache::cache_bytes_per_token`), int8 shrinks the
+    /// footprint, and `check_invariants` enforces the agreement.
+    #[test]
+    fn int8_spec_agrees_with_projections_and_shrinks() {
+        use crate::kvcache::KvDtype;
+        let f32_eng = build_engine("test-tiny", Method::KqSvd);
+        let i8_eng = build_engine_dtype("test-tiny", Method::KqSvd, KvDtype::Int8);
+        assert!(
+            i8_eng.cache_bytes_per_token() < f32_eng.cache_bytes_per_token(),
+            "{} vs {}",
+            i8_eng.cache_bytes_per_token(),
+            f32_eng.cache_bytes_per_token()
+        );
+        for eng in [&f32_eng, &i8_eng] {
+            let spec = eng.cache.spec();
+            assert_eq!(
+                eng.proj.bytes_per_token_for(spec.kv_dtype),
+                spec.bytes_per_token(),
+                "projection artifact and cache spec diverged"
+            );
+            eng.check_invariants().unwrap();
+        }
+    }
+
     /// Acceptance: for a batch of requests sharing a random common prefix,
     /// decode logits with the prefix cache enabled are **bit-identical** to
     /// a cold (cache-disabled) run, across GQA presets and methods. The
@@ -1093,11 +1153,16 @@ mod tests {
     fn prop_prefix_cache_decode_bit_identical_to_cold() {
         use crate::util::prop::forall;
         forall("prefix-cache decode == cold run (bitwise)", 4, |g| {
+            use crate::kvcache::KvDtype;
             let preset_name = *g.choose(&["test-tiny", "test-tiny-gqa"]);
             let method = *g.choose(&[Method::None, Method::KqSvd]);
-            let mut warm = build_engine(preset_name, method);
+            // Quantized cache rows are still a pure function of the token
+            // prefix, so prefix sharing (and COW on its pages) stays
+            // bit-identical to a cold run under int8 too.
+            let kv_dtype = *g.choose(&[KvDtype::F32, KvDtype::Int8]);
+            let mut warm = build_engine_dtype(preset_name, method, kv_dtype);
             warm.cache.set_prefix_cache(true);
-            let mut cold = build_engine(preset_name, method); // identical weights
+            let mut cold = build_engine_dtype(preset_name, method, kv_dtype); // identical weights
             let page = warm.cache.spec().page_tokens;
             let chunks = g.usize_in(1, 2);
             let prefix: Vec<u32> = (0..chunks * page)

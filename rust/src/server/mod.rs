@@ -259,6 +259,7 @@ mod tests {
             n_kv_heads: 1,
             layers: vec![LayerGeom { k_width: 1, v_width: 1 }],
             page_tokens: 4,
+            kv_dtype: crate::kvcache::KvDtype::F32,
         };
         let r = EngineBuilder::new(&cfg)
             .with_cache(KvCacheManager::new(bad_spec, 1 << 20))

@@ -7,6 +7,7 @@
 
 use kqsvd::config::{Config, Method};
 use kqsvd::coordinator::{BatcherConfig, Completion, Request, RequestHandle, Router};
+use kqsvd::kvcache::KvDtype;
 use kqsvd::server::{build_engine, ServingEngine};
 use std::path::Path;
 
@@ -14,16 +15,42 @@ fn workload_prompt(i: u64) -> Vec<u32> {
     (0..8).map(|j| 1 + ((i * 13 + j * 7) % 60) as u32).collect()
 }
 
-fn engine_for(preset: &str, method: Method, backend: &str, tag: &str) -> anyhow::Result<ServingEngine> {
+/// `kv_dtype: None` keeps the config's *default* page dtype, so the CI
+/// int8-mode job (`KQSVD_KV_DTYPE=int8`) flips these workloads to
+/// quantized pages; tests comparing dtypes pin theirs with `Some(..)`.
+fn engine_with(
+    preset: &str,
+    method: Method,
+    backend: &str,
+    tag: &str,
+    kv_dtype: Option<KvDtype>,
+) -> anyhow::Result<ServingEngine> {
     let mut cfg = Config::from_preset(preset).map_err(anyhow::Error::msg)?;
     cfg.method = method;
     cfg.calib.n_calib_seqs = 2;
     cfg.calib.calib_seq_len = 48;
     cfg.serve.backend = backend.to_string();
+    if let Some(d) = kv_dtype {
+        cfg.serve.kv_dtype = d;
+    }
     let dir = std::env::temp_dir().join(format!("kqsvd-e2e-{preset}-{}-{tag}", method.name()));
     std::fs::remove_dir_all(&dir).ok();
     cfg.run_dir = dir.to_str().unwrap().to_string();
     build_engine(&cfg)
+}
+
+fn engine_for_dtype(
+    preset: &str,
+    method: Method,
+    backend: &str,
+    tag: &str,
+    kv_dtype: KvDtype,
+) -> anyhow::Result<ServingEngine> {
+    engine_with(preset, method, backend, tag, Some(kv_dtype))
+}
+
+fn engine_for(preset: &str, method: Method, backend: &str, tag: &str) -> anyhow::Result<ServingEngine> {
+    engine_with(preset, method, backend, tag, None)
 }
 
 fn run_workload(engine: &mut ServingEngine, n_reqs: u64) -> Vec<kqsvd::coordinator::Completion> {
@@ -127,6 +154,148 @@ fn backpressure_under_tiny_budget() {
     eng.cache = kqsvd::kvcache::KvCacheManager::new(eng.cache.spec().clone(), two_seqs);
     let done = run_workload(&mut eng, 6);
     assert_eq!(done.len(), 6, "everything must eventually complete");
+    assert_eq!(eng.cache.used_bytes(), 0);
+}
+
+/// Tentpole acceptance: the same workload under `f32` and `int8` cache
+/// modes (a) generates token streams identical **within the documented
+/// error bound** — asserted margin-aware below: wherever a greedy step's
+/// top-2 logit margin exceeds twice the measured quantization-induced
+/// logit perturbation, the argmax MUST match (this decides every step in
+/// practice; margin-aware so a knife-edge argmax can never make the test
+/// flaky) — and (b) shrinks `used/peak` cache bytes by **exactly** the
+/// spec's dtype ratio: all requests run to the same token *counts*
+/// regardless of token values, so page counts are identical across modes
+/// and every byte counter scales linearly with `bytes_per_token()`.
+#[test]
+fn int8_cache_mode_matches_f32_tokens_and_shrinks_bytes() {
+    use kqsvd::coordinator::Engine;
+
+    // (a) margin-aware greedy comparison, teacher-forced so both caches see
+    // identical token prefixes at every step.
+    let mut f32_tf =
+        engine_for_dtype("test-tiny", Method::KqSvd, "rust", "i8tf-f", KvDtype::F32).unwrap();
+    let mut i8_tf =
+        engine_for_dtype("test-tiny", Method::KqSvd, "rust", "i8tf-q", KvDtype::Int8).unwrap();
+    let top2 = |l: &[f32]| {
+        let mut best = f32::NEG_INFINITY;
+        let (mut arg, mut second) = (0usize, f32::NEG_INFINITY);
+        for (i, &v) in l.iter().enumerate() {
+            if v > best {
+                second = best;
+                best = v;
+                arg = i;
+            } else if v > second {
+                second = v;
+            }
+        }
+        (arg, best - second)
+    };
+    // The margin gate alone would be a tautology (margin > 2·max|lf−lq|
+    // *implies* equal argmax for any two vectors), so the real teeth are
+    // the decided-step floor below: a broken codec inflates delta, the
+    // gate stops opening, and the floor fails the test.
+    let (mut decided, mut total) = (0usize, 0usize);
+    for (req, prompt) in (0..3u64).map(|i| (i, workload_prompt(i))) {
+        for eng in [&mut f32_tf, &mut i8_tf] {
+            eng.alloc(req, prompt.len() + 8).unwrap();
+        }
+        let mut lf = f32_tf.prefill(req, &prompt, 0, true).unwrap().unwrap();
+        let mut lq = i8_tf.prefill(req, &prompt, 0, true).unwrap().unwrap();
+        for step in 0..6 {
+            let delta = lf
+                .iter()
+                .zip(&lq)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(delta.is_finite());
+            let (tok_f, margin) = top2(&lf);
+            let (tok_q, _) = top2(&lq);
+            total += 1;
+            if margin > 2.0 * delta {
+                decided += 1;
+                assert_eq!(
+                    tok_f, tok_q,
+                    "req {req} step {step}: greedy tokens diverged with margin \
+                     {margin} > 2·perturbation {delta}"
+                );
+            }
+            // Teacher-force the f32 choice into both engines.
+            let t = tok_f as u32;
+            lf = f32_tf.decode(&[(req, t)]).unwrap().remove(0);
+            lq = i8_tf.decode(&[(req, t)]).unwrap().remove(0);
+        }
+        f32_tf.free(req);
+        i8_tf.free(req);
+    }
+    assert!(
+        decided * 2 >= total,
+        "quantization perturbation dominated the greedy margins on \
+         {}/{total} steps — int8 logit fidelity regressed",
+        total - decided
+    );
+
+    // (b) exact dtype-ratio byte scaling through the full router workload.
+    let mut f32_eng =
+        engine_for_dtype("test-tiny", Method::KqSvd, "rust", "i8cmp-f", KvDtype::F32).unwrap();
+    let mut i8_eng =
+        engine_for_dtype("test-tiny", Method::KqSvd, "rust", "i8cmp-q", KvDtype::Int8).unwrap();
+    let f32_done = run_workload(&mut f32_eng, 5);
+    let i8_done = run_workload(&mut i8_eng, 5);
+    assert_eq!(f32_done.len(), i8_done.len());
+    for (a, b) in f32_done.iter().zip(&i8_done) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens.len(), b.tokens.len(), "token *counts* are dtype-invariant");
+        assert_eq!(a.reason, b.reason);
+    }
+
+    let (bpt_f32, bpt_i8) = (f32_eng.cache_bytes_per_token(), i8_eng.cache_bytes_per_token());
+    assert!(bpt_i8 < bpt_f32, "int8 must shrink bytes/token: {bpt_i8} vs {bpt_f32}");
+    // Exact proportionality of the peak commitment (pages + reservations):
+    // cross-multiplied to avoid rationals.
+    assert_eq!(
+        f32_eng.cache.peak_bytes() * bpt_i8,
+        i8_eng.cache.peak_bytes() * bpt_f32,
+        "peak bytes must scale exactly with the dtype ratio"
+    );
+    assert!(i8_eng.cache.peak_bytes() > 0);
+    assert_eq!(f32_eng.cache.used_bytes(), 0);
+    assert_eq!(i8_eng.cache.used_bytes(), 0);
+    // The quant-error gauge moved and respected the codec's provable bound.
+    let err = i8_eng.cache.quant_dequant_error();
+    assert!(err > 0.0 && err <= 1.0 / 126.0, "quant error gauge: {err}");
+    assert_eq!(f32_eng.cache.quant_dequant_error(), 0.0);
+}
+
+/// Tentpole acceptance: prefix caching (shared pages, trie hits, memoized
+/// logits) works on quantized pages — a resubmitted prompt is a full hit,
+/// shares int8 pages, and decodes bit-identically to the original.
+#[test]
+fn int8_prefix_cache_hits_and_shares_quantized_pages() {
+    let mut eng =
+        engine_for_dtype("test-tiny", Method::KqSvd, "rust", "i8px", KvDtype::Int8).unwrap();
+    eng.cache.set_prefix_cache(true);
+    use kqsvd::coordinator::Engine;
+    let prompt: Vec<u32> = (0..32).map(|i| 1 + ((i * 11 + 3) % 60) as u32).collect();
+    let hit1 = eng.alloc_with_prompt(1, &prompt, 40).unwrap();
+    assert_eq!(hit1.cached_tokens, 0);
+    let cold_logits = eng.prefill(1, &prompt, 0, true).unwrap().unwrap();
+
+    let hit2 = eng.alloc_with_prompt(2, &prompt, 40).unwrap();
+    assert_eq!(hit2.cached_tokens, 32, "identical prompt must fully hit");
+    assert_eq!(
+        hit2.full_logits.as_deref(),
+        Some(cold_logits.as_slice()),
+        "memoized boundary logits must match the cold prefill bit for bit"
+    );
+    assert!(eng.cache.shared_pages() > 0, "int8 pages must actually be shared");
+    let a = eng.decode(&[(1, 9)]).unwrap().remove(0);
+    let b = eng.decode(&[(2, 9)]).unwrap().remove(0);
+    assert!(a == b, "decode from shared quantized pages must be bit-identical");
+    eng.free(1);
+    eng.free(2);
+    assert!(eng.cache.verify_accounting());
+    eng.cache.release_cold();
     assert_eq!(eng.cache.used_bytes(), 0);
 }
 
