@@ -231,6 +231,14 @@ pub fn decode_attn_batch(
             for g in 0..group {
                 let hq = kv * group + g;
                 let q_proj = &qp.row(bi)[hq * r..(hq + 1) * r];
+                // SAFETY: `ctx` was resized to `b × (h·rv)` above, so the
+                // `rv` elements at offset `bi·h·rv + hq·rv` are in bounds.
+                // Work item (bi, kv) exclusively owns the `hq ∈
+                // [kv·group, (kv+1)·group)` column segments of row `bi` —
+                // `parallel_for` never hands the same (bi, kv) to two jobs —
+                // so these mutable slices are pairwise disjoint, and `ctx`
+                // outlives the call because `parallel_for` blocks until all
+                // jobs finish.
                 let acc = unsafe {
                     std::slice::from_raw_parts_mut(ctx_ptr.0.add(bi * h * rv + hq * rv), rv)
                 };
@@ -247,6 +255,11 @@ pub fn decode_attn_batch(
     crate::util::threadpool::parallel_for(b, |lo, hi| {
         let out_ptr = &out_ptr;
         for bi in lo..hi {
+            // SAFETY: `out` was resized to `b × d_model` above and `bi < b`,
+            // so the row at offset `bi·d_model` is in bounds; `parallel_for`
+            // partitions `0..b` into disjoint `lo..hi` ranges, so each row
+            // is written by exactly one job, and `out` outlives the call
+            // because `parallel_for` blocks until all jobs finish.
             let orow =
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(bi * d_model), d_model) };
             orow.fill(0.0);

@@ -409,8 +409,13 @@ impl Batcher {
         let mut i = 0;
         while i < self.queue.len() {
             if self.queue[i].cancel.is_cancelled() {
-                let st = self.queue.remove(i).expect("index checked");
-                self.retire(st, FinishReason::Cancelled);
+                // `i` is bounds-checked by the loop condition so `remove`
+                // cannot return None — but the serving hot path never
+                // panics (xtask `hot-path-panics`), so degrade to a skip.
+                match self.queue.remove(i) {
+                    Some(st) => self.retire(st, FinishReason::Cancelled),
+                    None => i += 1,
+                }
             } else {
                 i += 1;
             }
@@ -549,7 +554,14 @@ impl Batcher {
             };
             match alloc_result {
                 Ok(hit) => {
-                    let mut st = self.queue.remove(best).expect("index checked");
+                    let Some(mut st) = self.queue.remove(best) else {
+                        // `best` indexes the queue (chosen above), so this
+                        // is unreachable — but the hot path never panics.
+                        // Return the freshly allocated cache and stop
+                        // admitting this round.
+                        engine.free(id);
+                        break;
+                    };
                     if first_admission {
                         self.next_seq_id += 1;
                         st.admitted_at = Instant::now();
@@ -568,19 +580,35 @@ impl Batcher {
                         miss_tokens += src_len - cached;
                     }
                     if cached == src_len {
-                        let logits = hit
-                            .full_logits
-                            .as_deref()
-                            .expect("full prefix hit must carry last-position logits");
-                        st.push_next_token(logits);
+                        // Engine contract: a full prefix hit must carry the
+                        // memoized last-position logits. A violation fails
+                        // this one request (TokenEvent::Rejected), never
+                        // the scheduler.
+                        match hit.full_logits.as_deref() {
+                            Some(logits) => st.push_next_token(logits),
+                            None => {
+                                engine.free(id);
+                                self.retire_failed(
+                                    st,
+                                    &anyhow::anyhow!(
+                                        "engine returned a full prefix hit without boundary logits"
+                                    ),
+                                );
+                                continue;
+                            }
+                        };
                     }
                     self.running.push((id, st));
                 }
                 Err(e) => {
                     self.queue[best].alloc_failures += 1;
                     if self.queue[best].alloc_failures >= MAX_ALLOC_FAILURES {
-                        let st = self.queue.remove(best).expect("index checked");
-                        self.retire_failed(st, &e);
+                        // `best` is in bounds (checked above); the hot path
+                        // never panics, so a None simply skips retirement
+                        // until the next boundary.
+                        if let Some(st) = self.queue.remove(best) {
+                            self.retire_failed(st, &e);
+                        }
                     }
                     break; // engine unhealthy: retry at the next step boundary
                 }
@@ -658,13 +686,18 @@ impl Batcher {
             });
         }
 
-        let decode_batch: Vec<(SeqId, u32)> = decode_slots
-            .iter()
-            .map(|&slot| {
-                let (id, st) = &self.running[slot];
-                (*id, st.last_token.expect("decode-ready seq has last token"))
-            })
-            .collect();
+        let mut decode_batch: Vec<(SeqId, u32)> = Vec::with_capacity(decode_slots.len());
+        for &slot in &decode_slots {
+            let (id, st) = &self.running[slot];
+            match st.last_token {
+                Some(tok) => decode_batch.push((*id, tok)),
+                // A decode-ready sequence always has a last token (sampled
+                // at admission or the previous step); if that invariant
+                // breaks, surface a scheduler error instead of aborting the
+                // serving thread.
+                None => anyhow::bail!("scheduler invariant: decode-ready seq {id} has no last token"),
+            }
+        }
         let result = {
             let chunks: Vec<PrefillChunk<'_>> = plan
                 .iter()
@@ -690,15 +723,20 @@ impl Batcher {
         );
 
         let mut prefill_tokens = 0usize;
+        // Slots whose engine reply violated the step_fused contract (missing
+        // last-chunk logits): those sequences are failed individually below.
+        let mut contract_failures: Vec<usize> = Vec::new();
         for (ci, &(slot, start, end, is_last)) in plan.iter().enumerate() {
             let (_, st) = &mut self.running[slot];
             st.prefilled = end;
             prefill_tokens += end - start;
             if is_last {
-                let logits = result.prefill_logits[ci]
-                    .as_deref()
-                    .expect("last prefill chunk must return logits");
-                st.push_next_token(logits);
+                match result.prefill_logits[ci].as_deref() {
+                    Some(logits) => {
+                        st.push_next_token(logits);
+                    }
+                    None => contract_failures.push(slot),
+                }
             }
         }
         for (di, &slot) in decode_slots.iter().enumerate() {
@@ -707,6 +745,18 @@ impl Batcher {
         }
         for (_, st) in &mut self.running {
             st.ran_steps = st.ran_steps.saturating_add(1);
+        }
+        // Fail contract-violating sequences (highest slot first so the
+        // remaining indices stay valid): each streams TokenEvent::Rejected
+        // and returns its cache, while every other sequence keeps serving.
+        contract_failures.sort_unstable();
+        for &slot in contract_failures.iter().rev() {
+            let (id, st) = self.running.remove(slot);
+            engine.free(id);
+            self.retire_failed(
+                st,
+                &anyhow::anyhow!("engine returned no logits for the last prefill chunk"),
+            );
         }
         // Retire finished sequences from the back so slots stay valid.
         for slot in (0..self.running.len()).rev() {

@@ -304,7 +304,11 @@ impl SeqState {
     /// Sample the next token from logits, record it, and stream it to the
     /// session (shared by the prefill-completion and decode paths).
     pub fn push_next_token(&mut self, logits: &[f32]) -> u32 {
-        let tok = sample_token(logits, self.req.params.temperature, &mut self.rng) as u32;
+        let idx = sample_token(logits, self.req.params.temperature, &mut self.rng);
+        // Token ids are u32 everywhere else in the stack; vocab sizes are
+        // far below 2^32, and a hot-path panic is never acceptable, so an
+        // (impossible) overflow clamps instead.
+        let tok = u32::try_from(idx).unwrap_or(u32::MAX);
         self.last_token = Some(tok);
         self.generated.push(tok);
         if self.first_token_at.is_none() {

@@ -44,6 +44,14 @@ pub type SeqId = u64;
 /// Index of a page inside the global [`PagePool`].
 pub type PageId = u32;
 
+/// Index into `PagePool::slots` for a page id — the one sanctioned
+/// `PageId → usize` conversion (everything else goes through it so the
+/// `lossy-casts` xtask lint has a single site to audit).
+#[inline]
+fn page_index(id: PageId) -> usize {
+    id as usize // cast-ok: PageId is u32; u32 → usize never truncates on supported targets
+}
+
 // ---------------------------------------------------------------------------
 // Storage dtype & quantization codec
 // ---------------------------------------------------------------------------
@@ -127,7 +135,7 @@ pub fn cache_bytes_per_token(
 /// `2^e` as f32, exact for `e ∈ [−126, 127]`.
 #[inline]
 pub fn exp_scale(e: i8) -> f32 {
-    f32::from_bits(((e as i32 + 127) as u32) << 23)
+    f32::from_bits(((e as i32 + 127) as u32) << 23) // cast-ok: e+127 ∈ [1,254] fits the exponent field
 }
 
 /// Smallest exponent `e` (clamped to the normal-f32 range) with
@@ -139,7 +147,7 @@ fn quant_exp(max_abs: f32) -> i8 {
     }
     let t = max_abs / 127.0;
     let bits = t.to_bits();
-    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127; // cast-ok: masked to 8 bits before widening
     let frac = bits & 0x007f_ffff;
     let e = if exp <= -127 {
         // Subnormal t: any normal power of two dominates it.
@@ -149,7 +157,7 @@ fn quant_exp(max_abs: f32) -> i8 {
     } else {
         exp + 1
     };
-    e.clamp(-126, 127) as i8
+    e.clamp(-126, 127) as i8 // cast-ok: clamped to the i8-representable exponent range
 }
 
 /// Quantize one f32 row to symmetric int8 with a per-row power-of-two scale;
@@ -184,7 +192,7 @@ fn quantize_row_i8_tracked(src: &[f32], q: &mut [i8]) -> (i8, f32) {
     let inv = 1.0 / scale;
     let mut err = 0.0f32;
     for (qi, &x) in q.iter_mut().zip(src) {
-        *qi = (x * inv).round() as i8;
+        *qi = (x * inv).round() as i8; // cast-ok: saturating f32→i8 quantize; |x·inv| ≤ 127 by scale choice
         err = err.max((x - dequant_i8(*qi, scale)).abs());
     }
     let clamped = max < 127.0 * exp_scale(-126);
@@ -327,11 +335,11 @@ impl PagePool {
     }
 
     fn slot(&self, id: PageId) -> &PageSlot {
-        self.slots[id as usize].as_ref().expect("dangling page id")
+        self.slots[page_index(id)].as_ref().expect("dangling page id")
     }
 
     fn slot_mut(&mut self, id: PageId) -> &mut PageSlot {
-        self.slots[id as usize].as_mut().expect("dangling page id")
+        self.slots[page_index(id)].as_mut().expect("dangling page id")
     }
 
     /// View of the first `rows` filled rows of a page, in the page's storage
@@ -391,7 +399,7 @@ impl PagePool {
         };
         match self.free.pop() {
             Some(id) => {
-                self.slots[id as usize] = Some(slot);
+                self.slots[page_index(id)] = Some(slot);
                 id
             }
             None => {
@@ -404,7 +412,7 @@ impl PagePool {
     /// Add one sequence reference (mapping a shared/cached page).
     pub(crate) fn ref_page(&mut self, id: PageId) {
         let b = self.page_bytes(self.slot(id).width);
-        let s = self.slots[id as usize].as_mut().unwrap();
+        let s = self.slots[page_index(id)].as_mut().unwrap();
         s.refs += 1;
         if s.refs == 1 {
             // Warmed a cold cached page: its bytes are committed again.
@@ -421,7 +429,7 @@ impl PagePool {
     /// when other references remain or the trie keeps the page cold).
     pub(crate) fn deref_page(&mut self, id: PageId) -> u64 {
         let b = self.page_bytes(self.slot(id).width);
-        let s = self.slots[id as usize].as_mut().unwrap();
+        let s = self.slots[page_index(id)].as_mut().unwrap();
         debug_assert!(s.refs > 0, "deref of unreferenced page");
         if s.refs >= 2 {
             self.bytes_saved -= b;
@@ -441,7 +449,7 @@ impl PagePool {
     }
 
     fn release(&mut self, id: PageId, bytes: u64) -> u64 {
-        self.slots[id as usize] = None;
+        self.slots[page_index(id)] = None;
         self.free.push(id);
         self.live_pages -= 1;
         self.used_bytes -= bytes;
@@ -457,7 +465,7 @@ impl PagePool {
     /// Returns bytes physically released.
     pub(crate) fn uncache_page(&mut self, id: PageId) -> u64 {
         let b = self.page_bytes(self.slot(id).width);
-        let s = self.slots[id as usize].as_mut().unwrap();
+        let s = self.slots[page_index(id)].as_mut().unwrap();
         debug_assert!(s.cached, "uncache of non-cached page");
         s.cached = false;
         if s.refs == 0 {
@@ -564,7 +572,7 @@ impl PagePool {
             let slot_i = table.len % page_rows;
             let row = &data[i * w..(i + 1) * w];
             let mut rel_err = 0.0f32;
-            match &mut self.slots[page as usize].as_mut().unwrap().data {
+            match &mut self.slots[page_index(page)].as_mut().unwrap().data {
                 PageData::F32(d) => d[slot_i * w..(slot_i + 1) * w].copy_from_slice(row),
                 PageData::I8 { q, exps } => {
                     let qrow = &mut q[slot_i * w..(slot_i + 1) * w];
@@ -1737,6 +1745,9 @@ impl KvCacheManager {
         self.pool.used_bytes = v;
     }
 }
+
+#[cfg(test)]
+mod model;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,561 @@
+//! Exhaustive interleaving models of the page-pool protocol.
+//!
+//! The serving stack serializes all pool operations on the engine thread, so
+//! these are *protocol* models, not memory-model tests: each model declares a
+//! set of logical threads (fixed op sequences against one `KvCacheManager`
+//! or `PagePool`) and [`crate::util::interleave::explore`] replays **every**
+//! program-order-preserving interleaving, checking the accounting invariants
+//! after each step. A violation comes back with the exact schedule that
+//! produced it — a replayable counterexample, in the style of a loom trace.
+//!
+//! Four protocols are modeled, mirroring the subsystems DESIGN.md §9 calls
+//! out:
+//!
+//! 1. **Refcount/admission** — alloc/reserve/append/free of two sequences
+//!    racing for a budget that fits only one at a time.
+//! 2. **Prefix-share warm/cold** — two sequences mapping the same cached
+//!    prompt chunk (cold → warm → shared → cold round trip).
+//! 3. **COW split** — two block tables sharing a partial, trie-cached tail
+//!    page while both append and the trie claim is dropped mid-flight.
+//! 4. **Generation cursor** — stepwise prefill + trie registration racing a
+//!    full cold-page eviction.
+//!
+//! Each model asserts the explorer *finished* (returned count below
+//! [`schedule_cap`]), so the cap is a backstop, not a silent coverage hole.
+//! The `seeded_*` tests prove the harness has teeth: a deliberately broken
+//! refcount (an extra `ref_page` smuggled in before `free`) must be caught,
+//! with a nonempty counterexample schedule. Plain `cargo test` explores the
+//! small models exhaustively; the CI loom lane (`RUSTFLAGS="--cfg loom"`)
+//! additionally runs the deep 3-sequence variant (~757k schedules).
+
+use super::*;
+use crate::util::interleave::{explore, schedule_cap, Violation};
+use std::collections::HashMap;
+
+/// Two layers × two KV heads with distinct widths, 8-token pages — the same
+/// geometry the unit tests use, so byte math cross-checks are easy.
+fn spec2() -> CacheSpec {
+    CacheSpec {
+        n_kv_heads: 2,
+        layers: vec![
+            LayerGeom { k_width: 4, v_width: 6 },
+            LayerGeom { k_width: 3, v_width: 5 },
+        ],
+        page_tokens: 8,
+        kv_dtype: KvDtype::F32,
+    }
+}
+
+/// Bytes one fully-mapped page chunk (8 tokens across all tables) occupies
+/// under [`spec2`]: Σ widths = 2·(4+6) + 2·(3+5) = 36 floats/token,
+/// 8 tokens/page → 36 · 4 · 8 = 1152.
+const CHUNK_BYTES: u64 = 1152;
+
+fn push_token(mgr: &mut KvCacheManager, id: SeqId, val: f32) -> Result<(), CacheError> {
+    let spec = mgr.spec().clone();
+    for l in 0..spec.layers.len() {
+        let k: Vec<Vec<f32>> = (0..spec.n_kv_heads)
+            .map(|h| vec![val + h as f32; spec.layers[l].k_width])
+            .collect();
+        let v: Vec<Vec<f32>> = (0..spec.n_kv_heads)
+            .map(|h| vec![-val - h as f32; spec.layers[l].v_width])
+            .collect();
+        let krefs: Vec<&[f32]> = k.iter().map(|r| r.as_slice()).collect();
+        let vrefs: Vec<&[f32]> = v.iter().map(|r| r.as_slice()).collect();
+        mgr.append_layer(id, l, &krefs, &vrefs)?;
+    }
+    mgr.commit_token(id)?;
+    Ok(())
+}
+
+fn check_accounting(mgr: &KvCacheManager) -> Result<(), String> {
+    if mgr.verify_accounting() {
+        Ok(())
+    } else {
+        Err("incremental accounting counters diverged from recomputation".into())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 1: refcount/admission — two sequences racing a one-sequence budget.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum AdmitOp {
+    Alloc,
+    Reserve,
+    Push,
+    Free,
+}
+
+struct AdmitState {
+    mgr: KvCacheManager,
+    admitted: Vec<bool>,
+}
+
+/// Build the per-thread op program for one sequence in the admission model.
+fn admit_program(pushes: usize) -> Vec<AdmitOp> {
+    let mut ops = vec![AdmitOp::Alloc, AdmitOp::Reserve];
+    for _ in 0..pushes {
+        ops.push(AdmitOp::Push);
+    }
+    ops.push(AdmitOp::Free);
+    ops
+}
+
+fn admit_apply(st: &mut AdmitState, t: usize, op: &AdmitOp) -> Result<(), String> {
+    let id = (t + 1) as SeqId;
+    match op {
+        AdmitOp::Alloc => st
+            .mgr
+            .alloc(id)
+            .map_err(|e| format!("alloc({id}): {e}"))?,
+        AdmitOp::Reserve => {
+            // Over-budget rejection is a legal outcome (the other thread
+            // holds the budget); the sequence just never appends.
+            st.admitted[t] = st.mgr.reserve(id, 3).is_ok();
+        }
+        AdmitOp::Push => {
+            if st.admitted[t] {
+                push_token(&mut st.mgr, id, id as f32).map_err(|e| format!("push({id}): {e}"))?;
+            }
+        }
+        AdmitOp::Free => {
+            st.mgr.free(id).map_err(|e| format!("free({id}): {e}"))?;
+            st.admitted[t] = false;
+        }
+    }
+    Ok(())
+}
+
+fn admit_check(st: &AdmitState) -> Result<(), String> {
+    check_accounting(&st.mgr)?;
+    // Admission control must hold at every step: commitments never exceed
+    // the budget, whatever the interleaving.
+    if st.mgr.committed() > st.mgr.budget_bytes() {
+        return Err(format!(
+            "committed {} exceeds budget {}",
+            st.mgr.committed(),
+            st.mgr.budget_bytes()
+        ));
+    }
+    Ok(())
+}
+
+fn run_admit_model(n_seqs: usize, pushes: usize) -> Result<usize, Box<Violation>> {
+    let threads: Vec<Vec<AdmitOp>> = (0..n_seqs).map(|_| admit_program(pushes)).collect();
+    explore(
+        &threads,
+        || AdmitState {
+            // Budget fits exactly one sequence's page chunk (+ slack below a
+            // second), so admission outcomes depend on the interleaving:
+            // reserve-after-free succeeds, reserve-while-held fails.
+            mgr: KvCacheManager::new(spec2(), CHUNK_BYTES + CHUNK_BYTES / 2),
+            admitted: vec![false; n_seqs],
+        },
+        admit_apply,
+        admit_check,
+        schedule_cap(),
+    )
+}
+
+#[test]
+fn model_admission_two_sequences() {
+    let n = run_admit_model(2, 3).unwrap_or_else(|v| panic!("{v}"));
+    // C(12,6) = 924 merges of two 6-op programs; must be fully enumerated.
+    assert_eq!(n, 924);
+    assert!(n < schedule_cap(), "model must finish below the cap");
+}
+
+/// Deep variant for the CI loom lane: three sequences, ~757k schedules
+/// (15!/(5!)³). Too slow for plain `cargo test`, exhaustive under the raised
+/// `--cfg loom` cap.
+#[cfg(loom)]
+#[test]
+fn model_admission_three_sequences_deep() {
+    let n = run_admit_model(3, 2).unwrap_or_else(|v| panic!("{v}"));
+    assert_eq!(n, 756_756);
+    assert!(n < schedule_cap(), "model must finish below the cap");
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: prefix-share refcounts — cold → warm → shared → cold round trip.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum ShareOp {
+    Alloc,
+    Map,
+    Push,
+    Free,
+}
+
+struct ShareState {
+    mgr: KvCacheManager,
+    applied: usize,
+    total_ops: usize,
+    /// Seed a refcount bug: one extra `ref_page` on the victim's first page
+    /// right before `free`, leaking the page. The model must catch this.
+    bug_extra_ref: bool,
+}
+
+fn share_state(bug_extra_ref: bool, total_ops: usize) -> ShareState {
+    let mut mgr = KvCacheManager::new(spec2(), 100 * CHUNK_BYTES);
+    mgr.set_prefix_cache(true);
+    // Seed the trie: prefill one full 8-token chunk on a scratch sequence,
+    // memoize boundary logits, then free it — the chunk's pages go cold
+    // (cached, zero refs) and every model sequence below maps them.
+    mgr.alloc(100).unwrap();
+    for t in 0u32..8 {
+        push_token(&mut mgr, 100, t as f32).unwrap();
+    }
+    let prompt: Vec<u32> = (0..8).collect();
+    mgr.note_prefill_tokens(100, &prompt, Some(&[0.5, 0.25]));
+    mgr.free(100).unwrap();
+    assert_eq!(mgr.cold_bytes(), CHUNK_BYTES);
+    ShareState {
+        mgr,
+        applied: 0,
+        total_ops,
+        bug_extra_ref,
+    }
+}
+
+fn share_apply(st: &mut ShareState, t: usize, op: &ShareOp) -> Result<(), String> {
+    let id = (t + 1) as SeqId;
+    st.applied += 1;
+    match op {
+        ShareOp::Alloc => st.mgr.alloc(id).map_err(|e| format!("alloc({id}): {e}"))?,
+        ShareOp::Map => {
+            let prompt: Vec<u32> = (0..8).collect();
+            let (hit, logits) = st
+                .mgr
+                .map_prefix(id, &prompt)
+                .map_err(|e| format!("map_prefix({id}): {e}"))?;
+            // The seeded chunk is never evicted in this model, so every map
+            // must fully cover the prompt and return the memoized logits.
+            if hit != 8 || logits.is_none() {
+                return Err(format!("map_prefix({id}) hit {hit}/8, logits {logits:?}"));
+            }
+        }
+        ShareOp::Push => {
+            push_token(&mut st.mgr, id, 99.0).map_err(|e| format!("push({id}): {e}"))?
+        }
+        ShareOp::Free => {
+            if st.bug_extra_ref && t == 0 {
+                // Deliberately corrupt the protocol: an extra reference the
+                // free below will not release.
+                let page = st.mgr.seqs[&id].k[0][0].pages[0];
+                st.mgr.pool.ref_page(page);
+            }
+            st.mgr.free(id).map_err(|e| format!("free({id}): {e}"))?;
+        }
+    }
+    Ok(())
+}
+
+fn share_check(st: &ShareState) -> Result<(), String> {
+    check_accounting(&st.mgr)?;
+    if st.applied == st.total_ops {
+        // Both sequences freed: the shared chunk must be cold again and
+        // every decode page released — nothing may leak.
+        if st.mgr.cold_bytes() != CHUNK_BYTES || st.mgr.used_bytes() != CHUNK_BYTES {
+            return Err(format!(
+                "end state leaks pages: used {} cold {} (expected {CHUNK_BYTES} both)",
+                st.mgr.used_bytes(),
+                st.mgr.cold_bytes()
+            ));
+        }
+        if st.mgr.shared_pages() != 0 {
+            return Err(format!("{} pages still shared at end", st.mgr.shared_pages()));
+        }
+    }
+    Ok(())
+}
+
+fn run_share_model(bug_extra_ref: bool) -> Result<usize, Box<Violation>> {
+    use ShareOp::*;
+    let program = vec![Alloc, Map, Push, Free];
+    let threads = vec![program.clone(), program];
+    let total: usize = threads.iter().map(Vec::len).sum();
+    explore(
+        &threads,
+        move || share_state(bug_extra_ref, total),
+        share_apply,
+        share_check,
+        schedule_cap(),
+    )
+}
+
+#[test]
+fn model_prefix_share_roundtrip() {
+    let n = run_share_model(false).unwrap_or_else(|v| panic!("{v}"));
+    assert_eq!(n, 70); // C(8,4) merges of two 4-op programs
+    assert!(n < schedule_cap(), "model must finish below the cap");
+}
+
+/// Negative fixture: the model must *catch* the seeded extra-ref bug, and
+/// the violation must carry a replayable schedule.
+#[test]
+fn seeded_extra_ref_is_caught() {
+    let v = run_share_model(true).expect_err("seeded refcount bug must be detected");
+    assert!(!v.schedule.is_empty(), "counterexample schedule missing");
+    assert!(
+        v.step < v.schedule.len(),
+        "violation step {} out of range for schedule {:?}",
+        v.step,
+        v.schedule
+    );
+    // The leak is visible the moment the buggy free's accounting is checked.
+    assert!(
+        v.msg.contains("accounting") || v.msg.contains("leak"),
+        "unexpected violation message: {}",
+        v.msg
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Model 3: COW split — shared, trie-cached partial tail under racing appends.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum CowOp {
+    PushA(u32),
+    PushB(u32),
+    UncacheTail,
+}
+
+struct CowState {
+    pool: PagePool,
+    a: BlockTable,
+    b: BlockTable,
+    expect_a: Vec<u32>,
+    expect_b: Vec<u32>,
+    orig_tail: PageId,
+}
+
+const COW_WIDTH: usize = 3;
+
+fn cow_state() -> CowState {
+    let mut pool = PagePool::new(4);
+    let mut a = BlockTable::new(COW_WIDTH);
+    // Three shared prefix rows: a partial tail page (3 of 4 rows filled).
+    for v in 1u32..=3 {
+        pool.push_row(&mut a, &[v as f32; COW_WIDTH]);
+    }
+    let orig_tail = *a.pages.last().unwrap();
+    // Fork B from A the way map_prefix does: same page ids, bumped refs.
+    let b = a.clone();
+    for &p in &b.pages {
+        pool.ref_page(p);
+    }
+    // The trie also claims the tail, as it would after chunk registration.
+    pool.mark_cached(orig_tail);
+    CowState {
+        pool,
+        a,
+        b,
+        expect_a: vec![1, 2, 3],
+        expect_b: vec![1, 2, 3],
+        orig_tail,
+    }
+}
+
+fn cow_apply(st: &mut CowState, _t: usize, op: &CowOp) -> Result<(), String> {
+    match *op {
+        CowOp::PushA(v) => {
+            st.pool.push_row(&mut st.a, &[v as f32; COW_WIDTH]);
+            st.expect_a.push(v);
+        }
+        CowOp::PushB(v) => {
+            st.pool.push_row(&mut st.b, &[v as f32; COW_WIDTH]);
+            st.expect_b.push(v);
+        }
+        CowOp::UncacheTail => {
+            st.pool.uncache_page(st.orig_tail);
+        }
+    }
+    Ok(())
+}
+
+fn cow_check(st: &CowState) -> Result<(), String> {
+    // Data isolation: each table reads back exactly its own row history,
+    // whatever COW decisions the interleaving forced.
+    for (name, table, expect) in [("A", &st.a, &st.expect_a), ("B", &st.b, &st.expect_b)] {
+        if table.len() != expect.len() {
+            return Err(format!("table {name} len {} != {}", table.len(), expect.len()));
+        }
+        for (i, &v) in expect.iter().enumerate() {
+            if table.row(&st.pool, i) != &[v as f32; COW_WIDTH][..] {
+                return Err(format!("table {name} row {i} corrupted (expected {v})"));
+            }
+        }
+    }
+    // Counter recomputation: every incrementally-maintained pool counter
+    // must match a from-scratch walk of the slots.
+    let mut refs_expected: HashMap<PageId, u32> = HashMap::new();
+    for t in [&st.a, &st.b] {
+        for &p in &t.pages {
+            *refs_expected.entry(p).or_insert(0) += 1;
+        }
+    }
+    let (mut used, mut cold, mut saved) = (0u64, 0u64, 0u64);
+    let (mut live, mut shared) = (0usize, 0usize);
+    for (i, slot) in st.pool.slots.iter().enumerate() {
+        let Some(s) = slot else { continue };
+        let b = st.pool.page_bytes(s.width);
+        live += 1;
+        used += b;
+        if s.refs == 0 {
+            if !s.cached {
+                return Err(format!("page {i} leaked: zero refs, not cached, not freed"));
+            }
+            cold += b;
+        }
+        if s.refs > 1 {
+            shared += 1;
+        }
+        if s.refs >= 1 {
+            saved += (s.refs as u64 - 1) * b;
+        }
+        if s.refs != refs_expected.get(&(i as PageId)).copied().unwrap_or(0) {
+            return Err(format!(
+                "page {i} refcount {} != {} tables mapping it",
+                s.refs,
+                refs_expected.get(&(i as PageId)).copied().unwrap_or(0)
+            ));
+        }
+    }
+    if used != st.pool.used_bytes
+        || cold != st.pool.cold_bytes
+        || live != st.pool.live_pages
+        || shared != st.pool.shared_pages
+        || saved != st.pool.bytes_saved
+    {
+        return Err(format!(
+            "pool counters diverged: used {}/{} cold {}/{} live {}/{} shared {}/{} saved {}/{}",
+            st.pool.used_bytes,
+            used,
+            st.pool.cold_bytes,
+            cold,
+            st.pool.live_pages,
+            live,
+            st.pool.shared_pages,
+            shared,
+            st.pool.bytes_saved,
+            saved
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn model_cow_split_racing_appends() {
+    use CowOp::*;
+    let threads = vec![
+        vec![PushA(10), PushA(11)],
+        vec![PushB(20), PushB(21)],
+        vec![UncacheTail],
+    ];
+    let n = explore(&threads, cow_state, cow_apply, cow_check, schedule_cap())
+        .unwrap_or_else(|v| panic!("{v}"));
+    assert_eq!(n, 30); // 5!/(2!·2!·1!)
+    assert!(n < schedule_cap(), "model must finish below the cap");
+}
+
+// ---------------------------------------------------------------------------
+// Model 4: generation cursor — stepwise prefill racing cold eviction.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum GenOp {
+    Alloc,
+    Map,
+    Push,
+    Note,
+    Evict,
+}
+
+struct GenState {
+    mgr: KvCacheManager,
+    prompt: Vec<u32>,
+    /// Next prompt index sequence 1 must prefill (set by `Map`'s hit count).
+    next: usize,
+    /// Tokens pushed since the map, in order — what `Note` registers.
+    pushed: Vec<u32>,
+}
+
+fn gen_state() -> GenState {
+    let mut mgr = KvCacheManager::new(spec2(), 100 * CHUNK_BYTES);
+    mgr.set_prefix_cache(true);
+    let prompt: Vec<u32> = (0..16).collect();
+    // Seed chunk 1 (tokens 0..8) cold in the trie via a scratch sequence.
+    mgr.alloc(100).unwrap();
+    for &t in &prompt[..8] {
+        push_token(&mut mgr, 100, t as f32).unwrap();
+    }
+    mgr.note_prefill_tokens(100, &prompt[..8], None);
+    mgr.free(100).unwrap();
+    assert_eq!(mgr.cold_bytes(), CHUNK_BYTES);
+    GenState {
+        mgr,
+        prompt,
+        next: 0,
+        pushed: Vec::new(),
+    }
+}
+
+fn gen_apply(st: &mut GenState, _t: usize, op: &GenOp) -> Result<(), String> {
+    match op {
+        GenOp::Alloc => st.mgr.alloc(1).map_err(|e| format!("alloc: {e}"))?,
+        GenOp::Map => {
+            // May hit chunk 1 (8 tokens) or nothing, depending on whether the
+            // eviction thread ran first. Either way prefill resumes at `hit`.
+            let (hit, _logits) = st
+                .mgr
+                .map_prefix(1, &st.prompt)
+                .map_err(|e| format!("map_prefix: {e}"))?;
+            st.next = hit;
+        }
+        GenOp::Push => {
+            if st.next < st.prompt.len() {
+                let tok = st.prompt[st.next];
+                push_token(&mut st.mgr, 1, tok as f32).map_err(|e| format!("push: {e}"))?;
+                st.pushed.push(tok);
+                st.next += 1;
+            }
+        }
+        GenOp::Note => {
+            // Register whatever was prefilled. If the eviction invalidated
+            // the trie path mid-prefill, the generation cursor must make
+            // this a safe no-op rather than corrupting page claims.
+            st.mgr
+                .note_prefill_tokens(1, &st.pushed, Some(&[0.5, 0.25]));
+        }
+        GenOp::Evict => {
+            st.mgr.evict_cold(u64::MAX);
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn model_generation_cursor_vs_eviction() {
+    use GenOp::*;
+    let mut prefill = vec![Alloc, Map];
+    for _ in 0..8 {
+        prefill.push(Push);
+    }
+    prefill.push(Note);
+    let threads = vec![prefill, vec![Evict, Evict]];
+    let n = explore(
+        &threads,
+        gen_state,
+        gen_apply,
+        |st| check_accounting(&st.mgr),
+        schedule_cap(),
+    )
+    .unwrap_or_else(|v| panic!("{v}"));
+    assert_eq!(n, 78); // C(13,2) placements of the two evictions
+    assert!(n < schedule_cap(), "model must finish below the cap");
+}

@@ -34,7 +34,15 @@
 //! See `DESIGN.md` (repository root) for the full system inventory — in
 //! particular §5 for the session API lifecycle (submit → stream → cancel),
 //! the [`coordinator::Engine`] trait contract, and
-//! [`server::EngineBuilder`] usage.
+//! [`server::EngineBuilder`] usage; §9 documents the correctness tooling
+//! (`cargo xtask lint`, Miri, the loom-style page-pool models) that gates
+//! changes to the unsafe kernels and cache accounting below.
+
+// Unsafe hygiene (enforced in CI by clippy and `cargo xtask lint`): every
+// unsafe operation needs its own block, and every block needs a `// SAFETY:`
+// comment stating the aliasing/lifetime argument.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod attn;
 pub mod bench_support;

@@ -425,6 +425,12 @@ impl Mat {
                     for p in 0..k {
                         acc += arow[p] * brow[p];
                     }
+                    // SAFETY: `out` was resized to `m × n` above and
+                    // `i < m`, `j < n`, so `i·n + j` is in bounds. Jobs
+                    // receive disjoint `lo..hi` row ranges from
+                    // `parallel_for`, so no two jobs write the same element,
+                    // and `out` outlives the call (parallel_for blocks until
+                    // all jobs finish).
                     unsafe { *o.0.add(i * n + j) = acc };
                 }
             }
@@ -507,16 +513,34 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    let c_ptr = SendPtr(c.as_mut_ptr());
     // Tune: rows per task. Small matrices run single-threaded.
     if m * k * n < 64 * 64 * 64 {
         matmul_rows(a, b, c, 0, m, k, n);
         return;
     }
+    matmul_into_threaded(a, b, c, m, k, n);
+}
+
+/// Threaded row-block body of [`matmul_into`], split out (and kept `pub` but
+/// hidden) so the Miri lane can drive the multi-thread path on matrices far
+/// below the single-thread cutoff.
+#[doc(hidden)]
+pub fn matmul_into_threaded(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let c_ptr = SendPtr(c.as_mut_ptr());
     crate::util::threadpool::parallel_for(m, move |lo, hi| {
         let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
-        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0, m * n) };
-        matmul_rows(a, b, c_slice, lo, hi, k, n);
+        // SAFETY: `c` is `m × n` and `lo..hi ⊆ 0..m`, so rows `lo..hi` are
+        // in bounds. Each job materializes a slice covering *only its own
+        // disjoint row block* — never the full buffer, which would alias the
+        // other jobs' `&mut` slices — and `c` outlives the call because
+        // `parallel_for` blocks until every job finishes.
+        let c_block =
+            unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        let a_block = &a[lo * k..hi * k];
+        matmul_rows(a_block, b, c_block, 0, hi - lo, k, n);
     });
 }
 

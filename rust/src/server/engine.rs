@@ -287,7 +287,7 @@ impl ServingEngine {
         let group = cfg.group_size();
         anyhow::ensure!(pos < cfg.max_seq, "context overflow at pos {pos}");
 
-        let mut x = self.model.weights.embed.row(token as usize).to_vec();
+        let mut x = self.model.weights.embed.row(token as usize).to_vec(); // cast-ok: u32 token id → usize widening
 
         for li in 0..cfg.n_layers {
             let (q_heads, _) = self.project_and_append(id, li, &x, pos)?;
@@ -414,7 +414,7 @@ impl ServingEngine {
         s.x.resize(b, d);
         for (bi, &(_, tok)) in batch.iter().enumerate() {
             s.x.row_mut(bi)
-                .copy_from_slice(self.model.weights.embed.row(tok as usize));
+                .copy_from_slice(self.model.weights.embed.row(tok as usize)); // cast-ok: u32 token id → usize widening
         }
 
         for li in 0..n_layers {
@@ -518,7 +518,7 @@ impl ServingEngine {
         s.x.resize(n, d);
         for (i, &tok) in tokens.iter().enumerate() {
             s.x.row_mut(i)
-                .copy_from_slice(self.model.weights.embed.row(tok as usize));
+                .copy_from_slice(self.model.weights.embed.row(tok as usize)); // cast-ok: u32 token id → usize widening
         }
 
         for li in 0..n_layers {
@@ -583,7 +583,7 @@ impl ServingEngine {
         let mut xs: Vec<Vec<f32>> = Vec::with_capacity(b_needed);
         let mut lens: Vec<usize> = Vec::with_capacity(b_needed);
         for &(id, tok) in batch {
-            xs.push(self.model.weights.embed.row(tok as usize).to_vec());
+            xs.push(self.model.weights.embed.row(tok as usize).to_vec()); // cast-ok: u32 token id → usize widening
             lens.push(self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?);
         }
 

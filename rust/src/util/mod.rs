@@ -3,6 +3,7 @@
 //! and `proptest`, none of which are available in the offline build
 //! environment (see DESIGN.md §7).
 
+pub mod interleave;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -25,7 +25,17 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 /// jobs complete (which `parallel_for` guarantees via its latch).
 #[derive(Clone, Copy)]
 pub struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr is a plain address with no lifetime or ownership claims;
+// sending it across threads is sound because every user upholds the contract
+// above — writes go through provably disjoint offsets and the buffer outlives
+// the jobs (parallel_for's latch blocks the owner until all jobs finish).
+// The Miri lane (rust/tests/miri_kernels.rs) checks the disjointness of every
+// kernel that uses it.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same argument as Send — the wrapper itself is never dereferenced
+// through a shared reference; `&SendPtr` only hands out copies of the
+// address, and all dereferences happen in per-job unsafe blocks with their
+// own disjointness arguments.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -123,6 +133,12 @@ impl ThreadPool {
             let end = ((j + 1) * chunk).min(n);
             let latch = Arc::clone(&latch);
             self.submit(Box::new(move || {
+                // SAFETY: `f_ptr` is the address of `f` in the caller's
+                // stack frame, which stays alive until `latch.wait()` below
+                // returns — and the latch counts down only after this job
+                // (and every other) has finished using the reference. `F:
+                // Sync`, so concurrent shared calls from worker threads are
+                // sound.
                 let fr = unsafe { &*(f_ptr as *const F) };
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     fr(start, end);

@@ -1,0 +1,10 @@
+// lint-as: rust/src/kvcache/fixture.rs
+// expect-lint: lossy-casts
+//
+// Negative fixture: a u64 byte count truncated to usize in an accounting
+// path without justification. `cargo xtask fixtures` verifies the
+// `lossy-casts` rule flags it. This file is lint fodder, never compiled.
+
+pub fn bytes_to_len(total_bytes: u64, row_bytes: u64) -> usize {
+    (total_bytes / row_bytes) as usize
+}

@@ -1,0 +1,36 @@
+// lint-as: rust/src/kvcache/fixture.rs
+// expect-lint: none
+//
+// Clean control fixture: exercises the allowed form of everything the
+// other fixtures get flagged for — accessor calls instead of raw fields,
+// u64-native math plus an annotated narrowing, a documented unsafe block,
+// and hot-path error flow via Result. Must produce zero findings.
+
+pub fn admit_budget(pool: &PagePool, need: u64) -> bool {
+    pool.used_bytes() + need <= pool.budget_bytes()
+}
+
+pub fn rows_in(total_bytes: u64, row_bytes: u64) -> usize {
+    (total_bytes / row_bytes) as usize // cast-ok: bounded by pool capacity < 2^32
+}
+
+pub fn read_first(data: &[u8]) -> Option<u8> {
+    if data.is_empty() {
+        return None;
+    }
+    let p = data.as_ptr();
+    // SAFETY: `data` is non-empty (checked above), so `p` points to its
+    // first initialized byte; the read does not outlive the borrow.
+    Some(unsafe { *p })
+}
+
+impl Batcher {
+    fn admit_one(&mut self) -> anyhow::Result<()> {
+        let st = self
+            .queue
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("empty queue"))?;
+        self.running.push(st);
+        Ok(())
+    }
+}

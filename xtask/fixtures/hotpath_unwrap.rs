@@ -1,0 +1,13 @@
+// lint-as: rust/src/coordinator/batcher.rs
+// expect-lint: hot-path-panics
+//
+// Negative fixture: an unwrap on the scheduler hot path. A poisoned queue
+// entry here would abort the whole serving loop instead of rejecting one
+// request. This file is lint fodder, never compiled.
+
+impl Batcher {
+    fn admit_one(&mut self) {
+        let st = self.queue.pop_front().unwrap();
+        self.running.push(st);
+    }
+}

@@ -1,0 +1,9 @@
+// lint-as: rust/src/util/fixture.rs
+// expect-lint: safety-comments
+//
+// Negative fixture: an unsafe block with no preceding safety comment.
+// This file is lint fodder, never compiled.
+
+pub fn read_raw(p: *const u8) -> u8 {
+    unsafe { *p }
+}

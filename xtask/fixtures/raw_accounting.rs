@@ -1,0 +1,11 @@
+// lint-as: rust/src/server/fixture.rs
+// expect-lint: accounting-fields
+//
+// Negative fixture: mutating a pool accounting counter directly from
+// outside kvcache, bypassing the incremental-counter API that
+// `verify_accounting` audits. This file is lint fodder, never compiled.
+
+pub fn leak_pages(pool: &mut PagePool, page_bytes: u64) {
+    pool.used_bytes += page_bytes;
+    pool.cold_bytes = 0;
+}

@@ -1,0 +1,368 @@
+//! The four repo-specific structural lints.
+//!
+//! Rules (see DESIGN.md §9 for the full rationale):
+//!
+//! * `accounting-fields` — outside `rust/src/kvcache/`, the pool accounting
+//!   fields `used_bytes` / `cold_bytes` / `outstanding` may only be touched
+//!   through their accessor methods; any raw field access (no call parens)
+//!   is flagged. All mutation lives behind the incremental-counter API that
+//!   `KvCacheManager::verify_accounting` audits.
+//! * `lossy-casts` — in the byte/token accounting scope (`kvcache`,
+//!   `coordinator`, `server`, `config`), narrowing or signedness-changing
+//!   integer `as` casts are flagged unless the line carries a
+//!   `// cast-ok: <reason>` annotation. Widening into the accounting-native
+//!   `u64` and float casts are free; kernel modules (`linalg`, `attn`,
+//!   `model`, …) are outside the scope entirely — that is the float-math
+//!   allowlist.
+//! * `safety-comments` — every `unsafe` block / `unsafe impl` must carry a
+//!   `// SAFETY:` comment stating the aliasing/lifetime argument, on the
+//!   same line or in the contiguous comment/attribute run directly above.
+//! * `hot-path-panics` — no `unwrap` / `expect` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in the serving hot path:
+//!   all of `coordinator/batcher.rs`, every `fn pump` in
+//!   `coordinator/mod.rs`, and every `fn step_fused`. Errors must flow to
+//!   `TokenEvent::Rejected` (or an `anyhow::Result`), never abort the
+//!   scheduler.
+//!
+//! `#[cfg(test)]`-gated items are exempt from `lossy-casts` and
+//! `hot-path-panics` (tests may assert freely); `safety-comments` and
+//! `accounting-fields` apply everywhere.
+
+use crate::scan::{is_ident, scan, Scanned};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+pub const RULES: [&str; 4] = [
+    "accounting-fields",
+    "lossy-casts",
+    "safety-comments",
+    "hot-path-panics",
+];
+
+const ACCOUNTING_FIELDS: [&str; 3] = ["used_bytes", "cold_bytes", "outstanding"];
+
+/// Integer targets that need a `cast-ok` justification in accounting scope.
+/// `u64` (the accounting-native width) and floats are always allowed.
+const FLAGGED_CASTS: [&str; 11] = [
+    "u8", "u16", "u32", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// Directories whose integer casts are accounting-relevant.
+const CAST_SCOPE: [&str; 4] = [
+    "rust/src/kvcache/",
+    "rust/src/coordinator/",
+    "rust/src/server/",
+    "rust/src/config/",
+];
+
+/// Lint one file. `rel` is the repo-relative path (it selects per-path
+/// rules); `src` is the file contents.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let s = scan(src);
+    let mut out = Vec::new();
+    lint_accounting_fields(rel, &s, &mut out);
+    lint_lossy_casts(rel, &s, &mut out);
+    lint_safety_comments(&s, &mut out);
+    lint_hot_path_panics(rel, &s, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+fn in_test(s: &Scanned, line: usize) -> bool {
+    s.test_lines.get(line - 1).copied().unwrap_or(false)
+}
+
+fn comment_on(s: &Scanned, line: usize, needle: &str) -> bool {
+    s.comments.get(&line).is_some_and(|c| c.contains(needle))
+}
+
+/// Occurrences of `word` in `line` with identifier boundaries. A boundary is
+/// only required on a side whose edge character is itself an identifier
+/// character (so `.unwrap` accepts `x.unwrap` but rejects `.unwrapx`).
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let wb = word.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(word) {
+        let p = p + from;
+        from = p + 1;
+        let pre_ok = !is_ident(wb[0]) || p == 0 || !is_ident(bytes[p - 1]);
+        let end = p + word.len();
+        let post_ok = !is_ident(wb[wb.len() - 1]) || end >= bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            out.push(p);
+        }
+    }
+    out
+}
+
+fn next_non_space(line: &str, from: usize) -> Option<char> {
+    line[from..].chars().find(|c| !c.is_whitespace())
+}
+
+// --- Rule 1: accounting-fields --------------------------------------------
+
+fn lint_accounting_fields(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
+    if rel.starts_with("rust/src/kvcache/") {
+        return;
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        for field in ACCOUNTING_FIELDS {
+            let dotted = format!(".{field}");
+            for p in word_positions(line, &dotted) {
+                // `.used_bytes()` is the accessor — allowed. `.used_bytes`
+                // bare (read, write, or arithmetic) is the violation.
+                if next_non_space(line, p + dotted.len()) == Some('(') {
+                    continue;
+                }
+                out.push(Finding {
+                    line: i + 1,
+                    rule: "accounting-fields",
+                    msg: format!(
+                        "raw access to accounting field `{field}` outside kvcache \
+                         (use the accessor / counter API audited by verify_accounting)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// --- Rule 2: lossy-casts ---------------------------------------------------
+
+fn lint_lossy_casts(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
+    if !CAST_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        let ln = i + 1;
+        if in_test(s, ln) {
+            continue;
+        }
+        for p in word_positions(line, "as") {
+            let rest = &line[p + 2..];
+            let ty: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|&c| is_ident(c as u8))
+                .collect();
+            if !FLAGGED_CASTS.contains(&ty.as_str()) {
+                continue;
+            }
+            if comment_on(s, ln, "cast-ok:") {
+                continue;
+            }
+            out.push(Finding {
+                line: ln,
+                rule: "lossy-casts",
+                msg: format!(
+                    "narrowing `as {ty}` in accounting path — use u64-native math, \
+                     `try_from`, or justify with `// cast-ok: <reason>`"
+                ),
+            });
+        }
+    }
+}
+
+// --- Rule 3: safety-comments ----------------------------------------------
+
+fn lint_safety_comments(s: &Scanned, out: &mut Vec<Finding>) {
+    for (i, line) in s.lines.iter().enumerate() {
+        let ln = i + 1;
+        for p in word_positions(line, "unsafe") {
+            let rest = line[p + "unsafe".len()..].trim_start();
+            if !(rest.starts_with('{') || rest.starts_with("impl")) {
+                // `unsafe fn` declarations are covered by
+                // `#![deny(unsafe_op_in_unsafe_fn)]` instead.
+                continue;
+            }
+            if comment_on(s, ln, "SAFETY:") {
+                continue;
+            }
+            // Walk the contiguous run of comment / attribute lines directly
+            // above; a code line or a blank line ends the association.
+            let mut found = false;
+            let mut k = ln.saturating_sub(1);
+            while k >= 1 {
+                if comment_on(s, k, "SAFETY:") {
+                    found = true;
+                    break;
+                }
+                let stripped = s.lines[k - 1].trim();
+                if !stripped.is_empty() && !stripped.starts_with("#[") {
+                    // A code line ends the walk — unless it is a wrapped
+                    // statement head (`let x =`) whose unsafe block rustfmt
+                    // pushed to the next line; continuation lines don't end
+                    // with a statement terminator.
+                    if stripped.ends_with(';')
+                        || stripped.ends_with('}')
+                        || stripped.ends_with('{')
+                        || stripped.ends_with(')')
+                    {
+                        break;
+                    }
+                } else if stripped.is_empty() && !s.comments.contains_key(&k) {
+                    break; // blank line separates any earlier comment
+                }
+                k -= 1;
+            }
+            if !found {
+                out.push(Finding {
+                    line: ln,
+                    rule: "safety-comments",
+                    msg: "unsafe block/impl without a preceding `// SAFETY:` comment".into(),
+                });
+            }
+        }
+    }
+}
+
+// --- Rule 4: hot-path-panics ----------------------------------------------
+
+const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+fn lint_hot_path_panics(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
+    let mut hot: Vec<bool> = vec![false; s.lines.len()];
+    if rel == "rust/src/coordinator/batcher.rs" {
+        for (i, h) in hot.iter_mut().enumerate() {
+            *h = !in_test(s, i + 1);
+        }
+    }
+    if rel == "rust/src/coordinator/mod.rs" {
+        for (a, b) in s.fn_spans("pump") {
+            for l in a..=b.min(s.lines.len()) {
+                hot[l - 1] = true;
+            }
+        }
+    }
+    // `step_fused` is hot wherever it is defined or overridden.
+    for (a, b) in s.fn_spans("step_fused") {
+        if in_test(s, a) {
+            continue;
+        }
+        for l in a..=b.min(s.lines.len()) {
+            hot[l - 1] = true;
+        }
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        if !hot[i] {
+            continue;
+        }
+        for meth in ["unwrap", "expect"] {
+            let dotted = format!(".{meth}");
+            for p in word_positions(line, &dotted) {
+                if next_non_space(line, p + dotted.len()) == Some('(') {
+                    out.push(Finding {
+                        line: i + 1,
+                        rule: "hot-path-panics",
+                        msg: format!(
+                            "`.{meth}(..)` in the serving hot path — route the error \
+                             to TokenEvent::Rejected / anyhow::Result instead"
+                        ),
+                    });
+                }
+            }
+        }
+        for mac in PANIC_MACROS {
+            let bare = &mac[..mac.len() - 1];
+            for p in word_positions(line, bare) {
+                if line[p + bare.len()..].starts_with('!') {
+                    out.push(Finding {
+                        line: i + 1,
+                        rule: "hot-path-panics",
+                        msg: format!("`{mac}` in the serving hot path"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn accounting_field_access_flagged_outside_kvcache() {
+        let bad = "fn f(p: &mut Pool) { p.used_bytes += 1; }\n";
+        let f = lint_source("rust/src/server/engine.rs", bad);
+        assert_eq!(rules_of(&f), vec!["accounting-fields"]);
+        // Accessor call is fine.
+        let good = "fn f(p: &Pool) -> u64 { p.used_bytes() }\n";
+        assert!(lint_source("rust/src/server/engine.rs", good).is_empty());
+        // Inside kvcache the field is the implementation — allowed.
+        assert!(lint_source("rust/src/kvcache/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn narrowing_casts_flagged_in_scope_only() {
+        let bad = "fn f(x: u64) -> usize { x as usize }\n";
+        let f = lint_source("rust/src/kvcache/mod.rs", bad);
+        assert_eq!(rules_of(&f), vec!["lossy-casts"]);
+        // u64 widening and float casts are free.
+        let good = "fn f(x: usize) -> u64 { x as u64 + (1.5 as f64) as u64 }\n";
+        assert!(lint_source("rust/src/kvcache/mod.rs", good).is_empty());
+        // cast-ok annotation silences.
+        let ok = "fn f(x: u64) -> usize { x as usize } // cast-ok: bounded by page_rows\n";
+        assert!(lint_source("rust/src/kvcache/mod.rs", ok).is_empty());
+        // Kernel modules are out of scope (float-math allowlist).
+        assert!(lint_source("rust/src/linalg/mat.rs", bad).is_empty());
+        // Tests are exempt.
+        let test = "#[cfg(test)]\nmod tests {\n fn f(x: u64) -> usize { x as usize }\n}\n";
+        assert!(lint_source("rust/src/kvcache/mod.rs", test).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let f = lint_source("rust/src/util/x.rs", bad);
+        assert_eq!(rules_of(&f), vec!["safety-comments"]);
+        let good = "// SAFETY: p is valid for reads, caller contract.\nfn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        assert!(lint_source("rust/src/util/x.rs", good).is_empty());
+        let impl_bad = "unsafe impl<T> Send for P<T> {}\n";
+        assert_eq!(rules_of(&lint_source("rust/src/util/x.rs", impl_bad)), vec!["safety-comments"]);
+        let impl_good = "// SAFETY: P is only written at disjoint offsets.\nunsafe impl<T> Send for P<T> {}\n";
+        assert!(lint_source("rust/src/util/x.rs", impl_good).is_empty());
+    }
+
+    #[test]
+    fn hot_path_panics_flagged_in_batcher_and_step_fused() {
+        let bad = "impl B { fn admit(&mut self) { self.q.pop().unwrap(); } }\n";
+        let f = lint_source("rust/src/coordinator/batcher.rs", bad);
+        assert_eq!(rules_of(&f), vec!["hot-path-panics"]);
+        // Same code outside the hot path: fine.
+        assert!(lint_source("rust/src/util/x.rs", bad).is_empty());
+        // step_fused is hot anywhere.
+        let sf = "impl E { fn step_fused(&mut self) { panic!(\"boom\"); } }\n";
+        assert_eq!(
+            rules_of(&lint_source("rust/src/server/engine.rs", sf)),
+            vec!["hot-path-panics"]
+        );
+        // pump is hot only in coordinator/mod.rs.
+        let pump = "impl R { fn pump(&mut self) { x.expect(\"y\"); } }\n";
+        assert_eq!(
+            rules_of(&lint_source("rust/src/coordinator/mod.rs", pump)),
+            vec!["hot-path-panics"]
+        );
+        assert!(lint_source("rust/src/server/engine.rs", pump).is_empty());
+        // Tests in batcher.rs may unwrap.
+        let test = "#[cfg(test)]\nmod tests {\n fn t() { q.pop().unwrap(); }\n}\n";
+        assert!(lint_source("rust/src/coordinator/batcher.rs", test).is_empty());
+    }
+
+    #[test]
+    fn panic_in_string_or_comment_not_flagged() {
+        let s = "fn step_fused() { let m = \"panic! not real\"; log(m); } // panic! here too\n";
+        assert!(lint_source("rust/src/x.rs", s).is_empty());
+    }
+}

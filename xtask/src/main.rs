@@ -1,0 +1,209 @@
+//! `cargo xtask` — repo-specific correctness tooling.
+//!
+//! Subcommands:
+//!
+//! * `cargo xtask lint` — run the four structural lints (see [`lints`])
+//!   over `rust/src`. Exits non-zero, listing `file:line: [rule] message`
+//!   findings, when the tree is not clean.
+//! * `cargo xtask fixtures` — self-test: lint every negative fixture under
+//!   `xtask/fixtures/` and verify each one trips exactly the rule named in
+//!   its `// expect-lint:` header (`none` for the clean control). Exits
+//!   non-zero if a fixture fails to trip — i.e. if the lint harness itself
+//!   has gone blind.
+//!
+//! The harness is wired as a workspace member with the conventional
+//! `.cargo/config.toml` alias, and runs as the blocking `lint-xtask` CI
+//! job. DESIGN.md §9 documents the rules and how to extend them.
+
+mod lints;
+mod scan;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint_tree(),
+        Some("fixtures") => check_fixtures(),
+        _ => {
+            eprintln!("usage: cargo xtask <lint|fixtures>");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Repo root: the parent of this crate's manifest dir.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level below the repo root")
+        .to_path_buf()
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn lint_tree() -> ExitCode {
+    let root = repo_root();
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src"), &mut files);
+    if files.is_empty() {
+        eprintln!("xtask lint: no Rust sources found under {}", root.display());
+        return ExitCode::FAILURE;
+    }
+    let mut findings = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(src) = std::fs::read_to_string(path) else {
+            eprintln!("xtask lint: unreadable file {}", path.display());
+            findings += 1;
+            continue;
+        };
+        for f in lints::lint_source(&rel, &src) {
+            println!("{rel}:{}: [{}] {}", f.line, f.rule, f.msg);
+            findings += 1;
+        }
+    }
+    if findings == 0 {
+        println!("xtask lint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {findings} finding(s)");
+        ExitCode::FAILURE
+    }
+}
+
+/// Parse a fixture's `// lint-as:` (virtual repo path) and
+/// `// expect-lint:` (rule name or `none`) headers.
+fn fixture_headers(src: &str) -> Option<(String, String)> {
+    let mut lint_as = None;
+    let mut expect = None;
+    for line in src.lines().take(10) {
+        if let Some(v) = line.strip_prefix("// lint-as:") {
+            lint_as = Some(v.trim().to_string());
+        }
+        if let Some(v) = line.strip_prefix("// expect-lint:") {
+            expect = Some(v.trim().to_string());
+        }
+    }
+    Some((lint_as?, expect?))
+}
+
+fn run_fixture(path: &Path) -> Result<(), String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("unreadable: {e}"))?;
+    let (lint_as, expect) =
+        fixture_headers(&src).ok_or("missing `// lint-as:` / `// expect-lint:` headers")?;
+    if expect != "none" && !lints::RULES.contains(&expect.as_str()) {
+        return Err(format!("unknown rule `{expect}` in expect-lint header"));
+    }
+    let findings = lints::lint_source(&lint_as, &src);
+    if expect == "none" {
+        if findings.is_empty() {
+            return Ok(());
+        }
+        return Err(format!(
+            "clean control fixture tripped {} finding(s): first = line {} [{}]",
+            findings.len(),
+            findings[0].line,
+            findings[0].rule
+        ));
+    }
+    if findings.iter().any(|f| f.rule == expect) {
+        Ok(())
+    } else {
+        Err(format!(
+            "expected a `{expect}` finding but got {:?}",
+            findings.iter().map(|f| f.rule).collect::<Vec<_>>()
+        ))
+    }
+}
+
+fn check_fixtures() -> ExitCode {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    let mut files = Vec::new();
+    rust_files(&dir, &mut files);
+    if files.is_empty() {
+        eprintln!("xtask fixtures: none found under {}", dir.display());
+        return ExitCode::FAILURE;
+    }
+    let mut failed = 0usize;
+    for f in &files {
+        let name = f.file_name().unwrap_or_default().to_string_lossy();
+        match run_fixture(f) {
+            Ok(()) => println!("fixture {name}: ok"),
+            Err(e) => {
+                eprintln!("fixture {name}: FAILED — {e}");
+                failed += 1;
+            }
+        }
+    }
+    if failed == 0 {
+        println!("xtask fixtures: {} fixture(s) verified", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask fixtures: {failed} fixture(s) failed");
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every committed fixture must behave as declared — this is the same
+    /// check as `cargo xtask fixtures`, wired into `cargo test -p xtask`.
+    #[test]
+    fn all_fixtures_trip_their_rule() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+        let mut files = Vec::new();
+        rust_files(&dir, &mut files);
+        assert!(!files.is_empty(), "fixtures directory missing or empty");
+        for f in &files {
+            if let Err(e) = run_fixture(f) {
+                panic!("fixture {}: {e}", f.display());
+            }
+        }
+    }
+
+    /// The four rule names the fixtures reference must stay in sync with
+    /// the lint registry.
+    #[test]
+    fn fixture_coverage_spans_all_rules() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+        let mut files = Vec::new();
+        rust_files(&dir, &mut files);
+        let mut covered: Vec<String> = Vec::new();
+        for f in &files {
+            let src = std::fs::read_to_string(f).unwrap();
+            let (_, expect) = fixture_headers(&src).unwrap();
+            covered.push(expect);
+        }
+        for rule in lints::RULES {
+            assert!(
+                covered.iter().any(|c| c == rule),
+                "no negative fixture covers rule `{rule}`"
+            );
+        }
+        assert!(
+            covered.iter().any(|c| c == "none"),
+            "no clean control fixture"
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! A minimal Rust source scanner for the structural lints.
+//!
+//! This is deliberately **not** a parser: the lints are token-level
+//! properties, so all we need is a masked view of the source where comment
+//! and string/char-literal bodies are blanked out (preserving line
+//! structure), plus the comment text per line (for `// SAFETY:` and
+//! `// cast-ok:` detection) and the line ranges covered by
+//! `#[cfg(test)]`-gated items (tests may panic/cast freely).
+//!
+//! The masking rules mirror `rustc`'s lexer closely enough for this
+//! codebase: line comments, nested block comments, string literals with
+//! escapes, raw strings `r#".."#`, byte strings, char literals, and
+//! lifetimes (`'a` is not a char literal). Anything the scanner cannot
+//! classify is left in place, which can only produce *extra* findings —
+//! the lint fails safe.
+
+use std::collections::HashMap;
+
+/// Masked view of one source file.
+pub struct Scanned {
+    /// Source with comment/string/char bodies replaced by spaces.
+    /// Newlines are preserved, so line numbers match the original.
+    pub masked: String,
+    /// Comment text (line + block) keyed by the 1-based line it starts on.
+    pub comments: HashMap<usize, String>,
+    /// `masked`, split into lines (index 0 = line 1).
+    pub lines: Vec<String>,
+    /// `test_lines[i]` is true when 1-based line `i + 1` is inside a
+    /// `#[cfg(test)]`-gated item.
+    pub test_lines: Vec<bool>,
+}
+
+pub fn scan(src: &str) -> Scanned {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut comments: HashMap<usize, String> = HashMap::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push a masked byte: newlines survive, everything else becomes space.
+    fn mask_into(out: &mut Vec<u8>, line: &mut usize, bytes: &[u8]) {
+        for &b in bytes {
+            if b == b'\n' {
+                out.push(b'\n');
+                *line += 1;
+            } else {
+                out.push(b' ');
+            }
+        }
+    }
+
+    while i < n {
+        let c = bytes[i];
+        let nx = if i + 1 < n { bytes[i + 1] } else { 0 };
+        match c {
+            b'\n' => {
+                out.push(b'\n');
+                line += 1;
+                i += 1;
+            }
+            b'/' if nx == b'/' => {
+                let mut j = i;
+                while j < n && bytes[j] != b'\n' {
+                    j += 1;
+                }
+                let text = String::from_utf8_lossy(&bytes[i..j]).into_owned();
+                comments.entry(line).or_default().push_str(&text);
+                mask_into(&mut out, &mut line, &bytes[i..j]);
+                i = j;
+            }
+            b'/' if nx == b'*' => {
+                let start_line = line;
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if bytes[j] == b'/' && j + 1 < n && bytes[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if bytes[j] == b'*' && j + 1 < n && bytes[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let text = String::from_utf8_lossy(&bytes[i..j]).into_owned();
+                comments.entry(start_line).or_default().push_str(&text);
+                mask_into(&mut out, &mut line, &bytes[i..j]);
+                i = j;
+            }
+            b'r' | b'b' if is_raw_string_start(bytes, i) => {
+                let j = skip_raw_string(bytes, i);
+                mask_into(&mut out, &mut line, &bytes[i..j]);
+                i = j;
+            }
+            b'"' => {
+                let j = skip_string(bytes, i);
+                mask_into(&mut out, &mut line, &bytes[i..j]);
+                i = j;
+            }
+            b'b' if nx == b'"' => {
+                let j = skip_string(bytes, i + 1);
+                mask_into(&mut out, &mut line, &bytes[i..j]);
+                i = j;
+            }
+            b'\'' => {
+                if nx == b'\\' {
+                    // Escaped char literal: '\n', '\x7f', '\u{...}'.
+                    let mut j = i + 2;
+                    while j < n && bytes[j] != b'\'' && bytes[j] != b'\n' {
+                        j += 1;
+                    }
+                    if j < n && bytes[j] == b'\'' {
+                        j += 1;
+                    }
+                    mask_into(&mut out, &mut line, &bytes[i..j]);
+                    i = j;
+                } else if i + 2 < n && bytes[i + 2] == b'\'' {
+                    // Plain char literal 'x'.
+                    out.extend_from_slice(b"   ");
+                    i += 3;
+                } else {
+                    // Lifetime: mask just the quote.
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            _ => {
+                // Keep ASCII code bytes; blank multi-byte UTF-8 (it only
+                // appears in identifiers-adjacent prose in this repo, never
+                // in tokens the lints inspect).
+                out.push(if c < 0x80 { c } else { b' ' });
+                i += 1;
+            }
+        }
+    }
+
+    let masked = String::from_utf8(out).expect("masked output is ASCII + newlines");
+    let lines: Vec<String> = masked.split('\n').map(|s| s.to_string()).collect();
+    let test_lines = mark_test_lines(&masked, lines.len());
+    Scanned {
+        masked,
+        comments,
+        lines,
+        test_lines,
+    }
+}
+
+fn is_raw_string_start(bytes: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if bytes[j] == b'b' {
+        j += 1;
+    }
+    if j >= bytes.len() || bytes[j] != b'r' {
+        return false;
+    }
+    j += 1;
+    while j < bytes.len() && bytes[j] == b'#' {
+        j += 1;
+    }
+    j < bytes.len() && bytes[j] == b'"'
+}
+
+fn skip_raw_string(bytes: &[u8], i: usize) -> usize {
+    let mut j = i;
+    if bytes[j] == b'b' {
+        j += 1;
+    }
+    j += 1; // 'r'
+    let mut hashes = 0usize;
+    while j < bytes.len() && bytes[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // opening quote
+    loop {
+        if j >= bytes.len() {
+            return bytes.len();
+        }
+        if bytes[j] == b'"' {
+            let mut h = 0usize;
+            while j + 1 + h < bytes.len() && bytes[j + 1 + h] == b'#' && h < hashes {
+                h += 1;
+            }
+            if h == hashes {
+                return j + 1 + hashes;
+            }
+        }
+        j += 1;
+    }
+}
+
+fn skip_string(bytes: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    bytes.len()
+}
+
+fn line_of(masked: &str, byte_off: usize) -> usize {
+    masked.as_bytes()[..byte_off].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item (attribute through the
+/// matching close brace of the item body).
+fn mark_test_lines(masked: &str, n_lines: usize) -> Vec<bool> {
+    let mut marks = vec![false; n_lines + 2];
+    let bytes = masked.as_bytes();
+    let needle = b"#[cfg(test)]";
+    let mut from = 0usize;
+    while let Some(pos) = find_from(bytes, needle, from) {
+        from = pos + needle.len();
+        // Scan forward to the item's opening brace; a `;` first means a
+        // body-less item (e.g. `mod tests;`) — nothing to mark.
+        let mut j = from;
+        let mut open = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        let close = match_brace(bytes, open);
+        let l0 = line_of(masked, pos);
+        let l1 = line_of(masked, close.min(bytes.len().saturating_sub(1)));
+        for l in l0..=l1.min(n_lines) {
+            marks[l] = true;
+        }
+    }
+    // Convert from 1-based line numbers to a 0-based vec.
+    (1..=n_lines)
+        .map(|l| marks.get(l).copied().unwrap_or(false))
+        .collect()
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Byte offset of the brace matching the one at `open` (best effort: end of
+/// file when unbalanced — fails safe by over-marking).
+fn match_brace(bytes: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    bytes.len().saturating_sub(1)
+}
+
+impl Scanned {
+    /// 1-based inclusive line spans of every `fn <name>` body in the file.
+    pub fn fn_spans(&self, name: &str) -> Vec<(usize, usize)> {
+        let bytes = self.masked.as_bytes();
+        let mut spans = Vec::new();
+        let mut from = 0usize;
+        while let Some(pos) = find_from(bytes, b"fn ", from) {
+            from = pos + 3;
+            // Word boundary before `fn`.
+            if pos > 0 && is_ident(bytes[pos - 1]) {
+                continue;
+            }
+            let mut j = pos + 3;
+            while j < bytes.len() && bytes[j] == b' ' {
+                j += 1;
+            }
+            let id_start = j;
+            while j < bytes.len() && is_ident(bytes[j]) {
+                j += 1;
+            }
+            if &bytes[id_start..j] != name.as_bytes() {
+                continue;
+            }
+            // Forward to the body's opening brace; `;` first = trait decl.
+            let mut k = j;
+            let mut open = None;
+            while k < bytes.len() {
+                match bytes[k] {
+                    b'{' => {
+                        open = Some(k);
+                        break;
+                    }
+                    b';' => break,
+                    _ => k += 1,
+                }
+            }
+            let Some(open) = open else { continue };
+            let close = match_brace(bytes, open);
+            spans.push((line_of(&self.masked, pos), line_of(&self.masked, close)));
+        }
+        spans
+    }
+}
+
+pub fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments() {
+        let s = scan("let x = \"as usize\"; // as usize\nlet y = 1;\n");
+        assert!(!s.lines[0].contains("as usize"));
+        assert!(s.comments[&1].contains("as usize"));
+        assert_eq!(s.lines[1], "let y = 1;");
+    }
+
+    #[test]
+    fn masks_raw_strings_and_chars() {
+        let s = scan("let p = r#\"unsafe { }\"#; let c = 'u'; let lt: &'a u8 = &0;\n");
+        assert!(!s.masked.contains("unsafe"));
+        assert!(s.masked.contains("& a u8")); // lifetime quote masked, ident kept
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("/* outer /* inner */ still */ let z = 2;\n");
+        assert!(s.masked.contains("let z = 2;"));
+        assert!(!s.masked.contains("inner"));
+    }
+
+    #[test]
+    fn cfg_test_items_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}\nfn live2() {}\n";
+        let s = scan(src);
+        assert!(!s.test_lines[0]);
+        assert!(s.test_lines[1] && s.test_lines[2] && s.test_lines[3] && s.test_lines[4]);
+        assert!(!s.test_lines[5]);
+    }
+
+    #[test]
+    fn fn_spans_found() {
+        let src = "impl A {\n    fn pump(&self) {\n        body();\n    }\n}\nfn other() {}\n";
+        let s = scan(src);
+        assert_eq!(s.fn_spans("pump"), vec![(2, 4)]);
+        assert_eq!(s.fn_spans("other"), vec![(6, 6)]);
+        assert!(s.fn_spans("missing").is_empty());
+    }
+}
