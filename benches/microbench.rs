@@ -1,24 +1,154 @@
 //! MICRO — §Perf microbenchmarks for the hot paths of every layer:
 //! matmul GFLOP/s, SVD latency, paged online-softmax attention throughput,
-//! engine decode-step latency, and scheduler overhead.
+//! engine decode-step latency, scheduler overhead, and a **per-kernel
+//! scalar-vs-SIMD A/B harness** over the dispatched primitives (dot,
+//! dequant-dot, axpy, online-attn step, paged GEMM tile) at rank widths
+//! 16/24/64/100 — covering both lane-multiple and remainder-lane shapes.
+//! The kernel section writes `BENCH_kernels.json` at the repository root
+//! (ns/elem per tier + speedup ratios) so the SIMD win is machine-readable
+//! across PRs, next to `BENCH_serving.json`.
 //!
 //! Run: `cargo bench --bench microbench`
+//! CI smoke mode: `KQSVD_BENCH_SMOKE=1 cargo bench --bench microbench`
+//! shrinks the slow sections (SVD, decode) so the job finishes quickly; the
+//! kernel A/B still runs (fewer iters) so `BENCH_kernels.json` is always
+//! produced. Outside smoke mode, the harness asserts the acceptance floor:
+//! ≥2× SIMD-over-scalar on the fused dequant-dot when a SIMD tier is active.
 
-use kqsvd::attn::online_attn;
+use kqsvd::attn::{matmul_nt_paged_with, online_attn, online_attn_into_with};
 use kqsvd::bench_support::{bench, f as fnum, Table};
 use kqsvd::config::{Config, Method};
 use kqsvd::coordinator::Engine;
-use kqsvd::kvcache::{BlockTable, PagePool};
+use kqsvd::jsonutil::Json;
+use kqsvd::kvcache::{BlockTable, KvDtype, PagePool};
+use kqsvd::linalg::simd::{simd_table, KernelDispatch, SCALAR};
 use kqsvd::linalg::{Mat, Svd};
 use kqsvd::server::build_engine;
 use kqsvd::util::rng::Pcg64;
 
+/// One A/B cell: ns/elem for a kernel closure at one width under one tier.
+/// `work(..)` must consume `elems` elements per call; repeats keep the
+/// timed region well above timer resolution even for tiny widths.
+fn ns_per_elem(name: &str, smoke: bool, elems: usize, mut work: impl FnMut()) -> f64 {
+    let (warmup, iters) = if smoke { (2, 5) } else { (10, 40) };
+    let m = bench(name, warmup, iters, &mut work);
+    m.min_s * 1e9 / elems as f64
+}
+
+/// Scalar-vs-SIMD harness over every dispatched kernel shape. Returns the
+/// JSON summary plus the best dequant-dot speedup (acceptance gate).
+fn kernel_ab_section(report: &mut Table, smoke: bool) -> (Json, f64) {
+    let tiers: Vec<&'static KernelDispatch> = match simd_table() {
+        Some(t) => vec![&SCALAR, t],
+        None => vec![&SCALAR],
+    };
+    let isa = simd_table().map(|t| t.isa).unwrap_or("none");
+    println!("\nper-kernel scalar-vs-SIMD A/B (active SIMD tier: {isa}):");
+
+    // Streaming geometry: T rows of width r, like one head's cache pass.
+    let t_rows = if smoke { 256 } else { 2048 };
+    let mut results = Json::obj().set("simd_isa", isa).set("smoke", smoke);
+    let mut best_dequant_speedup = 0.0f64;
+
+    for r in [16usize, 24, 64, 100] {
+        let mut rng = Pcg64::new(r as u64, 7);
+        let rows = Mat::randn(t_rows, r, 1.0, &mut rng);
+        let x: Vec<f32> = (0..r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let q_rows: Vec<Vec<i8>> = (0..t_rows)
+            .map(|i| rows.row(i).iter().map(|&v| (v * 32.0) as i8).collect())
+            .collect();
+        let mut acc = vec![0.0f32; r];
+        let elems = t_rows * r;
+
+        // Paged caches for the composite kernels (f32 + int8 pools).
+        let mut fpool = PagePool::new(16);
+        let mut ipool = PagePool::with_dtype(16, KvDtype::Int8);
+        let mut fk = BlockTable::new(r);
+        let mut fv = BlockTable::new(r);
+        let mut ik = BlockTable::new(r);
+        for i in 0..t_rows {
+            fpool.push_row(&mut fk, rows.row(i));
+            fpool.push_row(&mut fv, rows.row(i));
+            ipool.push_row(&mut ik, rows.row(i));
+        }
+        let qtile = Mat::randn(8, r, 1.0, &mut rng);
+        let mut tile_out = Mat::zeros(0, 0);
+
+        let mut width_json = Json::obj();
+        for kernel in ["dot_f32", "dequant_dot_i8", "axpy_f32", "online_attn", "paged_gemm_tile"] {
+            let mut per_tier: Vec<(String, f64)> = Vec::new();
+            for ks in &tiers {
+                let label = format!("{kernel} r={r} [{}]", ks.isa);
+                let ns = match kernel {
+                    "dot_f32" => ns_per_elem(&label, smoke, elems, || {
+                        let mut s = 0.0f32;
+                        for i in 0..t_rows {
+                            s += (ks.dot_f32)(rows.row(i), &x);
+                        }
+                        std::hint::black_box(s);
+                    }),
+                    "dequant_dot_i8" => ns_per_elem(&label, smoke, elems, || {
+                        let mut s = 0.0f32;
+                        for q in &q_rows {
+                            s += (ks.dot_i8)(q, 0.03125, &x);
+                        }
+                        std::hint::black_box(s);
+                    }),
+                    "axpy_f32" => ns_per_elem(&label, smoke, elems, || {
+                        for i in 0..t_rows {
+                            (ks.axpy_f32)(0.5, rows.row(i), &mut acc);
+                        }
+                        std::hint::black_box(&mut acc);
+                    }),
+                    "online_attn" => ns_per_elem(&label, smoke, 2 * elems, || {
+                        online_attn_into_with(ks, &x, &fpool, &fk, &fv, 0.125, &mut acc);
+                        std::hint::black_box(&mut acc);
+                    }),
+                    "paged_gemm_tile" => ns_per_elem(&label, smoke, 8 * elems, || {
+                        matmul_nt_paged_with(ks, &qtile, &ipool, &ik, &mut tile_out);
+                        std::hint::black_box(&mut tile_out);
+                    }),
+                    _ => unreachable!(),
+                };
+                per_tier.push((ks.isa.to_string(), ns));
+            }
+            let scalar_ns = per_tier[0].1;
+            let simd_ns = per_tier.get(1).map(|p| p.1);
+            let speedup = simd_ns.map(|s| scalar_ns / s);
+            if kernel == "dequant_dot_i8" {
+                if let Some(sp) = speedup {
+                    best_dequant_speedup = best_dequant_speedup.max(sp);
+                }
+            }
+            report.row(&[
+                format!("kernel_{kernel}_r{r}"),
+                "speedup (scalar/simd)".into(),
+                speedup.map(|s| fnum(s, 2)).unwrap_or_else(|| "n/a".into()),
+            ]);
+            let mut cell = Json::obj().set("scalar_ns_per_elem", scalar_ns);
+            if let Some(s) = simd_ns {
+                cell = cell.set("simd_ns_per_elem", s);
+            }
+            if let Some(s) = speedup {
+                cell = cell.set("speedup", s);
+            }
+            width_json = width_json.set(kernel, cell);
+        }
+        results = results.set(&format!("r{r}"), width_json);
+    }
+    (results, best_dequant_speedup)
+}
+
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("KQSVD_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
     let mut report = Table::new(&["benchmark", "metric", "value"]);
 
     // --- L3 substrate: matmul --------------------------------------------
     println!("matmul:");
-    for n in [128usize, 256, 512] {
+    let matmul_sizes: &[usize] = if smoke { &[128] } else { &[128, 256, 512] };
+    for &n in matmul_sizes {
         let mut rng = Pcg64::new(n as u64, 1);
         let a = Mat::randn(n, n, 1.0, &mut rng);
         let b = Mat::randn(n, n, 1.0, &mut rng);
@@ -31,7 +161,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- SVD (calibration kernel) ----------------------------------------
     println!("\nSVD (QR + one-sided Jacobi, f64):");
-    for (t, d) in [(4096usize, 32usize), (4096, 64), (16384, 64)] {
+    let svd_shapes: &[(usize, usize)] =
+        if smoke { &[(1024, 32)] } else { &[(4096, 32), (4096, 64), (16384, 64)] };
+    for &(t, d) in svd_shapes {
         let mut rng = Pcg64::new((t + d) as u64, 2);
         let a = Mat::randn(t, d, 1.0, &mut rng);
         let m = bench(&format!("svd {t}x{d}"), 1, 3, || {
@@ -42,7 +174,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- compressed attention kernel (Rust twin of the Pallas L1) ---------
     println!("\nonline-softmax compressed attention (per query):");
-    for (t, r) in [(512usize, 16usize), (2048, 16), (2048, 32)] {
+    let attn_shapes: &[(usize, usize)] =
+        if smoke { &[(512, 16)] } else { &[(512, 16), (2048, 16), (2048, 32)] };
+    for &(t, r) in attn_shapes {
         let mut rng = Pcg64::new((t * r) as u64, 3);
         let ck_m = Mat::randn(t, r, 1.0, &mut rng);
         let cv_m = Mat::randn(t, r, 1.0, &mut rng);
@@ -66,12 +200,17 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
+    // --- per-kernel scalar-vs-SIMD A/B -------------------------------------
+    let (kernel_json, dequant_speedup) = kernel_ab_section(&mut report, smoke);
+    std::fs::write("BENCH_kernels.json", kernel_json.to_string_pretty())?;
+    println!("kernel A/B JSON → BENCH_kernels.json");
+
     // --- engine decode step ------------------------------------------------
     println!("\nengine decode step (mha-small, rust backend):");
     let mut cfg = Config::from_preset("mha-small").map_err(anyhow::Error::msg)?;
     cfg.method = Method::KqSvd;
-    cfg.calib.n_calib_seqs = 8;
-    cfg.calib.calib_seq_len = 256;
+    cfg.calib.n_calib_seqs = if smoke { 2 } else { 8 };
+    cfg.calib.calib_seq_len = if smoke { 64 } else { 256 };
     cfg.run_dir = "runs/bench_micro".into();
     let mut engine = build_engine(&cfg)?;
     engine.alloc(1, 640).unwrap();
@@ -79,7 +218,7 @@ fn main() -> anyhow::Result<()> {
     let prompt: Vec<u32> = (0..128).map(|i| (i % 60 + 1) as u32).collect();
     engine.prefill(1, &prompt, 0, true)?;
     let mut step = 0u32;
-    let m = bench("decode_step ctx≈128", 3, 30, || {
+    let m = bench("decode_step ctx≈128", 3, if smoke { 5 } else { 30 }, || {
         step = (step + 1) % 60;
         std::hint::black_box(engine.decode(&[(1, step + 1)]).unwrap());
     });
@@ -121,5 +260,17 @@ fn main() -> anyhow::Result<()> {
     report.print();
     report.write_csv("microbench.csv")?;
     println!("CSV → bench_out/microbench.csv");
+
+    // Acceptance gate (ISSUE 7): with a SIMD tier active and a full (non-
+    // smoke) run, the fused dequant-dot must beat scalar by ≥2× at some
+    // width. Smoke runs skip the assert (iters too few to be stable).
+    if !smoke && simd_table().is_some() {
+        anyhow::ensure!(
+            dequant_speedup >= 2.0,
+            "dequant-dot SIMD speedup {dequant_speedup:.2}× below the 2× acceptance floor \
+             (see BENCH_kernels.json)"
+        );
+        println!("dequant-dot acceptance: {dequant_speedup:.2}× ≥ 2× ✓");
+    }
     Ok(())
 }

@@ -23,8 +23,21 @@
 //! dense kernels applied to the dequantized matrix (property-tested below),
 //! and the only approximation is the write-side quantization, whose bound
 //! is documented in [`crate::kvcache::KvDtype`].
+//!
+//! All inner loops route through the runtime-dispatched kernel tier
+//! ([`crate::linalg::simd`]): the scalar table reproduces the historical
+//! loops bit-for-bit, the SIMD tables re-associate only the dot reductions
+//! (epsilon-gated) while every bitwise pairing in this module's tests —
+//! paged vs dense, fused-int8 vs dense-on-dequantized, batch vs serial —
+//! holds under either tier because both sides share the same primitives
+//! (DESIGN.md §5e). Each public kernel has a `*_with` form taking the
+//! table explicitly (resolved once per call tree, on the calling thread)
+//! plus a convenience form using the process-wide selection.
 
-use crate::kvcache::{dequant_i8, exp_scale, BlockTable, PagePool, PageRows};
+pub mod simd;
+
+use crate::kvcache::{BlockTable, PagePool};
+use crate::linalg::simd::{kernels, KernelDispatch};
 use crate::linalg::Mat;
 use crate::util::threadpool::SendPtr;
 
@@ -48,8 +61,23 @@ pub fn online_attn(
 
 /// Allocation-free [`online_attn`]: writes the compressed context into a
 /// caller-owned `acc` slice (length `cv.width()`), so the steady-state decode
-/// path never allocates per token.
+/// path never allocates per token. Uses the process-selected kernel tier.
 pub fn online_attn_into(
+    q_proj: &[f32],
+    pool: &PagePool,
+    ck: &BlockTable,
+    cv: &BlockTable,
+    scale: f32,
+    acc: &mut [f32],
+) {
+    online_attn_into_with(kernels(), q_proj, pool, ck, cv, scale, acc)
+}
+
+/// [`online_attn_into`] with an explicit kernel table — the form the batch
+/// path threads through `parallel_for` workers (table resolved once on the
+/// submitting thread) and the microbench A/Bs.
+pub fn online_attn_into_with(
+    ks: &KernelDispatch,
     q_proj: &[f32],
     pool: &PagePool,
     ck: &BlockTable,
@@ -72,61 +100,27 @@ pub fn online_attn_into(
         let (v_chunk, v_rows) = kv_chunks.next().expect("chunk parity");
         debug_assert_eq!(rows, v_rows);
         for i in 0..rows {
-            // Score: fused dequant dot product. The int8 arm dequantizes per
-            // element (`q·2^e` is exact), so its f32 op order matches the
-            // f32 arm run on the dequantized row — bitwise.
-            let mut s = 0.0f32;
-            match &k_chunk {
-                PageRows::F32(d) => {
-                    let krow = &d[i * r..(i + 1) * r];
-                    for p in 0..r {
-                        s += krow[p] * q_proj[p];
-                    }
-                }
-                PageRows::I8 { q, exps } => {
-                    let sc = exp_scale(exps[i]);
-                    let krow = &q[i * r..(i + 1) * r];
-                    for p in 0..r {
-                        s += dequant_i8(krow[p], sc) * q_proj[p];
-                    }
-                }
-            }
-            s *= scale;
+            // Score: fused dequant dot product. The int8 kernel arm
+            // dequantizes per lane (`q·2^e` is exact) with the f32 arm's
+            // op structure, so it matches the f32 arm run on the
+            // dequantized row — bitwise, under either tier.
+            let s = simd::page_row_dot(ks, &k_chunk, i, r, q_proj) * scale;
             // Online softmax update.
             if s > m_run {
                 let corr = (m_run - s).exp();
                 l_run *= corr;
-                for a in acc.iter_mut() {
-                    *a *= corr;
-                }
+                (ks.scale_f32)(acc, corr);
                 m_run = s;
             }
             let p_i = (s - m_run).exp();
             l_run += p_i;
-            match &v_chunk {
-                PageRows::F32(d) => {
-                    let vrow = &d[i * rv..(i + 1) * rv];
-                    for (a, &vv) in acc.iter_mut().zip(vrow) {
-                        *a += p_i * vv;
-                    }
-                }
-                PageRows::I8 { q, exps } => {
-                    let sc = exp_scale(exps[i]);
-                    let vrow = &q[i * rv..(i + 1) * rv];
-                    for (a, &vq) in acc.iter_mut().zip(vrow) {
-                        *a += p_i * dequant_i8(vq, sc);
-                    }
-                }
-            }
+            simd::page_row_axpy(ks, p_i, &v_chunk, i, rv, acc);
         }
         row += rows;
     }
     assert_eq!(row, ck.len());
     if l_run > 0.0 {
-        let inv = 1.0 / l_run;
-        for a in acc.iter_mut() {
-            *a *= inv;
-        }
+        (ks.scale_f32)(acc, 1.0 / l_run);
     }
 }
 
@@ -151,12 +145,14 @@ pub fn decode_attn_layer(
     assert_eq!(folds.len(), h);
     assert_eq!(bproj.len(), k_tables.len());
     assert_eq!(h, k_tables.len() * group);
+    let ks = kernels();
     let mut out = vec![0.0f32; d_model];
     for (hi, q) in q_heads.iter().enumerate() {
         let kv = hi / group;
         let q_proj = bproj[kv].vecmat(q); // (R)
-        let ctx = online_attn(&q_proj, pool, &k_tables[kv], &v_tables[kv], scale); // (Rv)
-        fold_ctx_head(&mut out, &ctx, folds[hi]); // out += ctx · F_hi
+        let mut ctx = vec![0.0f32; v_tables[kv].width()];
+        online_attn_into_with(ks, &q_proj, pool, &k_tables[kv], &v_tables[kv], scale, &mut ctx); // (Rv)
+        fold_ctx_head(ks, &mut out, &ctx, folds[hi]); // out += ctx · F_hi
     }
     out
 }
@@ -164,20 +160,18 @@ pub fn decode_attn_layer(
 /// Accumulate one head's compressed context into model space:
 /// `out += ctx · fold`. This single kernel is shared by the serial oracle
 /// ([`decode_attn_layer`]) and the batch path ([`decode_attn_batch`]), so
-/// their f32 accumulation order (ascending rank index, zero-skip) is
-/// identical *by construction* — the bit-parity guarantee depends on it.
+/// their f32 accumulation order (ascending rank index, zero-skip, same
+/// dispatched axpy) is identical *by construction* — the bit-parity
+/// guarantee depends on it.
 #[inline]
-fn fold_ctx_head(out: &mut [f32], ctx: &[f32], fold: &Mat) {
+fn fold_ctx_head(ks: &KernelDispatch, out: &mut [f32], ctx: &[f32], fold: &Mat) {
     debug_assert_eq!(fold.rows(), ctx.len());
     debug_assert_eq!(fold.cols(), out.len());
     for (i, &c) in ctx.iter().enumerate() {
         if c == 0.0 {
             continue;
         }
-        let frow = fold.row(i);
-        for (o, &f) in out.iter_mut().zip(frow) {
-            *o += c * f;
-        }
+        (ks.axpy_f32)(c, fold.row(i), out);
     }
 }
 
@@ -219,6 +213,10 @@ pub fn decode_attn_batch(
     ctx.resize(b, h * rv);
     out.resize(b, d_model);
 
+    // Resolve the kernel tier once on the submitting thread (so per-thread
+    // overrides apply) and move the `&'static` into the worker closures.
+    let ks = kernels();
+
     // Pass 1: online-softmax contexts, parallel over (sequence × kv-head).
     // Disjoint writes: item (bi, kv) owns ctx rows `bi`, columns
     // `[kv·group·rv, (kv+1)·group·rv)`.
@@ -242,7 +240,7 @@ pub fn decode_attn_batch(
                 let acc = unsafe {
                     std::slice::from_raw_parts_mut(ctx_ptr.0.add(bi * h * rv + hq * rv), rv)
                 };
-                online_attn_into(q_proj, pool, &k_tables[kv], &v_tables[kv], scale, acc);
+                online_attn_into_with(ks, q_proj, pool, &k_tables[kv], &v_tables[kv], scale, acc);
             }
         }
     });
@@ -265,7 +263,7 @@ pub fn decode_attn_batch(
             orow.fill(0.0);
             let crow = ctx_ref.row(bi);
             for (hq, &fold) in folds.iter().enumerate() {
-                fold_ctx_head(orow, &crow[hq * rv..(hq + 1) * rv], fold);
+                fold_ctx_head(ks, orow, &crow[hq * rv..(hq + 1) * rv], fold);
             }
         }
     });
@@ -277,6 +275,17 @@ pub fn decode_attn_batch(
 /// values are identical to the dense `Mat::matmul_nt_to` regardless of the
 /// page partition.
 pub fn matmul_nt_paged(a: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat) {
+    matmul_nt_paged_with(kernels(), a, pool, table, out)
+}
+
+/// [`matmul_nt_paged`] with an explicit kernel table.
+pub fn matmul_nt_paged_with(
+    ks: &KernelDispatch,
+    a: &Mat,
+    pool: &PagePool,
+    table: &BlockTable,
+    out: &mut Mat,
+) {
     assert_eq!(a.cols(), table.width(), "paged matmul_nt width mismatch");
     let (m, k) = (a.rows(), a.cols());
     let n = table.len();
@@ -286,24 +295,9 @@ pub fn matmul_nt_paged(a: &Mat, pool: &PagePool, table: &BlockTable, out: &mut M
         for i in 0..m {
             let arow = a.row(i);
             for j in 0..rows {
-                let mut acc = 0.0f32;
-                match &chunk {
-                    PageRows::F32(d) => {
-                        let brow = &d[j * k..(j + 1) * k];
-                        for p in 0..k {
-                            acc += arow[p] * brow[p];
-                        }
-                    }
-                    PageRows::I8 { q, exps } => {
-                        // Fused dequant: same per-element op order as the
-                        // f32 arm on the (exactly) dequantized row.
-                        let sc = exp_scale(exps[j]);
-                        let brow = &q[j * k..(j + 1) * k];
-                        for p in 0..k {
-                            acc += arow[p] * dequant_i8(brow[p], sc);
-                        }
-                    }
-                }
+                // Fused dequant dot: the int8 arm keeps the f32 arm's op
+                // order on the (exactly) dequantized row.
+                let acc = simd::page_row_dot(ks, &chunk, j, k, arow);
                 out.data_mut()[i * n + col0 + j] = acc;
             }
         }
@@ -318,6 +312,17 @@ pub fn matmul_nt_paged(a: &Mat, pool: &PagePool, table: &BlockTable, out: &mut M
 /// as `Mat::matmul_to`, so the results match the dense product bitwise (the
 /// zero-skip matters: causal masking makes exact 0.0 probabilities common).
 pub fn matmul_paged(p: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat) {
+    matmul_paged_with(kernels(), p, pool, table, out)
+}
+
+/// [`matmul_paged`] with an explicit kernel table.
+pub fn matmul_paged_with(
+    ks: &KernelDispatch,
+    p: &Mat,
+    pool: &PagePool,
+    table: &BlockTable,
+    out: &mut Mat,
+) {
     assert_eq!(p.cols(), table.len(), "paged matmul length mismatch");
     let (m, w) = (p.rows(), table.width());
     out.resize(m, w);
@@ -326,6 +331,7 @@ pub fn matmul_paged(p: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat)
         orow.fill(0.0);
     }
     for i in 0..m {
+        let orow = &mut out.data_mut()[i * w..(i + 1) * w];
         let mut t0 = 0usize;
         for (chunk, rows) in table.chunks(pool) {
             for j in 0..rows {
@@ -333,23 +339,7 @@ pub fn matmul_paged(p: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat)
                 if coef == 0.0 {
                     continue;
                 }
-                match &chunk {
-                    PageRows::F32(d) => {
-                        let vrow = &d[j * w..(j + 1) * w];
-                        let orow = &mut out.data_mut()[i * w..(i + 1) * w];
-                        for (o, &vv) in orow.iter_mut().zip(vrow) {
-                            *o += coef * vv;
-                        }
-                    }
-                    PageRows::I8 { q, exps } => {
-                        let sc = exp_scale(exps[j]);
-                        let vrow = &q[j * w..(j + 1) * w];
-                        let orow = &mut out.data_mut()[i * w..(i + 1) * w];
-                        for (o, &vq) in orow.iter_mut().zip(vrow) {
-                            *o += coef * dequant_i8(vq, sc);
-                        }
-                    }
-                }
+                simd::page_row_axpy(ks, coef, &chunk, j, w, orow);
             }
             t0 += rows;
         }
@@ -360,6 +350,7 @@ pub fn matmul_paged(p: &Mat, pool: &PagePool, table: &BlockTable, out: &mut Mat)
 /// `chunk×T` score matrix (absolute position `pos0 + i`) may attend to cache
 /// rows `0..=pos0+i`; later columns are masked to −∞ before the softmax.
 pub fn causal_softmax_rows(scores: &mut Mat, pos0: usize) {
+    let ks = kernels();
     let t = scores.cols();
     for i in 0..scores.rows() {
         let row = scores.row_mut(i);
@@ -367,7 +358,7 @@ pub fn causal_softmax_rows(scores: &mut Mat, pos0: usize) {
         for s in row[valid..].iter_mut() {
             *s = f32::NEG_INFINITY;
         }
-        crate::model::softmax_inplace(row);
+        simd::softmax_row(ks, row);
     }
 }
 
@@ -745,6 +736,93 @@ mod tests {
                     "attention error {err} exceeds analytic bound {bound} \
                      (t={t} r={r} rv={rv} scale={scale})"
                 );
+            }
+        });
+    }
+
+    /// Tentpole: the SIMD tier agrees with the scalar oracle on every paged
+    /// attention kernel within the documented summation-order epsilon
+    /// (DESIGN.md §5e), for both cache dtypes and widths sweeping
+    /// non-lane-multiple remainders. The paged-GEMM gates use the analytic
+    /// per-element dot/axpy bounds (`4·n·ε·Σ|termᵢ|`, l1 in f64); the
+    /// online-softmax gate is the same absolute tolerance the online-vs-
+    /// dense properties use, since its inputs pass through `exp`.
+    #[test]
+    fn prop_simd_attn_kernels_match_scalar_within_tolerance() {
+        use crate::kvcache::KvDtype;
+        use crate::linalg::simd::{simd_table, with_kernels, SCALAR};
+        let Some(simd_ks) = simd_table() else {
+            return; // scalar-only host/build: nothing to A/B
+        };
+        let eps = f64::from(f32::EPSILON);
+        forall("simd attn kernels ≈ scalar oracle", 20, |g| {
+            let t = g.usize_in(1, 48);
+            let r = g.usize_in(1, 33); // sweeps every LANES-remainder class
+            let rv = g.usize_in(1, 33);
+            let page = g.usize_in(1, 16);
+            let dtype = if g.usize_in(0, 1) == 0 { KvDtype::F32 } else { KvDtype::Int8 };
+            let mut pool = PagePool::with_dtype(page, dtype);
+            let ck = Mat::from_vec(t, r, g.normal_vec(t * r, 1.0));
+            let cv = Mat::from_vec(t, rv, g.normal_vec(t * rv, 1.0));
+            let kb = fill_buf(&mut pool, &ck);
+            let vb = fill_buf(&mut pool, &cv);
+            let q = g.normal_vec(r, 1.0);
+
+            let scalar_attn = with_kernels(&SCALAR, || online_attn(&q, &pool, &kb, &vb, 0.3));
+            let simd_attn = with_kernels(simd_ks, || online_attn(&q, &pool, &kb, &vb, 0.3));
+            for (a, b) in simd_attn.iter().zip(&scalar_attn) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "online_attn tier divergence: {a} vs {b} (t={t} r={r} rv={rv})"
+                );
+            }
+
+            // Score GEMM: each element is one dot over width r.
+            let m = g.usize_in(1, 6);
+            let a = Mat::from_vec(m, r, g.normal_vec(m * r, 1.0));
+            let mut s_scalar = Mat::zeros(0, 0);
+            with_kernels(&SCALAR, || matmul_nt_paged(&a, &pool, &kb, &mut s_scalar));
+            let mut s_simd = Mat::zeros(0, 0);
+            with_kernels(simd_ks, || matmul_nt_paged(&a, &pool, &kb, &mut s_simd));
+            let mut krow = vec![0.0f32; r];
+            for j in 0..t {
+                kb.read_row_into(&pool, j, &mut krow);
+                for i in 0..m {
+                    let l1: f64 = a
+                        .row(i)
+                        .iter()
+                        .zip(&krow)
+                        .map(|(&x, &y)| (x as f64 * y as f64).abs())
+                        .sum();
+                    let tol = 4.0 * r as f64 * eps * l1 + 1e-12;
+                    let d = (s_simd.data()[i * t + j] as f64 - s_scalar.data()[i * t + j] as f64)
+                        .abs();
+                    assert!(d <= tol, "matmul_nt_paged: |Δ|={d} > tol={tol} (i={i} j={j} r={r})");
+                }
+            }
+
+            // Context GEMM: out[i][p] = Σⱼ coefⱼ·v[j][p] — FMA vs scalar
+            // per term, so the l1 of the terms bounds the divergence.
+            let pm = Mat::from_vec(m, t, g.normal_vec(m * t, 1.0));
+            let mut c_scalar = Mat::zeros(0, 0);
+            with_kernels(&SCALAR, || matmul_paged(&pm, &pool, &vb, &mut c_scalar));
+            let mut c_simd = Mat::zeros(0, 0);
+            with_kernels(simd_ks, || matmul_paged(&pm, &pool, &vb, &mut c_simd));
+            let mut l1 = vec![0.0f64; m * rv];
+            let mut vrow = vec![0.0f32; rv];
+            for j in 0..t {
+                vb.read_row_into(&pool, j, &mut vrow);
+                for i in 0..m {
+                    let coef = pm.row(i)[j] as f64;
+                    for (p, &vv) in vrow.iter().enumerate() {
+                        l1[i * rv + p] += (coef * vv as f64).abs();
+                    }
+                }
+            }
+            for (idx, (&x, &y)) in c_simd.data().iter().zip(c_scalar.data()).enumerate() {
+                let tol = 4.0 * t as f64 * eps * l1[idx] + 1e-12;
+                let d = (x as f64 - y as f64).abs();
+                assert!(d <= tol, "matmul_paged: |Δ|={d} > tol={tol} (idx={idx} t={t})");
             }
         });
     }

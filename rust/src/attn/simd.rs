@@ -1,0 +1,95 @@
+//! Dispatched composites over paged cache rows — the glue between the
+//! kernel tier ([`crate::linalg::simd`]) and the paged attention kernels in
+//! [`crate::attn`].
+//!
+//! Each helper takes the dispatch table explicitly (resolved once by the
+//! caller, on the calling thread, so [`crate::linalg::simd::with_kernels`]
+//! overrides propagate into `parallel_for` workers) and pattern-matches the
+//! page dtype exactly once per row, handing the contiguous row to the
+//! matching `*_f32` / fused `*_i8` primitive.
+
+use crate::kvcache::{PageRows, RowRef};
+use crate::linalg::simd::KernelDispatch;
+
+/// Fused (dequant-)dot of cache row `i` of `chunk` against `x`:
+/// `Σ row[p]·x[p]`, dequantizing int8 codes in place (exact `q·2ᵉ`).
+#[inline]
+pub fn page_row_dot(ks: &KernelDispatch, chunk: &PageRows<'_>, i: usize, width: usize, x: &[f32]) -> f32 {
+    match chunk.row(i, width) {
+        RowRef::F32(row) => (ks.dot_f32)(row, x),
+        RowRef::I8 { q, scale } => (ks.dot_i8)(q, scale, x),
+    }
+}
+
+/// Fused (dequant-)axpy of cache row `i` of `chunk` into `acc`:
+/// `acc[p] += coef·row[p]`, dequantizing int8 codes in place.
+#[inline]
+pub fn page_row_axpy(
+    ks: &KernelDispatch,
+    coef: f32,
+    chunk: &PageRows<'_>,
+    i: usize,
+    width: usize,
+    acc: &mut [f32],
+) {
+    match chunk.row(i, width) {
+        RowRef::F32(row) => (ks.axpy_f32)(coef, row, acc),
+        RowRef::I8 { q, scale } => (ks.axpy_i8)(coef, q, scale, acc),
+    }
+}
+
+/// Dispatched row softmax: max and the final normalize run through the
+/// kernel table (both bitwise-stable across tiers — max is order-
+/// insensitive on finite/-∞ data, normalize is elementwise), the exp+sum
+/// pass stays scalar. Bitwise equal to [`crate::model::softmax_inplace`]
+/// under **either** tier, including the all-masked uniform fallback — so
+/// swapping it into `causal_softmax_rows` changed no bits.
+pub fn softmax_row(ks: &KernelDispatch, xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = (ks.max_f32)(xs);
+    if !max.is_finite() {
+        // All -inf (fully masked): uniform over the slice as a safe fallback.
+        let u = 1.0 / xs.len() as f32;
+        xs.iter_mut().for_each(|x| *x = u);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    (ks.scale_f32)(xs, 1.0 / sum);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::simd::{simd_table, SCALAR};
+    use crate::util::prop::forall;
+
+    /// softmax_row must be bitwise `model::softmax_inplace` under every
+    /// tier — it replaced it on the GEMM prefill path.
+    #[test]
+    fn prop_softmax_row_bitwise_matches_model_softmax() {
+        let tiers: Vec<&'static KernelDispatch> =
+            std::iter::once(&SCALAR).chain(simd_table()).collect();
+        forall("softmax_row == softmax_inplace (bitwise)", 30, |g| {
+            let n = g.usize_in(1, 40);
+            let mut base = g.normal_vec(n, 3.0);
+            // Causal-mask shape: a -inf tail (possibly the whole row).
+            let cut = g.usize_in(0, n);
+            for s in base[cut..].iter_mut() {
+                *s = f32::NEG_INFINITY;
+            }
+            let mut reference = base.clone();
+            crate::model::softmax_inplace(&mut reference);
+            for t in &tiers {
+                let mut got = base.clone();
+                softmax_row(t, &mut got);
+                assert_eq!(got, reference, "[{}] diverged (n={n} cut={cut})", t.isa);
+            }
+        });
+    }
+}

@@ -223,6 +223,16 @@ pub enum PageRows<'a> {
     I8 { q: &'a [i8], exps: &'a [i8] },
 }
 
+/// One cache row exactly as stored — either raw f32 or int8 codes plus the
+/// row's (exact, power-of-two) dequant scale. This is the unit the
+/// dispatched dequant-fused kernels ([`crate::attn::simd`]) consume: the
+/// dtype match happens once per row, then the whole contiguous row goes
+/// through one vectorized primitive.
+pub enum RowRef<'a> {
+    F32(&'a [f32]),
+    I8 { q: &'a [i8], scale: f32 },
+}
+
 impl<'a> PageRows<'a> {
     /// The raw f32 slice of an f32 page (tests / f32-only paths). Panics on
     /// quantized pages — use [`BlockTable::read_row_into`] there.
@@ -230,6 +240,19 @@ impl<'a> PageRows<'a> {
         match self {
             PageRows::F32(d) => *d,
             PageRows::I8 { .. } => panic!("as_f32 on a quantized page"),
+        }
+    }
+
+    /// Row `i` of this chunk (`width` = the stream width the table was built
+    /// with), with the int8 scale pre-resolved from the row's exponent.
+    #[inline]
+    pub fn row(&self, i: usize, width: usize) -> RowRef<'a> {
+        match self {
+            PageRows::F32(d) => RowRef::F32(&d[i * width..(i + 1) * width]),
+            PageRows::I8 { q, exps } => RowRef::I8 {
+                q: &q[i * width..(i + 1) * width],
+                scale: exp_scale(exps[i]),
+            },
         }
     }
 }

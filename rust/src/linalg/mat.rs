@@ -5,13 +5,16 @@
 //! (row-major, contiguous) and a small set of carefully optimized kernels:
 //!
 //! * `matmul` / `matmul_tn` / `matmul_nt` — blocked, threaded (global pool),
-//!   with an `ikj` inner ordering that autovectorizes well;
+//!   with an `ikj` inner ordering whose dot/axpy inner loops route through
+//!   the runtime-dispatched kernel tier ([`crate::linalg::simd`], scalar
+//!   oracle or explicit SIMD);
 //! * norms, transposes, row slicing and concatenation used by the
 //!   calibration aggregation path (`K = [K¹; K²; …]`, paper §3.3).
 //!
 //! Heavier decompositions (QR, SVD) live in sibling modules and run in f64
 //! internally for stability; `Mat` converts losslessly in and out.
 
+use crate::linalg::simd::{kernels, KernelDispatch};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::SendPtr;
 use std::fmt;
@@ -414,6 +417,9 @@ impl Mat {
         // direct dot-product kernel is the fastest layout here.
         let a = &self.data;
         let b = &other.data;
+        // Resolve the kernel tier once on the calling thread (so per-thread
+        // overrides apply) and move the `&'static` into the workers.
+        let ks = kernels();
         let out_ptr = SendPtr(out.data.as_mut_ptr());
         crate::util::threadpool::parallel_for(m, move |lo, hi| {
             let o = &out_ptr; // capture the Sync wrapper, not the raw field
@@ -421,10 +427,7 @@ impl Mat {
                 let arow = &a[i * k..(i + 1) * k];
                 for j in 0..n {
                     let brow = &b[j * k..(j + 1) * k];
-                    let mut acc = 0.0f32;
-                    for p in 0..k {
-                        acc += arow[p] * brow[p];
-                    }
+                    let acc = (ks.dot_f32)(arow, brow);
                     // SAFETY: `out` was resized to `m × n` above and
                     // `i < m`, `j < n`, so `i·n + j` is in bounds. Jobs
                     // receive disjoint `lo..hi` row ranges from
@@ -440,31 +443,21 @@ impl Mat {
     /// Matrix–vector product `self @ v`.
     pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, v.len());
-        (0..self.rows)
-            .map(|i| {
-                let row = self.row(i);
-                let mut acc = 0.0f32;
-                for p in 0..self.cols {
-                    acc += row[p] * v[p];
-                }
-                acc
-            })
-            .collect()
+        let ks = kernels();
+        (0..self.rows).map(|i| (ks.dot_f32)(self.row(i), v)).collect()
     }
 
     /// Row-vector–matrix product `v @ self`.
     pub fn vecmat(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(self.rows, v.len());
+        let ks = kernels();
         let mut out = vec![0.0f32; self.cols];
         for i in 0..self.rows {
             let vi = v[i];
             if vi == 0.0 {
                 continue;
             }
-            let row = self.row(i);
-            for j in 0..self.cols {
-                out[j] += vi * row[j];
-            }
+            (ks.axpy_f32)(vi, self.row(i), &mut out);
         }
         out
     }
@@ -515,7 +508,7 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     debug_assert_eq!(c.len(), m * n);
     // Tune: rows per task. Small matrices run single-threaded.
     if m * k * n < 64 * 64 * 64 {
-        matmul_rows(a, b, c, 0, m, k, n);
+        matmul_rows(kernels(), a, b, c, 0, m, k, n);
         return;
     }
     matmul_into_threaded(a, b, c, m, k, n);
@@ -529,6 +522,9 @@ pub fn matmul_into_threaded(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: us
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    // Resolve the kernel tier once on the calling thread (so per-thread
+    // overrides apply) and move the `&'static` into the workers.
+    let ks = kernels();
     let c_ptr = SendPtr(c.as_mut_ptr());
     crate::util::threadpool::parallel_for(m, move |lo, hi| {
         let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
@@ -540,13 +536,22 @@ pub fn matmul_into_threaded(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: us
         let c_block =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
         let a_block = &a[lo * k..hi * k];
-        matmul_rows(a_block, b, c_block, 0, hi - lo, k, n);
+        matmul_rows(ks, a_block, b, c_block, 0, hi - lo, k, n);
     });
 }
 
 #[inline]
-fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], lo: usize, hi: usize, k: usize, n: usize) {
-    // ikj ordering with k-blocking.
+fn matmul_rows(
+    ks: &KernelDispatch,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    lo: usize,
+    hi: usize,
+    k: usize,
+    n: usize,
+) {
+    // ikj ordering with k-blocking; the inner j-loop is the dispatched axpy.
     const KB: usize = 256;
     for i in lo..hi {
         let crow = &mut c[i * n..(i + 1) * n];
@@ -559,10 +564,7 @@ fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], lo: usize, hi: usize, k: usi
                 if av == 0.0 {
                     continue;
                 }
-                let brow = &b[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
+                (ks.axpy_f32)(av, &b[p * n..(p + 1) * n], crow);
             }
         }
     }
@@ -730,6 +732,57 @@ mod tests {
             let left = a.matmul(&b).matmul(&c);
             let right = a.matmul(&b.matmul(&c));
             assert!(left.max_abs_diff(&right) < 1e-3);
+        });
+    }
+
+    /// Tentpole: the dense GEMM family agrees across kernel tiers within the
+    /// analytic summation-order bound (`4·k·ε·Σ|termᵢ|` per element, l1 in
+    /// f64 — DESIGN.md §5e), on shapes spanning both the single-threaded
+    /// cutoff and every SIMD lane-remainder class.
+    #[test]
+    fn prop_dense_gemms_match_scalar_within_tolerance() {
+        use crate::linalg::simd::{simd_table, with_kernels, SCALAR};
+        let Some(simd_ks) = simd_table() else {
+            return; // scalar-only host/build: nothing to A/B
+        };
+        let eps = f64::from(f32::EPSILON);
+        forall("dense GEMMs ≈ scalar oracle across tiers", 20, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 33); // sweeps every LANES-remainder class
+            let a = Mat::from_vec(m, k, g.normal_vec(m * k, 1.0));
+            let b = Mat::from_vec(k, n, g.normal_vec(k * n, 1.0));
+            let bt = b.transpose();
+
+            let mut c_scalar = Mat::zeros(0, 0);
+            let mut c_simd = Mat::zeros(0, 0);
+            with_kernels(&SCALAR, || a.matmul_to(&b, &mut c_scalar));
+            with_kernels(simd_ks, || a.matmul_to(&b, &mut c_simd));
+            let mut nt_scalar = Mat::zeros(0, 0);
+            let mut nt_simd = Mat::zeros(0, 0);
+            with_kernels(&SCALAR, || a.matmul_nt_to(&bt, &mut nt_scalar));
+            with_kernels(simd_ks, || a.matmul_nt_to(&bt, &mut nt_simd));
+            let v_scalar = with_kernels(&SCALAR, || a.matvec(bt.row(0)));
+            let v_simd = with_kernels(simd_ks, || a.matvec(bt.row(0)));
+
+            for i in 0..m {
+                for j in 0..n {
+                    let l1: f64 = (0..k)
+                        .map(|p| (a[(i, p)] as f64 * b[(p, j)] as f64).abs())
+                        .sum();
+                    let tol = 4.0 * k as f64 * eps * l1 + 1e-12;
+                    let d = (c_simd[(i, j)] as f64 - c_scalar[(i, j)] as f64).abs();
+                    assert!(d <= tol, "matmul: |Δ|={d} > tol={tol} ({i},{j}) k={k}");
+                    let d = (nt_simd[(i, j)] as f64 - nt_scalar[(i, j)] as f64).abs();
+                    assert!(d <= tol, "matmul_nt: |Δ|={d} > tol={tol} ({i},{j}) k={k}");
+                }
+                let l1: f64 = (0..k)
+                    .map(|p| (a[(i, p)] as f64 * bt.row(0)[p] as f64).abs())
+                    .sum();
+                let tol = 4.0 * k as f64 * eps * l1 + 1e-12;
+                let d = (v_simd[i] as f64 - v_scalar[i] as f64).abs();
+                assert!(d <= tol, "matvec: |Δ|={d} > tol={tol} (i={i}) k={k}");
+            }
         });
     }
 

@@ -9,7 +9,9 @@
 pub mod dmat;
 pub mod mat;
 pub mod qr;
+pub mod simd;
 pub mod svd;
 
 pub use mat::{matmul_into, Mat};
+pub use simd::{kernels, KernelDispatch};
 pub use svd::{pinv, Svd};

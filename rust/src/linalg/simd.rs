@@ -1,0 +1,877 @@
+//! Runtime-dispatched kernel tier: scalar oracle + explicit-SIMD arms.
+//!
+//! Every f32 inner loop on the serving hot path — the dequant-fused paged
+//! attention kernels ([`crate::attn`]), the blocked GEMM micro-kernel
+//! ([`crate::linalg::mat`]) and the row softmax — routes through one of six
+//! primitives on a [`KernelDispatch`] table:
+//!
+//! * `dot_f32`  — `Σ aᵢ·bᵢ` (score dots, dense NT GEMM, matvec);
+//! * `dot_i8`   — fused dequant dot `Σ (qᵢ·2ᵉ)·bᵢ` over int8 codes;
+//! * `axpy_f32` — `outᵢ += c·xᵢ` (context accumulate, ikj GEMM inner loop);
+//! * `axpy_i8`  — fused dequant axpy `outᵢ += c·(qᵢ·2ᵉ)`;
+//! * `scale_f32` — `outᵢ *= s` (online-softmax rescale, softmax normalize);
+//! * `max_f32`  — `max(xs)` (softmax row max).
+//!
+//! The **scalar** table mirrors the pre-dispatch loops exactly (same
+//! iteration order, same zero handling), so `KQSVD_KERNELS=scalar` is
+//! bit-identical to the historical behavior. The **SIMD** tables (AVX2+FMA
+//! on x86_64, NEON on aarch64; `simd` cargo feature, on by default) change
+//! only the *reduction association* of `dot_*` and fuse multiply-add in
+//! `axpy_*`; `scale_f32` and `max_f32` stay bitwise equal to scalar on
+//! finite inputs because they are elementwise / order-insensitive.
+//!
+//! ## Parity contract (see DESIGN.md §5e)
+//!
+//! The repo's bitwise property gates compare *pairs of code paths*, never a
+//! path against frozen reference bits. Every paired path (paged GEMM vs
+//! dense GEMM, batch decode vs serial oracle, fused-int8 vs
+//! dense-on-dequantized) calls the **same dispatched primitive**, so each
+//! pairing holds under either table:
+//!
+//! * int8 ↔ f32: dequantization (`q·2ᵉ`) is exact in f32 and the `*_i8`
+//!   arms keep the `*_f32` arms' lane/remainder/reduction structure
+//!   index-for-index, so a fused-int8 kernel equals the f32 kernel run on
+//!   the dequantized data — bitwise, under scalar *and* SIMD.
+//! * SIMD ↔ scalar: `dot` re-associates the sum (8-lane partial
+//!   accumulators + a fixed horizontal tree) and `axpy` uses FMA, so this
+//!   pairing is **epsilon-gated**: `|simd − scalar| ≤ 4·n·ε·Σ|aᵢbᵢ|` for
+//!   dots (standard forward error for either association order, ε = f32
+//!   machine epsilon) and one-rounding-vs-two per element for axpy.
+//!
+//! ## Remainder lanes
+//!
+//! Rank widths are data-driven (any `R ≥ 1`), so every kernel processes
+//! `⌊n/LANES⌋` full vector steps and then a scalar tail **in index order**;
+//! the f32/int8 arms split at the same index, which the int8↔f32 bitwise
+//! pairing above depends on.
+//!
+//! ## Selection
+//!
+//! [`kernels`] resolves once per process (`OnceLock`): Miri → scalar
+//! (intrinsics are uninterpretable); `KQSVD_KERNELS=scalar|simd` env
+//! override; else the best table the host supports via
+//! `is_x86_feature_detected!` / NEON detection, falling back to scalar.
+//! [`with_kernels`] forces a table for the current thread (A/B in tests and
+//! `benches/microbench.rs`); threaded kernels resolve the table on the
+//! *calling* thread and move it into their worker closures, so overrides
+//! propagate across the pool.
+//!
+//! ## Adding a new ISA arm
+//!
+//! Add a `#[cfg(all(feature = "simd", target_arch = "..."))]` module with
+//! `unsafe #[target_feature]` kernels + safe wrappers, a static table, and
+//! a detection branch in [`simd_table`]; keep the f32/i8 structural twinning
+//! and the index-ordered scalar tail, and the whole property-test suite
+//! (`kernel_parity_test.rs`, the `prop_*_bitwise` gates) applies unchanged.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Which tier a dispatch table implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable scalar loops — the oracle every other tier is gated against.
+    Scalar,
+    /// Explicit `core::arch` intrinsics (AVX2+FMA or NEON).
+    Simd,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+/// One tier's kernel table. Fields are plain `fn` pointers so a table is a
+/// `'static` value selected once and shared freely across threads.
+pub struct KernelDispatch {
+    pub kind: KernelKind,
+    /// Human-readable ISA tag (`"scalar"`, `"avx2+fma"`, `"neon"`).
+    pub isa: &'static str,
+    /// Vector width in f32 lanes (1 for scalar). Parity tests sweep widths
+    /// `LANES·k + {0..LANES−1}` to cover every remainder-lane count.
+    pub lanes: usize,
+    /// `Σ aᵢ·bᵢ`.
+    pub dot_f32: fn(&[f32], &[f32]) -> f32,
+    /// Fused dequant dot: `Σ (qᵢ·scale)·bᵢ` (`scale = 2ᵉ`, dequant exact).
+    pub dot_i8: fn(&[i8], f32, &[f32]) -> f32,
+    /// `outᵢ += c·xᵢ`.
+    pub axpy_f32: fn(f32, &[f32], &mut [f32]),
+    /// Fused dequant axpy: `outᵢ += c·(qᵢ·scale)`.
+    pub axpy_i8: fn(f32, &[i8], f32, &mut [f32]),
+    /// `outᵢ *= s` (elementwise — bitwise identical across tiers).
+    pub scale_f32: fn(&mut [f32], f32),
+    /// `max(xs)` with `-∞` identity (order-insensitive on finite/-∞ data —
+    /// bitwise identical across tiers; NaN inputs are outside the contract).
+    pub max_f32: fn(&[f32]) -> f32,
+}
+
+// --- scalar tier -----------------------------------------------------------
+
+/// Scalar kernels. Each body is the exact loop the call sites used before
+/// dispatch existed (same `zip` order, same op order), which is what makes
+/// `KQSVD_KERNELS=scalar` a bit-identical regression oracle.
+mod scalar {
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f32;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    pub fn dot_i8(q: &[i8], scale: f32, b: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), b.len());
+        // `qi as f32 * scale` is `kvcache::dequant_i8` inlined (exact); the
+        // op order matches `dot_f32` on the dequantized row element-for-
+        // element, preserving the fused↔dense bitwise pairing.
+        let mut acc = 0.0f32;
+        for (&qi, &y) in q.iter().zip(b) {
+            acc += (qi as f32 * scale) * y;
+        }
+        acc
+    }
+
+    pub fn axpy_f32(c: f32, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o += c * v;
+        }
+    }
+
+    pub fn axpy_i8(c: f32, q: &[i8], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), out.len());
+        for (o, &qi) in out.iter_mut().zip(q) {
+            *o += c * (qi as f32 * scale);
+        }
+    }
+
+    pub fn scale_f32(out: &mut [f32], s: f32) {
+        for o in out.iter_mut() {
+            *o *= s;
+        }
+    }
+
+    pub fn max_f32(xs: &[f32]) -> f32 {
+        xs.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+/// The always-available scalar table (the parity oracle).
+pub static SCALAR: KernelDispatch = KernelDispatch {
+    kind: KernelKind::Scalar,
+    isa: "scalar",
+    lanes: 1,
+    dot_f32: scalar::dot_f32,
+    dot_i8: scalar::dot_i8,
+    axpy_f32: scalar::axpy_f32,
+    axpy_i8: scalar::axpy_i8,
+    scale_f32: scalar::scale_f32,
+    max_f32: scalar::max_f32,
+};
+
+// --- AVX2+FMA tier (x86_64) ------------------------------------------------
+
+/// AVX2+FMA kernels: 8 f32 lanes per step, scalar tail in index order.
+///
+/// Safety contract for every `#[target_feature]` fn here: the caller proves
+/// `avx2` and `fma` are available at runtime. The only callers are the safe
+/// wrappers installed in [`super::AVX2`], and that table is only ever handed
+/// out by [`super::simd_table`] *after* `is_x86_feature_detected!("avx2")`
+/// and `("fma")` both return true — the wrappers are unreachable otherwise.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    pub const LANES: usize = 8;
+
+    /// Horizontal sum of one 8-lane accumulator in a fixed tree:
+    /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — deterministic, so the
+    /// SIMD dot is a pure function of its inputs.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        // SAFETY: register-only intrinsics; avx2+fma hold per this module's
+        // contract (runtime-detected before any wrapper is reachable).
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let s4 = _mm_add_ps(lo, hi);
+            let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+            let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<0x55>(s2, s2));
+            _mm_cvtss_f32(s1)
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut i = 0usize;
+        // SAFETY: the loop guard `i + LANES <= n` keeps every 8-lane
+        // unaligned load inside `a`/`b` (`loadu` has no alignment
+        // requirement); avx2+fma hold per this module's contract.
+        let mut s = unsafe {
+            let mut acc = _mm256_setzero_ps();
+            while i + LANES <= n {
+                let va = _mm256_loadu_ps(a.as_ptr().add(i));
+                let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc = _mm256_fmadd_ps(va, vb, acc);
+                i += LANES;
+            }
+            hsum8(acc)
+        };
+        // Remainder lanes, appended to the vector partial sum in index order.
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_i8(q: &[i8], scale: f32, b: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), b.len());
+        let n = q.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds both the 8-byte int8 load
+        // (`_mm_loadl_epi64` reads exactly 8 bytes at `q + i`) and the
+        // 8-lane f32 load; avx2+fma hold per this module's contract.
+        let mut s = unsafe {
+            let vs = _mm256_set1_ps(scale);
+            let mut acc = _mm256_setzero_ps();
+            while i + LANES <= n {
+                // Widen 8 sign-extended codes to f32 and dequantize: both
+                // conversions and the power-of-two multiply are exact, so
+                // each lane holds exactly `dequant_i8(q[i], scale)` and the
+                // FMA reduction matches `dot_f32` on the dequantized row.
+                let raw = _mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i);
+                let deq = _mm256_mul_ps(_mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(raw)), vs);
+                let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc = _mm256_fmadd_ps(deq, vb, acc);
+                i += LANES;
+            }
+            hsum8(acc)
+        };
+        while i < n {
+            s += (q[i] as f32 * scale) * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_f32(c: f32, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), out.len());
+        let n = x.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds every load and store; `x` and
+        // `out` are distinct slices (`&`/`&mut` cannot alias); avx2+fma
+        // hold per this module's contract.
+        unsafe {
+            let vc = _mm256_set1_ps(c);
+            while i + LANES <= n {
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(vc, vx, vo));
+                i += LANES;
+            }
+        }
+        while i < n {
+            out[i] += c * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_i8(c: f32, q: &[i8], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), out.len());
+        let n = q.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds the 8-byte int8 load and the f32
+        // load/store; `q` and `out` are distinct slices; avx2+fma hold per
+        // this module's contract.
+        unsafe {
+            let vs = _mm256_set1_ps(scale);
+            let vc = _mm256_set1_ps(c);
+            while i + LANES <= n {
+                let raw = _mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i);
+                // Exact dequant per lane (see dot_i8), then the same FMA as
+                // axpy_f32 on the dequantized values — elementwise bitwise
+                // pairing with the f32 arm.
+                let deq = _mm256_mul_ps(_mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(raw)), vs);
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(vc, deq, vo));
+                i += LANES;
+            }
+        }
+        while i < n {
+            out[i] += c * (q[i] as f32 * scale);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn scale_f32(out: &mut [f32], s: f32) {
+        let n = out.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds every load/store; avx2+fma hold
+        // per this module's contract.
+        unsafe {
+            let vs = _mm256_set1_ps(s);
+            while i + LANES <= n {
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(vo, vs));
+                i += LANES;
+            }
+        }
+        while i < n {
+            out[i] *= s;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn max_f32(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds every load; avx2+fma hold per
+        // this module's contract.
+        let mut m = unsafe {
+            let mut vm = _mm256_set1_ps(f32::NEG_INFINITY);
+            while i + LANES <= n {
+                vm = _mm256_max_ps(vm, _mm256_loadu_ps(xs.as_ptr().add(i)));
+                i += LANES;
+            }
+            let lo = _mm256_castps256_ps128(vm);
+            let hi = _mm256_extractf128_ps::<1>(vm);
+            let m4 = _mm_max_ps(lo, hi);
+            let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+            _mm_cvtss_f32(_mm_max_ss(m2, _mm_shuffle_ps::<0x55>(m2, m2)))
+        };
+        while i < n {
+            m = m.max(xs[i]);
+            i += 1;
+        }
+        m
+    }
+
+    // Safe wrappers — the only entry points, installed in `super::AVX2`.
+    pub fn dot_f32_w(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: avx2+fma were runtime-detected before `super::simd_table`
+        // exposed this wrapper (module safety contract above).
+        unsafe { dot_f32(a, b) }
+    }
+    pub fn dot_i8_w(q: &[i8], scale: f32, b: &[f32]) -> f32 {
+        // SAFETY: avx2+fma runtime-detected before exposure (module contract).
+        unsafe { dot_i8(q, scale, b) }
+    }
+    pub fn axpy_f32_w(c: f32, x: &[f32], out: &mut [f32]) {
+        // SAFETY: avx2+fma runtime-detected before exposure (module contract).
+        unsafe { axpy_f32(c, x, out) }
+    }
+    pub fn axpy_i8_w(c: f32, q: &[i8], scale: f32, out: &mut [f32]) {
+        // SAFETY: avx2+fma runtime-detected before exposure (module contract).
+        unsafe { axpy_i8(c, q, scale, out) }
+    }
+    pub fn scale_f32_w(out: &mut [f32], s: f32) {
+        // SAFETY: avx2+fma runtime-detected before exposure (module contract).
+        unsafe { scale_f32(out, s) }
+    }
+    pub fn max_f32_w(xs: &[f32]) -> f32 {
+        // SAFETY: avx2+fma runtime-detected before exposure (module contract).
+        unsafe { max_f32(xs) }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+static AVX2: KernelDispatch = KernelDispatch {
+    kind: KernelKind::Simd,
+    isa: "avx2+fma",
+    lanes: avx2::LANES,
+    dot_f32: avx2::dot_f32_w,
+    dot_i8: avx2::dot_i8_w,
+    axpy_f32: avx2::axpy_f32_w,
+    axpy_i8: avx2::axpy_i8_w,
+    scale_f32: avx2::scale_f32_w,
+    max_f32: avx2::max_f32_w,
+};
+
+// --- NEON tier (aarch64) ---------------------------------------------------
+
+/// NEON kernels. `LANES = 8`: each step processes two 4-lane halves in a
+/// fixed low-then-high order so the int8 arm (which widens 8 codes at a
+/// time) and the f32 arm split vector/tail work at the same indices — the
+/// int8↔f32 bitwise pairing requires it.
+///
+/// Safety contract: as with the AVX2 module, the wrappers are only
+/// reachable through [`super::simd_table`] after NEON detection (NEON is
+/// architecturally guaranteed on aarch64, but the gate keeps the structure
+/// uniform across arms).
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use core::arch::aarch64::*;
+
+    pub const LANES: usize = 8;
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` keeps both 4-lane loads of each half in
+        // bounds; neon holds per this module's contract.
+        let mut s = unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            while i + LANES <= n {
+                acc0 = vfmaq_f32(acc0, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+                acc1 = vfmaq_f32(
+                    acc1,
+                    vld1q_f32(a.as_ptr().add(i + 4)),
+                    vld1q_f32(b.as_ptr().add(i + 4)),
+                );
+                i += LANES;
+            }
+            // Fixed reduction: lanewise acc0+acc1, then the hardware's
+            // deterministic 4-lane tree sum.
+            vaddvq_f32(vaddq_f32(acc0, acc1))
+        };
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_i8(q: &[i8], scale: f32, b: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), b.len());
+        let n = q.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds the 8-byte `vld1_s8` load and both
+        // 4-lane f32 loads; neon holds per this module's contract.
+        let mut s = unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            while i + LANES <= n {
+                // Widen 8 codes i8→i16→i32→f32 (exact) and dequantize by the
+                // power-of-two scale (exact): each lane is exactly
+                // `dequant_i8(q[i], scale)`, FMA'd like the f32 arm.
+                let w16 = vmovl_s8(vld1_s8(q.as_ptr().add(i)));
+                let lo = vmulq_n_f32(vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16))), scale);
+                let hi = vmulq_n_f32(vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16))), scale);
+                acc0 = vfmaq_f32(acc0, lo, vld1q_f32(b.as_ptr().add(i)));
+                acc1 = vfmaq_f32(acc1, hi, vld1q_f32(b.as_ptr().add(i + 4)));
+                i += LANES;
+            }
+            vaddvq_f32(vaddq_f32(acc0, acc1))
+        };
+        while i < n {
+            s += (q[i] as f32 * scale) * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_f32(c: f32, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), out.len());
+        let n = x.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds every load/store of both halves;
+        // `x`/`out` are distinct slices; neon holds per this module's
+        // contract.
+        unsafe {
+            let vc = vdupq_n_f32(c);
+            while i + LANES <= n {
+                let r0 = vfmaq_f32(vld1q_f32(out.as_ptr().add(i)), vc, vld1q_f32(x.as_ptr().add(i)));
+                vst1q_f32(out.as_mut_ptr().add(i), r0);
+                let r1 = vfmaq_f32(
+                    vld1q_f32(out.as_ptr().add(i + 4)),
+                    vc,
+                    vld1q_f32(x.as_ptr().add(i + 4)),
+                );
+                vst1q_f32(out.as_mut_ptr().add(i + 4), r1);
+                i += LANES;
+            }
+        }
+        while i < n {
+            out[i] += c * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_i8(c: f32, q: &[i8], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), out.len());
+        let n = q.len();
+        let mut i = 0usize;
+        // SAFETY: `i + LANES <= n` bounds the 8-byte int8 load and both
+        // f32 halves' loads/stores; `q`/`out` are distinct slices; neon
+        // holds per this module's contract.
+        unsafe {
+            let vc = vdupq_n_f32(c);
+            while i + LANES <= n {
+                let w16 = vmovl_s8(vld1_s8(q.as_ptr().add(i)));
+                let lo = vmulq_n_f32(vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16))), scale);
+                let hi = vmulq_n_f32(vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16))), scale);
+                vst1q_f32(
+                    out.as_mut_ptr().add(i),
+                    vfmaq_f32(vld1q_f32(out.as_ptr().add(i)), vc, lo),
+                );
+                vst1q_f32(
+                    out.as_mut_ptr().add(i + 4),
+                    vfmaq_f32(vld1q_f32(out.as_ptr().add(i + 4)), vc, hi),
+                );
+                i += LANES;
+            }
+        }
+        while i < n {
+            out[i] += c * (q[i] as f32 * scale);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scale_f32(out: &mut [f32], s: f32) {
+        let n = out.len();
+        let mut i = 0usize;
+        // SAFETY: `i + 4 <= n` bounds every load/store; neon holds per this
+        // module's contract. (Elementwise — a 4-lane step is fine; chunking
+        // cannot affect bit-equality here.)
+        unsafe {
+            while i + 4 <= n {
+                vst1q_f32(out.as_mut_ptr().add(i), vmulq_n_f32(vld1q_f32(out.as_ptr().add(i)), s));
+                i += 4;
+            }
+        }
+        while i < n {
+            out[i] *= s;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn max_f32(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut i = 0usize;
+        // SAFETY: `i + 4 <= n` bounds every load; neon holds per this
+        // module's contract.
+        let mut m = unsafe {
+            let mut vm = vdupq_n_f32(f32::NEG_INFINITY);
+            while i + 4 <= n {
+                vm = vmaxq_f32(vm, vld1q_f32(xs.as_ptr().add(i)));
+                i += 4;
+            }
+            vmaxvq_f32(vm)
+        };
+        while i < n {
+            m = m.max(xs[i]);
+            i += 1;
+        }
+        m
+    }
+
+    // Safe wrappers — the only entry points, installed in `super::NEON`.
+    pub fn dot_f32_w(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: neon runtime-detected before `super::simd_table` exposed
+        // this wrapper (module safety contract above).
+        unsafe { dot_f32(a, b) }
+    }
+    pub fn dot_i8_w(q: &[i8], scale: f32, b: &[f32]) -> f32 {
+        // SAFETY: neon runtime-detected before exposure (module contract).
+        unsafe { dot_i8(q, scale, b) }
+    }
+    pub fn axpy_f32_w(c: f32, x: &[f32], out: &mut [f32]) {
+        // SAFETY: neon runtime-detected before exposure (module contract).
+        unsafe { axpy_f32(c, x, out) }
+    }
+    pub fn axpy_i8_w(c: f32, q: &[i8], scale: f32, out: &mut [f32]) {
+        // SAFETY: neon runtime-detected before exposure (module contract).
+        unsafe { axpy_i8(c, q, scale, out) }
+    }
+    pub fn scale_f32_w(out: &mut [f32], s: f32) {
+        // SAFETY: neon runtime-detected before exposure (module contract).
+        unsafe { scale_f32(out, s) }
+    }
+    pub fn max_f32_w(xs: &[f32]) -> f32 {
+        // SAFETY: neon runtime-detected before exposure (module contract).
+        unsafe { max_f32(xs) }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+static NEON: KernelDispatch = KernelDispatch {
+    kind: KernelKind::Simd,
+    isa: "neon",
+    lanes: neon::LANES,
+    dot_f32: neon::dot_f32_w,
+    dot_i8: neon::dot_i8_w,
+    axpy_f32: neon::axpy_f32_w,
+    axpy_i8: neon::axpy_i8_w,
+    scale_f32: neon::scale_f32_w,
+    max_f32: neon::max_f32_w,
+};
+
+// --- selection -------------------------------------------------------------
+
+/// The best SIMD table this build *and* this host support, if any: requires
+/// the `simd` cargo feature, a known target arch, and a positive runtime
+/// feature check (so `core::arch` intrinsics are unreachable without both
+/// gates — enforced structurally by `cargo xtask lint`'s `simd-gating`
+/// rule). Under Miri there is no SIMD (intrinsics are uninterpretable).
+pub fn simd_table() -> Option<&'static KernelDispatch> {
+    #[cfg(all(feature = "simd", target_arch = "x86_64", not(miri)))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Some(&AVX2);
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64", not(miri)))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(&NEON);
+        }
+    }
+    None
+}
+
+/// Resolve a requested tier against what the host offers. `None` (and any
+/// unrecognized value) selects the fastest available tier; `"scalar"` pins
+/// the oracle; `"simd"` requests SIMD but still falls back to scalar when
+/// the build or host cannot provide it (serving must come up regardless).
+pub fn resolve_request(request: Option<&str>) -> &'static KernelDispatch {
+    match request {
+        Some("scalar") => &SCALAR,
+        _ => simd_table().unwrap_or(&SCALAR),
+    }
+}
+
+static SELECTED: OnceLock<&'static KernelDispatch> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread forced table (tests / microbench A/B). `None` = global.
+    static OVERRIDE: Cell<Option<&'static KernelDispatch>> = const { Cell::new(None) };
+}
+
+/// The process-wide dispatch table. First call wins: engine/pool
+/// construction resolves it, so the tier is pinned before any hot path
+/// runs. Honors a per-thread [`with_kernels`] override first, then the
+/// `KQSVD_KERNELS=scalar|simd` env var, then runtime detection.
+pub fn kernels() -> &'static KernelDispatch {
+    if let Some(k) = OVERRIDE.with(Cell::get) {
+        return k;
+    }
+    SELECTED.get_or_init(|| {
+        if cfg!(miri) {
+            // Keep the Miri lane on the interpretable scalar tier without
+            // touching the (isolated) environment.
+            return &SCALAR;
+        }
+        resolve_request(std::env::var("KQSVD_KERNELS").ok().as_deref())
+    })
+}
+
+/// Run `f` with `k` forced as the dispatch table on this thread — the
+/// in-process A/B primitive used by the parity property tests and
+/// `benches/microbench.rs`. Kernel entry points resolve the table once on
+/// the calling thread and hand the `&'static` into worker closures, so the
+/// override also covers the threaded GEMMs. Restores the previous override
+/// even on unwind.
+pub fn with_kernels<R>(k: &'static KernelDispatch, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<&'static KernelDispatch>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|c| c.replace(Some(k))));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    /// Widths covering every remainder-lane count for both 8-lane SIMD
+    /// tiers, plus the zoo's rank widths.
+    fn widths() -> Vec<usize> {
+        let mut w: Vec<usize> = (0..=23).collect();
+        w.extend([24, 64, 100]);
+        w
+    }
+
+    fn quantize(vals: &[f32]) -> (Vec<i8>, f32) {
+        // Match the codec shape: power-of-two scale, codes in [-127, 127].
+        let max = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let e = if max == 0.0 { 0 } else { (max / 127.0).log2().ceil() as i32 };
+        let scale = (e.clamp(-126, 127) as f32).exp2();
+        let q: Vec<i8> = vals.iter().map(|&x| (x / scale).round() as i8).collect();
+        (q, scale)
+    }
+
+    /// Forward-error gate for an n-term f32 sum reduced in any association
+    /// order: `C·n·ε·Σ|terms|` with a comfortable constant.
+    fn dot_tol(a: &[f32], b: &[f32]) -> f32 {
+        let l1: f64 = a.iter().zip(b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        (4.0 * (a.len().max(1) as f64) * f32::EPSILON as f64 * l1) as f32 + 1e-30
+    }
+
+    #[test]
+    fn scalar_table_is_the_oracle() {
+        assert_eq!(SCALAR.kind, KernelKind::Scalar);
+        assert_eq!(SCALAR.lanes, 1);
+        assert!(std::ptr::eq(resolve_request(Some("scalar")), &SCALAR));
+    }
+
+    #[test]
+    fn resolution_order_and_fallback() {
+        // "simd" and auto both resolve to the host's SIMD table when one
+        // exists, scalar otherwise — and always to *some* table.
+        let auto = resolve_request(None);
+        let simd = resolve_request(Some("simd"));
+        match simd_table() {
+            Some(t) => {
+                assert!(std::ptr::eq(auto, t));
+                assert!(std::ptr::eq(simd, t));
+                assert_eq!(t.kind, KernelKind::Simd);
+                assert_eq!(t.lanes, 8);
+            }
+            None => {
+                assert!(std::ptr::eq(auto, &SCALAR));
+                assert!(std::ptr::eq(simd, &SCALAR));
+            }
+        }
+        // Unrecognized values behave like auto (serving must come up).
+        assert!(std::ptr::eq(resolve_request(Some("avx512-someday")), auto));
+    }
+
+    #[test]
+    fn with_kernels_overrides_and_restores() {
+        let base = kernels();
+        with_kernels(&SCALAR, || {
+            assert!(std::ptr::eq(kernels(), &SCALAR));
+            // Nesting: innermost wins, outer restored after.
+            if let Some(t) = simd_table() {
+                with_kernels(t, || assert!(std::ptr::eq(kernels(), t)));
+                assert!(std::ptr::eq(kernels(), &SCALAR));
+            }
+        });
+        assert!(std::ptr::eq(kernels(), base));
+    }
+
+    #[test]
+    fn prop_simd_dot_matches_scalar_within_tolerance() {
+        let Some(t) = simd_table() else { return };
+        forall("simd dot ≈ scalar dot (all remainder widths)", 20, |g| {
+            for n in widths() {
+                let a = g.normal_vec(n, 1.0);
+                let b = g.normal_vec(n, 1.0);
+                let s = (SCALAR.dot_f32)(&a, &b);
+                let v = (t.dot_f32)(&a, &b);
+                assert!(
+                    (s - v).abs() <= dot_tol(&a, &b),
+                    "n={n}: scalar {s} vs simd {v}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_simd_axpy_matches_scalar_elementwise() {
+        let Some(t) = simd_table() else { return };
+        forall("simd axpy ≈ scalar axpy (per element)", 20, |g| {
+            for n in widths() {
+                let c = g.f64_in(-2.0, 2.0) as f32;
+                let x = g.normal_vec(n, 1.0);
+                let base = g.normal_vec(n, 1.0);
+                let mut s = base.clone();
+                (SCALAR.axpy_f32)(c, &x, &mut s);
+                let mut v = base.clone();
+                (t.axpy_f32)(c, &x, &mut v);
+                for i in 0..n {
+                    // FMA (one rounding) vs mul+add (two roundings).
+                    let tol = 2.0 * f32::EPSILON * ((c * x[i]).abs() + base[i].abs()) + 1e-30;
+                    assert!((s[i] - v[i]).abs() <= tol, "n={n} i={i}: {} vs {}", s[i], v[i]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_scale_and_max_are_bitwise_across_tiers() {
+        let Some(t) = simd_table() else { return };
+        forall("scale/max bitwise scalar↔simd", 20, |g| {
+            for n in widths() {
+                let base = g.normal_vec(n, 10.0);
+                let s_fac = g.f64_in(-3.0, 3.0) as f32;
+                let mut a = base.clone();
+                let mut b = base.clone();
+                (SCALAR.scale_f32)(&mut a, s_fac);
+                (t.scale_f32)(&mut b, s_fac);
+                assert_eq!(a, b, "scale diverged at n={n}");
+                // Max including a -inf (masked-score shape).
+                let mut m = base.clone();
+                if n > 1 {
+                    m[n / 2] = f32::NEG_INFINITY;
+                }
+                assert_eq!((SCALAR.max_f32)(&m), (t.max_f32)(&m), "max diverged at n={n}");
+            }
+        });
+    }
+
+    /// The int8↔f32 structural-twinning contract: for BOTH tiers, the fused
+    /// int8 kernels are bitwise equal to the f32 kernels on the exactly
+    /// dequantized data. This is what keeps the existing fused-vs-dense
+    /// bitwise property gates true under SIMD.
+    #[test]
+    fn prop_i8_kernels_bitwise_match_f32_on_dequantized() {
+        let tiers: Vec<&'static KernelDispatch> =
+            std::iter::once(&SCALAR).chain(simd_table()).collect();
+        forall("fused i8 == f32 on dequantized (both tiers, bitwise)", 20, |g| {
+            for n in widths() {
+                let vals = g.normal_vec(n, 1.0);
+                let (q, scale) = quantize(&vals);
+                let deq: Vec<f32> = q.iter().map(|&c| c as f32 * scale).collect();
+                let b = g.normal_vec(n, 1.0);
+                let coef = g.f64_in(-2.0, 2.0) as f32;
+                for t in &tiers {
+                    let df = (t.dot_f32)(&deq, &b);
+                    let di = (t.dot_i8)(&q, scale, &b);
+                    assert!(
+                        df == di || (df.is_nan() && di.is_nan()),
+                        "[{}] dot n={n}: {df} vs {di}",
+                        t.isa
+                    );
+                    let mut of = b.clone();
+                    (t.axpy_f32)(coef, &deq, &mut of);
+                    let mut oi = b.clone();
+                    (t.axpy_i8)(coef, &q, scale, &mut oi);
+                    assert_eq!(of, oi, "[{}] axpy diverged at n={n}", t.isa);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_single_lane_edges() {
+        let tiers: Vec<&'static KernelDispatch> =
+            std::iter::once(&SCALAR).chain(simd_table()).collect();
+        for t in tiers {
+            assert_eq!((t.dot_f32)(&[], &[]), 0.0);
+            assert_eq!((t.dot_i8)(&[], 1.0, &[]), 0.0);
+            assert_eq!((t.max_f32)(&[]), f32::NEG_INFINITY);
+            let mut one = [3.0f32];
+            (t.scale_f32)(&mut one, 0.5);
+            assert_eq!(one, [1.5]);
+            (t.axpy_f32)(2.0, &[4.0], &mut one);
+            assert_eq!(one, [9.5]);
+        }
+    }
+}

@@ -205,6 +205,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         cfg.model.name, cfg.method.name(), cfg.serve.backend, prompt.len()
     );
     let engine = build_engine(&cfg)?;
+    println!("kernel tier: {} (override with KQSVD_KERNELS=scalar|simd)", engine.kernels().isa);
     let bytes_per_token = engine.cache_bytes_per_token();
     let router = Router::new(BatcherConfig::from(&cfg.serve));
     let handle = router.serve(Box::new(engine));
@@ -293,6 +294,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.serve.kv_dtype.name()
     );
     let engine = build_engine(&cfg)?;
+    println!("kernel tier: {} (override with KQSVD_KERNELS=scalar|simd)", engine.kernels().isa);
     let corpus = Corpus::new(cfg.model.vocab_size, 1234);
     let router = Router::new(BatcherConfig::from(&cfg.serve));
     let handle = router.serve(Box::new(engine));

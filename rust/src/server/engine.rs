@@ -213,6 +213,12 @@ pub struct ServingEngine {
     /// When set, `decode`/`prefill` run the serial per-token oracle path
     /// instead of the batch-major GEMM path (parity tests, benches).
     serial_oracle: bool,
+    /// Kernel dispatch table resolved at engine construction (runtime
+    /// feature detection + `KQSVD_KERNELS` override — see
+    /// [`crate::linalg::simd`]). Constructing the engine forces the
+    /// process-wide selection, so everything downstream sees one tier;
+    /// stored for reporting (`kernels().isa` names the active tier).
+    kernels: &'static crate::linalg::simd::KernelDispatch,
 }
 
 impl ServingEngine {
@@ -250,6 +256,7 @@ impl ServingEngine {
             serial_oracle: std::env::var("KQSVD_SERIAL_ORACLE")
                 .map(|v| v == "1")
                 .unwrap_or(false),
+            kernels: crate::linalg::simd::kernels(),
             model,
             proj,
             cache,
@@ -267,6 +274,12 @@ impl ServingEngine {
     /// Whether the serial oracle path is active.
     pub fn serial_oracle(&self) -> bool {
         self.serial_oracle
+    }
+
+    /// The kernel dispatch table pinned at construction; `.isa` names the
+    /// active tier (`"scalar"`, `"avx2+fma"`, `"neon"`).
+    pub fn kernels(&self) -> &'static crate::linalg::simd::KernelDispatch {
+        self.kernels
     }
 
     /// Compressed cache bytes per token in the configured storage dtype
@@ -1038,6 +1051,42 @@ mod tests {
                 assert!((a - b).abs() < 2e-3, "decode after prefill: {a} vs {b}");
             }
         });
+    }
+
+    /// Tentpole: the full engine (GEMM prefill + batch decode) under the
+    /// SIMD tier tracks the scalar tier within the cross-path float
+    /// tolerance — the end-to-end epsilon gate for kernel dispatch
+    /// (DESIGN.md §5e). Both engines are built under the ambient tier
+    /// (identical weights/projections), then each run pins its tier, so the
+    /// only difference between the runs is the kernel dispatch.
+    #[test]
+    fn engine_simd_tier_tracks_scalar_tier() {
+        use crate::linalg::simd::{simd_table, with_kernels, KernelDispatch, SCALAR};
+        let Some(simd_ks) = simd_table() else {
+            return; // scalar-only host/build: nothing to A/B
+        };
+        for name in ["test-tiny", "test-tiny-gqa"] {
+            let mut scalar_eng = build_engine(name, Method::KqSvd);
+            let mut simd_eng = build_engine(name, Method::KqSvd);
+            let mut run = |eng: &mut ServingEngine, ks: &'static KernelDispatch| {
+                with_kernels(ks, || {
+                    let prompt: Vec<u32> = (0..12).map(|i| ((i * 5 + 1) % 64) as u32).collect();
+                    eng.alloc(1, 24).unwrap();
+                    eng.prefill(1, &prompt, 0, true).unwrap();
+                    let mut last = Vec::new();
+                    for tok in [3u32, 9, 1] {
+                        last = eng.decode(&[(1 as SeqId, tok)]).unwrap().remove(0);
+                    }
+                    last
+                })
+            };
+            let scalar_logits = run(&mut scalar_eng, &SCALAR);
+            let simd_logits = run(&mut simd_eng, simd_ks);
+            assert_eq!(scalar_eng.kernels().isa, simd_eng.kernels().isa);
+            for (j, (a, b)) in simd_logits.iter().zip(&scalar_logits).enumerate() {
+                assert!((a - b).abs() < 2e-3, "{name} logit {j}: {a} vs {b}");
+            }
+        }
     }
 
     /// Acceptance: a 256-token prompt prefilled in chunks through the GEMM

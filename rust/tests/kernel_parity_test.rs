@@ -1,0 +1,224 @@
+//! Kernel-dispatch regression lane: `KQSVD_KERNELS=scalar` must be
+//! **bit-identical** to the pre-dispatch code.
+//!
+//! PR 7 routed every hot-path inner loop (paged attention, paged GEMMs,
+//! dense GEMM micro-kernel, row softmax) through the runtime-dispatched
+//! kernel tier (`kqsvd::linalg::simd`). The scalar table's contract is that
+//! each primitive reproduces the historical loop bit-for-bit, so pinning
+//! the scalar tier reproduces pre-PR behavior exactly. This file freezes
+//! that contract: each `ref_*` function below is a verbatim copy of the
+//! pre-dispatch loop shape, and every public kernel is compared against it
+//! under `with_kernels(&SCALAR, ..)` with `assert_eq!` (no tolerance).
+//!
+//! Selection logic (`resolve_request`, override nesting) is covered by the
+//! unit tests in `linalg/simd.rs`; this lane adds the end-to-end pinning
+//! checks an env-var user actually relies on.
+
+use kqsvd::attn::{causal_softmax_rows, matmul_nt_paged, matmul_paged, online_attn};
+use kqsvd::kvcache::{BlockTable, KvDtype, PagePool};
+use kqsvd::linalg::simd::{resolve_request, with_kernels, KernelKind, SCALAR};
+use kqsvd::linalg::{matmul_into, Mat};
+use kqsvd::util::prop::forall;
+
+/// Fill a pool (either dtype) and return the block table plus the exactly
+/// dequantized dense copy — for `KvDtype::F32` this is the data itself, and
+/// for `int8` the pre-PR fused loops were already bitwise equal to the
+/// dense loops on this copy (the PR-5 property gates), so it is a valid
+/// bit-level oracle input for both dtypes.
+fn fill(pool: &mut PagePool, rows: &Mat) -> (BlockTable, Mat) {
+    let mut t = BlockTable::new(rows.cols());
+    for i in 0..rows.rows() {
+        pool.push_row(&mut t, rows.row(i));
+    }
+    let mut deq = Mat::zeros(rows.rows(), rows.cols());
+    for i in 0..rows.rows() {
+        t.read_row_into(pool, i, deq.row_mut(i));
+    }
+    (t, deq)
+}
+
+/// Pre-dispatch `online_attn` loop, verbatim (dot / rescale / axpy /
+/// normalize in the exact historical op order).
+fn ref_online_attn(q: &[f32], ck: &Mat, cv: &Mat, scale: f32) -> Vec<f32> {
+    let rv = cv.cols();
+    let mut m_run = f32::NEG_INFINITY;
+    let mut l_run = 0.0f32;
+    let mut acc = vec![0.0f32; rv];
+    for i in 0..ck.rows() {
+        let mut s = 0.0f32;
+        for (&x, &y) in ck.row(i).iter().zip(q) {
+            s += x * y;
+        }
+        let s = s * scale;
+        if s > m_run {
+            let corr = (m_run - s).exp();
+            l_run *= corr;
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            m_run = s;
+        }
+        let p = (s - m_run).exp();
+        l_run += p;
+        for (a, &v) in acc.iter_mut().zip(cv.row(i)) {
+            *a += p * v;
+        }
+    }
+    if l_run > 0.0 {
+        for a in acc.iter_mut() {
+            *a *= 1.0 / l_run;
+        }
+    }
+    acc
+}
+
+/// Pre-dispatch paged score GEMM (`out = a · cacheᵀ`), verbatim dot order.
+fn ref_matmul_nt(a: &Mat, cache: &Mat) -> Mat {
+    let (m, k, n) = (a.rows(), a.cols(), cache.rows());
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a.row(i)[p] * cache.row(j)[p];
+            }
+            out.row_mut(i)[j] = acc;
+        }
+    }
+    out
+}
+
+/// Pre-dispatch paged context GEMM (`out = p · cache`), verbatim axpy order
+/// including the exact-zero skip.
+fn ref_matmul(p: &Mat, cache: &Mat) -> Mat {
+    let (m, t, w) = (p.rows(), p.cols(), cache.cols());
+    let mut out = Mat::zeros(m, w);
+    for i in 0..m {
+        for j in 0..t {
+            let coef = p.row(i)[j];
+            if coef == 0.0 {
+                continue;
+            }
+            for (o, &v) in out.row_mut(i).iter_mut().zip(cache.row(j)) {
+                *o += coef * v;
+            }
+        }
+    }
+    out
+}
+
+/// Pre-dispatch dense `matmul_into` body (ikj with zero-skip; the KB=256
+/// blocking is a no-op at these widths).
+fn ref_matmul_into(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.row(i)[p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += av * b.row(p)[j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn scalar_pin_reproduces_pre_dispatch_attention_bitwise() {
+    forall("scalar tier == pre-dispatch attention (bitwise)", 25, |g| {
+        let t = g.usize_in(1, 50);
+        let r = g.usize_in(1, 20);
+        let rv = g.usize_in(1, 20);
+        let page = g.usize_in(1, 16);
+        let dtype = if g.usize_in(0, 1) == 0 { KvDtype::F32 } else { KvDtype::Int8 };
+        let mut pool = PagePool::with_dtype(page, dtype);
+        let ck = Mat::from_vec(t, r, g.normal_vec(t * r, 1.0));
+        let cv = Mat::from_vec(t, rv, g.normal_vec(t * rv, 1.0));
+        let (kb, kdeq) = fill(&mut pool, &ck);
+        let (vb, vdeq) = fill(&mut pool, &cv);
+        let q = g.normal_vec(r, 1.0);
+        let scale = g.f64_in(0.05, 2.0) as f32;
+
+        let got = with_kernels(&SCALAR, || online_attn(&q, &pool, &kb, &vb, scale));
+        assert_eq!(got, ref_online_attn(&q, &kdeq, &vdeq, scale), "online_attn drifted");
+
+        let m = g.usize_in(1, 6);
+        let a = Mat::from_vec(m, r, g.normal_vec(m * r, 1.0));
+        let mut nt = Mat::zeros(0, 0);
+        with_kernels(&SCALAR, || matmul_nt_paged(&a, &pool, &kb, &mut nt));
+        assert_eq!(nt.data(), ref_matmul_nt(&a, &kdeq).data(), "matmul_nt_paged drifted");
+
+        // Causal-mask-shaped probabilities: exact zeros exercise the skip.
+        let mut pm = Mat::from_vec(m, t, g.normal_vec(m * t, 1.0));
+        for i in 0..m {
+            let cut = g.usize_in(0, t);
+            for s in pm.row_mut(i)[cut..].iter_mut() {
+                *s = 0.0;
+            }
+        }
+        let mut ctx = Mat::zeros(0, 0);
+        with_kernels(&SCALAR, || matmul_paged(&pm, &pool, &vb, &mut ctx));
+        assert_eq!(ctx.data(), ref_matmul(&pm, &vdeq).data(), "matmul_paged drifted");
+    });
+}
+
+#[test]
+fn scalar_pin_reproduces_pre_dispatch_dense_gemm_bitwise() {
+    forall("scalar tier == pre-dispatch matmul_into (bitwise)", 25, |g| {
+        let m = g.usize_in(1, 10);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 24);
+        let mut a = Mat::from_vec(m, k, g.normal_vec(m * k, 1.0));
+        // Sprinkle exact zeros so the historical zero-skip is exercised.
+        for i in 0..m {
+            let z = g.usize_in(0, k);
+            for v in a.row_mut(i)[..z].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        let b = Mat::from_vec(k, n, g.normal_vec(k * n, 1.0));
+        let mut c = vec![0.0f32; m * n];
+        with_kernels(&SCALAR, || matmul_into(a.data(), b.data(), &mut c, m, k, n));
+        assert_eq!(c, ref_matmul_into(&a, &b).data(), "matmul_into drifted");
+    });
+}
+
+#[test]
+fn scalar_pin_reproduces_pre_dispatch_softmax_bitwise() {
+    forall("scalar tier == pre-dispatch causal softmax (bitwise)", 25, |g| {
+        let chunk = g.usize_in(1, 8);
+        let pos0 = g.usize_in(0, 12);
+        let t = pos0 + chunk + g.usize_in(0, 6);
+        let mut scores = Mat::from_vec(chunk, t, g.normal_vec(chunk * t, 2.0));
+        let mut reference = scores.clone();
+        // Pre-dispatch loop: mask then `model::softmax_inplace` per row.
+        for i in 0..chunk {
+            let row = reference.row_mut(i);
+            let valid = (pos0 + i + 1).min(t);
+            for s in row[valid..].iter_mut() {
+                *s = f32::NEG_INFINITY;
+            }
+            kqsvd::model::softmax_inplace(row);
+        }
+        with_kernels(&SCALAR, || causal_softmax_rows(&mut scores, pos0));
+        assert_eq!(scores.data(), reference.data(), "causal_softmax_rows drifted");
+    });
+}
+
+/// The env contract the pinning above relies on: `"scalar"` resolves to the
+/// scalar oracle table, anything else to the best available tier (never a
+/// failure — serving must come up on any host).
+#[test]
+fn request_resolution_contract() {
+    assert!(std::ptr::eq(resolve_request(Some("scalar")), &SCALAR));
+    assert!(resolve_request(Some("simd")).lanes >= 1);
+    let auto = resolve_request(None);
+    assert!(matches!(auto.kind, KernelKind::Scalar | KernelKind::Simd));
+    // `simd` on a scalar-only host/build falls back rather than failing.
+    if kqsvd::linalg::simd::simd_table().is_none() {
+        assert!(std::ptr::eq(resolve_request(Some("simd")), &SCALAR));
+    }
+}

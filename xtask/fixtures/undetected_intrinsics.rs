@@ -1,0 +1,23 @@
+// lint-as: rust/src/linalg/fixture.rs
+// expect-lint: simd-gating
+//
+// Negative fixture: the intrinsics are correctly feature-gated, but the
+// file has no runtime `is_x86_feature_detected!` check anywhere — so a
+// `simd`-feature build would execute AVX2 code on hosts without AVX2.
+// Compiling an ISA arm must never imply executing it. This file is lint
+// fodder, never compiled.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum8(p: *const f32) -> f32 {
+        // SAFETY: caller guarantees p points at 8 readable f32s.
+        let v = unsafe { _mm256_loadu_ps(p) };
+        let mut out = [0.0f32; 8];
+        // SAFETY: out is exactly 8 f32s, properly aligned for storeu.
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr(), v) };
+        out.iter().sum()
+    }
+}

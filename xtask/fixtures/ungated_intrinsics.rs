@@ -1,0 +1,15 @@
+// lint-as: rust/src/linalg/fixture.rs
+// expect-lint: simd-gating
+//
+// Negative fixture: a bare `core::arch` import with no
+// `#[cfg(feature = "simd")]` gate. A scalar-only build
+// (`--no-default-features`, the Miri lane) would compile the intrinsics
+// anyway, defeating the tier split. This file is lint fodder, never
+// compiled.
+
+use core::arch::x86_64::*;
+
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    // Body irrelevant — the import line above is the violation.
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}

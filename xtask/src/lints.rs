@@ -1,4 +1,4 @@
-//! The four repo-specific structural lints.
+//! The five repo-specific structural lints.
 //!
 //! Rules (see DESIGN.md §9 for the full rationale):
 //!
@@ -17,6 +17,13 @@
 //! * `safety-comments` — every `unsafe` block / `unsafe impl` must carry a
 //!   `// SAFETY:` comment stating the aliasing/lifetime argument, on the
 //!   same line or in the contiguous comment/attribute run directly above.
+//! * `simd-gating` — `core::arch` / `std::arch::{x86_64,aarch64}` imports
+//!   and `#[target_feature]` attributes may only appear inside items gated
+//!   by a `#[cfg(.. feature = "simd" ..)]` attribute, so scalar-only builds
+//!   (`--no-default-features`, the Miri lane) can never reach an intrinsic;
+//!   and any file using intrinsics must also contain a runtime
+//!   `*_feature_detected!` check somewhere, so compiling the arm never
+//!   implies executing it on a host without the ISA.
 //! * `hot-path-panics` — no `unwrap` / `expect` / `panic!` /
 //!   `unreachable!` / `todo!` / `unimplemented!` in the serving hot path:
 //!   all of `coordinator/batcher.rs`, every `fn pump` in
@@ -37,11 +44,12 @@ pub struct Finding {
     pub msg: String,
 }
 
-pub const RULES: [&str; 4] = [
+pub const RULES: [&str; 5] = [
     "accounting-fields",
     "lossy-casts",
     "safety-comments",
     "hot-path-panics",
+    "simd-gating",
 ];
 
 const ACCOUNTING_FIELDS: [&str; 3] = ["used_bytes", "cold_bytes", "outstanding"];
@@ -69,6 +77,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     lint_lossy_casts(rel, &s, &mut out);
     lint_safety_comments(&s, &mut out);
     lint_hot_path_panics(rel, &s, &mut out);
+    lint_simd_gating(&s, &mut out);
     out.sort_by_key(|f| f.line);
     out
 }
@@ -284,6 +293,50 @@ fn lint_hot_path_panics(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
     }
 }
 
+// --- Rule 5: simd-gating ---------------------------------------------------
+
+/// Tokens whose presence on a line marks it as intrinsic use. Deliberately
+/// *not* matched: `std::arch::is_x86_feature_detected!` — the detection
+/// macro path contains neither `core::arch` nor an arch-module segment, so
+/// the guard itself never trips the rule.
+const INTRINSIC_MARKERS: [&str; 4] = [
+    "core::arch",
+    "std::arch::x86_64",
+    "std::arch::aarch64",
+    "#[target_feature",
+];
+
+fn lint_simd_gating(s: &Scanned, out: &mut Vec<Finding>) {
+    let mut any_intrinsics = false;
+    for (i, line) in s.lines.iter().enumerate() {
+        let ln = i + 1;
+        let Some(marker) = INTRINSIC_MARKERS.iter().find(|m| line.contains(*m)) else {
+            continue;
+        };
+        any_intrinsics = true;
+        if s.simd_lines.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        out.push(Finding {
+            line: ln,
+            rule: "simd-gating",
+            msg: format!(
+                "`{marker}` outside a `#[cfg(.. feature = \"simd\" ..)]`-gated item — \
+                 scalar-only builds (--no-default-features, Miri) must not compile intrinsics"
+            ),
+        });
+    }
+    if any_intrinsics && !s.masked.contains("_feature_detected!") {
+        out.push(Finding {
+            line: 1,
+            rule: "simd-gating",
+            msg: "file uses arch intrinsics but contains no runtime `*_feature_detected!` \
+                  check — compiling an ISA arm must never imply executing it"
+                .into(),
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,6 +411,34 @@ mod tests {
         // Tests in batcher.rs may unwrap.
         let test = "#[cfg(test)]\nmod tests {\n fn t() { q.pop().unwrap(); }\n}\n";
         assert!(lint_source("rust/src/coordinator/batcher.rs", test).is_empty());
+    }
+
+    #[test]
+    fn ungated_intrinsics_flagged() {
+        // Bare arch import, no cfg gate, no detection macro: both findings.
+        let bad = "use core::arch::x86_64::*;\nfn f() {}\n";
+        let f = lint_source("rust/src/linalg/x.rs", bad);
+        assert_eq!(rules_of(&f), vec!["simd-gating", "simd-gating"]);
+        // Properly gated module with a runtime check elsewhere in the file:
+        // clean.
+        let good = "#[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
+                    mod avx2 {\n\
+                        use core::arch::x86_64::*;\n\
+                        #[target_feature(enable = \"avx2\")]\n\
+                        unsafe fn dot() {}\n\
+                    }\n\
+                    fn pick() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
+        assert!(lint_source("rust/src/linalg/x.rs", good).is_empty());
+        // Gated but no detection macro anywhere: the file-level finding.
+        let undetected = "#[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
+                          mod avx2 { use core::arch::x86_64::*; }\n";
+        assert_eq!(
+            rules_of(&lint_source("rust/src/linalg/x.rs", undetected)),
+            vec!["simd-gating"]
+        );
+        // Mentions in comments/strings don't count as intrinsic use.
+        let prose = "// core::arch is discussed here\nfn f() { let s = \"core::arch\"; }\n";
+        assert!(lint_source("rust/src/linalg/x.rs", prose).is_empty());
     }
 
     #[test]

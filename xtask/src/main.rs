@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!
-//! * `cargo xtask lint` — run the four structural lints (see [`lints`])
+//! * `cargo xtask lint` — run the five structural lints (see [`lints`])
 //!   over `rust/src`. Exits non-zero, listing `file:line: [rule] message`
 //!   findings, when the tree is not clean.
 //! * `cargo xtask fixtures` — self-test: lint every negative fixture under
@@ -182,7 +182,7 @@ mod tests {
         }
     }
 
-    /// The four rule names the fixtures reference must stay in sync with
+    /// The rule names the fixtures reference must stay in sync with
     /// the lint registry.
     #[test]
     fn fixture_coverage_spans_all_rules() {

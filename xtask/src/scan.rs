@@ -5,7 +5,9 @@
 //! and string/char-literal bodies are blanked out (preserving line
 //! structure), plus the comment text per line (for `// SAFETY:` and
 //! `// cast-ok:` detection) and the line ranges covered by
-//! `#[cfg(test)]`-gated items (tests may panic/cast freely).
+//! `#[cfg(test)]`-gated items (tests may panic/cast freely) and by
+//! `#[cfg(.. feature = "simd" ..)]`-gated items (the only lines where
+//! `core::arch` intrinsics are legal — see the `simd-gating` lint).
 //!
 //! The masking rules mirror `rustc`'s lexer closely enough for this
 //! codebase: line comments, nested block comments, string literals with
@@ -28,6 +30,12 @@ pub struct Scanned {
     /// `test_lines[i]` is true when 1-based line `i + 1` is inside a
     /// `#[cfg(test)]`-gated item.
     pub test_lines: Vec<bool>,
+    /// `simd_lines[i]` is true when 1-based line `i + 1` is inside an item
+    /// gated by a `#[cfg(...)]` attribute naming the `simd` feature (e.g.
+    /// `#[cfg(all(feature = "simd", target_arch = "x86_64"))]`). Used by the
+    /// `simd-gating` lint: `core::arch` intrinsics may only appear on such
+    /// lines.
+    pub simd_lines: Vec<bool>,
 }
 
 pub fn scan(src: &str) -> Scanned {
@@ -139,11 +147,13 @@ pub fn scan(src: &str) -> Scanned {
     let masked = String::from_utf8(out).expect("masked output is ASCII + newlines");
     let lines: Vec<String> = masked.split('\n').map(|s| s.to_string()).collect();
     let test_lines = mark_test_lines(&masked, lines.len());
+    let simd_lines = mark_simd_lines(src, &masked, lines.len());
     Scanned {
         masked,
         comments,
         lines,
         test_lines,
+        simd_lines,
     }
 }
 
@@ -244,6 +254,67 @@ fn mark_test_lines(masked: &str, n_lines: usize) -> Vec<bool> {
         .collect()
 }
 
+/// Mark every line covered by an item whose `#[cfg(...)]` attribute names
+/// the `simd` feature (attribute line through the matching close brace, or
+/// through the `;` for body-less items like a gated `use`).
+///
+/// The attribute *content* must be read from the **raw** source: masking
+/// blanks string-literal bodies, so `"simd"` inside
+/// `#[cfg(feature = "simd")]` is spaces in `masked`. Masking preserves byte
+/// length, so offsets found structurally in `masked` index the same
+/// characters in `raw`. This is a token-level check — it asks only that
+/// `feature` and `simd` appear inside the cfg predicate, so a pathological
+/// `not(feature = "simd")` gate would satisfy it; the lint is a guard-rail
+/// against *ungated* intrinsics, not a cfg evaluator.
+fn mark_simd_lines(raw: &str, masked: &str, n_lines: usize) -> Vec<bool> {
+    let mut marks = vec![false; n_lines + 2];
+    let bytes = masked.as_bytes();
+    let raw_bytes = raw.as_bytes();
+    let needle = b"#[cfg(";
+    let mut from = 0usize;
+    while let Some(pos) = find_from(bytes, needle, from) {
+        from = pos + needle.len();
+        let open_paren = pos + needle.len() - 1;
+        let close_paren = match_paren(bytes, open_paren);
+        let pred = &raw_bytes[open_paren..close_paren.min(raw_bytes.len())];
+        if find_from(pred, b"feature", 0).is_none() || find_from(pred, b"simd", 0).is_none() {
+            continue;
+        }
+        // Forward from the end of the attribute to the item's opening brace;
+        // a `;` first means a body-less gated item (`use`, `static .. = ..;`
+        // without braces) — mark through the `;` line instead.
+        let mut j = close_paren;
+        let mut open = None;
+        let mut semi = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => {
+                    semi = Some(j);
+                    break;
+                }
+                _ => j += 1,
+            }
+        }
+        let end = match (open, semi) {
+            (Some(open), _) => match_brace(bytes, open),
+            (None, Some(semi)) => semi,
+            (None, None) => continue,
+        };
+        let l0 = line_of(masked, pos);
+        let l1 = line_of(masked, end.min(bytes.len().saturating_sub(1)));
+        for l in l0..=l1.min(n_lines) {
+            marks[l] = true;
+        }
+    }
+    (1..=n_lines)
+        .map(|l| marks.get(l).copied().unwrap_or(false))
+        .collect()
+}
+
 fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
     if needle.is_empty() || from >= hay.len() {
         return None;
@@ -252,6 +323,27 @@ fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
         .windows(needle.len())
         .position(|w| w == needle)
         .map(|p| p + from)
+}
+
+/// Byte offset of the paren matching the one at `open` (best effort: end of
+/// file when unbalanced — fails safe by over-marking the predicate span).
+fn match_paren(bytes: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    bytes.len().saturating_sub(1)
 }
 
 /// Byte offset of the brace matching the one at `open` (best effort: end of
@@ -356,6 +448,24 @@ mod tests {
         assert!(!s.test_lines[0]);
         assert!(s.test_lines[1] && s.test_lines[2] && s.test_lines[3] && s.test_lines[4]);
         assert!(!s.test_lines[5]);
+    }
+
+    #[test]
+    fn simd_gated_items_marked() {
+        let src = "use core::arch::x86_64::*;\n\
+                   #[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
+                   mod avx2 {\n    use core::arch::x86_64::*;\n}\n\
+                   #[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
+                   pub use avx2::dot;\n\
+                   #[cfg(test)]\nmod tests {}\n";
+        let s = scan(src);
+        // Bare use on line 1: not gated.
+        assert!(!s.simd_lines[0]);
+        // Attribute + mod body (lines 2-5) and body-less gated use (6-7).
+        assert!(s.simd_lines[1] && s.simd_lines[2] && s.simd_lines[3] && s.simd_lines[4]);
+        assert!(s.simd_lines[5] && s.simd_lines[6]);
+        // `#[cfg(test)]` does not count as a simd gate.
+        assert!(!s.simd_lines[7] && !s.simd_lines[8]);
     }
 
     #[test]
