@@ -143,6 +143,7 @@ pub trait Engine {
     /// composition runs the chunks then the batch through
     /// [`Engine::prefill`]/[`Engine::decode`]; engines may override to fuse
     /// the phases tighter (shared scratch, one accelerator dispatch).
+    // lint-ok(hot-path-alloc): default composition marshals O(batch) per-step result Vecs; the data plane underneath runs in the engine scratch arena
     fn step_fused(
         &mut self,
         prefill: &[PrefillChunk<'_>],
@@ -376,10 +377,11 @@ impl Batcher {
     }
 
     /// Retire a sequence: emit the terminal event and record the completion.
-    fn retire(&mut self, st: SeqState, reason: FinishReason) {
-        let events = st.events.clone();
+    fn retire(&mut self, mut st: SeqState, reason: FinishReason) {
+        let events = st.events.take();
         let completion = st.into_completion(reason);
         if let Some(tx) = events {
+            // lint-ok(hot-path-alloc): terminal event per request — both the stream and take_completions() need an owned Completion
             let _ = tx.send(TokenEvent::Finished(completion.clone()));
         }
         self.finished.push(completion);
@@ -389,13 +391,14 @@ impl Batcher {
     /// streaming clients get a terminal [`TokenEvent::Rejected`] so their
     /// stream never hangs; offline callers get a completion with
     /// [`FinishReason::Failed`].
-    fn retire_failed(&mut self, st: SeqState, err: &anyhow::Error) {
+    fn retire_failed(&mut self, mut st: SeqState, err: &anyhow::Error) {
         let id = st.req.id;
-        let events = st.events.clone();
+        let events = st.events.take();
         let completion = st.into_completion(FinishReason::Failed);
         if let Some(tx) = events {
             let _ = tx.send(TokenEvent::Rejected {
                 id,
+                // lint-ok(hot-path-alloc): engine-failure terminal path — renders the error message once per failed request
                 error: SubmitError::Engine { msg: err.to_string() },
             });
         }
@@ -438,11 +441,13 @@ impl Batcher {
     /// ties preferring the sequence with the least progress (fewest cached
     /// tokens), minimizing recompute waste.
     fn eviction_candidates(&self, prio: i32) -> Vec<usize> {
+        // lint-ok(hot-path-alloc): preemption planning — runs only when an admission is blocked, O(running) indices
         let mut victims: Vec<usize> = (0..self.running.len())
             .filter(|&i| {
                 let s = &self.running[i].1;
                 s.req.params.priority < prio && s.ran_steps >= self.cfg.preempt_cooldown_steps
             })
+            // lint-ok(hot-path-alloc): blocked-admission path only
             .collect();
         victims.sort_by_key(|&i| {
             let s = &self.running[i].1;
@@ -499,9 +504,11 @@ impl Batcher {
                 // evict nothing — futile preemption would lose victims'
                 // progress for zero admission gain.
                 let prio = self.queue[best].req.params.priority;
+                // lint-ok(hot-path-alloc): eviction planning — blocked-admission path only, O(victims) ids
                 let mut planned: Vec<(usize, SeqId)> = Vec::new();
                 let unblocks = {
                     let src = self.queue[best].prefill_src();
+                    // lint-ok(hot-path-alloc): eviction planning — blocked-admission path only, O(victims) ids
                     let mut planned_ids: Vec<SeqId> = Vec::new();
                     let mut unblocks = false;
                     for slot in self.eviction_candidates(prio) {
@@ -642,6 +649,7 @@ impl Batcher {
             self.cfg.prefill_chunk
         };
         // (slot, start, end, is_last) per scheduled chunk.
+        // lint-ok(hot-path-alloc): scheduler plan — O(max_batch) tuples per step, control plane not data plane
         let mut plan: Vec<(usize, usize, usize, bool)> = Vec::new();
         for (slot, (_, st)) in self.running.iter().enumerate() {
             if budget == 0 {
@@ -658,6 +666,7 @@ impl Batcher {
         }
 
         // The decode half: every running sequence past its prompt.
+        // lint-ok(hot-path-alloc): scheduler plan — O(max_batch) slot indices per step
         let decode_slots: Vec<usize> = self
             .running
             .iter()
@@ -665,6 +674,7 @@ impl Batcher {
             .filter(|(_, (_, s))| s.prompt_done())
             .map(|(slot, _)| slot)
             .take(self.cfg.max_batch)
+            // lint-ok(hot-path-alloc): O(max_batch) slot indices per step
             .collect();
 
         if plan.is_empty() && decode_slots.is_empty() {
@@ -686,6 +696,7 @@ impl Batcher {
             });
         }
 
+        // lint-ok(hot-path-alloc): scheduler plan — O(max_batch) (id, token) pairs per step
         let mut decode_batch: Vec<(SeqId, u32)> = Vec::with_capacity(decode_slots.len());
         for &slot in &decode_slots {
             let (id, st) = &self.running[slot];
@@ -699,6 +710,7 @@ impl Batcher {
             }
         }
         let result = {
+            // lint-ok(hot-path-alloc): scheduler plan — O(max_batch) borrowed chunk descriptors per step
             let chunks: Vec<PrefillChunk<'_>> = plan
                 .iter()
                 .map(|&(slot, start, end, is_last)| {
@@ -710,6 +722,7 @@ impl Batcher {
                         is_last,
                     }
                 })
+                // lint-ok(hot-path-alloc): O(max_batch) borrowed chunk descriptors per step
                 .collect();
             engine.step_fused(&chunks, &decode_batch)?
         };
@@ -725,6 +738,7 @@ impl Batcher {
         let mut prefill_tokens = 0usize;
         // Slots whose engine reply violated the step_fused contract (missing
         // last-chunk logits): those sequences are failed individually below.
+        // lint-ok(hot-path-alloc): engine-contract-violation bookkeeping — empty in every healthy step
         let mut contract_failures: Vec<usize> = Vec::new();
         for (ci, &(slot, start, end, is_last)) in plan.iter().enumerate() {
             let (_, st) = &mut self.running[slot];

@@ -197,14 +197,18 @@ pub(crate) fn sample_token(logits: &[f32], temperature: f32, rng: &mut Pcg64) ->
         return crate::model::argmax(logits);
     }
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let weights: Vec<f64> = logits
-        .iter()
-        .map(|&l| (((l - max) / temperature) as f64).exp())
-        .collect();
-    let total: f64 = weights.iter().sum();
+    // Two passes recomputing each weight instead of materializing a
+    // vocab-sized buffer: sampling runs once per generated token, and the
+    // recomputed weights are the identical fp expressions in the identical
+    // order, so draws are bit-for-bit unchanged.
+    let weight = |l: f32| (((l - max) / temperature) as f64).exp();
+    let mut total = 0.0f64;
+    for &l in logits {
+        total += weight(l);
+    }
     let mut u = rng.uniform() * total;
-    for (i, w) in weights.iter().enumerate() {
-        u -= w;
+    for (i, &l) in logits.iter().enumerate() {
+        u -= weight(l);
         if u < 0.0 {
             return i;
         }
@@ -294,6 +298,7 @@ impl SeqState {
         self.ran_steps = 0;
         self.alloc_failures = 0;
         if !self.generated.is_empty() {
+            // lint-ok(hot-path-alloc): preemption resume rebuilds the prefill source once per eviction, not per token
             let mut src = Vec::with_capacity(self.req.prompt.len() + self.generated.len());
             src.extend_from_slice(&self.req.prompt);
             src.extend_from_slice(&self.generated);

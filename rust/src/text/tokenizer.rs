@@ -37,6 +37,7 @@ impl ByteTokenizer {
 
     /// Decode token ids back to text; specials are dropped, invalid UTF-8 is
     /// replaced (lossy) — decoding never fails.
+    // lint-ok(hot-path-alloc): output-text production allocates the returned String by contract
     pub fn decode(&self, tokens: &[u32]) -> String {
         let bytes: Vec<u8> = tokens
             .iter()

@@ -1,0 +1,1697 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of `cargo xtask lint` / `cargo xtask fixtures`.
+
+This is a line-for-line port of the Rust analysis pipeline in `xtask/src/`
+(scan -> lexer -> item tree -> call graph -> lint passes) so that containers
+without a Rust toolchain can still verify the tree and the fixture corpus.
+The two implementations MUST produce identical findings (file, line, rule)
+on every fixture under `xtask/fixtures/` — `cargo xtask fixtures
+--emit-findings` and `lint_mirror.py fixtures --emit-findings` print the
+same canonical lines, and the xtask unit test `mirror_agrees_on_fixtures`
+(plus the `lint-mirror` CI pre-job) diff them.
+
+Usage:
+    python3 tools/lint_mirror.py lint     [--format human|json|sarif]
+    python3 tools/lint_mirror.py fixtures [--emit-findings]
+
+Exit codes: 0 = clean / all fixtures behave, 1 = findings or failures.
+
+Keep this file in lockstep with `xtask/src/{scan,lexer,items,callgraph,
+units,lints,main}.rs`. DESIGN.md §9 documents the shared architecture.
+"""
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RULES = [
+    "accounting-fields",
+    "lossy-casts",
+    "safety-comments",
+    "hot-path-panics",
+    "simd-gating",
+    "hot-path-alloc",
+    "unit-confusion",
+    "sendptr-escape",
+    "dispatch-parity-drift",
+]
+
+# Cross-artifact inputs consumed by the whole-program lints. In repo mode
+# they are read from disk; in fixture mode a `//=== file: <path>` section
+# with one of these paths overrides them (absent section = empty artifact).
+AUX_MIRI = "rust/tests/miri_kernels.rs"
+AUX_PARITY = "rust/tests/kernel_parity_test.rs"
+AUX_DESIGN = "DESIGN.md"
+AUX_PATHS = (AUX_MIRI, AUX_PARITY, AUX_DESIGN)
+
+
+def is_ident_char(c):
+    return c == "_" or c.isascii() and c.isalnum()
+
+
+# --- scan: comment/string masking + cfg span marking (port of scan.rs) ----
+
+
+class Scanned:
+    __slots__ = ("masked", "comments", "lines", "test_lines", "simd_lines")
+
+
+def _find_from(hay, needle, from_):
+    p = hay.find(needle, from_)
+    return None if p < 0 else p
+
+
+def _match_delim(s, open_pos, op, cl):
+    depth = 0
+    j = open_pos
+    n = len(s)
+    while j < n:
+        if s[j] == op:
+            depth += 1
+        elif s[j] == cl:
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return max(n - 1, 0)
+
+
+def _line_of(masked, byte_off):
+    return masked.count("\n", 0, byte_off) + 1
+
+
+def _is_raw_string_start(s, i):
+    j = i
+    if s[j] == "b":
+        j += 1
+    if j >= len(s) or s[j] != "r":
+        return False
+    j += 1
+    while j < len(s) and s[j] == "#":
+        j += 1
+    return j < len(s) and s[j] == '"'
+
+
+def _skip_raw_string(s, i):
+    j = i
+    if s[j] == "b":
+        j += 1
+    j += 1  # 'r'
+    hashes = 0
+    while j < len(s) and s[j] == "#":
+        hashes += 1
+        j += 1
+    j += 1  # opening quote
+    while True:
+        if j >= len(s):
+            return len(s)
+        if s[j] == '"':
+            h = 0
+            while j + 1 + h < len(s) and s[j + 1 + h] == "#" and h < hashes:
+                h += 1
+            if h == hashes:
+                return j + 1 + hashes
+        j += 1
+
+
+def _skip_string(s, i):
+    j = i + 1
+    while j < len(s):
+        c = s[j]
+        if c == "\\":
+            j += 2
+        elif c == '"':
+            return j + 1
+        else:
+            j += 1
+    return len(s)
+
+
+def scan(src):
+    n = len(src)
+    out = []
+    comments = {}
+    line = 1
+    i = 0
+
+    def mask_into(chunk):
+        nonlocal line
+        for ch in chunk:
+            if ch == "\n":
+                out.append("\n")
+                line += 1
+            else:
+                out.append(" ")
+
+    while i < n:
+        c = src[i]
+        nx = src[i + 1] if i + 1 < n else "\0"
+        if c == "\n":
+            out.append("\n")
+            line += 1
+            i += 1
+        elif c == "/" and nx == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            comments[line] = comments.get(line, "") + src[i:j]
+            mask_into(src[i:j])
+            i = j
+        elif c == "/" and nx == "*":
+            start_line = line
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            comments[start_line] = comments.get(start_line, "") + src[i:j]
+            mask_into(src[i:j])
+            i = j
+        elif c in ("r", "b") and _is_raw_string_start(src, i):
+            j = _skip_raw_string(src, i)
+            mask_into(src[i:j])
+            i = j
+        elif c == '"':
+            j = _skip_string(src, i)
+            mask_into(src[i:j])
+            i = j
+        elif c == "b" and nx == '"':
+            j = _skip_string(src, i + 1)
+            mask_into(src[i:j])
+            i = j
+        elif c == "'":
+            if nx == "\\":
+                j = i + 2
+                while j < n and src[j] != "'" and src[j] != "\n":
+                    j += 1
+                if j < n and src[j] == "'":
+                    j += 1
+                mask_into(src[i:j])
+                i = j
+            elif i + 2 < n and src[i + 2] == "'":
+                out.append("   ")
+                i += 3
+            else:
+                out.append(" ")
+                i += 1
+        else:
+            out.append(c if ord(c) < 0x80 else " ")
+            i += 1
+
+    s = Scanned()
+    s.masked = "".join(out)
+    s.comments = comments
+    s.lines = s.masked.split("\n")
+    s.test_lines = _mark_spans(s.masked, s.masked, len(s.lines), "#[cfg(test)]", None)
+    s.simd_lines = _mark_spans(s.masked, src, len(s.lines), "#[cfg(", "simd")
+    return s
+
+
+def _mark_spans(masked, raw, n_lines, needle, feature):
+    """Shared body of mark_test_lines / mark_simd_lines (scan.rs)."""
+    marks = [False] * (n_lines + 2)
+    from_ = 0
+    while True:
+        pos = _find_from(masked, needle, from_)
+        if pos is None:
+            break
+        from_ = pos + len(needle)
+        if feature is not None:
+            open_paren = pos + len(needle) - 1
+            close_paren = _match_delim(masked, open_paren, "(", ")")
+            pred = raw[open_paren : min(close_paren, len(raw))]
+            if "feature" not in pred or feature not in pred:
+                continue
+            j = close_paren
+        else:
+            j = from_
+        open_b = None
+        semi = None
+        while j < len(masked):
+            ch = masked[j]
+            if ch == "{":
+                open_b = j
+                break
+            if ch == ";":
+                semi = j
+                break
+            j += 1
+        if open_b is not None:
+            end = _match_delim(masked, open_b, "{", "}")
+        elif feature is not None and semi is not None:
+            end = semi
+        else:
+            continue
+        l0 = _line_of(masked, pos)
+        l1 = _line_of(masked, min(end, max(len(masked) - 1, 0)))
+        for ln in range(l0, min(l1, n_lines) + 1):
+            marks[ln] = True
+    return [marks[ln] for ln in range(1, n_lines + 1)]
+
+
+# --- lexer (port of lexer.rs) ---------------------------------------------
+
+OPS3 = ["..=", "<<=", ">>="]
+OPS2 = [
+    "::", "->", "=>", "..", "+=", "-=", "*=", "/=", "%=",
+    "==", "!=", "<=", ">=", "&&", "||", "<<", ">>",
+]
+
+
+def lex(masked):
+    """Tokenize a masked source: (text, line) pairs, 1-based lines."""
+    toks = []
+    i = 0
+    line = 1
+    n = len(masked)
+    while i < n:
+        c = masked[i]
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c in " \t\r":
+            i += 1
+        elif is_ident_char(c):
+            j = i
+            while j < n and is_ident_char(masked[j]):
+                j += 1
+            toks.append((masked[i:j], line))
+            i = j
+        else:
+            three = masked[i : i + 3]
+            two = masked[i : i + 2]
+            if three in OPS3:
+                toks.append((three, line))
+                i += 3
+            elif two in OPS2:
+                toks.append((two, line))
+                i += 2
+            else:
+                toks.append((c, line))
+                i += 1
+    return toks
+
+
+def tok_is_ident(text):
+    return bool(text) and is_ident_char(text[0]) and not text[0].isdigit()
+
+
+# --- item tree (port of items.rs) -----------------------------------------
+
+
+class FnItem:
+    __slots__ = ("name", "ctx", "mods", "sig_line", "body", "end_line",
+                 "is_test", "is_simd")
+
+
+class StructItem:
+    __slots__ = ("name", "line", "fields", "is_test")
+
+
+def _skip_angle(toks, i):
+    """toks[i] == '<': index just past the matching '>'. Fail-safe: on '{'
+    or ';' or exhaustion, give up and return i + 1 (callers re-scan)."""
+    depth = 0
+    j = i
+    n = len(toks)
+    while j < n:
+        t = toks[j][0]
+        if t == "<":
+            depth += 1
+        elif t == "<<":
+            depth += 2
+        elif t == ">":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+        elif t == ">>":
+            depth -= 2
+            if depth <= 0:
+                return j + 1
+        elif t in ("{", ";"):
+            return i + 1
+        j += 1
+    return i + 1
+
+
+def _match_brace_toks(toks, i):
+    """toks[i] == '{': index of the matching '}' (fail-safe: last token)."""
+    depth = 0
+    j = i
+    n = len(toks)
+    while j < n:
+        t = toks[j][0]
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return n - 1
+
+
+def _match_paren_toks(toks, i):
+    depth = 0
+    j = i
+    n = len(toks)
+    while j < n:
+        t = toks[j][0]
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return n - 1
+
+
+def _match_bracket_toks(toks, i):
+    depth = 0
+    j = i
+    n = len(toks)
+    while j < n:
+        t = toks[j][0]
+        if t == "[":
+            depth += 1
+        elif t == "]":
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return n - 1
+
+
+def parse_items(toks, scanned):
+    """One walker pass: fns (with impl/trait ctx + mod path), structs, and
+    the set of trait-declared method names (used for dynamic-dispatch
+    over-approximation in the call graph).
+
+    Fn bodies are consumed whole (nested item defs inside a body are
+    attributed to the enclosing fn — correct for reachability, since a
+    nested fn is only callable from its parent)."""
+    fns = []
+    structs = []
+    trait_methods = set()
+    scopes = []  # ("impl"|"trait"|"mod"|"block", name-or-None)
+    n = len(toks)
+    i = 0
+
+    def line_flag(flags, ln):
+        idx = ln - 1
+        return flags[idx] if 0 <= idx < len(flags) else False
+
+    while i < n:
+        t, ln = toks[i]
+        if t == "{":
+            scopes.append(("block", None))
+            i += 1
+        elif t == "}":
+            if scopes:
+                scopes.pop()
+            i += 1
+        elif t in ("impl", "trait"):
+            j = i + 1
+            if t == "trait":
+                # `trait Name` — supertrait bounds may follow; name first.
+                name = toks[j][0] if j < n and tok_is_ident(toks[j][0]) else None
+                while j < n and toks[j][0] not in ("{", ";"):
+                    if toks[j][0] == "<":
+                        j = _skip_angle(toks, j)
+                    else:
+                        j += 1
+            else:
+                if j < n and toks[j][0] == "<":
+                    j = _skip_angle(toks, j)
+                name = None
+                while j < n and toks[j][0] not in ("{", ";"):
+                    tj = toks[j][0]
+                    if tj == "<":
+                        j = _skip_angle(toks, j)
+                    elif tj == "for":
+                        name = None
+                        j += 1
+                    elif tok_is_ident(tj):
+                        name = tj
+                        j += 1
+                    else:
+                        j += 1
+            if j < n and toks[j][0] == "{":
+                scopes.append(("trait" if t == "trait" else "impl", name))
+                i = j + 1
+            else:
+                i = j + 1
+        elif t == "mod" and i + 1 < n and tok_is_ident(toks[i + 1][0]):
+            if i + 2 < n and toks[i + 2][0] == "{":
+                scopes.append(("mod", toks[i + 1][0]))
+                i += 3
+            else:
+                i += 2
+        elif t == "struct" and i + 1 < n and tok_is_ident(toks[i + 1][0]):
+            sname, sline = toks[i + 1]
+            j = i + 2
+            if j < n and toks[j][0] == "<":
+                j = _skip_angle(toks, j)
+            if j < n and toks[j][0] == "{":
+                close = _match_brace_toks(toks, j)
+                fields = []
+                k = j + 1
+                while k < close:
+                    tk = toks[k][0]
+                    if tk in ("(", "["):
+                        k = (_match_paren_toks if tk == "(" else _match_bracket_toks)(toks, k) + 1
+                        continue
+                    if tk == "{":
+                        k = _match_brace_toks(toks, k) + 1
+                        continue
+                    if (
+                        tok_is_ident(tk)
+                        and k + 1 < close
+                        and toks[k + 1][0] == ":"
+                        and (k == j + 1 or toks[k - 1][0] in (",", "{", ")") or toks[k - 1][0] == "pub")
+                    ):
+                        first_ty = toks[k + 2][0] if k + 2 < close else ""
+                        fields.append((tk, toks[k][1], first_ty))
+                        k += 2
+                        continue
+                    k += 1
+                st = StructItem()
+                st.name = sname
+                st.line = sline
+                st.fields = fields
+                st.is_test = line_flag(scanned.test_lines, sline)
+                structs.append(st)
+                i = close + 1
+            else:
+                # tuple / unit struct: skip to `;`
+                while j < n and toks[j][0] != ";":
+                    j += 1
+                i = j + 1
+        elif t == "fn" and i + 1 < n and tok_is_ident(toks[i + 1][0]):
+            name = toks[i + 1][0]
+            j = i + 2
+            if j < n and toks[j][0] == "<":
+                j = _skip_angle(toks, j)
+            while j < n and toks[j][0] != "(":
+                j += 1
+            j = _match_paren_toks(toks, j)
+            k = j + 1
+            while k < n and toks[k][0] not in ("{", ";"):
+                k += 1
+            in_trait = any(kind == "trait" for kind, _ in scopes)
+            if in_trait:
+                trait_methods.add(name)
+            if k >= n or toks[k][0] == ";":
+                i = k + 1
+                continue
+            close = _match_brace_toks(toks, k)
+            f = FnItem()
+            f.name = name
+            f.ctx = next(
+                (nm for kind, nm in reversed(scopes) if kind in ("impl", "trait")),
+                None,
+            )
+            f.mods = [nm for kind, nm in scopes if kind == "mod"]
+            f.sig_line = ln
+            f.body = (k + 1, close)  # token range, exclusive of braces
+            f.end_line = toks[close][1]
+            f.is_test = line_flag(scanned.test_lines, ln)
+            f.is_simd = line_flag(scanned.simd_lines, ln)
+            fns.append(f)
+            i = close + 1
+        else:
+            i += 1
+    return fns, structs, trait_methods
+
+
+# --- annotations ----------------------------------------------------------
+
+
+def lint_ok(scanned, line, rule):
+    """`// lint-ok(<rule>): <reason>` on the line or the line above."""
+    needle = "lint-ok(" + rule + ")"
+    for ln in (line, line - 1):
+        if needle in scanned.comments.get(ln, ""):
+            return True
+    return False
+
+
+class Sink:
+    """Finding sink with lint-ok suppression + counting."""
+
+    def __init__(self):
+        self.findings = []
+        self.suppressed = 0
+
+    def emit(self, scanned, rel, line, rule, msg, force_ok=False):
+        if force_ok or lint_ok(scanned, line, rule):
+            self.suppressed += 1
+            return
+        self.findings.append({"file": rel, "line": line, "rule": rule, "msg": msg})
+
+
+# --- per-file lints (ports of the PR-6/7 rules) ---------------------------
+
+ACCOUNTING_FIELDS = ["used_bytes", "cold_bytes", "outstanding"]
+FLAGGED_CASTS = ["u8", "u16", "u32", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"]
+CAST_SCOPE = ["rust/src/kvcache/", "rust/src/coordinator/", "rust/src/server/", "rust/src/config/"]
+PANIC_MACROS = ["panic!", "unreachable!", "todo!", "unimplemented!"]
+INTRINSIC_MARKERS = ["core::arch", "std::arch::x86_64", "std::arch::aarch64", "#[target_feature"]
+
+
+def word_positions(line, word):
+    out = []
+    from_ = 0
+    while True:
+        p = line.find(word, from_)
+        if p < 0:
+            return out
+        from_ = p + 1
+        pre_ok = not is_ident_char(word[0]) or p == 0 or not is_ident_char(line[p - 1])
+        end = p + len(word)
+        post_ok = (
+            not is_ident_char(word[-1]) or end >= len(line) or not is_ident_char(line[end])
+        )
+        if pre_ok and post_ok:
+            out.append(p)
+
+
+def next_non_space(line, from_):
+    for c in line[from_:]:
+        if not c.isspace():
+            return c
+    return None
+
+
+def in_test(s, line):
+    idx = line - 1
+    return s.test_lines[idx] if 0 <= idx < len(s.test_lines) else False
+
+
+def comment_on(s, line, needle):
+    return needle in s.comments.get(line, "")
+
+
+def fn_spans(s, name):
+    """1-based inclusive line spans of every `fn <name>` body (scan.rs)."""
+    masked = s.masked
+    spans = []
+    from_ = 0
+    while True:
+        pos = _find_from(masked, "fn ", from_)
+        if pos is None:
+            return spans
+        from_ = pos + 3
+        if pos > 0 and is_ident_char(masked[pos - 1]):
+            continue
+        j = pos + 3
+        while j < len(masked) and masked[j] == " ":
+            j += 1
+        id_start = j
+        while j < len(masked) and is_ident_char(masked[j]):
+            j += 1
+        if masked[id_start:j] != name:
+            continue
+        k = j
+        open_b = None
+        while k < len(masked):
+            if masked[k] == "{":
+                open_b = k
+                break
+            if masked[k] == ";":
+                break
+            k += 1
+        if open_b is None:
+            continue
+        close = _match_delim(masked, open_b, "{", "}")
+        spans.append((_line_of(masked, pos), _line_of(masked, close)))
+
+
+def lint_accounting_fields(rel, s, sink):
+    if rel.startswith("rust/src/kvcache/"):
+        return
+    for i, line in enumerate(s.lines):
+        for field in ACCOUNTING_FIELDS:
+            dotted = "." + field
+            for p in word_positions(line, dotted):
+                if next_non_space(line, p + len(dotted)) == "(":
+                    continue
+                sink.emit(
+                    s, rel, i + 1, "accounting-fields",
+                    "raw access to accounting field `%s` outside kvcache "
+                    "(use the accessor / counter API audited by verify_accounting)" % field,
+                )
+
+
+def lint_lossy_casts(rel, s, sink):
+    if not any(rel.startswith(p) for p in CAST_SCOPE):
+        return
+    for i, line in enumerate(s.lines):
+        ln = i + 1
+        if in_test(s, ln):
+            continue
+        for p in word_positions(line, "as"):
+            rest = line[p + 2 :].lstrip()
+            ty = ""
+            for c in rest:
+                if is_ident_char(c):
+                    ty += c
+                else:
+                    break
+            if ty not in FLAGGED_CASTS:
+                continue
+            if comment_on(s, ln, "cast-ok:"):
+                continue
+            sink.emit(
+                s, rel, ln, "lossy-casts",
+                "narrowing `as %s` in accounting path — use u64-native math, "
+                "`try_from`, or justify with `// cast-ok: <reason>`" % ty,
+            )
+
+
+def lint_safety_comments(rel, s, sink):
+    for i, line in enumerate(s.lines):
+        ln = i + 1
+        for p in word_positions(line, "unsafe"):
+            rest = line[p + len("unsafe") :].lstrip()
+            if not (rest.startswith("{") or rest.startswith("impl")):
+                continue
+            if comment_on(s, ln, "SAFETY:"):
+                continue
+            found = False
+            k = ln - 1
+            while k >= 1:
+                if comment_on(s, k, "SAFETY:"):
+                    found = True
+                    break
+                stripped = s.lines[k - 1].strip()
+                if stripped and not stripped.startswith("#["):
+                    if (
+                        stripped.endswith(";")
+                        or stripped.endswith("}")
+                        or stripped.endswith("{")
+                        or stripped.endswith(")")
+                    ):
+                        break
+                elif not stripped and k not in s.comments:
+                    break
+                k -= 1
+            if not found:
+                sink.emit(
+                    s, rel, ln, "safety-comments",
+                    "unsafe block/impl without a preceding `// SAFETY:` comment",
+                )
+
+
+def lint_hot_path_panics(rel, s, sink):
+    hot = [False] * len(s.lines)
+    if rel == "rust/src/coordinator/batcher.rs":
+        for i in range(len(hot)):
+            hot[i] = not in_test(s, i + 1)
+    if rel == "rust/src/coordinator/mod.rs":
+        for a, b in fn_spans(s, "pump"):
+            for ln in range(a, min(b, len(s.lines)) + 1):
+                hot[ln - 1] = True
+    for a, b in fn_spans(s, "step_fused"):
+        if in_test(s, a):
+            continue
+        for ln in range(a, min(b, len(s.lines)) + 1):
+            hot[ln - 1] = True
+    for i, line in enumerate(s.lines):
+        if not hot[i]:
+            continue
+        for meth in ("unwrap", "expect"):
+            dotted = "." + meth
+            for p in word_positions(line, dotted):
+                if next_non_space(line, p + len(dotted)) == "(":
+                    sink.emit(
+                        s, rel, i + 1, "hot-path-panics",
+                        "`.%s(..)` in the serving hot path — route the error "
+                        "to TokenEvent::Rejected / anyhow::Result instead" % meth,
+                    )
+        for mac in PANIC_MACROS:
+            bare = mac[:-1]
+            for p in word_positions(line, bare):
+                if line[p + len(bare) :].startswith("!"):
+                    sink.emit(
+                        s, rel, i + 1, "hot-path-panics",
+                        "`%s` in the serving hot path" % mac,
+                    )
+
+
+def lint_simd_gating(rel, s, sink):
+    any_intrinsics = False
+    for i, line in enumerate(s.lines):
+        marker = next((m for m in INTRINSIC_MARKERS if m in line), None)
+        if marker is None:
+            continue
+        any_intrinsics = True
+        if 0 <= i < len(s.simd_lines) and s.simd_lines[i]:
+            continue
+        sink.emit(
+            s, rel, i + 1, "simd-gating",
+            '`%s` outside a `#[cfg(.. feature = "simd" ..)]`-gated item — '
+            "scalar-only builds (--no-default-features, Miri) must not compile intrinsics"
+            % marker,
+        )
+    if any_intrinsics and "_feature_detected!" not in s.masked:
+        sink.emit(
+            s, rel, 1, "simd-gating",
+            "file uses arch intrinsics but contains no runtime `*_feature_detected!` "
+            "check — compiling an ISA arm must never imply executing it",
+        )
+
+
+# --- call graph (port of callgraph.rs) ------------------------------------
+
+HOT_ROOTS = (
+    ("step", "Batcher"),
+    ("step_fused", None),
+    ("decode", "ServingEngine"),
+)
+
+
+# Method names that collide with std-prelude methods: a `.name(` call on an
+# unknown receiver must NOT resolve intra-crate through these — `.clone()` on
+# a String would otherwise edge into any crate type's `clone`, and `.err()`
+# on a Result would edge into `Parser::err`. (Qualified `Type::name(..)`
+# calls still resolve normally.)
+METHOD_EDGE_DENY = {
+    "clone", "to_vec", "to_string", "to_owned", "collect", "expect",
+    "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "into",
+    "from", "try_from", "try_into", "default", "new", "len", "is_empty",
+    "iter", "iter_mut", "into_iter", "push", "pop", "insert", "remove",
+    "get", "get_mut", "contains", "contains_key", "map", "map_err",
+    "and_then", "or_else", "ok", "err", "ok_or", "ok_or_else", "as_ref",
+    "as_mut", "as_slice", "as_str", "parse", "min", "max", "abs", "clamp",
+    "fmt", "eq", "cmp", "partial_cmp", "hash", "next", "extend", "clear",
+    "drain", "take", "replace", "write", "read", "flush", "send", "recv",
+    "lock", "borrow", "borrow_mut", "join", "spawn", "wait", "drop",
+}
+
+
+def call_edges(toks, fn):
+    """(callee, kind, qualifier, line) call sites in the fn body.
+
+    kind: "free"      — bare `name(..)` (incl. `self::`/`crate::`/`super::`)
+          "qualified" — `Qual::name(..)` with `Self` mapped to the caller ctx
+          "method"    — `recv.name(..)`; qualifier is the receiver token
+    """
+    edges = []
+    start, end = fn.body
+    i = start
+    while i < end:
+        t, ln = toks[i]
+        if tok_is_ident(t):
+            k = i + 1
+            if k < end and toks[k][0] == "::" and k + 1 < end and toks[k + 1][0] == "<":
+                k = _skip_angle(toks, k + 1)
+            if k < end and toks[k][0] == "(":
+                prev = toks[i - 1][0] if i > 0 else ""
+                if prev == "fn":
+                    i += 1
+                    continue
+                if prev == ".":
+                    recv = toks[i - 2][0] if i >= 2 else ""
+                    edges.append((t, "method", recv, ln))
+                elif prev == "::" and i >= 2 and tok_is_ident(toks[i - 2][0]):
+                    q = toks[i - 2][0]
+                    if q == "Self" and fn.ctx:
+                        edges.append((t, "qualified", fn.ctx, ln))
+                    elif q in ("self", "crate", "super", "Self"):
+                        edges.append((t, "free", None, ln))
+                    else:
+                        edges.append((t, "qualified", q, ln))
+                else:
+                    edges.append((t, "free", None, ln))
+        i += 1
+    return edges
+
+
+def file_mod_path(rel):
+    """Module path segments a file contributes (rust/src/attn/mod.rs →
+    ["attn"], rust/src/coordinator/batcher.rs → ["coordinator", "batcher"]).
+    Fixture paths outside rust/src get their bare stem."""
+    parts = rel.replace("\\", "/").split("/")
+    if parts[:2] == ["rust", "src"]:
+        parts = parts[2:]
+    else:
+        parts = parts[-1:]
+    if parts and parts[-1].endswith(".rs"):
+        parts[-1] = parts[-1][: -len(".rs")]
+    if parts and parts[-1] in ("mod", "lib", "main"):
+        parts = parts[:-1]
+    return parts
+
+
+class CrateModel:
+    def __init__(self, files, aux, trait_methods, field_types, struct_names):
+        # files: list of dicts {rel, src, scanned, toks, fns, structs}
+        self.files = files
+        self.aux = aux
+        self.trait_methods = trait_methods  # names declared in any trait
+        self.field_types = field_types  # struct name -> {field -> first ty tok}
+        self.struct_names = struct_names
+
+    @staticmethod
+    def build(file_pairs, aux):
+        files = []
+        trait_methods = set()
+        field_types = {}
+        struct_names = set()
+        for rel, src in file_pairs:
+            s = scan(src)
+            toks = lex(s.masked)
+            fns, structs, traits = parse_items(toks, s)
+            mod_path = file_mod_path(rel)
+            for fn in fns:
+                fn.mods = mod_path + fn.mods
+            trait_methods |= traits
+            for st in structs:
+                struct_names.add(st.name)
+                field_types.setdefault(st.name, {}).update(
+                    {fname: fty for fname, _, fty in st.fields}
+                )
+            files.append(
+                {"rel": rel, "src": src, "scanned": s, "toks": toks,
+                 "fns": fns, "structs": structs}
+            )
+        return CrateModel(files, aux, trait_methods, field_types, struct_names)
+
+
+def fn_label(fn):
+    return (fn.ctx + "::" + fn.name) if fn.ctx else fn.name
+
+
+def reachable_from_hot_roots(model):
+    """{(file_idx, fn_idx): sorted-list-of-root-labels} over non-test fns."""
+    index = {}
+    nodes = []
+    for fi, f in enumerate(model.files):
+        for gi, fn in enumerate(f["fns"]):
+            if fn.is_test:
+                continue
+            nodes.append((fi, gi))
+            index.setdefault(fn.name, []).append((fi, gi))
+
+    def resolve(name, kind, qual, caller_ctx):
+        cands = index.get(name, [])
+        if kind == "qualified":
+            out = []
+            for fi, gi in cands:
+                fn = model.files[fi]["fns"][gi]
+                if fn.ctx == qual or qual in fn.mods:
+                    out.append((fi, gi))
+            return out
+        if kind == "free":
+            # Single-letter names are overwhelmingly closure/fn-pointer
+            # parameters (`f(lo, hi)`), not crate free fns — never resolve.
+            if len(name) == 1:
+                return []
+            return [
+                (fi, gi)
+                for fi, gi in cands
+                if model.files[fi]["fns"][gi].ctx is None
+            ]
+        # Method call. Resolution ladder, most precise first:
+        #   1. `self.name(..)` → the caller's own impl.
+        #   2. `self.field.name(..)` / `field.name(..)` where the caller's
+        #      struct declares `field: Ty` and `Ty` is a crate struct → Ty's
+        #      impl (precise even for std-colliding names like `insert`).
+        #   3. std-prelude collisions (METHOD_EDGE_DENY) → no edge.
+        #   4. trait-declared names → ALL same-named fns (dynamic dispatch:
+        #      over-approximation is the conservative answer).
+        #   5. otherwise → edge only if the name is crate-unique; an
+        #      ambiguous name would fan one `.load(..)` into every `load`.
+        if qual == "self" and caller_ctx is not None:
+            same = [
+                (fi, gi)
+                for fi, gi in cands
+                if model.files[fi]["fns"][gi].ctx == caller_ctx
+            ]
+            if same:
+                return same
+        recv_ty = model.field_types.get(caller_ctx or "", {}).get(qual or "")
+        if recv_ty in model.struct_names:
+            on_ty = [
+                (fi, gi)
+                for fi, gi in cands
+                if model.files[fi]["fns"][gi].ctx == recv_ty
+            ]
+            return on_ty
+        if name in METHOD_EDGE_DENY:
+            return []
+        if name in model.trait_methods:
+            return cands
+        return cands if len(cands) == 1 else []
+
+    edges_of = {}
+    for fi, gi in nodes:
+        f = model.files[fi]
+        fn = f["fns"][gi]
+        resolved = []
+        for name, kind, qual, ln in call_edges(f["toks"], fn):
+            if lint_ok(f["scanned"], ln, "hot-path-alloc"):
+                continue  # annotated call line: edge cut (dyn-dispatch false path)
+            resolved.extend(resolve(name, kind, qual, fn.ctx))
+        edges_of[(fi, gi)] = resolved
+
+    roots = []
+    for fi, gi in nodes:
+        fn = model.files[fi]["fns"][gi]
+        for rname, rctx in HOT_ROOTS:
+            if fn.name == rname and (rctx is None or fn.ctx == rctx):
+                roots.append((fi, gi))
+                break
+
+    reach = {}
+    for root in roots:
+        label = fn_label(model.files[root[0]]["fns"][root[1]])
+        seen = {root}
+        stack = [root]
+        while stack:
+            node = stack.pop()
+            reach.setdefault(node, set()).add(label)
+            for nxt in edges_of.get(node, []):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+    return {k: sorted(v) for k, v in reach.items()}
+
+
+# --- hot-path-alloc (lints.rs) --------------------------------------------
+
+ALLOC_TYPES = {"Vec", "VecDeque", "String", "Box", "HashMap", "HashSet",
+               "BTreeMap", "BTreeSet", "Rc", "Arc"}
+ALLOC_TYPE_METHODS = {"new", "with_capacity", "from"}
+ALLOC_MACROS = {"vec", "format"}
+ALLOC_METHODS = {"to_vec", "to_string", "to_owned", "clone", "collect"}
+ARENA_SUFFIXES = ("Scratch", "Arena")
+
+
+def lint_hot_path_alloc(model, sink):
+    reach = reachable_from_hot_roots(model)
+    for (fi, gi), roots in sorted(reach.items()):
+        f = model.files[fi]
+        fn = f["fns"][gi]
+        if fn.ctx and any(fn.ctx.endswith(sfx) for sfx in ARENA_SUFFIXES):
+            continue  # grow-only scratch arenas are the sanctioned allocator
+        s = f["scanned"]
+        fn_exempt = lint_ok(s, fn.sig_line, "hot-path-alloc")
+        toks = f["toks"]
+        start, end = fn.body
+        roots_str = ", ".join(roots)
+        i = start
+        while i < end:
+            t, ln = toks[i]
+            marker = None
+            if t in ALLOC_TYPES and i + 2 < end and toks[i + 1][0] == "::":
+                k = i + 2
+                if toks[k][0] == "<":
+                    k = _skip_angle(toks, k)
+                    if k < end and toks[k][0] == "::":
+                        k += 1
+                m = toks[k][0] if k < end else ""
+                methods = {"new"} if t in ("Rc", "Arc") else ALLOC_TYPE_METHODS
+                if m in methods:
+                    k2 = k + 1
+                    if k2 < end and toks[k2][0] == "::" and k2 + 1 < end and toks[k2 + 1][0] == "<":
+                        k2 = _skip_angle(toks, k2 + 1)
+                    if k2 < end and toks[k2][0] == "(":
+                        marker = "%s::%s" % (t, m)
+            elif t in ALLOC_MACROS and i + 1 < end and toks[i + 1][0] == "!":
+                marker = t + "!"
+            elif (
+                t in ALLOC_METHODS
+                and i > 0
+                and toks[i - 1][0] == "."
+            ):
+                k = i + 1
+                if k < end and toks[k][0] == "::" and k + 1 < end and toks[k + 1][0] == "<":
+                    k = _skip_angle(toks, k + 1)
+                if k < end and toks[k][0] == "(":
+                    marker = ".%s()" % t
+            if marker is not None:
+                sink.emit(
+                    s, f["rel"], ln, "hot-path-alloc",
+                    "allocating construct `%s` in `%s`, reachable from %s — the "
+                    "steady-state serving hot path must not allocate (grow-only "
+                    "scratch arenas excepted; annotate intentional cold paths with "
+                    "`// lint-ok(hot-path-alloc): <why>`)" % (marker, fn_label(fn), roots_str),
+                    force_ok=fn_exempt,
+                )
+            i += 1
+
+
+# --- unit-confusion (units.rs) --------------------------------------------
+
+UNIT_SUFFIXES = (("_bytes", "bytes"), ("_tokens", "tokens"),
+                 ("_pages", "pages"), ("_rows", "rows"))
+UNITS = {"bytes", "tokens", "pages", "rows"}
+# "ratio" marks `_per_`-named values (bytes_per_token, …): multiplying by a
+# ratio converts the unit (result treated as unit-free), and a ratio never
+# participates in a cross-unit conflict itself.
+# Blessed converters: the value each returns carries its true unit even when
+# the name's suffix says otherwise (`bytes_for_tokens` RETURNS bytes).
+UNIT_CONVERTERS = {
+    "bytes_for_tokens": "bytes",
+    "token_bytes": "bytes",
+    "cache_bytes_per_token": "ratio",
+    "bytes_per_token": "ratio",
+    "bytes_per_token_for": "ratio",
+}
+ADD_OPS = {"+", "-", "+=", "-="}
+CMP_OPS = {"<", ">", "<=", ">=", "==", "!="}
+UNARY_PREFIX = {"&", "mut", "*", "-", "+", "!"}
+MUL_OPS = {"*", "/", "%"}
+
+
+def suffix_unit(name):
+    if "_per_" in name:
+        return "ratio"
+    for suf, unit in UNIT_SUFFIXES:
+        if name.endswith(suf) or name == suf[1:]:
+            return unit
+    return None
+
+
+def unit_for(name, env):
+    if name in UNIT_CONVERTERS:
+        return UNIT_CONVERTERS[name]
+    if name in env:
+        return env[name]
+    return suffix_unit(name)
+
+
+class UnitScanner:
+    """Forward expression scanner over a fn body's tokens. Flags `+`/`-`
+    and comparisons whose two terms carry different unit suffixes."""
+
+    def __init__(self, toks, end, env, on_conflict):
+        self.toks = toks
+        self.end = end
+        self.env = env
+        self.on_conflict = on_conflict
+
+    def tok(self, i):
+        return self.toks[i][0] if i < self.end else ""
+
+    def scan_region(self, i, end):
+        saved = self.end
+        self.end = min(end, saved)
+        while i < self.end:
+            if self.tok(i) == "let":
+                i = self.parse_let(i)
+                continue
+            unit, j = self.parse_expr(i)
+            i = j if j > i else i + 1
+        self.end = saved
+
+    def parse_let(self, i):
+        # `let [mut] NAME [: ty] = expr` — bind NAME's unit in env.
+        j = i + 1
+        if self.tok(j) == "mut":
+            j += 1
+        if not tok_is_ident(self.tok(j)):
+            return i + 1
+        name = self.tok(j)
+        j += 1
+        # scan to `=` (stop at `;`); skip angle groups in type annotations
+        while j < self.end and self.tok(j) not in ("=", ";"):
+            if self.tok(j) == "<":
+                j = _skip_angle(self.toks, j)
+            else:
+                j += 1
+        if self.tok(j) != "=":
+            self.env[name] = suffix_unit(name)
+            return j + 1
+        unit, k = self.parse_expr(j + 1)
+        self.env[name] = suffix_unit(name) or unit
+        return k if k > j + 1 else j + 2
+
+    def parse_expr(self, i):
+        lu, i = self.parse_term(i)
+        while True:
+            op = self.tok(i)
+            if op in ADD_OPS or op in CMP_OPS:
+                line = self.toks[i][1] if i < self.end else 0
+                ru, j = self.parse_term(i + 1)
+                if j == i + 1:
+                    return lu, i
+                if lu in UNITS and ru in UNITS and lu != ru:
+                    self.on_conflict(line, lu, op, ru)
+                lu = None if op in CMP_OPS else (lu or ru)
+                i = j
+            else:
+                return lu, i
+
+    def parse_term(self, i):
+        u, i = self.parse_factor(i)
+        while True:
+            op = self.tok(i)
+            if op in MUL_OPS:
+                u2, j = self.parse_factor(i + 1)
+                if j == i + 1:
+                    return u, i
+                if op == "*":
+                    if u == "ratio" or u2 == "ratio":
+                        u = None  # ratio factor converts the unit
+                    elif u is not None and u2 is not None:
+                        u = None  # mixed-unit product: dimensionally new
+                    elif u2 is not None:
+                        u = u2
+                else:  # / %
+                    if u2 is not None:
+                        u = None  # unitful divisor: result is a ratio
+                i = j
+            else:
+                return u, i
+
+    def parse_factor(self, i):
+        while self.tok(i) in UNARY_PREFIX:
+            i += 1
+        t = self.tok(i)
+        if t == "(":
+            close = _match_paren_toks(self.toks, i)
+            inner, _ = self.parse_expr(i + 1)
+            self.scan_rest_of_group(i + 1, close)
+            return self.postfix(inner, close + 1, True)
+        if tok_is_ident(t):
+            return self.chain(i)
+        if t and t[0].isdigit():
+            return self.postfix(None, i + 1, False)
+        return None, i
+
+    def scan_rest_of_group(self, start, close):
+        # After taking the group's leading expr for a unit, still walk the
+        # remainder (later args, closure bodies) for nested conflicts.
+        sub = UnitScanner(self.toks, close, self.env, self.on_conflict)
+        sub.scan_region(start, close)
+
+    def chain(self, i):
+        last = self.tok(i)
+        i += 1
+        return self.postfix_chain(last, i)
+
+    def postfix_chain(self, last, i):
+        is_call = False
+        while True:
+            t = self.tok(i)
+            if t == "::" and tok_is_ident(self.tok(i + 1)):
+                last = self.tok(i + 1)
+                i += 2
+            elif t == "::" and self.tok(i + 1) == "<":
+                i = _skip_angle(self.toks, i + 1)
+            elif t == ".":
+                nxt = self.tok(i + 1)
+                if tok_is_ident(nxt):
+                    last = nxt
+                    i += 2
+                elif nxt and nxt[0].isdigit():
+                    i += 2
+                else:
+                    break
+            elif t == "(":
+                close = _match_paren_toks(self.toks, i)
+                self.scan_rest_of_group(i + 1, close)
+                is_call = True
+                i = close + 1
+            elif t == "[":
+                close = _match_bracket_toks(self.toks, i)
+                self.scan_rest_of_group(i + 1, close)
+                i = close + 1
+            elif t == "?":
+                i += 1
+            elif t == "as":
+                # keep the operand's unit across `x as u64`
+                i += 1
+                while self.tok(i) in ("&", "mut"):
+                    i += 1
+                if tok_is_ident(self.tok(i)):
+                    i += 1
+                    while self.tok(i) == "::" and tok_is_ident(self.tok(i + 1)):
+                        i += 2
+                    if self.tok(i) == "<":
+                        i = _skip_angle(self.toks, i)
+            else:
+                break
+        return unit_for(last, self.env), i
+
+    def postfix(self, unit, i, keep_unit):
+        # Non-ident primaries only take `.0` / `?` / `as` postfix.
+        while True:
+            t = self.tok(i)
+            if t == "." and self.tok(i + 1) and self.tok(i + 1)[0].isdigit():
+                i += 2
+            elif t == "?":
+                i += 1
+            elif t == "as":
+                i += 1
+                if tok_is_ident(self.tok(i)):
+                    i += 1
+            else:
+                break
+        return (unit if keep_unit else None), i
+
+
+def lint_unit_confusion(model, sink):
+    for f in model.files:
+        s = f["scanned"]
+        toks = f["toks"]
+        for fn in f["fns"]:
+            if fn.is_test:
+                continue
+            env = {}
+            conflicts = []
+
+            def on_conflict(line, lu, op, ru):
+                conflicts.append((line, lu, op, ru))
+
+            sc = UnitScanner(toks, fn.body[1], env, on_conflict)
+            sc.scan_region(fn.body[0], fn.body[1])
+            for line, lu, op, ru in conflicts:
+                sink.emit(
+                    s, f["rel"], line, "unit-confusion",
+                    "cross-unit arithmetic: `%s` %s `%s` — convert explicitly "
+                    "(bytes_for_tokens / token_bytes / cache_bytes_per_token) or "
+                    "annotate `// lint-ok(unit-confusion): <why>`" % (lu, op, ru),
+                )
+
+
+# --- sendptr-escape (lints.rs) --------------------------------------------
+
+SENDPTR_HOME = "rust/src/util/threadpool.rs"
+DISJOINT_IDIOMS = {"parallel_for", "chunks", "chunks_mut", "chunks_exact",
+                   "chunks_exact_mut", "split_at", "split_at_mut"}
+
+
+def ident_set(text):
+    return {t for t, _ in lex(scan(text).masked) if tok_is_ident(t)}
+
+
+def lint_sendptr_escape(model, sink):
+    miri_idents = ident_set(model.aux.get(AUX_MIRI, ""))
+    for f in model.files:
+        if f["rel"] == SENDPTR_HOME:
+            continue
+        toks = f["toks"]
+        s = f["scanned"]
+        for i, (t, ln) in enumerate(toks):
+            if t != "SendPtr" or i + 1 >= len(toks) or toks[i + 1][0] != "(":
+                continue
+            fn = next(
+                (g for g in f["fns"] if g.body[0] <= i < g.body[1]), None
+            )
+            if fn is None:
+                sink.emit(
+                    s, f["rel"], ln, "sendptr-escape",
+                    "`SendPtr` constructed outside any function body — disjoint "
+                    "write ranges cannot be derived statically here",
+                )
+                continue
+            if fn.is_test:
+                continue
+            start, end = fn.body
+            body_idents = {toks[k][0] for k in range(start, end)}
+            if not (body_idents & DISJOINT_IDIOMS):
+                sink.emit(
+                    s, f["rel"], ln, "sendptr-escape",
+                    "`SendPtr` constructed in `%s`, which derives no disjoint "
+                    "ranges (no parallel_for / chunks / split_at idiom in the "
+                    "body) — the Send/Sync contract requires provably disjoint "
+                    "writes" % fn_label(fn),
+                )
+            if fn.name not in miri_idents:
+                sink.emit(
+                    s, f["rel"], ln, "sendptr-escape",
+                    "`SendPtr` constructed in `%s`, but no test in %s names that "
+                    "function — every SendPtr kernel must run under the Miri lane"
+                    % (fn_label(fn), AUX_MIRI),
+                )
+
+
+# --- dispatch-parity-drift (lints.rs) -------------------------------------
+
+
+def design_section(design, header_prefix):
+    """Lines of the DESIGN.md section whose heading starts with the prefix,
+    through the next heading of equal-or-higher level."""
+    out = []
+    collecting = False
+    for line in design.split("\n"):
+        if collecting and (line.startswith("### ") or line.startswith("## ")):
+            break
+        if line.startswith(header_prefix):
+            collecting = True
+        if collecting:
+            out.append(line)
+    return "\n".join(out)
+
+
+def contains_ident(text, name):
+    from_ = 0
+    while True:
+        p = text.find(name, from_)
+        if p < 0:
+            return False
+        from_ = p + 1
+        pre = text[p - 1] if p > 0 else " "
+        post = text[p + len(name)] if p + len(name) < len(text) else " "
+        if not is_ident_char(pre) and not is_ident_char(post):
+            return True
+
+
+def lint_dispatch_parity(model, sink):
+    parity_idents = ident_set(model.aux.get(AUX_PARITY, ""))
+    design_5e = design_section(model.aux.get(AUX_DESIGN, ""), "### §5e")
+    for f in model.files:
+        for st in f["structs"]:
+            if st.name != "KernelDispatch" or st.is_test:
+                continue
+            s = f["scanned"]
+            fns = f["fns"]
+            toks = f["toks"]
+            for fname, fline, first_ty in st.fields:
+                if first_ty != "fn":
+                    continue
+                scalar_ok = any(
+                    g.name == fname and "scalar" in g.mods for g in fns
+                )
+                simd_ok = any(g.name == fname and g.is_simd for g in fns)
+                test_named = any(
+                    t == fname and in_test(s, ln) for t, ln in toks
+                )
+                parity_ok = fname in parity_idents or test_named
+                design_ok = contains_ident(design_5e, fname)
+                base = "`KernelDispatch::%s`" % fname
+                if not scalar_ok:
+                    sink.emit(
+                        s, f["rel"], fline, "dispatch-parity-drift",
+                        base + " has no scalar arm (`fn %s` in `mod scalar`) — the "
+                        "scalar tier is the bit-exact oracle every arm is judged "
+                        "against" % fname,
+                    )
+                if not simd_ok:
+                    sink.emit(
+                        s, f["rel"], fline, "dispatch-parity-drift",
+                        base + " has no feature-gated SIMD arm (`fn %s` under a "
+                        '`#[cfg(.. feature = "simd" ..)]` item)' % fname,
+                    )
+                if not parity_ok:
+                    sink.emit(
+                        s, f["rel"], fline, "dispatch-parity-drift",
+                        base + " is not named by any parity test (%s or a "
+                        "`#[cfg(test)]` item in the defining file)" % AUX_PARITY,
+                    )
+                if not design_ok:
+                    sink.emit(
+                        s, f["rel"], fline, "dispatch-parity-drift",
+                        base + " has no DESIGN.md §5e parity-table row naming it",
+                    )
+
+
+# --- crate driver ---------------------------------------------------------
+
+
+def lint_crate(file_pairs, aux):
+    """All nine lints over a set of (rel, src) files + aux artifacts.
+    Returns (findings sorted by (file, line, rule), suppressed_count)."""
+    model = CrateModel.build(file_pairs, aux)
+    sink = Sink()
+    for f in model.files:
+        rel, s = f["rel"], f["scanned"]
+        lint_accounting_fields(rel, s, sink)
+        lint_lossy_casts(rel, s, sink)
+        lint_safety_comments(rel, s, sink)
+        lint_hot_path_panics(rel, s, sink)
+        lint_simd_gating(rel, s, sink)
+    lint_hot_path_alloc(model, sink)
+    lint_unit_confusion(model, sink)
+    lint_sendptr_escape(model, sink)
+    lint_dispatch_parity(model, sink)
+    sink.findings.sort(key=lambda x: (x["file"], x["line"], x["rule"], x["msg"]))
+    return sink.findings, sink.suppressed
+
+
+def rust_files(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if name.endswith(".rs"):
+                out.append(os.path.join(dirpath, name))
+    return out
+
+
+def read_aux_from_repo():
+    aux = {}
+    for rel in AUX_PATHS:
+        path = os.path.join(REPO, rel)
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as fh:
+                aux[rel] = fh.read()
+    return aux
+
+
+def cmd_lint(fmt):
+    files = []
+    for path in rust_files(os.path.join(REPO, "rust", "src")):
+        rel = os.path.relpath(path, REPO).replace("\\", "/")
+        with open(path, encoding="utf-8") as fh:
+            files.append((rel, fh.read()))
+    if not files:
+        print("lint_mirror: no Rust sources found", file=sys.stderr)
+        return 1
+    findings, suppressed = lint_crate(files, read_aux_from_repo())
+    if fmt == "json":
+        print(json.dumps(
+            {"findings": findings, "suppressed": suppressed, "files": len(files)},
+            indent=2, sort_keys=True,
+        ))
+    elif fmt == "sarif":
+        print(json.dumps(sarif_report(findings), indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print("%s:%d: [%s] %s" % (f["file"], f["line"], f["rule"], f["msg"]))
+        if findings:
+            print("lint_mirror: %d finding(s), %d suppressed by lint-ok"
+                  % (len(findings), suppressed), file=sys.stderr)
+        else:
+            print("lint_mirror: %d files clean (%d finding(s) suppressed by lint-ok)"
+                  % (len(files), suppressed))
+    return 1 if findings else 0
+
+
+def sarif_report(findings):
+    return {
+        "$schema": "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "kqsvd-xtask-lint",
+                        "informationUri": "https://example.invalid/kqsvd/DESIGN.md",
+                        "rules": [{"id": r} for r in RULES],
+                    }
+                },
+                "results": [
+                    {
+                        "ruleId": f["rule"],
+                        "level": "error",
+                        "message": {"text": f["msg"]},
+                        "locations": [
+                            {
+                                "physicalLocation": {
+                                    "artifactLocation": {"uri": f["file"]},
+                                    "region": {"startLine": f["line"]},
+                                }
+                            }
+                        ],
+                    }
+                    for f in findings
+                ],
+            }
+        ],
+    }
+
+
+# --- fixtures -------------------------------------------------------------
+
+SECTION_PREFIX = "//=== file: "
+
+
+def split_fixture(text):
+    """(main_text, extra_files, aux) — sections split on `//=== file:` lines."""
+    lines = text.split("\n")
+    sections = []  # (path-or-None, [lines])
+    cur_path = None
+    cur = []
+    for line in lines:
+        if line.startswith(SECTION_PREFIX):
+            sections.append((cur_path, cur))
+            cur_path = line[len(SECTION_PREFIX) :].strip()
+            cur = []
+        else:
+            cur.append(line)
+    sections.append((cur_path, cur))
+    main = "\n".join(sections[0][1])
+    extra = []
+    aux = {}
+    for path, body_lines in sections[1:]:
+        body = "\n".join(body_lines)
+        if path in AUX_PATHS:
+            aux[path] = body
+        else:
+            extra.append((path, body))
+    return main, extra, aux
+
+
+def fixture_headers(main):
+    lint_as = None
+    expect = None
+    for line in main.split("\n")[:10]:
+        if line.startswith("// lint-as:"):
+            lint_as = line[len("// lint-as:") :].strip()
+        if line.startswith("// expect-lint:"):
+            expect = line[len("// expect-lint:") :].strip()
+    return lint_as, expect
+
+
+def run_fixture(text):
+    """Returns (findings, expect) or raises ValueError."""
+    main, extra, aux = split_fixture(text)
+    lint_as, expect = fixture_headers(main)
+    if lint_as is None or expect is None:
+        raise ValueError("missing `// lint-as:` / `// expect-lint:` headers")
+    if expect != "none" and expect not in RULES:
+        raise ValueError("unknown rule `%s` in expect-lint header" % expect)
+    files = [(lint_as, main)] + extra
+    findings, _ = lint_crate(files, aux)
+    return findings, expect
+
+
+def registration_selfcheck():
+    """Every rule id must appear in the fixture corpus, CI, and DESIGN §9."""
+    errors = []
+    fdir = os.path.join(REPO, "xtask", "fixtures")
+    expects = []
+    for path in rust_files(fdir):
+        with open(path, encoding="utf-8") as fh:
+            main, _, _ = split_fixture(fh.read())
+        _, expect = fixture_headers(main)
+        if expect:
+            expects.append(expect)
+    ci = ""
+    ci_path = os.path.join(REPO, ".github", "workflows", "ci.yml")
+    if os.path.exists(ci_path):
+        with open(ci_path, encoding="utf-8") as fh:
+            ci = fh.read()
+    design = ""
+    d_path = os.path.join(REPO, "DESIGN.md")
+    if os.path.exists(d_path):
+        with open(d_path, encoding="utf-8") as fh:
+            design = fh.read()
+    design_9 = design_section(design, "## §9")
+    for rule in RULES:
+        if rule not in expects:
+            errors.append("rule `%s` has no fixture (expect-lint header)" % rule)
+        if rule not in ci:
+            errors.append("rule `%s` not named in .github/workflows/ci.yml" % rule)
+        if rule not in design_9:
+            errors.append("rule `%s` not documented in DESIGN.md §9" % rule)
+    if "none" not in expects:
+        errors.append("no clean control fixture (expect-lint: none)")
+    return errors
+
+
+def cmd_fixtures(emit):
+    fdir = os.path.join(REPO, "xtask", "fixtures")
+    paths = rust_files(fdir)
+    if not paths:
+        print("lint_mirror fixtures: none found under %s" % fdir, file=sys.stderr)
+        return 1
+    failed = 0
+    for path in paths:
+        name = os.path.basename(path)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        try:
+            findings, expect = run_fixture(text)
+        except ValueError as e:
+            print("fixture %s: FAILED — %s" % (name, e), file=sys.stderr)
+            failed += 1
+            continue
+        if emit:
+            for f in findings:
+                print("%s|%s|%d|%s" % (name, f["file"], f["line"], f["rule"]))
+            continue
+        if expect == "none":
+            if findings:
+                f0 = findings[0]
+                print(
+                    "fixture %s: FAILED — clean control tripped %d finding(s): "
+                    "first = %s:%d [%s]" % (name, len(findings), f0["file"], f0["line"], f0["rule"]),
+                    file=sys.stderr,
+                )
+                failed += 1
+            else:
+                print("fixture %s: ok" % name)
+        elif any(f["rule"] == expect for f in findings):
+            print("fixture %s: ok" % name)
+        else:
+            print(
+                "fixture %s: FAILED — expected a `%s` finding but got %s"
+                % (name, expect, sorted({f["rule"] for f in findings})),
+                file=sys.stderr,
+            )
+            failed += 1
+    if emit:
+        return 0
+    for err in registration_selfcheck():
+        print("registration self-check: FAILED — %s" % err, file=sys.stderr)
+        failed += 1
+    if failed == 0:
+        print("lint_mirror fixtures: %d fixture(s) verified; registration "
+              "self-check passed (%d rules)" % (len(paths), len(RULES)))
+        return 0
+    print("lint_mirror fixtures: %d failure(s)" % failed, file=sys.stderr)
+    return 1
+
+
+def main(argv):
+    args = list(argv[1:])
+    cmd = args.pop(0) if args and not args[0].startswith("-") else "lint"
+    fmt = "human"
+    emit = False
+    while args:
+        a = args.pop(0)
+        if a == "--format" and args:
+            fmt = args.pop(0)
+        elif a.startswith("--format="):
+            fmt = a.split("=", 1)[1]
+        elif a == "--emit-findings":
+            emit = True
+        else:
+            print("usage: lint_mirror.py <lint|fixtures> [--format human|json|sarif] "
+                  "[--emit-findings]", file=sys.stderr)
+            return 2
+    if cmd == "lint":
+        return cmd_lint(fmt)
+    if cmd == "fixtures":
+        return cmd_fixtures(emit)
+    print("unknown command `%s`" % cmd, file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,11 @@
+// lint-as: rust/src/linalg/fixture_dispatch.rs
+// expect-lint: dispatch-parity-drift
+//
+// Negative fixture: a `KernelDispatch` fn-pointer field with no scalar
+// arm, no gated SIMD arm, no parity test, and no DESIGN §5e row — the
+// four ways a new kernel silently dodges the parity harness. This file is
+// lint fodder, never compiled.
+
+pub struct KernelDispatch {
+    pub gemv_f32: fn(&[f32], &[f32], &mut [f32]),
+}

@@ -1,0 +1,41 @@
+// lint-as: rust/src/linalg/fixture_dispatch_ok.rs
+// expect-lint: none
+//
+// Near-miss control for dispatch-parity-drift: the same fn-pointer field
+// as dispatch_drift.rs, but with all four artifacts present — a scalar
+// arm, a feature-gated SIMD arm, a parity test (aux section below), and a
+// DESIGN §5e table row (aux section below). Must produce zero findings.
+
+pub struct KernelDispatch {
+    pub gemv_f32: fn(&[f32], &[f32], &mut [f32]),
+}
+
+mod scalar {
+    pub fn gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+        for (row, out) in y.iter_mut().enumerate() {
+            *out = dot_row(a, x, row);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    pub fn gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+        super::scalar::gemv_f32(a, x, y);
+    }
+}
+
+//=== file: rust/tests/kernel_parity_test.rs
+#[test]
+fn gemv_f32_parity_scalar_vs_simd() {
+    assert_parity(gemv_f32);
+}
+
+//=== file: DESIGN.md
+## §5 kernels
+
+### §5e parity table
+
+| kernel | oracle |
+| --- | --- |
+| `gemv_f32` scalar vs simd | bitwise |

@@ -1,0 +1,22 @@
+// lint-as: rust/src/coordinator/batcher.rs
+// expect-lint: hot-path-alloc
+//
+// Negative fixture: a helper two call-graph hops below `Batcher::step`
+// allocates a fresh Vec every step. Line-oriented scanning cannot see
+// this — only reachability can. This file is lint fodder, never compiled.
+
+impl Batcher {
+    fn step(&mut self) -> usize {
+        self.plan_round()
+    }
+
+    fn plan_round(&mut self) -> usize {
+        gather_slots(self.max_batch)
+    }
+}
+
+fn gather_slots(max_batch: usize) -> usize {
+    let mut slots = Vec::with_capacity(max_batch);
+    slots.push(0usize);
+    slots.len()
+}

@@ -1,0 +1,31 @@
+// lint-as: rust/src/coordinator/batcher.rs
+// expect-lint: none
+//
+// Near-miss control for hot-path-alloc: the same reachable-from-step shape
+// as hotpath_alloc.rs, but the allocation lives in a `*Scratch` type (the
+// sanctioned grow-only arena), resolved through field-type inference on
+// `self.scratch`. Must produce zero findings.
+
+struct Batcher {
+    scratch: DecodeScratch,
+    max_batch: usize,
+}
+
+struct DecodeScratch {
+    slots: Vec<usize>,
+}
+
+impl Batcher {
+    fn step(&mut self) -> usize {
+        self.scratch.ensure(self.max_batch);
+        self.max_batch
+    }
+}
+
+impl DecodeScratch {
+    fn ensure(&mut self, max_batch: usize) {
+        if self.slots.capacity() < max_batch {
+            self.slots = Vec::with_capacity(max_batch);
+        }
+    }
+}

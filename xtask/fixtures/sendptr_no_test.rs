@@ -1,0 +1,12 @@
+// lint-as: rust/src/attn/parallel.rs
+// expect-lint: sendptr-escape
+//
+// Negative fixture: a `SendPtr` minted in a function that derives no
+// disjoint ranges (no parallel_for / chunks / split_at idiom) and that no
+// miri_kernels.rs test names. Both halves of the SendPtr contract are
+// broken. This file is lint fodder, never compiled.
+
+fn scatter_rows(out: &mut [f32], stride: usize) {
+    let base = SendPtr(out.as_mut_ptr());
+    spawn_workers(base, stride);
+}

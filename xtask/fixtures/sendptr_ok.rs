@@ -1,0 +1,20 @@
+// lint-as: rust/src/attn/parallel_ok.rs
+// expect-lint: none
+//
+// Near-miss control for sendptr-escape: the SendPtr sits in a fn that
+// derives disjoint ranges via `split_at_mut`, and the aux section below
+// stands in for rust/tests/miri_kernels.rs with a test naming the fn.
+// Must produce zero findings.
+
+fn scatter_rows(out: &mut [f32], mid: usize) {
+    let (lo, hi) = out.split_at_mut(mid);
+    let base = SendPtr(lo.as_mut_ptr());
+    spawn_workers(base, hi.len());
+}
+
+//=== file: rust/tests/miri_kernels.rs
+#[test]
+fn miri_scatter_rows_disjoint() {
+    let mut out = [0.0f32; 8];
+    scatter_rows(&mut out, 4);
+}

@@ -1,0 +1,12 @@
+// lint-as: rust/src/kvcache/fixture_units.rs
+// expect-lint: unit-confusion
+//
+// Negative fixture: adding a byte count to a token count compiles fine
+// (both u64) and is always a bug. The unit flows through a let-binding
+// before the bad add, so suffix-only line scanning would miss it. This
+// file is lint fodder, never compiled.
+
+pub fn admission_headroom(pool_budget_bytes: u64, prompt_tokens: u64) -> u64 {
+    let budget = pool_budget_bytes;
+    budget + prompt_tokens
+}

@@ -1,0 +1,17 @@
+// lint-as: rust/src/kvcache/fixture_units_ok.rs
+// expect-lint: none
+//
+// Near-miss control for unit-confusion: the same byte/token mix as
+// unit_confusion.rs, but routed through the blessed converter and a
+// `_per_` ratio factor — both of which change the unit legitimately.
+// Must produce zero findings.
+
+pub fn admission_headroom(cfg: &ModelConfig, pool_budget_bytes: u64, prompt_tokens: u64) -> u64 {
+    let need_bytes = cfg.bytes_for_tokens(prompt_tokens);
+    pool_budget_bytes - need_bytes
+}
+
+pub fn projected_use(bytes_per_token: u64, prompt_tokens: u64, pool_budget_bytes: u64) -> bool {
+    let projected = bytes_per_token * prompt_tokens;
+    projected <= pool_budget_bytes
+}

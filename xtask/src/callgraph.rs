@@ -1,0 +1,464 @@
+//! Intra-crate call graph and hot-root reachability.
+//!
+//! The crate model pools every analyzed file's item tree plus the
+//! cross-artifact aux inputs (miri test list, parity test list, DESIGN.md).
+//! Call edges are extracted per fn body and resolved through a precision
+//! ladder (see [`reachable_from_hot_roots`]); reachability is a plain BFS
+//! from the serving hot roots (`Batcher::step`, any `step_fused`,
+//! `ServingEngine::decode`).
+//!
+//! Resolution is deliberately heuristic — no type inference, no trait
+//! solving. The ladder is tuned so that *imprecision over-approximates*
+//! (dynamic dispatch fans out to every same-named fn) except where a
+//! std-prelude name collision would drown the lint in false edges
+//! (`METHOD_EDGE_DENY`), where the fallback is no edge and the per-file
+//! lints still cover the callee body if it is independently reachable.
+//!
+//! Keep in lockstep with the `callgraph` section of
+//! `tools/lint_mirror.py`.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::items::{file_mod_path, parse_items, FnItem, StructItem};
+use crate::lexer::{lex, skip_angle, tok_is_ident, Tok};
+use crate::lints::lint_ok;
+use crate::scan::{scan, Scanned};
+
+/// Cross-artifact aux inputs consumed by the whole-program lints. In repo
+/// mode they are read from disk; in fixture mode a `//=== file: <path>`
+/// section with one of these paths overrides them (absent = empty).
+pub const AUX_MIRI: &str = "rust/tests/miri_kernels.rs";
+pub const AUX_PARITY: &str = "rust/tests/kernel_parity_test.rs";
+pub const AUX_DESIGN: &str = "DESIGN.md";
+pub const AUX_PATHS: [&str; 3] = [AUX_MIRI, AUX_PARITY, AUX_DESIGN];
+
+/// The serving hot roots: (fn name, required impl ctx or None for any).
+pub const HOT_ROOTS: [(&str, Option<&str>); 3] = [
+    ("step", Some("Batcher")),
+    ("step_fused", None),
+    ("decode", Some("ServingEngine")),
+];
+
+/// Method names that collide with std-prelude methods: a `.name(..)` call
+/// on an unknown receiver must NOT resolve intra-crate through these —
+/// `.clone()` on a String would otherwise edge into any crate type's
+/// `clone`, and `.err()` on a Result would edge into `Parser::err`.
+/// (Qualified `Type::name(..)` calls still resolve normally.)
+const METHOD_EDGE_DENY: [&str; 69] = [
+    "clone", "to_vec", "to_string", "to_owned", "collect", "expect", "unwrap", "unwrap_or",
+    "unwrap_or_else", "unwrap_or_default", "into", "from", "try_from", "try_into", "default",
+    "new", "len", "is_empty", "iter", "iter_mut", "into_iter", "push", "pop", "insert", "remove",
+    "get", "get_mut", "contains", "contains_key", "map", "map_err", "and_then", "or_else", "ok",
+    "err", "ok_or", "ok_or_else", "as_ref", "as_mut", "as_slice", "as_str", "parse", "min",
+    "max", "abs", "clamp", "fmt", "eq", "cmp", "partial_cmp", "hash", "next", "extend", "clear",
+    "drain", "take", "replace", "write", "read", "flush", "send", "recv", "lock", "borrow",
+    "borrow_mut", "join", "spawn", "wait", "drop",
+];
+
+fn method_edge_denied(name: &str) -> bool {
+    METHOD_EDGE_DENY.contains(&name)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    Free,
+    Qualified,
+    Method,
+}
+
+#[derive(Debug, Clone)]
+pub struct CallEdge {
+    pub name: String,
+    pub kind: CallKind,
+    /// Qualifier: the `Qual` of `Qual::name(..)` (with `Self` mapped to the
+    /// caller's ctx) or the receiver token of `recv.name(..)`.
+    pub qual: Option<String>,
+    pub line: usize,
+}
+
+/// One analyzed file: scan output, token stream, and item tree.
+pub struct FileModel {
+    pub rel: String,
+    pub scanned: Scanned,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnItem>,
+    pub structs: Vec<StructItem>,
+}
+
+/// The whole-crate view the whole-program lints run against.
+pub struct CrateModel {
+    pub files: Vec<FileModel>,
+    pub aux: HashMap<String, String>,
+    /// Names declared in any trait (dynamic-dispatch over-approximation).
+    pub trait_methods: HashSet<String>,
+    /// struct name -> field name -> first type token.
+    pub field_types: HashMap<String, HashMap<String, String>>,
+    pub struct_names: HashSet<String>,
+}
+
+impl CrateModel {
+    pub fn build(file_pairs: &[(String, String)], aux: HashMap<String, String>) -> CrateModel {
+        let mut files = Vec::new();
+        let mut trait_methods = HashSet::new();
+        let mut field_types: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut struct_names = HashSet::new();
+        for (rel, src) in file_pairs {
+            let scanned = scan(src);
+            let toks = lex(&scanned.masked);
+            let (mut fns, structs, traits) = parse_items(&toks, &scanned);
+            let mod_path = file_mod_path(rel);
+            for f in &mut fns {
+                let mut mods = mod_path.clone();
+                mods.extend(f.mods.drain(..));
+                f.mods = mods;
+            }
+            trait_methods.extend(traits);
+            for st in &structs {
+                struct_names.insert(st.name.clone());
+                let entry = field_types.entry(st.name.clone()).or_default();
+                for (fname, _, fty) in &st.fields {
+                    entry.insert(fname.clone(), fty.clone());
+                }
+            }
+            files.push(FileModel {
+                rel: rel.clone(),
+                scanned,
+                toks,
+                fns,
+                structs,
+            });
+        }
+        CrateModel {
+            files,
+            aux,
+            trait_methods,
+            field_types,
+            struct_names,
+        }
+    }
+
+    pub fn aux_text(&self, path: &str) -> &str {
+        self.aux.get(path).map(String::as_str).unwrap_or("")
+    }
+}
+
+pub fn fn_label(f: &FnItem) -> String {
+    match &f.ctx {
+        Some(c) => format!("{c}::{}", f.name),
+        None => f.name.clone(),
+    }
+}
+
+/// `(callee, kind, qualifier, line)` call sites in the fn body.
+pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
+    let mut edges = Vec::new();
+    let (start, end) = f.body;
+    let mut i = start;
+    while i < end {
+        let t = toks[i].text.as_str();
+        let ln = toks[i].line;
+        if tok_is_ident(t) {
+            let mut k = i + 1;
+            // Turbofish: `name::<T>(..)`.
+            if k < end && toks[k].text == "::" && k + 1 < end && toks[k + 1].text == "<" {
+                k = skip_angle(toks, k + 1);
+            }
+            if k < end && toks[k].text == "(" {
+                let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+                if prev == "fn" {
+                    i += 1;
+                    continue;
+                }
+                if prev == "." {
+                    let recv = if i >= 2 { toks[i - 2].text.clone() } else { String::new() };
+                    edges.push(CallEdge {
+                        name: t.to_string(),
+                        kind: CallKind::Method,
+                        qual: Some(recv),
+                        line: ln,
+                    });
+                } else if prev == "::" && i >= 2 && tok_is_ident(&toks[i - 2].text) {
+                    let q = toks[i - 2].text.as_str();
+                    if q == "Self" && f.ctx.is_some() {
+                        edges.push(CallEdge {
+                            name: t.to_string(),
+                            kind: CallKind::Qualified,
+                            qual: f.ctx.clone(),
+                            line: ln,
+                        });
+                    } else if matches!(q, "self" | "crate" | "super" | "Self") {
+                        edges.push(CallEdge {
+                            name: t.to_string(),
+                            kind: CallKind::Free,
+                            qual: None,
+                            line: ln,
+                        });
+                    } else {
+                        edges.push(CallEdge {
+                            name: t.to_string(),
+                            kind: CallKind::Qualified,
+                            qual: Some(q.to_string()),
+                            line: ln,
+                        });
+                    }
+                } else {
+                    edges.push(CallEdge {
+                        name: t.to_string(),
+                        kind: CallKind::Free,
+                        qual: None,
+                        line: ln,
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+    edges
+}
+
+/// `{(file_idx, fn_idx): sorted root labels}` over non-test fns.
+pub fn reachable_from_hot_roots(model: &CrateModel) -> HashMap<(usize, usize), Vec<String>> {
+    let mut index: HashMap<&str, Vec<(usize, usize)>> = HashMap::new();
+    let mut nodes: Vec<(usize, usize)> = Vec::new();
+    for (fi, f) in model.files.iter().enumerate() {
+        for (gi, fnm) in f.fns.iter().enumerate() {
+            if fnm.is_test {
+                continue;
+            }
+            nodes.push((fi, gi));
+            index.entry(fnm.name.as_str()).or_default().push((fi, gi));
+        }
+    }
+
+    let fn_at = |node: (usize, usize)| -> &FnItem { &model.files[node.0].fns[node.1] };
+
+    // Resolution ladder, most precise first:
+    //   1. `self.name(..)` → the caller's own impl.
+    //   2. `field.name(..)` where the caller's struct declares `field: Ty`
+    //      and `Ty` is a crate struct → Ty's impl (precise even for
+    //      std-colliding names like `insert`).
+    //   3. std-prelude collisions (METHOD_EDGE_DENY) → no edge.
+    //   4. trait-declared names → ALL same-named fns (dynamic dispatch:
+    //      over-approximation is the conservative answer).
+    //   5. otherwise → edge only if the name is crate-unique; an ambiguous
+    //      name would fan one `.load(..)` into every `load`.
+    let resolve = |edge: &CallEdge, caller_ctx: Option<&str>| -> Vec<(usize, usize)> {
+        let cands: &[(usize, usize)] = index.get(edge.name.as_str()).map(Vec::as_slice).unwrap_or(&[]);
+        match edge.kind {
+            CallKind::Qualified => {
+                let qual = edge.qual.as_deref().unwrap_or("");
+                cands
+                    .iter()
+                    .copied()
+                    .filter(|&n| {
+                        let f = fn_at(n);
+                        f.ctx.as_deref() == Some(qual) || f.mods.iter().any(|m| m == qual)
+                    })
+                    .collect()
+            }
+            CallKind::Free => {
+                // Single-letter names are overwhelmingly closure/fn-pointer
+                // parameters (`f(lo, hi)`), not crate free fns — never
+                // resolve.
+                if edge.name.len() == 1 {
+                    return Vec::new();
+                }
+                cands.iter().copied().filter(|&n| fn_at(n).ctx.is_none()).collect()
+            }
+            CallKind::Method => {
+                let qual = edge.qual.as_deref().unwrap_or("");
+                if qual == "self" {
+                    if let Some(ctx) = caller_ctx {
+                        let same: Vec<(usize, usize)> = cands
+                            .iter()
+                            .copied()
+                            .filter(|&n| fn_at(n).ctx.as_deref() == Some(ctx))
+                            .collect();
+                        if !same.is_empty() {
+                            return same;
+                        }
+                    }
+                }
+                let recv_ty = caller_ctx
+                    .and_then(|c| model.field_types.get(c))
+                    .and_then(|m| m.get(qual));
+                if let Some(ty) = recv_ty {
+                    if model.struct_names.contains(ty) {
+                        return cands
+                            .iter()
+                            .copied()
+                            .filter(|&n| fn_at(n).ctx.as_deref() == Some(ty.as_str()))
+                            .collect();
+                    }
+                }
+                if method_edge_denied(&edge.name) {
+                    return Vec::new();
+                }
+                if model.trait_methods.contains(&edge.name) {
+                    return cands.to_vec();
+                }
+                if cands.len() == 1 {
+                    cands.to_vec()
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    };
+
+    let mut edges_of: HashMap<(usize, usize), Vec<(usize, usize)>> = HashMap::new();
+    for &(fi, gi) in &nodes {
+        let f = &model.files[fi];
+        let fnm = &f.fns[gi];
+        let mut resolved = Vec::new();
+        for e in call_edges(&f.toks, fnm) {
+            // Annotated call line: edge cut (opt-in debug routes, backend
+            // marshaling — the dyn-dispatch false path).
+            if lint_ok(&f.scanned, e.line, "hot-path-alloc") {
+                continue;
+            }
+            resolved.extend(resolve(&e, fnm.ctx.as_deref()));
+        }
+        edges_of.insert((fi, gi), resolved);
+    }
+
+    let mut roots = Vec::new();
+    for &(fi, gi) in &nodes {
+        let fnm = &model.files[fi].fns[gi];
+        for (rname, rctx) in HOT_ROOTS {
+            if fnm.name == rname && (rctx.is_none() || fnm.ctx.as_deref() == rctx) {
+                roots.push((fi, gi));
+                break;
+            }
+        }
+    }
+
+    let mut reach: HashMap<(usize, usize), HashSet<String>> = HashMap::new();
+    for &root in &roots {
+        let label = fn_label(fn_at(root));
+        let mut seen: HashSet<(usize, usize)> = HashSet::new();
+        seen.insert(root);
+        let mut stack = vec![root];
+        while let Some(node) = stack.pop() {
+            reach.entry(node).or_default().insert(label.clone());
+            for &nxt in edges_of.get(&node).map(Vec::as_slice).unwrap_or(&[]) {
+                if seen.insert(nxt) {
+                    stack.push(nxt);
+                }
+            }
+        }
+    }
+    reach
+        .into_iter()
+        .map(|(k, v)| {
+            let mut labels: Vec<String> = v.into_iter().collect();
+            labels.sort();
+            (k, labels)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(files: &[(&str, &str)]) -> CrateModel {
+        let pairs: Vec<(String, String)> = files
+            .iter()
+            .map(|(r, s)| (r.to_string(), s.to_string()))
+            .collect();
+        CrateModel::build(&pairs, HashMap::new())
+    }
+
+    fn reachable_names(m: &CrateModel) -> Vec<String> {
+        let mut names: Vec<String> = reachable_from_hot_roots(m)
+            .keys()
+            .map(|&(fi, gi)| fn_label(&m.files[fi].fns[gi]))
+            .collect();
+        names.sort();
+        names
+    }
+
+    #[test]
+    fn transitive_reachability_from_batcher_step() {
+        let m = model(&[(
+            "rust/src/coordinator/batcher.rs",
+            "impl Batcher {\n  fn step(&mut self) { self.admit(); }\n  fn admit(&mut self) { helper(); }\n}\nfn helper() { leaf(); }\nfn leaf() {}\nfn unrelated() {}\n",
+        )]);
+        let names = reachable_names(&m);
+        assert!(names.contains(&"Batcher::step".to_string()));
+        assert!(names.contains(&"Batcher::admit".to_string()));
+        assert!(names.contains(&"helper".to_string()));
+        assert!(names.contains(&"leaf".to_string()));
+        assert!(!names.contains(&"unrelated".to_string()));
+    }
+
+    #[test]
+    fn qualified_calls_resolve_via_module_path() {
+        let m = model(&[
+            (
+                "rust/src/coordinator/batcher.rs",
+                "impl Batcher {\n  fn step(&mut self) { crate::attn::decode_attn(); }\n}\n",
+            ),
+            ("rust/src/attn/mod.rs", "pub fn decode_attn() { inner(); }\nfn inner() {}\n"),
+        ]);
+        let names = reachable_names(&m);
+        assert!(names.contains(&"decode_attn".to_string()));
+        assert!(names.contains(&"inner".to_string()));
+    }
+
+    #[test]
+    fn std_colliding_method_does_not_fan_out() {
+        let m = model(&[(
+            "rust/src/coordinator/batcher.rs",
+            "impl Batcher {\n  fn step(&mut self) { self.q.insert(1); }\n}\nimpl Trie {\n  fn insert(&mut self) { deep(); }\n}\nfn deep() {}\n",
+        )]);
+        // `q` is not a known field of Batcher, `insert` is std-colliding:
+        // no edge, Trie::insert stays unreachable.
+        let names = reachable_names(&m);
+        assert!(!names.contains(&"Trie::insert".to_string()));
+        assert!(!names.contains(&"deep".to_string()));
+    }
+
+    #[test]
+    fn field_type_inference_beats_deny_list() {
+        let m = model(&[(
+            "rust/src/coordinator/batcher.rs",
+            "struct Batcher { trie: Trie }\nstruct Trie { n: usize }\nimpl Batcher {\n  fn step(&mut self) { self.trie.insert(1); }\n}\nimpl Trie {\n  fn insert(&mut self, x: usize) { deep(); }\n}\nfn deep() {}\n",
+        )]);
+        let names = reachable_names(&m);
+        assert!(names.contains(&"Trie::insert".to_string()));
+        assert!(names.contains(&"deep".to_string()));
+    }
+
+    #[test]
+    fn trait_methods_over_approximate() {
+        let m = model(&[(
+            "rust/src/server/engine.rs",
+            "trait Engine {\n  fn alloc_with_prompt(&mut self);\n}\nimpl Batcher {\n  fn step(&mut self) { self.engine.alloc_with_prompt(); }\n}\nimpl RealEngine {\n  fn alloc_with_prompt(&mut self) { leaf(); }\n}\nfn leaf() {}\n",
+        )]);
+        let names = reachable_names(&m);
+        assert!(names.contains(&"RealEngine::alloc_with_prompt".to_string()));
+        assert!(names.contains(&"leaf".to_string()));
+    }
+
+    #[test]
+    fn lint_ok_on_call_line_cuts_the_edge() {
+        let m = model(&[(
+            "rust/src/coordinator/batcher.rs",
+            "impl Batcher {\n  fn step(&mut self) {\n    // lint-ok(hot-path-alloc): debug route\n    debug_route();\n  }\n}\nfn debug_route() { leaf(); }\nfn leaf() {}\n",
+        )]);
+        let names = reachable_names(&m);
+        assert!(!names.contains(&"debug_route".to_string()));
+        assert!(!names.contains(&"leaf".to_string()));
+    }
+
+    #[test]
+    fn test_fns_are_not_roots_or_nodes() {
+        let m = model(&[(
+            "rust/src/server/engine.rs",
+            "#[cfg(test)]\nmod tests {\n  fn step_fused() { helper(); }\n}\nfn helper() {}\n",
+        )]);
+        assert!(reachable_names(&m).is_empty());
+    }
+}

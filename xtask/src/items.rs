@@ -1,0 +1,331 @@
+//! Item tree: one walker pass over a file's token stream collecting fns
+//! (with their impl/trait context and module path), structs (with field
+//! names and first type token), and the set of trait-declared method names
+//! (used for dynamic-dispatch over-approximation in the call graph).
+//!
+//! Fn bodies are consumed whole: nested item definitions inside a body are
+//! attributed to the enclosing fn — correct for reachability, since a
+//! nested fn is only callable from its parent.
+//!
+//! Keep in lockstep with the `parse_items` section of
+//! `tools/lint_mirror.py`.
+
+use std::collections::HashSet;
+
+use crate::lexer::{
+    match_brace_toks, match_bracket_toks, match_paren_toks, skip_angle, tok_is_ident, Tok,
+};
+use crate::scan::Scanned;
+
+/// One `fn` definition (declarations without a body are recorded only in
+/// `trait_methods`).
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Innermost enclosing impl/trait self-type name (`impl Foo` → `Foo`,
+    /// `impl Trait for Foo` → `Foo`); `None` for free fns.
+    pub ctx: Option<String>,
+    /// Module path: file-level segments (filled in by the crate model)
+    /// followed by inline `mod` names.
+    pub mods: Vec<String>,
+    pub sig_line: usize,
+    /// Body token range, exclusive of the braces.
+    pub body: (usize, usize),
+    pub end_line: usize,
+    pub is_test: bool,
+    pub is_simd: bool,
+}
+
+/// One `struct` definition with named fields.
+#[derive(Debug, Clone)]
+pub struct StructItem {
+    pub name: String,
+    pub line: usize,
+    /// (field name, line, first token of the field type) — the first type
+    /// token is enough to recognize `fn`-pointer fields and crate types.
+    pub fields: Vec<(String, usize, String)>,
+    pub is_test: bool,
+}
+
+fn line_flag(flags: &[bool], ln: usize) -> bool {
+    ln >= 1 && flags.get(ln - 1).copied().unwrap_or(false)
+}
+
+pub fn parse_items(
+    toks: &[Tok],
+    scanned: &Scanned,
+) -> (Vec<FnItem>, Vec<StructItem>, HashSet<String>) {
+    let mut fns = Vec::new();
+    let mut structs = Vec::new();
+    let mut trait_methods: HashSet<String> = HashSet::new();
+    // ("impl" | "trait" | "mod" | "block", name)
+    let mut scopes: Vec<(&'static str, Option<String>)> = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+
+    while i < n {
+        let t = toks[i].text.as_str();
+        let ln = toks[i].line;
+        match t {
+            "{" => {
+                scopes.push(("block", None));
+                i += 1;
+            }
+            "}" => {
+                scopes.pop();
+                i += 1;
+            }
+            "impl" | "trait" => {
+                let is_trait = t == "trait";
+                let mut j = i + 1;
+                let mut name: Option<String> = None;
+                if is_trait {
+                    // `trait Name` — supertrait bounds may follow; name first.
+                    if j < n && tok_is_ident(&toks[j].text) {
+                        name = Some(toks[j].text.clone());
+                    }
+                    while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                        if toks[j].text == "<" {
+                            j = skip_angle(toks, j);
+                        } else {
+                            j += 1;
+                        }
+                    }
+                } else {
+                    if j < n && toks[j].text == "<" {
+                        j = skip_angle(toks, j);
+                    }
+                    // The self type is the *last* ident before the body:
+                    // `impl Trait for Foo` resets at `for` and ends on `Foo`.
+                    while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                        let tj = toks[j].text.as_str();
+                        if tj == "<" {
+                            j = skip_angle(toks, j);
+                        } else if tj == "for" {
+                            name = None;
+                            j += 1;
+                        } else if tok_is_ident(tj) {
+                            name = Some(tj.to_string());
+                            j += 1;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                }
+                if j < n && toks[j].text == "{" {
+                    scopes.push((if is_trait { "trait" } else { "impl" }, name));
+                }
+                i = j + 1;
+            }
+            "mod" if i + 1 < n && tok_is_ident(&toks[i + 1].text) => {
+                if i + 2 < n && toks[i + 2].text == "{" {
+                    scopes.push(("mod", Some(toks[i + 1].text.clone())));
+                    i += 3;
+                } else {
+                    i += 2;
+                }
+            }
+            "struct" if i + 1 < n && tok_is_ident(&toks[i + 1].text) => {
+                let sname = toks[i + 1].text.clone();
+                let sline = toks[i + 1].line;
+                let mut j = i + 2;
+                if j < n && toks[j].text == "<" {
+                    j = skip_angle(toks, j);
+                }
+                if j < n && toks[j].text == "{" {
+                    let close = match_brace_toks(toks, j);
+                    let mut fields = Vec::new();
+                    let mut k = j + 1;
+                    while k < close {
+                        let tk = toks[k].text.as_str();
+                        if tk == "(" || tk == "[" {
+                            k = if tk == "(" {
+                                match_paren_toks(toks, k)
+                            } else {
+                                match_bracket_toks(toks, k)
+                            } + 1;
+                            continue;
+                        }
+                        if tk == "{" {
+                            k = match_brace_toks(toks, k) + 1;
+                            continue;
+                        }
+                        // `name: Type` at field position: first field, or
+                        // preceded by a separator / visibility keyword.
+                        if tok_is_ident(tk)
+                            && k + 1 < close
+                            && toks[k + 1].text == ":"
+                            && (k == j + 1
+                                || matches!(toks[k - 1].text.as_str(), "," | "{" | ")" | "pub"))
+                        {
+                            let first_ty = if k + 2 < close {
+                                toks[k + 2].text.clone()
+                            } else {
+                                String::new()
+                            };
+                            fields.push((tk.to_string(), toks[k].line, first_ty));
+                            k += 2;
+                            continue;
+                        }
+                        k += 1;
+                    }
+                    structs.push(StructItem {
+                        name: sname,
+                        line: sline,
+                        fields,
+                        is_test: line_flag(&scanned.test_lines, sline),
+                    });
+                    i = close + 1;
+                } else {
+                    // Tuple / unit struct: skip to `;`.
+                    while j < n && toks[j].text != ";" {
+                        j += 1;
+                    }
+                    i = j + 1;
+                }
+            }
+            "fn" if i + 1 < n && tok_is_ident(&toks[i + 1].text) => {
+                let name = toks[i + 1].text.clone();
+                let mut j = i + 2;
+                if j < n && toks[j].text == "<" {
+                    j = skip_angle(toks, j);
+                }
+                while j < n && toks[j].text != "(" {
+                    j += 1;
+                }
+                j = match_paren_toks(toks, j);
+                let mut k = j + 1;
+                while k < n && toks[k].text != "{" && toks[k].text != ";" {
+                    k += 1;
+                }
+                if scopes.iter().any(|(kind, _)| *kind == "trait") {
+                    trait_methods.insert(name.clone());
+                }
+                if k >= n || toks[k].text == ";" {
+                    i = k + 1;
+                    continue;
+                }
+                let close = match_brace_toks(toks, k);
+                let ctx = scopes
+                    .iter()
+                    .rev()
+                    .find(|(kind, _)| *kind == "impl" || *kind == "trait")
+                    .and_then(|(_, nm)| nm.clone());
+                let mods = scopes
+                    .iter()
+                    .filter(|(kind, _)| *kind == "mod")
+                    .filter_map(|(_, nm)| nm.clone())
+                    .collect();
+                fns.push(FnItem {
+                    name,
+                    ctx,
+                    mods,
+                    sig_line: ln,
+                    body: (k + 1, close),
+                    end_line: toks[close].line,
+                    is_test: line_flag(&scanned.test_lines, ln),
+                    is_simd: line_flag(&scanned.simd_lines, ln),
+                });
+                i = close + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (fns, structs, trait_methods)
+}
+
+/// Module path segments a file contributes: `rust/src/attn/mod.rs` →
+/// `["attn"]`, `rust/src/coordinator/batcher.rs` →
+/// `["coordinator", "batcher"]`. Fixture paths outside `rust/src` get
+/// their bare stem.
+pub fn file_mod_path(rel: &str) -> Vec<String> {
+    let norm = rel.replace('\\', "/");
+    let parts: Vec<&str> = norm.split('/').collect();
+    let mut parts: Vec<String> = if parts.len() >= 2 && parts[0] == "rust" && parts[1] == "src" {
+        parts[2..].iter().map(|s| s.to_string()).collect()
+    } else {
+        parts.last().map(|s| s.to_string()).into_iter().collect()
+    };
+    if let Some(last) = parts.last_mut() {
+        if let Some(stem) = last.strip_suffix(".rs") {
+            *last = stem.to_string();
+        }
+    }
+    if matches!(parts.last().map(String::as_str), Some("mod") | Some("lib") | Some("main")) {
+        parts.pop();
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::scan::scan;
+
+    fn items(src: &str) -> (Vec<FnItem>, Vec<StructItem>, HashSet<String>) {
+        let s = scan(src);
+        let toks = lex(&s.masked);
+        parse_items(&toks, &s)
+    }
+
+    #[test]
+    fn fn_ctx_and_mods() {
+        let src = "mod inner {\n  impl Foo {\n    fn bar(&self) { baz(); }\n  }\n}\nfn free() {}\n";
+        let (fns, _, _) = items(src);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "bar");
+        assert_eq!(fns[0].ctx.as_deref(), Some("Foo"));
+        assert_eq!(fns[0].mods, vec!["inner"]);
+        assert_eq!(fns[1].name, "free");
+        assert_eq!(fns[1].ctx, None);
+    }
+
+    #[test]
+    fn impl_trait_for_type_takes_self_type() {
+        let src = "impl<T: Clone> Display for Wrapper<T> {\n  fn fmt(&self) {}\n}\n";
+        let (fns, _, _) = items(src);
+        assert_eq!(fns[0].ctx.as_deref(), Some("Wrapper"));
+    }
+
+    #[test]
+    fn trait_decls_collected_even_bodiless() {
+        let src = "trait Engine {\n  fn alloc(&mut self);\n  fn free(&mut self) { dealloc(); }\n}\n";
+        let (fns, _, traits) = items(src);
+        assert!(traits.contains("alloc") && traits.contains("free"));
+        // Only the defaulted method has a body item.
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "free");
+        assert_eq!(fns[0].ctx.as_deref(), Some("Engine"));
+    }
+
+    #[test]
+    fn struct_fields_with_first_type_token() {
+        let src = "struct Table {\n  pub pages: Vec<u32>,\n  hook: fn(usize) -> usize,\n  width: usize,\n}\n";
+        let (_, structs, _) = items(src);
+        let f = &structs[0].fields;
+        assert_eq!(f.len(), 3);
+        assert_eq!((f[0].0.as_str(), f[0].2.as_str()), ("pages", "Vec"));
+        assert_eq!((f[1].0.as_str(), f[1].2.as_str()), ("hook", "fn"));
+        assert_eq!((f[2].0.as_str(), f[2].2.as_str()), ("width", "usize"));
+    }
+
+    #[test]
+    fn nested_fn_attributed_to_parent() {
+        let src = "fn outer() {\n  fn inner() {}\n  inner();\n}\n";
+        let (fns, _, _) = items(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "outer");
+    }
+
+    #[test]
+    fn mod_paths() {
+        assert_eq!(file_mod_path("rust/src/attn/mod.rs"), vec!["attn"]);
+        assert_eq!(
+            file_mod_path("rust/src/coordinator/batcher.rs"),
+            vec!["coordinator", "batcher"]
+        );
+        assert!(file_mod_path("rust/src/lib.rs").is_empty());
+        assert_eq!(file_mod_path("fixture_case.rs"), vec!["fixture_case"]);
+    }
+}

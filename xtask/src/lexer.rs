@@ -1,0 +1,214 @@
+//! Token lexer over a masked source (the output of [`crate::scan::scan`]).
+//!
+//! Masking already removed comments and string/char bodies while preserving
+//! line structure, so lexing is a single forward pass: identifier runs
+//! (including keywords and integer literals — the item walker tells them
+//! apart by position), multi-character operators longest-first, and every
+//! other byte as a one-character token. Each token carries its 1-based line.
+//!
+//! Also home to the token-level delimiter matchers shared by the item
+//! walker, the call-graph builder, and the unit scanner. All matchers are
+//! fail-safe: unbalanced input returns a best-effort index (end of stream)
+//! rather than panicking, which can only over-approximate spans — lints
+//! built on top fail toward *extra* findings, never silence.
+//!
+//! Keep in lockstep with the `lex` section of `tools/lint_mirror.py`.
+
+use crate::scan::is_ident;
+
+/// One token of a masked source file.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+}
+
+const OPS3: [&str; 3] = ["..=", "<<=", ">>="];
+const OPS2: [&str; 17] = [
+    "::", "->", "=>", "..", "+=", "-=", "*=", "/=", "%=", "==", "!=", "<=", ">=", "&&", "||",
+    "<<", ">>",
+];
+
+pub fn lex(masked: &str) -> Vec<Tok> {
+    let b = masked.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+        } else if is_ident(c) {
+            let start = i;
+            while i < n && is_ident(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                text: masked[start..i].to_string(),
+                line,
+            });
+        } else {
+            let three = &masked[i..(i + 3).min(n)];
+            let two = &masked[i..(i + 2).min(n)];
+            if OPS3.contains(&three) {
+                toks.push(Tok {
+                    text: three.to_string(),
+                    line,
+                });
+                i += 3;
+            } else if OPS2.contains(&two) {
+                toks.push(Tok {
+                    text: two.to_string(),
+                    line,
+                });
+                i += 2;
+            } else {
+                toks.push(Tok {
+                    text: (c as char).to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// True when the token is an identifier (or keyword): ident-char start,
+/// not a digit — integer literals lex as ident runs but are not names.
+pub fn tok_is_ident(t: &str) -> bool {
+    let b = t.as_bytes();
+    !b.is_empty() && is_ident(b[0]) && !b[0].is_ascii_digit()
+}
+
+/// `toks[i] == "<"`: index just past the matching `>`. Fail-safe: on `{`,
+/// `;`, or exhaustion give up and return `i + 1` (callers re-scan) — a `<`
+/// that was a comparison, not a generic bracket, must not swallow the rest
+/// of the body.
+pub fn skip_angle(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = i;
+    let n = toks.len();
+    while j < n {
+        match toks[j].text.as_str() {
+            "<" => depth += 1,
+            "<<" => depth += 2,
+            ">" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            ">>" => {
+                depth -= 2;
+                if depth <= 0 {
+                    return j + 1;
+                }
+            }
+            "{" | ";" => return i + 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    i + 1
+}
+
+fn match_delim_toks(toks: &[Tok], i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0i64;
+    let mut j = i;
+    let n = toks.len();
+    while j < n {
+        let t = toks[j].text.as_str();
+        if t == open {
+            depth += 1;
+        } else if t == close {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    n.saturating_sub(1)
+}
+
+/// `toks[i] == "{"`: index of the matching `}` (fail-safe: last token).
+pub fn match_brace_toks(toks: &[Tok], i: usize) -> usize {
+    match_delim_toks(toks, i, "{", "}")
+}
+
+/// `toks[i] == "("`: index of the matching `)` (fail-safe: last token).
+pub fn match_paren_toks(toks: &[Tok], i: usize) -> usize {
+    match_delim_toks(toks, i, "(", ")")
+}
+
+/// `toks[i] == "["`: index of the matching `]` (fail-safe: last token).
+pub fn match_bracket_toks(toks: &[Tok], i: usize) -> usize {
+    match_delim_toks(toks, i, "[", "]")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(&scan(src).masked).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_ops_and_lines() {
+        let toks = lex(&scan("a::b -> c\nx += 1..=2;\n").masked);
+        let t: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(t, vec!["a", "::", "b", "->", "c", "x", "+=", "1", "..=", "2", ";"]);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[5].line, 2);
+    }
+
+    #[test]
+    fn shift_ops_lex_whole() {
+        assert_eq!(texts("x << y >> z <<= w"), vec!["x", "<<", "y", ">>", "z", "<<=", "w"]);
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_tokenize() {
+        let t = texts("let s = \"a + b\"; // c + d\n");
+        assert_eq!(t, vec!["let", "s", "=", ";"]);
+    }
+
+    #[test]
+    fn angle_matching_nested_and_failsafe() {
+        let toks = lex(&scan("Vec<Vec<u8>> x").masked);
+        // toks: Vec < Vec < u8 >> x — skip from the first '<' lands on `x`.
+        assert_eq!(toks[skip_angle(&toks, 1)].text, "x");
+        // A comparison '<' followed by ';' bails out one past the '<'.
+        let cmp = lex(&scan("a < b; c").masked);
+        assert_eq!(skip_angle(&cmp, 1), 2);
+    }
+
+    #[test]
+    fn delim_matching() {
+        let toks = lex(&scan("f(a, (b), c)[i]{ d }").masked);
+        let open_paren = toks.iter().position(|t| t.text == "(").unwrap();
+        let close = match_paren_toks(&toks, open_paren);
+        assert_eq!(toks[close].text, ")");
+        assert_eq!(toks[close + 1].text, "[");
+        assert_eq!(toks[match_bracket_toks(&toks, close + 1)].text, "]");
+        let open_brace = toks.iter().position(|t| t.text == "{").unwrap();
+        assert_eq!(match_brace_toks(&toks, open_brace), toks.len() - 1);
+    }
+
+    #[test]
+    fn ident_classification() {
+        assert!(tok_is_ident("foo_1"));
+        assert!(tok_is_ident("_x"));
+        assert!(!tok_is_ident("1foo"));
+        assert!(!tok_is_ident("::"));
+        assert!(!tok_is_ident(""));
+    }
+}

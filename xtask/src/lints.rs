@@ -1,56 +1,123 @@
-//! The five repo-specific structural lints.
+//! The nine repo-specific structural lints.
 //!
-//! Rules (see DESIGN.md §9 for the full rationale):
+//! Five are per-file rules (see DESIGN.md §9 for the full rationale):
 //!
 //! * `accounting-fields` — outside `rust/src/kvcache/`, the pool accounting
 //!   fields `used_bytes` / `cold_bytes` / `outstanding` may only be touched
 //!   through their accessor methods; any raw field access (no call parens)
-//!   is flagged. All mutation lives behind the incremental-counter API that
-//!   `KvCacheManager::verify_accounting` audits.
+//!   is flagged.
 //! * `lossy-casts` — in the byte/token accounting scope (`kvcache`,
 //!   `coordinator`, `server`, `config`), narrowing or signedness-changing
 //!   integer `as` casts are flagged unless the line carries a
-//!   `// cast-ok: <reason>` annotation. Widening into the accounting-native
-//!   `u64` and float casts are free; kernel modules (`linalg`, `attn`,
-//!   `model`, …) are outside the scope entirely — that is the float-math
-//!   allowlist.
+//!   `// cast-ok: <reason>` annotation.
 //! * `safety-comments` — every `unsafe` block / `unsafe impl` must carry a
-//!   `// SAFETY:` comment stating the aliasing/lifetime argument, on the
-//!   same line or in the contiguous comment/attribute run directly above.
-//! * `simd-gating` — `core::arch` / `std::arch::{x86_64,aarch64}` imports
-//!   and `#[target_feature]` attributes may only appear inside items gated
-//!   by a `#[cfg(.. feature = "simd" ..)]` attribute, so scalar-only builds
-//!   (`--no-default-features`, the Miri lane) can never reach an intrinsic;
-//!   and any file using intrinsics must also contain a runtime
-//!   `*_feature_detected!` check somewhere, so compiling the arm never
-//!   implies executing it on a host without the ISA.
-//! * `hot-path-panics` — no `unwrap` / `expect` / `panic!` /
-//!   `unreachable!` / `todo!` / `unimplemented!` in the serving hot path:
-//!   all of `coordinator/batcher.rs`, every `fn pump` in
-//!   `coordinator/mod.rs`, and every `fn step_fused`. Errors must flow to
-//!   `TokenEvent::Rejected` (or an `anyhow::Result`), never abort the
-//!   scheduler.
+//!   `// SAFETY:` comment on the same line or directly above.
+//! * `hot-path-panics` — no `unwrap` / `expect` / panic-family macros in
+//!   the serving hot path (`batcher.rs`, `fn pump`, any `step_fused`).
+//! * `simd-gating` — `core::arch` imports and `#[target_feature]` only
+//!   inside `#[cfg(.. feature = "simd" ..)]`-gated items, plus a runtime
+//!   `*_feature_detected!` check somewhere in the file.
 //!
-//! `#[cfg(test)]`-gated items are exempt from `lossy-casts` and
-//! `hot-path-panics` (tests may assert freely); `safety-comments` and
-//! `accounting-fields` apply everywhere.
+//! Four are whole-program rules built on the item tree / call graph
+//! ([`crate::items`], [`crate::callgraph`], [`crate::units`]):
+//!
+//! * `hot-path-alloc` — no allocating construct (`Vec::new`, `vec!`,
+//!   `format!`, `Box::new`, `.to_vec()`, `.clone()`, `.collect()`, …)
+//!   transitively reachable from `Batcher::step`, any `step_fused`, or
+//!   `ServingEngine::decode`, outside the `*Scratch` / `*Arena` types.
+//!   Grow-only ops on existing buffers (`push`, `resize`, `extend`) are
+//!   deliberately NOT markers — the scratch-arena contract is grow-only,
+//!   and what this rule polices is fresh per-step heap traffic.
+//! * `unit-confusion` — cross-unit `+`/`-`/comparison between
+//!   `_bytes`/`_tokens`/`_pages`/`_rows`-suffixed values, unless the value
+//!   flows through a blessed converter (`bytes_for_tokens`, `token_bytes`,
+//!   `cache_bytes_per_token`) or a `_per_` ratio factor.
+//! * `sendptr-escape` — every `SendPtr` construction outside its home
+//!   module must sit in a fn that derives disjoint ranges (parallel_for /
+//!   chunks / split_at idiom) and be named by a test in
+//!   `rust/tests/miri_kernels.rs`.
+//! * `dispatch-parity-drift` — every `KernelDispatch` fn-pointer field
+//!   needs a scalar arm, a feature-gated SIMD arm, a parity test naming
+//!   it, and a DESIGN.md §5e table row.
+//!
+//! `#[cfg(test)]`-gated items are exempt from `lossy-casts`,
+//! `hot-path-panics`, and the whole-program rules (tests may allocate and
+//! assert freely); `safety-comments`, `accounting-fields`, and
+//! `simd-gating` apply everywhere. Any finding can be suppressed with an
+//! inline `// lint-ok(<rule>): <reason>` on the finding line or the line
+//! above; suppressions are counted and reported, never silent.
+//!
+//! Keep in lockstep with `tools/lint_mirror.py`.
 
+use crate::callgraph::{
+    fn_label, reachable_from_hot_roots, CrateModel, AUX_DESIGN, AUX_MIRI, AUX_PARITY,
+};
+use crate::lexer::{lex, skip_angle, tok_is_ident, Tok};
 use crate::scan::{is_ident, scan, Scanned};
+use crate::units::UnitScanner;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Finding {
+    pub file: String,
     pub line: usize,
     pub rule: &'static str,
     pub msg: String,
 }
 
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 9] = [
     "accounting-fields",
     "lossy-casts",
     "safety-comments",
     "hot-path-panics",
     "simd-gating",
+    "hot-path-alloc",
+    "unit-confusion",
+    "sendptr-escape",
+    "dispatch-parity-drift",
 ];
+
+/// `// lint-ok(<rule>): <reason>` on the line or the line above.
+pub fn lint_ok(s: &Scanned, line: usize, rule: &str) -> bool {
+    let needle = format!("lint-ok({rule})");
+    for ln in [line, line.saturating_sub(1)] {
+        if ln >= 1 && s.comments.get(&ln).is_some_and(|c| c.contains(&needle)) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Finding sink with `lint-ok` suppression + counting.
+#[derive(Default)]
+pub struct Sink {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+impl Sink {
+    pub fn emit(
+        &mut self,
+        s: &Scanned,
+        rel: &str,
+        line: usize,
+        rule: &'static str,
+        msg: String,
+        force_ok: bool,
+    ) {
+        if force_ok || lint_ok(s, line, rule) {
+            self.suppressed += 1;
+            return;
+        }
+        self.findings.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    }
+}
+
+// --- shared helpers --------------------------------------------------------
 
 const ACCOUNTING_FIELDS: [&str; 3] = ["used_bytes", "cold_bytes", "outstanding"];
 
@@ -68,27 +135,18 @@ const CAST_SCOPE: [&str; 4] = [
     "rust/src/config/",
 ];
 
-/// Lint one file. `rel` is the repo-relative path (it selects per-path
-/// rules); `src` is the file contents.
-pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
-    let s = scan(src);
-    let mut out = Vec::new();
-    lint_accounting_fields(rel, &s, &mut out);
-    lint_lossy_casts(rel, &s, &mut out);
-    lint_safety_comments(&s, &mut out);
-    lint_hot_path_panics(rel, &s, &mut out);
-    lint_simd_gating(&s, &mut out);
-    out.sort_by_key(|f| f.line);
-    out
-}
+const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
 
-fn in_test(s: &Scanned, line: usize) -> bool {
-    s.test_lines.get(line - 1).copied().unwrap_or(false)
-}
-
-fn comment_on(s: &Scanned, line: usize, needle: &str) -> bool {
-    s.comments.get(&line).is_some_and(|c| c.contains(needle))
-}
+/// Tokens whose presence on a line marks it as intrinsic use. Deliberately
+/// *not* matched: `std::arch::is_x86_feature_detected!` — the detection
+/// macro path contains neither `core::arch` nor an arch-module segment, so
+/// the guard itself never trips the rule.
+const INTRINSIC_MARKERS: [&str; 4] = [
+    "core::arch",
+    "std::arch::x86_64",
+    "std::arch::aarch64",
+    "#[target_feature",
+];
 
 /// Occurrences of `word` in `line` with identifier boundaries. A boundary is
 /// only required on a side whose edge character is itself an identifier
@@ -115,9 +173,17 @@ fn next_non_space(line: &str, from: usize) -> Option<char> {
     line[from..].chars().find(|c| !c.is_whitespace())
 }
 
+fn in_test(s: &Scanned, line: usize) -> bool {
+    line >= 1 && s.test_lines.get(line - 1).copied().unwrap_or(false)
+}
+
+fn comment_on(s: &Scanned, line: usize, needle: &str) -> bool {
+    s.comments.get(&line).is_some_and(|c| c.contains(needle))
+}
+
 // --- Rule 1: accounting-fields --------------------------------------------
 
-fn lint_accounting_fields(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
+fn lint_accounting_fields(rel: &str, s: &Scanned, sink: &mut Sink) {
     if rel.starts_with("rust/src/kvcache/") {
         return;
     }
@@ -130,14 +196,17 @@ fn lint_accounting_fields(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
                 if next_non_space(line, p + dotted.len()) == Some('(') {
                     continue;
                 }
-                out.push(Finding {
-                    line: i + 1,
-                    rule: "accounting-fields",
-                    msg: format!(
+                sink.emit(
+                    s,
+                    rel,
+                    i + 1,
+                    "accounting-fields",
+                    format!(
                         "raw access to accounting field `{field}` outside kvcache \
                          (use the accessor / counter API audited by verify_accounting)"
                     ),
-                });
+                    false,
+                );
             }
         }
     }
@@ -145,7 +214,7 @@ fn lint_accounting_fields(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
 
 // --- Rule 2: lossy-casts ---------------------------------------------------
 
-fn lint_lossy_casts(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
+fn lint_lossy_casts(rel: &str, s: &Scanned, sink: &mut Sink) {
     if !CAST_SCOPE.iter().any(|p| rel.starts_with(p)) {
         return;
     }
@@ -159,7 +228,7 @@ fn lint_lossy_casts(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
             let ty: String = rest
                 .trim_start()
                 .chars()
-                .take_while(|&c| is_ident(c as u8))
+                .take_while(|&c| c.is_ascii() && is_ident(c as u8))
                 .collect();
             if !FLAGGED_CASTS.contains(&ty.as_str()) {
                 continue;
@@ -167,21 +236,24 @@ fn lint_lossy_casts(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
             if comment_on(s, ln, "cast-ok:") {
                 continue;
             }
-            out.push(Finding {
-                line: ln,
-                rule: "lossy-casts",
-                msg: format!(
+            sink.emit(
+                s,
+                rel,
+                ln,
+                "lossy-casts",
+                format!(
                     "narrowing `as {ty}` in accounting path — use u64-native math, \
                      `try_from`, or justify with `// cast-ok: <reason>`"
                 ),
-            });
+                false,
+            );
         }
     }
 }
 
 // --- Rule 3: safety-comments ----------------------------------------------
 
-fn lint_safety_comments(s: &Scanned, out: &mut Vec<Finding>) {
+fn lint_safety_comments(rel: &str, s: &Scanned, sink: &mut Sink) {
     for (i, line) in s.lines.iter().enumerate() {
         let ln = i + 1;
         for p in word_positions(line, "unsafe") {
@@ -222,11 +294,14 @@ fn lint_safety_comments(s: &Scanned, out: &mut Vec<Finding>) {
                 k -= 1;
             }
             if !found {
-                out.push(Finding {
-                    line: ln,
-                    rule: "safety-comments",
-                    msg: "unsafe block/impl without a preceding `// SAFETY:` comment".into(),
-                });
+                sink.emit(
+                    s,
+                    rel,
+                    ln,
+                    "safety-comments",
+                    "unsafe block/impl without a preceding `// SAFETY:` comment".into(),
+                    false,
+                );
             }
         }
     }
@@ -234,9 +309,7 @@ fn lint_safety_comments(s: &Scanned, out: &mut Vec<Finding>) {
 
 // --- Rule 4: hot-path-panics ----------------------------------------------
 
-const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
-
-fn lint_hot_path_panics(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
+fn lint_hot_path_panics(rel: &str, s: &Scanned, sink: &mut Sink) {
     let mut hot: Vec<bool> = vec![false; s.lines.len()];
     if rel == "rust/src/coordinator/batcher.rs" {
         for (i, h) in hot.iter_mut().enumerate() {
@@ -267,14 +340,17 @@ fn lint_hot_path_panics(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
             let dotted = format!(".{meth}");
             for p in word_positions(line, &dotted) {
                 if next_non_space(line, p + dotted.len()) == Some('(') {
-                    out.push(Finding {
-                        line: i + 1,
-                        rule: "hot-path-panics",
-                        msg: format!(
+                    sink.emit(
+                        s,
+                        rel,
+                        i + 1,
+                        "hot-path-panics",
+                        format!(
                             "`.{meth}(..)` in the serving hot path — route the error \
                              to TokenEvent::Rejected / anyhow::Result instead"
                         ),
-                    });
+                        false,
+                    );
                 }
             }
         }
@@ -282,11 +358,14 @@ fn lint_hot_path_panics(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
             let bare = &mac[..mac.len() - 1];
             for p in word_positions(line, bare) {
                 if line[p + bare.len()..].starts_with('!') {
-                    out.push(Finding {
-                        line: i + 1,
-                        rule: "hot-path-panics",
-                        msg: format!("`{mac}` in the serving hot path"),
-                    });
+                    sink.emit(
+                        s,
+                        rel,
+                        i + 1,
+                        "hot-path-panics",
+                        format!("`{mac}` in the serving hot path"),
+                        false,
+                    );
                 }
             }
         }
@@ -295,21 +374,9 @@ fn lint_hot_path_panics(rel: &str, s: &Scanned, out: &mut Vec<Finding>) {
 
 // --- Rule 5: simd-gating ---------------------------------------------------
 
-/// Tokens whose presence on a line marks it as intrinsic use. Deliberately
-/// *not* matched: `std::arch::is_x86_feature_detected!` — the detection
-/// macro path contains neither `core::arch` nor an arch-module segment, so
-/// the guard itself never trips the rule.
-const INTRINSIC_MARKERS: [&str; 4] = [
-    "core::arch",
-    "std::arch::x86_64",
-    "std::arch::aarch64",
-    "#[target_feature",
-];
-
-fn lint_simd_gating(s: &Scanned, out: &mut Vec<Finding>) {
+fn lint_simd_gating(rel: &str, s: &Scanned, sink: &mut Sink) {
     let mut any_intrinsics = false;
     for (i, line) in s.lines.iter().enumerate() {
-        let ln = i + 1;
         let Some(marker) = INTRINSIC_MARKERS.iter().find(|m| line.contains(*m)) else {
             continue;
         };
@@ -317,29 +384,400 @@ fn lint_simd_gating(s: &Scanned, out: &mut Vec<Finding>) {
         if s.simd_lines.get(i).copied().unwrap_or(false) {
             continue;
         }
-        out.push(Finding {
-            line: ln,
-            rule: "simd-gating",
-            msg: format!(
+        sink.emit(
+            s,
+            rel,
+            i + 1,
+            "simd-gating",
+            format!(
                 "`{marker}` outside a `#[cfg(.. feature = \"simd\" ..)]`-gated item — \
                  scalar-only builds (--no-default-features, Miri) must not compile intrinsics"
             ),
-        });
+            false,
+        );
     }
     if any_intrinsics && !s.masked.contains("_feature_detected!") {
-        out.push(Finding {
-            line: 1,
-            rule: "simd-gating",
-            msg: "file uses arch intrinsics but contains no runtime `*_feature_detected!` \
-                  check — compiling an ISA arm must never imply executing it"
+        sink.emit(
+            s,
+            rel,
+            1,
+            "simd-gating",
+            "file uses arch intrinsics but contains no runtime `*_feature_detected!` \
+             check — compiling an ISA arm must never imply executing it"
                 .into(),
-        });
+            false,
+        );
     }
+}
+
+// --- Rule 6: hot-path-alloc ------------------------------------------------
+
+const ALLOC_TYPES: [&str; 10] = [
+    "Vec", "VecDeque", "String", "Box", "HashMap", "HashSet", "BTreeMap", "BTreeSet", "Rc", "Arc",
+];
+const ALLOC_TYPE_METHODS: [&str; 3] = ["new", "with_capacity", "from"];
+const ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+const ALLOC_METHODS: [&str; 5] = ["to_vec", "to_string", "to_owned", "clone", "collect"];
+const ARENA_SUFFIXES: [&str; 2] = ["Scratch", "Arena"];
+
+fn lint_hot_path_alloc(model: &CrateModel, sink: &mut Sink) {
+    let reach = reachable_from_hot_roots(model);
+    let mut keys: Vec<&(usize, usize)> = reach.keys().collect();
+    keys.sort();
+    for &&(fi, gi) in &keys {
+        let roots = &reach[&(fi, gi)];
+        let f = &model.files[fi];
+        let fnm = &f.fns[gi];
+        if fnm
+            .ctx
+            .as_deref()
+            .is_some_and(|c| ARENA_SUFFIXES.iter().any(|sfx| c.ends_with(sfx)))
+        {
+            continue; // grow-only scratch arenas are the sanctioned allocator
+        }
+        let s = &f.scanned;
+        // Annotation on the signature line exempts the whole body.
+        let fn_exempt = lint_ok(s, fnm.sig_line, "hot-path-alloc");
+        let toks = &f.toks;
+        let (start, end) = fnm.body;
+        let roots_str = roots.join(", ");
+        let mut i = start;
+        while i < end {
+            let t = toks[i].text.as_str();
+            let ln = toks[i].line;
+            let mut marker: Option<String> = None;
+            if ALLOC_TYPES.contains(&t) && i + 2 < end && toks[i + 1].text == "::" {
+                let mut k = i + 2;
+                if toks[k].text == "<" {
+                    k = skip_angle(toks, k);
+                    if k < end && toks[k].text == "::" {
+                        k += 1;
+                    }
+                }
+                let m = if k < end { toks[k].text.as_str() } else { "" };
+                let allowed: &[&str] = if t == "Rc" || t == "Arc" {
+                    &["new"]
+                } else {
+                    &ALLOC_TYPE_METHODS
+                };
+                if allowed.contains(&m) {
+                    let mut k2 = k + 1;
+                    if k2 < end && toks[k2].text == "::" && k2 + 1 < end && toks[k2 + 1].text == "<"
+                    {
+                        k2 = skip_angle(toks, k2 + 1);
+                    }
+                    if k2 < end && toks[k2].text == "(" {
+                        marker = Some(format!("{t}::{m}"));
+                    }
+                }
+            } else if ALLOC_MACROS.contains(&t) && i + 1 < end && toks[i + 1].text == "!" {
+                marker = Some(format!("{t}!"));
+            } else if ALLOC_METHODS.contains(&t) && i > 0 && toks[i - 1].text == "." {
+                let mut k = i + 1;
+                if k < end && toks[k].text == "::" && k + 1 < end && toks[k + 1].text == "<" {
+                    k = skip_angle(toks, k + 1);
+                }
+                if k < end && toks[k].text == "(" {
+                    marker = Some(format!(".{t}()"));
+                }
+            }
+            if let Some(marker) = marker {
+                sink.emit(
+                    s,
+                    &f.rel,
+                    ln,
+                    "hot-path-alloc",
+                    format!(
+                        "allocating construct `{marker}` in `{}`, reachable from {roots_str} — the \
+                         steady-state serving hot path must not allocate (grow-only \
+                         scratch arenas excepted; annotate intentional cold paths with \
+                         `// lint-ok(hot-path-alloc): <why>`)",
+                        fn_label(fnm)
+                    ),
+                    fn_exempt,
+                );
+            }
+            i += 1;
+        }
+    }
+}
+
+// --- Rule 7: unit-confusion ------------------------------------------------
+
+fn lint_unit_confusion(model: &CrateModel, sink: &mut Sink) {
+    for f in &model.files {
+        for fnm in &f.fns {
+            if fnm.is_test {
+                continue;
+            }
+            let mut sc = UnitScanner::new(&f.toks, fnm.body.1);
+            sc.scan_region(fnm.body.0, fnm.body.1);
+            for c in sc.conflicts {
+                sink.emit(
+                    &f.scanned,
+                    &f.rel,
+                    c.line,
+                    "unit-confusion",
+                    format!(
+                        "cross-unit arithmetic: `{}` {} `{}` — convert explicitly \
+                         (bytes_for_tokens / token_bytes / cache_bytes_per_token) or \
+                         annotate `// lint-ok(unit-confusion): <why>`",
+                        c.left, c.op, c.right
+                    ),
+                    false,
+                );
+            }
+        }
+    }
+}
+
+// --- Rule 8: sendptr-escape ------------------------------------------------
+
+const SENDPTR_HOME: &str = "rust/src/util/threadpool.rs";
+const DISJOINT_IDIOMS: [&str; 7] = [
+    "parallel_for",
+    "chunks",
+    "chunks_mut",
+    "chunks_exact",
+    "chunks_exact_mut",
+    "split_at",
+    "split_at_mut",
+];
+
+/// All identifier tokens of a source text (used for "does any test name
+/// this fn" checks against the aux artifacts).
+fn ident_set(text: &str) -> std::collections::HashSet<String> {
+    lex(&scan(text).masked)
+        .into_iter()
+        .filter(|t| tok_is_ident(&t.text))
+        .map(|t| t.text)
+        .collect()
+}
+
+fn lint_sendptr_escape(model: &CrateModel, sink: &mut Sink) {
+    let miri_idents = ident_set(model.aux_text(AUX_MIRI));
+    for f in &model.files {
+        if f.rel == SENDPTR_HOME {
+            continue;
+        }
+        let toks = &f.toks;
+        let s = &f.scanned;
+        for (i, tok) in toks.iter().enumerate() {
+            if tok.text != "SendPtr" || i + 1 >= toks.len() || toks[i + 1].text != "(" {
+                continue;
+            }
+            let ln = tok.line;
+            let Some(fnm) = f.fns.iter().find(|g| g.body.0 <= i && i < g.body.1) else {
+                sink.emit(
+                    s,
+                    &f.rel,
+                    ln,
+                    "sendptr-escape",
+                    "`SendPtr` constructed outside any function body — disjoint \
+                     write ranges cannot be derived statically here"
+                        .into(),
+                    false,
+                );
+                continue;
+            };
+            if fnm.is_test {
+                continue;
+            }
+            let (start, end) = fnm.body;
+            let has_idiom = (start..end).any(|k| DISJOINT_IDIOMS.contains(&toks[k].text.as_str()));
+            if !has_idiom {
+                sink.emit(
+                    s,
+                    &f.rel,
+                    ln,
+                    "sendptr-escape",
+                    format!(
+                        "`SendPtr` constructed in `{}`, which derives no disjoint \
+                         ranges (no parallel_for / chunks / split_at idiom in the \
+                         body) — the Send/Sync contract requires provably disjoint \
+                         writes",
+                        fn_label(fnm)
+                    ),
+                    false,
+                );
+            }
+            if !miri_idents.contains(&fnm.name) {
+                sink.emit(
+                    s,
+                    &f.rel,
+                    ln,
+                    "sendptr-escape",
+                    format!(
+                        "`SendPtr` constructed in `{}`, but no test in {AUX_MIRI} names that \
+                         function — every SendPtr kernel must run under the Miri lane",
+                        fn_label(fnm)
+                    ),
+                    false,
+                );
+            }
+        }
+    }
+}
+
+// --- Rule 9: dispatch-parity-drift ----------------------------------------
+
+/// Lines of the DESIGN.md section whose heading starts with the prefix,
+/// through the next heading of equal-or-higher level.
+pub fn design_section(design: &str, header_prefix: &str) -> String {
+    let mut out = Vec::new();
+    let mut collecting = false;
+    for line in design.split('\n') {
+        if collecting && (line.starts_with("### ") || line.starts_with("## ")) {
+            break;
+        }
+        if line.starts_with(header_prefix) {
+            collecting = true;
+        }
+        if collecting {
+            out.push(line);
+        }
+    }
+    out.join("\n")
+}
+
+fn contains_ident(text: &str, name: &str) -> bool {
+    let bytes = text.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find(name) {
+        let p = p + from;
+        from = p + 1;
+        let pre_ok = p == 0 || !is_ident(bytes[p - 1]);
+        let end = p + name.len();
+        let post_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+    }
+    false
+}
+
+fn lint_dispatch_parity(model: &CrateModel, sink: &mut Sink) {
+    let parity_idents = ident_set(model.aux_text(AUX_PARITY));
+    let design_5e = design_section(model.aux_text(AUX_DESIGN), "### §5e");
+    for f in &model.files {
+        for st in &f.structs {
+            if st.name != "KernelDispatch" || st.is_test {
+                continue;
+            }
+            let s = &f.scanned;
+            for (fname, fline, first_ty) in &st.fields {
+                if first_ty != "fn" {
+                    continue;
+                }
+                let scalar_ok = f
+                    .fns
+                    .iter()
+                    .any(|g| &g.name == fname && g.mods.iter().any(|m| m == "scalar"));
+                let simd_ok = f.fns.iter().any(|g| &g.name == fname && g.is_simd);
+                let test_named = f
+                    .toks
+                    .iter()
+                    .any(|t| &t.text == fname && in_test(s, t.line));
+                let parity_ok = parity_idents.contains(fname) || test_named;
+                let design_ok = contains_ident(&design_5e, fname);
+                let base = format!("`KernelDispatch::{fname}`");
+                if !scalar_ok {
+                    sink.emit(
+                        s,
+                        &f.rel,
+                        *fline,
+                        "dispatch-parity-drift",
+                        format!(
+                            "{base} has no scalar arm (`fn {fname}` in `mod scalar`) — the \
+                             scalar tier is the bit-exact oracle every arm is judged \
+                             against"
+                        ),
+                        false,
+                    );
+                }
+                if !simd_ok {
+                    sink.emit(
+                        s,
+                        &f.rel,
+                        *fline,
+                        "dispatch-parity-drift",
+                        format!(
+                            "{base} has no feature-gated SIMD arm (`fn {fname}` under a \
+                             `#[cfg(.. feature = \"simd\" ..)]` item)"
+                        ),
+                        false,
+                    );
+                }
+                if !parity_ok {
+                    sink.emit(
+                        s,
+                        &f.rel,
+                        *fline,
+                        "dispatch-parity-drift",
+                        format!(
+                            "{base} is not named by any parity test ({AUX_PARITY} or a \
+                             `#[cfg(test)]` item in the defining file)"
+                        ),
+                        false,
+                    );
+                }
+                if !design_ok {
+                    sink.emit(
+                        s,
+                        &f.rel,
+                        *fline,
+                        "dispatch-parity-drift",
+                        format!("{base} has no DESIGN.md §5e parity-table row naming it"),
+                        false,
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --- crate driver ----------------------------------------------------------
+
+/// All nine lints over a set of `(rel, src)` files + aux artifacts.
+/// Returns findings sorted by `(file, line, rule, msg)` plus the count of
+/// `lint-ok`-suppressed findings.
+pub fn lint_crate(
+    file_pairs: &[(String, String)],
+    aux: std::collections::HashMap<String, String>,
+) -> (Vec<Finding>, usize) {
+    let model = CrateModel::build(file_pairs, aux);
+    let mut sink = Sink::default();
+    for f in &model.files {
+        lint_accounting_fields(&f.rel, &f.scanned, &mut sink);
+        lint_lossy_casts(&f.rel, &f.scanned, &mut sink);
+        lint_safety_comments(&f.rel, &f.scanned, &mut sink);
+        lint_hot_path_panics(&f.rel, &f.scanned, &mut sink);
+        lint_simd_gating(&f.rel, &f.scanned, &mut sink);
+    }
+    lint_hot_path_alloc(&model, &mut sink);
+    lint_unit_confusion(&model, &mut sink);
+    lint_sendptr_escape(&model, &mut sink);
+    lint_dispatch_parity(&model, &mut sink);
+    sink.findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule, &a.msg).cmp(&(&b.file, b.line, b.rule, &b.msg)));
+    (sink.findings, sink.suppressed)
+}
+
+/// Single-file convenience wrapper (unit tests, simple callers): no aux
+/// artifacts, so the cross-artifact clauses of the whole-program rules see
+/// empty test lists.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    lint_crate(
+        &[(rel.to_string(), src.to_string())],
+        std::collections::HashMap::new(),
+    )
+    .0
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     fn rules_of(f: &[Finding]) -> Vec<&'static str> {
         f.iter().map(|x| x.rule).collect()
@@ -350,10 +788,8 @@ mod tests {
         let bad = "fn f(p: &mut Pool) { p.used_bytes += 1; }\n";
         let f = lint_source("rust/src/server/engine.rs", bad);
         assert_eq!(rules_of(&f), vec!["accounting-fields"]);
-        // Accessor call is fine.
         let good = "fn f(p: &Pool) -> u64 { p.used_bytes() }\n";
         assert!(lint_source("rust/src/server/engine.rs", good).is_empty());
-        // Inside kvcache the field is the implementation — allowed.
         assert!(lint_source("rust/src/kvcache/mod.rs", bad).is_empty());
     }
 
@@ -362,15 +798,11 @@ mod tests {
         let bad = "fn f(x: u64) -> usize { x as usize }\n";
         let f = lint_source("rust/src/kvcache/mod.rs", bad);
         assert_eq!(rules_of(&f), vec!["lossy-casts"]);
-        // u64 widening and float casts are free.
         let good = "fn f(x: usize) -> u64 { x as u64 + (1.5 as f64) as u64 }\n";
         assert!(lint_source("rust/src/kvcache/mod.rs", good).is_empty());
-        // cast-ok annotation silences.
         let ok = "fn f(x: u64) -> usize { x as usize } // cast-ok: bounded by page_rows\n";
         assert!(lint_source("rust/src/kvcache/mod.rs", ok).is_empty());
-        // Kernel modules are out of scope (float-math allowlist).
         assert!(lint_source("rust/src/linalg/mat.rs", bad).is_empty());
-        // Tests are exempt.
         let test = "#[cfg(test)]\nmod tests {\n fn f(x: u64) -> usize { x as usize }\n}\n";
         assert!(lint_source("rust/src/kvcache/mod.rs", test).is_empty());
     }
@@ -383,8 +815,12 @@ mod tests {
         let good = "// SAFETY: p is valid for reads, caller contract.\nfn f(p: *const u8) -> u8 { unsafe { *p } }\n";
         assert!(lint_source("rust/src/util/x.rs", good).is_empty());
         let impl_bad = "unsafe impl<T> Send for P<T> {}\n";
-        assert_eq!(rules_of(&lint_source("rust/src/util/x.rs", impl_bad)), vec!["safety-comments"]);
-        let impl_good = "// SAFETY: P is only written at disjoint offsets.\nunsafe impl<T> Send for P<T> {}\n";
+        assert_eq!(
+            rules_of(&lint_source("rust/src/util/x.rs", impl_bad)),
+            vec!["safety-comments"]
+        );
+        let impl_good =
+            "// SAFETY: P is only written at disjoint offsets.\nunsafe impl<T> Send for P<T> {}\n";
         assert!(lint_source("rust/src/util/x.rs", impl_good).is_empty());
     }
 
@@ -393,34 +829,27 @@ mod tests {
         let bad = "impl B { fn admit(&mut self) { self.q.pop().unwrap(); } }\n";
         let f = lint_source("rust/src/coordinator/batcher.rs", bad);
         assert_eq!(rules_of(&f), vec!["hot-path-panics"]);
-        // Same code outside the hot path: fine.
         assert!(lint_source("rust/src/util/x.rs", bad).is_empty());
-        // step_fused is hot anywhere.
         let sf = "impl E { fn step_fused(&mut self) { panic!(\"boom\"); } }\n";
         assert_eq!(
             rules_of(&lint_source("rust/src/server/engine.rs", sf)),
             vec!["hot-path-panics"]
         );
-        // pump is hot only in coordinator/mod.rs.
         let pump = "impl R { fn pump(&mut self) { x.expect(\"y\"); } }\n";
         assert_eq!(
             rules_of(&lint_source("rust/src/coordinator/mod.rs", pump)),
             vec!["hot-path-panics"]
         );
         assert!(lint_source("rust/src/server/engine.rs", pump).is_empty());
-        // Tests in batcher.rs may unwrap.
         let test = "#[cfg(test)]\nmod tests {\n fn t() { q.pop().unwrap(); }\n}\n";
         assert!(lint_source("rust/src/coordinator/batcher.rs", test).is_empty());
     }
 
     #[test]
     fn ungated_intrinsics_flagged() {
-        // Bare arch import, no cfg gate, no detection macro: both findings.
         let bad = "use core::arch::x86_64::*;\nfn f() {}\n";
         let f = lint_source("rust/src/linalg/x.rs", bad);
         assert_eq!(rules_of(&f), vec!["simd-gating", "simd-gating"]);
-        // Properly gated module with a runtime check elsewhere in the file:
-        // clean.
         let good = "#[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
                     mod avx2 {\n\
                         use core::arch::x86_64::*;\n\
@@ -429,16 +858,113 @@ mod tests {
                     }\n\
                     fn pick() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
         assert!(lint_source("rust/src/linalg/x.rs", good).is_empty());
-        // Gated but no detection macro anywhere: the file-level finding.
         let undetected = "#[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
                           mod avx2 { use core::arch::x86_64::*; }\n";
         assert_eq!(
             rules_of(&lint_source("rust/src/linalg/x.rs", undetected)),
             vec!["simd-gating"]
         );
-        // Mentions in comments/strings don't count as intrinsic use.
         let prose = "// core::arch is discussed here\nfn f() { let s = \"core::arch\"; }\n";
         assert!(lint_source("rust/src/linalg/x.rs", prose).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_reachable_flagged() {
+        let src = "impl Batcher {\n  fn step(&mut self) { helper(); }\n}\n\
+                   fn helper() { let v: Vec<u32> = Vec::new(); drop(v); }\n";
+        let f = lint_source("rust/src/coordinator/batcher.rs", src);
+        assert_eq!(rules_of(&f), vec!["hot-path-alloc"]);
+        assert!(f[0].msg.contains("Vec::new"));
+        assert!(f[0].msg.contains("Batcher::step"));
+        // Unreachable fn: clean.
+        let cold = "fn helper() { let v: Vec<u32> = Vec::new(); drop(v); }\n";
+        assert!(lint_source("rust/src/coordinator/batcher.rs", cold).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_arena_and_annotations_exempt() {
+        let arena = "impl Batcher {\n  fn step(&mut self) { self.scratch.grow(); }\n}\n\
+                     struct Batcher { scratch: DecodeScratch }\nstruct DecodeScratch { n: usize }\n\
+                     impl DecodeScratch {\n  fn grow(&mut self) { self.buf = Vec::new(); }\n}\n";
+        assert!(lint_source("rust/src/server/engine.rs", arena).is_empty());
+        let annotated = "impl Batcher {\n  fn step(&mut self) {\n    \
+                         // lint-ok(hot-path-alloc): terminal event\n    \
+                         let m = format!(\"x\");\n    drop(m);\n  }\n}\n";
+        assert!(lint_source("rust/src/coordinator/batcher.rs", annotated).is_empty());
+    }
+
+    #[test]
+    fn unit_confusion_flagged_outside_tests() {
+        let src = "fn f(used_bytes: u64, max_tokens: u64) -> u64 { used_bytes + max_tokens }\n";
+        let f = lint_source("rust/src/kvcache/mod.rs", src);
+        assert_eq!(rules_of(&f), vec!["unit-confusion"]);
+        let test = "#[cfg(test)]\nmod tests {\n fn f(a_bytes: u64, b_tokens: u64) -> u64 { a_bytes + b_tokens }\n}\n";
+        assert!(lint_source("rust/src/kvcache/mod.rs", test).is_empty());
+    }
+
+    #[test]
+    fn sendptr_requires_idiom_and_miri_test() {
+        let src = "fn kernel(out: &mut [f32]) {\n  let p = SendPtr(out.as_mut_ptr());\n  drop(p);\n}\n";
+        // No idiom + no miri aux: both findings.
+        let f = lint_source("rust/src/linalg/mat.rs", src);
+        assert_eq!(rules_of(&f), vec!["sendptr-escape", "sendptr-escape"]);
+        // With the idiom and a miri test naming the fn: clean.
+        let good = "fn kernel(out: &mut [f32]) {\n  let (lo, hi) = out.split_at_mut(1);\n  let p = SendPtr(lo.as_mut_ptr());\n  drop((p, hi));\n}\n";
+        let mut aux = HashMap::new();
+        aux.insert(
+            crate::callgraph::AUX_MIRI.to_string(),
+            "#[test]\nfn miri_kernel() { kernel(&mut []); }\n".to_string(),
+        );
+        let (f, _) = lint_crate(
+            &[("rust/src/linalg/mat.rs".to_string(), good.to_string())],
+            aux,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn dispatch_parity_drift_fires_per_missing_artifact() {
+        let src = "pub struct KernelDispatch {\n  pub dot_f32: fn(&[f32], &[f32]) -> f32,\n}\n";
+        let f = lint_source("rust/src/linalg/simd.rs", src);
+        // No scalar arm, no simd arm, no parity test, no DESIGN row.
+        assert_eq!(f.len(), 4);
+        assert!(f.iter().all(|x| x.rule == "dispatch-parity-drift"));
+    }
+
+    #[test]
+    fn dispatch_parity_clean_when_all_artifacts_present() {
+        let src = "pub struct KernelDispatch {\n  pub dot_f32: fn(&[f32], &[f32]) -> f32,\n}\n\
+                   mod scalar {\n  pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 { s(a, b) }\n}\n\
+                   #[cfg(all(feature = \"simd\", target_arch = \"x86_64\"))]\n\
+                   mod avx2 {\n  pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 { v(a, b) }\n}\n";
+        let mut aux = HashMap::new();
+        aux.insert(
+            crate::callgraph::AUX_PARITY.to_string(),
+            "#[test]\nfn parity() { check(dot_f32); }\n".to_string(),
+        );
+        aux.insert(
+            crate::callgraph::AUX_DESIGN.to_string(),
+            "### §5e kernels\n\n| `dot_f32` | bitwise |\n\n### next\n".to_string(),
+        );
+        let (f, _) = lint_crate(
+            &[("rust/src/linalg/simd.rs".to_string(), src.to_string())],
+            aux,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn suppression_is_counted() {
+        let src = "impl Batcher {\n  fn step(&mut self) {\n    // lint-ok(hot-path-alloc): once\n    let v = vec![0u8; 4];\n    drop(v);\n  }\n}\n";
+        let (f, suppressed) = lint_crate(
+            &[(
+                "rust/src/coordinator/batcher.rs".to_string(),
+                src.to_string(),
+            )],
+            HashMap::new(),
+        );
+        assert!(f.is_empty());
+        assert_eq!(suppressed, 1);
     }
 
     #[test]

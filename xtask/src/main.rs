@@ -2,33 +2,79 @@
 //!
 //! Subcommands:
 //!
-//! * `cargo xtask lint` — run the five structural lints (see [`lints`])
-//!   over `rust/src`. Exits non-zero, listing `file:line: [rule] message`
-//!   findings, when the tree is not clean.
-//! * `cargo xtask fixtures` — self-test: lint every negative fixture under
-//!   `xtask/fixtures/` and verify each one trips exactly the rule named in
-//!   its `// expect-lint:` header (`none` for the clean control). Exits
-//!   non-zero if a fixture fails to trip — i.e. if the lint harness itself
-//!   has gone blind.
+//! * `cargo xtask lint [--format human|json|sarif]` — run the nine
+//!   structural lints (see [`lints`]) over `rust/src`, with the
+//!   cross-artifact aux inputs (`rust/tests/miri_kernels.rs`,
+//!   `rust/tests/kernel_parity_test.rs`, `DESIGN.md`) read from disk.
+//!   Exits non-zero when the tree is not clean. `json` is a machine
+//!   summary; `sarif` is SARIF 2.1.0 for code-scanning upload.
+//! * `cargo xtask fixtures [--emit-findings]` — self-test: lint every
+//!   fixture under `xtask/fixtures/` and verify each one trips exactly the
+//!   rule named in its `// expect-lint:` header (`none` for clean
+//!   controls), then run the registration self-check (every rule id must
+//!   have a fixture, a CI mention, and a DESIGN.md §9 row).
+//!   `--emit-findings` instead prints the canonical
+//!   `fixture|file|line|rule` lines used for cross-implementation
+//!   agreement with `tools/lint_mirror.py`.
+//!
+//! Fixtures may carry extra virtual files: a `//=== file: <path>` line
+//! starts a new section; sections whose path is one of the aux artifacts
+//! override that artifact, any other section becomes an additional crate
+//! file (so call-graph and cross-artifact rules are exercisable from a
+//! single fixture file).
 //!
 //! The harness is wired as a workspace member with the conventional
 //! `.cargo/config.toml` alias, and runs as the blocking `lint-xtask` CI
-//! job. DESIGN.md §9 documents the rules and how to extend them.
+//! job; `tools/lint_mirror.py` is the toolchain-free mirror that must stay
+//! finding-for-finding identical (the `mirror_agrees_on_fixtures` test and
+//! the `lint-mirror` CI job enforce it). DESIGN.md §9 documents the rules
+//! and how to extend them.
 
+mod callgraph;
+mod items;
+mod lexer;
 mod lints;
 mod scan;
+mod units;
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(String::as_str) {
-        Some("lint") => lint_tree(),
-        Some("fixtures") => check_fixtures(),
-        _ => {
-            eprintln!("usage: cargo xtask <lint|fixtures>");
-            ExitCode::FAILURE
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if !args.is_empty() && !args[0].starts_with('-') {
+        args.remove(0)
+    } else {
+        "lint".to_string()
+    };
+    let mut fmt = "human".to_string();
+    let mut emit = false;
+    let mut i = 0usize;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--format" && i + 1 < args.len() {
+            fmt = args[i + 1].clone();
+            i += 2;
+        } else if let Some(v) = a.strip_prefix("--format=") {
+            fmt = v.to_string();
+            i += 1;
+        } else if a == "--emit-findings" {
+            emit = true;
+            i += 1;
+        } else {
+            eprintln!(
+                "usage: cargo xtask <lint|fixtures> [--format human|json|sarif] [--emit-findings]"
+            );
+            return ExitCode::from(2);
+        }
+    }
+    match cmd.as_str() {
+        "lint" => lint_tree(&fmt),
+        "fixtures" => check_fixtures(emit),
+        other => {
+            eprintln!("unknown command `{other}`");
+            ExitCode::from(2)
         }
     }
 }
@@ -56,46 +102,191 @@ fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-fn lint_tree() -> ExitCode {
+/// Aux artifacts read from the repo (absent file = empty, the rules then
+/// report the missing coverage as findings rather than erroring).
+fn read_aux_from_repo(root: &Path) -> HashMap<String, String> {
+    let mut aux = HashMap::new();
+    for rel in callgraph::AUX_PATHS {
+        if let Ok(text) = std::fs::read_to_string(root.join(rel)) {
+            aux.insert(rel.to_string(), text);
+        }
+    }
+    aux
+}
+
+fn lint_tree(fmt: &str) -> ExitCode {
     let root = repo_root();
-    let mut files = Vec::new();
-    rust_files(&root.join("rust/src"), &mut files);
-    if files.is_empty() {
+    let mut paths = Vec::new();
+    rust_files(&root.join("rust/src"), &mut paths);
+    if paths.is_empty() {
         eprintln!("xtask lint: no Rust sources found under {}", root.display());
         return ExitCode::FAILURE;
     }
-    let mut findings = 0usize;
-    for path in &files {
+    let mut files = Vec::new();
+    for path in &paths {
         let rel = path
             .strip_prefix(&root)
             .unwrap_or(path)
             .to_string_lossy()
             .replace('\\', "/");
-        let Ok(src) = std::fs::read_to_string(path) else {
-            eprintln!("xtask lint: unreadable file {}", path.display());
-            findings += 1;
-            continue;
-        };
-        for f in lints::lint_source(&rel, &src) {
-            println!("{rel}:{}: [{}] {}", f.line, f.rule, f.msg);
-            findings += 1;
+        match std::fs::read_to_string(path) {
+            Ok(src) => files.push((rel, src)),
+            Err(e) => {
+                eprintln!("xtask lint: unreadable file {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
         }
     }
-    if findings == 0 {
-        println!("xtask lint: {} files clean", files.len());
+    let (findings, suppressed) = lints::lint_crate(&files, read_aux_from_repo(&root));
+    match fmt {
+        "json" => println!("{}", json_summary(&findings, suppressed, files.len())),
+        "sarif" => println!("{}", sarif_report(&findings)),
+        _ => {
+            for f in &findings {
+                println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+            }
+            if findings.is_empty() {
+                println!(
+                    "xtask lint: {} files clean ({suppressed} finding(s) suppressed by lint-ok)",
+                    files.len()
+                );
+            } else {
+                eprintln!(
+                    "xtask lint: {} finding(s), {suppressed} suppressed by lint-ok",
+                    findings.len()
+                );
+            }
+        }
+    }
+    if findings.is_empty() {
         ExitCode::SUCCESS
     } else {
-        eprintln!("xtask lint: {findings} finding(s)");
         ExitCode::FAILURE
     }
 }
 
+// --- hand-rolled JSON (xtask has no dependencies by design) ----------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_summary(findings: &[lints::Finding], suppressed: usize, files: usize) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"files\": {files},\n"));
+    out.push_str("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"msg\": \"{}\", \"rule\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.msg),
+            f.rule
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("],\n");
+    out.push_str(&format!("  \"suppressed\": {suppressed}\n}}"));
+    out
+}
+
+/// SARIF 2.1.0, the shape code-scanning services ingest. Keys are emitted
+/// in sorted order to match `tools/lint_mirror.py --format sarif`.
+fn sarif_report(findings: &[lints::Finding]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(
+        "  \"$schema\": \"https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json\",\n",
+    );
+    out.push_str("  \"runs\": [\n    {\n      \"results\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n        {{\n          \"level\": \"error\",\n          \
+             \"locations\": [{{\"physicalLocation\": {{\"artifactLocation\": \
+             {{\"uri\": \"{}\"}}, \"region\": {{\"startLine\": {}}}}}}}],\n          \
+             \"message\": {{\"text\": \"{}\"}},\n          \"ruleId\": \"{}\"\n        }}",
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.msg),
+            f.rule
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n      ");
+    }
+    out.push_str("],\n");
+    out.push_str("      \"tool\": {\n        \"driver\": {\n");
+    out.push_str("          \"informationUri\": \"https://example.invalid/kqsvd/DESIGN.md\",\n");
+    out.push_str("          \"name\": \"kqsvd-xtask-lint\",\n");
+    out.push_str("          \"rules\": [");
+    for (i, r) in lints::RULES.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("{{\"id\": \"{r}\"}}"));
+    }
+    out.push_str("]\n        }\n      }\n    }\n  ],\n  \"version\": \"2.1.0\"\n}");
+    out
+}
+
+// --- fixtures --------------------------------------------------------------
+
+const SECTION_PREFIX: &str = "//=== file: ";
+
+/// `(main_text, extra_files, aux)` — sections split on `//=== file:` lines.
+fn split_fixture(text: &str) -> (String, Vec<(String, String)>, HashMap<String, String>) {
+    let mut sections: Vec<(Option<String>, Vec<&str>)> = Vec::new();
+    let mut cur_path: Option<String> = None;
+    let mut cur: Vec<&str> = Vec::new();
+    for line in text.split('\n') {
+        if let Some(rest) = line.strip_prefix(SECTION_PREFIX) {
+            sections.push((cur_path.take(), std::mem::take(&mut cur)));
+            cur_path = Some(rest.trim().to_string());
+        } else {
+            cur.push(line);
+        }
+    }
+    sections.push((cur_path, cur));
+    let main = sections[0].1.join("\n");
+    let mut extra = Vec::new();
+    let mut aux = HashMap::new();
+    for (path, body_lines) in sections.into_iter().skip(1) {
+        let path = path.unwrap_or_default();
+        let body = body_lines.join("\n");
+        if callgraph::AUX_PATHS.contains(&path.as_str()) {
+            aux.insert(path, body);
+        } else {
+            extra.push((path, body));
+        }
+    }
+    (main, extra, aux)
+}
+
 /// Parse a fixture's `// lint-as:` (virtual repo path) and
 /// `// expect-lint:` (rule name or `none`) headers.
-fn fixture_headers(src: &str) -> Option<(String, String)> {
+fn fixture_headers(main: &str) -> Option<(String, String)> {
     let mut lint_as = None;
     let mut expect = None;
-    for line in src.lines().take(10) {
+    for line in main.lines().take(10) {
         if let Some(v) = line.strip_prefix("// lint-as:") {
             lint_as = Some(v.trim().to_string());
         }
@@ -106,23 +297,33 @@ fn fixture_headers(src: &str) -> Option<(String, String)> {
     Some((lint_as?, expect?))
 }
 
-fn run_fixture(path: &Path) -> Result<(), String> {
-    let src = std::fs::read_to_string(path).map_err(|e| format!("unreadable: {e}"))?;
-    let (lint_as, expect) =
-        fixture_headers(&src).ok_or("missing `// lint-as:` / `// expect-lint:` headers")?;
+fn run_fixture_text(text: &str) -> Result<(Vec<lints::Finding>, String), String> {
+    let (main, extra, aux) = split_fixture(text);
+    let (lint_as, expect) = fixture_headers(&main)
+        .ok_or_else(|| "missing `// lint-as:` / `// expect-lint:` headers".to_string())?;
     if expect != "none" && !lints::RULES.contains(&expect.as_str()) {
         return Err(format!("unknown rule `{expect}` in expect-lint header"));
     }
-    let findings = lints::lint_source(&lint_as, &src);
+    let mut files = vec![(lint_as, main)];
+    files.extend(extra);
+    let (findings, _) = lints::lint_crate(&files, aux);
+    Ok((findings, expect))
+}
+
+fn check_fixture(path: &Path) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("unreadable: {e}"))?;
+    let (findings, expect) = run_fixture_text(&text)?;
     if expect == "none" {
         if findings.is_empty() {
             return Ok(());
         }
+        let f0 = &findings[0];
         return Err(format!(
-            "clean control fixture tripped {} finding(s): first = line {} [{}]",
+            "clean control tripped {} finding(s): first = {}:{} [{}]",
             findings.len(),
-            findings[0].line,
-            findings[0].rule
+            f0.file,
+            f0.line,
+            f0.rule
         ));
     }
     if findings.iter().any(|f| f.rule == expect) {
@@ -135,7 +336,58 @@ fn run_fixture(path: &Path) -> Result<(), String> {
     }
 }
 
-fn check_fixtures() -> ExitCode {
+/// Canonical `fixture|file|line|rule` lines over the whole fixture corpus —
+/// the agreement surface shared with `tools/lint_mirror.py`.
+fn emit_fixture_findings(paths: &[PathBuf]) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for path in paths {
+        let name = path.file_name().unwrap_or_default().to_string_lossy();
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("fixture {name}: unreadable: {e}"))?;
+        let (findings, _) = run_fixture_text(&text).map_err(|e| format!("fixture {name}: {e}"))?;
+        for f in findings {
+            out.push(format!("{name}|{}|{}|{}", f.file, f.line, f.rule));
+        }
+    }
+    Ok(out)
+}
+
+/// Every rule id must appear in the fixture corpus (an `expect-lint`
+/// header), be named in CI, and be documented in DESIGN.md §9 — adding a
+/// lint without registering it everywhere is itself a lint failure.
+fn registration_selfcheck(root: &Path, fixture_paths: &[PathBuf]) -> Vec<String> {
+    let mut errors = Vec::new();
+    let mut expects = Vec::new();
+    for path in fixture_paths {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            continue;
+        };
+        let (main, _, _) = split_fixture(&text);
+        if let Some((_, expect)) = fixture_headers(&main) {
+            expects.push(expect);
+        }
+    }
+    let ci = std::fs::read_to_string(root.join(".github/workflows/ci.yml")).unwrap_or_default();
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+    let design_9 = lints::design_section(&design, "## §9");
+    for rule in lints::RULES {
+        if !expects.iter().any(|e| e == rule) {
+            errors.push(format!("rule `{rule}` has no fixture (expect-lint header)"));
+        }
+        if !ci.contains(rule) {
+            errors.push(format!("rule `{rule}` not named in .github/workflows/ci.yml"));
+        }
+        if !design_9.contains(rule) {
+            errors.push(format!("rule `{rule}` not documented in DESIGN.md §9"));
+        }
+    }
+    if !expects.iter().any(|e| e == "none") {
+        errors.push("no clean control fixture (expect-lint: none)".to_string());
+    }
+    errors
+}
+
+fn check_fixtures(emit: bool) -> ExitCode {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
     let mut files = Vec::new();
     rust_files(&dir, &mut files);
@@ -143,10 +395,24 @@ fn check_fixtures() -> ExitCode {
         eprintln!("xtask fixtures: none found under {}", dir.display());
         return ExitCode::FAILURE;
     }
+    if emit {
+        return match emit_fixture_findings(&files) {
+            Ok(lines) => {
+                for l in lines {
+                    println!("{l}");
+                }
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("xtask fixtures: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
     let mut failed = 0usize;
     for f in &files {
         let name = f.file_name().unwrap_or_default().to_string_lossy();
-        match run_fixture(f) {
+        match check_fixture(f) {
             Ok(()) => println!("fixture {name}: ok"),
             Err(e) => {
                 eprintln!("fixture {name}: FAILED — {e}");
@@ -154,11 +420,19 @@ fn check_fixtures() -> ExitCode {
             }
         }
     }
+    for err in registration_selfcheck(&repo_root(), &files) {
+        eprintln!("registration self-check: FAILED — {err}");
+        failed += 1;
+    }
     if failed == 0 {
-        println!("xtask fixtures: {} fixture(s) verified", files.len());
+        println!(
+            "xtask fixtures: {} fixture(s) verified; registration self-check passed ({} rules)",
+            files.len(),
+            lints::RULES.len()
+        );
         ExitCode::SUCCESS
     } else {
-        eprintln!("xtask fixtures: {failed} fixture(s) failed");
+        eprintln!("xtask fixtures: {failed} failure(s)");
         ExitCode::FAILURE
     }
 }
@@ -167,16 +441,20 @@ fn check_fixtures() -> ExitCode {
 mod tests {
     use super::*;
 
-    /// Every committed fixture must behave as declared — this is the same
-    /// check as `cargo xtask fixtures`, wired into `cargo test -p xtask`.
-    #[test]
-    fn all_fixtures_trip_their_rule() {
+    fn fixture_paths() -> Vec<PathBuf> {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
         let mut files = Vec::new();
         rust_files(&dir, &mut files);
         assert!(!files.is_empty(), "fixtures directory missing or empty");
-        for f in &files {
-            if let Err(e) = run_fixture(f) {
+        files
+    }
+
+    /// Every committed fixture must behave as declared — this is the same
+    /// check as `cargo xtask fixtures`, wired into `cargo test -p xtask`.
+    #[test]
+    fn all_fixtures_trip_their_rule() {
+        for f in fixture_paths() {
+            if let Err(e) = check_fixture(&f) {
                 panic!("fixture {}: {e}", f.display());
             }
         }
@@ -186,13 +464,11 @@ mod tests {
     /// the lint registry.
     #[test]
     fn fixture_coverage_spans_all_rules() {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
-        let mut files = Vec::new();
-        rust_files(&dir, &mut files);
         let mut covered: Vec<String> = Vec::new();
-        for f in &files {
-            let src = std::fs::read_to_string(f).unwrap();
-            let (_, expect) = fixture_headers(&src).unwrap();
+        for f in fixture_paths() {
+            let text = std::fs::read_to_string(&f).unwrap();
+            let (main, _, _) = split_fixture(&text);
+            let (_, expect) = fixture_headers(&main).unwrap();
             covered.push(expect);
         }
         for rule in lints::RULES {
@@ -201,9 +477,67 @@ mod tests {
                 "no negative fixture covers rule `{rule}`"
             );
         }
+        assert!(covered.iter().any(|c| c == "none"), "no clean control fixture");
+    }
+
+    /// Adding a lint means registering it in fixtures, CI, and DESIGN §9.
+    #[test]
+    fn registration_selfcheck_passes() {
+        let errors = registration_selfcheck(&repo_root(), &fixture_paths());
+        assert!(errors.is_empty(), "{errors:#?}");
+    }
+
+    /// `tools/lint_mirror.py` must agree finding-for-finding with this
+    /// implementation over the whole fixture corpus. Canonical lines are
+    /// `fixture|file|line|rule` — msg differences cannot hide here because
+    /// ordering ties on msg only between lines that are otherwise
+    /// identical. Skips (with a note) when python3 is unavailable.
+    #[test]
+    fn mirror_agrees_on_fixtures() {
+        let root = repo_root();
+        let ours = emit_fixture_findings(&fixture_paths()).expect("fixtures lint cleanly");
+        let out = match std::process::Command::new("python3")
+            .args(["tools/lint_mirror.py", "fixtures", "--emit-findings"])
+            .current_dir(&root)
+            .output()
+        {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("skipping mirror agreement: python3 unavailable ({e})");
+                return;
+            }
+        };
         assert!(
-            covered.iter().any(|c| c == "none"),
-            "no clean control fixture"
+            out.status.success(),
+            "lint_mirror.py failed: {}",
+            String::from_utf8_lossy(&out.stderr)
         );
+        let theirs: Vec<String> = String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .map(|l| l.to_string())
+            .collect();
+        assert_eq!(
+            ours, theirs,
+            "xtask and tools/lint_mirror.py disagree on the fixture corpus"
+        );
+    }
+
+    #[test]
+    fn fixture_sections_split() {
+        let text = "// lint-as: rust/src/a.rs\n// expect-lint: none\nfn main() {}\n\
+                    //=== file: rust/tests/miri_kernels.rs\nfn t() {}\n\
+                    //=== file: rust/src/b.rs\nfn b() {}\n";
+        let (main, extra, aux) = split_fixture(text);
+        assert!(main.contains("fn main"));
+        assert_eq!(extra.len(), 1);
+        assert_eq!(extra[0].0, "rust/src/b.rs");
+        assert!(aux.contains_key(callgraph::AUX_MIRI));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        // Findings text flows through untouched otherwise (incl. non-ASCII).
+        assert_eq!(json_escape("§5e — ok"), "§5e — ok");
     }
 }

@@ -1,0 +1,420 @@
+//! Suffix-driven unit inference for the `unit-confusion` lint.
+//!
+//! A value's unit comes from its name: `_bytes` / `_tokens` / `_pages` /
+//! `_rows` suffixes carry the four accounting units, `_per_`-named values
+//! (`bytes_per_token`, …) are ratios, and the blessed converters return
+//! their true unit regardless of spelling (`bytes_for_tokens` RETURNS
+//! bytes). Units propagate through let-bindings and arithmetic by a small
+//! recursive-descent scanner over the token stream:
+//!
+//! * `+` / `-` / comparisons between two *different* units conflict;
+//! * `*` by a ratio converts (result unit-free); a mixed-unit product is
+//!   dimensionally new (unit-free); `/` and `%` by a unitful divisor yield
+//!   a ratio (unit-free);
+//! * `as` casts preserve the operand's unit; indexing/calls recurse into
+//!   the group so nested arguments and closure bodies are still scanned.
+//!
+//! This is dataflow-lite, not a type system: a binding's suffix wins over
+//! its initializer (the name is the declared intent), and anything the
+//! scanner cannot classify is unit-free — unknown values never conflict,
+//! so imprecision fails silent rather than noisy.
+//!
+//! Keep in lockstep with the `UnitScanner` section of
+//! `tools/lint_mirror.py`.
+
+use std::collections::HashMap;
+
+use crate::lexer::{match_bracket_toks, match_paren_toks, skip_angle, tok_is_ident, Tok};
+
+pub type Unit = &'static str;
+
+const UNIT_SUFFIXES: [(&str, Unit); 4] = [
+    ("_bytes", "bytes"),
+    ("_tokens", "tokens"),
+    ("_pages", "pages"),
+    ("_rows", "rows"),
+];
+pub const UNITS: [Unit; 4] = ["bytes", "tokens", "pages", "rows"];
+
+/// Blessed converters: the value each returns carries its true unit even
+/// when the name's suffix says otherwise.
+const UNIT_CONVERTERS: [(&str, Unit); 5] = [
+    ("bytes_for_tokens", "bytes"),
+    ("token_bytes", "bytes"),
+    ("cache_bytes_per_token", "ratio"),
+    ("bytes_per_token", "ratio"),
+    ("bytes_per_token_for", "ratio"),
+];
+
+fn is_unit(u: Option<Unit>) -> bool {
+    matches!(u, Some(x) if UNITS.contains(&x))
+}
+
+pub fn suffix_unit(name: &str) -> Option<Unit> {
+    if name.contains("_per_") {
+        return Some("ratio");
+    }
+    for (suf, unit) in UNIT_SUFFIXES {
+        if name.ends_with(suf) || name == &suf[1..] {
+            return Some(unit);
+        }
+    }
+    None
+}
+
+fn unit_for(name: &str, env: &HashMap<String, Option<Unit>>) -> Option<Unit> {
+    for (conv, unit) in UNIT_CONVERTERS {
+        if name == conv {
+            return Some(unit);
+        }
+    }
+    if let Some(u) = env.get(name) {
+        return *u;
+    }
+    suffix_unit(name)
+}
+
+/// A cross-unit `+`/`-`/comparison: (line, left unit, operator, right unit).
+pub struct UnitConflict {
+    pub line: usize,
+    pub left: Unit,
+    pub op: String,
+    pub right: Unit,
+}
+
+const ADD_OPS: [&str; 4] = ["+", "-", "+=", "-="];
+const CMP_OPS: [&str; 6] = ["<", ">", "<=", ">=", "==", "!="];
+const UNARY_PREFIX: [&str; 6] = ["&", "mut", "*", "-", "+", "!"];
+const MUL_OPS: [&str; 3] = ["*", "/", "%"];
+
+/// Forward expression scanner over a fn body's tokens. Flags `+`/`-` and
+/// comparisons whose two terms carry different unit suffixes.
+pub struct UnitScanner<'a> {
+    toks: &'a [Tok],
+    end: usize,
+    env: HashMap<String, Option<Unit>>,
+    pub conflicts: Vec<UnitConflict>,
+}
+
+impl<'a> UnitScanner<'a> {
+    pub fn new(toks: &'a [Tok], end: usize) -> UnitScanner<'a> {
+        UnitScanner {
+            toks,
+            end,
+            env: HashMap::new(),
+            conflicts: Vec::new(),
+        }
+    }
+
+    fn tok(&self, i: usize) -> &str {
+        if i < self.end {
+            self.toks[i].text.as_str()
+        } else {
+            ""
+        }
+    }
+
+    fn line(&self, i: usize) -> usize {
+        if i < self.end {
+            self.toks[i].line
+        } else {
+            0
+        }
+    }
+
+    pub fn scan_region(&mut self, mut i: usize, end: usize) {
+        let saved = self.end;
+        self.end = end.min(saved);
+        while i < self.end {
+            if self.tok(i) == "let" {
+                i = self.parse_let(i);
+                continue;
+            }
+            let (_, j) = self.parse_expr(i);
+            i = if j > i { j } else { i + 1 };
+        }
+        self.end = saved;
+    }
+
+    /// `let [mut] NAME [: ty] = expr` — bind NAME's unit in env.
+    fn parse_let(&mut self, i: usize) -> usize {
+        let mut j = i + 1;
+        if self.tok(j) == "mut" {
+            j += 1;
+        }
+        if !tok_is_ident(self.tok(j)) {
+            return i + 1;
+        }
+        let name = self.tok(j).to_string();
+        j += 1;
+        // Scan to `=` (stop at `;`); skip angle groups in type annotations.
+        while j < self.end && self.tok(j) != "=" && self.tok(j) != ";" {
+            if self.tok(j) == "<" {
+                j = skip_angle(self.toks, j);
+            } else {
+                j += 1;
+            }
+        }
+        if self.tok(j) != "=" {
+            self.env.insert(name.clone(), suffix_unit(&name));
+            return j + 1;
+        }
+        let (unit, k) = self.parse_expr(j + 1);
+        // The name's suffix is the declared intent; the initializer's unit
+        // is the fallback.
+        self.env.insert(name.clone(), suffix_unit(&name).or(unit));
+        if k > j + 1 {
+            k
+        } else {
+            j + 2
+        }
+    }
+
+    fn parse_expr(&mut self, i: usize) -> (Option<Unit>, usize) {
+        let (mut lu, mut i) = self.parse_term(i);
+        loop {
+            let op = self.tok(i).to_string();
+            if ADD_OPS.contains(&op.as_str()) || CMP_OPS.contains(&op.as_str()) {
+                let line = self.line(i);
+                let (ru, j) = self.parse_term(i + 1);
+                if j == i + 1 {
+                    return (lu, i);
+                }
+                if is_unit(lu) && is_unit(ru) && lu != ru {
+                    self.conflicts.push(UnitConflict {
+                        line,
+                        left: lu.unwrap(),
+                        op: op.clone(),
+                        right: ru.unwrap(),
+                    });
+                }
+                lu = if CMP_OPS.contains(&op.as_str()) {
+                    None
+                } else {
+                    lu.or(ru)
+                };
+                i = j;
+            } else {
+                return (lu, i);
+            }
+        }
+    }
+
+    fn parse_term(&mut self, i: usize) -> (Option<Unit>, usize) {
+        let (mut u, mut i) = self.parse_factor(i);
+        loop {
+            let op = self.tok(i).to_string();
+            if MUL_OPS.contains(&op.as_str()) {
+                let (u2, j) = self.parse_factor(i + 1);
+                if j == i + 1 {
+                    return (u, i);
+                }
+                if op == "*" {
+                    if u == Some("ratio") || u2 == Some("ratio") {
+                        u = None; // ratio factor converts the unit
+                    } else if u.is_some() && u2.is_some() {
+                        u = None; // mixed-unit product: dimensionally new
+                    } else if u2.is_some() {
+                        u = u2;
+                    }
+                } else {
+                    // `/` or `%`
+                    if u2.is_some() {
+                        u = None; // unitful divisor: result is a ratio
+                    }
+                }
+                i = j;
+            } else {
+                return (u, i);
+            }
+        }
+    }
+
+    fn parse_factor(&mut self, mut i: usize) -> (Option<Unit>, usize) {
+        while UNARY_PREFIX.contains(&self.tok(i)) {
+            i += 1;
+        }
+        let t = self.tok(i);
+        if t == "(" {
+            let close = match_paren_toks(self.toks, i);
+            let (inner, _) = self.parse_expr(i + 1);
+            self.scan_rest_of_group(i + 1, close);
+            return self.postfix(inner, close + 1, true);
+        }
+        if tok_is_ident(t) {
+            return self.chain(i);
+        }
+        if t.as_bytes().first().is_some_and(|b| b.is_ascii_digit()) {
+            return self.postfix(None, i + 1, false);
+        }
+        (None, i)
+    }
+
+    /// After taking the group's leading expr for a unit, still walk the
+    /// remainder (later args, closure bodies) for nested conflicts.
+    fn scan_rest_of_group(&mut self, start: usize, close: usize) {
+        let saved = self.end;
+        self.end = close;
+        self.scan_region(start, close);
+        self.end = saved;
+    }
+
+    fn chain(&mut self, i: usize) -> (Option<Unit>, usize) {
+        let last = self.tok(i).to_string();
+        self.postfix_chain(last, i + 1)
+    }
+
+    fn postfix_chain(&mut self, mut last: String, mut i: usize) -> (Option<Unit>, usize) {
+        loop {
+            let t = self.tok(i).to_string();
+            if t == "::" && tok_is_ident(self.tok(i + 1)) {
+                last = self.tok(i + 1).to_string();
+                i += 2;
+            } else if t == "::" && self.tok(i + 1) == "<" {
+                i = skip_angle(self.toks, i + 1);
+            } else if t == "." {
+                let nxt = self.tok(i + 1).to_string();
+                if tok_is_ident(&nxt) {
+                    last = nxt;
+                    i += 2;
+                } else if nxt.as_bytes().first().is_some_and(|b| b.is_ascii_digit()) {
+                    i += 2;
+                } else {
+                    break;
+                }
+            } else if t == "(" {
+                let close = match_paren_toks(self.toks, i);
+                self.scan_rest_of_group(i + 1, close);
+                i = close + 1;
+            } else if t == "[" {
+                let close = match_bracket_toks(self.toks, i);
+                self.scan_rest_of_group(i + 1, close);
+                i = close + 1;
+            } else if t == "?" {
+                i += 1;
+            } else if t == "as" {
+                // Keep the operand's unit across `x as u64`.
+                i += 1;
+                while self.tok(i) == "&" || self.tok(i) == "mut" {
+                    i += 1;
+                }
+                if tok_is_ident(self.tok(i)) {
+                    i += 1;
+                    while self.tok(i) == "::" && tok_is_ident(self.tok(i + 1)) {
+                        i += 2;
+                    }
+                    if self.tok(i) == "<" {
+                        i = skip_angle(self.toks, i);
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+        (unit_for(&last, &self.env), i)
+    }
+
+    /// Non-ident primaries only take `.0` / `?` / `as` postfix.
+    fn postfix(&mut self, unit: Option<Unit>, mut i: usize, keep_unit: bool) -> (Option<Unit>, usize) {
+        loop {
+            let t = self.tok(i);
+            if t == "."
+                && self
+                    .tok(i + 1)
+                    .as_bytes()
+                    .first()
+                    .is_some_and(|b| b.is_ascii_digit())
+            {
+                i += 2;
+            } else if t == "?" {
+                i += 1;
+            } else if t == "as" {
+                i += 1;
+                if tok_is_ident(self.tok(i)) {
+                    i += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        (if keep_unit { unit } else { None }, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::scan::scan;
+
+    fn conflicts(body: &str) -> Vec<(usize, Unit, String, Unit)> {
+        let toks = lex(&scan(body).masked);
+        let mut sc = UnitScanner::new(&toks, toks.len());
+        sc.scan_region(0, toks.len());
+        sc.conflicts
+            .into_iter()
+            .map(|c| (c.line, c.left, c.op, c.right))
+            .collect()
+    }
+
+    #[test]
+    fn cross_unit_add_flagged() {
+        let c = conflicts("let total = used_bytes + max_tokens;\n");
+        assert_eq!(c.len(), 1);
+        assert_eq!((c[0].1, c[0].2.as_str(), c[0].3), ("bytes", "+", "tokens"));
+    }
+
+    #[test]
+    fn same_unit_and_unitless_clean() {
+        assert!(conflicts("let t = used_bytes + cold_bytes;\n").is_empty());
+        assert!(conflicts("let t = used_bytes + 4096;\n").is_empty());
+    }
+
+    #[test]
+    fn converter_call_returns_true_unit() {
+        assert!(conflicts("let b = used_bytes + spec.bytes_for_tokens(n_tokens);\n").is_empty());
+        // Without the converter, tokens + bytes conflicts.
+        let c = conflicts("let b = used_bytes + n_tokens;\n");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn ratio_multiplication_converts() {
+        assert!(conflicts("let b = used_bytes + n_tokens * spec.bytes_per_token();\n").is_empty());
+        assert!(conflicts("seq_bytes += tokens as u64 * spec.bytes_per_token();\n").is_empty());
+    }
+
+    #[test]
+    fn unit_propagates_through_let() {
+        let c = conflicts("let held = used_bytes;\nlet x = held + n_tokens;\n");
+        assert_eq!(c.len(), 1);
+        assert_eq!((c[0].1, c[0].3), ("bytes", "tokens"));
+        assert_eq!(c[0].0, 2);
+    }
+
+    #[test]
+    fn suffix_on_binding_wins_over_initializer() {
+        // `let n_tokens = raw_bytes / 16` would taint by initializer; the
+        // declared suffix is authoritative and division clears units anyway.
+        assert!(conflicts("let n_tokens = raw_bytes / 16;\nlet y = n_tokens + max_tokens;\n").is_empty());
+    }
+
+    #[test]
+    fn comparisons_conflict_and_yield_unitless() {
+        let c = conflicts("if used_bytes < max_tokens { f(); }\n");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].2, "<");
+    }
+
+    #[test]
+    fn as_cast_preserves_unit() {
+        let c = conflicts("let x = used_bytes as usize + n_tokens;\n");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn nested_args_scanned() {
+        let c = conflicts("take(used_bytes + n_tokens);\n");
+        assert_eq!(c.len(), 1);
+    }
+}
