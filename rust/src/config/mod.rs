@@ -160,6 +160,11 @@ pub struct ServeConfig {
     pub backend: String,
     /// Number of engine worker threads.
     pub workers: usize,
+    /// Number of engine replicas behind the fleet dispatcher (each with its
+    /// own pump thread, batcher and page pool; `cache_budget_bytes` splits
+    /// evenly across them). 1 = the classic single-router path, byte-for-byte
+    /// identical to the pre-fleet behavior.
+    pub replicas: usize,
 }
 
 /// Tiny training loop parameters (to make the synthetic model non-degenerate).
@@ -238,6 +243,7 @@ impl Default for ServeConfig {
             buckets: vec![128, 256, 512, 1024],
             backend: "rust".to_string(),
             workers: 1,
+            replicas: 1,
         }
     }
 }
@@ -403,7 +409,8 @@ impl Config {
                     .set("kv_dtype", s.kv_dtype.name())
                     .set("buckets", s.buckets.clone())
                     .set("backend", s.backend.as_str())
-                    .set("workers", s.workers),
+                    .set("workers", s.workers)
+                    .set("replicas", s.replicas),
             )
             .set(
                 "train",
@@ -471,6 +478,10 @@ impl Config {
                     .unwrap_or(sd.buckets.clone()),
                 backend: sj.str_or("backend", &sd.backend).to_string(),
                 workers: sj.usize_or("workers", sd.workers),
+                replicas: match sj.usize_or("replicas", sd.replicas) {
+                    0 => return Err("serve.replicas must be ≥ 1".to_string()),
+                    n => n,
+                },
             },
             None => sd,
         };
@@ -540,6 +551,12 @@ impl Config {
         if let Some(n) = args.get("prefill-budget").and_then(|s| s.parse().ok()) {
             self.serve.prefill_token_budget = n;
         }
+        if let Some(r) = args.get("replicas") {
+            self.serve.replicas = match r.parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => return Err(format!("bad --replicas '{r}' (must be an integer ≥ 1)")),
+            };
+        }
         if args.has("prefix-cache") {
             // Bare `--prefix-cache` enables; `--prefix-cache 0` disables.
             self.serve.prefix_cache = args.bool_or("prefix-cache", true);
@@ -603,9 +620,29 @@ mod tests {
         cfg.serve.buckets = vec![64, 128];
         cfg.serve.prefix_cache = true;
         cfg.serve.kv_dtype = KvDtype::Int8;
+        cfg.serve.replicas = 4;
         let j = cfg.to_json();
         let back = Config::from_json(&j).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn replicas_default_and_overrides() {
+        let mut cfg = Config::from_preset("test-tiny").unwrap();
+        assert_eq!(cfg.serve.replicas, 1, "single-router path by default");
+        let args = crate::cli::Args::parse_from(
+            ["x", "--replicas", "4"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        cfg.apply_overrides(&args).unwrap();
+        assert_eq!(cfg.serve.replicas, 4);
+        let zero = crate::cli::Args::parse_from(
+            ["x", "--replicas", "0"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(cfg.apply_overrides(&zero).is_err(), "0 replicas rejected");
+        let j = parse(r#"{"model": {}, "serve": {"replicas": 0}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err(), "0 replicas rejected in JSON");
     }
 
     #[test]

@@ -181,6 +181,14 @@ pub trait Engine {
     fn cache_peak_bytes(&self) -> u64 {
         0
     }
+    /// Cache bytes currently committed — bytes the pool could not free
+    /// right now (used minus reclaimable cold pages, plus outstanding
+    /// reservations). The byte half of the fleet's least-loaded routing
+    /// score; defaults to `cache_used_bytes` for engines that don't track
+    /// cold pages separately.
+    fn cache_committed_bytes(&self) -> u64 {
+        self.cache_used_bytes()
+    }
     /// Whether a prompt-prefix cache is active. Engines returning nonzero
     /// [`PrefixHit::cached_tokens`] from [`Engine::alloc_with_prompt`] MUST
     /// report `true` here; the scheduler records prefix hit/miss telemetry

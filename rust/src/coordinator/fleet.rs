@@ -1,0 +1,1039 @@
+//! The multi-replica engine fleet: N pump threads — each wrapping its own
+//! [`Engine`], [`Batcher`](super::Batcher) and page pool — behind one
+//! dispatch layer, so the machine is no longer capped by a single engine
+//! loop (DESIGN.md §5f).
+//!
+//! Routing is **prefix-affinity first**: the dispatcher keeps a lightweight
+//! fingerprint index over page-aligned prompt chunks (the same FNV-1a chunk
+//! hash the prefix trie keys on, chained across chunks) mapping known
+//! prefixes to the replica whose pool already holds those pages. Requests
+//! sharing a system prompt therefore land where the cache is warm. Cold
+//! prompts fall back to the least-loaded replica (committed-bytes +
+//! queue-depth score), and an idle replica steals queued *cold* requests
+//! from the deepest backlog — never a warm request, and never a request
+//! whose pages are already allocated (steals only touch the dispatcher-side
+//! backlog, which is strictly pre-admission).
+//!
+//! [`EngineHandle`]/[`RequestHandle`](super::RequestHandle) semantics are
+//! replica-transparent: submit/stream/cancel behave exactly as with a solo
+//! [`Router`], cancellation reclaims pages on whichever replica owns the
+//! request, and priority preemption stays replica-local (each replica's
+//! batcher plans evictions only against its own pool).
+
+use super::batcher::{BatcherConfig, Engine, StepOutcome};
+use super::metrics::{names, replica_scoped, MetricsRegistry};
+use super::request::{CancelToken, Completion, Request, SubmitError, TokenEvent};
+use super::session::{EngineHandle, EngineMsg};
+use super::{metrics, Router};
+use crate::kvcache::chunk_hash;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Fleet dispatch parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of engine replicas (must match the engine count handed to
+    /// [`Fleet::serve`]).
+    pub replicas: usize,
+    /// Fingerprint chunk width in tokens. Must equal the engines' cache
+    /// `page_tokens` for the index to mirror the prefix trie's keying
+    /// ([`ServingEngine`](crate::server::ServingEngine) pages are 16
+    /// tokens); a mismatch only costs affinity misses, never correctness.
+    pub chunk_tokens: usize,
+    /// Dispatcher-side backlog bound per replica: a submission routed to a
+    /// replica whose backlog is full is rejected with
+    /// [`SubmitError::QueueFull`], mirroring the batcher's own `max_queue`.
+    pub max_queue: usize,
+    /// Affinity index capacity in fingerprints; the oldest entries are
+    /// evicted beyond it (an evicted prefix simply routes cold again).
+    pub index_cap: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 1,
+            chunk_tokens: 16,
+            max_queue: 256,
+            index_cap: 65_536,
+        }
+    }
+}
+
+impl From<&crate::config::ServeConfig> for FleetConfig {
+    fn from(s: &crate::config::ServeConfig) -> Self {
+        FleetConfig {
+            replicas: s.replicas.max(1),
+            max_queue: s.max_queue,
+            ..FleetConfig::default()
+        }
+    }
+}
+
+/// One replica's load as the dispatcher sees it: a point-in-time copy of the
+/// pump-published atomics plus the dispatcher's own backlog depth.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadSnapshot {
+    /// Sequences the replica is responsible for: dispatcher backlog +
+    /// batcher queue + running batch.
+    pub seqs: usize,
+    /// Bytes its pool cannot currently evict (hot pages + reservations).
+    pub committed_bytes: u64,
+}
+
+/// Byte-equivalent cost of one queued/running sequence in the least-loaded
+/// score, so queue depth and pool commitment combine on one scale. 1 MiB is
+/// a deliberate overestimate of a typical compressed sequence: ties in
+/// commitment break toward the shorter queue.
+const QUEUE_SLOT_COST_BYTES: u64 = 1 << 20;
+
+/// FNV-1a offset basis — the seed of the chained chunk fingerprint.
+const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold one chunk hash into the running prefix fingerprint (FNV-style
+/// xor-multiply, so `chain(a·b)` depends on order as well as content).
+fn chain_combine(chain: u64, chunk: u64) -> u64 {
+    (chain ^ chunk).wrapping_mul(0x1000_0000_01b3)
+}
+
+/// The pure routing core: prefix fingerprint index + least-loaded fallback.
+/// Owns no threads and does no I/O, so every policy is unit-testable; the
+/// dispatcher wraps it in the fleet mutex.
+pub struct FleetDispatch {
+    replicas: usize,
+    chunk_tokens: usize,
+    /// Chained page-aligned prefix fingerprint → replica holding the pages.
+    affinity: HashMap<u64, usize>,
+    /// Insertion order of fingerprints, for bounded eviction.
+    order: VecDeque<u64>,
+    index_cap: usize,
+}
+
+impl FleetDispatch {
+    pub fn new(replicas: usize, chunk_tokens: usize, index_cap: usize) -> FleetDispatch {
+        assert!(replicas >= 1 && chunk_tokens >= 1);
+        FleetDispatch {
+            replicas,
+            chunk_tokens,
+            affinity: HashMap::new(),
+            order: VecDeque::new(),
+            index_cap: index_cap.max(1),
+        }
+    }
+
+    /// Route one prompt: the deepest page-aligned prefix the index knows
+    /// wins (its replica holds those pages); unknown prompts go to the
+    /// least-loaded replica. Returns `(replica, affinity_hit)`.
+    ///
+    /// This is the per-submission serving hot path (a `hot-path-alloc`
+    /// root): it must stay allocation-free, which is why it reads a
+    /// caller-built [`LoadSnapshot`] slice instead of touching atomics or
+    /// locks itself.
+    pub fn route_request(&self, prompt: &[u32], loads: &[LoadSnapshot]) -> (usize, bool) {
+        let mut best: Option<usize> = None;
+        let mut chain = CHAIN_SEED;
+        let mut i = 0;
+        while i + self.chunk_tokens <= prompt.len() {
+            chain = chain_combine(chain, chunk_hash(&prompt[i..i + self.chunk_tokens]));
+            if let Some(&r) = self.affinity.get(&chain) {
+                if r < self.replicas {
+                    best = Some(r);
+                }
+            }
+            i += self.chunk_tokens;
+        }
+        match best {
+            Some(r) => (r, true),
+            None => (self.least_loaded(loads), false),
+        }
+    }
+
+    /// Least-loaded replica under the committed-bytes + queue-depth score.
+    fn least_loaded(&self, loads: &[LoadSnapshot]) -> usize {
+        let mut best = 0usize;
+        let mut best_score = u64::MAX;
+        let mut r = 0;
+        while r < self.replicas {
+            let score = match loads.get(r) {
+                Some(l) => l
+                    .committed_bytes
+                    .saturating_add((l.seqs as u64).saturating_mul(QUEUE_SLOT_COST_BYTES)),
+                None => 0,
+            };
+            if score < best_score {
+                best = r;
+                best_score = score;
+            }
+            r += 1;
+        }
+        best
+    }
+
+    /// Register every page-aligned prefix of `prompt` as warm on `replica`.
+    /// Called when a request is routed (and again when one is stolen, so
+    /// same-prefix followers chase the pages to the thief). Last writer
+    /// wins: the mapping points where the pages were most recently warmed.
+    pub fn record_route(&mut self, prompt: &[u32], replica: usize) {
+        let mut chain = CHAIN_SEED;
+        let mut i = 0;
+        while i + self.chunk_tokens <= prompt.len() {
+            chain = chain_combine(chain, chunk_hash(&prompt[i..i + self.chunk_tokens]));
+            if self.affinity.insert(chain, replica).is_none() {
+                self.order.push_back(chain);
+            }
+            i += self.chunk_tokens;
+        }
+        while self.affinity.len() > self.index_cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.affinity.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Number of fingerprints currently indexed (tests / introspection).
+    pub fn indexed(&self) -> usize {
+        self.affinity.len()
+    }
+}
+
+/// A submission parked in a replica's dispatcher-side backlog. No pages are
+/// allocated while a request sits here — that happens only after the
+/// replica's pump pulls it into its batcher — which is what makes backlog
+/// entries (and only backlog entries) safe to steal.
+struct QueuedSubmit {
+    req: Request,
+    events: Sender<TokenEvent>,
+    cancel: CancelToken,
+    /// Routed without an affinity hit: eligible for work stealing.
+    cold: bool,
+}
+
+/// Mutable fleet state under one mutex: per-replica backlogs + the routing
+/// core + the open flag. The condvar signals backlog pushes and shutdown.
+struct FleetState {
+    queues: Vec<VecDeque<QueuedSubmit>>,
+    dispatch: FleetDispatch,
+    open: bool,
+}
+
+/// One replica's pump-published load (read lock-free by the dispatcher when
+/// building routing snapshots).
+#[derive(Default)]
+struct ReplicaLoad {
+    queued: AtomicUsize,
+    running: AtomicUsize,
+    committed_bytes: AtomicU64,
+}
+
+struct FleetShared {
+    state: Mutex<FleetState>,
+    cv: Condvar,
+    loads: Vec<ReplicaLoad>,
+    metrics: Arc<MetricsRegistry>,
+}
+
+/// Pick the steal victim for `thief`: the deepest backlog (excluding the
+/// thief's own) holding at least one cold entry, and the position of its
+/// oldest cold entry. Warm entries are never candidates — their pages are
+/// (or are about to be) on their routed replica.
+fn pick_steal_victim(queues: &[VecDeque<QueuedSubmit>], thief: usize) -> Option<(usize, usize)> {
+    let mut victim: Option<(usize, usize)> = None;
+    let mut deepest = 0usize;
+    for (j, q) in queues.iter().enumerate() {
+        if j == thief || q.len() <= deepest {
+            continue;
+        }
+        if let Some(pos) = q.iter().position(|s| s.cold) {
+            deepest = q.len();
+            victim = Some((j, pos));
+        }
+    }
+    victim
+}
+
+/// The fleet front-end. [`Fleet::serve`] is the N-replica analog of
+/// [`Router::serve`]; at `replicas = 1` the event streams it produces are
+/// identical to the solo router's (tested below and in
+/// `tests/e2e_serving_test.rs`).
+pub struct Fleet;
+
+impl Fleet {
+    /// Serve `engines` behind a fleet dispatcher, one pump thread per
+    /// replica. Returns the same [`EngineHandle`] a solo router would:
+    /// submissions stream on their own channels, cancellation works
+    /// mid-flight, dropping/joining the handle drains and stops the fleet.
+    pub fn serve(
+        cfg: FleetConfig,
+        bcfg: BatcherConfig,
+        engines: Vec<Box<dyn Engine + Send>>,
+    ) -> EngineHandle {
+        let n = engines.len();
+        assert!(n >= 1, "fleet needs at least one replica engine");
+        assert_eq!(
+            cfg.replicas, n,
+            "FleetConfig.replicas ({}) must match the engine count ({n})",
+            cfg.replicas
+        );
+        let metrics = Arc::new(MetricsRegistry::new());
+        // Materialize the headline counters (the solo router's set plus the
+        // fleet's own) so `report()` shows them even when zero.
+        for name in [
+            names::REQUESTS_ACCEPTED,
+            names::REQUESTS_REJECTED,
+            names::REQUESTS_CANCELLED,
+            names::REQUESTS_FAILED,
+            names::PREEMPTIONS,
+            names::DECODE_STALL_STEPS,
+            names::MIXED_STEPS,
+            names::PREFIX_CACHE_HIT_TOKENS,
+            names::PREFIX_CACHE_MISS_TOKENS,
+            names::FLEET_AFFINITY_HITS,
+            names::FLEET_AFFINITY_MISSES,
+            names::FLEET_STEALS,
+        ] {
+            metrics.incr(name, 0);
+        }
+        let shared = Arc::new(FleetShared {
+            state: Mutex::new(FleetState {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                dispatch: FleetDispatch::new(n, cfg.chunk_tokens, cfg.index_cap),
+                open: true,
+            }),
+            cv: Condvar::new(),
+            loads: (0..n).map(|_| ReplicaLoad::default()).collect(),
+            metrics: metrics.clone(),
+        });
+        let mut pumps = Vec::with_capacity(n);
+        for (i, engine) in engines.into_iter().enumerate() {
+            let shared = shared.clone();
+            let router = Router::new_replica(bcfg.clone(), i, metrics.clone());
+            let watermark = bcfg.max_batch.max(1);
+            pumps.push(
+                std::thread::Builder::new()
+                    .name(format!("kqsvd-replica{i}"))
+                    .spawn(move || replica_main(i, shared, router, engine, watermark))
+                    .expect("spawn replica thread"),
+            );
+        }
+        let (tx, rx) = channel::<EngineMsg>();
+        let dispatcher_shared = shared;
+        let join = std::thread::Builder::new()
+            .name("kqsvd-fleet".into())
+            .spawn(move || dispatcher_main(cfg, dispatcher_shared, rx, pumps))
+            .expect("spawn fleet dispatcher");
+        EngineHandle::new(tx, metrics, join)
+    }
+
+    /// Drive a fixed request set to completion through a fleet — the
+    /// N-replica analog of [`Router::run_offline`], used by benches and the
+    /// CLI. Completions come back in submission order; the registry carries
+    /// the fleet counters and per-replica gauges.
+    pub fn run_offline(
+        cfg: FleetConfig,
+        bcfg: BatcherConfig,
+        engines: Vec<Box<dyn Engine + Send>>,
+        requests: Vec<Request>,
+    ) -> anyhow::Result<(Vec<Completion>, Arc<MetricsRegistry>)> {
+        let handle = Fleet::serve(cfg, bcfg, engines);
+        let metrics = handle.metrics();
+        let submitted: Vec<_> = requests.into_iter().map(|r| handle.submit(r)).collect();
+        let mut out = Vec::with_capacity(submitted.len());
+        for rh in submitted {
+            out.push(rh.wait()?);
+        }
+        handle.join()?;
+        Ok((out, metrics))
+    }
+}
+
+/// The dispatcher thread: receives client submissions, routes each through
+/// [`FleetDispatch`], parks it in the chosen replica's backlog, and owns the
+/// fleet-wide aggregate gauges. On client disconnect it closes the queues,
+/// joins every pump thread and folds the per-replica gauges into the
+/// canonical fleet-wide names.
+fn dispatcher_main(
+    cfg: FleetConfig,
+    shared: Arc<FleetShared>,
+    rx: Receiver<EngineMsg>,
+    pumps: Vec<JoinHandle<anyhow::Result<()>>>,
+) -> anyhow::Result<()> {
+    let n = pumps.len();
+    // Reusable routing snapshot — grow-only, so steady-state dispatch does
+    // not allocate.
+    let mut snap: Vec<LoadSnapshot> = Vec::with_capacity(n);
+    loop {
+        // Block for the next message, waking periodically to refresh the
+        // aggregate gauges while streams are in flight.
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(msg) => {
+                route_submit(&cfg, &shared, &mut snap, msg);
+                // Route everything else already queued in one burst.
+                loop {
+                    match rx.try_recv() {
+                        Ok(msg) => route_submit(&cfg, &shared, &mut snap, msg),
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        record_fleet_gauges(&shared);
+    }
+    // Client gone: close the backlogs and let every replica drain and exit.
+    shared.state.lock().unwrap().open = false;
+    shared.cv.notify_all();
+    let mut failure: Option<anyhow::Error> = None;
+    for (i, p) in pumps.into_iter().enumerate() {
+        let res = match p.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("replica {i} pump thread panicked")),
+        };
+        if let Err(e) = res {
+            if failure.is_none() {
+                failure = Some(e.context(format!("fleet replica {i}")));
+            }
+        }
+    }
+    record_fleet_gauges(&shared);
+    aggregate_finish_gauges(&shared, n);
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Route one client submission and park it in the chosen replica's backlog
+/// (or reject it when that backlog is full).
+fn route_submit(
+    cfg: &FleetConfig,
+    shared: &FleetShared,
+    snap: &mut Vec<LoadSnapshot>,
+    msg: EngineMsg,
+) {
+    let EngineMsg::Submit { req, events, cancel } = msg;
+    let m = &shared.metrics;
+    let mut st = shared.state.lock().unwrap();
+    // Snapshot loads under the state lock so backlog depths and the
+    // pump-published atomics are read together.
+    snap.clear();
+    for (r, l) in shared.loads.iter().enumerate() {
+        snap.push(LoadSnapshot {
+            seqs: l.queued.load(Ordering::Relaxed)
+                + l.running.load(Ordering::Relaxed)
+                + st.queues[r].len(),
+            committed_bytes: l.committed_bytes.load(Ordering::Relaxed),
+        });
+    }
+    let (replica, hit) = st.dispatch.route_request(&req.prompt, snap);
+    if st.queues[replica].len() >= cfg.max_queue {
+        drop(st);
+        m.incr(names::REQUESTS_REJECTED, 1);
+        let _ = events.send(TokenEvent::Rejected {
+            id: req.id,
+            error: SubmitError::QueueFull,
+        });
+        return;
+    }
+    m.incr(
+        if hit {
+            names::FLEET_AFFINITY_HITS
+        } else {
+            names::FLEET_AFFINITY_MISSES
+        },
+        1,
+    );
+    st.dispatch.record_route(&req.prompt, replica);
+    st.queues[replica].push_back(QueuedSubmit {
+        req,
+        events,
+        cancel,
+        cold: !hit,
+    });
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// Fleet-wide pre-admission queue depth: every backlogged submission plus
+/// every batcher-queued sequence across replicas (the same meaning the solo
+/// router's `queue_depth` gauge has, summed).
+fn record_fleet_gauges(shared: &FleetShared) {
+    let backlog: usize = {
+        let st = shared.state.lock().unwrap();
+        st.queues.iter().map(|q| q.len()).sum()
+    };
+    let queued: usize = shared
+        .loads
+        .iter()
+        .map(|l| l.queued.load(Ordering::Relaxed))
+        .sum();
+    shared
+        .metrics
+        .gauge(names::QUEUE_DEPTH, (backlog + queued) as f64);
+}
+
+/// Fold the per-replica end-of-run gauges into the canonical fleet-wide
+/// names. Throughputs are additive (replicas run concurrently, each rate
+/// measured against its own engine time); byte/page gauges sum across
+/// pools; per-token and error gauges take the max (identical geometry per
+/// replica, so max == each).
+fn aggregate_finish_gauges(shared: &FleetShared, n: usize) {
+    let m = &shared.metrics;
+    let collect = |name: &str| -> Vec<f64> {
+        (0..n)
+            .filter_map(|i| m.gauge_value(&replica_scoped(i, name)))
+            .collect()
+    };
+    for name in [
+        metrics::names::DECODE_TOK_PER_S,
+        metrics::names::PREFILL_TOK_PER_S,
+    ] {
+        let vals = collect(name);
+        if !vals.is_empty() {
+            m.gauge(name, vals.iter().sum());
+        }
+    }
+    for name in [
+        "cache_used_bytes",
+        "cache_peak_bytes",
+        "running_seqs",
+        names::SHARED_PAGES,
+        names::BYTES_SAVED_BY_SHARING,
+    ] {
+        m.gauge(name, collect(name).iter().sum());
+    }
+    for name in ["wall_s", names::KV_BYTES_PER_TOKEN, names::QUANT_DEQUANT_ERROR] {
+        let vals = collect(name);
+        if !vals.is_empty() {
+            m.gauge(name, vals.iter().fold(0.0f64, |a, &b| a.max(b)));
+        }
+    }
+}
+
+/// One replica's pump thread: drain my backlog (up to the admission
+/// watermark, cancelled entries always), pump my router, publish my load;
+/// when fully idle, steal cold work or wait; exit once the fleet is closed
+/// and nothing is left anywhere to steal.
+fn replica_main(
+    idx: usize,
+    shared: Arc<FleetShared>,
+    mut router: Router,
+    mut engine: Box<dyn Engine + Send>,
+    watermark: usize,
+) -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    loop {
+        drain_backlog(idx, &shared, &mut router, engine.as_ref(), watermark);
+        let (outcome, _done) = router.pump(engine.as_mut())?;
+        publish_load(idx, &shared, &router, engine.as_ref());
+        if outcome != StepOutcome::Idle {
+            continue;
+        }
+        if router.batcher.idle() {
+            if try_steal(idx, &shared, &mut router, engine.as_ref()) {
+                continue;
+            }
+            // Fully idle, nothing stealable just now: wait for a backlog
+            // push, a steal candidate, or shutdown. The predicate re-check
+            // under the same mutex the dispatcher mutates under makes
+            // missed wakeups impossible.
+            let mut st = shared.state.lock().unwrap();
+            let exit = loop {
+                if !st.queues[idx].is_empty() || pick_steal_victim(&st.queues, idx).is_some() {
+                    break false;
+                }
+                if !st.open {
+                    break true;
+                }
+                st = shared.cv.wait(st).unwrap();
+            };
+            if exit {
+                break;
+            }
+        } else {
+            // Queued work blocked on budget. On shutdown nothing new will
+            // ever free budget for it — cancel so the streams terminate
+            // (mirrors the solo router's shutdown path); otherwise wait
+            // briefly so a cancellation or completion can unwedge us.
+            let st = shared.state.lock().unwrap();
+            if !st.open {
+                drop(st);
+                router.batcher.cancel_all_queued();
+            } else {
+                let _ = shared
+                    .cv
+                    .wait_timeout(st, Duration::from_millis(5))
+                    .unwrap();
+            }
+        }
+    }
+    // Final load publish so the dispatcher's post-join gauge refresh reads
+    // zeros, then the per-replica end-of-run gauges.
+    publish_load(idx, &shared, &router, engine.as_ref());
+    router.finish_run_metrics(engine.as_ref(), t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Pull my backlog into my batcher: cancelled entries immediately (their
+/// streams must terminate without waiting for admission headroom), the rest
+/// only while the batcher's pre-admission queue is below the watermark —
+/// the surplus stays in the backlog where an idle replica can steal it.
+fn drain_backlog(
+    idx: usize,
+    shared: &FleetShared,
+    router: &mut Router,
+    engine: &dyn Engine,
+    watermark: usize,
+) {
+    loop {
+        let item = {
+            let mut st = shared.state.lock().unwrap();
+            match st.queues[idx].iter().position(|s| s.cancel.is_cancelled()) {
+                Some(pos) => st.queues[idx].remove(pos),
+                None if router.batcher.queued() < watermark => st.queues[idx].pop_front(),
+                None => None,
+            }
+        };
+        match item {
+            Some(s) => submit_to_batcher(router, engine, s),
+            None => break,
+        }
+    }
+}
+
+/// Steal the oldest cold entry from the deepest other backlog, re-pointing
+/// its prefix fingerprints at the thief. Stolen work has, by construction,
+/// no pages allocated anywhere: it never entered a batcher.
+fn try_steal(idx: usize, shared: &FleetShared, router: &mut Router, engine: &dyn Engine) -> bool {
+    let stolen = {
+        let mut st = shared.state.lock().unwrap();
+        match pick_steal_victim(&st.queues, idx) {
+            Some((victim, pos)) => {
+                let s = st.queues[victim].remove(pos);
+                if let Some(s) = &s {
+                    st.dispatch.record_route(&s.req.prompt, idx);
+                }
+                s
+            }
+            None => None,
+        }
+    };
+    match stolen {
+        Some(s) => {
+            shared.metrics.incr(names::FLEET_STEALS, 1);
+            submit_to_batcher(router, engine, s);
+            true
+        }
+        None => false,
+    }
+}
+
+fn submit_to_batcher(router: &mut Router, engine: &dyn Engine, s: QueuedSubmit) {
+    router.handle_msg(
+        engine,
+        EngineMsg::Submit {
+            req: s.req,
+            events: s.events,
+            cancel: s.cancel,
+        },
+    );
+}
+
+/// Publish this replica's load for the dispatcher's routing snapshots and
+/// record its `replica{i}_committed_bytes` gauge (its `replica{i}_…` pump
+/// gauges, including `queue_depth`, are written by its scoped router).
+fn publish_load(idx: usize, shared: &FleetShared, router: &Router, engine: &dyn Engine) {
+    let load = &shared.loads[idx];
+    load.queued.store(router.batcher.queued(), Ordering::Relaxed);
+    load.running.store(router.batcher.running(), Ordering::Relaxed);
+    let committed = engine.cache_committed_bytes();
+    load.committed_bytes.store(committed, Ordering::Relaxed);
+    shared.metrics.gauge(
+        &replica_scoped(idx, names::REPLICA_COMMITTED_BYTES),
+        committed as f64,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::mock::MockEngine;
+    use super::super::request::FinishReason;
+    use super::super::RequestHandle;
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex as StdMutex;
+
+    // --- pure dispatch core ------------------------------------------------
+
+    fn snaps(v: &[(usize, u64)]) -> Vec<LoadSnapshot> {
+        v.iter()
+            .map(|&(seqs, committed_bytes)| LoadSnapshot {
+                seqs,
+                committed_bytes,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn affinity_routes_to_registered_replica() {
+        let mut d = FleetDispatch::new(4, 4, 1024);
+        let prompt: Vec<u32> = (0..12).collect();
+        let loads = snaps(&[(0, 0); 4]);
+        let (_, hit) = d.route_request(&prompt, &loads);
+        assert!(!hit, "nothing registered yet");
+        d.record_route(&prompt, 2);
+        assert_eq!(d.route_request(&prompt, &loads), (2, true));
+        // A longer prompt sharing the registered page-aligned prefix still
+        // lands on the same replica (deepest known prefix wins).
+        let longer: Vec<u32> = (0..12).chain(500..507).collect();
+        assert_eq!(d.route_request(&longer, &loads), (2, true));
+        // A prompt diverging inside the first chunk is cold.
+        let other: Vec<u32> = (100..112).collect();
+        assert!(!d.route_request(&other, &loads).1);
+        // Sub-chunk prompts can never register or hit.
+        d.record_route(&[1, 2, 3], 1);
+        assert!(!d.route_request(&[1, 2, 3], &loads).1);
+    }
+
+    #[test]
+    fn deepest_prefix_beats_shallower_registration() {
+        let mut d = FleetDispatch::new(4, 4, 1024);
+        let short: Vec<u32> = (0..4).collect();
+        let long: Vec<u32> = (0..8).collect();
+        d.record_route(&short, 1);
+        d.record_route(&long, 3); // re-points the shared chunk too
+        let loads = snaps(&[(0, 0); 4]);
+        assert_eq!(d.route_request(&long, &loads), (3, true));
+        // The longer chain entry survives even if the shallow one is later
+        // re-pointed: deepest match decides.
+        d.record_route(&short, 1);
+        assert_eq!(d.route_request(&long, &loads), (3, true));
+        assert_eq!(d.route_request(&short, &loads), (1, true));
+    }
+
+    #[test]
+    fn cold_routing_scores_bytes_plus_queue_depth() {
+        let d = FleetDispatch::new(3, 4, 1024);
+        let prompt: Vec<u32> = (0..8).collect();
+        // Pure byte pressure: replica 1 is emptiest.
+        let (r, hit) = d.route_request(&prompt, &snaps(&[(0, 900), (0, 10), (0, 500)]));
+        assert!(!hit);
+        assert_eq!(r, 1);
+        // Queue depth outweighs equal bytes (1 MiB per queued seq).
+        let (r, _) = d.route_request(&prompt, &snaps(&[(3, 0), (0, 0), (2, 0)]));
+        assert_eq!(r, 1);
+        // One queued seq costs more than ~0.5 MiB of commitment.
+        let (r, _) = d.route_request(&prompt, &snaps(&[(1, 0), (0, 512 * 1024), (1, 0)]));
+        assert_eq!(r, 1);
+    }
+
+    #[test]
+    fn index_is_bounded() {
+        let mut d = FleetDispatch::new(2, 2, 8);
+        for i in 0..100u32 {
+            d.record_route(&[i * 2, i * 2 + 1], (i % 2) as usize);
+        }
+        assert!(d.indexed() <= 8, "index grew to {}", d.indexed());
+        // Most recent registrations survive eviction.
+        let loads = snaps(&[(0, 0); 2]);
+        assert!(d.route_request(&[198, 199], &loads).1);
+        assert!(!d.route_request(&[0, 1], &loads).1, "oldest entry evicted");
+    }
+
+    fn queued(cold: bool) -> QueuedSubmit {
+        let (events, _rx) = channel();
+        // Leak the receiver so sends don't error; fine for a unit test.
+        std::mem::forget(_rx);
+        QueuedSubmit {
+            req: Request::new(0, vec![1, 2, 3], 2),
+            events,
+            cancel: CancelToken::new(),
+            cold,
+        }
+    }
+
+    #[test]
+    fn steal_victim_is_deepest_cold_backlog() {
+        let mut queues: Vec<VecDeque<QueuedSubmit>> = (0..3).map(|_| VecDeque::new()).collect();
+        // Replica 0: deep but all warm — never a victim.
+        for _ in 0..4 {
+            queues[0].push_back(queued(false));
+        }
+        // Replica 1: shallower, with a cold entry behind a warm one.
+        queues[1].push_back(queued(false));
+        queues[1].push_back(queued(true));
+        assert_eq!(pick_steal_victim(&queues, 2), Some((1, 1)));
+        // The thief's own queue is excluded.
+        assert_eq!(pick_steal_victim(&queues, 1), None);
+        // Deeper cold backlog wins.
+        for _ in 0..3 {
+            queues[2].push_back(queued(true));
+        }
+        assert_eq!(pick_steal_victim(&queues, 0), Some((2, 0)));
+    }
+
+    // --- threaded fleet ----------------------------------------------------
+
+    /// A MockEngine behind `Arc<Mutex>` (plus an alloc counter and optional
+    /// per-decode sleep) so tests keep a window into each replica's cache
+    /// accounting after the fleet takes ownership of the engine box.
+    #[derive(Clone)]
+    struct SharedMock {
+        inner: Arc<StdMutex<MockEngine>>,
+        allocs: Arc<AtomicUsize>,
+        slow_ms: u64,
+    }
+
+    impl SharedMock {
+        fn new(budget_tokens: usize, max_seq: usize) -> SharedMock {
+            SharedMock {
+                inner: Arc::new(StdMutex::new(MockEngine::new(budget_tokens, max_seq))),
+                allocs: Arc::new(AtomicUsize::new(0)),
+                slow_ms: 0,
+            }
+        }
+
+        fn slow(mut self, ms: u64) -> SharedMock {
+            self.slow_ms = ms;
+            self
+        }
+
+        fn alloc_count(&self) -> usize {
+            self.allocs.load(Ordering::SeqCst)
+        }
+
+        fn used_now(&self) -> usize {
+            self.inner.lock().unwrap().used.len()
+        }
+    }
+
+    impl Engine for SharedMock {
+        fn alloc(&mut self, id: u64, n: usize) -> anyhow::Result<()> {
+            self.allocs.fetch_add(1, Ordering::SeqCst);
+            self.inner.lock().unwrap().alloc(id, n)
+        }
+        fn free(&mut self, id: u64) {
+            self.inner.lock().unwrap().free(id)
+        }
+        fn can_admit(&self, n: usize) -> bool {
+            self.inner.lock().unwrap().can_admit(n)
+        }
+        fn prefill(
+            &mut self,
+            id: u64,
+            tokens: &[u32],
+            pos0: usize,
+            is_last: bool,
+        ) -> anyhow::Result<Option<Vec<f32>>> {
+            self.inner.lock().unwrap().prefill(id, tokens, pos0, is_last)
+        }
+        fn decode(&mut self, batch: &[(u64, u32)]) -> anyhow::Result<Vec<Vec<f32>>> {
+            if self.slow_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.slow_ms));
+            }
+            self.inner.lock().unwrap().decode(batch)
+        }
+        fn max_seq(&self) -> usize {
+            self.inner.lock().unwrap().max_seq()
+        }
+        fn can_ever_admit(&self, total_tokens: usize) -> bool {
+            self.inner.lock().unwrap().can_ever_admit(total_tokens)
+        }
+        fn cache_used_bytes(&self) -> u64 {
+            self.inner.lock().unwrap().cache_used_bytes()
+        }
+    }
+
+    fn boxed(engines: &[SharedMock]) -> Vec<Box<dyn Engine + Send>> {
+        engines
+            .iter()
+            .map(|e| Box::new(e.clone()) as Box<dyn Engine + Send>)
+            .collect()
+    }
+
+    fn small_bcfg(max_batch: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_queue: 64,
+            prefill_chunk: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn same_prefix_requests_colocate() {
+        let engines: Vec<SharedMock> = (0..4).map(|_| SharedMock::new(100_000, 1024)).collect();
+        let fcfg = FleetConfig {
+            replicas: 4,
+            chunk_tokens: 8,
+            max_queue: 64,
+            index_cap: 1024,
+        };
+        let handle = Fleet::serve(fcfg, small_bcfg(4), boxed(&engines));
+        // 16 shared-prefix tokens = two full fingerprint chunks; unique tail.
+        let prefix: Vec<u32> = (0..16).collect();
+        let submitted: Vec<RequestHandle> = (0..12)
+            .map(|i| {
+                let mut p = prefix.clone();
+                p.push(100 + i as u32);
+                handle.submit(Request::new(i as u64, p, 4))
+            })
+            .collect();
+        for rh in submitted {
+            let c = rh.wait().unwrap();
+            assert_eq!(c.reason, FinishReason::Length);
+        }
+        let m = handle.metrics();
+        handle.join().unwrap();
+        // 100% affinity hit rate after the single cold warmup request.
+        assert_eq!(m.counter(names::FLEET_AFFINITY_MISSES), 1);
+        assert_eq!(m.counter(names::FLEET_AFFINITY_HITS), 11);
+        assert_eq!(m.counter(names::FLEET_STEALS), 0, "warm work is never stolen");
+        let active = engines.iter().filter(|e| e.alloc_count() > 0).count();
+        assert_eq!(active, 1, "all same-prefix requests ran on one replica");
+        for e in &engines {
+            assert_eq!(e.used_now(), 0, "all pages reclaimed at shutdown");
+        }
+    }
+
+    #[test]
+    fn stealing_moves_only_unallocated_cold_requests() {
+        // Replica 0 decodes 5 ms/step, replica 1 instantly: replica 1
+        // drains its share and then steals from 0's backlog. Prompts are
+        // shorter than one fingerprint chunk, so every request stays cold.
+        let engines = vec![
+            SharedMock::new(100_000, 1024).slow(5),
+            SharedMock::new(100_000, 1024),
+        ];
+        let fcfg = FleetConfig {
+            replicas: 2,
+            chunk_tokens: 8,
+            max_queue: 64,
+            index_cap: 1024,
+        };
+        let n = 16usize;
+        let handle = Fleet::serve(fcfg, small_bcfg(1), boxed(&engines));
+        let submitted: Vec<RequestHandle> = (0..n)
+            .map(|i| handle.submit(Request::new(i as u64, vec![i as u32, 1, 2], 4)))
+            .collect();
+        for rh in submitted {
+            assert_eq!(rh.wait().unwrap().reason, FinishReason::Length);
+        }
+        let m = handle.metrics();
+        handle.join().unwrap();
+        assert!(
+            m.counter(names::FLEET_STEALS) >= 1,
+            "the idle fast replica should have stolen cold work"
+        );
+        // The invariant under test: a request allocates pages on exactly one
+        // replica, ever — stealing moved it before admission or not at all.
+        let total_allocs: usize = engines.iter().map(|e| e.alloc_count()).sum();
+        assert_eq!(total_allocs, n, "each request allocated exactly once");
+        for e in &engines {
+            assert_eq!(e.used_now(), 0);
+        }
+    }
+
+    #[test]
+    fn cancel_mid_stream_reclaims_pages_on_owning_replica() {
+        let engines = vec![
+            SharedMock::new(100_000, 1024).slow(2),
+            SharedMock::new(100_000, 1024).slow(2),
+        ];
+        let fcfg = FleetConfig {
+            replicas: 2,
+            chunk_tokens: 8,
+            max_queue: 64,
+            index_cap: 1024,
+        };
+        let handle = Fleet::serve(fcfg, small_bcfg(2), boxed(&engines));
+        let rh = handle.submit(Request::new(0, vec![1, 2], 100));
+        match rh.next_event().expect("stream open") {
+            TokenEvent::Token { .. } => {}
+            other => panic!("expected first token, got {other:?}"),
+        }
+        rh.cancel();
+        let c = rh.wait().unwrap();
+        assert_eq!(c.reason, FinishReason::Cancelled);
+        assert!(!c.tokens.is_empty() && c.tokens.len() < 100);
+        let m = handle.metrics();
+        handle.join().unwrap();
+        assert_eq!(m.counter(names::REQUESTS_CANCELLED), 1);
+        // Pages were reclaimed on the one replica that owned the request;
+        // the other never allocated at all.
+        let total_allocs: usize = engines.iter().map(|e| e.alloc_count()).sum();
+        assert_eq!(total_allocs, 1);
+        for e in &engines {
+            assert_eq!(e.used_now(), 0, "cancellation reclaimed the pages");
+        }
+    }
+
+    #[test]
+    fn single_replica_fleet_matches_router_streams() {
+        // The same workload through the solo router and a 1-replica fleet
+        // must produce identical per-request event streams (token sequences
+        // and finish reasons).
+        let workload = |i: u64| Request::new(i, vec![1 + i as u32, 2, 3], 5);
+        let collect = |handle: EngineHandle| -> Vec<(u64, Vec<u32>, FinishReason)> {
+            let submitted: Vec<RequestHandle> = (0..6).map(|i| handle.submit(workload(i))).collect();
+            let mut out: Vec<_> = submitted
+                .into_iter()
+                .map(|rh| {
+                    let c = rh.wait().unwrap();
+                    (c.id, c.tokens, c.reason)
+                })
+                .collect();
+            handle.join().unwrap();
+            out.sort_by_key(|(id, ..)| *id);
+            out
+        };
+        let solo = collect(
+            Router::new(small_bcfg(2)).serve(Box::new(MockEngine::new(10_000, 128))),
+        );
+        let fleet = collect(Fleet::serve(
+            FleetConfig {
+                replicas: 1,
+                ..FleetConfig::default()
+            },
+            small_bcfg(2),
+            vec![Box::new(MockEngine::new(10_000, 128))],
+        ));
+        assert_eq!(solo, fleet);
+    }
+
+    #[test]
+    fn run_offline_returns_completions_in_submission_order() {
+        let engines: Vec<SharedMock> = (0..2).map(|_| SharedMock::new(100_000, 1024)).collect();
+        let fcfg = FleetConfig {
+            replicas: 2,
+            chunk_tokens: 8,
+            max_queue: 64,
+            index_cap: 1024,
+        };
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| Request::new(i as u64, vec![i as u32, 7, 9], 3))
+            .collect();
+        let (done, m) = Fleet::run_offline(fcfg, small_bcfg(2), boxed(&engines), reqs).unwrap();
+        assert_eq!(done.len(), 8);
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.id, i as u64);
+            assert_eq!(c.tokens.len(), 3);
+        }
+        assert_eq!(m.counter(names::REQUESTS_ACCEPTED), 8);
+        assert_eq!(
+            m.counter(names::FLEET_AFFINITY_HITS) + m.counter(names::FLEET_AFFINITY_MISSES),
+            8,
+            "every submission is classified hit or miss"
+        );
+        // Aggregates exist under the canonical global names.
+        assert!(m.gauge_value("wall_s").is_some());
+        assert!(m.gauge_value(names::QUEUE_DEPTH).is_some());
+    }
+}

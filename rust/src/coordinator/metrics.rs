@@ -62,6 +62,33 @@ pub mod names {
     /// (`max|x − x̂| / max|row|`; 0 under f32 storage, ≤ 1/126 by the int8
     /// codec's bound — a larger value means the codec is broken).
     pub const QUANT_DEQUANT_ERROR: &str = "quant_dequant_error";
+    /// Counter: fleet submissions routed to a replica because the affinity
+    /// fingerprint index already mapped a prefix of their prompt to it
+    /// (the pages are warm there).
+    pub const FLEET_AFFINITY_HITS: &str = "fleet_affinity_hits";
+    /// Counter: fleet submissions with no known prefix, routed to the
+    /// least-loaded replica (committed-bytes + queue-depth score).
+    pub const FLEET_AFFINITY_MISSES: &str = "fleet_affinity_misses";
+    /// Counter: cold queued submissions moved to an idle replica by work
+    /// stealing (always pre-admission — a request never moves once its
+    /// pages are allocated).
+    pub const FLEET_STEALS: &str = "fleet_steals";
+    /// Per-replica gauge base name (`replica{i}_queue_depth`): requests
+    /// dispatched to replica `i` but not yet admitted to its running batch
+    /// (fleet backlog + batcher queue).
+    pub const REPLICA_QUEUE_DEPTH: &str = "queue_depth";
+    /// Per-replica gauge base name (`replica{i}_committed_bytes`): cache
+    /// bytes replica `i`'s pool cannot currently evict (hot pages +
+    /// outstanding reservations) — the byte half of the routing score.
+    pub const REPLICA_COMMITTED_BYTES: &str = "committed_bytes";
+}
+
+/// Scope a metric name to one fleet replica: `replica{i}_{name}`. The fleet
+/// pump threads record their per-replica gauges under these names while the
+/// dispatcher owns the unscoped fleet-wide aggregates, so N replicas never
+/// fight last-writer-wins over one global gauge.
+pub fn replica_scoped(replica: usize, name: &str) -> String {
+    format!("replica{replica}_{name}")
 }
 
 /// Registry of named summaries + counters + gauges.
@@ -227,6 +254,9 @@ mod tests {
             names::BYTES_SAVED_BY_SHARING,
             names::KV_BYTES_PER_TOKEN,
             names::QUANT_DEQUANT_ERROR,
+            names::FLEET_AFFINITY_HITS,
+            names::FLEET_AFFINITY_MISSES,
+            names::FLEET_STEALS,
         ];
         let mut uniq = all.to_vec();
         uniq.sort_unstable();
@@ -236,6 +266,24 @@ mod tests {
         let m = MetricsRegistry::new();
         m.incr(names::REQUESTS_CANCELLED, 0);
         assert!(m.report().contains(names::REQUESTS_CANCELLED));
+    }
+
+    #[test]
+    fn replica_scoping_is_injective() {
+        // Scoped names must collide neither with the globals nor with each
+        // other across replica indices.
+        assert_eq!(
+            replica_scoped(2, names::REPLICA_QUEUE_DEPTH),
+            "replica2_queue_depth"
+        );
+        assert_ne!(
+            replica_scoped(0, names::QUEUE_DEPTH),
+            names::QUEUE_DEPTH.to_string()
+        );
+        assert_ne!(
+            replica_scoped(1, names::DECODE_TOK_PER_S),
+            replica_scoped(11, names::DECODE_TOK_PER_S)
+        );
     }
 
     #[test]

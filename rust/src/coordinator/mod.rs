@@ -17,11 +17,13 @@
 //! composition (tested in `tests/e2e_serving_test.rs`).
 
 pub mod batcher;
+pub mod fleet;
 pub mod metrics;
 pub mod request;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig, Engine, FusedStep, PrefillChunk, PrefixHit, StepOutcome};
+pub use fleet::{Fleet, FleetConfig};
 pub use metrics::MetricsRegistry;
 pub use request::{
     CancelToken, Completion, FinishReason, GenParams, Request, SubmitError, TokenEvent,
@@ -44,6 +46,16 @@ pub struct Router {
     /// `prefill_tok_per_s` throughput gauges.
     decode_s: f64,
     prefill_s: f64,
+    /// Tokens this router decoded / prefilled. Counted locally (not read
+    /// back from the shared counter) so N fleet replicas sharing one
+    /// registry each report their own throughput, not the fleet total.
+    decode_tokens_n: u64,
+    prefill_tokens_n: u64,
+    /// Fleet replica index. `None` (the solo router) records gauges under
+    /// the canonical global names; `Some(i)` scopes every gauge to
+    /// `replica{i}_…` so N pump threads never fight last-writer-wins over
+    /// one global gauge — the fleet dispatcher owns the aggregates.
+    scope: Option<usize>,
 }
 
 impl Router {
@@ -53,6 +65,37 @@ impl Router {
             metrics: Arc::new(MetricsRegistry::new()),
             decode_s: 0.0,
             prefill_s: 0.0,
+            decode_tokens_n: 0,
+            prefill_tokens_n: 0,
+            scope: None,
+        }
+    }
+
+    /// A router serving as fleet replica `replica`, recording into the
+    /// fleet-shared `metrics` registry with its gauges replica-scoped.
+    pub(crate) fn new_replica(
+        cfg: BatcherConfig,
+        replica: usize,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Router {
+        Router {
+            batcher: Batcher::new(cfg),
+            metrics,
+            decode_s: 0.0,
+            prefill_s: 0.0,
+            decode_tokens_n: 0,
+            prefill_tokens_n: 0,
+            scope: Some(replica),
+        }
+    }
+
+    /// Record a gauge under its canonical name (solo) or replica-scoped
+    /// name (fleet replica). Counters and summaries stay unscoped — they
+    /// aggregate correctly under concurrent increments.
+    fn rgauge(&self, name: &str, value: f64) {
+        match self.scope {
+            None => self.metrics.gauge(name, value),
+            Some(i) => self.metrics.gauge(&metrics::replica_scoped(i, name), value),
         }
     }
 
@@ -123,6 +166,10 @@ impl Router {
                     self.metrics.incr("decode_steps", 1);
                     self.metrics.incr("decode_tokens", ds as u64);
                     self.metrics.observe("decode_batch", ds as f64);
+                    self.decode_tokens_n += ds as u64;
+                }
+                if pt > 0 {
+                    self.prefill_tokens_n += pt as u64;
                 }
                 if pt > 0 && ds > 0 {
                     self.metrics.incr(metrics::names::MIXED_STEPS, 1);
@@ -158,23 +205,17 @@ impl Router {
             }
             StepOutcome::Idle => {}
         }
-        self.metrics
-            .gauge(metrics::names::QUEUE_DEPTH, self.batcher.queued() as f64);
-        self.metrics
-            .gauge("running_seqs", self.batcher.running() as f64);
-        self.metrics
-            .gauge("cache_used_bytes", engine.cache_used_bytes() as f64);
+        self.rgauge(metrics::names::QUEUE_DEPTH, self.batcher.queued() as f64);
+        self.rgauge("running_seqs", self.batcher.running() as f64);
+        self.rgauge("cache_used_bytes", engine.cache_used_bytes() as f64);
         let (shared_pages, bytes_saved) = engine.prefix_cache_stats();
-        self.metrics
-            .gauge(metrics::names::SHARED_PAGES, shared_pages as f64);
-        self.metrics
-            .gauge(metrics::names::BYTES_SAVED_BY_SHARING, bytes_saved as f64);
-        self.metrics.gauge(
+        self.rgauge(metrics::names::SHARED_PAGES, shared_pages as f64);
+        self.rgauge(metrics::names::BYTES_SAVED_BY_SHARING, bytes_saved as f64);
+        self.rgauge(
             metrics::names::KV_BYTES_PER_TOKEN,
             engine.kv_bytes_per_token() as f64,
         );
-        self.metrics
-            .gauge(metrics::names::QUANT_DEQUANT_ERROR, engine.kv_quant_error());
+        self.rgauge(metrics::names::QUANT_DEQUANT_ERROR, engine.kv_quant_error());
         let done = self.batcher.take_completions();
         for c in &done {
             self.metrics.incr("tokens_out", c.tokens.len() as u64);
@@ -203,23 +244,22 @@ impl Router {
     /// by [`Router::pump`]), not total wall clock, so the two phases are
     /// separately comparable across runs.
     fn finish_run_metrics(&self, engine: &dyn Engine, wall_s: f64) {
-        self.metrics.gauge("wall_s", wall_s);
-        let decode_toks = self.metrics.counter("decode_tokens");
-        if decode_toks > 0 {
-            self.metrics.gauge(
+        self.rgauge("wall_s", wall_s);
+        // This router's own token counts (the shared counters hold the
+        // fleet-wide totals when N replicas share one registry).
+        if self.decode_tokens_n > 0 {
+            self.rgauge(
                 metrics::names::DECODE_TOK_PER_S,
-                decode_toks as f64 / self.decode_s.max(1e-9),
+                self.decode_tokens_n as f64 / self.decode_s.max(1e-9),
             );
         }
-        let prefill_toks = self.metrics.counter("prefill_tokens");
-        if prefill_toks > 0 {
-            self.metrics.gauge(
+        if self.prefill_tokens_n > 0 {
+            self.rgauge(
                 metrics::names::PREFILL_TOK_PER_S,
-                prefill_toks as f64 / self.prefill_s.max(1e-9),
+                self.prefill_tokens_n as f64 / self.prefill_s.max(1e-9),
             );
         }
-        self.metrics
-            .gauge("cache_peak_bytes", engine.cache_peak_bytes() as f64);
+        self.rgauge("cache_peak_bytes", engine.cache_peak_bytes() as f64);
     }
 
     /// Drive all submitted requests to completion on the calling thread: a

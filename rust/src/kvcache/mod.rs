@@ -828,10 +828,13 @@ const TRIE_ROOT: usize = 0;
 /// remaining chunks are not registered — a miss, never a wrong hit.
 const TRIE_DEAD: usize = usize::MAX;
 
-fn chunk_hash(tokens: &[u32]) -> u64 {
+pub(crate) fn chunk_hash(tokens: &[u32]) -> u64 {
     // FNV-1a over the token bytes; children are verified by exact token
     // comparison, so a collision can only cost a cache miss, never a wrong
-    // hit.
+    // hit. pub(crate): the fleet dispatcher's affinity fingerprint keys
+    // page-aligned chunks with the *same* hash so its index mirrors the
+    // trie's keying (its misroutes are bounded by the same collision
+    // argument — a wrong replica is only ever a cache miss).
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &t in tokens {
         for b in t.to_le_bytes() {
@@ -1141,8 +1144,10 @@ impl KvCacheManager {
     }
 
     /// Bytes currently committed against the budget: backed pages minus
-    /// reclaimable cold pages, plus outstanding reservations.
-    fn committed(&self) -> u64 {
+    /// reclaimable cold pages, plus outstanding reservations. Public so the
+    /// fleet dispatcher can use each replica pool's commitment as the byte
+    /// half of its least-loaded routing score.
+    pub fn committed(&self) -> u64 {
         self.pool.used_bytes - self.pool.cold_bytes + self.outstanding
     }
 

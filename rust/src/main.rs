@@ -16,12 +16,14 @@ use kqsvd::bench_support::{f as fnum, Table};
 use kqsvd::cli::{render_help, Args, OptSpec};
 use kqsvd::config::{preset, Config, Method, ZOO};
 use kqsvd::coordinator::metrics::names as metric_names;
+use kqsvd::coordinator::metrics::replica_scoped;
 use kqsvd::coordinator::{
-    BatcherConfig, FinishReason, GenParams, Request, RequestHandle, Router, TokenEvent,
+    BatcherConfig, Engine, FinishReason, Fleet, FleetConfig, GenParams, Request, RequestHandle,
+    Router, TokenEvent,
 };
 use kqsvd::eval::{figure1_for_model, figure2_for_model};
 use kqsvd::model::Transformer;
-use kqsvd::server::build_engine;
+use kqsvd::server::{build_engine, build_fleet};
 use kqsvd::text::{ByteTokenizer, Corpus};
 use kqsvd::util::stats::fmt_bytes;
 use std::io::Write;
@@ -270,6 +272,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "prefix-cache", help: "share prompt-prefix pages across sequences (bare flag enables; 0 disables)", default: Some("0") },
                     OptSpec { name: "kv-dtype", help: "cache page storage dtype: f32 | int8 (per-row quantized, ~4x fewer bytes/token)", default: Some("f32") },
                     OptSpec { name: "shared-prefix", help: "tokens of common prompt prefix across the synthetic requests (demo for --prefix-cache)", default: Some("0") },
+                    OptSpec { name: "replicas", help: "engine replicas behind the fleet dispatcher (1 = solo router; cache budget splits across replicas)", default: Some("1") },
                     OptSpec { name: "backend", help: "rust | pjrt", default: Some("rust") },
                 ],
             )
@@ -293,11 +296,38 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         n_requests, cfg.model.name, cfg.method.name(), cfg.serve.backend, cfg.serve.prefix_cache,
         cfg.serve.kv_dtype.name()
     );
-    let engine = build_engine(&cfg)?;
-    println!("kernel tier: {} (override with KQSVD_KERNELS=scalar|simd)", engine.kernels().isa);
+    // replicas == 1 keeps the classic solo-router path (byte-for-byte
+    // identical event streams); > 1 assembles a fleet with the serve cache
+    // budget split evenly across the replica pools.
+    let replicas = cfg.serve.replicas.max(1);
+    let handle = if replicas > 1 {
+        let engines = build_fleet(&cfg)?;
+        println!(
+            "kernel tier: {} (override with KQSVD_KERNELS=scalar|simd)",
+            engines[0].kernels().isa
+        );
+        println!(
+            "fleet: {replicas} replicas · {} cache budget each",
+            fmt_bytes(engines[0].cache.budget_bytes()),
+        );
+        let boxed: Vec<Box<dyn Engine + Send>> = engines
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn Engine + Send>)
+            .collect();
+        Fleet::serve(
+            FleetConfig::from(&cfg.serve),
+            BatcherConfig::from(&cfg.serve),
+            boxed,
+        )
+    } else {
+        let engine = build_engine(&cfg)?;
+        println!(
+            "kernel tier: {} (override with KQSVD_KERNELS=scalar|simd)",
+            engine.kernels().isa
+        );
+        Router::new(BatcherConfig::from(&cfg.serve)).serve(Box::new(engine))
+    };
     let corpus = Corpus::new(cfg.model.vocab_size, 1234);
-    let router = Router::new(BatcherConfig::from(&cfg.serve));
-    let handle = router.serve(Box::new(engine));
 
     let prefix = corpus.sequence(kqsvd::text::Split::Validation, 999, shared_prefix);
     let submissions: Vec<RequestHandle> = (0..n_requests)
@@ -396,5 +426,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .unwrap_or(0.0) as u64
         ),
     );
+    if replicas > 1 {
+        let hits = metrics.counter(metric_names::FLEET_AFFINITY_HITS);
+        let misses = metrics.counter(metric_names::FLEET_AFFINITY_MISSES);
+        println!(
+            "fleet routing: {hits} affinity hits / {misses} misses ({:.0}% hit rate) · {} steals",
+            100.0 * hits as f64 / ((hits + misses).max(1)) as f64,
+            metrics.counter(metric_names::FLEET_STEALS),
+        );
+        for i in 0..replicas {
+            let g = |name: &str| metrics.gauge_value(&replica_scoped(i, name)).unwrap_or(0.0);
+            println!(
+                "  replica {i}: decode {:.1} tok/s · queue depth {:.0} · committed {}",
+                g(metric_names::DECODE_TOK_PER_S),
+                g(metric_names::REPLICA_QUEUE_DEPTH),
+                fmt_bytes(g(metric_names::REPLICA_COMMITTED_BYTES) as u64),
+            );
+        }
+    }
     Ok(())
 }

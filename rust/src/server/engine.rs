@@ -848,6 +848,10 @@ impl Engine for ServingEngine {
         self.cache.peak_bytes()
     }
 
+    fn cache_committed_bytes(&self) -> u64 {
+        self.cache.committed()
+    }
+
     fn prefix_cache_enabled(&self) -> bool {
         self.cache.prefix_cache()
     }

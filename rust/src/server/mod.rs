@@ -162,6 +162,33 @@ pub fn build_engine(cfg: &Config) -> Result<ServingEngine> {
     EngineBuilder::new(cfg).build()
 }
 
+/// Build the engine replicas for a fleet (`cfg.serve.replicas` of them;
+/// see [`crate::coordinator::Fleet`]). Replica 0 goes through the normal
+/// disk-cached path; the rest are assembled in memory from replica 0's
+/// weights and projections, so N replicas cost one calibration and one set
+/// of run-dir artifacts. The serve-level `cache_budget_bytes` is split
+/// evenly across the replica pools: a fleet never commits more cache memory
+/// than a solo engine with the same config.
+pub fn build_fleet(cfg: &Config) -> Result<Vec<ServingEngine>> {
+    let n = cfg.serve.replicas.max(1);
+    let mut split = cfg.clone();
+    split.serve.cache_budget_bytes = (cfg.serve.cache_budget_bytes / n as u64).max(1);
+    let first = build_engine(&split)
+        .with_context(|| format!("building fleet replica 0 of {n}"))?;
+    let mut engines = Vec::with_capacity(n);
+    for i in 1..n {
+        engines.push(
+            EngineBuilder::new(&split)
+                .with_model(Transformer::new(split.model.clone(), first.model.weights.clone()))
+                .with_projections(first.proj.clone())
+                .build()
+                .with_context(|| format!("building fleet replica {i} of {n}"))?,
+        );
+    }
+    engines.insert(0, first);
+    Ok(engines)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +275,28 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(eng2.cache.budget_bytes(), 1234 * 1024);
+        std::fs::remove_dir_all(Path::new(&cfg.run_dir)).ok();
+    }
+
+    #[test]
+    fn build_fleet_splits_budget_across_identical_replicas() {
+        let mut cfg = tiny_cfg("fleet-build");
+        cfg.serve.replicas = 3;
+        cfg.serve.cache_budget_bytes = 3 * 1024 * 1024;
+        let engines = build_fleet(&cfg).unwrap();
+        assert_eq!(engines.len(), 3);
+        for e in &engines {
+            // Every replica got an equal share of the serve budget and the
+            // same cache geometry as replica 0.
+            assert_eq!(e.cache.budget_bytes(), 1024 * 1024);
+            assert_eq!(e.cache.spec(), engines[0].cache.spec());
+            assert_eq!(
+                e.model.weights.embed.data()[..8],
+                engines[0].model.weights.embed.data()[..8]
+            );
+        }
+        // Only replica 0 touched the disk cache; one set of artifacts.
+        assert!(Path::new(&cfg.run_dir).join("weights.bin").exists());
         std::fs::remove_dir_all(Path::new(&cfg.run_dir)).ok();
     }
 

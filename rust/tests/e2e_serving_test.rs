@@ -147,6 +147,54 @@ fn offline_and_streaming_modes_produce_identical_completions() {
 }
 
 #[test]
+fn fleet_single_replica_is_stream_identical_to_solo_router() {
+    // Acceptance: a 1-replica fleet is behavior-identical to the solo
+    // router — same deterministic workload, same tokens and finish reasons
+    // through real engines. (The fleet dispatch layer itself takes no
+    // replicas==1 shortcut, so this exercises the full routing path.)
+    use kqsvd::coordinator::{Engine, Fleet, FleetConfig};
+    let solo_eng = engine_for("test-tiny", Method::KqSvd, "rust", "fleet-solo").unwrap();
+    let solo = run_workload_streaming(solo_eng, 5);
+
+    let fleet_eng = engine_for("test-tiny", Method::KqSvd, "rust", "fleet-one").unwrap();
+    let handle = Fleet::serve(
+        FleetConfig {
+            replicas: 1,
+            ..FleetConfig::default()
+        },
+        BatcherConfig {
+            max_batch: 4,
+            max_queue: 64,
+            prefill_chunk: 16,
+            ..Default::default()
+        },
+        vec![Box::new(fleet_eng) as Box<dyn Engine + Send>],
+    );
+    let submissions: Vec<RequestHandle> = (0..5)
+        .map(|i| handle.submit(Request::new(i, workload_prompt(i), 6)))
+        .collect();
+    let mut fleet: Vec<Completion> = submissions
+        .into_iter()
+        .map(|rh| rh.wait().expect("completion"))
+        .collect();
+    let metrics = handle.metrics();
+    handle.join().unwrap();
+    fleet.sort_by_key(|c| c.id);
+
+    assert_eq!(solo.len(), fleet.len());
+    for (a, b) in solo.iter().zip(&fleet) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {}: fleet/router divergence", a.id);
+        assert_eq!(a.reason, b.reason);
+    }
+    // Every submission was classified by the affinity router.
+    assert_eq!(
+        metrics.counter("fleet_affinity_hits") + metrics.counter("fleet_affinity_misses"),
+        5
+    );
+}
+
+#[test]
 fn backpressure_under_tiny_budget() {
     let mut eng = engine_for("test-tiny", Method::KqSvd, "rust", "bp").unwrap();
     // Shrink the budget to roughly two sequences' worth.

@@ -777,6 +777,10 @@ HOT_ROOTS = (
     ("step", "Batcher"),
     ("step_fused", None),
     ("decode", "ServingEngine"),
+    # The fleet dispatcher's per-submission routing decision (reads
+    # caller-built load snapshots precisely so it can stay allocation- and
+    # lock-free).
+    ("route_request", "FleetDispatch"),
 )
 
 

@@ -1,0 +1,22 @@
+// lint-as: rust/src/coordinator/fleet.rs
+// expect-lint: hot-path-alloc
+//
+// Negative fixture: `FleetDispatch::route_request` — the per-submission
+// fleet routing hot root — reaches an allocating helper one hop down (a
+// fingerprint buffer rebuilt per routed request). The real implementation
+// must scan the prompt with plain loops and read caller-built load
+// snapshots; any allocation on this path must fire the whole-program lint.
+// This file is lint fodder, never compiled.
+
+impl FleetDispatch {
+    fn route_request(&self, prompt: &[u32], loads: &[LoadSnapshot]) -> usize {
+        let chains = chunk_chains(prompt, self.chunk_tokens);
+        chains.len() % loads.len().max(1)
+    }
+}
+
+fn chunk_chains(prompt: &[u32], chunk_tokens: usize) -> Vec<u64> {
+    let mut chains = Vec::with_capacity(prompt.len() / chunk_tokens.max(1));
+    chains.push(prompt.len() as u64);
+    chains
+}

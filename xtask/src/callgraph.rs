@@ -33,10 +33,15 @@ pub const AUX_DESIGN: &str = "DESIGN.md";
 pub const AUX_PATHS: [&str; 3] = [AUX_MIRI, AUX_PARITY, AUX_DESIGN];
 
 /// The serving hot roots: (fn name, required impl ctx or None for any).
-pub const HOT_ROOTS: [(&str, Option<&str>); 3] = [
+pub const HOT_ROOTS: [(&str, Option<&str>); 4] = [
     ("step", Some("Batcher")),
     ("step_fused", None),
     ("decode", Some("ServingEngine")),
+    // The fleet dispatcher's per-submission routing decision: fingerprint
+    // scan + least-loaded fallback, run for every request entering the
+    // fleet. It reads caller-built load snapshots precisely so it can stay
+    // allocation- and lock-free.
+    ("route_request", Some("FleetDispatch")),
 ];
 
 /// Method names that collide with std-prelude methods: a `.name(..)` call
