@@ -207,12 +207,12 @@ impl FleetDispatch {
 /// allocated while a request sits here — that happens only after the
 /// replica's pump pulls it into its batcher — which is what makes backlog
 /// entries (and only backlog entries) safe to steal.
-struct QueuedSubmit {
-    req: Request,
-    events: Sender<TokenEvent>,
-    cancel: CancelToken,
+pub(super) struct QueuedSubmit {
+    pub(super) req: Request,
+    pub(super) events: Sender<TokenEvent>,
+    pub(super) cancel: CancelToken,
     /// Routed without an affinity hit: eligible for work stealing.
-    cold: bool,
+    pub(super) cold: bool,
 }
 
 /// Mutable fleet state under one mutex: per-replica backlogs + the routing
@@ -243,7 +243,10 @@ struct FleetShared {
 /// thief's own) holding at least one cold entry, and the position of its
 /// oldest cold entry. Warm entries are never candidates — their pages are
 /// (or are about to be) on their routed replica.
-fn pick_steal_victim(queues: &[VecDeque<QueuedSubmit>], thief: usize) -> Option<(usize, usize)> {
+pub(super) fn pick_steal_victim(
+    queues: &[VecDeque<QueuedSubmit>],
+    thief: usize,
+) -> Option<(usize, usize)> {
     let mut victim: Option<(usize, usize)> = None;
     let mut deepest = 0usize;
     for (j, q) in queues.iter().enumerate() {
@@ -426,9 +429,12 @@ fn route_submit(
     snap.clear();
     for (r, l) in shared.loads.iter().enumerate() {
         snap.push(LoadSnapshot {
+            // lint-ok(atomic-ordering): routing snapshot of pump-published gauges — staleness only affects placement quality, never correctness
             seqs: l.queued.load(Ordering::Relaxed)
+                // lint-ok(atomic-ordering): routing snapshot — same advisory gauge as the line above
                 + l.running.load(Ordering::Relaxed)
                 + st.queues[r].len(),
+            // lint-ok(atomic-ordering): routing snapshot — same advisory gauge as the lines above
             committed_bytes: l.committed_bytes.load(Ordering::Relaxed),
         });
     }
@@ -472,7 +478,7 @@ fn record_fleet_gauges(shared: &FleetShared) {
     let queued: usize = shared
         .loads
         .iter()
-        .map(|l| l.queued.load(Ordering::Relaxed))
+        .map(|l| l.queued.load(Ordering::Relaxed)) // lint-ok(atomic-ordering): monitoring gauge sum — racy per-replica reads are fine for an advisory depth gauge
         .sum();
     shared
         .metrics
@@ -567,10 +573,8 @@ fn replica_main(
                 drop(st);
                 router.batcher.cancel_all_queued();
             } else {
-                let _ = shared
-                    .cv
-                    .wait_timeout(st, Duration::from_millis(5))
-                    .unwrap();
+                // lint-ok(condvar-discipline): deliberate 5ms timeout-poll — the blocking predicate (batcher budget headroom) changes on pump progress, not on a condvar signal, and the outer serve loop re-checks it every lap
+                let _ = shared.cv.wait_timeout(st, Duration::from_millis(5)).unwrap();
             }
         }
     }
@@ -596,6 +600,7 @@ fn drain_backlog(
         let item = {
             let mut st = shared.state.lock().unwrap();
             match st.queues[idx].iter().position(|s| s.cancel.is_cancelled()) {
+                // lint-ok(condvar-discipline): no notify owed — draining only shrinks my own backlog, which can never turn another replica's wait predicate (non-empty queue / steal candidate / closed) true
                 Some(pos) => st.queues[idx].remove(pos),
                 None if router.batcher.queued() < watermark => st.queues[idx].pop_front(),
                 None => None,
@@ -616,6 +621,7 @@ fn try_steal(idx: usize, shared: &FleetShared, router: &mut Router, engine: &dyn
         let mut st = shared.state.lock().unwrap();
         match pick_steal_victim(&st.queues, idx) {
             Some((victim, pos)) => {
+                // lint-ok(condvar-discipline): no notify owed — stealing only shrinks a backlog, which can never turn another replica's wait predicate (non-empty queue / steal candidate / closed) true
                 let s = st.queues[victim].remove(pos);
                 if let Some(s) = &s {
                     st.dispatch.record_route(&s.req.prompt, idx);
@@ -651,9 +657,12 @@ fn submit_to_batcher(router: &mut Router, engine: &dyn Engine, s: QueuedSubmit) 
 /// gauges, including `queue_depth`, are written by its scoped router).
 fn publish_load(idx: usize, shared: &FleetShared, router: &Router, engine: &dyn Engine) {
     let load = &shared.loads[idx];
+    // lint-ok(atomic-ordering): advisory load gauge — single-writer (this pump); a racy reader only skews one routing decision
     load.queued.store(router.batcher.queued(), Ordering::Relaxed);
+    // lint-ok(atomic-ordering): advisory load gauge — single-writer (this pump); a racy reader only skews one routing decision
     load.running.store(router.batcher.running(), Ordering::Relaxed);
     let committed = engine.cache_committed_bytes();
+    // lint-ok(atomic-ordering): advisory load gauge — single-writer (this pump); a racy reader only skews one routing decision
     load.committed_bytes.store(committed, Ordering::Relaxed);
     shared.metrics.gauge(
         &replica_scoped(idx, names::REPLICA_COMMITTED_BYTES),

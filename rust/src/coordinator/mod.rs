@@ -21,6 +21,10 @@ pub mod fleet;
 pub mod metrics;
 pub mod request;
 pub mod session;
+/// Exhaustive interleaving model of the backlog-steal protocol (the
+/// analogue of `kvcache::model` for the fleet's pre-admission state).
+#[cfg(test)]
+mod steal_model;
 
 pub use batcher::{Batcher, BatcherConfig, Engine, FusedStep, PrefillChunk, PrefixHit, StepOutcome};
 pub use fleet::{Fleet, FleetConfig};

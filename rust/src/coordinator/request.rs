@@ -142,12 +142,18 @@ impl CancelToken {
     }
 
     /// Request cancellation. Idempotent.
+    ///
+    /// Release/Acquire pairing (not Relaxed): the flag is a cross-thread
+    /// signal, so everything the cancelling thread did before `cancel()`
+    /// must be visible to the scheduler thread that observes it — e.g. a
+    /// client that records "why" next to the token before cancelling must
+    /// never race its own flag.
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::Relaxed);
+        self.0.store(true, Ordering::Release);
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::Relaxed)
+        self.0.load(Ordering::Acquire)
     }
 }
 
@@ -491,5 +497,28 @@ mod tests {
             TokenEvent::Token { token, index, .. } => assert_eq!((token, index), (0, 1)),
             other => panic!("unexpected event {other:?}"),
         }
+    }
+
+    /// Regression: `cancel()` publishes with Release and `is_cancelled()`
+    /// reads with Acquire, so data written before cancelling is visible to
+    /// the observer that sees the flag. A Relaxed pair would let the flag
+    /// outrun the payload; the `atomic-ordering` lint pins the orderings,
+    /// this pins the observable contract.
+    #[test]
+    fn cancel_release_acquire_publishes_payload() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let token = CancelToken::new();
+        let payload = std::sync::Arc::new(AtomicU32::new(0));
+        let (t2, p2) = (token.clone(), payload.clone());
+        let h = std::thread::spawn(move || {
+            p2.store(7, Ordering::Relaxed); // lint-ok(atomic-ordering): test payload — ordered by the Release store under test
+            t2.cancel();
+        });
+        while !token.is_cancelled() {
+            std::hint::spin_loop();
+        }
+        // Acquire on the flag orders the Relaxed payload store before us.
+        assert_eq!(payload.load(Ordering::Relaxed), 7); // lint-ok(atomic-ordering): test payload — ordered by the Acquire load under test
+        h.join().unwrap();
     }
 }

@@ -1,0 +1,307 @@
+//! Exhaustive interleaving model of the dispatcher ↔ replica backlog-steal
+//! protocol (DESIGN.md §5f): submissions routed into per-replica backlogs,
+//! an idle thief stealing the oldest cold entry, a client cancelling
+//! mid-flight, and the victim draining its own backlog — every merge of the
+//! four logical threads' program orders is replayed against the *real*
+//! routing core ([`FleetDispatch`]) and the *real* victim-selection policy
+//! ([`pick_steal_victim`]), with the conservation invariants checked after
+//! every step:
+//!
+//! * **never lost, never duplicated** — at all times each request sits in
+//!   exactly one backlog / pending slot, or is settled (admitted to a
+//!   batcher, or terminated with a cancelled event) exactly once; once all
+//!   ops have run, nothing may be in limbo (in no queue and never settled);
+//! * **warm work never migrates** — an affinity-hit entry is only ever
+//!   admitted by the replica it was routed to;
+//! * **stolen fingerprints re-point** — from the moment the thief holds a
+//!   stolen request, the affinity index must route that prompt to the thief
+//!   (same-prefix followers chase the pages).
+//!
+//! The model's admission step mirrors `submit_to_batcher` →
+//! `Router::handle_msg`: an entry whose [`CancelToken`] is already set is
+//! settled with a terminal `Finished(cancelled)` event instead of being
+//! admitted — that check is load-bearing, and
+//! [`tests::seeded_steal_drop_is_caught`] proves the explorer notices when
+//! a buggy thief silently discards a cancelled stolen entry instead.
+//!
+//! Like the kvcache models, plain `cargo test` and the CI loom lane
+//! (`RUSTFLAGS="--cfg loom"`) both fully enumerate this model — 630
+//! schedules (7!/(2!·2!·1!·2!)) sits far below even the plain-test cap —
+//! and the positive test asserts the exact multinomial count so a silent
+//! enumeration hole cannot pass.
+
+use super::fleet::{pick_steal_victim, FleetDispatch, LoadSnapshot, QueuedSubmit};
+use super::request::{CancelToken, Completion, Request, TokenEvent};
+use crate::util::interleave::{explore, schedule_cap, Violation};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver};
+
+const CHUNK_TOKENS: usize = 4;
+const THIEF: usize = 1;
+const VICTIM: usize = 0;
+/// Prefix pre-warmed on the victim in `init`: R2 routes as an affinity hit.
+const WARM_PREFIX: [u32; 4] = [1, 2, 3, 4];
+/// R1's prompt — a full fingerprint chunk sharing nothing with the warm
+/// prefix, so R1 routes cold (stealable) and registers its own chain.
+const COLD_PROMPT: [u32; 4] = [50, 51, 52, 53];
+const R1: u64 = 1;
+const R2: u64 = 2;
+
+/// Program-order ops of the four logical threads.
+enum Op {
+    /// Dispatcher routes + parks the cold request R1.
+    SubmitR1,
+    /// Dispatcher routes + parks the warm request R2 (must affinity-hit).
+    SubmitR2,
+    /// Client fires R1's cancel token (it holds the token from submit time,
+    /// so this can land before the dispatcher has even routed R1).
+    CancelR1,
+    /// Thief runs `pick_steal_victim` and pulls the entry under the state
+    /// lock, re-pointing its fingerprints (`try_steal`'s locked section).
+    Steal,
+    /// Thief admits the stolen entry to its batcher (`submit_to_batcher`
+    /// after the lock is released).
+    AdmitStolen,
+    /// Victim pulls its whole backlog under the lock (`drain_backlog`'s
+    /// locked section; watermark high enough for everything).
+    Drain,
+    /// Victim admits what it drained (after the lock is released).
+    AdmitDrained,
+}
+
+struct St {
+    dispatch: FleetDispatch,
+    queues: Vec<VecDeque<QueuedSubmit>>,
+    /// Entry pulled by the thief, between `Steal` and `AdmitStolen`.
+    thief_pending: Option<QueuedSubmit>,
+    /// Entries pulled by the victim, between `Drain` and `AdmitDrained`.
+    victim_pending: Vec<QueuedSubmit>,
+    cancel_r1: CancelToken,
+    /// Settled requests: (id, replica, terminal) — terminal means the entry
+    /// was cancelled before admission and its stream got a Finished event.
+    settled: Vec<(u64, usize, bool)>,
+    /// Keep the event receivers alive so model sends succeed.
+    _event_rx: Vec<Receiver<TokenEvent>>,
+    applied: usize,
+    total: usize,
+}
+
+fn fresh(total: usize) -> St {
+    let mut dispatch = FleetDispatch::new(2, CHUNK_TOKENS, 64);
+    // The victim already holds the warm prefix's pages from earlier traffic.
+    dispatch.record_route(&WARM_PREFIX, VICTIM);
+    St {
+        dispatch,
+        queues: (0..2).map(|_| VecDeque::new()).collect(),
+        thief_pending: None,
+        victim_pending: Vec::new(),
+        cancel_r1: CancelToken::new(),
+        settled: Vec::new(),
+        _event_rx: Vec::new(),
+        applied: 0,
+        total,
+    }
+}
+
+/// Routing snapshot the dispatcher would build: backlog depths only (the
+/// pump-published atomics are zero in this pre-admission window).
+fn loads(st: &St) -> Vec<LoadSnapshot> {
+    st.queues
+        .iter()
+        .map(|q| LoadSnapshot {
+            seqs: q.len(),
+            committed_bytes: 0,
+        })
+        .collect()
+}
+
+/// `route_submit`'s core: route, record, park. Returns the affinity verdict.
+fn submit(st: &mut St, id: u64, prompt: &[u32]) -> bool {
+    let (events, rx) = channel();
+    st._event_rx.push(rx);
+    let snap = loads(st);
+    let (replica, hit) = st.dispatch.route_request(prompt, &snap);
+    st.dispatch.record_route(prompt, replica);
+    let cancel = if id == R1 {
+        st.cancel_r1.clone()
+    } else {
+        CancelToken::new()
+    };
+    st.queues[replica].push_back(QueuedSubmit {
+        req: Request::new(id, prompt.to_vec(), 4),
+        events,
+        cancel,
+        cold: !hit,
+    });
+    hit
+}
+
+/// `submit_to_batcher` → `Router::handle_msg`: already-cancelled entries
+/// settle with a terminal event instead of entering the batcher.
+fn admit(st: &mut St, s: QueuedSubmit, replica: usize) {
+    let id = s.req.id;
+    if s.cancel.is_cancelled() {
+        let _ = s.events.send(TokenEvent::Finished(Completion::cancelled(id)));
+        st.settled.push((id, replica, true));
+    } else {
+        st.settled.push((id, replica, false));
+    }
+}
+
+/// Apply one op. `buggy_thief` seeds the protocol bug the model must catch:
+/// the thief discards a stolen entry whose cancel token is already set,
+/// instead of handing it to the admission path that owes the stream its
+/// terminal event.
+fn apply(st: &mut St, op: &Op, buggy_thief: bool) -> Result<(), String> {
+    match op {
+        Op::SubmitR1 => {
+            submit(st, R1, &COLD_PROMPT);
+        }
+        Op::SubmitR2 => {
+            if !submit(st, R2, &WARM_PREFIX) {
+                return Err("pre-warmed prompt failed to affinity-hit".into());
+            }
+        }
+        Op::CancelR1 => st.cancel_r1.cancel(),
+        Op::Steal => {
+            if let Some((victim, pos)) = pick_steal_victim(&st.queues, THIEF) {
+                let s = st.queues[victim].remove(pos).expect("picked entry exists");
+                st.dispatch.record_route(&s.req.prompt, THIEF);
+                if buggy_thief && s.cancel.is_cancelled() {
+                    // Seeded bug: silently drop the cancelled steal.
+                } else {
+                    st.thief_pending = Some(s);
+                }
+            }
+        }
+        Op::AdmitStolen => {
+            if let Some(s) = st.thief_pending.take() {
+                admit(st, s, THIEF);
+            }
+        }
+        Op::Drain => {
+            let drained: Vec<QueuedSubmit> = st.queues[VICTIM].drain(..).collect();
+            st.victim_pending.extend(drained);
+        }
+        Op::AdmitDrained => {
+            for s in std::mem::take(&mut st.victim_pending) {
+                admit(st, s, VICTIM);
+            }
+        }
+    }
+    st.applied += 1;
+    Ok(())
+}
+
+/// Where request `id` currently is: in-flight slots and settlements.
+fn occurrences(st: &St, id: u64) -> (usize, usize) {
+    let in_flight = st
+        .queues
+        .iter()
+        .flat_map(|q| q.iter())
+        .chain(st.thief_pending.iter())
+        .chain(st.victim_pending.iter())
+        .filter(|s| s.req.id == id)
+        .count();
+    let settled = st.settled.iter().filter(|&&(i, _, _)| i == id).count();
+    (in_flight, settled)
+}
+
+fn check(st: &St) -> Result<(), String> {
+    for id in [R1, R2] {
+        let (in_flight, settled) = occurrences(st, id);
+        if in_flight + settled > 1 {
+            return Err(format!(
+                "request {id} duplicated: {in_flight} in-flight copies, {settled} settlements"
+            ));
+        }
+    }
+    // Warm work never migrates to the thief.
+    if st.thief_pending.as_ref().is_some_and(|s| s.req.id == R2) {
+        return Err("thief holds the warm (affinity-hit) request".into());
+    }
+    if st
+        .settled
+        .iter()
+        .any(|&(id, replica, _)| id == R2 && replica != VICTIM)
+    {
+        return Err("warm request settled on a replica other than its routed one".into());
+    }
+    // From the moment the thief owns R1, the index must route R1's prompt
+    // (and any same-prefix follower) to the thief.
+    let thief_owns_r1 = st.thief_pending.as_ref().is_some_and(|s| s.req.id == R1)
+        || st
+            .settled
+            .iter()
+            .any(|&(id, replica, _)| id == R1 && replica == THIEF);
+    if thief_owns_r1 {
+        let snap = loads(st);
+        let (replica, hit) = st.dispatch.route_request(&COLD_PROMPT, &snap);
+        if !(hit && replica == THIEF) {
+            return Err(format!(
+                "stolen prompt not re-pointed: routes to replica {replica} (hit={hit})"
+            ));
+        }
+    }
+    // End state: fixed-lap model, so anything the ops could settle must be
+    // settled or still parked for a later lap — never vanished.
+    if st.applied == st.total {
+        for id in [R1, R2] {
+            let (in_flight, settled) = occurrences(st, id);
+            if in_flight + settled != 1 {
+                return Err(format!(
+                    "request {id} lost: neither parked in a backlog nor settled \
+                     (in_flight={in_flight}, settled={settled})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn threads() -> Vec<Vec<Op>> {
+    vec![
+        vec![Op::SubmitR1, Op::SubmitR2], // dispatcher
+        vec![Op::Steal, Op::AdmitStolen], // thief replica
+        vec![Op::CancelR1],               // client
+        vec![Op::Drain, Op::AdmitDrained], // victim replica
+    ]
+}
+
+fn run(buggy_thief: bool) -> Result<usize, Box<Violation>> {
+    let ths = threads();
+    let total: usize = ths.iter().map(Vec::len).sum();
+    explore(
+        &ths,
+        || fresh(total),
+        |st, _t, op| apply(st, op, buggy_thief),
+        check,
+        schedule_cap(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The real protocol holds the conservation + affinity invariants under
+    /// every interleaving. 7 ops over thread shapes (2,2,1,2) ⇒ exactly
+    /// 7!/(2!·2!·1!·2!) = 630 schedules; asserting the count proves full
+    /// enumeration (no silent cap truncation).
+    #[test]
+    fn steal_protocol_holds_under_all_interleavings() {
+        let n = run(false).unwrap_or_else(|v| panic!("{v}"));
+        assert_eq!(n, 630, "model must be exhaustively enumerated");
+    }
+
+    /// A thief that silently discards a cancelled stolen entry starves the
+    /// client's stream of its terminal event. The explorer must find an
+    /// interleaving exposing the drop (cancel ⟶ steal ⟶ drain) and report
+    /// it as a replayable schedule.
+    #[test]
+    fn seeded_steal_drop_is_caught() {
+        let v = run(true).expect_err("explorer must catch the dropped cancelled steal");
+        assert!(v.msg.contains("lost"), "unexpected violation: {v}");
+        assert_eq!(v.schedule.len(), 7, "violation fires on a complete schedule");
+    }
+}

@@ -64,6 +64,7 @@ impl Latch {
     }
 
     fn mark_panic(&self) {
+        // lint-ok(condvar-discipline): no notify owed — `panicked` is read only after `wait()` observes remaining == 0, and `done()` (always called right after this) performs that notify
         *self.panicked.lock().unwrap() = true;
     }
 
@@ -92,7 +93,7 @@ impl ThreadPool {
             let rx = Arc::clone(&rx);
             std::thread::Builder::new()
                 .name(format!("kqsvd-worker-{i}"))
-                .spawn(move || worker_loop(rx))
+                .spawn(move || worker_loop(rx)) // lint-ok(channel-lifecycle): deliberately detached — workers exit when the pool's `Sender` drops, and the global pool lives for the whole process
                 .expect("spawn worker");
         }
         Self { tx, size }

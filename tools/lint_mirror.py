@@ -36,6 +36,10 @@ RULES = [
     "unit-confusion",
     "sendptr-escape",
     "dispatch-parity-drift",
+    "lock-order",
+    "condvar-discipline",
+    "atomic-ordering",
+    "channel-lifecycle",
 ]
 
 # Cross-artifact inputs consumed by the whole-program lints. In repo mode
@@ -804,7 +808,7 @@ METHOD_EDGE_DENY = {
 
 
 def call_edges(toks, fn):
-    """(callee, kind, qualifier, line) call sites in the fn body.
+    """(callee, kind, qualifier, line, tok_idx) call sites in the fn body.
 
     kind: "free"      — bare `name(..)` (incl. `self::`/`crate::`/`super::`)
           "qualified" — `Qual::name(..)` with `Self` mapped to the caller ctx
@@ -826,17 +830,17 @@ def call_edges(toks, fn):
                     continue
                 if prev == ".":
                     recv = toks[i - 2][0] if i >= 2 else ""
-                    edges.append((t, "method", recv, ln))
+                    edges.append((t, "method", recv, ln, i))
                 elif prev == "::" and i >= 2 and tok_is_ident(toks[i - 2][0]):
                     q = toks[i - 2][0]
                     if q == "Self" and fn.ctx:
-                        edges.append((t, "qualified", fn.ctx, ln))
+                        edges.append((t, "qualified", fn.ctx, ln, i))
                     elif q in ("self", "crate", "super", "Self"):
-                        edges.append((t, "free", None, ln))
+                        edges.append((t, "free", None, ln, i))
                     else:
-                        edges.append((t, "qualified", q, ln))
+                        edges.append((t, "qualified", q, ln, i))
                 else:
-                    edges.append((t, "free", None, ln))
+                    edges.append((t, "free", None, ln, i))
         i += 1
     return edges
 
@@ -896,8 +900,9 @@ def fn_label(fn):
     return (fn.ctx + "::" + fn.name) if fn.ctx else fn.name
 
 
-def reachable_from_hot_roots(model):
-    """{(file_idx, fn_idx): sorted-list-of-root-labels} over non-test fns."""
+def build_call_index(model):
+    """(nodes, {name: [(file_idx, fn_idx)]}) over non-test fns — the shared
+    substrate for every call-graph-driven pass (reachability, concurrency)."""
     index = {}
     nodes = []
     for fi, f in enumerate(model.files):
@@ -906,67 +911,76 @@ def reachable_from_hot_roots(model):
                 continue
             nodes.append((fi, gi))
             index.setdefault(fn.name, []).append((fi, gi))
+    return nodes, index
 
-    def resolve(name, kind, qual, caller_ctx):
-        cands = index.get(name, [])
-        if kind == "qualified":
-            out = []
-            for fi, gi in cands:
-                fn = model.files[fi]["fns"][gi]
-                if fn.ctx == qual or qual in fn.mods:
-                    out.append((fi, gi))
-            return out
-        if kind == "free":
-            # Single-letter names are overwhelmingly closure/fn-pointer
-            # parameters (`f(lo, hi)`), not crate free fns — never resolve.
-            if len(name) == 1:
-                return []
-            return [
-                (fi, gi)
-                for fi, gi in cands
-                if model.files[fi]["fns"][gi].ctx is None
-            ]
-        # Method call. Resolution ladder, most precise first:
-        #   1. `self.name(..)` → the caller's own impl.
-        #   2. `self.field.name(..)` / `field.name(..)` where the caller's
-        #      struct declares `field: Ty` and `Ty` is a crate struct → Ty's
-        #      impl (precise even for std-colliding names like `insert`).
-        #   3. std-prelude collisions (METHOD_EDGE_DENY) → no edge.
-        #   4. trait-declared names → ALL same-named fns (dynamic dispatch:
-        #      over-approximation is the conservative answer).
-        #   5. otherwise → edge only if the name is crate-unique; an
-        #      ambiguous name would fan one `.load(..)` into every `load`.
-        if qual == "self" and caller_ctx is not None:
-            same = [
-                (fi, gi)
-                for fi, gi in cands
-                if model.files[fi]["fns"][gi].ctx == caller_ctx
-            ]
-            if same:
-                return same
-        recv_ty = model.field_types.get(caller_ctx or "", {}).get(qual or "")
-        if recv_ty in model.struct_names:
-            on_ty = [
-                (fi, gi)
-                for fi, gi in cands
-                if model.files[fi]["fns"][gi].ctx == recv_ty
-            ]
-            return on_ty
-        if name in METHOD_EDGE_DENY:
+
+def resolve_call(model, index, name, kind, qual, caller_ctx):
+    """Resolution ladder shared by reachability and the concurrency stage,
+    most precise first:
+      1. `self.name(..)` → the caller's own impl.
+      2. `self.field.name(..)` / `field.name(..)` where the caller's
+         struct declares `field: Ty` and `Ty` is a crate struct → Ty's
+         impl (precise even for std-colliding names like `insert`).
+      3. std-prelude collisions (METHOD_EDGE_DENY) → no edge.
+      4. trait-declared names → ALL same-named fns (dynamic dispatch:
+         over-approximation is the conservative answer).
+      5. otherwise → edge only if the name is crate-unique; an
+         ambiguous name would fan one `.load(..)` into every `load`.
+    """
+    cands = index.get(name, [])
+    if kind == "qualified":
+        out = []
+        for fi, gi in cands:
+            fn = model.files[fi]["fns"][gi]
+            if fn.ctx == qual or qual in fn.mods:
+                out.append((fi, gi))
+        return out
+    if kind == "free":
+        # Single-letter names are overwhelmingly closure/fn-pointer
+        # parameters (`f(lo, hi)`), not crate free fns — never resolve.
+        if len(name) == 1:
             return []
-        if name in model.trait_methods:
-            return cands
-        return cands if len(cands) == 1 else []
+        return [
+            (fi, gi)
+            for fi, gi in cands
+            if model.files[fi]["fns"][gi].ctx is None
+        ]
+    if qual == "self" and caller_ctx is not None:
+        same = [
+            (fi, gi)
+            for fi, gi in cands
+            if model.files[fi]["fns"][gi].ctx == caller_ctx
+        ]
+        if same:
+            return same
+    recv_ty = model.field_types.get(caller_ctx or "", {}).get(qual or "")
+    if recv_ty in model.struct_names:
+        on_ty = [
+            (fi, gi)
+            for fi, gi in cands
+            if model.files[fi]["fns"][gi].ctx == recv_ty
+        ]
+        return on_ty
+    if name in METHOD_EDGE_DENY:
+        return []
+    if name in model.trait_methods:
+        return cands
+    return cands if len(cands) == 1 else []
+
+
+def reachable_from_hot_roots(model):
+    """{(file_idx, fn_idx): sorted-list-of-root-labels} over non-test fns."""
+    nodes, index = build_call_index(model)
 
     edges_of = {}
     for fi, gi in nodes:
         f = model.files[fi]
         fn = f["fns"][gi]
         resolved = []
-        for name, kind, qual, ln in call_edges(f["toks"], fn):
+        for name, kind, qual, ln, _ti in call_edges(f["toks"], fn):
             if lint_ok(f["scanned"], ln, "hot-path-alloc"):
                 continue  # annotated call line: edge cut (dyn-dispatch false path)
-            resolved.extend(resolve(name, kind, qual, fn.ctx))
+            resolved.extend(resolve_call(model, index, name, kind, qual, fn.ctx))
         edges_of[(fi, gi)] = resolved
 
     roots = []
@@ -1423,11 +1437,555 @@ def lint_dispatch_parity(model, sink):
                     )
 
 
+# --- concurrency stage (concurrency.rs) -----------------------------------
+#
+# Models lock / condvar / atomic / channel usage per function from the token
+# stream plus the items pass's field-type table, propagates lock sets over
+# the resolved call graph, and powers the four concurrency lints:
+# lock-order, condvar-discipline, atomic-ordering, channel-lifecycle.
+# Primitive calls (`.lock()`, `.wait()`, `.send()`, `spawn`, …) are on
+# METHOD_EDGE_DENY, so the stage detects them by direct token/receiver-field
+# analysis rather than via call-graph edges.
+
+LOCK_TYPES = {"Mutex", "RwLock"}
+ATOMIC_TYPES = {
+    "AtomicBool", "AtomicUsize", "AtomicIsize", "AtomicU8", "AtomicU16",
+    "AtomicU32", "AtomicU64", "AtomicI8", "AtomicI16", "AtomicI32",
+    "AtomicI64",
+}
+ATOMIC_METHODS = {
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_and",
+    "fetch_or", "fetch_xor", "fetch_max", "fetch_min", "fetch_update",
+    "compare_exchange", "compare_exchange_weak",
+}
+# Container methods that mutate the guarded value when called through a
+# guard-rooted chain. Deliberately curated: read-only accessors must not
+# make every lock acquisition look like a protocol-relevant write.
+MUTATING_METHODS = {
+    "push", "push_back", "push_front", "pop", "pop_back", "pop_front",
+    "insert", "remove", "clear", "take", "replace", "drain", "extend",
+    "truncate", "swap_remove",
+}
+# Assignment operators as the lexer emits them (compound ops that the
+# lexer splits, like `&=`, cannot appear as single tokens).
+ASSIGN_OPS = {"=", "+=", "-=", "*=", "/=", "%=", "<<=", ">>="}
+WAIT_METHODS = ("wait", "wait_timeout")
+RECV_METHODS = ("recv", "recv_timeout", "try_recv")
+LOAD_ORDERINGS_OK = ("Acquire", "SeqCst")
+STORE_ORDERINGS_OK = ("Release", "SeqCst")
+RMW_ORDERINGS_OK = ("Acquire", "Release", "AcqRel", "SeqCst")
+
+
+class ConcTables:
+    """Field-name → owner tables for the sync primitives, built from every
+    non-test struct's field table (items pass)."""
+
+    def __init__(self, model):
+        self.mutex_owners = {}  # field -> sorted owning struct names
+        self.rwlock_fields = set()
+        self.condvar_fields = set()
+        self.condvar_structs = set()
+        self.atomic_owners = {}  # field -> [(struct, ty, file_idx, line)]
+        for fi, f in enumerate(model.files):
+            for st in f["structs"]:
+                if st.is_test:
+                    continue
+                for fname, fline, fty in st.fields:
+                    if fty in LOCK_TYPES:
+                        self.mutex_owners.setdefault(fname, []).append(st.name)
+                        if fty == "RwLock":
+                            self.rwlock_fields.add(fname)
+                    elif fty == "Condvar":
+                        self.condvar_fields.add(fname)
+                        self.condvar_structs.add(st.name)
+                    elif fty in ATOMIC_TYPES:
+                        self.atomic_owners.setdefault(fname, []).append(
+                            (st.name, fty, fi, fline)
+                        )
+        for v in self.mutex_owners.values():
+            v.sort()
+
+    def lock_identity(self, recv):
+        """`Struct.field` when the receiver token is a lock field of exactly
+        one struct, else the bare receiver token (local guards)."""
+        owners = sorted(set(self.mutex_owners.get(recv, [])))
+        if len(owners) == 1:
+            return owners[0] + "." + recv
+        return recv
+
+    def atomic_field(self, recv):
+        """(identity, ty, file_idx, decl_line) when the receiver is an
+        atomic field of exactly one struct, else None."""
+        owners = self.atomic_owners.get(recv, [])
+        if len({o[0] for o in owners}) == 1:
+            st, ty, fi, ln = owners[0]
+            return (st + "." + recv, ty, fi, ln)
+        return None
+
+
+def _stmt_start(toks, i, lo):
+    """Index of the first token of the statement containing token `i`."""
+    j = i - 1
+    while j >= lo:
+        if toks[j][0] in (";", "{", "}"):
+            return j + 1
+        j -= 1
+    return lo
+
+
+def _close_delim(toks, i, end):
+    """`i` at an opening bracket: index of its matching closer."""
+    depth = 0
+    j = i
+    while j < end:
+        t = toks[j][0]
+        if t in ("(", "[", "{"):
+            depth += 1
+        elif t in (")", "]", "}"):
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return end - 1
+
+
+def _chain_walk(toks, j, end, saw_dot=False):
+    """Walk a postfix chain (`.field`, `.method(..)`, `[..]`, `?`) starting
+    at token `j`. Returns (end_idx, mutated): mutated when the chain calls a
+    MUTATING_METHODS name or (after at least one `.`) lands on an assignment
+    operator — i.e. it writes through whatever the chain is rooted in."""
+    mutated = False
+    while j < end:
+        t = toks[j][0]
+        if t == ".":
+            saw_dot = True
+            j += 1
+            if j < end and toks[j][0] not in ("(", "["):
+                name = toks[j][0]
+                j += 1
+                if j < end and toks[j][0] == "(":
+                    if name in MUTATING_METHODS:
+                        mutated = True
+                    j = _close_delim(toks, j, end) + 1
+            continue
+        if t == "[":
+            j = _close_delim(toks, j, end) + 1
+            continue
+        if t == "?":
+            j += 1
+            continue
+        break
+    if saw_dot and j < end and toks[j][0] in ASSIGN_OPS:
+        mutated = True
+    return j, mutated
+
+
+def _guard_binding(toks, i, lo):
+    """Guard variable a lock acquisition at token `i` is let-bound to, or
+    None for a temporary guard (held only for its statement)."""
+    b = _stmt_start(toks, i, lo)
+    j = b
+    while j < i:
+        if toks[j][0] == "let":
+            k = j + 1
+            if k < i and toks[k][0] == "mut":
+                k += 1
+            if k < i and tok_is_ident(toks[k][0]) and toks[k][0] != "_":
+                return toks[k][0]
+            return None
+        j += 1
+    return None
+
+
+def _guard_live_end(toks, i, end, guard):
+    """Token index where the guard acquired at `i` dies: a same-depth
+    `drop(guard)`, the enclosing block's close for let-bound guards, or the
+    statement end for temporaries. Conditional (deeper-nested) drops do not
+    cut the range — the guard is still held on the fall-through path."""
+    depth = 0
+    j = i
+    while j < end:
+        t = toks[j][0]
+        if t in ("(", "[", "{"):
+            depth += 1
+        elif t in (")", "]", "}"):
+            if depth == 0:
+                return j
+            depth -= 1
+        elif depth == 0 and guard is None and t == ";":
+            return j
+        elif (
+            depth == 0
+            and guard is not None
+            and t == "drop"
+            and j + 2 < end
+            and toks[j + 1][0] == "("
+            and toks[j + 2][0] == guard
+        ):
+            return j
+        j += 1
+    return end
+
+
+def _loop_ranges(toks, start, end):
+    """Token ranges of every `loop`/`while`/`for` body in the fn."""
+    out = []
+    i = start
+    while i < end:
+        if toks[i][0] in ("loop", "while", "for"):
+            depth = 0
+            j = i + 1
+            while j < end:
+                t = toks[j][0]
+                if t in ("(", "["):
+                    depth += 1
+                elif t in (")", "]"):
+                    depth -= 1
+                elif t == "{" and depth == 0:
+                    out.append((j, _close_delim(toks, j, end)))
+                    break
+                j += 1
+        i += 1
+    return out
+
+
+class FnConcurrency:
+    """Per-function concurrency summary (one instance per non-test fn)."""
+
+    __slots__ = ("acquisitions", "waits", "has_notify")
+
+    def __init__(self):
+        # [(identity, line, tok_idx, guard_or_None, live_end, mutated, mut_line)]
+        self.acquisitions = []
+        # [(method, line, guard_arg, in_loop, rebound)]
+        self.waits = []
+        self.has_notify = False
+
+
+def summarize_fn(toks, fn, tables):
+    start, end = fn.body
+    summary = FnConcurrency()
+    loops = _loop_ranges(toks, start, end)
+    guards = {}  # guard var -> (identity, live_end, acq_idx-in-list)
+    i = start
+    while i < end:
+        t, ln = toks[i]
+        prev = toks[i - 1][0] if i > 0 else ""
+        nxt = toks[i + 1][0] if i + 1 < end else ""
+        if t in ("notify_one", "notify_all"):
+            summary.has_notify = True
+        elif prev == "." and nxt == "(" and i >= 2:
+            recv = toks[i - 2][0]
+            is_lock = t == "lock" or (
+                t in ("read", "write") and recv in tables.rwlock_fields
+            )
+            if is_lock and tok_is_ident(recv):
+                ident = tables.lock_identity(recv)
+                guard = _guard_binding(toks, i, start)
+                live_end = _guard_live_end(toks, i + 1, end, guard)
+                # Temporary guards: a mutating postfix chain hanging off the
+                # lock call itself (`x.lock().unwrap().field = v`).
+                close = _close_delim(toks, i + 1, end)
+                _, chain_mut = _chain_walk(toks, close + 1, end, saw_dot=True)
+                mut_line = ln if chain_mut else 0
+                summary.acquisitions.append(
+                    [ident, ln, i, guard, live_end, chain_mut, mut_line]
+                )
+                if guard is not None:
+                    guards[guard] = (ident, live_end, len(summary.acquisitions) - 1)
+            elif t in WAIT_METHODS and recv in tables.condvar_fields:
+                arg = toks[i + 2][0] if i + 2 < end else ""
+                in_loop = any(lo < i < hi for lo, hi in loops)
+                b = _stmt_start(toks, i, start)
+                j = b
+                if j < i and toks[j][0] == "let":
+                    j += 1
+                if j < i and toks[j][0] == "mut":
+                    j += 1
+                rebound = (
+                    tok_is_ident(arg)
+                    and j + 1 < i
+                    and toks[j][0] == arg
+                    and toks[j + 1][0] == "="
+                )
+                summary.waits.append((t, ln, arg, in_loop, rebound))
+        elif tok_is_ident(t) and prev != "." and t in guards:
+            # Guard-rooted use: `*g op=`, `g.path = v`, `g.container.push(..)`.
+            ident, live_end, ai = guards[t]
+            if i < live_end:
+                acq = summary.acquisitions[ai]
+                if not acq[5]:
+                    if prev == "*" and nxt in ASSIGN_OPS:
+                        acq[5], acq[6] = True, ln
+                    else:
+                        _, chain_mut = _chain_walk(toks, i + 1, end)
+                        if chain_mut:
+                            acq[5], acq[6] = True, ln
+        i += 1
+    return summary
+
+
+def _spawn_sites(toks, fn):
+    """Lines of `spawn(..)` calls whose JoinHandle is discarded (the spawn
+    chain is a bare statement: not bound, not an argument, not returned)."""
+    out = []
+    start, end = fn.body
+    i = start
+    while i < end:
+        if toks[i][0] == "spawn" and i + 1 < end and toks[i + 1][0] == "(":
+            close = _close_delim(toks, i + 1, end)
+            j, _ = _chain_walk(toks, close + 1, end)
+            if j < end and toks[j][0] == ";":
+                b = _stmt_start(toks, i, start)
+                depth = 0
+                used = False
+                for k in range(b, i):
+                    t = toks[k][0]
+                    if t in ("(", "["):
+                        depth += 1
+                    elif t in (")", "]"):
+                        depth -= 1
+                    elif t in ("let", "=", "return", "=>"):
+                        used = True
+                        break
+                if depth > 0:
+                    used = True
+                if not used:
+                    out.append(toks[i][1])
+        i += 1
+    return out
+
+
+def _recv_unwrap_sites(toks, fn):
+    """Lines where a channel receive is `.unwrap()`/`.expect()`-ed."""
+    out = []
+    start, end = fn.body
+    i = start
+    while i < end:
+        if (
+            toks[i][0] in RECV_METHODS
+            and i > 0
+            and toks[i - 1][0] == "."
+            and i + 1 < end
+            and toks[i + 1][0] == "("
+        ):
+            close = _close_delim(toks, i + 1, end)
+            if (
+                close + 2 < end
+                and toks[close + 1][0] == "."
+                and toks[close + 2][0] in ("unwrap", "expect")
+            ):
+                out.append(toks[i][1])
+        i += 1
+    return out
+
+
+def lint_concurrency(model, sink):
+    """The four whole-program concurrency rules over every non-test fn."""
+    tables = ConcTables(model)
+    nodes, index = build_call_index(model)
+    summaries = {}
+    for fi, gi in nodes:
+        f = model.files[fi]
+        summaries[(fi, gi)] = summarize_fn(f["toks"], f["fns"][gi], tables)
+
+    # Resolved call edges with token positions (for held-guard call ranges).
+    calls_of = {}
+    edges_of = {}
+    for fi, gi in nodes:
+        f = model.files[fi]
+        fn = f["fns"][gi]
+        calls = []
+        targets = []
+        for name, kind, qual, ln, ti in call_edges(f["toks"], fn):
+            resolved = resolve_call(model, index, name, kind, qual, fn.ctx)
+            if resolved:
+                calls.append((ti, ln, resolved))
+                targets.extend(resolved)
+        calls_of[(fi, gi)] = calls
+        edges_of[(fi, gi)] = targets
+
+    # Transitive lock sets: direct acquisitions closed over call edges.
+    trans = {n: {a[0] for a in summaries[n].acquisitions} for n in nodes}
+    changed = True
+    while changed:
+        changed = False
+        for n in nodes:
+            for callee in edges_of[n]:
+                extra = trans[callee] - trans[n]
+                if extra:
+                    trans[n] |= extra
+                    changed = True
+
+    # --- lock-order: acquisition-order graph + cycle detection ------------
+    edge_sites = {}  # (held, acquired) -> (file_idx, line)
+    for fi, gi in nodes:
+        summary = summaries[(fi, gi)]
+        for ident, _ln, ti, _guard, live_end, _mut, _ml in summary.acquisitions:
+            for o_ident, o_ln, o_ti, _g2, _le2, _m2, _ml2 in summary.acquisitions:
+                if o_ti > ti and o_ti < live_end:
+                    edge_sites.setdefault((ident, o_ident), (fi, o_ln))
+            for c_ti, c_ln, resolved in calls_of[(fi, gi)]:
+                if c_ti > ti and c_ti < live_end:
+                    for callee in resolved:
+                        for callee_lock in sorted(trans[callee]):
+                            edge_sites.setdefault((ident, callee_lock), (fi, c_ln))
+    adj = {}
+    for held, acquired in edge_sites:
+        adj.setdefault(held, set()).add(acquired)
+
+    def reaches(src, dst):
+        seen = {src}
+        stack = [src]
+        while stack:
+            u = stack.pop()
+            if u == dst:
+                return True
+            for v in adj.get(u, ()):
+                if v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+        return False
+
+    ordered_edges = sorted(
+        edge_sites.items(),
+        key=lambda kv: (model.files[kv[1][0]]["rel"], kv[1][1], kv[0]),
+    )
+    for (held, acquired), (fi, ln) in ordered_edges:
+        if reaches(acquired, held):
+            f = model.files[fi]
+            sink.emit(
+                f["scanned"], f["rel"], ln, "lock-order",
+                "acquiring `%s` while holding `%s` closes an acquisition-order "
+                "cycle (`%s` is also held when `%s` is taken elsewhere) — "
+                "potential deadlock" % (acquired, held, acquired, held),
+            )
+
+    # --- condvar-discipline + atomic-ordering + channel-lifecycle ---------
+    atomic_usage = {}  # identity -> {"load"/"store": {ordering}} + decl site
+    for fi, gi in nodes:
+        f = model.files[fi]
+        fn = f["fns"][gi]
+        s = f["scanned"]
+        summary = summaries[(fi, gi)]
+
+        for meth, ln, _arg, in_loop, rebound in summary.waits:
+            if not (in_loop and rebound):
+                sink.emit(
+                    s, f["rel"], ln, "condvar-discipline",
+                    "`Condvar::%s` outside a predicate loop: the guard must be "
+                    "rebound from the wait result inside a `loop`/`while` that "
+                    "re-checks the predicate under the lock" % meth,
+                )
+        reported = set()
+        for ident, _ln, _ti, _guard, _le, mutated, mut_line in summary.acquisitions:
+            struct = ident.split(".")[0] if "." in ident else None
+            if (
+                mutated
+                and struct in tables.condvar_structs
+                and not summary.has_notify
+                and ident not in reported
+            ):
+                reported.add(ident)
+                sink.emit(
+                    s, f["rel"], mut_line, "condvar-discipline",
+                    "state guarded by `%s` is mutated but `%s` never calls "
+                    "`notify_one`/`notify_all` on the paired condvar — a "
+                    "waiter can miss this update" % (ident, fn_label(fn)),
+                )
+
+        start, end = fn.body
+        i = start
+        while i < end:
+            t = f["toks"][i][0]
+            if (
+                t in ATOMIC_METHODS
+                and i > 0
+                and f["toks"][i - 1][0] == "."
+                and i + 1 < end
+                and f["toks"][i + 1][0] == "("
+            ):
+                close = _close_delim(f["toks"], i + 1, end)
+                orderings = []
+                for j in range(i + 2, close - 1):
+                    if (
+                        f["toks"][j][0] == "Ordering"
+                        and f["toks"][j + 1][0] == "::"
+                    ):
+                        orderings.append((f["toks"][j + 2][0], f["toks"][j + 2][1]))
+                if orderings:
+                    recv = f["toks"][i - 2][0] if i >= 2 else ""
+                    info = tables.atomic_field(recv) if tok_is_ident(recv) else None
+                    for ordv, oln in orderings:
+                        if info is not None and info[1] == "AtomicBool":
+                            ok = (
+                                (t == "load" and ordv in LOAD_ORDERINGS_OK)
+                                or (t == "store" and ordv in STORE_ORDERINGS_OK)
+                                or (
+                                    t not in ("load", "store")
+                                    and ordv in RMW_ORDERINGS_OK
+                                )
+                            )
+                            if not ok:
+                                sink.emit(
+                                    s, f["rel"], oln, "atomic-ordering",
+                                    "flag `%s` %s uses `Ordering::%s` — "
+                                    "load/store flag pairs must use "
+                                    "Acquire/Release or SeqCst" % (info[0], t, ordv),
+                                )
+                        elif ordv == "Relaxed":
+                            sink.emit(
+                                s, f["rel"], oln, "atomic-ordering",
+                                "`Ordering::Relaxed` on `%s` — Relaxed is only "
+                                "legal on sites annotated as monotonic "
+                                "counters/gauges (lint-ok with the monotonicity "
+                                "argument), otherwise upgrade the ordering"
+                                % (info[0] if info else recv),
+                            )
+                    if info is not None and t in ("load", "store"):
+                        slot = atomic_usage.setdefault(
+                            info[0], {"decl": (info[2], info[3]), "load": set(), "store": set()}
+                        )
+                        for ordv, _oln in orderings:
+                            slot[t].add(ordv)
+            i += 1
+
+        for ln in _spawn_sites(f["toks"], fn):
+            sink.emit(
+                s, f["rel"], ln, "channel-lifecycle",
+                "spawned thread's JoinHandle is discarded — a `Sender` moved "
+                "into a detached thread can outlive teardown and hang its "
+                "receiver; bind and join the handle (or lint-ok with the "
+                "teardown story)",
+            )
+        for ln in _recv_unwrap_sites(f["toks"], fn):
+            sink.emit(
+                s, f["rel"], ln, "channel-lifecycle",
+                "channel receive result is unwrapped — a dropped sender "
+                "becomes a teardown panic; match the `Err` and exit the "
+                "receive loop instead",
+            )
+
+    # Per-field ordering consistency (flag pairs must not mix disciplines).
+    for ident in sorted(atomic_usage):
+        slot = atomic_usage[ident]
+        fi, ln = slot["decl"]
+        f = model.files[fi]
+        for cls in ("load", "store"):
+            if len(slot[cls]) > 1:
+                sink.emit(
+                    f["scanned"], f["rel"], ln, "atomic-ordering",
+                    "atomic field `%s` mixes %s orderings {%s} — pick one "
+                    "discipline per field"
+                    % (ident, cls, ", ".join(sorted(slot[cls]))),
+                )
+
+
 # --- crate driver ---------------------------------------------------------
 
 
 def lint_crate(file_pairs, aux):
-    """All nine lints over a set of (rel, src) files + aux artifacts.
+    """All thirteen lints over a set of (rel, src) files + aux artifacts.
     Returns (findings sorted by (file, line, rule), suppressed_count)."""
     model = CrateModel.build(file_pairs, aux)
     sink = Sink()
@@ -1442,6 +2000,7 @@ def lint_crate(file_pairs, aux):
     lint_unit_confusion(model, sink)
     lint_sendptr_escape(model, sink)
     lint_dispatch_parity(model, sink)
+    lint_concurrency(model, sink)
     sink.findings.sort(key=lambda x: (x["file"], x["line"], x["rule"], x["msg"]))
     return sink.findings, sink.suppressed
 
@@ -1466,7 +2025,7 @@ def read_aux_from_repo():
     return aux
 
 
-def cmd_lint(fmt):
+def cmd_lint(fmt, rule=None):
     files = []
     for path in rust_files(os.path.join(REPO, "rust", "src")):
         rel = os.path.relpath(path, REPO).replace("\\", "/")
@@ -1476,6 +2035,8 @@ def cmd_lint(fmt):
         print("lint_mirror: no Rust sources found", file=sys.stderr)
         return 1
     findings, suppressed = lint_crate(files, read_aux_from_repo())
+    if rule is not None:
+        findings = [f for f in findings if f["rule"] == rule]
     if fmt == "json":
         print(json.dumps(
             {"findings": findings, "suppressed": suppressed, "files": len(files)},
@@ -1677,20 +2238,29 @@ def main(argv):
     cmd = args.pop(0) if args and not args[0].startswith("-") else "lint"
     fmt = "human"
     emit = False
+    rule = None
     while args:
         a = args.pop(0)
         if a == "--format" and args:
             fmt = args.pop(0)
         elif a.startswith("--format="):
             fmt = a.split("=", 1)[1]
+        elif a == "--rule" and args:
+            rule = args.pop(0)
+        elif a.startswith("--rule="):
+            rule = a.split("=", 1)[1]
         elif a == "--emit-findings":
             emit = True
         else:
             print("usage: lint_mirror.py <lint|fixtures> [--format human|json|sarif] "
-                  "[--emit-findings]", file=sys.stderr)
+                  "[--rule <id>] [--emit-findings]", file=sys.stderr)
             return 2
+    if rule is not None and rule not in RULES:
+        print("lint_mirror: unknown rule `%s` (known: %s)" % (rule, ", ".join(RULES)),
+              file=sys.stderr)
+        return 2
     if cmd == "lint":
-        return cmd_lint(fmt)
+        return cmd_lint(fmt, rule)
     if cmd == "fixtures":
         return cmd_fixtures(emit)
     print("unknown command `%s`" % cmd, file=sys.stderr)

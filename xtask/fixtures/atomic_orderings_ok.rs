@@ -1,0 +1,23 @@
+// lint-as: rust/src/util/flag_ok.rs
+// expect-lint: none
+//
+// Positive control for `atomic-ordering`: the flag pair uses
+// Release/Acquire, and the only Relaxed site is an annotated monotonic
+// counter (the suppression is counted, not silent).
+
+struct Shutdown {
+    stop: AtomicBool,
+    laps: AtomicU64,
+}
+
+impl Shutdown {
+    fn request(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    fn should_stop(&self) -> bool {
+        // lint-ok(atomic-ordering): monotonic lap counter — readers only ever sum it, ordering never matters
+        self.laps.fetch_add(1, Ordering::Relaxed);
+        self.stop.load(Ordering::Acquire)
+    }
+}

@@ -1,0 +1,23 @@
+// lint-as: rust/src/util/flag.rs
+// expect-lint: atomic-ordering
+//
+// Negative fixture: an `AtomicBool` flag pair published with Relaxed on
+// both sides — the flag can outrun the payload it advertises — plus an
+// unannotated Relaxed counter bump. The field table resolves `stop` to
+// `Shutdown.stop`, so the flag-pair discipline applies.
+
+struct Shutdown {
+    stop: AtomicBool,
+    laps: AtomicU64,
+}
+
+impl Shutdown {
+    fn request(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    fn should_stop(&self) -> bool {
+        self.laps.fetch_add(1, Ordering::Relaxed);
+        self.stop.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,17 @@
+// lint-as: rust/src/util/pump.rs
+// expect-lint: channel-lifecycle
+//
+// Negative fixture: a pump thread is spawned and its JoinHandle dropped
+// on the floor — with a `Sender` moved inside, teardown can leave the
+// receiver blocked forever — and the receive loop unwraps, so a dropped
+// sender becomes a panic instead of a clean exit.
+
+fn start_pump(tx: Sender<u32>, rx: Receiver<u32>) {
+    std::thread::spawn(move || {
+        let mut last = 0;
+        loop {
+            last = rx.recv().unwrap();
+        }
+    });
+    drop(tx);
+}

@@ -1,0 +1,17 @@
+// lint-as: rust/src/util/pump_ok.rs
+// expect-lint: none
+//
+// Positive control for `channel-lifecycle`: the pump thread's handle is
+// bound and joined after the sender side is dropped, and the receive
+// loop exits on disconnect instead of unwrapping.
+
+fn run_pump(tx: Sender<u32>, rx: Receiver<u32>) {
+    let pump = std::thread::spawn(move || loop {
+        match rx.recv() {
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    });
+    drop(tx);
+    pump.join().unwrap();
+}

@@ -1,0 +1,25 @@
+// lint-as: rust/src/util/cv_wait_ok.rs
+// expect-lint: none
+//
+// Positive control for `condvar-discipline`: the wait rebinds its guard
+// from the wait result inside a `while` that re-checks the predicate
+// under the lock, and the mutator notifies the paired condvar.
+
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn wait_open(&self) {
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn open_up(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}

@@ -1,0 +1,24 @@
+// lint-as: rust/src/util/cv_wait.rs
+// expect-lint: condvar-discipline
+//
+// Negative fixture: a bare `Condvar::wait` with no predicate loop — a
+// spurious wakeup proceeds on a false predicate — plus a guarded-state
+// mutation in a fn that never notifies the paired condvar, so a waiter
+// can sleep through the very update it is waiting for.
+
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn wait_open(&self) {
+        let g = self.open.lock().unwrap();
+        let g = self.cv.wait(g).unwrap();
+        drop(g);
+    }
+
+    fn open_up(&self) {
+        *self.open.lock().unwrap() = true;
+    }
+}

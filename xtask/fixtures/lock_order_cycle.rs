@@ -1,0 +1,29 @@
+// lint-as: rust/src/util/ab_locks.rs
+// expect-lint: lock-order
+//
+// Negative fixture: two mutexes taken in opposite nesting orders on two
+// paths — a classic ABBA deadlock. The acquisition-order graph must see
+// the `Pair.a` → `Pair.b` edge from `forward` and the `Pair.b` → `Pair.a`
+// edge from `backward` and flag the cycle. This file is lint fodder,
+// never compiled.
+
+struct Pair {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    fn forward(&self) {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        drop(gb);
+        drop(ga);
+    }
+
+    fn backward(&self) {
+        let gb = self.b.lock().unwrap();
+        let ga = self.a.lock().unwrap();
+        drop(ga);
+        drop(gb);
+    }
+}

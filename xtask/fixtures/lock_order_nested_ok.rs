@@ -1,0 +1,32 @@
+// lint-as: rust/src/util/ab_locks_ok.rs
+// expect-lint: none
+//
+// Positive control for `lock-order`: the same two mutexes are always
+// nested in the same order — directly in `forward`, and across a call
+// edge in `forward_via_helper` (the callee's transitive lock set adds
+// the identical `Pair.a` → `Pair.b` edge). Acyclic graph, no finding.
+
+struct Pair {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    fn forward(&self) {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        drop(gb);
+        drop(ga);
+    }
+
+    fn forward_via_helper(&self) {
+        let ga = self.a.lock().unwrap();
+        self.tail();
+        drop(ga);
+    }
+
+    fn tail(&self) {
+        let gb = self.b.lock().unwrap();
+        drop(gb);
+    }
+}

@@ -79,6 +79,9 @@ pub struct CallEdge {
     /// caller's ctx) or the receiver token of `recv.name(..)`.
     pub qual: Option<String>,
     pub line: usize,
+    /// Token index of the callee name — lets the concurrency stage relate
+    /// call sites to guard live ranges.
+    pub idx: usize,
 }
 
 /// One analyzed file: scan output, token stream, and item tree.
@@ -154,7 +157,7 @@ pub fn fn_label(f: &FnItem) -> String {
     }
 }
 
-/// `(callee, kind, qualifier, line)` call sites in the fn body.
+/// `(callee, kind, qualifier, line, token idx)` call sites in the fn body.
 pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
     let mut edges = Vec::new();
     let (start, end) = f.body;
@@ -181,6 +184,7 @@ pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
                         kind: CallKind::Method,
                         qual: Some(recv),
                         line: ln,
+                        idx: i,
                     });
                 } else if prev == "::" && i >= 2 && tok_is_ident(&toks[i - 2].text) {
                     let q = toks[i - 2].text.as_str();
@@ -190,6 +194,7 @@ pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
                             kind: CallKind::Qualified,
                             qual: f.ctx.clone(),
                             line: ln,
+                            idx: i,
                         });
                     } else if matches!(q, "self" | "crate" | "super" | "Self") {
                         edges.push(CallEdge {
@@ -197,6 +202,7 @@ pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
                             kind: CallKind::Free,
                             qual: None,
                             line: ln,
+                            idx: i,
                         });
                     } else {
                         edges.push(CallEdge {
@@ -204,6 +210,7 @@ pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
                             kind: CallKind::Qualified,
                             qual: Some(q.to_string()),
                             line: ln,
+                            idx: i,
                         });
                     }
                 } else {
@@ -212,6 +219,7 @@ pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
                         kind: CallKind::Free,
                         qual: None,
                         line: ln,
+                        idx: i,
                     });
                 }
             }
@@ -221,9 +229,12 @@ pub fn call_edges(toks: &[Tok], f: &FnItem) -> Vec<CallEdge> {
     edges
 }
 
-/// `{(file_idx, fn_idx): sorted root labels}` over non-test fns.
-pub fn reachable_from_hot_roots(model: &CrateModel) -> HashMap<(usize, usize), Vec<String>> {
-    let mut index: HashMap<&str, Vec<(usize, usize)>> = HashMap::new();
+/// `(nodes, name → candidate nodes)` over non-test fns — the shared
+/// substrate for every call-graph-driven pass (reachability, concurrency).
+pub fn build_call_index(
+    model: &CrateModel,
+) -> (Vec<(usize, usize)>, HashMap<String, Vec<(usize, usize)>>) {
+    let mut index: HashMap<String, Vec<(usize, usize)>> = HashMap::new();
     let mut nodes: Vec<(usize, usize)> = Vec::new();
     for (fi, f) in model.files.iter().enumerate() {
         for (gi, fnm) in f.fns.iter().enumerate() {
@@ -231,85 +242,98 @@ pub fn reachable_from_hot_roots(model: &CrateModel) -> HashMap<(usize, usize), V
                 continue;
             }
             nodes.push((fi, gi));
-            index.entry(fnm.name.as_str()).or_default().push((fi, gi));
+            index.entry(fnm.name.clone()).or_default().push((fi, gi));
         }
     }
+    (nodes, index)
+}
 
+/// Resolution ladder shared by reachability and the concurrency stage,
+/// most precise first:
+///
+///   1. `self.name(..)` → the caller's own impl.
+///   2. `field.name(..)` where the caller's struct declares `field: Ty`
+///      and `Ty` is a crate struct → Ty's impl (precise even for
+///      std-colliding names like `insert`).
+///   3. std-prelude collisions (METHOD_EDGE_DENY) → no edge.
+///   4. trait-declared names → ALL same-named fns (dynamic dispatch:
+///      over-approximation is the conservative answer).
+///   5. otherwise → edge only if the name is crate-unique; an ambiguous
+///      name would fan one `.load(..)` into every `load`.
+pub fn resolve_call(
+    model: &CrateModel,
+    index: &HashMap<String, Vec<(usize, usize)>>,
+    edge: &CallEdge,
+    caller_ctx: Option<&str>,
+) -> Vec<(usize, usize)> {
     let fn_at = |node: (usize, usize)| -> &FnItem { &model.files[node.0].fns[node.1] };
-
-    // Resolution ladder, most precise first:
-    //   1. `self.name(..)` → the caller's own impl.
-    //   2. `field.name(..)` where the caller's struct declares `field: Ty`
-    //      and `Ty` is a crate struct → Ty's impl (precise even for
-    //      std-colliding names like `insert`).
-    //   3. std-prelude collisions (METHOD_EDGE_DENY) → no edge.
-    //   4. trait-declared names → ALL same-named fns (dynamic dispatch:
-    //      over-approximation is the conservative answer).
-    //   5. otherwise → edge only if the name is crate-unique; an ambiguous
-    //      name would fan one `.load(..)` into every `load`.
-    let resolve = |edge: &CallEdge, caller_ctx: Option<&str>| -> Vec<(usize, usize)> {
-        let cands: &[(usize, usize)] = index.get(edge.name.as_str()).map(Vec::as_slice).unwrap_or(&[]);
-        match edge.kind {
-            CallKind::Qualified => {
-                let qual = edge.qual.as_deref().unwrap_or("");
-                cands
-                    .iter()
-                    .copied()
-                    .filter(|&n| {
-                        let f = fn_at(n);
-                        f.ctx.as_deref() == Some(qual) || f.mods.iter().any(|m| m == qual)
-                    })
-                    .collect()
+    let cands: &[(usize, usize)] = index.get(&edge.name).map(Vec::as_slice).unwrap_or(&[]);
+    match edge.kind {
+        CallKind::Qualified => {
+            let qual = edge.qual.as_deref().unwrap_or("");
+            cands
+                .iter()
+                .copied()
+                .filter(|&n| {
+                    let f = fn_at(n);
+                    f.ctx.as_deref() == Some(qual) || f.mods.iter().any(|m| m == qual)
+                })
+                .collect()
+        }
+        CallKind::Free => {
+            // Single-letter names are overwhelmingly closure/fn-pointer
+            // parameters (`f(lo, hi)`), not crate free fns — never
+            // resolve.
+            if edge.name.len() == 1 {
+                return Vec::new();
             }
-            CallKind::Free => {
-                // Single-letter names are overwhelmingly closure/fn-pointer
-                // parameters (`f(lo, hi)`), not crate free fns — never
-                // resolve.
-                if edge.name.len() == 1 {
-                    return Vec::new();
-                }
-                cands.iter().copied().filter(|&n| fn_at(n).ctx.is_none()).collect()
-            }
-            CallKind::Method => {
-                let qual = edge.qual.as_deref().unwrap_or("");
-                if qual == "self" {
-                    if let Some(ctx) = caller_ctx {
-                        let same: Vec<(usize, usize)> = cands
-                            .iter()
-                            .copied()
-                            .filter(|&n| fn_at(n).ctx.as_deref() == Some(ctx))
-                            .collect();
-                        if !same.is_empty() {
-                            return same;
-                        }
+            cands.iter().copied().filter(|&n| fn_at(n).ctx.is_none()).collect()
+        }
+        CallKind::Method => {
+            let qual = edge.qual.as_deref().unwrap_or("");
+            if qual == "self" {
+                if let Some(ctx) = caller_ctx {
+                    let same: Vec<(usize, usize)> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&n| fn_at(n).ctx.as_deref() == Some(ctx))
+                        .collect();
+                    if !same.is_empty() {
+                        return same;
                     }
                 }
-                let recv_ty = caller_ctx
-                    .and_then(|c| model.field_types.get(c))
-                    .and_then(|m| m.get(qual));
-                if let Some(ty) = recv_ty {
-                    if model.struct_names.contains(ty) {
-                        return cands
-                            .iter()
-                            .copied()
-                            .filter(|&n| fn_at(n).ctx.as_deref() == Some(ty.as_str()))
-                            .collect();
-                    }
+            }
+            let recv_ty = caller_ctx
+                .and_then(|c| model.field_types.get(c))
+                .and_then(|m| m.get(qual));
+            if let Some(ty) = recv_ty {
+                if model.struct_names.contains(ty) {
+                    return cands
+                        .iter()
+                        .copied()
+                        .filter(|&n| fn_at(n).ctx.as_deref() == Some(ty.as_str()))
+                        .collect();
                 }
-                if method_edge_denied(&edge.name) {
-                    return Vec::new();
-                }
-                if model.trait_methods.contains(&edge.name) {
-                    return cands.to_vec();
-                }
-                if cands.len() == 1 {
-                    cands.to_vec()
-                } else {
-                    Vec::new()
-                }
+            }
+            if method_edge_denied(&edge.name) {
+                return Vec::new();
+            }
+            if model.trait_methods.contains(&edge.name) {
+                return cands.to_vec();
+            }
+            if cands.len() == 1 {
+                cands.to_vec()
+            } else {
+                Vec::new()
             }
         }
-    };
+    }
+}
+
+/// `{(file_idx, fn_idx): sorted root labels}` over non-test fns.
+pub fn reachable_from_hot_roots(model: &CrateModel) -> HashMap<(usize, usize), Vec<String>> {
+    let (nodes, index) = build_call_index(model);
+    let fn_at = |node: (usize, usize)| -> &FnItem { &model.files[node.0].fns[node.1] };
 
     let mut edges_of: HashMap<(usize, usize), Vec<(usize, usize)>> = HashMap::new();
     for &(fi, gi) in &nodes {
@@ -322,7 +346,7 @@ pub fn reachable_from_hot_roots(model: &CrateModel) -> HashMap<(usize, usize), V
             if lint_ok(&f.scanned, e.line, "hot-path-alloc") {
                 continue;
             }
-            resolved.extend(resolve(&e, fnm.ctx.as_deref()));
+            resolved.extend(resolve_call(model, &index, &e, fnm.ctx.as_deref()));
         }
         edges_of.insert((fi, gi), resolved);
     }

@@ -1,0 +1,912 @@
+//! Concurrency-protocol analysis: per-fn models of lock / condvar / atomic /
+//! channel usage, propagated over the resolved call graph, powering the four
+//! concurrency lints:
+//!
+//! * `lock-order` — every nested acquisition (a second `.lock()` / `.read()`
+//!   / `.write()` while a guard is live, or a call to a fn whose transitive
+//!   lock set is non-empty) adds a held → acquired edge to a global
+//!   acquisition-order graph; any edge closing a cycle is a potential ABBA
+//!   deadlock.
+//! * `condvar-discipline` — `Condvar::wait`/`wait_timeout` must sit inside a
+//!   `loop`/`while`/`for` body AND rebind the guard it is passed, so the
+//!   predicate is re-checked under the lock; and a fn mutating state behind
+//!   a mutex owned by a condvar-carrying struct must notify that condvar.
+//! * `atomic-ordering` — `Ordering::Relaxed` only on sites annotated as
+//!   monotonic counters/gauges; `AtomicBool` fields are flags (Acquire loads
+//!   / Release stores / at-least-Acquire-or-Release RMWs); per atomic field
+//!   the load and store ordering sets must each be consistent.
+//! * `channel-lifecycle` — a `spawn(..)` whose `JoinHandle` is discarded in
+//!   statement position, and `recv`/`recv_timeout`/`try_recv` chained into
+//!   `.unwrap()`/`.expect(..)`.
+//!
+//! Lock and atomic receivers resolve to `Struct.field` identities through
+//! the items pass's field table — only when exactly one non-test struct
+//! declares the field; ambiguous names stay bare and opt out of cross-fn
+//! reasoning rather than guess. Detection is purely structural: the
+//! primitive method names (`lock`, `wait`, `send`, `recv`, `spawn`, `join`,
+//! `drop`, …) are on the call-graph deny-list, so this stage finds them by
+//! token shape, never via call edges.
+//!
+//! Keep in lockstep with the `concurrency stage` section of
+//! `tools/lint_mirror.py`.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+use crate::callgraph::{build_call_index, call_edges, fn_label, resolve_call, CrateModel};
+use crate::items::FnItem;
+use crate::lexer::{tok_is_ident, Tok};
+use crate::lints::Sink;
+
+const LOCK_TYPES: [&str; 2] = ["Mutex", "RwLock"];
+const ATOMIC_TYPES: [&str; 11] = [
+    "AtomicBool", "AtomicUsize", "AtomicIsize", "AtomicU8", "AtomicU16", "AtomicU32", "AtomicU64",
+    "AtomicI8", "AtomicI16", "AtomicI32", "AtomicI64",
+];
+const ATOMIC_METHODS: [&str; 13] = [
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_and", "fetch_or", "fetch_xor",
+    "fetch_max", "fetch_min", "fetch_update", "compare_exchange", "compare_exchange_weak",
+];
+/// Container methods that mutate the guarded value when called through a
+/// guard-rooted chain. Deliberately curated: read-only accessors must not
+/// make every lock acquisition look like a protocol-relevant write.
+const MUTATING_METHODS: [&str; 15] = [
+    "push", "push_back", "push_front", "pop", "pop_back", "pop_front", "insert", "remove",
+    "clear", "take", "replace", "drain", "extend", "truncate", "swap_remove",
+];
+/// Assignment operators as the lexer emits them (compound ops that the
+/// lexer splits, like `&=`, cannot appear as single tokens).
+const ASSIGN_OPS: [&str; 8] = ["=", "+=", "-=", "*=", "/=", "%=", "<<=", ">>="];
+const WAIT_METHODS: [&str; 2] = ["wait", "wait_timeout"];
+const RECV_METHODS: [&str; 3] = ["recv", "recv_timeout", "try_recv"];
+const LOAD_ORDERINGS_OK: [&str; 2] = ["Acquire", "SeqCst"];
+const STORE_ORDERINGS_OK: [&str; 2] = ["Release", "SeqCst"];
+const RMW_ORDERINGS_OK: [&str; 4] = ["Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Field-name → owner tables for the sync primitives, built from every
+/// non-test struct's field table (items pass).
+pub struct ConcTables {
+    mutex_owners: HashMap<String, Vec<String>>,
+    rwlock_fields: HashSet<String>,
+    condvar_fields: HashSet<String>,
+    condvar_structs: HashSet<String>,
+    /// field -> [(struct, ty, file_idx, decl_line)]
+    atomic_owners: HashMap<String, Vec<(String, String, usize, usize)>>,
+}
+
+impl ConcTables {
+    pub fn new(model: &CrateModel) -> ConcTables {
+        let mut t = ConcTables {
+            mutex_owners: HashMap::new(),
+            rwlock_fields: HashSet::new(),
+            condvar_fields: HashSet::new(),
+            condvar_structs: HashSet::new(),
+            atomic_owners: HashMap::new(),
+        };
+        for (fi, f) in model.files.iter().enumerate() {
+            for st in &f.structs {
+                if st.is_test {
+                    continue;
+                }
+                for (fname, fline, fty) in &st.fields {
+                    if LOCK_TYPES.contains(&fty.as_str()) {
+                        t.mutex_owners.entry(fname.clone()).or_default().push(st.name.clone());
+                        if fty == "RwLock" {
+                            t.rwlock_fields.insert(fname.clone());
+                        }
+                    } else if fty == "Condvar" {
+                        t.condvar_fields.insert(fname.clone());
+                        t.condvar_structs.insert(st.name.clone());
+                    } else if ATOMIC_TYPES.contains(&fty.as_str()) {
+                        t.atomic_owners
+                            .entry(fname.clone())
+                            .or_default()
+                            .push((st.name.clone(), fty.clone(), fi, *fline));
+                    }
+                }
+            }
+        }
+        for v in t.mutex_owners.values_mut() {
+            v.sort();
+        }
+        t
+    }
+
+    /// `Struct.field` when the receiver token is a lock field of exactly
+    /// one struct, else the bare receiver token (local guards).
+    fn lock_identity(&self, recv: &str) -> String {
+        let owners: BTreeSet<&str> = self
+            .mutex_owners
+            .get(recv)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default();
+        if owners.len() == 1 {
+            format!("{}.{recv}", owners.iter().next().unwrap())
+        } else {
+            recv.to_string()
+        }
+    }
+
+    /// `(identity, ty, file_idx, decl_line)` when the receiver is an atomic
+    /// field of exactly one struct, else None.
+    fn atomic_field(&self, recv: &str) -> Option<(String, String, usize, usize)> {
+        let owners = self.atomic_owners.get(recv)?;
+        let structs: HashSet<&str> = owners.iter().map(|o| o.0.as_str()).collect();
+        if structs.len() == 1 {
+            let (st, ty, fi, ln) = &owners[0];
+            Some((format!("{st}.{recv}"), ty.clone(), *fi, *ln))
+        } else {
+            None
+        }
+    }
+}
+
+/// Index of the first token of the statement containing token `i`.
+fn stmt_start(toks: &[Tok], i: usize, lo: usize) -> usize {
+    let mut j = i;
+    while j > lo {
+        if matches!(toks[j - 1].text.as_str(), ";" | "{" | "}") {
+            return j;
+        }
+        j -= 1;
+    }
+    lo
+}
+
+/// `i` at an opening bracket: index of its matching closer.
+fn close_delim(toks: &[Tok], i: usize, end: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < end {
+        match toks[j].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    end - 1
+}
+
+/// Walk a postfix chain (`.field`, `.method(..)`, `[..]`, `?`) starting at
+/// token `j`. Returns `(end_idx, mutated)`: mutated when the chain calls a
+/// MUTATING_METHODS name or (after at least one `.`) lands on an assignment
+/// operator — i.e. it writes through whatever the chain is rooted in.
+fn chain_walk(toks: &[Tok], mut j: usize, end: usize, mut saw_dot: bool) -> (usize, bool) {
+    let mut mutated = false;
+    while j < end {
+        let t = toks[j].text.as_str();
+        if t == "." {
+            saw_dot = true;
+            j += 1;
+            if j < end && toks[j].text != "(" && toks[j].text != "[" {
+                let name = toks[j].text.clone();
+                j += 1;
+                if j < end && toks[j].text == "(" {
+                    if MUTATING_METHODS.contains(&name.as_str()) {
+                        mutated = true;
+                    }
+                    j = close_delim(toks, j, end) + 1;
+                }
+            }
+            continue;
+        }
+        if t == "[" {
+            j = close_delim(toks, j, end) + 1;
+            continue;
+        }
+        if t == "?" {
+            j += 1;
+            continue;
+        }
+        break;
+    }
+    if saw_dot && j < end && ASSIGN_OPS.contains(&toks[j].text.as_str()) {
+        mutated = true;
+    }
+    (j, mutated)
+}
+
+/// Guard variable a lock acquisition at token `i` is let-bound to, or None
+/// for a temporary guard (held only for its statement).
+fn guard_binding(toks: &[Tok], i: usize, lo: usize) -> Option<String> {
+    let b = stmt_start(toks, i, lo);
+    let mut j = b;
+    while j < i {
+        if toks[j].text == "let" {
+            let mut k = j + 1;
+            if k < i && toks[k].text == "mut" {
+                k += 1;
+            }
+            if k < i && tok_is_ident(&toks[k].text) && toks[k].text != "_" {
+                return Some(toks[k].text.clone());
+            }
+            return None;
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Token index where the guard acquired at `i` dies: a same-depth
+/// `drop(guard)`, the enclosing block's close for let-bound guards, or the
+/// statement end for temporaries. Conditional (deeper-nested) drops do not
+/// cut the range — the guard is still held on the fall-through path.
+fn guard_live_end(toks: &[Tok], i: usize, end: usize, guard: Option<&str>) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < end {
+        let t = toks[j].text.as_str();
+        match t {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                if depth == 0 {
+                    return j;
+                }
+                depth -= 1;
+            }
+            _ if depth == 0 => match guard {
+                None => {
+                    if t == ";" {
+                        return j;
+                    }
+                }
+                Some(g) => {
+                    if t == "drop" && j + 2 < end && toks[j + 1].text == "(" && toks[j + 2].text == g
+                    {
+                        return j;
+                    }
+                }
+            },
+            _ => {}
+        }
+        j += 1;
+    }
+    end
+}
+
+/// Token ranges of every `loop`/`while`/`for` body in the fn.
+fn loop_ranges(toks: &[Tok], start: usize, end: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = start;
+    while i < end {
+        if matches!(toks[i].text.as_str(), "loop" | "while" | "for") {
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            while j < end {
+                let t = toks[j].text.as_str();
+                if t == "(" || t == "[" {
+                    depth += 1;
+                } else if t == ")" || t == "]" {
+                    depth -= 1;
+                } else if t == "{" && depth == 0 {
+                    out.push((j, close_delim(toks, j, end)));
+                    break;
+                }
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// One lock acquisition site inside a fn body.
+pub struct Acquisition {
+    pub ident: String,
+    pub line: usize,
+    pub idx: usize,
+    pub guard: Option<String>,
+    pub live_end: usize,
+    pub mutated: bool,
+    pub mut_line: usize,
+}
+
+/// One condvar wait site: (method, line, guard arg, in_loop, rebound).
+pub type WaitSite = (String, usize, String, bool, bool);
+
+/// Per-function concurrency summary (one instance per non-test fn).
+#[derive(Default)]
+pub struct FnConcurrency {
+    pub acquisitions: Vec<Acquisition>,
+    pub waits: Vec<WaitSite>,
+    pub has_notify: bool,
+}
+
+pub fn summarize_fn(toks: &[Tok], f: &FnItem, tables: &ConcTables) -> FnConcurrency {
+    let (start, end) = f.body;
+    let mut summary = FnConcurrency::default();
+    let loops = loop_ranges(toks, start, end);
+    // guard var -> (live_end, acquisition index)
+    let mut guards: HashMap<String, (usize, usize)> = HashMap::new();
+    let mut i = start;
+    while i < end {
+        let t = toks[i].text.as_str();
+        let ln = toks[i].line;
+        let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+        let nxt = if i + 1 < end { toks[i + 1].text.as_str() } else { "" };
+        if t == "notify_one" || t == "notify_all" {
+            summary.has_notify = true;
+        } else if prev == "." && nxt == "(" && i >= 2 {
+            let recv = toks[i - 2].text.clone();
+            let is_lock = t == "lock"
+                || ((t == "read" || t == "write") && tables.rwlock_fields.contains(recv.as_str()));
+            if is_lock && tok_is_ident(&recv) {
+                let ident = tables.lock_identity(&recv);
+                let guard = guard_binding(toks, i, start);
+                let live_end = guard_live_end(toks, i + 1, end, guard.as_deref());
+                // Temporary guards: a mutating postfix chain hanging off the
+                // lock call itself (`x.lock().unwrap().field = v`).
+                let close = close_delim(toks, i + 1, end);
+                let (_, chain_mut) = chain_walk(toks, close + 1, end, true);
+                let mut_line = if chain_mut { ln } else { 0 };
+                summary.acquisitions.push(Acquisition {
+                    ident,
+                    line: ln,
+                    idx: i,
+                    guard: guard.clone(),
+                    live_end,
+                    mutated: chain_mut,
+                    mut_line,
+                });
+                if let Some(g) = guard {
+                    guards.insert(g, (live_end, summary.acquisitions.len() - 1));
+                }
+            } else if WAIT_METHODS.contains(&t) && tables.condvar_fields.contains(recv.as_str()) {
+                let arg = if i + 2 < end { toks[i + 2].text.clone() } else { String::new() };
+                let in_loop = loops.iter().any(|&(lo, hi)| lo < i && i < hi);
+                let b = stmt_start(toks, i, start);
+                let mut j = b;
+                if j < i && toks[j].text == "let" {
+                    j += 1;
+                }
+                if j < i && toks[j].text == "mut" {
+                    j += 1;
+                }
+                let rebound = tok_is_ident(&arg)
+                    && j + 1 < i
+                    && toks[j].text == arg
+                    && toks[j + 1].text == "=";
+                summary.waits.push((t.to_string(), ln, arg, in_loop, rebound));
+            }
+        } else if tok_is_ident(t) && prev != "." {
+            // Guard-rooted use: `*g op=`, `g.path = v`, `g.container.push(..)`.
+            if let Some(&(live_end, ai)) = guards.get(t) {
+                if i < live_end && !summary.acquisitions[ai].mutated {
+                    if prev == "*" && ASSIGN_OPS.contains(&nxt) {
+                        summary.acquisitions[ai].mutated = true;
+                        summary.acquisitions[ai].mut_line = ln;
+                    } else {
+                        let (_, chain_mut) = chain_walk(toks, i + 1, end, false);
+                        if chain_mut {
+                            summary.acquisitions[ai].mutated = true;
+                            summary.acquisitions[ai].mut_line = ln;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    summary
+}
+
+/// Lines of `spawn(..)` calls whose JoinHandle is discarded (the spawn
+/// chain is a bare statement: not bound, not an argument, not returned).
+fn spawn_sites(toks: &[Tok], f: &FnItem) -> Vec<usize> {
+    let mut out = Vec::new();
+    let (start, end) = f.body;
+    let mut i = start;
+    while i < end {
+        if toks[i].text == "spawn" && i + 1 < end && toks[i + 1].text == "(" {
+            let close = close_delim(toks, i + 1, end);
+            let (j, _) = chain_walk(toks, close + 1, end, false);
+            if j < end && toks[j].text == ";" {
+                let b = stmt_start(toks, i, start);
+                let mut depth = 0i32;
+                let mut used = false;
+                for k in b..i {
+                    match toks[k].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "let" | "=" | "return" | "=>" => {
+                            used = true;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                if depth > 0 {
+                    used = true;
+                }
+                if !used {
+                    out.push(toks[i].line);
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Lines where a channel receive is `.unwrap()`/`.expect()`-ed.
+fn recv_unwrap_sites(toks: &[Tok], f: &FnItem) -> Vec<usize> {
+    let mut out = Vec::new();
+    let (start, end) = f.body;
+    let mut i = start;
+    while i < end {
+        if RECV_METHODS.contains(&toks[i].text.as_str())
+            && i > 0
+            && toks[i - 1].text == "."
+            && i + 1 < end
+            && toks[i + 1].text == "("
+        {
+            let close = close_delim(toks, i + 1, end);
+            if close + 2 < end
+                && toks[close + 1].text == "."
+                && matches!(toks[close + 2].text.as_str(), "unwrap" | "expect")
+            {
+                out.push(toks[i].line);
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The four whole-program concurrency rules over every non-test fn.
+pub fn lint_concurrency(model: &CrateModel, sink: &mut Sink) {
+    let tables = ConcTables::new(model);
+    let (nodes, index) = build_call_index(model);
+    let mut summaries: HashMap<(usize, usize), FnConcurrency> = HashMap::new();
+    for &(fi, gi) in &nodes {
+        let f = &model.files[fi];
+        summaries.insert((fi, gi), summarize_fn(&f.toks, &f.fns[gi], &tables));
+    }
+
+    // Resolved call edges with token positions (for held-guard call ranges).
+    type Calls = Vec<(usize, usize, Vec<(usize, usize)>)>;
+    let mut calls_of: HashMap<(usize, usize), Calls> = HashMap::new();
+    let mut edges_of: HashMap<(usize, usize), Vec<(usize, usize)>> = HashMap::new();
+    for &(fi, gi) in &nodes {
+        let f = &model.files[fi];
+        let fnm = &f.fns[gi];
+        let mut calls = Calls::new();
+        let mut targets = Vec::new();
+        for e in call_edges(&f.toks, fnm) {
+            let resolved = resolve_call(model, &index, &e, fnm.ctx.as_deref());
+            if !resolved.is_empty() {
+                targets.extend(resolved.iter().copied());
+                calls.push((e.idx, e.line, resolved));
+            }
+        }
+        calls_of.insert((fi, gi), calls);
+        edges_of.insert((fi, gi), targets);
+    }
+
+    // Transitive lock sets: direct acquisitions closed over call edges.
+    let mut trans: HashMap<(usize, usize), BTreeSet<String>> = nodes
+        .iter()
+        .map(|&n| {
+            (n, summaries[&n].acquisitions.iter().map(|a| a.ident.clone()).collect())
+        })
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &n in &nodes {
+            let mut extra: Vec<String> = Vec::new();
+            for callee in &edges_of[&n] {
+                for l in &trans[callee] {
+                    if !trans[&n].contains(l) {
+                        extra.push(l.clone());
+                    }
+                }
+            }
+            if !extra.is_empty() {
+                let set = trans.get_mut(&n).unwrap();
+                set.extend(extra);
+                changed = true;
+            }
+        }
+    }
+
+    // --- lock-order: acquisition-order graph + cycle detection ------------
+    let mut edge_sites: HashMap<(String, String), (usize, usize)> = HashMap::new();
+    for &(fi, gi) in &nodes {
+        let summary = &summaries[&(fi, gi)];
+        for a in &summary.acquisitions {
+            for o in &summary.acquisitions {
+                if o.idx > a.idx && o.idx < a.live_end {
+                    edge_sites
+                        .entry((a.ident.clone(), o.ident.clone()))
+                        .or_insert((fi, o.line));
+                }
+            }
+            for (c_ti, c_ln, resolved) in &calls_of[&(fi, gi)] {
+                if *c_ti > a.idx && *c_ti < a.live_end {
+                    for callee in resolved {
+                        for callee_lock in &trans[callee] {
+                            edge_sites
+                                .entry((a.ident.clone(), callee_lock.clone()))
+                                .or_insert((fi, *c_ln));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut adj: HashMap<&str, HashSet<&str>> = HashMap::new();
+    for (held, acquired) in edge_sites.keys() {
+        adj.entry(held).or_default().insert(acquired);
+    }
+    let reaches = |src: &str, dst: &str| -> bool {
+        let mut seen: HashSet<&str> = HashSet::new();
+        seen.insert(src);
+        let mut stack = vec![src];
+        while let Some(u) = stack.pop() {
+            if u == dst {
+                return true;
+            }
+            if let Some(vs) = adj.get(u) {
+                for &v in vs {
+                    if seen.insert(v) {
+                        stack.push(v);
+                    }
+                }
+            }
+        }
+        false
+    };
+    let mut ordered: Vec<(&(String, String), &(usize, usize))> = edge_sites.iter().collect();
+    ordered.sort_by(|a, b| {
+        (&model.files[a.1 .0].rel, a.1 .1, &a.0 .0, &a.0 .1)
+            .cmp(&(&model.files[b.1 .0].rel, b.1 .1, &b.0 .0, &b.0 .1))
+    });
+    for ((held, acquired), &(fi, ln)) in ordered {
+        if reaches(acquired, held) {
+            let f = &model.files[fi];
+            sink.emit(
+                &f.scanned,
+                &f.rel,
+                ln,
+                "lock-order",
+                format!(
+                    "acquiring `{acquired}` while holding `{held}` closes an \
+                     acquisition-order cycle (`{acquired}` is also held when `{held}` \
+                     is taken elsewhere) — potential deadlock"
+                ),
+                false,
+            );
+        }
+    }
+
+    // --- condvar-discipline + atomic-ordering + channel-lifecycle ---------
+    // identity -> (decl site, load orderings, store orderings)
+    type AtomicSlot = ((usize, usize), BTreeSet<String>, BTreeSet<String>);
+    let mut atomic_usage: BTreeMap<String, AtomicSlot> = BTreeMap::new();
+    for &(fi, gi) in &nodes {
+        let f = &model.files[fi];
+        let fnm = &f.fns[gi];
+        let s = &f.scanned;
+        let summary = &summaries[&(fi, gi)];
+
+        for (meth, ln, _arg, in_loop, rebound) in &summary.waits {
+            if !(*in_loop && *rebound) {
+                sink.emit(
+                    s,
+                    &f.rel,
+                    *ln,
+                    "condvar-discipline",
+                    format!(
+                        "`Condvar::{meth}` outside a predicate loop: the guard must be \
+                         rebound from the wait result inside a `loop`/`while` that \
+                         re-checks the predicate under the lock"
+                    ),
+                    false,
+                );
+            }
+        }
+        let mut reported: HashSet<&str> = HashSet::new();
+        for a in &summary.acquisitions {
+            let struct_name = a.ident.split_once('.').map(|(st, _)| st);
+            if a.mutated
+                && struct_name.is_some_and(|st| tables.condvar_structs.contains(st))
+                && !summary.has_notify
+                && !reported.contains(a.ident.as_str())
+            {
+                reported.insert(&a.ident);
+                sink.emit(
+                    s,
+                    &f.rel,
+                    a.mut_line,
+                    "condvar-discipline",
+                    format!(
+                        "state guarded by `{}` is mutated but `{}` never calls \
+                         `notify_one`/`notify_all` on the paired condvar — a \
+                         waiter can miss this update",
+                        a.ident,
+                        fn_label(fnm)
+                    ),
+                    false,
+                );
+            }
+        }
+
+        let (start, end) = fnm.body;
+        let mut i = start;
+        while i < end {
+            let t = f.toks[i].text.as_str();
+            if ATOMIC_METHODS.contains(&t)
+                && i > 0
+                && f.toks[i - 1].text == "."
+                && i + 1 < end
+                && f.toks[i + 1].text == "("
+            {
+                let close = close_delim(&f.toks, i + 1, end);
+                let mut orderings: Vec<(String, usize)> = Vec::new();
+                for j in (i + 2)..close.saturating_sub(1) {
+                    if f.toks[j].text == "Ordering" && f.toks[j + 1].text == "::" {
+                        orderings.push((f.toks[j + 2].text.clone(), f.toks[j + 2].line));
+                    }
+                }
+                if !orderings.is_empty() {
+                    let recv =
+                        if i >= 2 { f.toks[i - 2].text.clone() } else { String::new() };
+                    let info = if tok_is_ident(&recv) {
+                        tables.atomic_field(&recv)
+                    } else {
+                        None
+                    };
+                    for (ordv, oln) in &orderings {
+                        if let Some((ident, _, _, _)) =
+                            info.as_ref().filter(|x| x.1 == "AtomicBool")
+                        {
+                            let ok = (t == "load" && LOAD_ORDERINGS_OK.contains(&ordv.as_str()))
+                                || (t == "store" && STORE_ORDERINGS_OK.contains(&ordv.as_str()))
+                                || (t != "load"
+                                    && t != "store"
+                                    && RMW_ORDERINGS_OK.contains(&ordv.as_str()));
+                            if !ok {
+                                sink.emit(
+                                    s,
+                                    &f.rel,
+                                    *oln,
+                                    "atomic-ordering",
+                                    format!(
+                                        "flag `{ident}` {t} uses `Ordering::{ordv}` — \
+                                         load/store flag pairs must use \
+                                         Acquire/Release or SeqCst"
+                                    ),
+                                    false,
+                                );
+                            }
+                        } else if ordv == "Relaxed" {
+                            let label = info
+                                .as_ref()
+                                .map(|x| x.0.clone())
+                                .unwrap_or_else(|| recv.clone());
+                            sink.emit(
+                                s,
+                                &f.rel,
+                                *oln,
+                                "atomic-ordering",
+                                format!(
+                                    "`Ordering::Relaxed` on `{label}` — Relaxed is only \
+                                     legal on sites annotated as monotonic \
+                                     counters/gauges (lint-ok with the monotonicity \
+                                     argument), otherwise upgrade the ordering"
+                                ),
+                                false,
+                            );
+                        }
+                    }
+                    if let Some((ident, _, dfi, dln)) = &info {
+                        if t == "load" || t == "store" {
+                            let slot = atomic_usage.entry(ident.clone()).or_insert((
+                                (*dfi, *dln),
+                                BTreeSet::new(),
+                                BTreeSet::new(),
+                            ));
+                            for (ordv, _) in &orderings {
+                                if t == "load" {
+                                    slot.1.insert(ordv.clone());
+                                } else {
+                                    slot.2.insert(ordv.clone());
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+
+        for ln in spawn_sites(&f.toks, fnm) {
+            sink.emit(
+                s,
+                &f.rel,
+                ln,
+                "channel-lifecycle",
+                "spawned thread's JoinHandle is discarded — a `Sender` moved \
+                 into a detached thread can outlive teardown and hang its \
+                 receiver; bind and join the handle (or lint-ok with the \
+                 teardown story)"
+                    .into(),
+                false,
+            );
+        }
+        for ln in recv_unwrap_sites(&f.toks, fnm) {
+            sink.emit(
+                s,
+                &f.rel,
+                ln,
+                "channel-lifecycle",
+                "channel receive result is unwrapped — a dropped sender \
+                 becomes a teardown panic; match the `Err` and exit the \
+                 receive loop instead"
+                    .into(),
+                false,
+            );
+        }
+    }
+
+    // Per-field ordering consistency (flag pairs must not mix disciplines).
+    for (ident, ((fi, ln), loads, stores)) in &atomic_usage {
+        let f = &model.files[*fi];
+        for (cls, set) in [("load", loads), ("store", stores)] {
+            if set.len() > 1 {
+                let listed: Vec<&str> = set.iter().map(String::as_str).collect();
+                sink.emit(
+                    &f.scanned,
+                    &f.rel,
+                    *ln,
+                    "atomic-ordering",
+                    format!(
+                        "atomic field `{ident}` mixes {cls} orderings {{{}}} — pick \
+                         one discipline per field",
+                        listed.join(", ")
+                    ),
+                    false,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lints::{lint_source, Finding};
+
+    fn rules_of(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn abba_lock_inversion_flagged() {
+        let src = "struct Pair { a: Mutex<u32>, b: Mutex<u32> }\n\
+                   impl Pair {\n\
+                     fn fwd(&self) { let ga = self.a.lock().unwrap(); let gb = self.b.lock().unwrap(); drop(gb); drop(ga); }\n\
+                     fn bwd(&self) { let gb = self.b.lock().unwrap(); let ga = self.a.lock().unwrap(); drop(ga); drop(gb); }\n\
+                   }\n";
+        let f = lint_source("rust/src/util/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["lock-order", "lock-order"]);
+        assert!(f[0].msg.contains("Pair.a") && f[0].msg.contains("Pair.b"));
+    }
+
+    #[test]
+    fn consistent_lock_order_clean_including_call_edges() {
+        let src = "struct Pair { a: Mutex<u32>, b: Mutex<u32> }\n\
+                   impl Pair {\n\
+                     fn fwd(&self) { let ga = self.a.lock().unwrap(); let gb = self.b.lock().unwrap(); drop(gb); drop(ga); }\n\
+                     fn via(&self) { let ga = self.a.lock().unwrap(); self.tail(); drop(ga); }\n\
+                     fn tail(&self) { let gb = self.b.lock().unwrap(); drop(gb); }\n\
+                   }\n";
+        assert!(lint_source("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn transitive_lock_inversion_via_callee_flagged() {
+        let src = "struct Pair { a: Mutex<u32>, b: Mutex<u32> }\n\
+                   impl Pair {\n\
+                     fn fwd(&self) { let ga = self.a.lock().unwrap(); self.tail_b(); drop(ga); }\n\
+                     fn bwd(&self) { let gb = self.b.lock().unwrap(); self.tail_a(); drop(gb); }\n\
+                     fn tail_a(&self) { let g = self.a.lock().unwrap(); drop(g); }\n\
+                     fn tail_b(&self) { let g = self.b.lock().unwrap(); drop(g); }\n\
+                   }\n";
+        let f = lint_source("rust/src/util/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["lock-order", "lock-order"]);
+    }
+
+    #[test]
+    fn bare_wait_and_missing_notify_flagged() {
+        let src = "struct Gate { open: Mutex<bool>, cv: Condvar }\n\
+                   impl Gate {\n\
+                     fn wait_open(&self) { let g = self.open.lock().unwrap(); let g = self.cv.wait(g).unwrap(); drop(g); }\n\
+                     fn open_up(&self) { *self.open.lock().unwrap() = true; }\n\
+                   }\n";
+        let f = lint_source("rust/src/util/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["condvar-discipline", "condvar-discipline"]);
+    }
+
+    #[test]
+    fn predicate_loop_with_notify_clean() {
+        let src = "struct Gate { open: Mutex<bool>, cv: Condvar }\n\
+                   impl Gate {\n\
+                     fn wait_open(&self) { let mut g = self.open.lock().unwrap(); while !*g { g = self.cv.wait(g).unwrap(); } }\n\
+                     fn open_up(&self) { *self.open.lock().unwrap() = true; self.cv.notify_all(); }\n\
+                   }\n";
+        assert!(lint_source("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_flag_pair_flagged() {
+        let src = "struct S { stop: AtomicBool }\n\
+                   impl S {\n\
+                     fn req(&self) { self.stop.store(true, Ordering::Relaxed); }\n\
+                     fn chk(&self) -> bool { self.stop.load(Ordering::Relaxed) }\n\
+                   }\n";
+        let f = lint_source("rust/src/util/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["atomic-ordering", "atomic-ordering"]);
+        assert!(f[0].msg.contains("S.stop"));
+    }
+
+    #[test]
+    fn release_acquire_flag_and_annotated_counter_clean() {
+        let src = "struct S { stop: AtomicBool, n: AtomicU64 }\n\
+                   impl S {\n\
+                     fn req(&self) { self.stop.store(true, Ordering::Release); }\n\
+                     fn chk(&self) -> bool {\n\
+                       // lint-ok(atomic-ordering): monotonic counter\n\
+                       self.n.fetch_add(1, Ordering::Relaxed);\n\
+                       self.stop.load(Ordering::Acquire)\n\
+                     }\n\
+                   }\n";
+        assert!(lint_source("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mixed_orderings_per_field_flagged_at_decl() {
+        let src = "struct S { stop: AtomicBool }\n\
+                   impl S {\n\
+                     fn a(&self) -> bool { self.stop.load(Ordering::Acquire) }\n\
+                     fn b(&self) -> bool { self.stop.load(Ordering::SeqCst) }\n\
+                   }\n";
+        let f = lint_source("rust/src/util/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["atomic-ordering"]);
+        assert_eq!(f[0].line, 1); // decl line of `stop`
+        assert!(f[0].msg.contains("mixes load orderings"));
+    }
+
+    #[test]
+    fn discarded_spawn_and_recv_unwrap_flagged() {
+        let src = "fn start(rx: Receiver<u32>) {\n\
+                     std::thread::spawn(move || {\n\
+                       loop { let _v = rx.recv().unwrap(); }\n\
+                     });\n\
+                   }\n";
+        let f = lint_source("rust/src/util/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["channel-lifecycle", "channel-lifecycle"]);
+    }
+
+    #[test]
+    fn bound_joined_spawn_and_matched_recv_clean() {
+        let src = "fn run(rx: Receiver<u32>) {\n\
+                     let h = std::thread::spawn(move || loop {\n\
+                       match rx.recv() { Ok(_) => {} Err(_) => break }\n\
+                     });\n\
+                     h.join().unwrap();\n\
+                   }\n";
+        assert!(lint_source("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_fns_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n  fn t(rx: Receiver<u32>) { rx.recv().unwrap(); }\n}\n";
+        assert!(lint_source("rust/src/util/x.rs", src).is_empty());
+    }
+}

@@ -1,4 +1,4 @@
-//! The nine repo-specific structural lints.
+//! The thirteen repo-specific structural lints.
 //!
 //! Five are per-file rules (see DESIGN.md §9 for the full rationale):
 //!
@@ -40,6 +40,19 @@
 //!   needs a scalar arm, a feature-gated SIMD arm, a parity test naming
 //!   it, and a DESIGN.md §5e table row.
 //!
+//! Four are concurrency-protocol rules built on the per-fn concurrency
+//! summaries ([`crate::concurrency`]) propagated over the call graph:
+//!
+//! * `lock-order` — `Mutex`/`RwLock` acquisition-order cycles (potential
+//!   ABBA deadlock), including orders established through call edges.
+//! * `condvar-discipline` — `Condvar::wait` outside a guard-rebinding
+//!   predicate loop; mutation of condvar-guarded state with no notify.
+//! * `atomic-ordering` — `Ordering::Relaxed` outside annotated monotonic
+//!   counters; mis-ordered `AtomicBool` flag pairs; per-field ordering
+//!   drift between sites.
+//! * `channel-lifecycle` — `spawn(..)` with a discarded `JoinHandle`;
+//!   `recv()`-family results piped straight into `unwrap`/`expect`.
+//!
 //! `#[cfg(test)]`-gated items are exempt from `lossy-casts`,
 //! `hot-path-panics`, and the whole-program rules (tests may allocate and
 //! assert freely); `safety-comments`, `accounting-fields`, and
@@ -64,7 +77,7 @@ pub struct Finding {
     pub msg: String,
 }
 
-pub const RULES: [&str; 9] = [
+pub const RULES: [&str; 13] = [
     "accounting-fields",
     "lossy-casts",
     "safety-comments",
@@ -74,6 +87,10 @@ pub const RULES: [&str; 9] = [
     "unit-confusion",
     "sendptr-escape",
     "dispatch-parity-drift",
+    "lock-order",
+    "condvar-discipline",
+    "atomic-ordering",
+    "channel-lifecycle",
 ];
 
 /// `// lint-ok(<rule>): <reason>` on the line or the line above.
@@ -738,7 +755,7 @@ fn lint_dispatch_parity(model: &CrateModel, sink: &mut Sink) {
 
 // --- crate driver ----------------------------------------------------------
 
-/// All nine lints over a set of `(rel, src)` files + aux artifacts.
+/// All thirteen lints over a set of `(rel, src)` files + aux artifacts.
 /// Returns findings sorted by `(file, line, rule, msg)` plus the count of
 /// `lint-ok`-suppressed findings.
 pub fn lint_crate(
@@ -758,6 +775,7 @@ pub fn lint_crate(
     lint_unit_confusion(&model, &mut sink);
     lint_sendptr_escape(&model, &mut sink);
     lint_dispatch_parity(&model, &mut sink);
+    crate::concurrency::lint_concurrency(&model, &mut sink);
     sink.findings
         .sort_by(|a, b| (&a.file, a.line, a.rule, &a.msg).cmp(&(&b.file, b.line, b.rule, &b.msg)));
     (sink.findings, sink.suppressed)

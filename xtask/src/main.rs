@@ -2,12 +2,14 @@
 //!
 //! Subcommands:
 //!
-//! * `cargo xtask lint [--format human|json|sarif]` — run the nine
-//!   structural lints (see [`lints`]) over `rust/src`, with the
-//!   cross-artifact aux inputs (`rust/tests/miri_kernels.rs`,
+//! * `cargo xtask lint [--format human|json|sarif] [--rule <id>]` — run
+//!   the thirteen structural lints (see [`lints`]) over `rust/src`, with
+//!   the cross-artifact aux inputs (`rust/tests/miri_kernels.rs`,
 //!   `rust/tests/kernel_parity_test.rs`, `DESIGN.md`) read from disk.
 //!   Exits non-zero when the tree is not clean. `json` is a machine
 //!   summary; `sarif` is SARIF 2.1.0 for code-scanning upload.
+//!   `--rule <id>` reruns a single rule (iterating on one lint without
+//!   wading through the rest); suppression counts stay whole-run.
 //! * `cargo xtask fixtures [--emit-findings]` — self-test: lint every
 //!   fixture under `xtask/fixtures/` and verify each one trips exactly the
 //!   rule named in its `// expect-lint:` header (`none` for clean
@@ -31,6 +33,7 @@
 //! and how to extend them.
 
 mod callgraph;
+mod concurrency;
 mod items;
 mod lexer;
 mod lints;
@@ -50,6 +53,7 @@ fn main() -> ExitCode {
     };
     let mut fmt = "human".to_string();
     let mut emit = false;
+    let mut rule: Option<String> = None;
     let mut i = 0usize;
     while i < args.len() {
         let a = args[i].as_str();
@@ -59,18 +63,30 @@ fn main() -> ExitCode {
         } else if let Some(v) = a.strip_prefix("--format=") {
             fmt = v.to_string();
             i += 1;
+        } else if a == "--rule" && i + 1 < args.len() {
+            rule = Some(args[i + 1].clone());
+            i += 2;
+        } else if let Some(v) = a.strip_prefix("--rule=") {
+            rule = Some(v.to_string());
+            i += 1;
         } else if a == "--emit-findings" {
             emit = true;
             i += 1;
         } else {
             eprintln!(
-                "usage: cargo xtask <lint|fixtures> [--format human|json|sarif] [--emit-findings]"
+                "usage: cargo xtask <lint|fixtures> [--format human|json|sarif] [--rule <id>] [--emit-findings]"
             );
             return ExitCode::from(2);
         }
     }
+    if let Some(r) = &rule {
+        if !lints::RULES.contains(&r.as_str()) {
+            eprintln!("xtask: unknown rule `{r}` (known: {})", lints::RULES.join(", "));
+            return ExitCode::from(2);
+        }
+    }
     match cmd.as_str() {
-        "lint" => lint_tree(&fmt),
+        "lint" => lint_tree(&fmt, rule.as_deref()),
         "fixtures" => check_fixtures(emit),
         other => {
             eprintln!("unknown command `{other}`");
@@ -114,7 +130,7 @@ fn read_aux_from_repo(root: &Path) -> HashMap<String, String> {
     aux
 }
 
-fn lint_tree(fmt: &str) -> ExitCode {
+fn lint_tree(fmt: &str, rule: Option<&str>) -> ExitCode {
     let root = repo_root();
     let mut paths = Vec::new();
     rust_files(&root.join("rust/src"), &mut paths);
@@ -137,7 +153,10 @@ fn lint_tree(fmt: &str) -> ExitCode {
             }
         }
     }
-    let (findings, suppressed) = lints::lint_crate(&files, read_aux_from_repo(&root));
+    let (mut findings, suppressed) = lints::lint_crate(&files, read_aux_from_repo(&root));
+    if let Some(r) = rule {
+        findings.retain(|f| f.rule == r);
+    }
     match fmt {
         "json" => println!("{}", json_summary(&findings, suppressed, files.len())),
         "sarif" => println!("{}", sarif_report(&findings)),
